@@ -1,0 +1,95 @@
+//! Fig. 7a — runtime overhead of THAPI across tracing modes, HeCBench.
+//!
+//! Runs every HeCBench-like mini-app under the six §5.2 configurations
+//! (T-min/T-default/T-full, TS-min/TS-default/TS-full) against an
+//! untraced baseline, and prints the per-config overhead distribution
+//! (mean and median — the paper reports T-default mean 5.36 %, median
+//! 1.99 %; sampling adds ≈ +1 %; T-min is slightly *higher* overhead than
+//! T-default despite tracking fewer events).
+//!
+//! Env knobs: `THAPI_BENCH_REPS` (default 3), `THAPI_APP_SCALE`.
+
+use std::sync::Arc;
+use thapi::apps::hecbench;
+use thapi::bench_support::{mean_of, median_of, Table};
+use thapi::coordinator::{overhead_pct, run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::tracer::{SinkKind, TracingMode};
+
+fn main() {
+    let reps: usize = std::env::var("THAPI_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.5");
+    }
+    let node = Node::new(NodeConfig::test_small());
+    let apps = hecbench::suite();
+
+    let configs: Vec<IprofConfig> = [
+        (TracingMode::Minimal, false),
+        (TracingMode::Default, false),
+        (TracingMode::Full, false),
+        (TracingMode::Minimal, true),
+        (TracingMode::Default, true),
+        (TracingMode::Full, true),
+    ]
+    .iter()
+    .map(|(m, s)| {
+        let mut c = IprofConfig::paper_config(*m, *s);
+        c.sink = SinkKind::Null; // pure runtime overhead, like the paper's %
+        c
+    })
+    .collect();
+    let labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
+
+    // per config, per app: overhead %
+    let mut overheads: Vec<Vec<f64>> = vec![Vec::new(); configs.len()];
+    let mut table = Table::new(&{
+        let mut h = vec!["app"];
+        h.extend(labels.iter().map(|s| s.as_str()));
+        h
+    });
+
+    for app in &apps {
+        // warmup: compile caches, page faults
+        let _ = run(&node, app.as_ref(), &IprofConfig::baseline());
+        // baseline: best of reps (noise-robust denominator)
+        let base = (0..reps)
+            .map(|_| run(&node, app.as_ref(), &IprofConfig::baseline()).wall)
+            .min()
+            .unwrap();
+        let mut cells = vec![app.name().to_string()];
+        for (ci, c) in configs.iter().enumerate() {
+            let traced = (0..reps)
+                .map(|_| run(&node, app.as_ref(), c).wall)
+                .min()
+                .unwrap();
+            let pct = overhead_pct(base, traced);
+            overheads[ci].push(pct);
+            cells.push(format!("{pct:+.2}%"));
+        }
+        table.row(&cells);
+        eprintln!("done {}", app.name());
+    }
+
+    println!("\n=== Fig 7a: HeCBench tracing overhead by configuration ===\n");
+    println!("{}", table.render());
+
+    let mut summary = Table::new(&["config", "mean %", "median %", "max %"]);
+    for (ci, label) in labels.iter().enumerate() {
+        let v = &overheads[ci];
+        summary.row(&[
+            label.clone(),
+            format!("{:.2}", mean_of(v)),
+            format!("{:.2}", median_of(v)),
+            format!("{:.2}", v.iter().cloned().fold(f64::MIN, f64::max)),
+        ]);
+    }
+    println!("{}", summary.render());
+    println!(
+        "paper reference: T-default mean 5.36%, median 1.99%; sampling ≈ +1%; \
+         T-min slightly above T-default."
+    );
+}

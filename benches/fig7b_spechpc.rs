@@ -1,0 +1,65 @@
+//! Fig. 7b — SPEChpc 2021 tracing overhead (default mode), Aurora vs
+//! Polaris node configurations.
+//!
+//! Paper reference: mean default-mode overhead 4.35 % on Aurora and
+//! 5.14 % on Polaris; no benchmark exceeding 10 %. Our Aurora node runs
+//! 6 ranks on 6 two-tile ZE GPUs; Polaris runs 4 ranks on 4 CUDA-labelled
+//! GPUs (the MPI+OMP offload path is identical; the node config differs
+//! in GPU count/tiling/telemetry, as in Table 1).
+//!
+//! Env knobs: `THAPI_BENCH_REPS` (default 3), `THAPI_APP_SCALE`.
+
+use thapi::apps::spechpc;
+use thapi::bench_support::{mean_of, Table};
+use thapi::coordinator::{overhead_pct, run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::tracer::{SinkKind, TracingMode};
+
+fn main() {
+    let reps: usize = std::env::var("THAPI_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.5");
+    }
+    let apps = spechpc::suite();
+    let mut config = IprofConfig::paper_config(TracingMode::Default, false);
+    config.sink = SinkKind::Null;
+
+    let mut table = Table::new(&["benchmark", "aurora %", "polaris %"]);
+    let mut aurora_all = Vec::new();
+    let mut polaris_all = Vec::new();
+
+    for app in &apps {
+        let mut cells = vec![app.name().to_string()];
+        for (node_cfg, acc) in [
+            (NodeConfig::aurora(), &mut aurora_all),
+            (NodeConfig::polaris(), &mut polaris_all),
+        ] {
+            let node = Node::new(node_cfg);
+            let _ = run(&node, app.as_ref(), &IprofConfig::baseline()); // warmup
+            let base = (0..reps)
+                .map(|_| run(&node, app.as_ref(), &IprofConfig::baseline()).wall)
+                .min()
+                .unwrap();
+            let traced = (0..reps)
+                .map(|_| run(&node, app.as_ref(), &config).wall)
+                .min()
+                .unwrap();
+            let pct = overhead_pct(base, traced);
+            acc.push(pct);
+            cells.push(format!("{pct:+.2}%"));
+        }
+        table.row(&cells);
+        eprintln!("done {}", app.name());
+    }
+
+    println!("\n=== Fig 7b: SPEChpc default-mode overhead, Aurora vs Polaris ===\n");
+    println!("{}", table.render());
+    println!(
+        "mean: aurora {:.2}%  polaris {:.2}%   (paper: 4.35% / 5.14%, max < 10%)",
+        mean_of(&aurora_all),
+        mean_of(&polaris_all)
+    );
+}

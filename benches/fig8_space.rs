@@ -1,0 +1,86 @@
+//! Fig. 8a/8b — disk-space requirement of the traces by tracing mode.
+//!
+//! Runs the SPEChpc-like suite under all six configurations with an
+//! in-memory sink and reports the BTF trace size per benchmark (8a) and
+//! the per-mode size normalized to T-full (8b). Paper reference: on
+//! average default needs < 20 % and minimal < 17 % of the full-mode
+//! space; 534.hpgmgfv and 521.miniswp show the largest min↔full spread.
+
+use thapi::apps::spechpc;
+use thapi::bench_support::{mean_of, Table};
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::tracer::TracingMode;
+
+fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}KB", b / 1e3)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+fn main() {
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.5");
+    }
+    let node = Node::new(NodeConfig::aurora());
+    let apps = spechpc::suite();
+
+    let configs: Vec<IprofConfig> = [
+        (TracingMode::Minimal, false),
+        (TracingMode::Default, false),
+        (TracingMode::Full, false),
+        (TracingMode::Minimal, true),
+        (TracingMode::Default, true),
+        (TracingMode::Full, true),
+    ]
+    .iter()
+    .map(|(m, s)| IprofConfig::paper_config(*m, *s))
+    .collect();
+    let labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
+
+    let mut table = Table::new(&{
+        let mut h = vec!["benchmark"];
+        h.extend(labels.iter().map(|s| s.as_str()));
+        h
+    });
+    // sizes[config][app]
+    let mut sizes: Vec<Vec<u64>> = vec![Vec::new(); configs.len()];
+
+    for app in &apps {
+        let _ = run(&node, app.as_ref(), &IprofConfig::baseline()); // warmup
+        let mut cells = vec![app.name().to_string()];
+        for (ci, c) in configs.iter().enumerate() {
+            let r = run(&node, app.as_ref(), c);
+            let bytes = r.trace_bytes();
+            sizes[ci].push(bytes);
+            cells.push(human(bytes));
+        }
+        table.row(&cells);
+        eprintln!("done {}", app.name());
+    }
+
+    println!("\n=== Fig 8a: trace space per benchmark and mode ===\n");
+    println!("{}", table.render());
+
+    // Fig 8b: normalized to T-full per app, averaged
+    let full_idx = labels.iter().position(|l| l == "T-full").unwrap();
+    let mut norm = Table::new(&["config", "avg size vs T-full"]);
+    for (ci, label) in labels.iter().enumerate() {
+        let ratios: Vec<f64> = sizes[ci]
+            .iter()
+            .zip(&sizes[full_idx])
+            .map(|(s, f)| *s as f64 / (*f).max(1) as f64 * 100.0)
+            .collect();
+        norm.row(&[label.clone(), format!("{:.1}%", mean_of(&ratios))]);
+    }
+    println!("=== Fig 8b: space normalized to T-full ===\n");
+    println!("{}", norm.render());
+    println!("paper reference: default < 20% and minimal < 17% of full-mode space.");
+}

@@ -1,0 +1,55 @@
+//! §4.3 — the HIPLZ LRN tally table.
+//!
+//! Runs the LRN mini-app through the HIP-on-Level-Zero frontend and
+//! prints the iprof tally. The shape to compare with the paper's table:
+//! `hipDeviceSynchronize` near the top by total time, implemented on a
+//! huge-call-count `zeEventHostSynchronize` spin (sub-µs average), and
+//! `zeModuleCreate` expensive-but-once (real PJRT compile time).
+
+use thapi::apps::hecbench;
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+
+fn main() {
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "1.0");
+    }
+    let node = Node::new(NodeConfig::aurora());
+    let apps = hecbench::suite();
+    let lrn = apps.iter().find(|a| a.name() == "lrn-hip").expect("lrn-hip in suite");
+
+    let report = run(&node, lrn.as_ref(), &IprofConfig::default());
+    let tally = report.tally().expect("trace collected");
+
+    println!("\n=== §4.3: THAPI tally for LRN under HIPLZ (HIP on Level-Zero) ===\n");
+    println!("{}", tally.render());
+
+    // The paper's analysis points, asserted as shape checks:
+    let rows = tally.host_rows();
+    let find = |n: &str| rows.iter().find(|r| r.name == n);
+    if let (Some(sync), Some(spin)) = (find("hipDeviceSynchronize"), find("zeEventHostSynchronize"))
+    {
+        println!(
+            "shape check: hipDeviceSynchronize calls={} vs zeEventHostSynchronize calls={} \
+             (layered spin => {}x more ze calls)",
+            sync.calls,
+            spin.calls,
+            spin.calls / sync.calls.max(1)
+        );
+        assert!(
+            spin.calls > sync.calls,
+            "spin pattern must multiply zeEventHostSynchronize calls"
+        );
+        assert!(
+            spin.avg_ns() < sync.avg_ns(),
+            "each spin poll must be far cheaper than a full device sync"
+        );
+    }
+    if let Some(module) = find("zeModuleCreate") {
+        println!(
+            "shape check: zeModuleCreate avg {} over {} call(s) (real PJRT compile)",
+            thapi::analysis::tally::fmt_ns(module.avg_ns()),
+            module.calls
+        );
+    }
+}

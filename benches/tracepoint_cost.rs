@@ -1,0 +1,84 @@
+//! E11 — tracepoint cost microbenchmark (paper §3.1: LTTng tracepoints
+//! cost "in the order of nanoseconds").
+//!
+//! Measures the per-event cost of the emit hot path in four states:
+//! no session installed, class disabled by mode, enabled with a small
+//! payload, and enabled with the full memcpy-entry payload. Also reports
+//! sustained throughput into the ring buffer with a Null-sink consumer.
+
+use std::time::Instant;
+use thapi::bench_support::Table;
+use thapi::model::class_by_name;
+use thapi::tracer::{
+    emit, install_session, uninstall_session, SessionConfig, SinkKind, TracingMode,
+};
+
+fn per_event_ns<F: FnMut()>(n: u64, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / n as f64
+}
+
+fn main() {
+    let n = 2_000_000u64;
+    let small = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+    let memcpy = class_by_name("lttng_ust_ze:zeCommandListAppendMemoryCopy_entry").unwrap();
+    let polling = class_by_name("lttng_ust_ze:zeEventQueryStatus_entry").unwrap();
+
+    let mut table = Table::new(&["state", "ns/event"]);
+
+    // 1. no session
+    let ns = per_event_ns(n, || {
+        emit(small, |e| {
+            e.u64(0);
+        });
+    });
+    table.row(&["no session".into(), format!("{ns:.1}")]);
+
+    // 2. class disabled (polling class in default mode)
+    install_session(SessionConfig {
+        sink: SinkKind::Null,
+        mode: TracingMode::Default,
+        ..Default::default()
+    });
+    let ns = per_event_ns(n, || {
+        emit(polling, |e| {
+            e.ptr(0xe0);
+        });
+    });
+    table.row(&["disabled class".into(), format!("{ns:.1}")]);
+
+    // 3. enabled, small payload (8 B)
+    let ns_small = per_event_ns(n, || {
+        emit(small, |e| {
+            e.u64(7);
+        });
+    });
+    table.row(&["enabled, 8B payload".into(), format!("{ns_small:.1}")]);
+
+    // 4. enabled, full memcpy payload (44 B, 7 fields)
+    let ns_full = per_event_ns(n, || {
+        emit(memcpy, |e| {
+            e.ptr(0x1150).ptr(0xff00_1000).ptr(0x7f00_2000).u64(1 << 20).ptr(0).u64(0).ptr(0);
+        });
+    });
+    table.row(&["enabled, memcpy payload".into(), format!("{ns_full:.1}")]);
+
+    let session = uninstall_session().unwrap();
+    let stats = session.stats();
+
+    println!("\n=== E11: tracepoint cost (paper: 'order of nanoseconds') ===\n");
+    println!("{}", table.render());
+    println!(
+        "events written: {}  dropped: {} ({:.2}% drop rate at full speed)",
+        stats.written,
+        stats.dropped,
+        stats.dropped as f64 * 100.0 / (stats.written + stats.dropped).max(1) as f64
+    );
+    println!(
+        "sustained emit throughput: {:.1} M events/s (memcpy payload)",
+        1e3 / ns_full
+    );
+}

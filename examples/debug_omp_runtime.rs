@@ -1,0 +1,72 @@
+//! Experiment E3 — the §4.1 case study: diagnosing the (closed-source)
+//! OpenMP runtime's copy-engine misuse from the Level-Zero trace alone.
+//!
+//! Runs the same offload workload against the buggy runtime (all command
+//! lists bound to the compute engine) and the fixed runtime (transfers on
+//! the dedicated copy engine), and shows how the `command_completed`
+//! profiling events expose the difference without any runtime source.
+
+use std::sync::Arc;
+use thapi::analysis;
+use thapi::device::{AllocKind, EngineKind, Node, NodeConfig};
+use thapi::intercept::omp::{OmpConfig, OmpRuntime};
+use thapi::intercept::ze::ZeDriver;
+use thapi::tracer::{btf, install_session, uninstall_session, SessionConfig};
+
+fn run_and_count(node: &Arc<Node>, use_copy_engine: bool) -> (u64, u64) {
+    install_session(SessionConfig::default());
+    let omp = OmpRuntime::new(ZeDriver::new(node.clone()), OmpConfig { use_copy_engine });
+    let bytes = 4u64 << 20;
+    let (_, d) = omp.omp_target_alloc(bytes, 0);
+    let host = node.gpu(0).pool.alloc(AllocKind::Host, bytes).unwrap();
+    for _ in 0..8 {
+        omp.omp_target_memcpy(d, host, bytes, 0, 0, 0, -1);
+        omp.omp_target_memcpy(host, d, bytes, 0, 0, -1, 0);
+    }
+    omp.omp_target_free(d, 0);
+    let _ = node.gpu(0).pool.free(host);
+    let session = uninstall_session().unwrap();
+    let trace = btf::collect(&session, &[]);
+    let msgs = analysis::mux(&analysis::parse_trace(&trace).unwrap());
+
+    let (mut on_compute, mut on_copy) = (0u64, 0u64);
+    for m in &msgs {
+        if m.class.name == "lttng_ust_profiling:command_completed"
+            && m.field("kind").unwrap().as_str() == "memcpy"
+        {
+            if m.field("engine_kind").unwrap().as_u64() == EngineKind::Copy.code() as u64 {
+                on_copy += 1;
+            } else {
+                on_compute += 1;
+            }
+        }
+    }
+    (on_compute, on_copy)
+}
+
+fn main() {
+    let node = Node::new(NodeConfig::test_small());
+
+    println!("== §4.1: tracing the 'closed-source' OpenMP runtime ==\n");
+    let (compute, copy) = run_and_count(&node, false);
+    println!(
+        "buggy runtime:  {compute} transfers on ComputeEngine, {copy} on CopyEngine"
+    );
+    println!(
+        "  -> trace shows the runtime does NOT leverage the dedicated copy engine;\n\
+         \x20  all command lists are bound to the compute engine (the bug we report)\n"
+    );
+    assert_eq!(copy, 0);
+
+    let (compute2, copy2) = run_and_count(&node, true);
+    println!(
+        "fixed runtime:  {compute2} transfers on ComputeEngine, {copy2} on CopyEngine"
+    );
+    println!("  -> after the fix, data transfers use the dedicated copy engine\n");
+    assert_eq!(compute2, 0);
+
+    println!(
+        "case study reproduced: API-call traces alone were sufficient context to\n\
+         analyze a proprietary runtime and report the performance issue."
+    );
+}

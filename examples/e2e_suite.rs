@@ -1,0 +1,83 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation).
+//!
+//! Proves all layers compose on a real workload: runs the full
+//! HeCBench-like suite (real Pallas→HLO→PJRT kernels) under `iprof`
+//! across the six §5.2 configurations plus baseline, and reports the
+//! paper's headline metric — tracing overhead per configuration — along
+//! with trace sizes, a tally, a timeline and a validation report for one
+//! representative app. Results are recorded in EXPERIMENTS.md.
+
+use thapi::analysis;
+use thapi::apps::hecbench;
+use thapi::bench_support::{mean_of, median_of, Table};
+use thapi::coordinator::{overhead_pct, run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::tracer::{SinkKind, TracingMode};
+
+fn main() {
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.3");
+    }
+    let node = Node::new(NodeConfig::test_small());
+    let apps = hecbench::suite();
+
+    let configs: Vec<IprofConfig> = [
+        (TracingMode::Minimal, false),
+        (TracingMode::Default, false),
+        (TracingMode::Full, false),
+        (TracingMode::Minimal, true),
+        (TracingMode::Default, true),
+        (TracingMode::Full, true),
+    ]
+    .iter()
+    .map(|(m, s)| {
+        let mut c = IprofConfig::paper_config(*m, *s);
+        c.sink = SinkKind::Null;
+        c
+    })
+    .collect();
+    let labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
+
+    let mut overheads: Vec<Vec<f64>> = vec![Vec::new(); configs.len()];
+    let mut events: Vec<u64> = vec![0; configs.len()];
+    for app in &apps {
+        let _ = run(&node, app.as_ref(), &IprofConfig::baseline()); // warmup
+        let base = (0..2)
+            .map(|_| run(&node, app.as_ref(), &IprofConfig::baseline()).wall)
+            .min()
+            .unwrap();
+        for (ci, c) in configs.iter().enumerate() {
+            let r = run(&node, app.as_ref(), c);
+            overheads[ci].push(overhead_pct(base, r.wall));
+            events[ci] += r.stats.as_ref().map(|s| s.written).unwrap_or(0);
+        }
+        eprintln!("e2e: {} done", app.name());
+    }
+
+    println!("\n=== E2E: headline metric — tracing overhead across the suite ===\n");
+    let mut t = Table::new(&["config", "mean %", "median %", "events"]);
+    for (ci, label) in labels.iter().enumerate() {
+        t.row(&[
+            label.clone(),
+            format!("{:.2}", mean_of(&overheads[ci])),
+            format!("{:.2}", median_of(&overheads[ci])),
+            events[ci].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // One representative app end-to-end through every analysis plugin.
+    let app = apps.iter().find(|a| a.name() == "lrn-hip").unwrap();
+    let report = run(&node, app.as_ref(), &IprofConfig::default());
+    let trace = report.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let intervals = analysis::pair_intervals(&msgs);
+    let tally = analysis::Tally::build(&intervals, &msgs);
+    println!("=== tally (lrn-hip) ===\n{}", tally.render());
+    let json = analysis::timeline_json(&intervals, &msgs);
+    std::fs::write("e2e_lrn_hip.trace.json", &json).unwrap();
+    println!("timeline: wrote e2e_lrn_hip.trace.json ({} bytes)", json.len());
+    let findings = analysis::validate(&msgs);
+    println!("validation: {} finding(s)", findings.len());
+    println!("\nE2E complete: AOT kernels -> PJRT runtime -> traced frontends -> BTF -> plugins.");
+}

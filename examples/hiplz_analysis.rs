@@ -1,0 +1,48 @@
+//! Experiment E5 — the §4.3 case study: analyzing the HIPLZ layering for
+//! the LRN mini-app, tally + layering breakdown.
+
+use thapi::analysis;
+use thapi::apps::hecbench;
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+
+fn main() {
+    std::env::set_var("THAPI_APP_SCALE", "0.6");
+    let node = Node::new(NodeConfig::aurora());
+    let apps = hecbench::suite();
+    let lrn = apps.iter().find(|a| a.name() == "lrn-hip").unwrap();
+
+    println!("== §4.3: LRN (HIP) on Aurora via HIPLZ (HIP -> Level-Zero) ==\n");
+    let report = run(&node, lrn.as_ref(), &IprofConfig::default());
+    let tally = report.tally().unwrap();
+    println!("{}", tally.render());
+
+    // Layering analysis: how hipDeviceSynchronize decomposes into the
+    // zeEventHostSynchronize spin lock.
+    let trace = report.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let intervals = analysis::pair_intervals(&msgs);
+
+    let hip_sync: Vec<_> = intervals.iter().filter(|i| i.name == "hipDeviceSynchronize").collect();
+    let ze_spin: Vec<_> =
+        intervals.iter().filter(|i| i.name == "zeEventHostSynchronize").collect();
+    let nested: usize = ze_spin
+        .iter()
+        .filter(|z| hip_sync.iter().any(|h| h.start <= z.start && z.end <= h.end))
+        .count();
+    println!(
+        "layering: {} hipDeviceSynchronize calls decompose into {} zeEventHostSynchronize \
+         calls ({} nested inside a hip sync span)",
+        hip_sync.len(),
+        ze_spin.len(),
+        nested
+    );
+    assert!(ze_spin.len() > hip_sync.len(), "spin-lock layering must be visible");
+
+    // Depth histogram: depth 0 = HIP API, depth 1 = the ZE calls it spawns.
+    let mut by_depth = std::collections::BTreeMap::new();
+    for iv in &intervals {
+        *by_depth.entry(iv.depth).or_insert(0u64) += 1;
+    }
+    println!("interval depth histogram (0 = app-facing API, 1 = backend): {by_depth:?}");
+}

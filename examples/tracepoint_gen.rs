@@ -1,0 +1,51 @@
+//! Experiment E2 — the Fig. 3 generation pipeline for `cuMemGetInfo`:
+//! header prototype → API model → intermediary YAML → LTTng trace model
+//! (event classes) → live registry ids.
+
+use thapi::model::{metaparams, registry, yaml, Api};
+
+fn main() {
+    let reg = registry();
+    let model = reg.model(Api::Cuda);
+    let f = model.function("cuMemGetInfo").expect("cuMemGetInfo in header");
+
+    println!("== 1. parsed from assets/headers/cuda.h ==\n");
+    println!(
+        "  {} {}({})",
+        f.ret.name(),
+        f.name,
+        f.params
+            .iter()
+            .map(|p| format!("{} {}", p.ty.name(), p.name))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    println!("\n== 2. meta-parameters (Fig. 3 'Meta-parameter' block) ==\n");
+    for m in metaparams::metaparams(Api::Cuda, "cuMemGetInfo") {
+        println!("  - {m:?}  -> field {} at {}", m.field_name(), if m.at_entry() { "entry" } else { "exit" });
+    }
+
+    println!("\n== 3. intermediary YAML API model (functions: cuMemGetInfo) ==\n");
+    let mut single = thapi::model::ApiModel {
+        api: Some(Api::Cuda),
+        functions: vec![f.clone()],
+        enums: vec![],
+    };
+    single.api = Some(Api::Cuda);
+    let y = yaml::emit_api_model(&single);
+    println!("{y}");
+    // round-trip proof
+    let back = yaml::parse_api_model(&y).unwrap();
+    assert_eq!(back.functions[0], *f, "YAML round-trip must be lossless");
+
+    println!("== 4. generated LTTng trace model (event classes) ==\n");
+    for name in ["lttng_ust_cuda:cuMemGetInfo_entry", "lttng_ust_cuda:cuMemGetInfo_exit"] {
+        let c = reg.class(name).unwrap();
+        println!("  TRACEPOINT_EVENT id={} {}", c.id, c.name);
+        for fd in &c.fields {
+            println!("      field {:<8} {:?}", fd.name, fd.ty);
+        }
+    }
+    println!("\n(registry holds {} generated event classes)", thapi::model::class_count());
+}

@@ -1,0 +1,96 @@
+//! Experiment E4 — the §4.2 case study: post-mortem validation of
+//! low-level API mistakes.
+//!
+//! Runs a deliberately sloppy Level-Zero application (uninitialized
+//! `pNext`, an event that is never destroyed, a command list re-executed
+//! without reset, a zero-byte copy) and a clean one, and prints the
+//! validation plugin's reports for both.
+
+use std::sync::Arc;
+use thapi::analysis::{self, validate::render_report, Severity};
+use thapi::device::{Node, NodeConfig};
+use thapi::intercept::ze::{ZeDeviceProperties, ZeDriver};
+use thapi::tracer::{btf, install_session, uninstall_session, SessionConfig};
+
+fn trace_app(node: &Arc<Node>, sloppy: bool) -> Vec<analysis::Finding> {
+    install_session(SessionConfig::default());
+    let ze = ZeDriver::new(node.clone());
+    ze.ze_init(0);
+    let mut drivers = vec![];
+    ze.ze_driver_get(&mut drivers);
+    let mut devices = vec![];
+    ze.ze_device_get(drivers[0], &mut devices);
+    let dev = devices[0];
+    let (_, ctx) = ze.ze_context_create(drivers[0]);
+
+    // --- the §4.2 pNext mistake -------------------------------------
+    let mut props = ZeDeviceProperties {
+        // C: `ze_device_properties_t device_properties;` — stack garbage.
+        p_next: if sloppy { 0xdead_beef_0bad_f00d } else { 0 },
+        ..Default::default()
+    };
+    ze.ze_device_get_properties(dev, &mut props);
+
+    // --- events ------------------------------------------------------
+    let (_, pool) = ze.ze_event_pool_create(ctx, 4);
+    let (_, ev) = ze.ze_event_create(pool);
+    let (_, ev2) = ze.ze_event_create(pool);
+    ze.ze_event_destroy(ev2);
+    if !sloppy {
+        ze.ze_event_destroy(ev); // clean app releases everything
+    }
+
+    // --- command list reuse ------------------------------------------
+    let (_, queue) = ze.ze_command_queue_create(ctx, dev, 0);
+    let (_, list) = ze.ze_command_list_create(ctx, dev);
+    let (_, h) = ze.ze_mem_alloc_host(ctx, 4096, 64);
+    let (_, d) = ze.ze_mem_alloc_device(ctx, 4096, 64, dev);
+    ze.ze_command_list_append_memory_copy(list, d, h, 4096, 0);
+    if sloppy {
+        ze.ze_command_list_append_memory_copy(list, d, h, 0, 0); // zero bytes
+    }
+    ze.ze_command_list_close(list);
+    ze.ze_command_queue_execute_command_lists(queue, &[list]);
+    ze.ze_command_queue_synchronize(queue, u64::MAX);
+    if sloppy {
+        // UB in real Level-Zero: close + execute again without reset
+        ze.ze_command_list_close(list);
+        ze.ze_command_queue_execute_command_lists(queue, &[list]);
+        ze.ze_command_queue_synchronize(queue, u64::MAX);
+    } else {
+        ze.ze_command_list_reset(list);
+    }
+
+    ze.ze_mem_free(ctx, h);
+    ze.ze_mem_free(ctx, d);
+    ze.ze_command_list_destroy(list);
+    ze.ze_command_queue_destroy(queue);
+    ze.ze_event_pool_destroy(pool);
+    ze.ze_context_destroy(ctx);
+
+    let session = uninstall_session().unwrap();
+    let trace = btf::collect(&session, &[]);
+    let msgs = analysis::mux(&analysis::parse_trace(&trace).unwrap());
+    analysis::validate(&msgs)
+}
+
+fn main() {
+    let node = Node::new(NodeConfig::test_small());
+
+    println!("== §4.2: post-mortem validation — sloppy application ==\n");
+    let findings = trace_app(&node, true);
+    print!("{}", render_report(&findings));
+    assert!(findings.iter().any(|f| f.rule == "ze-uninitialized-pnext"));
+    assert!(findings.iter().any(|f| f.rule == "unreleased-event"));
+    assert!(findings.iter().any(|f| f.rule == "ze-list-not-reset"));
+    assert!(findings.iter().any(|f| f.severity == Severity::Error));
+
+    println!("\n== same application, fixed ==\n");
+    let findings = trace_app(&node, false);
+    print!("{}", render_report(&findings));
+    assert!(
+        !findings.iter().any(|f| f.severity == Severity::Error),
+        "clean app must have no errors"
+    );
+    println!("\ncase study reproduced: the validation plugin catches the pNext UB,\nunreleased events and non-reset command lists post-mortem.");
+}

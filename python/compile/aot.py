@@ -1,0 +1,89 @@
+"""AOT compile path: lower every L2 model to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (what the published
+``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs, under --out-dir (default ../artifacts relative to this file):
+  <name>.hlo.txt      one per MODELS entry
+  manifest.txt        line-based catalog the Rust runtime parses:
+                        kernel <name> <file>
+                        param <dtype> <d0>x<d1>x...   (repeated, in order)
+                        result <dtype> <d0>x...
+Run via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    import numpy as np
+
+    return {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}[
+        str(np.dtype(dt))
+    ]
+
+
+def _shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+def main() -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_out = os.path.join(here, "..", "..", "artifacts")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=default_out)
+    ap.add_argument("--only", default=None, help="comma-separated model names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = []
+    for name, (fn, example_args) in sorted(MODELS.items()):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_aval = jax.eval_shape(fn, *example_args)
+        manifest_lines.append(f"kernel {name} {fname}")
+        for i, a in enumerate(example_args):
+            manifest_lines.append(
+                f"param {_dtype_name(a.dtype)} {_shape_str(a.shape)}"
+            )
+        manifest_lines.append(
+            f"result {_dtype_name(out_aval.dtype)} {_shape_str(out_aval.shape)}"
+        )
+        print(f"lowered {name:10s} -> {fname} ({len(text)} chars)")
+
+    if only is None:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote manifest with {len(MODELS)} kernels")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

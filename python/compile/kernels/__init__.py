@@ -1,0 +1,24 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+Every kernel is authored with ``interpret=True`` so it lowers to plain HLO
+ops that the Rust PJRT CPU client can execute; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping notes in each module.
+"""
+
+from .saxpy import saxpy
+from .conv1d import conv1d
+from .lrn import lrn
+from .stencil2d import jacobi_step
+from .matmul import matmul
+from .softmax import softmax_xent
+from . import ref
+
+__all__ = [
+    "saxpy",
+    "conv1d",
+    "lrn",
+    "jacobi_step",
+    "matmul",
+    "softmax_xent",
+    "ref",
+]

@@ -1,0 +1,46 @@
+"""Pallas across-channel Local Response Normalization.
+
+The LRN mini-app is the workload of the paper's §4.3 HIPLZ case study; this
+kernel is what the simulated GPU actually executes when the HIP frontend
+launches it through the Level-Zero backend.
+
+TPU mapping: grid over the batch dimension; each step holds one (C, W) image
+in VMEM.  The size-n channel window is n shifted reads of the squared tile
+(pad once into scratch-free padded load), accumulated in registers, then one
+rsqrt-style power and a multiply — all VPU work, W on the 128-lane axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lrn_kernel(x_ref, o_ref, *, n, k, alpha, beta, c):
+    # x_ref: (1, C + n - 1, W) channel-padded image; o_ref: (1, C, W)
+    x = x_ref[0]  # (C + n - 1, W), rows [half, half+C) are the real channels
+    half = n // 2
+    sq = x * x
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    for i in range(n):  # static unroll over the channel window
+        acc = acc + sq[i : i + c, :]
+    denom = (k + (alpha / n) * acc) ** beta
+    o_ref[0] = x[half : half + c, :] / denom
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "alpha", "beta"))
+def lrn(x, n=5, k=1.0, alpha=1e-4, beta=0.75):
+    """x: (B, C, W) f32 -> (B, C, W) f32 across-channel LRN."""
+    b, c, w = x.shape
+    half = n // 2
+    xp = jnp.pad(x, ((0, 0), (half, half), (0, 0)))
+    kern = functools.partial(_lrn_kernel, n=n, k=k, alpha=alpha, beta=beta, c=c)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, c + n - 1, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, w), jnp.float32),
+        interpret=True,
+    )(xp)

@@ -1,0 +1,50 @@
+"""Pallas tiled GEMM (f32).
+
+Compute-bound archetype for the kernel-heavy HeCBench-like apps.
+
+TPU mapping: classic MXU schedule — (BM, BK) x (BK, BN) tiles staged in VMEM,
+grid (M/BM, N/BN, K/BK) with the K axis innermost so the f32 accumulator
+tile stays resident in VMEM across the K loop (revolving accumulator), and
+each MXU pass consumes one (BM,BK)x(BK,BN) pair.  On real TPU the tiles
+would be bf16 into the systolic array with f32 accumulation; interpret=True
+keeps everything f32 so the CPU PJRT numerics match the oracle exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=64, bn=64, bk=64):
+    """a: (M, K) f32, b: (K, N) f32 -> (M, N) f32; dims multiples of tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+Each ``ref_*`` function is the semantic ground truth the Pallas kernels in
+this package are tested against (pytest + hypothesis in ``python/tests``).
+They are written in the most obvious jnp style — clarity over speed.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_saxpy(a, x, y):
+    """y' = a * x + y, elementwise. a is a scalar (rank-0 or python float)."""
+    return a * x + y
+
+
+def ref_conv1d(x, w):
+    """Batched 1-D 'same' convolution (cross-correlation).
+
+    x: (B, N) input rows, w: (K,) taps with K odd.
+    out[b, i] = sum_k x[b, i + k - K//2] * w[k], zero-padded at the edges.
+    """
+    b, n = x.shape
+    (k,) = w.shape
+    half = k // 2
+    xp = jnp.pad(x, ((0, 0), (half, half)))
+    # Gather K shifted views and contract against the taps.
+    cols = jnp.stack([xp[:, i : i + n] for i in range(k)], axis=-1)  # (B,N,K)
+    return jnp.einsum("bnk,k->bn", cols, w)
+
+
+def ref_lrn(x, n=5, k=1.0, alpha=1e-4, beta=0.75):
+    """Across-channel Local Response Normalization (AlexNet-style).
+
+    x: (B, C, W). out[b,c,w] = x / (k + alpha/n * sum_{c' in win(c)} x^2)^beta
+    where win(c) is the size-n channel window centered on c (clipped).
+    """
+    b, c, w = x.shape
+    half = n // 2
+    sq = x * x
+    sqp = jnp.pad(sq, ((0, 0), (half, half), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(n):
+        acc = acc + sqp[:, i : i + c, :]
+    denom = (k + (alpha / n) * acc) ** beta
+    return x / denom
+
+
+def ref_stencil2d(grid, steps=1):
+    """steps x 5-point Jacobi sweeps on (H, W); boundary rows/cols held fixed."""
+
+    def one(g):
+        interior = 0.25 * (g[:-2, 1:-1] + g[2:, 1:-1] + g[1:-1, :-2] + g[1:-1, 2:])
+        return g.at[1:-1, 1:-1].set(interior)
+
+    out = grid
+    for _ in range(steps):
+        out = one(out)
+    return out
+
+
+def ref_matmul(a, b):
+    """Plain f32 matmul, the oracle for the tiled Pallas GEMM."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def ref_softmax_xent(logits, labels):
+    """Row-wise numerically-stable softmax cross-entropy.
+
+    logits: (B, V); labels: (B,) int32. Returns (B,) per-row loss.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(s), axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - picked

@@ -1,0 +1,46 @@
+"""Pallas SAXPY kernel: y' = a*x + y.
+
+Bandwidth-bound archetype used by the memcpy-heavy HeCBench-like apps.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the block is sized so that the
+two input tiles plus the output tile fit in VMEM (3 * BLOCK * 4 B << 16 MiB);
+the grid walks the vector in BLOCK-sized chunks so HBM<->VMEM traffic is a
+single linear stream per operand — the role threadblock-striding plays in
+the CUDA original.  interpret=True lowers this to plain HLO so the Rust
+PJRT CPU client can execute it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 * 128 lanes * 64 sublanes: a comfortable f32 VMEM tile.
+BLOCK = 65536
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    # a is a (1,) scalar-prefetch-style operand kept in its own tiny block.
+    a = a_ref[0]
+    o_ref[...] = a * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def saxpy(a, x, y, block=BLOCK):
+    """a: (1,) f32, x/y: (N,) f32 with N a multiple of ``block``."""
+    (n,) = x.shape
+    assert n % block == 0, f"N={n} must be a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a, x, y)

@@ -1,0 +1,47 @@
+"""Pallas row-wise softmax cross-entropy kernel.
+
+Archetype for the reduction-heavy apps (and a second VPU-bound kernel shape
+for the hypothesis sweeps).
+
+TPU mapping: grid over row-blocks; one (ROWS, V) tile of logits in VMEM per
+step, labels in a tiny (ROWS,) int tile.  max / logsumexp are lane-axis
+reductions; the label pick is a one-hot contraction (gathers are a poor fit
+for the VPU, a masked sum is the idiomatic TPU form).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(logits_ref, labels_ref, o_ref):
+    logits = logits_ref[...]  # (ROWS, V)
+    labels = labels_ref[...]  # (ROWS,)
+    rows, v = logits.shape
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(s), axis=-1)) + m[:, 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, v), 1)
+    onehot = (col == labels[:, None]).astype(jnp.float32)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    o_ref[...] = lse - picked
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def softmax_xent(logits, labels, rows=16):
+    """logits: (B, V) f32, labels: (B,) i32 -> (B,) f32 per-row loss."""
+    b, v = logits.shape
+    assert b % rows == 0, f"B={b} must be a multiple of rows={rows}"
+    return pl.pallas_call(
+        _xent_kernel,
+        grid=(b // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, v), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(logits, labels)

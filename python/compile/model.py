@@ -1,0 +1,81 @@
+"""L2: JAX compute graphs around the Pallas kernels.
+
+Each ``*_model`` is the computation one simulated-GPU kernel launch executes.
+They wrap the L1 Pallas kernels with the surrounding (fusable) graph the
+corresponding mini-app needs — bias/activation epilogues, multi-step sweeps —
+so a launch is a single XLA executable with everything fused.
+
+``MODELS`` is the AOT registry: name -> (fn, example_args).  ``aot.py``
+lowers every entry to HLO text; the Rust runtime loads them by name.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv1d, jacobi_step, lrn, matmul, saxpy, softmax_xent
+
+# ---------------------------------------------------------------------------
+# Model functions (single output each; aot.py lowers with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+
+def saxpy_model(a, x, y):
+    """Bandwidth archetype: y' = a*x + y."""
+    return saxpy(a, x, y)
+
+
+def conv1d_model(x, w, bias):
+    """convolution1D mini-app step: relu(conv(x, w) + bias)."""
+    return jax.nn.relu(conv1d(x, w) + bias)
+
+
+def lrn_model(x):
+    """LRN mini-app step (the §4.3 HIPLZ workload)."""
+    return lrn(x)
+
+
+def stencil_model(g):
+    """Four Jacobi sweeps per launch (the lbm-like SPEChpc archetype)."""
+    for _ in range(4):
+        g = jacobi_step(g)
+    return g
+
+
+def matmul_model(a, b, bias):
+    """Compute archetype: gelu(a @ b + bias)."""
+    return jax.nn.gelu(matmul(a, b) + bias[None, :])
+
+
+def xent_model(logits, labels):
+    """Reduction archetype: mean softmax cross-entropy (scalar-ish output)."""
+    per_row = softmax_xent(logits, labels)
+    return jnp.mean(per_row, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: fixed launch shapes, mirrored by the Rust kernel catalog.
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+SAXPY_N = 1 << 20
+CONV_B, CONV_N, CONV_K = 64, 4096, 33
+LRN_B, LRN_C, LRN_W = 32, 64, 256
+STENCIL_H, STENCIL_W = 512, 512
+MM_M, MM_K, MM_N = 256, 256, 256
+XENT_B, XENT_V = 256, 2048
+
+MODELS = {
+    "saxpy": (saxpy_model, (_s((1,)), _s((SAXPY_N,)), _s((SAXPY_N,)))),
+    "conv1d": (conv1d_model, (_s((CONV_B, CONV_N)), _s((CONV_K,)), _s((CONV_B, CONV_N)))),
+    "lrn": (lrn_model, (_s((LRN_B, LRN_C, LRN_W)),)),
+    "stencil": (stencil_model, (_s((STENCIL_H, STENCIL_W)),)),
+    "matmul": (matmul_model, (_s((MM_M, MM_K)), _s((MM_K, MM_N)), _s((MM_N,)))),
+    "xent": (xent_model, (_s((XENT_B, XENT_V)), _s((XENT_B,), I32))),
+}

@@ -1,0 +1,151 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its jnp ref.
+
+This is the CORE L1 correctness signal (fixed shapes matching the AOT
+registry plus a few off-registry shapes); the hypothesis sweeps live in
+test_kernels_prop.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import (
+    conv1d,
+    jacobi_step,
+    lrn,
+    matmul,
+    ref,
+    saxpy,
+    softmax_xent,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _f32(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+class TestSaxpy:
+    def test_registry_shape(self):
+        a, x, y = _f32(1), _f32(1 << 20), _f32(1 << 20)
+        got = saxpy(a, x, y)
+        np.testing.assert_allclose(got, ref.ref_saxpy(a[0], x, y), rtol=1e-5, atol=1e-6)
+
+    def test_small_block(self):
+        a, x, y = _f32(1), _f32(512), _f32(512)
+        got = saxpy(a, x, y, block=128)
+        np.testing.assert_allclose(got, ref.ref_saxpy(a[0], x, y), rtol=1e-5, atol=1e-6)
+
+    def test_single_block(self):
+        a, x, y = _f32(1), _f32(256), _f32(256)
+        got = saxpy(a, x, y, block=256)
+        np.testing.assert_allclose(got, ref.ref_saxpy(a[0], x, y), rtol=1e-5, atol=1e-6)
+
+    def test_zero_scale(self):
+        x, y = _f32(256), _f32(256)
+        got = saxpy(jnp.zeros(1, jnp.float32), x, y, block=128)
+        np.testing.assert_allclose(got, y, rtol=0)
+
+
+class TestConv1d:
+    @pytest.mark.parametrize("b,n,k,rows", [(64, 4096, 33, 8), (8, 64, 5, 4), (4, 128, 1, 2)])
+    def test_vs_ref(self, b, n, k, rows):
+        x, w = _f32(b, n), _f32(k)
+        got = conv1d(x, w, rows=rows)
+        np.testing.assert_allclose(got, ref.ref_conv1d(x, w), rtol=1e-4, atol=1e-5)
+
+    def test_identity_tap(self):
+        x = _f32(4, 64)
+        w = jnp.zeros(5, jnp.float32).at[2].set(1.0)
+        got = conv1d(x, w, rows=2)
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+
+    def test_edge_padding_is_zero(self):
+        # An averaging tap at the left edge only sees half the window.
+        x = jnp.ones((2, 32), jnp.float32)
+        w = jnp.ones(3, jnp.float32)
+        got = conv1d(x, w, rows=2)
+        assert got[0, 0] == pytest.approx(2.0)
+        assert got[0, 1] == pytest.approx(3.0)
+        assert got[0, -1] == pytest.approx(2.0)
+
+
+class TestLrn:
+    @pytest.mark.parametrize("b,c,w", [(32, 64, 256), (2, 16, 32), (1, 8, 128)])
+    def test_vs_ref(self, b, c, w):
+        x = _f32(b, c, w)
+        got = lrn(x)
+        np.testing.assert_allclose(got, ref.ref_lrn(x), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [1, 3, 7])
+    def test_window_sizes(self, n):
+        x = _f32(2, 16, 64)
+        got = lrn(x, n=n)
+        np.testing.assert_allclose(got, ref.ref_lrn(x, n=n), rtol=1e-5, atol=1e-6)
+
+    def test_zero_input_is_zero(self):
+        x = jnp.zeros((1, 8, 32), jnp.float32)
+        np.testing.assert_array_equal(lrn(x), x)
+
+
+class TestStencil:
+    @pytest.mark.parametrize("h,w,rows", [(512, 512, 64), (128, 96, 32), (64, 64, 64)])
+    def test_vs_ref(self, h, w, rows):
+        g = _f32(h, w)
+        got = jacobi_step(g, rows=rows)
+        np.testing.assert_allclose(got, ref.ref_stencil2d(g), rtol=1e-5, atol=1e-6)
+
+    def test_boundaries_fixed(self):
+        g = _f32(64, 64)
+        got = jacobi_step(g, rows=32)
+        np.testing.assert_array_equal(got[0, :], g[0, :])
+        np.testing.assert_array_equal(got[-1, :], g[-1, :])
+        np.testing.assert_array_equal(got[:, 0], g[:, 0])
+        np.testing.assert_array_equal(got[:, -1], g[:, -1])
+
+    def test_constant_field_is_fixed_point(self):
+        g = jnp.full((64, 64), 3.0, jnp.float32)
+        np.testing.assert_allclose(jacobi_step(g, rows=32), g, rtol=1e-6)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n,tiles", [(256, 256, 256, (64, 64, 64)), (128, 64, 96, (32, 32, 32))]
+    )
+    def test_vs_ref(self, m, k, n, tiles):
+        a, b = _f32(m, k), _f32(k, n)
+        bm, bn, bk = tiles
+        got = matmul(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.ref_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        a = _f32(64, 64)
+        eye = jnp.eye(64, dtype=jnp.float32)
+        got = matmul(a, eye, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, a, rtol=1e-5, atol=1e-5)
+
+
+class TestSoftmaxXent:
+    @pytest.mark.parametrize("b,v,rows", [(256, 2048, 16), (32, 128, 8)])
+    def test_vs_ref(self, b, v, rows):
+        logits = _f32(b, v)
+        labels = jnp.asarray(RNG.integers(0, v, size=b), jnp.int32)
+        got = softmax_xent(logits, labels, rows=rows)
+        np.testing.assert_allclose(
+            got, ref.ref_softmax_xent(logits, labels), rtol=1e-4, atol=1e-5
+        )
+
+    def test_confident_correct_prediction_low_loss(self):
+        logits = jnp.full((8, 16), -10.0, jnp.float32)
+        logits = logits.at[jnp.arange(8), jnp.arange(8)].set(10.0)
+        labels = jnp.arange(8, dtype=jnp.int32)
+        got = softmax_xent(logits, labels, rows=8)
+        assert float(jnp.max(got)) < 1e-3
+
+    def test_shift_invariance(self):
+        logits = _f32(16, 64)
+        labels = jnp.asarray(RNG.integers(0, 64, size=16), jnp.int32)
+        a = softmax_xent(logits, labels, rows=16)
+        b = softmax_xent(logits + 100.0, labels, rows=16)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,86 @@
+"""Hypothesis property sweeps over kernel shapes vs the jnp oracles.
+
+Arrays are generated from a drawn integer seed through numpy's PRNG — this
+keeps hypothesis' example size tiny (it shrinks shapes and seeds, not float
+lists) while still sweeping the shape/tile space.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv1d, jacobi_step, lrn, matmul, ref, saxpy, softmax_xent
+
+SETTINGS = dict(max_examples=25, deadline=None)
+seed_st = st.integers(0, 2**32 - 1)
+
+
+def _f32(seed, *shape, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 8), st.integers(1, 6))
+def test_saxpy_prop(seed, blocks, logb):
+    block = 1 << logb
+    n = blocks * block
+    a, x, y = _f32(seed, 1), _f32(seed + 1, n), _f32(seed + 2, n)
+    got = saxpy(a, x, y, block=block)
+    np.testing.assert_allclose(got, ref.ref_saxpy(a[0], x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 4), st.integers(3, 6), st.sampled_from([1, 3, 5, 9]))
+def test_conv1d_prop(seed, btiles, logn, k):
+    rows = 2
+    b, n = btiles * rows, 1 << logn
+    x = _f32(seed, b, n)
+    w = _f32(seed + 1, k, lo=-1.0, hi=1.0)
+    got = conv1d(x, w, rows=rows)
+    np.testing.assert_allclose(got, ref.ref_conv1d(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 3), st.integers(2, 5), st.sampled_from([1, 3, 5, 7]))
+def test_lrn_prop(seed, b, logc, n):
+    c, w = 1 << logc, 16
+    x = _f32(seed, b, c, w)
+    got = lrn(x, n=n)
+    np.testing.assert_allclose(got, ref.ref_lrn(x, n=n), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 4), st.integers(2, 5))
+def test_stencil_prop(seed, bands, logw):
+    rows = 8
+    h, w = bands * rows, 1 << logw
+    g = _f32(seed, h, w)
+    got = jacobi_step(g, rows=rows)
+    np.testing.assert_allclose(got, ref.ref_stencil2d(g), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 3), st.integers(1, 3), st.integers(1, 3))
+def test_matmul_prop(seed, mt, kt, nt):
+    bm = bn = bk = 16
+    m, k, n = mt * bm, kt * bk, nt * bn
+    a = _f32(seed, m, k, lo=-2.0, hi=2.0)
+    b = _f32(seed + 1, k, n, lo=-2.0, hi=2.0)
+    got = matmul(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.ref_matmul(a, b), rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed_st, st.integers(1, 4), st.integers(2, 6))
+def test_xent_prop(seed, rtiles, logv):
+    rows = 4
+    b, v = rtiles * rows, 1 << logv
+    logits = _f32(seed, b, v, lo=-8.0, hi=8.0)
+    labels = jnp.asarray(
+        np.random.default_rng(seed + 7).integers(0, v, size=b), jnp.int32
+    )
+    got = softmax_xent(logits, labels, rows=rows)
+    np.testing.assert_allclose(
+        got, ref.ref_softmax_xent(logits, labels), rtol=1e-3, atol=1e-3
+    )

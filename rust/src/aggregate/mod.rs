@@ -1,0 +1,147 @@
+//! On-node processing and multi-node aggregation (paper §3.7).
+//!
+//! In aggregate-only mode the per-rank traces live in "scratchpad" memory,
+//! are reduced to serialized tallies (kilobytes), and flow up a two-level
+//! master tree: each node's **local master** merges its ranks' tallies,
+//! then sends one aggregate to the **global master**, which combines them
+//! into the composite profile. The paper scales this to 512 nodes; the
+//! `aggregate_scale` bench reproduces that scaling curve.
+
+use crate::analysis::Tally;
+use anyhow::Result;
+
+/// One rank's contribution: a serialized tally (what would travel over
+/// the wire; kilobytes, per the paper).
+#[derive(Debug, Clone)]
+pub struct RankAggregate {
+    /// Node id.
+    pub node: u32,
+    /// Rank id.
+    pub rank: u32,
+    /// Serialized tally.
+    pub payload: String,
+}
+
+impl RankAggregate {
+    /// Build from a tally.
+    pub fn new(node: u32, rank: u32, tally: &Tally) -> Self {
+        RankAggregate { node, rank, payload: tally.serialize() }
+    }
+
+    /// Payload size in bytes (the per-rank network cost).
+    pub fn size_bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// Local master: merge all rank aggregates of one node into the node
+/// aggregate.
+pub fn local_master_merge(node: u32, ranks: &[RankAggregate]) -> Result<RankAggregate> {
+    let mut combined = Tally::default();
+    for r in ranks {
+        debug_assert_eq!(r.node, node);
+        combined.merge(&Tally::deserialize(&r.payload)?);
+    }
+    Ok(RankAggregate { node, rank: 0, payload: combined.serialize() })
+}
+
+/// Global master: merge node aggregates into the composite profile.
+pub fn global_master_merge(nodes: &[RankAggregate]) -> Result<Tally> {
+    let mut composite = Tally::default();
+    for n in nodes {
+        composite.merge(&Tally::deserialize(&n.payload)?);
+    }
+    Ok(composite)
+}
+
+/// Convenience: full two-level aggregation for `nodes × ranks_per_node`
+/// tallies, returning (composite, total bytes moved over the "network").
+pub fn aggregate_tree(per_rank: &[(u32, u32, Tally)]) -> Result<(Tally, usize)> {
+    use std::collections::BTreeMap;
+    let mut by_node: BTreeMap<u32, Vec<RankAggregate>> = BTreeMap::new();
+    let mut bytes = 0usize;
+    for (node, rank, tally) in per_rank {
+        let agg = RankAggregate::new(*node, *rank, tally);
+        bytes += agg.size_bytes(); // rank -> local master
+        by_node.entry(*node).or_default().push(agg);
+    }
+    let mut node_aggs = Vec::with_capacity(by_node.len());
+    for (node, ranks) in &by_node {
+        let merged = local_master_merge(*node, ranks)?;
+        bytes += merged.size_bytes(); // local master -> global master
+        node_aggs.push(merged);
+    }
+    Ok((global_master_merge(&node_aggs)?, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::TallyRow;
+
+    fn tally_with(name: &str, api: &str, time_ns: u64, calls: u64, rank: u32) -> Tally {
+        let mut t = Tally::default();
+        t.host.insert(
+            (api.to_string(), name.to_string()),
+            TallyRow {
+                name: name.into(),
+                api: api.into(),
+                time_ns,
+                calls,
+                min_ns: time_ns / calls.max(1),
+                max_ns: time_ns / calls.max(1),
+            },
+        );
+        t.hostnames.insert(format!("node{rank}"));
+        t.processes.insert(rank);
+        t.threads.insert((rank, rank));
+        t
+    }
+
+    #[test]
+    fn two_level_merge_sums_everything() {
+        let per_rank: Vec<(u32, u32, Tally)> = (0..4)
+            .flat_map(|node| {
+                (0..6).map(move |rank| {
+                    (node, rank, tally_with("zeInit", "ZE", 1000, 2, node * 6 + rank))
+                })
+            })
+            .collect();
+        let (composite, bytes) = aggregate_tree(&per_rank).unwrap();
+        let row = &composite.host[&("ZE".to_string(), "zeInit".to_string())];
+        assert_eq!(row.calls, 48); // 24 ranks x 2 calls
+        assert_eq!(row.time_ns, 24_000);
+        assert_eq!(composite.processes.len(), 24);
+        assert!(bytes > 0);
+    }
+
+    #[test]
+    fn scales_to_512_nodes() {
+        // the paper's §3.7 claim: successfully scaled to 512 nodes
+        let per_rank: Vec<(u32, u32, Tally)> = (0..512)
+            .flat_map(|node| {
+                (0..6).map(move |rank| (node, rank, tally_with("hipMemcpy", "HIP", 500, 1, node)))
+            })
+            .collect();
+        let (composite, bytes) = aggregate_tree(&per_rank).unwrap();
+        let row = &composite.host[&("HIP".to_string(), "hipMemcpy".to_string())];
+        assert_eq!(row.calls, 512 * 6);
+        // aggregates stay kilobytes per hop, not trace-sized
+        let per_hop = bytes / (512 * 6 + 512);
+        assert!(per_hop < 4096, "per-hop aggregate should be small, got {per_hop}");
+    }
+
+    #[test]
+    fn composite_preserves_min_max() {
+        let mut a = tally_with("f", "ZE", 100, 1, 0);
+        a.host.get_mut(&("ZE".into(), "f".into())).unwrap().min_ns = 10;
+        let mut b = tally_with("f", "ZE", 900, 1, 1);
+        b.host.get_mut(&("ZE".into(), "f".into())).unwrap().max_ns = 900;
+        let (composite, _) =
+            aggregate_tree(&[(0, 0, a), (1, 0, b)]).unwrap();
+        let row = &composite.host[&("ZE".to_string(), "f".to_string())];
+        assert_eq!(row.min_ns, 10);
+        assert_eq!(row.max_ns, 900);
+        assert_eq!(row.time_ns, 1000);
+    }
+}

@@ -1,0 +1,122 @@
+//! Metababel-style dispatch: plugins as callback collections.
+//!
+//! THAPI's Metababel "attaches user-defined callbacks to trace events
+//! (generated automatically from the LTTng trace model)… all the plugins
+//! are collections of callbacks that are executed when they receive
+//! events." [`Graph`] is that: register callbacks on exact names or
+//! substring patterns, then push a muxed message sequence through.
+
+use super::msg::EventMsg;
+use std::collections::HashMap;
+
+type Callback<'a> = Box<dyn FnMut(&EventMsg) + 'a>;
+
+/// A processing graph: muxed source -> pattern-dispatched callbacks.
+#[derive(Default)]
+pub struct Graph<'a> {
+    exact: HashMap<String, Vec<usize>>,
+    patterns: Vec<(String, usize)>,
+    all: Vec<usize>,
+    callbacks: Vec<Callback<'a>>,
+}
+
+impl<'a> Graph<'a> {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach a callback to an exact event name.
+    pub fn on(&mut self, name: &str, cb: impl FnMut(&EventMsg) + 'a) -> &mut Self {
+        let id = self.callbacks.len();
+        self.callbacks.push(Box::new(cb));
+        self.exact.entry(name.to_string()).or_default().push(id);
+        self
+    }
+
+    /// Attach a callback to every event whose name contains `pattern`.
+    pub fn on_matching(&mut self, pattern: &str, cb: impl FnMut(&EventMsg) + 'a) -> &mut Self {
+        let id = self.callbacks.len();
+        self.callbacks.push(Box::new(cb));
+        self.patterns.push((pattern.to_string(), id));
+        self
+    }
+
+    /// Attach a callback to every event.
+    pub fn on_all(&mut self, cb: impl FnMut(&EventMsg) + 'a) -> &mut Self {
+        let id = self.callbacks.len();
+        self.callbacks.push(Box::new(cb));
+        self.all.push(id);
+        self
+    }
+
+    /// Push a message sequence through the graph.
+    pub fn run(&mut self, msgs: &[EventMsg]) {
+        for m in msgs {
+            if let Some(ids) = self.exact.get(m.class.name.as_str()) {
+                // ids are disjoint index sets; split_at_mut-free dispatch
+                // via raw indices is fine because we only borrow one at a
+                // time through the RefCell-free callbacks vec.
+                for &id in ids.clone().iter() {
+                    (self.callbacks[id])(m);
+                }
+            }
+            for (pat, id) in self.patterns.clone() {
+                if m.class.name.contains(&pat) {
+                    (self.callbacks[id])(m);
+                }
+            }
+            for id in self.all.clone() {
+                (self.callbacks[id])(m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::analysis::muxer::mux;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+    use std::cell::Cell;
+
+    fn sample_msgs() -> Vec<EventMsg> {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let init = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let init_x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        let cu = class_by_name("lttng_ust_cuda:cuInit_entry").unwrap();
+        emit(init, |e| {
+            e.u64(0);
+        });
+        emit(init_x, |e| {
+            e.u64(0);
+        });
+        emit(cu, |e| {
+            e.u64(0);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        mux(&parse_trace(&trace).unwrap())
+    }
+
+    #[test]
+    fn dispatch_by_exact_name_and_pattern() {
+        let msgs = sample_msgs();
+        let exact_hits = Cell::new(0);
+        let ze_hits = Cell::new(0);
+        let all_hits = Cell::new(0);
+        let mut g = Graph::new();
+        g.on("lttng_ust_ze:zeInit_entry", |_| exact_hits.set(exact_hits.get() + 1));
+        g.on_matching("lttng_ust_ze", |_| ze_hits.set(ze_hits.get() + 1));
+        g.on_all(|_| all_hits.set(all_hits.get() + 1));
+        g.run(&msgs);
+        assert_eq!(exact_hits.get(), 1);
+        assert_eq!(ze_hits.get(), 2);
+        assert_eq!(all_hits.get(), 3);
+    }
+}

@@ -1,0 +1,240 @@
+//! Interval pairing: `_entry`/`_exit` events -> host call spans.
+//!
+//! The "Interval plugins" of the paper (Fig. 1a): timing analysis based on
+//! the start and end times of events. Pairing is per (rank, tid) with a
+//! stack, so nested calls (HIP wrappers around ZE calls) pair correctly.
+
+use super::msg::EventMsg;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One paired host API call.
+#[derive(Debug, Clone)]
+pub struct Interval {
+    /// API function name (`zeInit`, `hipMemcpy`, ...).
+    pub name: String,
+    /// Backend label (ZE, CUDA, HIP, ...).
+    pub api: String,
+    /// Rank.
+    pub rank: u32,
+    /// Thread.
+    pub tid: u32,
+    /// Hostname.
+    pub hostname: Arc<str>,
+    /// Entry timestamp (ns).
+    pub start: u64,
+    /// Exit timestamp (ns).
+    pub end: u64,
+    /// Nesting depth at entry (0 = top level).
+    pub depth: u32,
+    /// The entry message (full arguments).
+    pub entry: EventMsg,
+    /// The exit message (result + out values), if the call returned.
+    pub exit: Option<EventMsg>,
+}
+
+impl Interval {
+    /// Span duration in ns.
+    pub fn duration(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// Pair entry/exit events from a muxed sequence into intervals.
+/// Unbalanced entries (no exit before end of trace) are emitted with
+/// `exit: None` and `end` = last seen timestamp.
+pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
+    struct Open {
+        entry: EventMsg,
+        depth: u32,
+    }
+    let mut stacks: HashMap<(u32, u32), Vec<Open>> = HashMap::new();
+    let mut out = Vec::new();
+    let mut last_ts = 0u64;
+
+    for m in msgs {
+        last_ts = last_ts.max(m.ts);
+        if !(m.class.is_entry() || m.class.is_exit()) {
+            continue;
+        }
+        let key = (m.rank, m.tid);
+        let stack = stacks.entry(key).or_default();
+        if m.class.is_entry() {
+            let depth = stack.len() as u32;
+            stack.push(Open { entry: m.clone(), depth });
+        } else {
+            // find the matching open entry from the top (tolerates missing
+            // exits in the middle due to ring-buffer drops)
+            let fname = m.class.api_function();
+            if let Some(pos) = stack.iter().rposition(|o| o.entry.class.api_function() == fname) {
+                let drained: Vec<Open> = stack.drain(pos..).collect();
+                let mut iter = drained.into_iter();
+                let open = iter.next().unwrap();
+                // anything above the match lost its exit: close as unbalanced
+                for lost in iter {
+                    out.push(Interval {
+                        name: lost.entry.class.api_function().to_string(),
+                        api: lost.entry.class.api.clone(),
+                        rank: lost.entry.rank,
+                        tid: lost.entry.tid,
+                        hostname: lost.entry.hostname.clone(),
+                        start: lost.entry.ts,
+                        end: m.ts,
+                        depth: lost.depth,
+                        entry: lost.entry,
+                        exit: None,
+                    });
+                }
+                out.push(Interval {
+                    name: fname.to_string(),
+                    api: open.entry.class.api.clone(),
+                    rank: open.entry.rank,
+                    tid: open.entry.tid,
+                    hostname: open.entry.hostname.clone(),
+                    start: open.entry.ts,
+                    end: m.ts,
+                    depth: open.depth,
+                    entry: open.entry,
+                    exit: Some(m.clone()),
+                });
+            }
+            // exit without any entry: dropped entry record — ignore
+        }
+    }
+    // close dangling entries
+    for (_, stack) in stacks {
+        for open in stack {
+            out.push(Interval {
+                name: open.entry.class.api_function().to_string(),
+                api: open.entry.class.api.clone(),
+                rank: open.entry.rank,
+                tid: open.entry.tid,
+                hostname: open.entry.hostname.clone(),
+                start: open.entry.ts,
+                end: last_ts,
+                depth: open.depth,
+                entry: open.entry,
+                exit: None,
+            });
+        }
+    }
+    out.sort_by_key(|i| i.start);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::analysis::muxer::mux;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    fn record<F: FnOnce()>(f: F) -> Vec<EventMsg> {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        f();
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        mux(&parse_trace(&trace).unwrap())
+    }
+
+    #[test]
+    fn simple_pairing() {
+        let msgs = record(|| {
+            let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+            let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        });
+        let iv = pair_intervals(&msgs);
+        assert_eq!(iv.len(), 1);
+        assert_eq!(iv[0].name, "zeInit");
+        assert_eq!(iv[0].depth, 0);
+        assert!(iv[0].exit.is_some());
+        assert!(iv[0].end >= iv[0].start);
+    }
+
+    #[test]
+    fn nested_layering_depths() {
+        let msgs = record(|| {
+            // hipMemcpy wrapping a ze append (the HIPLZ pattern)
+            let he = class_by_name("lttng_ust_hip:hipMemcpy_entry").unwrap();
+            let hx = class_by_name("lttng_ust_hip:hipMemcpy_exit").unwrap();
+            let ze = class_by_name("lttng_ust_ze:zeCommandListClose_entry").unwrap();
+            let zx = class_by_name("lttng_ust_ze:zeCommandListClose_exit").unwrap();
+            emit(he, |e| {
+                e.ptr(1).ptr(2).u64(64).u64(1);
+            });
+            emit(ze, |e| {
+                e.ptr(3);
+            });
+            emit(zx, |e| {
+                e.u64(0);
+            });
+            emit(hx, |e| {
+                e.u64(0);
+            });
+        });
+        let iv = pair_intervals(&msgs);
+        assert_eq!(iv.len(), 2);
+        let hip = iv.iter().find(|i| i.name == "hipMemcpy").unwrap();
+        let ze = iv.iter().find(|i| i.name == "zeCommandListClose").unwrap();
+        assert_eq!(hip.depth, 0);
+        assert_eq!(ze.depth, 1);
+        assert!(hip.start <= ze.start && ze.end <= hip.end, "nesting must hold");
+    }
+
+    #[test]
+    fn dangling_entry_closes_at_trace_end() {
+        let msgs = record(|| {
+            let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+            emit(e, |en| {
+                en.u64(0);
+            });
+        });
+        let iv = pair_intervals(&msgs);
+        assert_eq!(iv.len(), 1);
+        assert!(iv[0].exit.is_none());
+    }
+
+    #[test]
+    fn interleaved_threads_pair_independently() {
+        let msgs = record(|| {
+            let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+            let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+            let t1 = std::thread::spawn(move || {
+                for _ in 0..100 {
+                    emit(e, |en| {
+                        en.u64(0);
+                    });
+                    emit(x, |en| {
+                        en.u64(0);
+                    });
+                }
+            });
+            let t2 = std::thread::spawn(move || {
+                for _ in 0..100 {
+                    emit(e, |en| {
+                        en.u64(0);
+                    });
+                    emit(x, |en| {
+                        en.u64(0);
+                    });
+                }
+            });
+            t1.join().unwrap();
+            t2.join().unwrap();
+        });
+        let iv = pair_intervals(&msgs);
+        assert_eq!(iv.len(), 200);
+        assert!(iv.iter().all(|i| i.exit.is_some()));
+        assert!(iv.iter().all(|i| i.depth == 0));
+    }
+}

@@ -1,0 +1,38 @@
+//! Trace analysis: the Babeltrace2 + Metababel substitute (paper §3.4).
+//!
+//! A BTF trace is parsed offline (never touching the live registry) and
+//! pushed through a source → muxer → filter → sink graph:
+//!
+//! * [`msg`] — the message model: decoded events with stream context.
+//! * [`muxer`] — k-way merge of per-thread streams by timestamp (the
+//!   "Muxer plugin for serializing messages by time").
+//! * [`graph`] — Metababel-style callback dispatch: plugins are
+//!   collections of callbacks attached to event-name patterns.
+//! * [`interval`] — pairs `_entry`/`_exit` events into host spans per
+//!   (rank, thread), handling nesting (HIP-on-ZE layering).
+//! * [`pretty`] — Pretty Print: babeltrace2-style text, formatting every
+//!   field from the trace-model descriptors (the generated plugin).
+//! * [`tally`] — Tally: the §4.3 summary table (time/%/calls/avg/min/max
+//!   per API call, host and device sections, backend totals).
+//! * [`timeline`] — Timeline: Perfetto-compatible chrome-trace JSON with
+//!   host rows, device rows and telemetry counter rows (Fig. 5/6).
+//! * [`validate`] — the §4.2 post-mortem validation plugin (uninitialized
+//!   `pNext`, unreleased events, non-reset command lists, ...).
+
+pub mod graph;
+pub mod interval;
+pub mod msg;
+pub mod muxer;
+pub mod pretty;
+pub mod tally;
+pub mod timeline;
+pub mod validate;
+
+pub use graph::Graph;
+pub use interval::{pair_intervals, Interval};
+pub use msg::{parse_trace, EventMsg, ParsedTrace};
+pub use muxer::mux;
+pub use pretty::pretty_print;
+pub use tally::{Tally, TallyRow};
+pub use timeline::timeline_json;
+pub use validate::{validate, Finding, Severity};

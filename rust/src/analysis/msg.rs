@@ -1,0 +1,100 @@
+//! Message model: decoded trace events with stream context.
+
+use crate::tracer::btf::{iter_records, parse_metadata, DecodedClass, Metadata, TraceData};
+use crate::tracer::encoder::{decode_payload, FieldValue};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One decoded event message.
+#[derive(Debug, Clone)]
+pub struct EventMsg {
+    /// Timestamp (trace-clock ns).
+    pub ts: u64,
+    /// Producing rank.
+    pub rank: u32,
+    /// Producing thread.
+    pub tid: u32,
+    /// Hostname.
+    pub hostname: Arc<str>,
+    /// Event class descriptor.
+    pub class: Arc<DecodedClass>,
+    /// Decoded field values (descriptor order).
+    pub fields: Vec<FieldValue>,
+}
+
+impl EventMsg {
+    /// Field value by name.
+    pub fn field(&self, name: &str) -> Option<&FieldValue> {
+        self.class
+            .fields
+            .iter()
+            .position(|f| f.name == name)
+            .map(|i| &self.fields[i])
+    }
+}
+
+/// A fully parsed trace: metadata + per-stream decoded events (stream
+/// order preserved; use [`crate::analysis::mux`] for time order).
+#[derive(Debug)]
+pub struct ParsedTrace {
+    /// Parsed metadata.
+    pub metadata: Metadata,
+    /// Per-stream events, each stream in emit order.
+    pub streams: Vec<Vec<EventMsg>>,
+}
+
+/// Decode a [`TraceData`] into messages.
+pub fn parse_trace(trace: &TraceData) -> Result<ParsedTrace> {
+    let metadata = parse_metadata(&trace.metadata)?;
+    let classes: HashMap<u32, Arc<DecodedClass>> =
+        metadata.classes.iter().map(|(id, c)| (*id, Arc::new(c.clone()))).collect();
+    let mut streams = Vec::with_capacity(trace.streams.len());
+    for s in &trace.streams {
+        let hostname: Arc<str> = Arc::from(s.hostname.as_str());
+        let mut events = Vec::new();
+        iter_records(&s.bytes, |id, ts, payload| {
+            if let Some(class) = classes.get(&id) {
+                events.push(EventMsg {
+                    ts,
+                    rank: s.rank,
+                    tid: s.tid,
+                    hostname: hostname.clone(),
+                    class: class.clone(),
+                    fields: decode_payload(&class.fields, payload),
+                });
+            }
+        });
+        streams.push(events);
+    }
+    Ok(ParsedTrace { metadata, streams })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    #[test]
+    fn parse_trace_decodes_fields_by_name() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeCommandListAppendMemoryCopy_entry").unwrap();
+        emit(class, |e| {
+            e.ptr(0x1150_0000).ptr(0xff00_1234).ptr(0x7f00_5678).u64(4096).ptr(0).u64(0).ptr(0);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let all: Vec<_> = parsed.streams.iter().flatten().collect();
+        assert_eq!(all.len(), 1);
+        let m = all[0];
+        assert_eq!(m.field("size").unwrap().as_u64(), 4096);
+        assert_eq!(m.field("dstptr").unwrap().as_u64(), 0xff00_1234);
+        assert!(m.field("nope").is_none());
+        assert_eq!(m.class.api_function(), "zeCommandListAppendMemoryCopy");
+    }
+}

@@ -1,0 +1,99 @@
+//! Muxer: k-way merge of per-thread streams into one time-ordered
+//! message sequence (babeltrace2's `muxer` component).
+
+use super::msg::{EventMsg, ParsedTrace};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+struct HeapEntry {
+    ts: u64,
+    stream: usize,
+    index: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        (self.ts, self.stream, self.index) == (other.ts, other.stream, other.index)
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.ts, self.stream, self.index).cmp(&(other.ts, other.stream, other.index))
+    }
+}
+
+/// Merge all streams by timestamp (stable across streams by stream index).
+pub fn mux(trace: &ParsedTrace) -> Vec<EventMsg> {
+    let total: usize = trace.streams.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut heap: BinaryHeap<Reverse<HeapEntry>> = BinaryHeap::new();
+    for (si, s) in trace.streams.iter().enumerate() {
+        if !s.is_empty() {
+            heap.push(Reverse(HeapEntry { ts: s[0].ts, stream: si, index: 0 }));
+        }
+    }
+    while let Some(Reverse(e)) = heap.pop() {
+        let stream = &trace.streams[e.stream];
+        out.push(stream[e.index].clone());
+        let next = e.index + 1;
+        if next < stream.len() {
+            heap.push(Reverse(HeapEntry { ts: stream[next].ts, stream: e.stream, index: next }));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    #[test]
+    fn mux_produces_global_time_order_across_threads() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let mut handles = vec![];
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    emit(class, |e| {
+                        e.u64(1);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        assert!(parsed.streams.len() >= 4);
+        let merged = mux(&parsed);
+        assert_eq!(merged.len(), 800);
+        for w in merged.windows(2) {
+            assert!(w[0].ts <= w[1].ts, "mux must be time-ordered");
+        }
+    }
+
+    #[test]
+    fn mux_empty_trace_is_empty() {
+        let trace = crate::tracer::btf::TraceData {
+            metadata: crate::tracer::btf::generate_metadata(&[]),
+            streams: vec![],
+        };
+        let parsed = parse_trace(&trace).unwrap();
+        assert!(mux(&parsed).is_empty());
+    }
+}

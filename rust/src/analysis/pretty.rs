@@ -1,0 +1,97 @@
+//! Pretty Print plugin: babeltrace2-style text output.
+//!
+//! The formatting is *generated*: every field of every event is rendered
+//! from the trace-model descriptor (name + wire type), so new tracepoints
+//! pretty-print with zero plugin changes — the paper's "plugins generated
+//! automatically from the API model". Output shape mirrors the §1.1
+//! THAPI example: timestamp, hostname, vpid/vtid, event name, then the
+//! full field list (pointers in hex).
+
+use super::msg::EventMsg;
+use std::fmt::Write as _;
+
+/// Format one event.
+pub fn format_event(m: &EventMsg) -> String {
+    let mut out = String::new();
+    let secs = m.ts / 1_000_000_000;
+    let nanos = m.ts % 1_000_000_000;
+    let _ = write!(
+        out,
+        "[{secs:02}.{nanos:09}] {}: vpid: {}, vtid: {}, {}: {{ ",
+        m.hostname, m.rank, m.tid, m.class.name
+    );
+    for (i, (f, v)) in m.class.fields.iter().zip(&m.fields).enumerate() {
+        if i > 0 {
+            let _ = write!(out, ", ");
+        }
+        let _ = write!(out, "{}: {}", f.name, v.render());
+    }
+    let _ = write!(out, " }}");
+    out
+}
+
+/// Pretty-print a muxed message sequence.
+pub fn pretty_print(msgs: &[EventMsg]) -> String {
+    let mut out = String::with_capacity(msgs.len() * 120);
+    for m in msgs {
+        out.push_str(&format_event(m));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::analysis::muxer::mux;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    #[test]
+    fn memcpy_event_renders_like_paper_example() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeCommandListAppendMemoryCopy_entry").unwrap();
+        emit(class, |e| {
+            e.ptr(0x1150_0000_0010)
+                .ptr(0xff00_0000_0000_1000) // device dst
+                .ptr(0x0000_7f00_0000_2000) // host src
+                .u64(1 << 20)
+                .ptr(0)
+                .u64(0)
+                .ptr(0);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let msgs = mux(&parse_trace(&trace).unwrap());
+        let text = pretty_print(&msgs);
+        // The paper's point: source/dest pointers + size are all visible,
+        // and the address spaces are readable off the hex values.
+        assert!(text.contains("zeCommandListAppendMemoryCopy_entry"));
+        assert!(text.contains("dstptr: 0xff00000000001000"));
+        assert!(text.contains("srcptr: 0x00007f0000002000"));
+        assert!(text.contains("size: 1048576"));
+        assert!(text.contains("vpid:"));
+        assert!(text.contains("vtid:"));
+    }
+
+    #[test]
+    fn every_field_of_every_class_renders() {
+        // generated-plugin property: formatting never panics for any class
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let exitc = class_by_name("lttng_ust_cuda:cuMemGetInfo_exit").unwrap();
+        emit(exitc, |e| {
+            e.u64(0).u64(48 << 30).u64(64 << 30);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let msgs = mux(&parse_trace(&trace).unwrap());
+        let text = pretty_print(&msgs);
+        assert!(text.contains("*free: 51539607552"));
+        assert!(text.contains("*total: 68719476736"));
+    }
+}

@@ -1,0 +1,403 @@
+//! Tally plugin: the summary table of the paper's §4.3.
+//!
+//! Aggregates host API intervals (and device commands from the profiling
+//! events) into per-function rows: Time, Time(%), Calls, Average, Min,
+//! Max — sorted by total time, with the backend/hostname/process/thread
+//! counts header. Tallies are mergeable (the §3.7 aggregation protocol
+//! ships serialized tallies from local masters to the global master) and
+//! round-trip through a compact text serialization.
+
+use super::interval::Interval;
+use super::msg::EventMsg;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashSet};
+use std::fmt::Write as _;
+
+/// One aggregated row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TallyRow {
+    /// API function (host) or device command name.
+    pub name: String,
+    /// Backend label.
+    pub api: String,
+    /// Total time, ns.
+    pub time_ns: u64,
+    /// Call count.
+    pub calls: u64,
+    /// Min duration, ns.
+    pub min_ns: u64,
+    /// Max duration, ns.
+    pub max_ns: u64,
+}
+
+impl TallyRow {
+    /// Average duration in ns.
+    pub fn avg_ns(&self) -> u64 {
+        if self.calls == 0 {
+            0
+        } else {
+            self.time_ns / self.calls
+        }
+    }
+
+    fn absorb(&mut self, dur: u64) {
+        self.time_ns += dur;
+        self.calls += 1;
+        self.min_ns = self.min_ns.min(dur);
+        self.max_ns = self.max_ns.max(dur);
+    }
+
+    fn merge(&mut self, other: &TallyRow) {
+        self.time_ns += other.time_ns;
+        self.calls += other.calls;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// The tally: host and device sections plus context counts.
+#[derive(Debug, Clone, Default)]
+pub struct Tally {
+    /// Host API rows keyed by (api, name).
+    pub host: BTreeMap<(String, String), TallyRow>,
+    /// Device command rows keyed by name (kernel name / memcpy / barrier).
+    pub device: BTreeMap<String, TallyRow>,
+    /// Distinct hostnames.
+    pub hostnames: HashSet<String>,
+    /// Distinct ranks ("processes").
+    pub processes: HashSet<u32>,
+    /// Distinct (rank, tid) threads.
+    pub threads: HashSet<(u32, u32)>,
+}
+
+impl Tally {
+    /// Build from paired host intervals and (optionally) profiling events.
+    pub fn build(intervals: &[Interval], profiling: &[EventMsg]) -> Self {
+        let mut t = Tally::default();
+        for iv in intervals {
+            t.hostnames.insert(iv.hostname.to_string());
+            t.processes.insert(iv.rank);
+            t.threads.insert((iv.rank, iv.tid));
+            let key = (iv.api.clone(), iv.name.clone());
+            let dur = iv.duration();
+            t.host
+                .entry(key)
+                .or_insert_with(|| TallyRow {
+                    name: iv.name.clone(),
+                    api: iv.api.clone(),
+                    time_ns: 0,
+                    calls: 0,
+                    min_ns: u64::MAX,
+                    max_ns: 0,
+                })
+                .absorb(dur);
+        }
+        for m in profiling {
+            if m.class.name != "lttng_ust_profiling:command_completed" {
+                continue;
+            }
+            let kind = m.field("kind").map(|v| v.as_str().to_string()).unwrap_or_default();
+            let kname = m.field("name").map(|v| v.as_str().to_string()).unwrap_or_default();
+            let label = if kind == "kernel" { kname } else { kind.clone() };
+            if label.is_empty() || label == "barrier" {
+                continue;
+            }
+            let start = m.field("ts_start").map(|v| v.as_u64()).unwrap_or(0);
+            let end = m.field("ts_end").map(|v| v.as_u64()).unwrap_or(0);
+            t.device
+                .entry(label.clone())
+                .or_insert_with(|| TallyRow {
+                    name: label,
+                    api: "GPU".into(),
+                    time_ns: 0,
+                    calls: 0,
+                    min_ns: u64::MAX,
+                    max_ns: 0,
+                })
+                .absorb(end.saturating_sub(start));
+        }
+        t
+    }
+
+    /// Merge another tally into this one (aggregation tree, §3.7).
+    pub fn merge(&mut self, other: &Tally) {
+        for (k, row) in &other.host {
+            match self.host.get_mut(k) {
+                Some(r) => r.merge(row),
+                None => {
+                    self.host.insert(k.clone(), row.clone());
+                }
+            }
+        }
+        for (k, row) in &other.device {
+            match self.device.get_mut(k) {
+                Some(r) => r.merge(row),
+                None => {
+                    self.device.insert(k.clone(), row.clone());
+                }
+            }
+        }
+        self.hostnames.extend(other.hostnames.iter().cloned());
+        self.processes.extend(other.processes.iter().copied());
+        self.threads.extend(other.threads.iter().copied());
+    }
+
+    /// Total host time (denominator of Time(%)).
+    pub fn total_host_ns(&self) -> u64 {
+        self.host.values().map(|r| r.time_ns).sum()
+    }
+
+    /// Backend -> distinct-function counts (the "BACKEND_HIP 1 | BACKEND_ZE 2"
+    /// header of the §4.3 table).
+    pub fn backend_counts(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for (api, _) in self.host.keys() {
+            *m.entry(api.clone()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Host rows sorted by total time, descending.
+    pub fn host_rows(&self) -> Vec<&TallyRow> {
+        let mut rows: Vec<_> = self.host.values().collect();
+        rows.sort_by(|a, b| b.time_ns.cmp(&a.time_ns));
+        rows
+    }
+
+    /// Device rows sorted by total time, descending.
+    pub fn device_rows(&self) -> Vec<&TallyRow> {
+        let mut rows: Vec<_> = self.device.values().collect();
+        rows.sort_by(|a, b| b.time_ns.cmp(&a.time_ns));
+        rows
+    }
+
+    /// Render the §4.3-style table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut header = String::new();
+        for (api, n) in self.backend_counts() {
+            let _ = write!(header, "BACKEND_{api} {n} | ");
+        }
+        let _ = writeln!(
+            out,
+            "{header}{} Hostnames | {} Processes | {} Threads",
+            self.hostnames.len(),
+            self.processes.len(),
+            self.threads.len()
+        );
+        let total = self.total_host_ns().max(1);
+        let _ = writeln!(
+            out,
+            "{:<38} | {:>10} | {:>8} | {:>9} | {:>10} | {:>10} | {:>10} |",
+            "Name", "Time", "Time(%)", "Calls", "Average", "Min", "Max"
+        );
+        for r in self.host_rows() {
+            let _ = writeln!(
+                out,
+                "{:<38} | {:>10} | {:>7.2}% | {:>9} | {:>10} | {:>10} | {:>10} |",
+                r.name,
+                fmt_ns(r.time_ns),
+                r.time_ns as f64 * 100.0 / total as f64,
+                r.calls,
+                fmt_ns(r.avg_ns()),
+                fmt_ns(r.min_ns),
+                fmt_ns(r.max_ns),
+            );
+        }
+        if !self.device.is_empty() {
+            let _ = writeln!(out, "{:-<120}", "");
+            let _ = writeln!(out, "Device profiling:");
+            for r in self.device_rows() {
+                let _ = writeln!(
+                    out,
+                    "{:<38} | {:>10} | {:>8} | {:>9} | {:>10} | {:>10} | {:>10} |",
+                    r.name,
+                    fmt_ns(r.time_ns),
+                    "",
+                    r.calls,
+                    fmt_ns(r.avg_ns()),
+                    fmt_ns(r.min_ns),
+                    fmt_ns(r.max_ns),
+                );
+            }
+        }
+        out
+    }
+
+    /// Compact serialization for the aggregation protocol (§3.7).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "tally v1 hosts={} procs={} threads={}",
+            self.hostnames.iter().cloned().collect::<Vec<_>>().join(","),
+            self.processes.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(","),
+            self.threads.iter().map(|(r, t)| format!("{r}.{t}")).collect::<Vec<_>>().join(",")
+        );
+        for r in self.host.values() {
+            let _ = writeln!(
+                out,
+                "h {} {} {} {} {} {}",
+                r.api, r.name, r.time_ns, r.calls, r.min_ns, r.max_ns
+            );
+        }
+        for r in self.device.values() {
+            let _ = writeln!(
+                out,
+                "d {} {} {} {} {} {}",
+                r.api, r.name, r.time_ns, r.calls, r.min_ns, r.max_ns
+            );
+        }
+        out
+    }
+
+    /// Parse a serialized tally.
+    pub fn deserialize(text: &str) -> Result<Self> {
+        let mut t = Tally::default();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("tally v1 ") {
+                for part in rest.split_whitespace() {
+                    let (k, v) = part.split_once('=').context("bad header")?;
+                    if v.is_empty() {
+                        continue;
+                    }
+                    match k {
+                        "hosts" => t.hostnames.extend(v.split(',').map(String::from)),
+                        "procs" => {
+                            for p in v.split(',') {
+                                t.processes.insert(p.parse()?);
+                            }
+                        }
+                        "threads" => {
+                            for p in v.split(',') {
+                                let (r, tid) = p.split_once('.').context("bad thread")?;
+                                t.threads.insert((r.parse()?, tid.parse()?));
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let Some(tag) = it.next() else { continue };
+            if tag != "h" && tag != "d" {
+                continue;
+            }
+            let api = it.next().context("api")?.to_string();
+            let name = it.next().context("name")?.to_string();
+            let row = TallyRow {
+                api: api.clone(),
+                name: name.clone(),
+                time_ns: it.next().context("time")?.parse()?,
+                calls: it.next().context("calls")?.parse()?,
+                min_ns: it.next().context("min")?.parse()?,
+                max_ns: it.next().context("max")?.parse()?,
+            };
+            if tag == "h" {
+                t.host.insert((api, name), row);
+            } else {
+                t.device.insert(name, row);
+            }
+        }
+        Ok(t)
+    }
+}
+
+/// Humanize a nanosecond quantity the way iprof does (471.80ns, 3.56ms,
+/// 4.73s).
+pub fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::analysis::muxer::mux;
+    use crate::analysis::pair_intervals;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    fn sample_tally() -> Tally {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        for _ in 0..10 {
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let msgs = mux(&parse_trace(&trace).unwrap());
+        let iv = pair_intervals(&msgs);
+        Tally::build(&iv, &msgs)
+    }
+
+    #[test]
+    fn build_counts_calls_and_times() {
+        let t = sample_tally();
+        let row = &t.host[&("ZE".to_string(), "zeInit".to_string())];
+        assert_eq!(row.calls, 10);
+        assert!(row.min_ns <= row.avg_ns() && row.avg_ns() <= row.max_ns);
+        assert_eq!(t.processes.len(), 1);
+    }
+
+    #[test]
+    fn render_contains_table_columns() {
+        let t = sample_tally();
+        let s = t.render();
+        assert!(s.contains("BACKEND_ZE 1"));
+        assert!(s.contains("Time(%)"));
+        assert!(s.contains("zeInit"));
+        assert!(s.contains("Hostnames"));
+    }
+
+    #[test]
+    fn serialize_roundtrip_preserves_rows() {
+        let t = sample_tally();
+        let s = t.serialize();
+        let back = Tally::deserialize(&s).unwrap();
+        assert_eq!(t.host, back.host);
+        assert_eq!(t.hostnames, back.hostnames);
+        assert_eq!(t.threads, back.threads);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let t1 = sample_tally();
+        let t2 = sample_tally();
+        let mut m = t1.clone();
+        m.merge(&t2);
+        let row = &m.host[&("ZE".to_string(), "zeInit".to_string())];
+        assert_eq!(row.calls, 20);
+        assert_eq!(
+            row.time_ns,
+            t1.host.values().next().unwrap().time_ns + t2.host.values().next().unwrap().time_ns
+        );
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(4_730_000_000), "4.73s");
+        assert_eq!(fmt_ns(3_560_000), "3.56ms");
+        assert_eq!(fmt_ns(471_800), "471.80us");
+    }
+}

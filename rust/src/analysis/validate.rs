@@ -1,0 +1,316 @@
+//! Post-mortem validation plugin (paper §4.2).
+//!
+//! Scans a muxed trace for the low-level API mistakes the paper
+//! mitigates:
+//!
+//! * **Uninitialized `pNext`** — `zeDeviceGetProperties` called with a
+//!   non-null `pNext` field (undefined behaviour in Level-Zero).
+//! * **Unreleased events** — `zeEventCreate`/`cuEventCreate` without a
+//!   matching destroy.
+//! * **Non-reset command lists** — a command list executed again without
+//!   `zeCommandListReset` in between.
+//! * **Unreleased modules/kernels** and zero-byte copies as hygiene
+//!   warnings.
+
+use super::msg::EventMsg;
+use std::collections::{HashMap, HashSet};
+
+/// Finding severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Hygiene issue.
+    Warning,
+    /// Undefined behaviour / correctness risk.
+    Error,
+}
+
+/// One validation finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Severity.
+    pub severity: Severity,
+    /// Rule identifier.
+    pub rule: &'static str,
+    /// Human-readable description.
+    pub message: String,
+    /// Timestamp of the triggering event (0 for end-of-trace findings).
+    pub ts: u64,
+}
+
+/// Run all validation rules over a muxed message sequence.
+pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // --- rule state ---
+    let mut live_events: HashMap<u64, u64> = HashMap::new(); // handle -> create ts
+    let mut live_modules: HashMap<u64, u64> = HashMap::new();
+    let mut live_kernels: HashMap<u64, u64> = HashMap::new();
+    // list handle -> executed-since-reset count
+    let mut list_exec: HashMap<u64, u32> = HashMap::new();
+    let mut flagged_lists: HashSet<u64> = HashSet::new();
+
+    for m in msgs {
+        match m.class.name.as_str() {
+            "lttng_ust_ze:zeDeviceGetProperties_entry" => {
+                if let Some(v) = m.field("pDeviceProperties_pNext") {
+                    if v.as_u64() != 0 {
+                        findings.push(Finding {
+                            severity: Severity::Error,
+                            rule: "ze-uninitialized-pnext",
+                            message: format!(
+                                "zeDeviceGetProperties called with non-null pNext ({:#x}): \
+                                 undefined behaviour — initialize the struct with {{0}} or set \
+                                 pNext = NULL",
+                                v.as_u64()
+                            ),
+                            ts: m.ts,
+                        });
+                    }
+                }
+            }
+            "lttng_ust_ze:zeEventCreate_exit" | "lttng_ust_cuda:cuEventCreate_exit" => {
+                if let Some(h) = m.field("*phEvent") {
+                    if h.as_u64() != 0 {
+                        live_events.insert(h.as_u64(), m.ts);
+                    }
+                }
+            }
+            "lttng_ust_ze:zeEventDestroy_entry" | "lttng_ust_cuda:cuEventDestroy_entry" => {
+                if let Some(h) = m.field("hEvent") {
+                    live_events.remove(&h.as_u64());
+                }
+            }
+            "lttng_ust_ze:zeModuleCreate_exit" => {
+                if let Some(h) = m.field("*phModule") {
+                    if h.as_u64() != 0 {
+                        live_modules.insert(h.as_u64(), m.ts);
+                    }
+                }
+            }
+            "lttng_ust_ze:zeModuleDestroy_entry" => {
+                if let Some(h) = m.field("hModule") {
+                    live_modules.remove(&h.as_u64());
+                }
+            }
+            "lttng_ust_ze:zeKernelCreate_exit" => {
+                if let Some(h) = m.field("*phKernel") {
+                    if h.as_u64() != 0 {
+                        live_kernels.insert(h.as_u64(), m.ts);
+                    }
+                }
+            }
+            "lttng_ust_ze:zeKernelDestroy_entry" => {
+                if let Some(h) = m.field("hKernel") {
+                    live_kernels.remove(&h.as_u64());
+                }
+            }
+            "lttng_ust_ze:zeCommandListReset_entry" => {
+                if let Some(h) = m.field("hCommandList") {
+                    list_exec.insert(h.as_u64(), 0);
+                }
+            }
+            "lttng_ust_ze:zeCommandQueueExecuteCommandLists_entry" => {
+                // we cannot see the list array contents (traced as a
+                // pointer); execution counting is done via the per-list
+                // close/execute pattern below using the queue field only.
+            }
+            "lttng_ust_ze:zeCommandListClose_entry" => {
+                if let Some(h) = m.field("hCommandList") {
+                    let c = list_exec.entry(h.as_u64()).or_insert(0);
+                    // closing again without reset after an execute -> the
+                    // §4.2 non-reset pattern
+                    if *c > 0 && flagged_lists.insert(h.as_u64()) {
+                        findings.push(Finding {
+                            severity: Severity::Error,
+                            rule: "ze-list-not-reset",
+                            message: format!(
+                                "command list {:#x} closed/re-executed without \
+                                 zeCommandListReset",
+                                h.as_u64()
+                            ),
+                            ts: m.ts,
+                        });
+                    }
+                    *c += 1;
+                }
+            }
+            "lttng_ust_ze:zeCommandListAppendMemoryCopy_entry" => {
+                if let Some(size) = m.field("size") {
+                    if size.as_u64() == 0 {
+                        findings.push(Finding {
+                            severity: Severity::Warning,
+                            rule: "ze-zero-byte-copy",
+                            message: "zero-byte zeCommandListAppendMemoryCopy".into(),
+                            ts: m.ts,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    for (h, ts) in live_events {
+        findings.push(Finding {
+            severity: Severity::Warning,
+            rule: "unreleased-event",
+            message: format!("event {h:#x} created at t={ts}ns was never destroyed"),
+            ts: 0,
+        });
+    }
+    for (h, ts) in live_modules {
+        findings.push(Finding {
+            severity: Severity::Warning,
+            rule: "unreleased-module",
+            message: format!("module {h:#x} created at t={ts}ns was never destroyed"),
+            ts: 0,
+        });
+    }
+    for (h, ts) in live_kernels {
+        findings.push(Finding {
+            severity: Severity::Warning,
+            rule: "unreleased-kernel",
+            message: format!("kernel {h:#x} created at t={ts}ns was never destroyed"),
+            ts: 0,
+        });
+    }
+
+    findings.sort_by_key(|f| f.ts);
+    findings
+}
+
+/// Render findings as a report.
+pub fn render_report(findings: &[Finding]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let errors = findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warnings = findings.len() - errors;
+    let _ = writeln!(out, "validation: {errors} error(s), {warnings} warning(s)");
+    for f in findings {
+        let tag = match f.severity {
+            Severity::Error => "ERROR",
+            Severity::Warning => "WARN ",
+        };
+        let _ = writeln!(out, "[{tag}] {}: {}", f.rule, f.message);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::analysis::muxer::mux;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    fn run<F: FnOnce()>(f: F) -> Vec<Finding> {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        f();
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        validate(&mux(&parse_trace(&trace).unwrap()))
+    }
+
+    #[test]
+    fn uninitialized_pnext_is_flagged() {
+        let findings = run(|| {
+            let c = class_by_name("lttng_ust_ze:zeDeviceGetProperties_entry").unwrap();
+            emit(c, |e| {
+                e.ptr(0xde0).ptr(0x7ffe).ptr(0xdeadbeef); // garbage pNext
+            });
+        });
+        assert!(findings.iter().any(|f| f.rule == "ze-uninitialized-pnext"));
+        assert_eq!(findings[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn null_pnext_is_clean() {
+        let findings = run(|| {
+            let c = class_by_name("lttng_ust_ze:zeDeviceGetProperties_entry").unwrap();
+            emit(c, |e| {
+                e.ptr(0xde0).ptr(0x7ffe).ptr(0);
+            });
+        });
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn unreleased_event_is_flagged_and_released_is_not() {
+        let findings = run(|| {
+            let cx = class_by_name("lttng_ust_ze:zeEventCreate_exit").unwrap();
+            emit(cx, |e| {
+                e.u64(0).ptr(0xe001);
+            });
+            emit(cx, |e| {
+                e.u64(0).ptr(0xe002);
+            });
+            let d = class_by_name("lttng_ust_ze:zeEventDestroy_entry").unwrap();
+            emit(d, |e| {
+                e.ptr(0xe001);
+            });
+        });
+        let unreleased: Vec<_> =
+            findings.iter().filter(|f| f.rule == "unreleased-event").collect();
+        assert_eq!(unreleased.len(), 1);
+        assert!(unreleased[0].message.contains("0xe002"));
+    }
+
+    #[test]
+    fn list_reclose_without_reset_is_flagged() {
+        let findings = run(|| {
+            let close = class_by_name("lttng_ust_ze:zeCommandListClose_entry").unwrap();
+            emit(close, |e| {
+                e.ptr(0x1150);
+            });
+            emit(close, |e| {
+                e.ptr(0x1150);
+            });
+        });
+        assert!(findings.iter().any(|f| f.rule == "ze-list-not-reset"));
+    }
+
+    #[test]
+    fn reset_between_closes_is_clean() {
+        let findings = run(|| {
+            let close = class_by_name("lttng_ust_ze:zeCommandListClose_entry").unwrap();
+            let reset = class_by_name("lttng_ust_ze:zeCommandListReset_entry").unwrap();
+            emit(close, |e| {
+                e.ptr(0x1150);
+            });
+            emit(reset, |e| {
+                e.ptr(0x1150);
+            });
+            emit(close, |e| {
+                e.ptr(0x1150);
+            });
+        });
+        assert!(!findings.iter().any(|f| f.rule == "ze-list-not-reset"));
+    }
+
+    #[test]
+    fn zero_byte_copy_warns() {
+        let findings = run(|| {
+            let c = class_by_name("lttng_ust_ze:zeCommandListAppendMemoryCopy_entry").unwrap();
+            emit(c, |e| {
+                e.ptr(1).ptr(2).ptr(3).u64(0).ptr(0).u64(0).ptr(0);
+            });
+        });
+        assert!(findings.iter().any(|f| f.rule == "ze-zero-byte-copy"));
+    }
+
+    #[test]
+    fn report_renders_counts() {
+        let findings = vec![Finding {
+            severity: Severity::Error,
+            rule: "x",
+            message: "m".into(),
+            ts: 0,
+        }];
+        let r = render_report(&findings);
+        assert!(r.contains("1 error(s), 0 warning(s)"));
+    }
+}

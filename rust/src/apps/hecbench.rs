@@ -1,0 +1,725 @@
+//! HeCBench-like mini-app suite (paper §5.1: 70 apps from the real suite;
+//! we ship 20 spanning the same archetypes).
+//!
+//! Archetypes and what they stress:
+//! * bandwidth (saxpy, memcpy) — copy engines + big transfers
+//! * compute (gemm, conv, stencil, lrn, softmax) — kernel time dominates
+//! * launch-rate (reduction-cuda, miniweather) — many small submissions
+//! * sync-heavy (eventspin) — `zeEventHostSynchronize` storms (HIPLZ-like)
+//! * polling (queryspin) — `cuEventQuery` spin loops: events that exist
+//!   only in *full* mode, separating T-full from T-default in Fig. 7/8.
+
+use super::{scaled, Workload};
+use crate::device::{AllocKind, Node};
+use crate::intercept::cuda::{cu_result, CudaDriver};
+use crate::intercept::hip::{memcpy_kind, HipRuntime};
+use crate::intercept::omp::{OmpConfig, OmpRuntime};
+use crate::intercept::opencl::ClRuntime;
+use crate::intercept::ze::{ze_result, ZeDriver};
+use crate::runtime::executor::f32_to_bytes;
+use crate::util::Rng;
+use std::sync::Arc;
+
+// Kernel launch shapes (must match python/compile/model.py's registry).
+const SAXPY_N: usize = 1 << 20;
+const CONV_B: usize = 64;
+const CONV_N: usize = 4096;
+const CONV_K: usize = 33;
+const LRN_ELEMS: usize = 32 * 64 * 256;
+const STENCIL_ELEMS: usize = 512 * 512;
+const MM_M: usize = 256;
+const MM_K: usize = 256;
+const MM_N: usize = 256;
+const XENT_B: usize = 256;
+const XENT_V: usize = 2048;
+
+/// The full suite (20 apps).
+pub fn suite() -> Vec<Arc<dyn Workload>> {
+    vec![
+        // --- Level-Zero ---
+        Arc::new(ZeApp { name: "saxpy-ze", kind: ZeKind::Saxpy, iters: 30 }),
+        Arc::new(ZeApp { name: "convolution1D-ze", kind: ZeKind::Conv1d, iters: 12 }),
+        Arc::new(ZeApp { name: "jacobi2D-ze", kind: ZeKind::Stencil, iters: 16 }),
+        Arc::new(ZeApp { name: "memcpy-ze", kind: ZeKind::MemcpyOnly, iters: 60 }),
+        Arc::new(ZeApp { name: "eventspin-ze", kind: ZeKind::EventSpin, iters: 20 }),
+        Arc::new(ZeApp { name: "miniweather-ze", kind: ZeKind::Mixed, iters: 8 }),
+        // --- CUDA ---
+        Arc::new(CudaApp { name: "saxpy-cuda", kind: CudaKind::Saxpy, iters: 30 }),
+        Arc::new(CudaApp { name: "gemm-cuda", kind: CudaKind::Gemm, iters: 15 }),
+        Arc::new(CudaApp { name: "softmax-cuda", kind: CudaKind::Softmax, iters: 20 }),
+        Arc::new(CudaApp { name: "memcpyasync-cuda", kind: CudaKind::MemcpyAsync, iters: 40 }),
+        Arc::new(CudaApp { name: "queryspin-cuda", kind: CudaKind::QuerySpin, iters: 12 }),
+        Arc::new(CudaApp { name: "reduction-cuda", kind: CudaKind::LaunchStorm, iters: 60 }),
+        // --- HIP on Level-Zero (HIPLZ) ---
+        Arc::new(HipApp { name: "lrn-hip", kernel: "lrn", elems: LRN_ELEMS, iters: 16 }),
+        Arc::new(HipApp { name: "saxpy-hip", kernel: "saxpy", elems: SAXPY_N, iters: 20 }),
+        Arc::new(HipApp { name: "conv1d-hip", kernel: "conv1d", elems: CONV_B * CONV_N, iters: 10 }),
+        // --- OpenCL ---
+        Arc::new(ClApp { name: "gemm-cl", kind: ClKind::Gemm, iters: 12 }),
+        Arc::new(ClApp { name: "saxpy-cl", kind: ClKind::Saxpy, iters: 25 }),
+        Arc::new(ClApp { name: "conv1d-cl", kind: ClKind::Conv1d, iters: 10 }),
+        // --- OpenMP offload ---
+        Arc::new(OmpApp { name: "stencil-omp", kernel: "stencil", elems: STENCIL_ELEMS, iters: 12 }),
+        Arc::new(OmpApp { name: "lrn-omp", kernel: "lrn", elems: LRN_ELEMS, iters: 12 }),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Level-Zero apps
+// ---------------------------------------------------------------------------
+
+enum ZeKind {
+    Saxpy,
+    Conv1d,
+    Stencil,
+    MemcpyOnly,
+    EventSpin,
+    Mixed,
+}
+
+struct ZeApp {
+    name: &'static str,
+    kind: ZeKind,
+    iters: u32,
+}
+
+struct ZeSession {
+    ze: Arc<ZeDriver>,
+    ctx: u64,
+    dev: u64,
+    queue: u64,
+    list: u64,
+    pool: u64,
+    event: u64,
+}
+
+impl ZeSession {
+    fn open(node: &Arc<Node>) -> Self {
+        let ze = ZeDriver::new(node.clone());
+        ze.ze_init(0);
+        let mut drivers = vec![];
+        ze.ze_driver_get(&mut drivers);
+        let mut devices = vec![];
+        ze.ze_device_get(drivers[0], &mut devices);
+        let (_, ctx) = ze.ze_context_create(drivers[0]);
+        let dev = devices[0];
+        let (_, queue) = ze.ze_command_queue_create(ctx, dev, 0);
+        let (_, list) = ze.ze_command_list_create(ctx, dev);
+        let (_, pool) = ze.ze_event_pool_create(ctx, 8);
+        let (_, event) = ze.ze_event_create(pool);
+        ZeSession { ze, ctx, dev, queue, list, pool, event }
+    }
+
+    fn close(self) {
+        self.ze.ze_event_destroy(self.event);
+        self.ze.ze_event_pool_destroy(self.pool);
+        self.ze.ze_command_list_destroy(self.list);
+        self.ze.ze_command_queue_destroy(self.queue);
+        self.ze.ze_context_destroy(self.ctx);
+    }
+
+    /// reset + fill + close + execute + synchronize
+    fn run_list(&self, fill: impl FnOnce(&ZeSession)) {
+        self.ze.ze_command_list_reset(self.list);
+        fill(self);
+        self.ze.ze_command_list_close(self.list);
+        self.ze.ze_command_queue_execute_command_lists(self.queue, &[self.list]);
+        self.ze.ze_command_queue_synchronize(self.queue, u64::MAX);
+    }
+
+    fn launch_kernel(&self, name: &str, args: &[u64], groups: (u32, u32, u32)) {
+        let (r, module) = self.ze.ze_module_create(self.ctx, self.dev, name);
+        assert_eq!(r, ze_result::SUCCESS, "module create {name}");
+        let (_, kernel) = self.ze.ze_kernel_create(module, name);
+        for (i, a) in args.iter().enumerate() {
+            self.ze.ze_kernel_set_argument_value(kernel, i as u32, *a);
+        }
+        self.ze.ze_kernel_set_group_size(kernel, groups.0, groups.1, groups.2);
+        self.run_list(|s| {
+            s.ze.ze_command_list_append_launch_kernel(s.list, kernel, groups, 0);
+        });
+        self.ze.ze_kernel_destroy(kernel);
+        self.ze.ze_module_destroy(module);
+    }
+}
+
+impl Workload for ZeApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "ZE"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let s = ZeSession::open(node);
+        let ze = &s.ze;
+        let gpu = node.gpu(0);
+        let mut rng = Rng::new(0xbead + self.iters as u64);
+        let iters = scaled(self.iters);
+        match self.kind {
+            ZeKind::Saxpy => {
+                let bytes = (SAXPY_N * 4) as u64;
+                let (_, ha) = ze.ze_mem_alloc_host(s.ctx, 4, 4);
+                let (_, hx) = ze.ze_mem_alloc_host(s.ctx, bytes, 64);
+                let (_, da) = ze.ze_mem_alloc_device(s.ctx, 4, 4, s.dev);
+                let (_, dx) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                let (_, dy) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                let (_, dout) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                let mut data = vec![0f32; SAXPY_N];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(ha, &2.0f32.to_le_bytes()).unwrap();
+                gpu.pool.write(hx, &f32_to_bytes(&data)).unwrap();
+                s.run_list(|s| {
+                    s.ze.ze_command_list_append_memory_copy(s.list, da, ha, 4, 0);
+                    s.ze.ze_command_list_append_memory_copy(s.list, dx, hx, bytes, 0);
+                    s.ze.ze_command_list_append_memory_copy(s.list, dy, hx, bytes, 0);
+                });
+                for _ in 0..iters {
+                    s.launch_kernel("saxpy", &[da, dx, dy, dout], (16, 1, 1));
+                }
+                s.run_list(|s| {
+                    s.ze.ze_command_list_append_memory_copy(s.list, hx, dout, bytes, 0);
+                });
+                for p in [ha, hx, da, dx, dy, dout] {
+                    ze.ze_mem_free(s.ctx, p);
+                }
+            }
+            ZeKind::Conv1d => {
+                let xb = (CONV_B * CONV_N * 4) as u64;
+                let wb = (CONV_K * 4) as u64;
+                let (_, hx) = ze.ze_mem_alloc_host(s.ctx, xb, 64);
+                let (_, dx) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let (_, dw) = ze.ze_mem_alloc_device(s.ctx, wb, 64, s.dev);
+                let (_, dbias) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let (_, dout) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let mut data = vec![0f32; CONV_B * CONV_N];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(hx, &f32_to_bytes(&data)).unwrap();
+                s.run_list(|s| {
+                    s.ze.ze_command_list_append_memory_copy(s.list, dx, hx, xb, 0);
+                });
+                for _ in 0..iters {
+                    s.launch_kernel("conv1d", &[dx, dw, dbias, dout], (CONV_B as u32 / 8, 1, 1));
+                    s.run_list(|s| {
+                        s.ze.ze_command_list_append_memory_copy(s.list, dx, dout, xb, 0);
+                    });
+                }
+                for p in [hx, dx, dw, dbias, dout] {
+                    ze.ze_mem_free(s.ctx, p);
+                }
+            }
+            ZeKind::Stencil => {
+                let gb = (STENCIL_ELEMS * 4) as u64;
+                let (_, hg) = ze.ze_mem_alloc_host(s.ctx, gb, 64);
+                let (_, dg) = ze.ze_mem_alloc_device(s.ctx, gb, 64, s.dev);
+                let (_, dout) = ze.ze_mem_alloc_device(s.ctx, gb, 64, s.dev);
+                let mut data = vec![0f32; STENCIL_ELEMS];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(hg, &f32_to_bytes(&data)).unwrap();
+                s.run_list(|s| {
+                    s.ze.ze_command_list_append_memory_copy(s.list, dg, hg, gb, 0);
+                });
+                for _ in 0..iters {
+                    s.launch_kernel("stencil", &[dg, dout], (8, 1, 1));
+                    s.run_list(|s| {
+                        s.ze.ze_command_list_append_memory_copy(s.list, dg, dout, gb, 0);
+                    });
+                }
+                for p in [hg, dg, dout] {
+                    ze.ze_mem_free(s.ctx, p);
+                }
+            }
+            ZeKind::MemcpyOnly => {
+                let bytes = 8u64 << 20;
+                let (_, h) = ze.ze_mem_alloc_host(s.ctx, bytes, 64);
+                let (_, d) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                for _ in 0..iters {
+                    s.run_list(|s| {
+                        s.ze.ze_command_list_append_memory_copy(s.list, d, h, bytes, 0);
+                        s.ze.ze_command_list_append_memory_copy(s.list, h, d, bytes, 0);
+                    });
+                }
+                ze.ze_mem_free(s.ctx, h);
+                ze.ze_mem_free(s.ctx, d);
+            }
+            ZeKind::EventSpin => {
+                // tiny kernel + event spin: sync-call-rate bound (HIPLZ-ish)
+                let bytes = (SAXPY_N * 4) as u64;
+                let (_, da) = ze.ze_mem_alloc_device(s.ctx, 4, 4, s.dev);
+                let (_, dx) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                let (_, dout) = ze.ze_mem_alloc_device(s.ctx, bytes, 64, s.dev);
+                let (r, module) = ze.ze_module_create(s.ctx, s.dev, "saxpy");
+                assert_eq!(r, ze_result::SUCCESS);
+                let (_, kernel) = ze.ze_kernel_create(module, "saxpy");
+                for (i, a) in [da, dx, dx, dout].iter().enumerate() {
+                    ze.ze_kernel_set_argument_value(kernel, i as u32, *a);
+                }
+                for _ in 0..iters {
+                    ze.ze_command_list_reset(s.list);
+                    ze.ze_event_host_reset(s.event);
+                    ze.ze_command_list_append_launch_kernel(s.list, kernel, (16, 1, 1), s.event);
+                    ze.ze_command_list_close(s.list);
+                    ze.ze_command_queue_execute_command_lists(s.queue, &[s.list]);
+                    // spin with 20µs timeouts — the §4.3 call-count shape
+                    while ze.ze_event_host_synchronize(s.event, 20_000) != ze_result::SUCCESS {}
+                    ze.ze_command_queue_synchronize(s.queue, u64::MAX);
+                }
+                ze.ze_kernel_destroy(kernel);
+                ze.ze_module_destroy(module);
+                for p in [da, dx, dout] {
+                    ze.ze_mem_free(s.ctx, p);
+                }
+            }
+            ZeKind::Mixed => {
+                // alternating conv + stencil, checking memory info as it goes
+                let xb = (CONV_B * CONV_N * 4) as u64;
+                let gb = (STENCIL_ELEMS * 4) as u64;
+                let (_, dx) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let (_, dw) = ze.ze_mem_alloc_device(s.ctx, (CONV_K * 4) as u64, 64, s.dev);
+                let (_, dbias) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let (_, dco) = ze.ze_mem_alloc_device(s.ctx, xb, 64, s.dev);
+                let (_, dg) = ze.ze_mem_alloc_device(s.ctx, gb, 64, s.dev);
+                let (_, dgo) = ze.ze_mem_alloc_device(s.ctx, gb, 64, s.dev);
+                for _ in 0..iters {
+                    s.launch_kernel("conv1d", &[dx, dw, dbias, dco], (8, 1, 1));
+                    s.launch_kernel("stencil", &[dg, dgo], (8, 1, 1));
+                }
+                for p in [dx, dw, dbias, dco, dg, dgo] {
+                    ze.ze_mem_free(s.ctx, p);
+                }
+            }
+        }
+        s.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CUDA apps
+// ---------------------------------------------------------------------------
+
+enum CudaKind {
+    Saxpy,
+    Gemm,
+    Softmax,
+    MemcpyAsync,
+    QuerySpin,
+    LaunchStorm,
+}
+
+struct CudaApp {
+    name: &'static str,
+    kind: CudaKind,
+    iters: u32,
+}
+
+impl Workload for CudaApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "CUDA"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let cu = CudaDriver::new(node.clone());
+        cu.cu_init(0);
+        let (_, dev) = cu.cu_device_get(0);
+        let (_, ctx) = cu.cu_ctx_create(0, dev);
+        let gpu = node.gpu(0);
+        let mut rng = Rng::new(0xcafe + self.iters as u64);
+        let iters = scaled(self.iters);
+
+        let load = |image: &str| -> u64 {
+            let (r, module) = cu.cu_module_load_data(image);
+            assert_eq!(r, cu_result::SUCCESS);
+            let (_, f) = cu.cu_module_get_function(module, image);
+            f
+        };
+
+        match self.kind {
+            CudaKind::Saxpy => {
+                let bytes = (SAXPY_N * 4) as u64;
+                let (_, ha) = cu.cu_mem_alloc_host(4);
+                let (_, hx) = cu.cu_mem_alloc_host(bytes);
+                let (_, da) = cu.cu_mem_alloc(4);
+                let (_, dx) = cu.cu_mem_alloc(bytes);
+                let (_, dy) = cu.cu_mem_alloc(bytes);
+                let (_, dout) = cu.cu_mem_alloc(bytes);
+                let mut data = vec![0f32; SAXPY_N];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(ha, &1.5f32.to_le_bytes()).unwrap();
+                gpu.pool.write(hx, &f32_to_bytes(&data)).unwrap();
+                cu.cu_memcpy_htod(da, ha, 4);
+                cu.cu_memcpy_htod(dx, hx, bytes);
+                cu.cu_memcpy_htod(dy, hx, bytes);
+                let f = load("saxpy");
+                for _ in 0..iters {
+                    cu.cu_launch_kernel(f, (16, 1, 1), (256, 1, 1), 0, cu.default_stream, &[da, dx, dy, dout]);
+                    cu.cu_ctx_synchronize();
+                }
+                cu.cu_memcpy_dtoh(hx, dout, bytes);
+                for p in [da, dx, dy, dout, ha, hx] {
+                    cu.cu_mem_free(p);
+                }
+            }
+            CudaKind::Gemm => {
+                let ab = (MM_M * MM_K * 4) as u64;
+                let bb = (MM_K * MM_N * 4) as u64;
+                let biasb = (MM_N * 4) as u64;
+                let ob = (MM_M * MM_N * 4) as u64;
+                let (_, da) = cu.cu_mem_alloc(ab);
+                let (_, db) = cu.cu_mem_alloc(bb);
+                let (_, dbias) = cu.cu_mem_alloc(biasb);
+                let (_, dout) = cu.cu_mem_alloc(ob);
+                let (_, h) = cu.cu_mem_alloc_host(ab.max(bb));
+                let mut data = vec![0f32; MM_M * MM_K];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(h, &f32_to_bytes(&data)).unwrap();
+                cu.cu_memcpy_htod(da, h, ab);
+                cu.cu_memcpy_htod(db, h, bb);
+                let f = load("matmul");
+                for _ in 0..iters {
+                    cu.cu_launch_kernel(f, (4, 4, 4), (8, 8, 1), 0, cu.default_stream, &[da, db, dbias, dout]);
+                    cu.cu_ctx_synchronize();
+                }
+                let (_, _free, _total) = cu.cu_mem_get_info();
+                for p in [da, db, dbias, dout, h] {
+                    cu.cu_mem_free(p);
+                }
+            }
+            CudaKind::Softmax => {
+                let lb = (XENT_B * XENT_V * 4) as u64;
+                let labb = (XENT_B * 4) as u64;
+                let (_, dl) = cu.cu_mem_alloc(lb);
+                let (_, dlab) = cu.cu_mem_alloc(labb);
+                let (_, dout) = cu.cu_mem_alloc(4);
+                let (_, h) = cu.cu_mem_alloc_host(lb);
+                let mut data = vec![0f32; XENT_B * XENT_V];
+                rng.fill_f32(&mut data);
+                gpu.pool.write(h, &f32_to_bytes(&data)).unwrap();
+                cu.cu_memcpy_htod(dl, h, lb);
+                let labels: Vec<i32> =
+                    (0..XENT_B).map(|_| rng.below(XENT_V as u64) as i32).collect();
+                gpu.pool.write(h, &crate::runtime::executor::i32_to_bytes(&labels)).unwrap();
+                cu.cu_memcpy_htod(dlab, h, labb);
+                let f = load("xent");
+                for _ in 0..iters {
+                    cu.cu_launch_kernel(f, (16, 1, 1), (128, 1, 1), 0, cu.default_stream, &[dl, dlab, dout]);
+                    cu.cu_ctx_synchronize();
+                }
+                for p in [dl, dlab, dout, h] {
+                    cu.cu_mem_free(p);
+                }
+            }
+            CudaKind::MemcpyAsync => {
+                let bytes = 4u64 << 20;
+                let (_, stream) = cu.cu_stream_create(0);
+                let (_, h) = cu.cu_mem_alloc_host(bytes);
+                let (_, d) = cu.cu_mem_alloc(bytes);
+                for _ in 0..iters {
+                    cu.cu_memcpy_htod_async(d, h, bytes, stream);
+                    cu.cu_memcpy_dtoh_async(h, d, bytes, stream);
+                    cu.cu_stream_synchronize(stream);
+                }
+                cu.cu_stream_destroy(stream);
+                cu.cu_mem_free(h);
+                cu.cu_mem_free(d);
+            }
+            CudaKind::QuerySpin => {
+                // polling archetype: cuEventQuery storms (full-mode only
+                // events — the T-full vs T-default separator)
+                let bytes = (SAXPY_N * 4) as u64;
+                let (_, da) = cu.cu_mem_alloc(4);
+                let (_, dx) = cu.cu_mem_alloc(bytes);
+                let (_, dout) = cu.cu_mem_alloc(bytes);
+                let (_, stream) = cu.cu_stream_create(0);
+                let (_, ev) = cu.cu_event_create(0);
+                let f = load("saxpy");
+                for _ in 0..iters {
+                    cu.cu_launch_kernel(f, (16, 1, 1), (256, 1, 1), 0, stream, &[da, dx, dx, dout]);
+                    cu.cu_event_record(ev, stream);
+                    while cu.cu_event_query(ev) != cu_result::SUCCESS {
+                        // polite spin: on small machines a hard spin starves
+                        // the engine worker entirely
+                        std::thread::yield_now();
+                    }
+                    cu.cu_stream_synchronize(stream);
+                }
+                cu.cu_event_destroy(ev);
+                cu.cu_stream_destroy(stream);
+                for p in [da, dx, dout] {
+                    cu.cu_mem_free(p);
+                }
+            }
+            CudaKind::LaunchStorm => {
+                // many small launches back-to-back: API-rate bound
+                let lb = (XENT_B * XENT_V * 4) as u64;
+                let (_, dl) = cu.cu_mem_alloc(lb);
+                let (_, dlab) = cu.cu_mem_alloc((XENT_B * 4) as u64);
+                let (_, dout) = cu.cu_mem_alloc(4);
+                let f = load("xent");
+                for _ in 0..iters {
+                    for _ in 0..4 {
+                        cu.cu_launch_kernel(f, (16, 1, 1), (128, 1, 1), 0, cu.default_stream, &[dl, dlab, dout]);
+                    }
+                    cu.cu_ctx_synchronize();
+                }
+                for p in [dl, dlab, dout] {
+                    cu.cu_mem_free(p);
+                }
+            }
+        }
+        cu.cu_ctx_destroy(ctx);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HIP apps (HIPLZ)
+// ---------------------------------------------------------------------------
+
+struct HipApp {
+    name: &'static str,
+    kernel: &'static str,
+    elems: usize,
+    iters: u32,
+}
+
+impl Workload for HipApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "HIP"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let hip = HipRuntime::new(ZeDriver::new(node.clone()));
+        hip.hip_init(0);
+        hip.hip_set_device(0);
+        let (_, fat) = hip.hip_register_fat_binary(&[self.kernel]);
+        let gpu = node.gpu(0);
+        let bytes = (self.elems * 4) as u64;
+        let host = gpu.pool.alloc(AllocKind::Host, bytes).unwrap();
+        let mut rng = Rng::new(0x417 + self.iters as u64);
+        let mut data = vec![0f32; self.elems];
+        rng.fill_f32(&mut data);
+        gpu.pool.write(host, &f32_to_bytes(&data)).unwrap();
+
+        let iters = scaled(self.iters);
+        let (_, module) = hip.hip_module_load(self.kernel);
+        let (_, f) = hip.hip_module_get_function(module, self.kernel);
+
+        // argument sets per kernel (inputs..., output)
+        let args: Vec<u64> = match self.kernel {
+            "lrn" => {
+                let (_, dx) = hip.hip_malloc(bytes);
+                let (_, dout) = hip.hip_malloc(bytes);
+                hip.hip_memcpy(dx, host, bytes, memcpy_kind::H2D);
+                vec![dx, dout]
+            }
+            "saxpy" => {
+                let (_, da) = hip.hip_malloc(4);
+                let (_, dx) = hip.hip_malloc(bytes);
+                let (_, dy) = hip.hip_malloc(bytes);
+                let (_, dout) = hip.hip_malloc(bytes);
+                hip.hip_memcpy(dx, host, bytes, memcpy_kind::H2D);
+                hip.hip_memcpy(dy, host, bytes, memcpy_kind::H2D);
+                vec![da, dx, dy, dout]
+            }
+            "conv1d" => {
+                let wb = (CONV_K * 4) as u64;
+                let (_, dx) = hip.hip_malloc(bytes);
+                let (_, dw) = hip.hip_malloc(wb);
+                let (_, dbias) = hip.hip_malloc(bytes);
+                let (_, dout) = hip.hip_malloc(bytes);
+                hip.hip_memcpy(dx, host, bytes, memcpy_kind::H2D);
+                vec![dx, dw, dbias, dout]
+            }
+            other => panic!("unknown hip kernel {other}"),
+        };
+
+        for _ in 0..iters {
+            hip.hip_launch_kernel(f, (16, 1, 1), (64, 1, 1), 0, 0, &args);
+            hip.hip_device_synchronize();
+        }
+        // copy back from the output (last arg)
+        hip.hip_memcpy(host, *args.last().unwrap(), bytes, memcpy_kind::D2H);
+        for a in &args {
+            hip.hip_free(*a);
+        }
+        hip.hip_module_unload(module);
+        hip.hip_unregister_fat_binary(fat);
+        let _ = gpu.pool.free(host);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OpenCL apps
+// ---------------------------------------------------------------------------
+
+enum ClKind {
+    Saxpy,
+    Gemm,
+    Conv1d,
+}
+
+struct ClApp {
+    name: &'static str,
+    kind: ClKind,
+    iters: u32,
+}
+
+impl Workload for ClApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "CL"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let cl = ClRuntime::new(node.clone());
+        let mut platforms = vec![];
+        cl.cl_get_platform_ids(&mut platforms);
+        let mut devices = vec![];
+        cl.cl_get_device_ids(platforms[0], &mut devices);
+        let (ctx, _) = cl.cl_create_context(&devices);
+        let (queue, _) = cl.cl_create_command_queue(ctx, devices[0]);
+        let gpu = node.gpu(0);
+        let mut rng = Rng::new(0xc1 + self.iters as u64);
+        let iters = scaled(self.iters);
+
+        let (kernel_name, buf_sizes, global): (&str, Vec<u64>, (u64, u64, u64)) = match self.kind {
+            ClKind::Saxpy => (
+                "saxpy",
+                vec![4, (SAXPY_N * 4) as u64, (SAXPY_N * 4) as u64, (SAXPY_N * 4) as u64],
+                (SAXPY_N as u64, 1, 1),
+            ),
+            ClKind::Gemm => (
+                "matmul",
+                vec![
+                    (MM_M * MM_K * 4) as u64,
+                    (MM_K * MM_N * 4) as u64,
+                    (MM_N * 4) as u64,
+                    (MM_M * MM_N * 4) as u64,
+                ],
+                (MM_M as u64, MM_N as u64, 1),
+            ),
+            ClKind::Conv1d => (
+                "conv1d",
+                vec![
+                    (CONV_B * CONV_N * 4) as u64,
+                    (CONV_K * 4) as u64,
+                    (CONV_B * CONV_N * 4) as u64,
+                    (CONV_B * CONV_N * 4) as u64,
+                ],
+                (CONV_B as u64, CONV_N as u64, 1),
+            ),
+        };
+
+        let bufs: Vec<u64> = buf_sizes
+            .iter()
+            .map(|sz| {
+                let (b, err) = cl.cl_create_buffer(ctx, 0, *sz);
+                assert_eq!(err, crate::intercept::opencl::cl_error::SUCCESS);
+                b
+            })
+            .collect();
+        // fill first input
+        let h = gpu.pool.alloc(AllocKind::Host, buf_sizes[0]).unwrap();
+        let mut data = vec![0f32; (buf_sizes[0] / 4) as usize];
+        rng.fill_f32(&mut data);
+        gpu.pool.write(h, &f32_to_bytes(&data)).unwrap();
+        cl.cl_enqueue_write_buffer(queue, bufs[0], true, 0, buf_sizes[0], h);
+
+        let (program, _) = cl.cl_create_program_with_source(ctx, kernel_name);
+        cl.cl_build_program(program, "-cl-fast-relaxed-math");
+        let (kernel, err) = cl.cl_create_kernel(program, kernel_name);
+        assert_eq!(err, crate::intercept::opencl::cl_error::SUCCESS);
+        for (i, b) in bufs.iter().enumerate() {
+            cl.cl_set_kernel_arg(kernel, i as u32, *b);
+        }
+        for _ in 0..iters {
+            cl.cl_enqueue_ndrange_kernel(queue, kernel, global);
+            cl.cl_flush(queue);
+            cl.cl_finish(queue);
+        }
+        let out_h = gpu.pool.alloc(AllocKind::Host, *buf_sizes.last().unwrap()).unwrap();
+        cl.cl_enqueue_read_buffer(queue, *bufs.last().unwrap(), true, 0, *buf_sizes.last().unwrap(), out_h);
+        for b in bufs {
+            cl.cl_release_mem_object(b);
+        }
+        let _ = gpu.pool.free(h);
+        let _ = gpu.pool.free(out_h);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OpenMP offload apps
+// ---------------------------------------------------------------------------
+
+struct OmpApp {
+    name: &'static str,
+    kernel: &'static str,
+    elems: usize,
+    iters: u32,
+}
+
+impl Workload for OmpApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "OMP"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let omp = OmpRuntime::new(ZeDriver::new(node.clone()), OmpConfig::default());
+        let gpu = node.gpu(0);
+        let bytes = (self.elems * 4) as u64;
+        let (_, din) = omp.omp_target_alloc(bytes, 0);
+        let (_, dout) = omp.omp_target_alloc(bytes, 0);
+        let host = gpu.pool.alloc(AllocKind::Host, bytes).unwrap();
+        let mut rng = Rng::new(0x09 + self.iters as u64);
+        let mut data = vec![0f32; self.elems];
+        rng.fill_f32(&mut data);
+        gpu.pool.write(host, &f32_to_bytes(&data)).unwrap();
+        let iters = scaled(self.iters);
+        for _ in 0..iters {
+            omp.omp_target_memcpy(din, host, bytes, 0, 0, 0, -1);
+            omp.omp_target_submit(self.kernel, 0, 8, &[din, dout]);
+            omp.omp_target_memcpy(host, dout, bytes, 0, 0, -1, 0);
+        }
+        omp.omp_target_sync(0);
+        omp.omp_target_free(din, 0);
+        omp.omp_target_free(dout, 0);
+        let _ = gpu.pool.free(host);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+
+    /// Every app must run to completion untraced on a small node.
+    /// (Traced coverage comes from the coordinator tests and benches.)
+    #[test]
+    fn all_hecbench_apps_run_untraced() {
+        let _g = test_support::lock();
+        std::env::set_var("THAPI_APP_SCALE", "0.05");
+        let node = crate::device::Node::new(NodeConfig::test_small());
+        for app in suite() {
+            app.run(&node);
+            node.synchronize();
+        }
+        std::env::remove_var("THAPI_APP_SCALE");
+    }
+}

@@ -1,0 +1,67 @@
+//! Traced workloads: the benchmark suites of the paper's §5.1.
+//!
+//! * [`hecbench`] — 20 HeCBench-like mini-apps spanning the archetypes of
+//!   the real suite (bandwidth-, compute-, launch-, sync- and
+//!   polling-bound) across every frontend (ZE, CUDA, HIP-on-ZE, OpenCL,
+//!   OpenMP-offload). All kernels execute real PJRT-compiled HLO.
+//! * [`spechpc`] — 9 SPEChpc-2021-like MPI + OpenMP-target-offload
+//!   benchmarks (505.lbm, 521.miniswp, 534.hpgmgfv, ...) running one rank
+//!   per GPU with halo exchanges and allreduces.
+//!
+//! Workload intensity scales with `THAPI_APP_SCALE` (default 1.0) so the
+//! benches can trade runtime for statistical depth.
+
+pub mod hecbench;
+pub mod spechpc;
+
+use crate::device::Node;
+use std::sync::Arc;
+
+/// A runnable, traced workload.
+pub trait Workload: Send + Sync {
+    /// Unique name (used in reports and EXPERIMENTS.md).
+    fn name(&self) -> &str;
+    /// Primary backend label ("ZE", "CUDA", "HIP", "CL", "OMP", "MPI").
+    fn backend(&self) -> &'static str;
+    /// Execute on a node. Implementations create their frontends, run the
+    /// workload to completion and release their resources.
+    fn run(&self, node: &Arc<Node>);
+}
+
+/// Global intensity multiplier (`THAPI_APP_SCALE`).
+pub fn app_scale() -> f64 {
+    std::env::var("THAPI_APP_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|v| *v > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Scale an iteration count (minimum 1).
+pub fn scaled(iters: u32) -> u32 {
+    ((iters as f64 * app_scale()).round() as u32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_respects_minimum() {
+        assert!(scaled(1) >= 1);
+        assert!(scaled(100) >= 1);
+    }
+
+    #[test]
+    fn suites_have_expected_sizes() {
+        assert_eq!(hecbench::suite().len(), 20);
+        assert_eq!(spechpc::suite().len(), 9);
+        // names unique
+        let mut names: Vec<_> = hecbench::suite().iter().map(|a| a.name().to_string()).collect();
+        names.extend(spechpc::suite().iter().map(|a| a.name().to_string()));
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n);
+    }
+}

@@ -1,0 +1,268 @@
+//! SPEChpc-2021-like benchmarks: MPI + OpenMP target offload (the
+//! configuration the paper runs on Aurora's 6 GPUs and Polaris' 4 GPUs).
+//!
+//! Each benchmark runs one MPI rank per GPU; every iteration does a halo
+//! exchange with its ring neighbours, host↔device transfers, one or more
+//! kernel submissions, and a residual allreduce — the communication/
+//! compute skeleton of the real suite, with per-app parameters chosen to
+//! reproduce the archetypes (505.lbm stencil-bound, 521.miniswp
+//! launch-storm, 534.hpgmgfv trace-heaviest, ...).
+
+use super::{scaled, Workload};
+use crate::device::{AllocKind, Node};
+use crate::intercept::mpi::{Datatype, MpiWorld, Op};
+use crate::intercept::omp::{OmpConfig, OmpRuntime};
+use crate::intercept::ze::ZeDriver;
+use crate::runtime::executor::f32_to_bytes;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// One SPEChpc-like app's parameters.
+#[derive(Debug, Clone)]
+pub struct SpecApp {
+    /// Benchmark id (paper naming).
+    pub name: &'static str,
+    /// Kernel(s) submitted each iteration.
+    pub kernels: &'static [&'static str],
+    /// Elements per device buffer.
+    pub elems: usize,
+    /// Kernel submissions per iteration (launch-rate knob).
+    pub launches_per_iter: u32,
+    /// Halo-exchange message bytes.
+    pub halo_bytes: usize,
+    /// Iterations.
+    pub iters: u32,
+}
+
+/// The 9-app suite.
+pub fn suite() -> Vec<Arc<dyn Workload>> {
+    vec![
+        Arc::new(SpecApp {
+            name: "505.lbm",
+            kernels: &["stencil"],
+            elems: 512 * 512,
+            launches_per_iter: 2,
+            halo_bytes: 512 * 4,
+            iters: 10,
+        }),
+        Arc::new(SpecApp {
+            name: "513.soma",
+            kernels: &["saxpy"],
+            elems: 1 << 20,
+            launches_per_iter: 1,
+            halo_bytes: 4096,
+            iters: 12,
+        }),
+        Arc::new(SpecApp {
+            name: "518.tealeaf",
+            kernels: &["stencil"],
+            elems: 512 * 512,
+            launches_per_iter: 3,
+            halo_bytes: 512 * 4,
+            iters: 8,
+        }),
+        Arc::new(SpecApp {
+            name: "519.clvleaf",
+            kernels: &["stencil"],
+            elems: 512 * 512,
+            launches_per_iter: 2,
+            halo_bytes: 2048,
+            iters: 10,
+        }),
+        Arc::new(SpecApp {
+            name: "521.miniswp",
+            kernels: &["xent"],
+            elems: 256 * 2048,
+            launches_per_iter: 6,
+            halo_bytes: 1024,
+            iters: 8,
+        }),
+        Arc::new(SpecApp {
+            name: "528.pot3d",
+            kernels: &["matmul"],
+            elems: 256 * 256,
+            launches_per_iter: 2,
+            halo_bytes: 256 * 4,
+            iters: 10,
+        }),
+        Arc::new(SpecApp {
+            name: "532.sph_exa",
+            kernels: &["lrn"],
+            elems: 32 * 64 * 256,
+            launches_per_iter: 2,
+            halo_bytes: 8192,
+            iters: 10,
+        }),
+        Arc::new(SpecApp {
+            name: "534.hpgmgfv",
+            kernels: &["stencil", "saxpy", "conv1d"],
+            elems: 512 * 512,
+            launches_per_iter: 4,
+            halo_bytes: 4096,
+            iters: 8,
+        }),
+        Arc::new(SpecApp {
+            name: "535.weather",
+            kernels: &["conv1d"],
+            elems: 64 * 4096,
+            launches_per_iter: 2,
+            halo_bytes: 4096,
+            iters: 10,
+        }),
+    ]
+}
+
+/// Argument pointers for one kernel, given a generic in/out buffer pair
+/// plus small auxiliary buffers (allocated by the rank).
+fn kernel_args(kernel: &str, din: u64, dout: u64, aux: &[u64]) -> Vec<u64> {
+    match kernel {
+        "stencil" | "lrn" => vec![din, dout],
+        "saxpy" => vec![aux[0], din, din, dout],
+        "conv1d" => vec![din, aux[1], aux[2], dout],
+        "matmul" => vec![din, aux[3], aux[4], dout],
+        "xent" => vec![din, aux[5], dout],
+        other => panic!("unknown kernel {other}"),
+    }
+}
+
+/// Device bytes each kernel needs for its in/out buffers.
+fn kernel_bytes(kernel: &str, elems: usize) -> u64 {
+    let _ = kernel;
+    (elems * 4) as u64
+}
+
+impl Workload for SpecApp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn backend(&self) -> &'static str {
+        "MPI"
+    }
+
+    fn run(&self, node: &Arc<Node>) {
+        let ranks = node.gpus.len() as u32;
+        let omp = OmpRuntime::new(ZeDriver::new(node.clone()), OmpConfig::default());
+        let world = MpiWorld::new(ranks);
+        let app = self.clone();
+        let node2 = node.clone();
+        world.run(move |comm| {
+            let rank = comm.rank();
+            let device = (rank % node2.gpus.len() as u32) as i32;
+            let gpu = node2.gpu(device as u32);
+            comm.mpi_init();
+            let (_, size) = comm.mpi_comm_size();
+            let (_, _my_rank) = comm.mpi_comm_rank();
+
+            let bytes = kernel_bytes(app.kernels[0], app.elems);
+            let (_, din) = omp.omp_target_alloc(bytes, device);
+            let (_, dout) = omp.omp_target_alloc(bytes, device);
+            // aux buffers sized for the largest consumers
+            let aux: Vec<u64> = [
+                4u64,                       // saxpy scalar a
+                (33 * 4) as u64,            // conv taps
+                bytes,                      // conv bias
+                (256 * 256 * 4) as u64,     // matmul B
+                (256 * 4) as u64,           // matmul bias
+                (256 * 4) as u64,           // xent labels (i32)
+            ]
+            .iter()
+            .map(|sz| omp.omp_target_alloc(*sz, device).1)
+            .collect();
+
+            let host = gpu.pool.alloc(AllocKind::Host, bytes).unwrap();
+            let mut rng = Rng::new(0x5bec ^ rank as u64);
+            let mut data = vec![0f32; app.elems];
+            rng.fill_f32(&mut data);
+            gpu.pool.write(host, &f32_to_bytes(&data)).unwrap();
+
+            let right = (rank + 1) % size as u32;
+            let left = (rank + size as u32 - 1) % size as u32;
+            let halo_out = vec![rank as u8; app.halo_bytes];
+            let mut halo_in = vec![0u8; app.halo_bytes];
+
+            let iters = scaled(app.iters);
+            for _ in 0..iters {
+                // halo exchange (ring)
+                comm.mpi_send(&halo_out, Datatype::Byte, right, 11);
+                comm.mpi_recv(&mut halo_in, Datatype::Byte, left, 11);
+                // offload
+                omp.omp_target_memcpy(din, host, bytes, 0, 0, device, -1);
+                for l in 0..app.launches_per_iter {
+                    let k = app.kernels[(l as usize) % app.kernels.len()];
+                    // kernels with their own shapes need their own buffers;
+                    // din/dout are sized for kernels[0] — others use aux-
+                    // sized launches on the same data when shapes allow.
+                    if kernel_bytes(k, app.elems) == bytes {
+                        omp.omp_target_submit(k, device, 8, &kernel_args(k, din, dout, &aux));
+                    } else {
+                        // mismatched shape: run on its own scratch
+                        let kb = kernel_bytes(k, app.elems);
+                        let (_, s_in) = omp.omp_target_alloc(kb, device);
+                        let (_, s_out) = omp.omp_target_alloc(kb, device);
+                        omp.omp_target_submit(k, device, 8, &kernel_args(k, s_in, s_out, &aux));
+                        omp.omp_target_free(s_in, device);
+                        omp.omp_target_free(s_out, device);
+                    }
+                }
+                omp.omp_target_memcpy(host, dout, bytes, 0, 0, -1, device);
+                // residual allreduce
+                let local = data[0] as f64;
+                let mut global = [0.0f64];
+                comm.mpi_allreduce(&[local], &mut global, Op::Sum);
+            }
+            comm.mpi_barrier();
+            omp.omp_target_free(din, device);
+            omp.omp_target_free(dout, device);
+            for a in aux {
+                omp.omp_target_free(a, device);
+            }
+            let _ = gpu.pool.free(host);
+            comm.mpi_finalize();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+
+    #[test]
+    fn lbm_runs_on_two_gpus_untraced() {
+        let _g = test_support::lock();
+        std::env::set_var("THAPI_APP_SCALE", "0.2");
+        let node = crate::device::Node::new(NodeConfig {
+            gpu_count: 2,
+            ..NodeConfig::test_small()
+        });
+        let apps = suite();
+        let lbm = apps.iter().find(|a| a.name() == "505.lbm").unwrap();
+        lbm.run(&node);
+        node.synchronize();
+        std::env::remove_var("THAPI_APP_SCALE");
+    }
+
+    #[test]
+    fn miniswp_traced_produces_mpi_and_omp_and_ze_events() {
+        let _g = test_support::lock();
+        std::env::set_var("THAPI_APP_SCALE", "0.2");
+        let node = crate::device::Node::new(NodeConfig::test_small());
+        crate::tracer::install_session(Default::default());
+        let apps = suite();
+        let app = apps.iter().find(|a| a.name() == "521.miniswp").unwrap();
+        app.run(&node);
+        node.synchronize();
+        let session = crate::tracer::uninstall_session().unwrap();
+        let trace = crate::tracer::btf::collect(&session, &[]);
+        let parsed = crate::analysis::parse_trace(&trace).unwrap();
+        let msgs = crate::analysis::mux(&parsed);
+        let has = |p: &str| msgs.iter().any(|m| m.class.name.starts_with(p));
+        assert!(has("lttng_ust_mpi"), "MPI events missing");
+        assert!(has("lttng_ust_omp"), "OMP events missing");
+        assert!(has("lttng_ust_ze"), "layered ZE events missing");
+        assert!(has("lttng_ust_profiling"), "profiling events missing");
+        std::env::remove_var("THAPI_APP_SCALE");
+    }
+}

@@ -1,0 +1,170 @@
+//! In-crate benchmark harness (criterion substitute — no network, so no
+//! external bench crates). Used by every `benches/*.rs` target
+//! (`harness = false`) to produce the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Simple timing statistics over repeated measurements.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// All samples.
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    /// Gather `n` samples of `f` after `warmup` unrecorded calls.
+    pub fn measure<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Stats {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        Stats { samples }
+    }
+
+    /// Mean duration.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    /// Median duration.
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        s[s.len() / 2]
+    }
+
+    /// Minimum.
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    /// Maximum.
+    pub fn max(&self) -> Duration {
+        self.samples.iter().max().copied().unwrap_or_default()
+    }
+
+    /// Sample standard deviation (seconds).
+    pub fn stddev_s(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean().as_secs_f64();
+        let var: f64 = self
+            .samples
+            .iter()
+            .map(|s| (s.as_secs_f64() - m).powi(2))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Summary statistics over a set of per-benchmark values (the mean /
+/// median lines in Fig. 7).
+pub fn mean_of(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Median of a value set.
+pub fn median_of(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() % 2 == 1 {
+        v[v.len() / 2]
+    } else {
+        (v[v.len() / 2 - 1] + v[v.len() / 2]) / 2.0
+    }
+}
+
+/// Markdown-ish table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Add a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render aligned text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::measure(1, 5, || std::thread::sleep(Duration::from_micros(100)));
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.mean() >= Duration::from_micros(100));
+        assert!(s.min() <= s.median() && s.median() <= s.max());
+    }
+
+    #[test]
+    fn mean_median_of_values() {
+        assert_eq!(mean_of(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median_of(&[5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median_of(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(mean_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("| name   | value |"));
+        assert!(r.lines().count() == 4);
+    }
+}

@@ -1,0 +1,243 @@
+//! The `iprof` coordinator: session lifecycle + workload execution +
+//! post-mortem analysis dispatch (paper §3.4 "Tracing begins by launching
+//! the application using the iprof launcher").
+//!
+//! [`IprofConfig`] mirrors the paper's launcher knobs: tracing mode
+//! (minimal/default/full), device sampling on/off (+ interval), event
+//! filtering, rank selection, trace-vs-aggregate persistence. [`run`]
+//! executes one workload under one configuration and returns a
+//! [`RunReport`] with wall time, tracer statistics and the requested
+//! analyses — the building block of every §5 experiment.
+
+use crate::analysis::{self, Tally};
+use crate::apps::Workload;
+use crate::device::Node;
+use crate::sampling::{Sampler, SamplingConfig};
+use crate::tracer::btf::{self, TraceData};
+use crate::tracer::{
+    install_session, uninstall_session, SessionConfig, SessionStats, SinkKind, TracingMode,
+};
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Launcher configuration (the `iprof` CLI surface).
+#[derive(Debug, Clone)]
+pub struct IprofConfig {
+    /// Tracing enabled at all (false = baseline run).
+    pub tracing: bool,
+    /// Tracing mode.
+    pub mode: TracingMode,
+    /// Device sampling daemon (TS-* configurations).
+    pub sampling: Option<SamplingConfig>,
+    /// Trace sink.
+    pub sink: SinkKind,
+    /// Rank selection (None = all ranks).
+    pub selected_ranks: Option<HashSet<u32>>,
+    /// Event-name substring filters to disable.
+    pub disabled_patterns: Vec<String>,
+    /// Ring-buffer capacity per thread.
+    pub buffer_capacity: usize,
+}
+
+impl Default for IprofConfig {
+    fn default() -> Self {
+        IprofConfig {
+            tracing: true,
+            mode: TracingMode::Default,
+            sampling: None,
+            sink: SinkKind::Memory,
+            selected_ranks: None,
+            disabled_patterns: Vec::new(),
+            buffer_capacity: 8 << 20,
+        }
+    }
+}
+
+impl IprofConfig {
+    /// Baseline (untraced) run.
+    pub fn baseline() -> Self {
+        IprofConfig { tracing: false, ..Default::default() }
+    }
+
+    /// One of the six §5.2 configurations: T-{min,default,full} and
+    /// TS-{min,default,full}.
+    pub fn paper_config(mode: TracingMode, sampling: bool) -> Self {
+        IprofConfig {
+            tracing: true,
+            mode,
+            sampling: if sampling { Some(SamplingConfig::default()) } else { None },
+            ..Default::default()
+        }
+    }
+
+    /// Label like "T-default" / "TS-min" (baseline: "base").
+    pub fn label(&self) -> String {
+        if !self.tracing {
+            return "base".into();
+        }
+        let prefix = if self.sampling.is_some() { "TS" } else { "T" };
+        format!("{prefix}-{}", self.mode.label())
+    }
+}
+
+/// Result of one `iprof` run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Workload name.
+    pub app: String,
+    /// Configuration label.
+    pub config: String,
+    /// Application wall time.
+    pub wall: Duration,
+    /// Tracer statistics (None for baseline).
+    pub stats: Option<SessionStats>,
+    /// The collected trace (None for baseline / Null sink).
+    pub trace: Option<TraceData>,
+}
+
+impl RunReport {
+    /// Trace size in bytes (0 if none).
+    pub fn trace_bytes(&self) -> u64 {
+        self.trace.as_ref().map(|t| t.size_bytes()).unwrap_or(0)
+    }
+
+    /// Run the tally analysis over the collected trace.
+    pub fn tally(&self) -> Option<Tally> {
+        let trace = self.trace.as_ref()?;
+        let parsed = analysis::parse_trace(trace).ok()?;
+        let msgs = analysis::mux(&parsed);
+        let intervals = analysis::pair_intervals(&msgs);
+        Some(Tally::build(&intervals, &msgs))
+    }
+}
+
+/// Run `workload` on `node` under `config`.
+pub fn run(node: &Arc<Node>, workload: &dyn Workload, config: &IprofConfig) -> RunReport {
+    if !config.tracing {
+        let t0 = Instant::now();
+        workload.run(node);
+        node.synchronize();
+        return RunReport {
+            app: workload.name().to_string(),
+            config: config.label(),
+            wall: t0.elapsed(),
+            stats: None,
+            trace: None,
+        };
+    }
+
+    let session = install_session(SessionConfig {
+        mode: config.mode,
+        buffer_capacity: config.buffer_capacity,
+        sink: config.sink.clone(),
+        selected_ranks: config.selected_ranks.clone(),
+        hostname: node.config.hostname.clone(),
+        consumer_interval: Duration::from_millis(2),
+    });
+    for p in &config.disabled_patterns {
+        session.disable_matching(p);
+    }
+    let sampler = config
+        .sampling
+        .clone()
+        .map(|s| Sampler::start(node.clone(), s));
+
+    let t0 = Instant::now();
+    workload.run(node);
+    node.synchronize();
+    let wall = t0.elapsed();
+
+    if let Some(s) = sampler {
+        s.stop();
+    }
+    let session = uninstall_session().expect("session vanished");
+    let stats = session.stats();
+    let trace = match config.sink {
+        SinkKind::Null => None,
+        _ => Some(btf::collect(
+            &session,
+            &[("app".to_string(), workload.name().to_string())],
+        )),
+    };
+    RunReport {
+        app: workload.name().to_string(),
+        config: config.label(),
+        wall,
+        stats: Some(stats),
+        trace,
+    }
+}
+
+/// Run baseline + each config, with one warmup baseline run first (primes
+/// PJRT compile caches so module-create cost doesn't skew a single cell).
+/// Returns reports in the same order as `configs`, prefixed by baseline.
+pub fn run_matrix(
+    node: &Arc<Node>,
+    workload: &dyn Workload,
+    configs: &[IprofConfig],
+) -> Vec<RunReport> {
+    // warmup (not reported)
+    let _ = run(node, workload, &IprofConfig::baseline());
+    let mut reports = vec![run(node, workload, &IprofConfig::baseline())];
+    for c in configs {
+        reports.push(run(node, workload, c));
+    }
+    reports
+}
+
+/// Percentage overhead of `traced` relative to `base`.
+pub fn overhead_pct(base: Duration, traced: Duration) -> f64 {
+    if base.as_nanos() == 0 {
+        return 0.0;
+    }
+    (traced.as_secs_f64() - base.as_secs_f64()) / base.as_secs_f64() * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::hecbench;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+
+    #[test]
+    fn baseline_run_has_no_stats() {
+        let _g = test_support::lock();
+        let node = Node::new(NodeConfig::test_small());
+        let apps = hecbench::suite();
+        let app = apps.iter().find(|a| a.name() == "saxpy-ze").unwrap();
+        let r = run(&node, app.as_ref(), &IprofConfig::baseline());
+        assert!(r.stats.is_none());
+        assert!(r.trace.is_none());
+        assert!(r.wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn traced_run_produces_trace_and_tally() {
+        let _g = test_support::lock();
+        let node = Node::new(NodeConfig::test_small());
+        let apps = hecbench::suite();
+        let app = apps.iter().find(|a| a.name() == "saxpy-ze").unwrap();
+        let r = run(&node, app.as_ref(), &IprofConfig::default());
+        let stats = r.stats.as_ref().unwrap();
+        assert!(stats.written > 50, "saxpy-ze wrote {} events", stats.written);
+        let tally = r.tally().unwrap();
+        assert!(tally.host.keys().any(|(api, _)| api == "ZE"));
+        assert!(!tally.device.is_empty(), "device rows from profiling events");
+    }
+
+    #[test]
+    fn config_labels_match_paper() {
+        assert_eq!(IprofConfig::baseline().label(), "base");
+        assert_eq!(IprofConfig::paper_config(TracingMode::Default, false).label(), "T-default");
+        assert_eq!(IprofConfig::paper_config(TracingMode::Minimal, true).label(), "TS-min");
+        assert_eq!(IprofConfig::paper_config(TracingMode::Full, true).label(), "TS-full");
+    }
+
+    #[test]
+    fn overhead_pct_math() {
+        assert!((overhead_pct(Duration::from_secs(1), Duration::from_millis(1050)) - 5.0).abs() < 1e-9);
+        assert_eq!(overhead_pct(Duration::ZERO, Duration::from_secs(1)), 0.0);
+    }
+}

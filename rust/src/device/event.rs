@@ -1,0 +1,126 @@
+//! Device events: signalable completion markers with device timestamps.
+//!
+//! The simulated analogue of `ze_event_handle_t` / `CUevent`. Engines
+//! signal events when commands complete, recording device-clock start/end
+//! timestamps; hosts wait with a timeout (enabling the spin-wait pattern
+//! HIPLZ exhibits: `hipDeviceSynchronize` → `zeEventHostSynchronize`
+//! polling loop, paper §4.3).
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+struct State {
+    signaled: bool,
+    ts_start: u64,
+    ts_end: u64,
+}
+
+/// A device event.
+#[derive(Debug, Default)]
+pub struct DevEvent {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+impl DevEvent {
+    /// Create an unsignaled event.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Signal completion with device start/end timestamps (host-ns domain
+    /// after conversion by the engine).
+    pub fn signal(&self, ts_start: u64, ts_end: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.signaled = true;
+        s.ts_start = ts_start;
+        s.ts_end = ts_end;
+        self.cond.notify_all();
+    }
+
+    /// Non-blocking status query (`zeEventQueryStatus` / `cuEventQuery`).
+    pub fn query(&self) -> bool {
+        self.state.lock().unwrap().signaled
+    }
+
+    /// Block until signaled or `timeout` elapses. Returns `true` if
+    /// signaled. A zero timeout is a pure poll.
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let s = self.state.lock().unwrap();
+        if s.signaled {
+            return true;
+        }
+        if timeout.is_zero() {
+            return false;
+        }
+        let (s, _r) = self
+            .cond
+            .wait_timeout_while(s, timeout, |st| !st.signaled)
+            .unwrap();
+        s.signaled
+    }
+
+    /// Device timestamps (start, end); zeros until signaled.
+    pub fn timestamps(&self) -> (u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.ts_start, s.ts_end)
+    }
+
+    /// Reset to unsignaled (`zeEventHostReset`).
+    pub fn reset(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.signaled = false;
+        s.ts_start = 0;
+        s.ts_end = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn signal_then_wait_is_immediate() {
+        let e = DevEvent::new();
+        e.signal(10, 20);
+        assert!(e.query());
+        assert!(e.wait(Duration::ZERO));
+        assert_eq!(e.timestamps(), (10, 20));
+    }
+
+    #[test]
+    fn zero_timeout_poll_does_not_block() {
+        let e = DevEvent::new();
+        assert!(!e.wait(Duration::ZERO));
+        assert!(!e.query());
+    }
+
+    #[test]
+    fn wait_wakes_on_signal_from_other_thread() {
+        let e = Arc::new(DevEvent::new());
+        let e2 = e.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            e2.signal(1, 2);
+        });
+        assert!(e.wait(Duration::from_secs(5)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_expires_without_signal() {
+        let e = DevEvent::new();
+        assert!(!e.wait(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let e = DevEvent::new();
+        e.signal(1, 2);
+        e.reset();
+        assert!(!e.query());
+        assert_eq!(e.timestamps(), (0, 0));
+    }
+}

@@ -1,0 +1,188 @@
+//! A simulated GPU: memory pool + per-tile engines + telemetry.
+
+use super::engine::{Command, CompletionRecord, Engine, EngineKind};
+use super::event::DevEvent;
+use super::memory::{AllocKind, MemoryPool};
+use super::telemetry::{Telemetry, TelemetryModel, TelemetrySample};
+use crate::runtime::Executor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One GPU.
+pub struct Gpu {
+    /// Index within the node.
+    pub index: u32,
+    /// Marketing name (traces/telemetry labels).
+    pub name: String,
+    /// Device handle as it appears in traces (stable, per node).
+    pub handle: u64,
+    /// Tile count (PVC: 2, A100: 1).
+    pub tiles: u32,
+    /// Memory pool.
+    pub pool: Arc<MemoryPool>,
+    /// Engines: for each tile a compute engine, then for each tile a copy
+    /// engine. Ordinals: `0..tiles` = compute, `tiles..2*tiles` = copy.
+    pub engines: Vec<Arc<Engine>>,
+    telemetry: Telemetry,
+}
+
+impl Gpu {
+    /// Build a GPU with its engine worker threads.
+    pub fn new(
+        index: u32,
+        name: &str,
+        tiles: u32,
+        device_mem: u64,
+        model: TelemetryModel,
+        executor: Arc<Executor>,
+    ) -> Arc<Self> {
+        let pool = Arc::new(MemoryPool::new(device_mem));
+        let mut engines = Vec::new();
+        for t in 0..tiles {
+            engines.push(Engine::new(EngineKind::Compute, t, t, pool.clone(), executor.clone()));
+        }
+        for t in 0..tiles {
+            engines.push(Engine::new(
+                EngineKind::Copy,
+                tiles + t,
+                t,
+                pool.clone(),
+                executor.clone(),
+            ));
+        }
+        let telemetry = Telemetry::new(model, tiles, engines.len(), 0x5eed ^ index as u64);
+        Arc::new(Gpu {
+            index,
+            name: name.into(),
+            handle: 0x1000_0000u64 + (index as u64) * 0x100,
+            tiles,
+            pool,
+            engines,
+            telemetry,
+        })
+    }
+
+    /// The engine for a queue ordinal (Level-Zero style: the ordinal picks
+    /// the engine group). Out-of-range ordinals wrap.
+    pub fn engine(&self, ordinal: u32) -> &Arc<Engine> {
+        &self.engines[(ordinal as usize) % self.engines.len()]
+    }
+
+    /// First compute engine (tile 0).
+    pub fn compute_engine(&self) -> &Arc<Engine> {
+        &self.engines[0]
+    }
+
+    /// First copy engine (tile 0). This is the engine the *fixed* OpenMP
+    /// runtime uses for transfers; the buggy one (paper §4.1) uses
+    /// [`compute_engine`](Self::compute_engine) instead.
+    pub fn copy_engine(&self) -> &Arc<Engine> {
+        &self.engines[self.tiles as usize]
+    }
+
+    /// Allocate memory.
+    pub fn alloc(&self, kind: AllocKind, size: u64) -> Result<u64> {
+        self.pool.alloc(kind, size)
+    }
+
+    /// Free memory.
+    pub fn free(&self, ptr: u64) -> Result<()> {
+        self.pool.free(ptr)
+    }
+
+    /// Submit a batch to engine `ordinal`.
+    pub fn submit(
+        &self,
+        ordinal: u32,
+        queue: u64,
+        commands: Vec<Command>,
+        fence: Option<Arc<DevEvent>>,
+    ) {
+        self.engine(ordinal).submit(queue, commands, fence);
+    }
+
+    /// Wait until every engine is idle (device-wide synchronize).
+    pub fn synchronize(&self) {
+        for e in &self.engines {
+            e.wait_idle();
+        }
+    }
+
+    /// Drain completion records from all engines (profiling helpers call
+    /// this at synchronize points).
+    pub fn drain_completions(&self, queue: Option<u64>) -> Vec<CompletionRecord> {
+        let mut out = Vec::new();
+        for e in &self.engines {
+            out.extend(e.drain_completions(queue));
+        }
+        out.sort_by_key(|r| r.ts_start);
+        out
+    }
+
+    /// Take a Sysman-style telemetry sample.
+    pub fn sysman_sample(&self) -> TelemetrySample {
+        self.telemetry
+            .sample(crate::tracer::now_ns(), &self.engines, self.pool.device_usage())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::time::Duration;
+
+    fn test_gpu(tiles: u32) -> Arc<Gpu> {
+        let dir = crate::runtime::default_artifacts_dir();
+        let executor = Executor::start(Manifest::load(&dir).expect("artifacts required"));
+        Gpu::new(0, "Test GPU", tiles, 1 << 30, TelemetryModel::pvc(), executor)
+    }
+
+    #[test]
+    fn engine_layout_matches_tiles() {
+        let g = test_gpu(2);
+        assert_eq!(g.engines.len(), 4);
+        assert_eq!(g.compute_engine().kind, EngineKind::Compute);
+        assert_eq!(g.copy_engine().kind, EngineKind::Copy);
+        assert_eq!(g.engine(0).ordinal, 0);
+        assert_eq!(g.engine(2).kind, EngineKind::Copy);
+        assert_eq!(g.engine(99).ordinal, 99 % 4);
+    }
+
+    #[test]
+    fn synchronize_waits_for_submitted_work() {
+        let g = test_gpu(1);
+        let src = g.alloc(AllocKind::Host, 1 << 16).unwrap();
+        let dst = g.alloc(AllocKind::Device, 1 << 16).unwrap();
+        for _ in 0..20 {
+            g.submit(
+                1,
+                0x1,
+                vec![Command::Memcpy { dst, src, bytes: 1 << 16, signal: None }],
+                None,
+            );
+        }
+        g.synchronize();
+        assert_eq!(g.drain_completions(None).len(), 20);
+    }
+
+    #[test]
+    fn device_wide_sync_with_fence() {
+        let g = test_gpu(1);
+        let ev = Arc::new(DevEvent::new());
+        g.submit(0, 1, vec![Command::Barrier { signal: None }], Some(ev.clone()));
+        assert!(ev.wait(Duration::from_secs(10)));
+        g.synchronize();
+    }
+
+    #[test]
+    fn sysman_sample_has_all_domains() {
+        let g = test_gpu(2);
+        std::thread::sleep(Duration::from_millis(2));
+        let s = g.sysman_sample();
+        assert_eq!(s.power.len(), 3); // card + 2 tiles
+        assert_eq!(s.freq.len(), 2);
+        assert_eq!(s.engine_util.len(), 4);
+        assert_eq!(s.memory.1, 1 << 30);
+    }
+}

@@ -1,0 +1,260 @@
+//! Device/host/shared memory pool with address-space tagging.
+//!
+//! Allocations carry real backing bytes (copies and kernels move real
+//! data) and live in distinct virtual ranges so traces show the same
+//! address-space distinction the paper reads off `zeCommandListAppendMemoryCopy`
+//! arguments: host pointers start `0x00007f…`, device pointers `0xff…`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Allocation kind (address range + semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocKind {
+    /// Host-pinned memory (`zeMemAllocHost`, `cuMemAllocHost`).
+    Host,
+    /// Device memory (`zeMemAllocDevice`, `cuMemAlloc`).
+    Device,
+    /// Shared/USM memory.
+    Shared,
+}
+
+impl AllocKind {
+    /// Base virtual address of this kind's range.
+    pub fn base(&self) -> u64 {
+        match self {
+            AllocKind::Host => 0x0000_7f00_0000_0000,
+            AllocKind::Device => 0xff00_0000_0000_0000,
+            AllocKind::Shared => 0x0000_5500_0000_0000,
+        }
+    }
+
+    /// Classify a pointer by its range.
+    pub fn of_ptr(ptr: u64) -> AllocKind {
+        if ptr >= AllocKind::Device.base() {
+            AllocKind::Device
+        } else if ptr >= AllocKind::Host.base() {
+            AllocKind::Host
+        } else {
+            AllocKind::Shared
+        }
+    }
+}
+
+struct Allocation {
+    size: u64,
+    kind: AllocKind,
+    data: Arc<Mutex<Vec<u8>>>,
+}
+
+/// One GPU's memory pool (host allocations live here too — the simulated
+/// host pins through the same pool for simplicity).
+pub struct MemoryPool {
+    allocs: Mutex<BTreeMap<u64, Allocation>>,
+    next: [AtomicU64; 3],
+    used_device: AtomicU64,
+    total_device: u64,
+}
+
+impl MemoryPool {
+    /// Create a pool advertising `total_device` bytes of device memory.
+    pub fn new(total_device: u64) -> Self {
+        MemoryPool {
+            allocs: Mutex::new(BTreeMap::new()),
+            next: [
+                AtomicU64::new(AllocKind::Host.base()),
+                AtomicU64::new(AllocKind::Device.base()),
+                AtomicU64::new(AllocKind::Shared.base()),
+            ],
+            used_device: AtomicU64::new(0),
+            total_device,
+        }
+    }
+
+    fn slot(kind: AllocKind) -> usize {
+        match kind {
+            AllocKind::Host => 0,
+            AllocKind::Device => 1,
+            AllocKind::Shared => 2,
+        }
+    }
+
+    /// Allocate `size` bytes; returns the virtual base pointer.
+    pub fn alloc(&self, kind: AllocKind, size: u64) -> Result<u64> {
+        if size == 0 {
+            bail!("zero-size allocation");
+        }
+        if kind == AllocKind::Device {
+            let used = self.used_device.fetch_add(size, Ordering::Relaxed) + size;
+            if used > self.total_device {
+                self.used_device.fetch_sub(size, Ordering::Relaxed);
+                bail!("device out of memory ({used} > {})", self.total_device);
+            }
+        }
+        let aligned = (size + 255) & !255;
+        let ptr = self.next[Self::slot(kind)].fetch_add(aligned, Ordering::Relaxed);
+        self.allocs.lock().unwrap().insert(
+            ptr,
+            Allocation { size, kind, data: Arc::new(Mutex::new(vec![0u8; size as usize])) },
+        );
+        Ok(ptr)
+    }
+
+    /// Free a pointer returned by [`alloc`](Self::alloc).
+    pub fn free(&self, ptr: u64) -> Result<()> {
+        let mut allocs = self.allocs.lock().unwrap();
+        let a = allocs.remove(&ptr).with_context(|| format!("free of unknown ptr {ptr:#x}"))?;
+        if a.kind == AllocKind::Device {
+            self.used_device.fetch_sub(a.size, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn find(&self, ptr: u64) -> Result<(u64, Arc<Mutex<Vec<u8>>>, u64)> {
+        let allocs = self.allocs.lock().unwrap();
+        let (base, a) = allocs
+            .range(..=ptr)
+            .next_back()
+            .with_context(|| format!("pointer {ptr:#x} not in any allocation"))?;
+        if ptr >= base + a.size {
+            bail!("pointer {ptr:#x} past end of allocation at {base:#x}");
+        }
+        Ok((*base, a.data.clone(), a.size))
+    }
+
+    /// Copy `len` bytes from `src` to `dst` (real memmove between backing
+    /// stores; overlapping same-allocation copies are handled).
+    pub fn copy(&self, dst: u64, src: u64, len: u64) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        let (sbase, sdata, ssize) = self.find(src)?;
+        let (dbase, ddata, dsize) = self.find(dst)?;
+        let soff = (src - sbase) as usize;
+        let doff = (dst - dbase) as usize;
+        if soff + len as usize > ssize as usize || doff + len as usize > dsize as usize {
+            bail!("copy of {len} bytes overruns an allocation");
+        }
+        if Arc::ptr_eq(&sdata, &ddata) {
+            let mut d = sdata.lock().unwrap();
+            d.copy_within(soff..soff + len as usize, doff);
+        } else {
+            let s = sdata.lock().unwrap();
+            let mut d = ddata.lock().unwrap();
+            d[doff..doff + len as usize].copy_from_slice(&s[soff..soff + len as usize]);
+        }
+        Ok(())
+    }
+
+    /// Read the full backing bytes at `ptr` (must be an allocation base and
+    /// at least `len` long) — used by kernel launches to feed PJRT.
+    pub fn read(&self, ptr: u64, len: u64) -> Result<Vec<u8>> {
+        let (base, data, size) = self.find(ptr)?;
+        let off = (ptr - base) as usize;
+        if off + len as usize > size as usize {
+            bail!("read of {len} bytes overruns allocation");
+        }
+        let d = data.lock().unwrap();
+        Ok(d[off..off + len as usize].to_vec())
+    }
+
+    /// Write `bytes` at `ptr`.
+    pub fn write(&self, ptr: u64, bytes: &[u8]) -> Result<()> {
+        let (base, data, size) = self.find(ptr)?;
+        let off = (ptr - base) as usize;
+        if off + bytes.len() > size as usize {
+            bail!("write of {} bytes overruns allocation", bytes.len());
+        }
+        data.lock().unwrap()[off..off + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// (used, total) device bytes — for `cuMemGetInfo` and telemetry.
+    pub fn device_usage(&self) -> (u64, u64) {
+        (self.used_device.load(Ordering::Relaxed), self.total_device)
+    }
+
+    /// Number of live allocations.
+    pub fn live_allocations(&self) -> usize {
+        self.allocs.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_spaces_are_tagged() {
+        let p = MemoryPool::new(1 << 30);
+        let h = p.alloc(AllocKind::Host, 64).unwrap();
+        let d = p.alloc(AllocKind::Device, 64).unwrap();
+        let s = p.alloc(AllocKind::Shared, 64).unwrap();
+        assert_eq!(AllocKind::of_ptr(h), AllocKind::Host);
+        assert_eq!(AllocKind::of_ptr(d), AllocKind::Device);
+        assert_eq!(AllocKind::of_ptr(s), AllocKind::Shared);
+        assert!(d >= 0xff00_0000_0000_0000, "device ptr must start 0xff");
+        assert!(h >> 40 == 0x7f, "host ptr must start 0x00007f");
+    }
+
+    #[test]
+    fn copy_moves_real_bytes() {
+        let p = MemoryPool::new(1 << 30);
+        let h = p.alloc(AllocKind::Host, 1024).unwrap();
+        let d = p.alloc(AllocKind::Device, 1024).unwrap();
+        p.write(h, &[7u8; 1024]).unwrap();
+        p.copy(d, h, 1024).unwrap();
+        assert_eq!(p.read(d, 1024).unwrap(), vec![7u8; 1024]);
+    }
+
+    #[test]
+    fn copy_with_offsets() {
+        let p = MemoryPool::new(1 << 30);
+        let a = p.alloc(AllocKind::Host, 100).unwrap();
+        let b = p.alloc(AllocKind::Host, 100).unwrap();
+        p.write(a, &(0..100u8).collect::<Vec<_>>()).unwrap();
+        p.copy(b + 10, a + 50, 20).unwrap();
+        assert_eq!(p.read(b + 10, 20).unwrap(), (50..70u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn device_oom_is_reported() {
+        let p = MemoryPool::new(1000);
+        assert!(p.alloc(AllocKind::Device, 800).is_ok());
+        assert!(p.alloc(AllocKind::Device, 800).is_err());
+        let (used, total) = p.device_usage();
+        assert_eq!(used, 800);
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn free_releases_device_bytes() {
+        let p = MemoryPool::new(1000);
+        let d = p.alloc(AllocKind::Device, 800).unwrap();
+        p.free(d).unwrap();
+        assert!(p.alloc(AllocKind::Device, 800).is_ok());
+        assert!(p.free(0xdead).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_ops_error() {
+        let p = MemoryPool::new(1 << 20);
+        let a = p.alloc(AllocKind::Host, 64).unwrap();
+        assert!(p.read(a, 65).is_err());
+        assert!(p.write(a + 60, &[0u8; 8]).is_err());
+        assert!(p.read(0x1234, 1).is_err());
+        let b = p.alloc(AllocKind::Host, 64).unwrap();
+        assert!(p.copy(b, a + 32, 64).is_err());
+    }
+
+    #[test]
+    fn overlapping_copy_same_allocation() {
+        let p = MemoryPool::new(1 << 20);
+        let a = p.alloc(AllocKind::Host, 32).unwrap();
+        p.write(a, &(0..32u8).collect::<Vec<_>>()).unwrap();
+        p.copy(a + 8, a, 16).unwrap();
+        assert_eq!(p.read(a + 8, 16).unwrap(), (0..16u8).collect::<Vec<_>>());
+    }
+}

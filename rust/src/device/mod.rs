@@ -1,0 +1,31 @@
+//! Simulated heterogeneous node: the hardware substrate the programming
+//! model frontends drive.
+//!
+//! The paper's testbeds (Aurora: 6× Intel PVC with 2 tiles each; Polaris:
+//! 4× NVIDIA A100) are replaced by software GPUs that preserve everything
+//! the tracer can observe:
+//!
+//! * **memory** ([`memory`]) — host/device/shared allocations in distinct
+//!   address ranges (device pointers start `0xff…`, host `0x00007f…`, the
+//!   very detail the paper's §1.1 example reads off the trace);
+//! * **engines** ([`engine`]) — per-tile compute and copy engines with
+//!   their own worker threads, executing commands asynchronously: kernel
+//!   launches run **real PJRT-compiled HLO** via [`crate::runtime`],
+//!   memory copies move real bytes;
+//! * **events** ([`event`]) — signalable device events with device-clock
+//!   start/end timestamps, the raw material of GPU profiling;
+//! * **telemetry** ([`telemetry`]) — per-domain power/frequency/utilization
+//!   derived from engine activity, sampled by the §3.5 daemon.
+
+pub mod engine;
+pub mod event;
+pub mod gpu;
+pub mod memory;
+pub mod node;
+pub mod telemetry;
+
+pub use engine::{Command, CompletionRecord, Engine, EngineKind};
+pub use event::DevEvent;
+pub use gpu::Gpu;
+pub use memory::{AllocKind, MemoryPool};
+pub use node::{Backend, Node, NodeConfig};

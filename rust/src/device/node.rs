@@ -1,0 +1,158 @@
+//! Node configurations: the simulated testbeds.
+//!
+//! Encodes the paper's Table 1 system configurations as node descriptors:
+//! Aurora nodes carry six 2-tile PVC GPUs behind Level-Zero; Polaris nodes
+//! carry four A100s behind CUDA.
+
+use super::gpu::Gpu;
+use super::telemetry::TelemetryModel;
+use crate::runtime::{global_executor, Executor};
+use std::sync::Arc;
+
+/// Native programming-model backend of a node (Table 1, last row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Intel GPUs: Level-Zero.
+    LevelZero,
+    /// NVIDIA GPUs: CUDA.
+    Cuda,
+}
+
+/// Node descriptor.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// Hostname prefix.
+    pub hostname: String,
+    /// GPUs per node.
+    pub gpu_count: u32,
+    /// Tiles per GPU.
+    pub tiles_per_gpu: u32,
+    /// GPU marketing name.
+    pub gpu_name: String,
+    /// Device memory per GPU (bytes).
+    pub device_mem: u64,
+    /// Native backend.
+    pub backend: Backend,
+}
+
+impl NodeConfig {
+    /// Aurora node (Table 1): 6× Intel Data Center GPU Max 1550, 2 tiles,
+    /// Level-Zero backend.
+    pub fn aurora() -> Self {
+        NodeConfig {
+            hostname: "x1921c5s4b0n0".into(),
+            gpu_count: 6,
+            tiles_per_gpu: 2,
+            gpu_name: "Intel Data Center GPU Max 1550".into(),
+            device_mem: 8 << 30,
+            backend: Backend::LevelZero,
+        }
+    }
+
+    /// Polaris node (Table 1): 4× NVIDIA A100, CUDA backend.
+    pub fn polaris() -> Self {
+        NodeConfig {
+            hostname: "x3006c0s13b0n0".into(),
+            gpu_count: 4,
+            tiles_per_gpu: 1,
+            gpu_name: "NVIDIA A100".into(),
+            device_mem: 8 << 30,
+            backend: Backend::Cuda,
+        }
+    }
+
+    /// Small single-GPU node for unit tests (fewer worker threads).
+    pub fn test_small() -> Self {
+        NodeConfig {
+            hostname: "testnode".into(),
+            gpu_count: 1,
+            tiles_per_gpu: 2,
+            gpu_name: "Test GPU".into(),
+            device_mem: 2 << 30,
+            backend: Backend::LevelZero,
+        }
+    }
+
+    fn telemetry_model(&self) -> TelemetryModel {
+        match self.backend {
+            Backend::LevelZero => TelemetryModel::pvc(),
+            Backend::Cuda => TelemetryModel::a100(),
+        }
+    }
+}
+
+/// A live simulated node: GPUs with running engines.
+pub struct Node {
+    /// Configuration.
+    pub config: NodeConfig,
+    /// GPUs.
+    pub gpus: Vec<Arc<Gpu>>,
+    /// The PJRT executor serving this node's kernels.
+    pub executor: Arc<Executor>,
+}
+
+impl Node {
+    /// Bring up a node using the process-global PJRT executor.
+    pub fn new(config: NodeConfig) -> Arc<Self> {
+        Self::with_executor(config, global_executor())
+    }
+
+    /// Bring up a node with an explicit executor.
+    pub fn with_executor(config: NodeConfig, executor: Arc<Executor>) -> Arc<Self> {
+        let model = config.telemetry_model();
+        let gpus = (0..config.gpu_count)
+            .map(|i| {
+                Gpu::new(
+                    i,
+                    &config.gpu_name,
+                    config.tiles_per_gpu,
+                    config.device_mem,
+                    model.clone(),
+                    executor.clone(),
+                )
+            })
+            .collect();
+        Arc::new(Node { config, gpus, executor })
+    }
+
+    /// GPU by index.
+    pub fn gpu(&self, index: u32) -> &Arc<Gpu> {
+        &self.gpus[index as usize]
+    }
+
+    /// Wait for every GPU to drain.
+    pub fn synchronize(&self) {
+        for g in &self.gpus {
+            g.synchronize();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aurora_matches_table1() {
+        let c = NodeConfig::aurora();
+        assert_eq!(c.gpu_count, 6);
+        assert_eq!(c.tiles_per_gpu, 2);
+        assert_eq!(c.backend, Backend::LevelZero);
+    }
+
+    #[test]
+    fn polaris_matches_table1() {
+        let c = NodeConfig::polaris();
+        assert_eq!(c.gpu_count, 4);
+        assert_eq!(c.tiles_per_gpu, 1);
+        assert_eq!(c.backend, Backend::Cuda);
+    }
+
+    #[test]
+    fn node_brings_up_gpus_with_unique_handles() {
+        let n = Node::new(NodeConfig::test_small());
+        assert_eq!(n.gpus.len(), 1);
+        assert_eq!(n.gpu(0).engines.len(), 4);
+        n.synchronize();
+    }
+}

@@ -1,0 +1,273 @@
+//! GPU telemetry model: per-domain power, frequency, engine utilization,
+//! memory and fabric counters (what the §3.5 Sysman daemon samples).
+//!
+//! Drives the Fig. 5 timeline rows: Power Domain 0 is the whole card,
+//! Domains 1/2 are the tiles; Frequency Domains 0/1 are per-tile clocks;
+//! ComputeEngine/CopyEngine % are per-tile busy fractions. The model maps
+//! engine busy-time deltas (real wall time the worker threads spent
+//! executing commands) onto a simple but physically-shaped power model:
+//! idle floor + utilization-proportional draw, with clock droop under load.
+
+use super::engine::{Engine, EngineKind};
+use crate::util::Rng;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Telemetry shape parameters (per GPU model).
+#[derive(Debug, Clone)]
+pub struct TelemetryModel {
+    /// Card idle power (W).
+    pub card_idle_w: f64,
+    /// Tile idle power (W).
+    pub tile_idle_w: f64,
+    /// Max extra power per tile at full compute utilization (W).
+    pub tile_compute_w: f64,
+    /// Max extra power per tile at full copy utilization (W).
+    pub tile_copy_w: f64,
+    /// Max clock (MHz).
+    pub freq_max_mhz: f64,
+    /// Clock droop fraction at full load (0..1).
+    pub freq_droop: f64,
+}
+
+impl TelemetryModel {
+    /// Intel Data Center GPU Max 1550 (PVC)-shaped model.
+    pub fn pvc() -> Self {
+        TelemetryModel {
+            card_idle_w: 100.0,
+            tile_idle_w: 75.0,
+            tile_compute_w: 225.0,
+            tile_copy_w: 50.0,
+            freq_max_mhz: 1600.0,
+            freq_droop: 0.25,
+        }
+    }
+
+    /// NVIDIA A100-shaped model (single "tile").
+    pub fn a100() -> Self {
+        TelemetryModel {
+            card_idle_w: 60.0,
+            tile_idle_w: 40.0,
+            tile_compute_w: 260.0,
+            tile_copy_w: 40.0,
+            freq_max_mhz: 1410.0,
+            freq_droop: 0.18,
+        }
+    }
+}
+
+/// One telemetry snapshot for a GPU.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySample {
+    /// (domain, watts); domain 0 = card, 1.. = tiles.
+    pub power: Vec<(u32, f64)>,
+    /// (domain, accumulated energy in µJ).
+    pub energy_uj: Vec<(u32, u64)>,
+    /// (domain, MHz) per tile.
+    pub freq: Vec<(u32, f64)>,
+    /// (engine kind, tile, utilization 0..1).
+    pub engine_util: Vec<(EngineKind, u32, f64)>,
+    /// Device memory (used, total).
+    pub memory: (u64, u64),
+    /// Fabric counters (tx, rx bytes, cumulative).
+    pub fabric: (u64, u64),
+}
+
+struct PrevState {
+    t_ns: u64,
+    busy_ns: Vec<u64>,
+    energy_uj: Vec<f64>,
+    rng: Rng,
+}
+
+/// Telemetry sampler state for one GPU.
+pub struct Telemetry {
+    model: TelemetryModel,
+    tiles: u32,
+    prev: Mutex<PrevState>,
+}
+
+impl Telemetry {
+    /// Create sampler state. `engines` fixes the busy-counter layout.
+    pub fn new(model: TelemetryModel, tiles: u32, n_engines: usize, seed: u64) -> Self {
+        Telemetry {
+            model,
+            tiles,
+            prev: Mutex::new(PrevState {
+                t_ns: crate::tracer::now_ns(),
+                busy_ns: vec![0; n_engines],
+                energy_uj: vec![0.0; tiles as usize + 1],
+                rng: Rng::new(seed),
+            }),
+        }
+    }
+
+    /// Take a sample given current engine counters and memory usage.
+    pub fn sample(
+        &self,
+        now_ns: u64,
+        engines: &[Arc<Engine>],
+        memory: (u64, u64),
+    ) -> TelemetrySample {
+        let mut prev = self.prev.lock().unwrap();
+        let dt_ns = now_ns.saturating_sub(prev.t_ns).max(1);
+
+        // Per-engine utilization over the window.
+        let mut utils = Vec::with_capacity(engines.len());
+        for (i, e) in engines.iter().enumerate() {
+            let (total, since) = e.busy_counters();
+            let in_progress = if since > 0 { now_ns.saturating_sub(since) } else { 0 };
+            let cur = total + in_progress;
+            let delta = cur.saturating_sub(prev.busy_ns[i]);
+            prev.busy_ns[i] = cur;
+            utils.push((e.kind, e.tile, (delta as f64 / dt_ns as f64).min(1.0)));
+        }
+
+        // Aggregate per (kind, tile).
+        let mut util_by = vec![[0.0f64; 2]; self.tiles as usize]; // [compute, copy]
+        let mut counts = vec![[0u32; 2]; self.tiles as usize];
+        for (kind, tile, u) in &utils {
+            let k = kind.code() as usize;
+            util_by[*tile as usize][k] += u;
+            counts[*tile as usize][k] += 1;
+        }
+        for t in 0..self.tiles as usize {
+            for k in 0..2 {
+                if counts[t][k] > 0 {
+                    util_by[t][k] /= counts[t][k] as f64;
+                }
+            }
+        }
+
+        let m = &self.model;
+        let mut power = Vec::new();
+        let mut freq = Vec::new();
+        let mut card_w = m.card_idle_w;
+        for t in 0..self.tiles {
+            let uc = util_by[t as usize][0];
+            let ux = util_by[t as usize][1];
+            let jitter = 1.0 + 0.02 * (prev.rng.f64() - 0.5);
+            let tile_w = (m.tile_idle_w + m.tile_compute_w * uc + m.tile_copy_w * ux) * jitter;
+            card_w += tile_w;
+            power.push((t + 1, tile_w));
+            let f = m.freq_max_mhz * (1.0 - m.freq_droop * uc) * (1.0 + 0.01 * (prev.rng.f64() - 0.5));
+            freq.push((t, f));
+        }
+        power.insert(0, (0, card_w));
+
+        // Integrate energy.
+        let dt_s = dt_ns as f64 / 1e9;
+        let mut energy = Vec::new();
+        for (i, (_, w)) in power.iter().enumerate() {
+            prev.energy_uj[i] += w * dt_s * 1e6;
+            energy.push((power[i].0, prev.energy_uj[i] as u64));
+        }
+
+        let mut engine_util = Vec::new();
+        for t in 0..self.tiles {
+            engine_util.push((EngineKind::Compute, t, util_by[t as usize][0]));
+            engine_util.push((EngineKind::Copy, t, util_by[t as usize][1]));
+        }
+
+        let tx: u64 = engines
+            .iter()
+            .filter(|e| e.kind == EngineKind::Copy)
+            .map(|e| e.bytes_copied.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+
+        prev.t_ns = now_ns;
+        TelemetrySample {
+            power,
+            energy_uj: energy,
+            freq,
+            engine_util,
+            memory,
+            fabric: (tx, tx / 2),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::memory::MemoryPool;
+    use crate::runtime::{Executor, Manifest};
+
+    fn engines(n: usize) -> Vec<Arc<Engine>> {
+        let dir = crate::runtime::default_artifacts_dir();
+        let manifest = Manifest::load(&dir).expect("artifacts required");
+        let executor = Executor::start(manifest);
+        let pool = Arc::new(MemoryPool::new(1 << 30));
+        (0..n)
+            .map(|i| {
+                Engine::new(
+                    if i % 2 == 0 { EngineKind::Compute } else { EngineKind::Copy },
+                    i as u32,
+                    (i / 2) as u32,
+                    pool.clone(),
+                    executor.clone(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idle_gpu_has_idle_power_and_max_freq() {
+        let t = Telemetry::new(TelemetryModel::pvc(), 2, 4, 1);
+        let es = engines(4);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let s = t.sample(crate::tracer::now_ns(), &es, (0, 1 << 30));
+        // card power = idle + 2 tiles idle (±2% jitter)
+        let (d0, w0) = s.power[0];
+        assert_eq!(d0, 0);
+        assert!((w0 - 250.0).abs() < 15.0, "idle card power {w0}");
+        for (_, f) in &s.freq {
+            assert!(*f > 1500.0, "idle freq should be near max, got {f}");
+        }
+        for (_, _, u) in &s.engine_util {
+            assert!(*u < 0.05, "idle util {u}");
+        }
+    }
+
+    #[test]
+    fn busy_copy_engine_shows_utilization() {
+        use crate::device::engine::Command;
+        use crate::device::memory::AllocKind;
+        let es = engines(2);
+        let t = Telemetry::new(TelemetryModel::pvc(), 1, 2, 2);
+        // prime a window start
+        t.sample(crate::tracer::now_ns(), &es, (0, 1));
+        // hammer the copy engine (index 1)
+        let pool = MemoryPool::new(1 << 30);
+        let a = pool.alloc(AllocKind::Host, 1 << 20).unwrap();
+        let _ = a;
+        // The engines were built over their own pool; just use busy time via
+        // barrier commands instead (they're ~instant), so simulate business by
+        // sleeping while an engine runs many tiny commands.
+        let copy = &es[1];
+        for _ in 0..50 {
+            copy.submit(1, vec![Command::Barrier { signal: None }], None);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let s = t.sample(crate::tracer::now_ns(), &es, (0, 1));
+        // barriers are near-instant; utilization is small but the sample
+        // machinery must still report consistent domains
+        assert_eq!(s.engine_util.len(), 2);
+        assert_eq!(s.power.len(), 2);
+    }
+
+    #[test]
+    fn energy_accumulates_monotonically() {
+        let t = Telemetry::new(TelemetryModel::a100(), 1, 2, 3);
+        let es = engines(2);
+        let mut last = 0u64;
+        for _ in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let s = t.sample(crate::tracer::now_ns(), &es, (0, 1));
+            let e0 = s.energy_uj[0].1;
+            assert!(e0 >= last);
+            last = e0;
+        }
+        assert!(last > 0);
+    }
+}

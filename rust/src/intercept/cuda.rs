@@ -1,0 +1,760 @@
+//! CUDA driver-API frontend: the traced `cu*` runtime (Polaris-style
+//! nodes, Table 1). Streams map to engines: kernel launches run on the
+//! compute engine, memcpys on the copy engine; synchronous copies block on
+//! a device event like real `cuMemcpy*`.
+
+use super::declare_tps;
+use super::handles::{HandleAllocator, HandleKind};
+use super::profiling;
+use crate::device::{AllocKind, Command, DevEvent, Gpu, Node};
+use crate::model::Api;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// `CUresult` values.
+pub mod cu_result {
+    /// Success.
+    pub const SUCCESS: u64 = 0;
+    /// Invalid value.
+    pub const INVALID_VALUE: u64 = 1;
+    /// Out of memory.
+    pub const OUT_OF_MEMORY: u64 = 2;
+    /// Not initialized.
+    pub const NOT_INITIALIZED: u64 = 3;
+    /// Async op not finished.
+    pub const NOT_READY: u64 = 600;
+}
+
+declare_tps!(pub(crate) CudaTps, Api::Cuda, {
+    init: "cuInit",
+    device_get_count: "cuDeviceGetCount",
+    device_get: "cuDeviceGet",
+    ctx_create: "cuCtxCreate",
+    ctx_destroy: "cuCtxDestroy",
+    ctx_synchronize: "cuCtxSynchronize",
+    mem_get_info: "cuMemGetInfo",
+    mem_alloc: "cuMemAlloc",
+    mem_alloc_host: "cuMemAllocHost",
+    mem_free: "cuMemFree",
+    memcpy_htod: "cuMemcpyHtoD",
+    memcpy_dtoh: "cuMemcpyDtoH",
+    memcpy_htod_async: "cuMemcpyHtoDAsync",
+    memcpy_dtoh_async: "cuMemcpyDtoHAsync",
+    module_load_data: "cuModuleLoadData",
+    module_get_function: "cuModuleGetFunction",
+    module_unload: "cuModuleUnload",
+    stream_create: "cuStreamCreate",
+    stream_destroy: "cuStreamDestroy",
+    stream_synchronize: "cuStreamSynchronize",
+    stream_query: "cuStreamQuery",
+    launch_kernel: "cuLaunchKernel",
+    event_create: "cuEventCreate",
+    event_record: "cuEventRecord",
+    event_query: "cuEventQuery",
+    event_synchronize: "cuEventSynchronize",
+    event_destroy: "cuEventDestroy",
+});
+
+static TPS: Lazy<CudaTps> = Lazy::new(CudaTps::load);
+
+struct CuStream {
+    gpu: u32,
+    fences: Vec<Arc<DevEvent>>,
+}
+
+#[derive(Default)]
+struct CuState {
+    initialized: bool,
+    current_device: u32,
+    contexts: HashMap<u64, u32>,
+    streams: HashMap<u64, CuStream>,
+    modules: HashMap<u64, String>,
+    functions: HashMap<u64, String>,
+    events: HashMap<u64, Arc<DevEvent>>,
+}
+
+/// The CUDA driver for one node.
+pub struct CudaDriver {
+    /// The node.
+    pub node: Arc<Node>,
+    handles: HandleAllocator,
+    state: Mutex<CuState>,
+    /// The default (NULL) stream handle.
+    pub default_stream: u64,
+}
+
+impl CudaDriver {
+    /// Create the driver.
+    pub fn new(node: Arc<Node>) -> Arc<Self> {
+        let handles = HandleAllocator::new();
+        let default_stream = handles.alloc(HandleKind::Queue);
+        let d = Arc::new(CudaDriver {
+            node,
+            handles,
+            state: Mutex::new(CuState::default()),
+            default_stream,
+        });
+        d.state
+            .lock()
+            .unwrap()
+            .streams
+            .insert(default_stream, CuStream { gpu: 0, fences: Vec::new() });
+        d
+    }
+
+    fn desc(&self) -> u64 {
+        self.handles.alloc(HandleKind::Desc)
+    }
+
+    fn gpu(&self, index: u32) -> &Arc<Gpu> {
+        &self.node.gpus[index as usize % self.node.gpus.len()]
+    }
+
+    /// `cuInit`.
+    pub fn cu_init(&self, flags: u32) -> u64 {
+        emit(TPS.init.0, |e| {
+            e.u64(flags as u64);
+        });
+        self.state.lock().unwrap().initialized = true;
+        emit(TPS.init.1, |e| {
+            e.u64(cu_result::SUCCESS);
+        });
+        cu_result::SUCCESS
+    }
+
+    /// `cuDeviceGetCount`.
+    pub fn cu_device_get_count(&self) -> (u64, i32) {
+        let p = self.desc();
+        emit(TPS.device_get_count.0, |e| {
+            e.ptr(p);
+        });
+        let n = self.node.gpus.len() as i32;
+        emit(TPS.device_get_count.1, |e| {
+            e.u64(cu_result::SUCCESS).i64(n as i64);
+        });
+        (cu_result::SUCCESS, n)
+    }
+
+    /// `cuDeviceGet`.
+    pub fn cu_device_get(&self, ordinal: i32) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.device_get.0, |e| {
+            e.ptr(p).i64(ordinal as i64);
+        });
+        let (result, dev) = if (ordinal as usize) < self.node.gpus.len() {
+            (cu_result::SUCCESS, self.node.gpus[ordinal as usize].handle)
+        } else {
+            (cu_result::INVALID_VALUE, 0)
+        };
+        emit(TPS.device_get.1, |e| {
+            e.u64(result).ptr(dev);
+        });
+        (result, dev)
+    }
+
+    /// `cuCtxCreate` — also sets the current device.
+    pub fn cu_ctx_create(&self, flags: u32, dev: u64) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.ctx_create.0, |e| {
+            e.ptr(p).u64(flags as u64).ptr(dev);
+        });
+        let idx = self.node.gpus.iter().position(|g| g.handle == dev);
+        let (result, ctx) = match idx {
+            Some(i) => {
+                let ctx = self.handles.alloc(HandleKind::Context);
+                let mut st = self.state.lock().unwrap();
+                st.contexts.insert(ctx, i as u32);
+                st.current_device = i as u32;
+                (cu_result::SUCCESS, ctx)
+            }
+            None => (cu_result::INVALID_VALUE, 0),
+        };
+        emit(TPS.ctx_create.1, |e| {
+            e.u64(result).ptr(ctx);
+        });
+        (result, ctx)
+    }
+
+    /// `cuCtxDestroy`.
+    pub fn cu_ctx_destroy(&self, ctx: u64) -> u64 {
+        emit(TPS.ctx_destroy.0, |e| {
+            e.ptr(ctx);
+        });
+        let ok = self.state.lock().unwrap().contexts.remove(&ctx).is_some();
+        let result = if ok { cu_result::SUCCESS } else { cu_result::INVALID_VALUE };
+        emit(TPS.ctx_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuCtxSynchronize` — device-wide sync + profiling drain.
+    pub fn cu_ctx_synchronize(&self) -> u64 {
+        emit(TPS.ctx_synchronize.0, |_e| {});
+        let dev = self.state.lock().unwrap().current_device;
+        let gpu = self.gpu(dev).clone();
+        gpu.synchronize();
+        profiling::drain_and_emit(&gpu, None);
+        emit(TPS.ctx_synchronize.1, |e| {
+            e.u64(cu_result::SUCCESS);
+        });
+        cu_result::SUCCESS
+    }
+
+    /// `cuMemGetInfo` — the paper's Fig. 3 running example.
+    pub fn cu_mem_get_info(&self) -> (u64, u64, u64) {
+        let pf = self.desc();
+        let pt = self.desc();
+        emit(TPS.mem_get_info.0, |e| {
+            e.ptr(pf).ptr(pt);
+        });
+        let dev = self.state.lock().unwrap().current_device;
+        let (used, total) = self.gpu(dev).pool.device_usage();
+        let free = total - used;
+        emit(TPS.mem_get_info.1, |e| {
+            e.u64(cu_result::SUCCESS).u64(free).u64(total);
+        });
+        (cu_result::SUCCESS, free, total)
+    }
+
+    /// `cuMemAlloc`.
+    pub fn cu_mem_alloc(&self, bytesize: u64) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.mem_alloc.0, |e| {
+            e.ptr(p).u64(bytesize);
+        });
+        let dev = self.state.lock().unwrap().current_device;
+        let (result, ptr) = match self.gpu(dev).alloc(AllocKind::Device, bytesize) {
+            Ok(p) => (cu_result::SUCCESS, p),
+            Err(_) => (cu_result::OUT_OF_MEMORY, 0),
+        };
+        emit(TPS.mem_alloc.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `cuMemAllocHost`.
+    pub fn cu_mem_alloc_host(&self, bytesize: u64) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.mem_alloc_host.0, |e| {
+            e.ptr(p).u64(bytesize);
+        });
+        let dev = self.state.lock().unwrap().current_device;
+        let (result, ptr) = match self.gpu(dev).alloc(AllocKind::Host, bytesize) {
+            Ok(p) => (cu_result::SUCCESS, p),
+            Err(_) => (cu_result::OUT_OF_MEMORY, 0),
+        };
+        emit(TPS.mem_alloc_host.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `cuMemFree`.
+    pub fn cu_mem_free(&self, dptr: u64) -> u64 {
+        emit(TPS.mem_free.0, |e| {
+            e.ptr(dptr);
+        });
+        let mut result = cu_result::INVALID_VALUE;
+        for g in &self.node.gpus {
+            if g.free(dptr).is_ok() {
+                result = cu_result::SUCCESS;
+                break;
+            }
+        }
+        emit(TPS.mem_free.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    fn sync_copy(&self, dst: u64, src: u64, bytes: u64) -> u64 {
+        let dev = self.state.lock().unwrap().current_device;
+        let gpu = self.gpu(dev).clone();
+        let ev = Arc::new(DevEvent::new());
+        let ordinal = gpu.tiles; // copy engine, tile 0
+        gpu.submit(
+            ordinal,
+            self.default_stream,
+            vec![Command::Memcpy { dst, src, bytes, signal: Some(ev.clone()) }],
+            None,
+        );
+        if ev.wait(Duration::from_secs(600)) {
+            profiling::drain_and_emit(&gpu, Some(self.default_stream));
+            cu_result::SUCCESS
+        } else {
+            cu_result::NOT_READY
+        }
+    }
+
+    /// `cuMemcpyHtoD` (synchronous).
+    pub fn cu_memcpy_htod(&self, dst: u64, src: u64, bytes: u64) -> u64 {
+        emit(TPS.memcpy_htod.0, |e| {
+            e.ptr(dst).ptr(src).u64(bytes);
+        });
+        let result = self.sync_copy(dst, src, bytes);
+        emit(TPS.memcpy_htod.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuMemcpyDtoH` (synchronous).
+    pub fn cu_memcpy_dtoh(&self, dst: u64, src: u64, bytes: u64) -> u64 {
+        emit(TPS.memcpy_dtoh.0, |e| {
+            e.ptr(dst).ptr(src).u64(bytes);
+        });
+        let result = self.sync_copy(dst, src, bytes);
+        emit(TPS.memcpy_dtoh.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    fn async_copy(&self, dst: u64, src: u64, bytes: u64, stream: u64) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let Some(s) = st.streams.get_mut(&stream) else {
+            return cu_result::INVALID_VALUE;
+        };
+        let gpu = self.node.gpus[s.gpu as usize].clone();
+        let fence = Arc::new(DevEvent::new());
+        s.fences.push(fence.clone());
+        drop(st);
+        let ordinal = gpu.tiles;
+        gpu.submit(
+            ordinal,
+            stream,
+            vec![Command::Memcpy { dst, src, bytes, signal: None }],
+            Some(fence),
+        );
+        cu_result::SUCCESS
+    }
+
+    /// `cuMemcpyHtoDAsync`.
+    pub fn cu_memcpy_htod_async(&self, dst: u64, src: u64, bytes: u64, stream: u64) -> u64 {
+        emit(TPS.memcpy_htod_async.0, |e| {
+            e.ptr(dst).ptr(src).u64(bytes).ptr(stream);
+        });
+        let result = self.async_copy(dst, src, bytes, stream);
+        emit(TPS.memcpy_htod_async.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuMemcpyDtoHAsync`.
+    pub fn cu_memcpy_dtoh_async(&self, dst: u64, src: u64, bytes: u64, stream: u64) -> u64 {
+        emit(TPS.memcpy_dtoh_async.0, |e| {
+            e.ptr(dst).ptr(src).u64(bytes).ptr(stream);
+        });
+        let result = self.async_copy(dst, src, bytes, stream);
+        emit(TPS.memcpy_dtoh_async.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuModuleLoadData` — `image` is the kernel name; compiles the
+    /// artifact (real PJRT compile time).
+    pub fn cu_module_load_data(&self, image: &str) -> (u64, u64) {
+        let pm = self.desc();
+        let pi = self.desc();
+        emit(TPS.module_load_data.0, |e| {
+            e.ptr(pm).ptr(pi);
+        });
+        let (result, module) = match self.node.executor.compile(image) {
+            Ok(_) => {
+                let m = self.handles.alloc(HandleKind::Module);
+                self.state.lock().unwrap().modules.insert(m, image.to_string());
+                (cu_result::SUCCESS, m)
+            }
+            Err(_) => (cu_result::INVALID_VALUE, 0),
+        };
+        emit(TPS.module_load_data.1, |e| {
+            e.u64(result).ptr(module);
+        });
+        (result, module)
+    }
+
+    /// `cuModuleGetFunction`.
+    pub fn cu_module_get_function(&self, module: u64, name: &str) -> (u64, u64) {
+        let pf = self.desc();
+        emit(TPS.module_get_function.0, |e| {
+            e.ptr(pf).ptr(module).str(name);
+        });
+        let mut st = self.state.lock().unwrap();
+        let (result, f) = match st.modules.get(&module) {
+            Some(m) if m == name => {
+                let f = self.handles.alloc(HandleKind::Kernel);
+                st.functions.insert(f, name.to_string());
+                (cu_result::SUCCESS, f)
+            }
+            Some(_) => (cu_result::INVALID_VALUE, 0),
+            None => (cu_result::INVALID_VALUE, 0),
+        };
+        drop(st);
+        emit(TPS.module_get_function.1, |e| {
+            e.u64(result).ptr(f);
+        });
+        (result, f)
+    }
+
+    /// `cuModuleUnload`.
+    pub fn cu_module_unload(&self, module: u64) -> u64 {
+        emit(TPS.module_unload.0, |e| {
+            e.ptr(module);
+        });
+        let ok = self.state.lock().unwrap().modules.remove(&module).is_some();
+        let result = if ok { cu_result::SUCCESS } else { cu_result::INVALID_VALUE };
+        emit(TPS.module_unload.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuStreamCreate`.
+    pub fn cu_stream_create(&self, flags: u32) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.stream_create.0, |e| {
+            e.ptr(p).u64(flags as u64);
+        });
+        let stream = self.handles.alloc(HandleKind::Queue);
+        let dev = self.state.lock().unwrap().current_device;
+        self.state
+            .lock()
+            .unwrap()
+            .streams
+            .insert(stream, CuStream { gpu: dev, fences: Vec::new() });
+        emit(TPS.stream_create.1, |e| {
+            e.u64(cu_result::SUCCESS).ptr(stream);
+        });
+        (cu_result::SUCCESS, stream)
+    }
+
+    /// `cuStreamDestroy`.
+    pub fn cu_stream_destroy(&self, stream: u64) -> u64 {
+        emit(TPS.stream_destroy.0, |e| {
+            e.ptr(stream);
+        });
+        let ok = self.state.lock().unwrap().streams.remove(&stream).is_some();
+        let result = if ok { cu_result::SUCCESS } else { cu_result::INVALID_VALUE };
+        emit(TPS.stream_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuStreamSynchronize`.
+    pub fn cu_stream_synchronize(&self, stream: u64) -> u64 {
+        emit(TPS.stream_synchronize.0, |e| {
+            e.ptr(stream);
+        });
+        let (fences, gpu_idx) = {
+            let mut st = self.state.lock().unwrap();
+            match st.streams.get_mut(&stream) {
+                Some(s) => (std::mem::take(&mut s.fences), s.gpu),
+                None => {
+                    drop(st);
+                    emit(TPS.stream_synchronize.1, |e| {
+                        e.u64(cu_result::INVALID_VALUE);
+                    });
+                    return cu_result::INVALID_VALUE;
+                }
+            }
+        };
+        for f in &fences {
+            f.wait(Duration::from_secs(600));
+        }
+        let gpu = self.gpu(gpu_idx).clone();
+        profiling::drain_and_emit(&gpu, Some(stream));
+        emit(TPS.stream_synchronize.1, |e| {
+            e.u64(cu_result::SUCCESS);
+        });
+        cu_result::SUCCESS
+    }
+
+    /// `cuStreamQuery` (polling class).
+    pub fn cu_stream_query(&self, stream: u64) -> u64 {
+        emit(TPS.stream_query.0, |e| {
+            e.ptr(stream);
+        });
+        let st = self.state.lock().unwrap();
+        let result = match st.streams.get(&stream) {
+            Some(s) => {
+                if s.fences.iter().all(|f| f.query()) {
+                    cu_result::SUCCESS
+                } else {
+                    cu_result::NOT_READY
+                }
+            }
+            None => cu_result::INVALID_VALUE,
+        };
+        drop(st);
+        emit(TPS.stream_query.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuLaunchKernel`. `params` are the kernel argument pointers
+    /// (inputs then output, matching the artifact manifest).
+    #[allow(clippy::too_many_arguments)]
+    pub fn cu_launch_kernel(
+        &self,
+        f: u64,
+        grid: (u32, u32, u32),
+        block: (u32, u32, u32),
+        shared_mem: u32,
+        stream: u64,
+        params: &[u64],
+    ) -> u64 {
+        let pp = self.desc();
+        emit(TPS.launch_kernel.0, |e| {
+            e.ptr(f)
+                .u64(grid.0 as u64)
+                .u64(grid.1 as u64)
+                .u64(grid.2 as u64)
+                .u64(block.0 as u64)
+                .u64(block.1 as u64)
+                .u64(block.2 as u64)
+                .u64(shared_mem as u64)
+                .ptr(stream)
+                .ptr(pp)
+                .ptr(0);
+        });
+        let mut st = self.state.lock().unwrap();
+        let name = st.functions.get(&f).cloned();
+        let result = match (name, st.streams.get_mut(&stream)) {
+            (Some(name), Some(s)) => {
+                let gpu = self.node.gpus[s.gpu as usize].clone();
+                let fence = Arc::new(DevEvent::new());
+                s.fences.push(fence.clone());
+                drop(st);
+                gpu.submit(
+                    0, // compute engine
+                    stream,
+                    vec![Command::Kernel {
+                        name,
+                        args: params.to_vec(),
+                        groups: grid,
+                        signal: None,
+                    }],
+                    Some(fence),
+                );
+                cu_result::SUCCESS
+            }
+            _ => cu_result::INVALID_VALUE,
+        };
+        emit(TPS.launch_kernel.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuEventCreate`.
+    pub fn cu_event_create(&self, flags: u32) -> (u64, u64) {
+        let p = self.desc();
+        emit(TPS.event_create.0, |e| {
+            e.ptr(p).u64(flags as u64);
+        });
+        let ev = self.handles.alloc(HandleKind::Event);
+        self.state.lock().unwrap().events.insert(ev, Arc::new(DevEvent::new()));
+        emit(TPS.event_create.1, |e| {
+            e.u64(cu_result::SUCCESS).ptr(ev);
+        });
+        (cu_result::SUCCESS, ev)
+    }
+
+    /// `cuEventRecord` — signals the event when the stream's work so far
+    /// completes (implemented as a barrier command carrying the signal).
+    pub fn cu_event_record(&self, event: u64, stream: u64) -> u64 {
+        emit(TPS.event_record.0, |e| {
+            e.ptr(event).ptr(stream);
+        });
+        let mut st = self.state.lock().unwrap();
+        let dev = match st.streams.get(&stream) {
+            Some(s) => s.gpu,
+            None => {
+                drop(st);
+                emit(TPS.event_record.1, |e| {
+                    e.u64(cu_result::INVALID_VALUE);
+                });
+                return cu_result::INVALID_VALUE;
+            }
+        };
+        let signal = st.events.get(&event).cloned();
+        let result = match signal {
+            Some(signal) => {
+                signal.reset();
+                let gpu = self.node.gpus[dev as usize].clone();
+                drop(st);
+                gpu.submit(0, stream, vec![Command::Barrier { signal: Some(signal) }], None);
+                cu_result::SUCCESS
+            }
+            None => cu_result::INVALID_VALUE,
+        };
+        emit(TPS.event_record.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuEventQuery` (polling class).
+    pub fn cu_event_query(&self, event: u64) -> u64 {
+        emit(TPS.event_query.0, |e| {
+            e.ptr(event);
+        });
+        let ev = self.state.lock().unwrap().events.get(&event).cloned();
+        let result = match ev {
+            Some(ev) if ev.query() => cu_result::SUCCESS,
+            Some(_) => cu_result::NOT_READY,
+            None => cu_result::INVALID_VALUE,
+        };
+        emit(TPS.event_query.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuEventSynchronize`.
+    pub fn cu_event_synchronize(&self, event: u64) -> u64 {
+        emit(TPS.event_synchronize.0, |e| {
+            e.ptr(event);
+        });
+        let ev = self.state.lock().unwrap().events.get(&event).cloned();
+        let result = match ev {
+            Some(ev) => {
+                ev.wait(Duration::from_secs(600));
+                let dev = self.state.lock().unwrap().current_device;
+                profiling::drain_and_emit(self.gpu(dev), None);
+                cu_result::SUCCESS
+            }
+            None => cu_result::INVALID_VALUE,
+        };
+        emit(TPS.event_synchronize.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `cuEventDestroy`.
+    pub fn cu_event_destroy(&self, event: u64) -> u64 {
+        emit(TPS.event_destroy.0, |e| {
+            e.ptr(event);
+        });
+        let ok = self.state.lock().unwrap().events.remove(&event).is_some();
+        let result = if ok { cu_result::SUCCESS } else { cu_result::INVALID_VALUE };
+        emit(TPS.event_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{install_session, uninstall_session, SessionConfig};
+
+    fn cuda() -> Arc<CudaDriver> {
+        CudaDriver::new(crate::device::Node::new(NodeConfig {
+            gpu_count: 1,
+            tiles_per_gpu: 1,
+            backend: crate::device::Backend::Cuda,
+            ..NodeConfig::test_small()
+        }))
+    }
+
+    #[test]
+    fn end_to_end_matmul_via_cuda_api() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let cu = cuda();
+        cu.cu_init(0);
+        let (_, n) = cu.cu_device_get_count();
+        assert_eq!(n, 1);
+        let (_, dev) = cu.cu_device_get(0);
+        let (_, _ctx) = cu.cu_ctx_create(0, dev);
+
+        let (m, k, nn) = (256usize, 256usize, 256usize);
+        let (_, da) = cu.cu_mem_alloc((m * k * 4) as u64);
+        let (_, db) = cu.cu_mem_alloc((k * nn * 4) as u64);
+        let (_, dbias) = cu.cu_mem_alloc((nn * 4) as u64);
+        let (_, dout) = cu.cu_mem_alloc((m * nn * 4) as u64);
+        let (_, ha) = cu.cu_mem_alloc_host((m * k * 4) as u64);
+
+        let gpu = cu.node.gpu(0);
+        gpu.pool
+            .write(ha, &crate::runtime::executor::f32_to_bytes(&vec![0.01; m * k]))
+            .unwrap();
+        cu.cu_memcpy_htod(da, ha, (m * k * 4) as u64);
+        // b and bias stay zero -> out = gelu(0) = 0
+        let (r, module) = cu.cu_module_load_data("matmul");
+        assert_eq!(r, cu_result::SUCCESS);
+        let (_, f) = cu.cu_module_get_function(module, "matmul");
+        let r = cu.cu_launch_kernel(
+            f,
+            (4, 4, 4),
+            (8, 8, 1),
+            0,
+            cu.default_stream,
+            &[da, db, dbias, dout],
+        );
+        assert_eq!(r, cu_result::SUCCESS);
+        cu.cu_ctx_synchronize();
+
+        let out =
+            crate::runtime::executor::bytes_to_f32(&gpu.pool.read(dout, (m * nn * 4) as u64).unwrap());
+        assert!(out.iter().all(|&v| v.abs() < 1e-5), "zero matmul must be ~zero");
+
+        let (_, free, total) = cu.cu_mem_get_info();
+        assert!(free < total);
+        let session = uninstall_session().unwrap();
+        assert!(session.stats().written > 20);
+    }
+
+    #[test]
+    fn event_record_and_query_lifecycle() {
+        let _g = test_support::lock();
+        let cu = cuda();
+        cu.cu_init(0);
+        let (_, dev) = cu.cu_device_get(0);
+        cu.cu_ctx_create(0, dev);
+        let (_, ev) = cu.cu_event_create(0);
+        let (_, stream) = cu.cu_stream_create(0);
+        cu.cu_event_record(ev, stream);
+        let mut spins = 0;
+        while cu.cu_event_query(ev) != cu_result::SUCCESS {
+            spins += 1;
+            assert!(spins < 1_000_000);
+            std::thread::yield_now();
+        }
+        assert_eq!(cu.cu_event_synchronize(ev), cu_result::SUCCESS);
+        assert_eq!(cu.cu_stream_synchronize(stream), cu_result::SUCCESS);
+        assert_eq!(cu.cu_event_destroy(ev), cu_result::SUCCESS);
+        assert_eq!(cu.cu_stream_destroy(stream), cu_result::SUCCESS);
+    }
+
+    #[test]
+    fn async_copies_complete_at_stream_sync() {
+        let _g = test_support::lock();
+        let cu = cuda();
+        cu.cu_init(0);
+        let (_, dev) = cu.cu_device_get(0);
+        cu.cu_ctx_create(0, dev);
+        let (_, stream) = cu.cu_stream_create(0);
+        let (_, h) = cu.cu_mem_alloc_host(4096);
+        let (_, d) = cu.cu_mem_alloc(4096);
+        let gpu = cu.node.gpu(0);
+        gpu.pool.write(h, &[9u8; 4096]).unwrap();
+        cu.cu_memcpy_htod_async(d, h, 4096, stream);
+        cu.cu_stream_synchronize(stream);
+        assert_eq!(gpu.pool.read(d, 4096).unwrap(), vec![9u8; 4096]);
+    }
+}

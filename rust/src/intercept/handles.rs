@@ -1,0 +1,89 @@
+//! Handle allocation for the simulated runtimes.
+//!
+//! Real drivers hand out opaque pointers; we hand out tagged u64s so the
+//! traces remain readable (`0x0c00…` contexts, `0x5100…` queues, ...) and
+//! collisions across object kinds are impossible.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Handle kinds (the tag occupies the top 16 bits below the sign area).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandleKind {
+    /// Driver handles.
+    Driver,
+    /// Device handles.
+    Device,
+    /// Context handles.
+    Context,
+    /// Command queues / streams.
+    Queue,
+    /// Command lists.
+    List,
+    /// Event pools.
+    EventPool,
+    /// Events.
+    Event,
+    /// Modules / programs / fat binaries.
+    Module,
+    /// Kernels / functions.
+    Kernel,
+    /// Descriptor pseudo-pointers (traced `desc*` values).
+    Desc,
+    /// MPI requests.
+    Request,
+    /// OpenCL buffers.
+    Buffer,
+}
+
+impl HandleKind {
+    fn base(&self) -> u64 {
+        match self {
+            HandleKind::Driver => 0x0d00_0000_0000,
+            HandleKind::Device => 0x0de0_0000_0000,
+            HandleKind::Context => 0x0c00_0000_0000,
+            HandleKind::Queue => 0x5100_0000_0000,
+            HandleKind::List => 0x1150_0000_0000,
+            HandleKind::EventPool => 0xe900_0000_0000,
+            HandleKind::Event => 0xe000_0000_0000,
+            HandleKind::Module => 0x3300_0000_0000,
+            HandleKind::Kernel => 0x6e00_0000_0000,
+            HandleKind::Desc => 0x7ffe_0000_0000,
+            HandleKind::Request => 0x4e00_0000_0000,
+            HandleKind::Buffer => 0xbf00_0000_0000,
+        }
+    }
+}
+
+/// Process-wide handle allocator.
+#[derive(Debug, Default)]
+pub struct HandleAllocator {
+    next: AtomicU64,
+}
+
+impl HandleAllocator {
+    /// Create an allocator.
+    pub fn new() -> Self {
+        Self { next: AtomicU64::new(0x10) }
+    }
+
+    /// Allocate a fresh handle of `kind`.
+    pub fn alloc(&self, kind: HandleKind) -> u64 {
+        kind.base() + self.next.fetch_add(0x10, Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_unique_and_tagged() {
+        let h = HandleAllocator::new();
+        let a = h.alloc(HandleKind::Queue);
+        let b = h.alloc(HandleKind::Queue);
+        let c = h.alloc(HandleKind::Event);
+        assert_ne!(a, b);
+        assert_eq!(a >> 40, 0x51);
+        assert_eq!(c >> 40, 0xe0);
+    }
+}

@@ -1,0 +1,575 @@
+//! HIP frontend implemented **on top of Level-Zero** — the HIPLZ stack of
+//! the paper's §4.3 case study.
+//!
+//! Every `hip*` call is traced, and its implementation calls the *traced*
+//! `ze*` frontend, so the trace shows the layering the paper analyzes:
+//! `hipDeviceSynchronize` spinning on `zeEventHostSynchronize` (the
+//! 9.9-million-call row), `hipMemcpy` decomposing into command-list
+//! reset/append/close/execute, `hipModuleLoad` → `zeModuleCreate` (real
+//! PJRT compile milliseconds), `hipUnregisterFatBinary` tearing down the
+//! module state.
+
+use super::declare_tps;
+use super::handles::{HandleAllocator, HandleKind};
+use super::ze::{ze_result, ZeDriver};
+use crate::model::Api;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// `hipError_t` values.
+pub mod hip_error {
+    /// Success.
+    pub const SUCCESS: u64 = 0;
+    /// Invalid value.
+    pub const INVALID_VALUE: u64 = 1;
+    /// Out of memory.
+    pub const OUT_OF_MEMORY: u64 = 2;
+    /// Not ready.
+    pub const NOT_READY: u64 = 600;
+}
+
+/// `hipMemcpyKind` values.
+pub mod memcpy_kind {
+    /// Host → host.
+    pub const H2H: u64 = 0;
+    /// Host → device.
+    pub const H2D: u64 = 1;
+    /// Device → host.
+    pub const D2H: u64 = 2;
+    /// Device → device.
+    pub const D2D: u64 = 3;
+}
+
+declare_tps!(pub(crate) HipTps, Api::Hip, {
+    init: "hipInit",
+    get_device_count: "hipGetDeviceCount",
+    set_device: "hipSetDevice",
+    device_synchronize: "hipDeviceSynchronize",
+    malloc: "hipMalloc",
+    free: "hipFree",
+    memcpy: "hipMemcpy",
+    module_load: "hipModuleLoad",
+    module_get_function: "hipModuleGetFunction",
+    module_unload: "hipModuleUnload",
+    launch_kernel: "hipLaunchKernel",
+    stream_create: "hipStreamCreate",
+    stream_synchronize: "hipStreamSynchronize",
+    stream_destroy: "hipStreamDestroy",
+    register_fat_binary: "hipRegisterFatBinary",
+    unregister_fat_binary: "hipUnregisterFatBinary",
+});
+
+static TPS: Lazy<HipTps> = Lazy::new(HipTps::load);
+
+/// Per-device Level-Zero state HIPLZ keeps (context, queue, reusable
+/// command list, pool + completion event).
+struct DeviceState {
+    ze_device: u64,
+    queue: u64,
+    list: u64,
+    event: u64,
+}
+
+#[derive(Default)]
+struct HipState {
+    current: u32,
+    ctx: u64,
+    devices: Vec<DeviceState>,
+    modules: HashMap<u64, u64>,   // hip module -> ze module
+    functions: HashMap<u64, u64>, // hip function -> ze kernel
+    fat_binaries: HashMap<u64, Vec<u64>>,
+    streams: HashMap<u64, u32>,   // stream -> device index
+    pending: Vec<u64>,            // ze events not yet synchronized
+}
+
+/// The HIPLZ runtime.
+pub struct HipRuntime {
+    /// The Level-Zero backend this HIP runs on.
+    pub ze: Arc<ZeDriver>,
+    handles: HandleAllocator,
+    state: Mutex<HipState>,
+    /// Spin-wait timeout per `zeEventHostSynchronize` call (ns). Small
+    /// values reproduce the paper's huge call counts; tests raise it.
+    pub spin_timeout_ns: u64,
+}
+
+impl HipRuntime {
+    /// Create the HIP runtime over a ZE driver.
+    pub fn new(ze: Arc<ZeDriver>) -> Arc<Self> {
+        Arc::new(HipRuntime {
+            ze,
+            handles: HandleAllocator::new(),
+            state: Mutex::new(HipState::default()),
+            spin_timeout_ns: 20_000,
+        })
+    }
+
+    /// `hipInit` — initializes Level-Zero underneath (traced layering).
+    pub fn hip_init(&self, flags: u32) -> u64 {
+        emit(TPS.init.0, |e| {
+            e.u64(flags as u64);
+        });
+        self.ze.ze_init(0);
+        let mut drivers = vec![];
+        self.ze.ze_driver_get(&mut drivers);
+        let mut devices = vec![];
+        self.ze.ze_device_get(drivers[0], &mut devices);
+        let (_, ctx) = self.ze.ze_context_create(drivers[0]);
+        let mut st = self.state.lock().unwrap();
+        st.ctx = ctx;
+        for d in devices {
+            let (_, queue) = self.ze.ze_command_queue_create(ctx, d, 0);
+            let (_, list) = self.ze.ze_command_list_create(ctx, d);
+            let (_, pool) = self.ze.ze_event_pool_create(ctx, 16);
+            let (_, event) = self.ze.ze_event_create(pool);
+            st.devices.push(DeviceState { ze_device: d, queue, list, event });
+        }
+        drop(st);
+        emit(TPS.init.1, |e| {
+            e.u64(hip_error::SUCCESS);
+        });
+        hip_error::SUCCESS
+    }
+
+    /// `hipGetDeviceCount`.
+    pub fn hip_get_device_count(&self) -> (u64, i32) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.get_device_count.0, |e| {
+            e.ptr(p);
+        });
+        let n = self.state.lock().unwrap().devices.len() as i32;
+        emit(TPS.get_device_count.1, |e| {
+            e.u64(hip_error::SUCCESS).i64(n as i64);
+        });
+        (hip_error::SUCCESS, n)
+    }
+
+    /// `hipSetDevice`.
+    pub fn hip_set_device(&self, device: i32) -> u64 {
+        emit(TPS.set_device.0, |e| {
+            e.i64(device as i64);
+        });
+        let mut st = self.state.lock().unwrap();
+        let result = if (device as usize) < st.devices.len() {
+            st.current = device as u32;
+            hip_error::SUCCESS
+        } else {
+            hip_error::INVALID_VALUE
+        };
+        drop(st);
+        emit(TPS.set_device.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `hipMalloc` → `zeMemAllocDevice`.
+    pub fn hip_malloc(&self, size: u64) -> (u64, u64) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.malloc.0, |e| {
+            e.ptr(p).u64(size);
+        });
+        let (ctx, dev) = {
+            let st = self.state.lock().unwrap();
+            (st.ctx, st.devices[st.current as usize].ze_device)
+        };
+        let (zr, ptr) = self.ze.ze_mem_alloc_device(ctx, size, 64, dev);
+        let result = if zr == ze_result::SUCCESS {
+            hip_error::SUCCESS
+        } else {
+            hip_error::OUT_OF_MEMORY
+        };
+        emit(TPS.malloc.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `hipFree` → `zeMemFree`.
+    pub fn hip_free(&self, ptr: u64) -> u64 {
+        emit(TPS.free.0, |e| {
+            e.ptr(ptr);
+        });
+        let ctx = self.state.lock().unwrap().ctx;
+        let zr = self.ze.ze_mem_free(ctx, ptr);
+        let result = if zr == ze_result::SUCCESS {
+            hip_error::SUCCESS
+        } else {
+            hip_error::INVALID_VALUE
+        };
+        emit(TPS.free.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// Spin on `zeEventHostSynchronize` until success — the HIPLZ pattern
+    /// (paper §4.3: hipDeviceSynchronize implemented on a spin lock).
+    fn spin_event(&self, event: u64) {
+        loop {
+            if self.ze.ze_event_host_synchronize(event, self.spin_timeout_ns)
+                == ze_result::SUCCESS
+            {
+                return;
+            }
+        }
+    }
+
+    /// `hipMemcpy` (synchronous) → ZE list reset/append/close/execute +
+    /// event spin.
+    pub fn hip_memcpy(&self, dst: u64, src: u64, size: u64, kind: u64) -> u64 {
+        emit(TPS.memcpy.0, |e| {
+            e.ptr(dst).ptr(src).u64(size).u64(kind);
+        });
+        let (queue, list, event) = {
+            let st = self.state.lock().unwrap();
+            let d = &st.devices[st.current as usize];
+            (d.queue, d.list, d.event)
+        };
+        self.ze.ze_command_list_reset(list);
+        self.ze.ze_event_host_reset(event);
+        self.ze.ze_command_list_append_memory_copy(list, dst, src, size, event);
+        self.ze.ze_command_list_close(list);
+        self.ze.ze_command_queue_execute_command_lists(queue, &[list]);
+        self.spin_event(event);
+        self.ze.ze_command_queue_synchronize(queue, u64::MAX);
+        emit(TPS.memcpy.1, |e| {
+            e.u64(hip_error::SUCCESS);
+        });
+        hip_error::SUCCESS
+    }
+
+    /// `hipModuleLoad` → `zeModuleCreate` (real compile cost).
+    pub fn hip_module_load(&self, fname: &str) -> (u64, u64) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.module_load.0, |e| {
+            e.ptr(p).str(fname);
+        });
+        let (ctx, dev) = {
+            let st = self.state.lock().unwrap();
+            (st.ctx, st.devices[st.current as usize].ze_device)
+        };
+        let (zr, ze_module) = self.ze.ze_module_create(ctx, dev, fname);
+        let (result, module) = if zr == ze_result::SUCCESS {
+            let m = self.handles.alloc(HandleKind::Module);
+            self.state.lock().unwrap().modules.insert(m, ze_module);
+            (hip_error::SUCCESS, m)
+        } else {
+            (hip_error::INVALID_VALUE, 0)
+        };
+        emit(TPS.module_load.1, |e| {
+            e.u64(result).ptr(module);
+        });
+        (result, module)
+    }
+
+    /// `hipModuleGetFunction` → `zeKernelCreate`.
+    pub fn hip_module_get_function(&self, module: u64, kname: &str) -> (u64, u64) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.module_get_function.0, |e| {
+            e.ptr(p).ptr(module).str(kname);
+        });
+        let ze_module = self.state.lock().unwrap().modules.get(&module).copied();
+        let (result, f) = match ze_module {
+            Some(zm) => {
+                let (zr, zk) = self.ze.ze_kernel_create(zm, kname);
+                if zr == ze_result::SUCCESS {
+                    let f = self.handles.alloc(HandleKind::Kernel);
+                    self.state.lock().unwrap().functions.insert(f, zk);
+                    (hip_error::SUCCESS, f)
+                } else {
+                    (hip_error::INVALID_VALUE, 0)
+                }
+            }
+            None => (hip_error::INVALID_VALUE, 0),
+        };
+        emit(TPS.module_get_function.1, |e| {
+            e.u64(result).ptr(f);
+        });
+        (result, f)
+    }
+
+    /// `hipModuleUnload` → `zeModuleDestroy`.
+    pub fn hip_module_unload(&self, module: u64) -> u64 {
+        emit(TPS.module_unload.0, |e| {
+            e.ptr(module);
+        });
+        let ze_module = self.state.lock().unwrap().modules.remove(&module);
+        let result = match ze_module {
+            Some(zm) => {
+                self.ze.ze_module_destroy(zm);
+                hip_error::SUCCESS
+            }
+            None => hip_error::INVALID_VALUE,
+        };
+        emit(TPS.module_unload.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// Set kernel args then `hipLaunchKernel` → ZE set-args + append +
+    /// execute (asynchronous; completion observed at a later sync).
+    pub fn hip_launch_kernel(
+        &self,
+        f: u64,
+        grid: (u32, u32, u32),
+        block: (u32, u32, u32),
+        shared_mem: u32,
+        stream: u64,
+        params: &[u64],
+    ) -> u64 {
+        emit(TPS.launch_kernel.0, |e| {
+            e.ptr(f)
+                .u64(grid.0 as u64)
+                .u64(grid.1 as u64)
+                .u64(grid.2 as u64)
+                .u64(block.0 as u64)
+                .u64(block.1 as u64)
+                .u64(block.2 as u64)
+                .u64(shared_mem as u64)
+                .ptr(stream);
+        });
+        let (zk, queue, list, event) = {
+            let st = self.state.lock().unwrap();
+            let d = &st.devices[st.current as usize];
+            match st.functions.get(&f) {
+                Some(zk) => (*zk, d.queue, d.list, d.event),
+                None => {
+                    drop(st);
+                    emit(TPS.launch_kernel.1, |e| {
+                        e.u64(hip_error::INVALID_VALUE);
+                    });
+                    return hip_error::INVALID_VALUE;
+                }
+            }
+        };
+        for (i, p) in params.iter().enumerate() {
+            self.ze.ze_kernel_set_argument_value(zk, i as u32, *p);
+        }
+        self.ze.ze_kernel_set_group_size(zk, block.0, block.1, block.2);
+        self.ze.ze_command_list_reset(list);
+        self.ze.ze_event_host_reset(event);
+        self.ze.ze_command_list_append_launch_kernel(list, zk, grid, event);
+        self.ze.ze_command_list_close(list);
+        self.ze.ze_command_queue_execute_command_lists(queue, &[list]);
+        self.state.lock().unwrap().pending.push(event);
+        emit(TPS.launch_kernel.1, |e| {
+            e.u64(hip_error::SUCCESS);
+        });
+        hip_error::SUCCESS
+    }
+
+    /// `hipDeviceSynchronize` — spins on `zeEventHostSynchronize` for every
+    /// pending event then drains the queue (the §4.3 hot row).
+    pub fn hip_device_synchronize(&self) -> u64 {
+        emit(TPS.device_synchronize.0, |_e| {});
+        let (pending, queue) = {
+            let mut st = self.state.lock().unwrap();
+            let d = &st.devices[st.current as usize];
+            let q = d.queue;
+            (std::mem::take(&mut st.pending), q)
+        };
+        for ev in pending {
+            self.spin_event(ev);
+        }
+        self.ze.ze_command_queue_synchronize(queue, u64::MAX);
+        emit(TPS.device_synchronize.1, |e| {
+            e.u64(hip_error::SUCCESS);
+        });
+        hip_error::SUCCESS
+    }
+
+    /// `hipStreamCreate` (streams share the device queue in HIPLZ-style).
+    pub fn hip_stream_create(&self) -> (u64, u64) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.stream_create.0, |e| {
+            e.ptr(p);
+        });
+        let stream = self.handles.alloc(HandleKind::Queue);
+        let cur = self.state.lock().unwrap().current;
+        self.state.lock().unwrap().streams.insert(stream, cur);
+        emit(TPS.stream_create.1, |e| {
+            e.u64(hip_error::SUCCESS).ptr(stream);
+        });
+        (hip_error::SUCCESS, stream)
+    }
+
+    /// `hipStreamSynchronize` — same spin pattern as device sync.
+    pub fn hip_stream_synchronize(&self, stream: u64) -> u64 {
+        emit(TPS.stream_synchronize.0, |e| {
+            e.ptr(stream);
+        });
+        let known = self.state.lock().unwrap().streams.contains_key(&stream);
+        let result = if known {
+            let (pending, queue) = {
+                let mut st = self.state.lock().unwrap();
+                let d = &st.devices[st.current as usize];
+                let q = d.queue;
+                (std::mem::take(&mut st.pending), q)
+            };
+            for ev in pending {
+                self.spin_event(ev);
+            }
+            self.ze.ze_command_queue_synchronize(queue, u64::MAX);
+            hip_error::SUCCESS
+        } else {
+            hip_error::INVALID_VALUE
+        };
+        emit(TPS.stream_synchronize.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `hipStreamDestroy`.
+    pub fn hip_stream_destroy(&self, stream: u64) -> u64 {
+        emit(TPS.stream_destroy.0, |e| {
+            e.ptr(stream);
+        });
+        let ok = self.state.lock().unwrap().streams.remove(&stream).is_some();
+        let result = if ok { hip_error::SUCCESS } else { hip_error::INVALID_VALUE };
+        emit(TPS.stream_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `hipRegisterFatBinary` — eagerly builds every module in the binary
+    /// (one per kernel name), like HIPLZ does at program start.
+    pub fn hip_register_fat_binary(&self, kernels: &[&str]) -> (u64, u64) {
+        let data = self.handles.alloc(HandleKind::Desc);
+        let ph = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.register_fat_binary.0, |e| {
+            e.ptr(data).ptr(ph);
+        });
+        let handle = self.handles.alloc(HandleKind::Module);
+        let mut modules = Vec::new();
+        let (ctx, dev) = {
+            let st = self.state.lock().unwrap();
+            (st.ctx, st.devices[st.current as usize].ze_device)
+        };
+        for k in kernels {
+            let (zr, zm) = self.ze.ze_module_create(ctx, dev, k);
+            if zr == ze_result::SUCCESS {
+                modules.push(zm);
+            }
+        }
+        self.state.lock().unwrap().fat_binaries.insert(handle, modules);
+        emit(TPS.register_fat_binary.1, |e| {
+            e.u64(hip_error::SUCCESS).ptr(handle);
+        });
+        (hip_error::SUCCESS, handle)
+    }
+
+    /// `hipUnregisterFatBinary` — tears every module down (the 500 ms row
+    /// in the §4.3 tally is this teardown; ours costs what module
+    /// destruction really costs).
+    pub fn hip_unregister_fat_binary(&self, handle: u64) -> u64 {
+        emit(TPS.unregister_fat_binary.0, |e| {
+            e.ptr(handle);
+        });
+        let modules = self.state.lock().unwrap().fat_binaries.remove(&handle);
+        let result = match modules {
+            Some(ms) => {
+                for m in ms {
+                    self.ze.ze_module_destroy(m);
+                }
+                hip_error::SUCCESS
+            }
+            None => hip_error::INVALID_VALUE,
+        };
+        emit(TPS.unregister_fat_binary.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Node, NodeConfig};
+    use crate::tracer::session::test_support;
+    use crate::tracer::{install_session, uninstall_session, SessionConfig};
+
+    fn hip() -> Arc<HipRuntime> {
+        let node = Node::new(NodeConfig::test_small());
+        HipRuntime::new(ZeDriver::new(node))
+    }
+
+    #[test]
+    fn hip_layers_on_ze_lrn_end_to_end() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let hip = hip();
+        hip.hip_init(0);
+        let (_, n) = hip.hip_get_device_count();
+        assert_eq!(n, 1);
+        hip.hip_set_device(0);
+
+        // LRN: x (32,64,256) f32 -> same shape
+        let elems = 32 * 64 * 256usize;
+        let bytes = (elems * 4) as u64;
+        let (_, dx) = hip.hip_malloc(bytes);
+        let (_, dout) = hip.hip_malloc(bytes);
+        let (_, hsrc) = hip.hip_malloc(16); // small scratch (device) — host data goes via pool
+        let _ = hsrc;
+        let gpu = hip.ze.node.gpu(0);
+        // write input directly into device memory then memcpy device->device
+        // to exercise the traced path
+        let host = gpu.pool.alloc(crate::device::AllocKind::Host, bytes).unwrap();
+        gpu.pool
+            .write(host, &crate::runtime::executor::f32_to_bytes(&vec![0.5; elems]))
+            .unwrap();
+        hip.hip_memcpy(dx, host, bytes, memcpy_kind::H2D);
+
+        let (_, module) = hip.hip_module_load("lrn");
+        let (_, f) = hip.hip_module_get_function(module, "lrn");
+        assert_eq!(
+            hip.hip_launch_kernel(f, (32, 1, 1), (64, 1, 1), 0, 0, &[dx, dout]),
+            hip_error::SUCCESS
+        );
+        hip.hip_device_synchronize();
+        hip.hip_memcpy(host, dout, bytes, memcpy_kind::D2H);
+        let out = crate::runtime::executor::bytes_to_f32(&gpu.pool.read(host, bytes).unwrap());
+        // LRN of constant 0.5: out = 0.5 / (1 + alpha/n * n*0.25)^0.75 ≈ 0.5
+        assert!(out.iter().all(|&v| (v - 0.4999).abs() < 0.01), "lrn numerics: {}", out[0]);
+
+        let session = uninstall_session().unwrap();
+        let trace = crate::tracer::btf::collect(&session, &[]);
+        // layering: both hip and ze events must be present
+        let md = crate::tracer::btf::parse_metadata(&trace.metadata).unwrap();
+        let mut hip_events = 0u64;
+        let mut ze_events = 0u64;
+        for s in &trace.streams {
+            crate::tracer::btf::iter_records(&s.bytes, |id, _, _| {
+                let name = &md.classes[&id].name;
+                if name.starts_with("lttng_ust_hip") {
+                    hip_events += 1;
+                }
+                if name.starts_with("lttng_ust_ze") {
+                    ze_events += 1;
+                }
+            });
+        }
+        assert!(hip_events > 10, "hip events: {hip_events}");
+        assert!(
+            ze_events > hip_events,
+            "layering must produce more ze events ({ze_events}) than hip ({hip_events})"
+        );
+    }
+
+    #[test]
+    fn fat_binary_register_unregister() {
+        let _g = test_support::lock();
+        let hip = hip();
+        hip.hip_init(0);
+        let (r, handle) = hip.hip_register_fat_binary(&["saxpy", "lrn"]);
+        assert_eq!(r, hip_error::SUCCESS);
+        assert_eq!(hip.hip_unregister_fat_binary(handle), hip_error::SUCCESS);
+        assert_eq!(hip.hip_unregister_fat_binary(handle), hip_error::INVALID_VALUE);
+    }
+}

@@ -1,0 +1,56 @@
+//! Interception frontends: the traced programming-model runtimes.
+//!
+//! In THAPI these are `LD_PRELOAD` interception libraries generated from
+//! the API model; here each frontend is a Rust runtime that *implements*
+//! its programming model over the simulated node, with every API function
+//! wrapped in generated-descriptor tracepoints: an `_entry` event carrying
+//! the full argument list (pointers, sizes, handles, values behind
+//! pointers) and an `_exit` event carrying the result and out-pointer
+//! values — the paper's core "complete call context" claim.
+//!
+//! Layering is real: the [`hip`] frontend (HIPLZ, §4.3) and the [`omp`]
+//! frontend (§4.1) are implemented **on top of** [`ze`], so a traced
+//! `hipMemcpy` produces the nested `ze*` events the paper's case studies
+//! analyze.
+//!
+//! The debug-mode [`Encoder`](crate::tracer::Encoder) asserts every
+//! wrapper's fields against the generated trace model, so wrappers cannot
+//! drift from the model (the same guarantee THAPI gets by generating the
+//! wrapper code itself).
+
+pub mod cuda;
+pub mod handles;
+pub mod hip;
+pub mod mpi;
+pub mod omp;
+pub mod opencl;
+pub mod profiling;
+pub mod ze;
+
+pub use handles::HandleAllocator;
+
+use crate::model::EventClass;
+
+/// (entry, exit) event-class pair for one API function.
+pub type TpPair = (&'static EventClass, &'static EventClass);
+
+/// Declare a lazily-resolved tracepoint table for a frontend.
+///
+/// ```ignore
+/// declare_tps!(pub(crate) ZeTps, Api::Ze, { init: "zeInit", ... });
+/// static TPS: Lazy<ZeTps> = Lazy::new(ZeTps::load);
+/// ```
+macro_rules! declare_tps {
+    ($vis:vis $name:ident, $api:expr, { $($field:ident: $fname:literal),+ $(,)? }) => {
+        $vis struct $name {
+            $(pub $field: crate::intercept::TpPair,)+
+        }
+        impl $name {
+            pub(crate) fn load() -> Self {
+                let r = crate::model::registry();
+                Self { $($field: r.tp($api, $fname),)+ }
+            }
+        }
+    };
+}
+pub(crate) use declare_tps;

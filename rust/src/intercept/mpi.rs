@@ -1,0 +1,554 @@
+//! MPI frontend: a traced in-process MPI substrate.
+//!
+//! Ranks are threads (see [`MpiWorld::run`]); point-to-point messages move
+//! through per-pair mailboxes, collectives are implemented over them. The
+//! SPEChpc-like workloads (MPI + OpenMP offload, paper §5.1) run on this.
+//! Every call is traced with buffer addresses, counts, datatypes, peers
+//! and tags.
+
+use super::declare_tps;
+use super::handles::{HandleAllocator, HandleKind};
+use crate::model::Api;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+/// MPI result codes.
+pub mod mpi_result {
+    /// MPI_SUCCESS.
+    pub const SUCCESS: u64 = 0;
+    /// MPI_ERR_OTHER.
+    pub const ERR_OTHER: u64 = 1;
+}
+
+/// MPI datatypes (sizes in bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datatype {
+    /// MPI_BYTE.
+    Byte,
+    /// MPI_INT.
+    Int,
+    /// MPI_FLOAT.
+    Float,
+    /// MPI_DOUBLE.
+    Double,
+}
+
+impl Datatype {
+    /// Wire code (matches the bundled header enum).
+    pub fn code(&self) -> u64 {
+        match self {
+            Datatype::Byte => 0,
+            Datatype::Int => 1,
+            Datatype::Float => 2,
+            Datatype::Double => 3,
+        }
+    }
+
+    /// Element size.
+    pub fn size(&self) -> usize {
+        match self {
+            Datatype::Byte => 1,
+            Datatype::Int | Datatype::Float => 4,
+            Datatype::Double => 8,
+        }
+    }
+}
+
+/// Reduction ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// MPI_SUM.
+    Sum,
+    /// MPI_MAX.
+    Max,
+    /// MPI_MIN.
+    Min,
+}
+
+impl Op {
+    /// Wire code.
+    pub fn code(&self) -> u64 {
+        match self {
+            Op::Sum => 0,
+            Op::Max => 1,
+            Op::Min => 2,
+        }
+    }
+}
+
+declare_tps!(pub(crate) MpiTps, Api::Mpi, {
+    init: "MPI_Init",
+    finalize: "MPI_Finalize",
+    comm_size: "MPI_Comm_size",
+    comm_rank: "MPI_Comm_rank",
+    send: "MPI_Send",
+    recv: "MPI_Recv",
+    isend: "MPI_Isend",
+    irecv: "MPI_Irecv",
+    wait: "MPI_Wait",
+    test: "MPI_Test",
+    allreduce: "MPI_Allreduce",
+    barrier: "MPI_Barrier",
+});
+
+static TPS: Lazy<MpiTps> = Lazy::new(MpiTps::load);
+
+/// MPI_COMM_WORLD handle value (traced).
+pub const COMM_WORLD: u64 = 0x4400_0000;
+
+struct Mailbox {
+    queues: Mutex<HashMap<(u32, u32, i32), VecDeque<Vec<u8>>>>, // (src,dst,tag)
+    cond: Condvar,
+}
+
+struct Shared {
+    size: u32,
+    mailbox: Mailbox,
+    barrier: Barrier,
+    // allreduce rendezvous state
+    reduce: Mutex<ReduceState>,
+    reduce_cond: Condvar,
+}
+
+#[derive(Default)]
+struct ReduceState {
+    round: u64,
+    contributions: Vec<Vec<f64>>,
+    result: Vec<f64>,
+    done_count: u32,
+}
+
+/// The world shared by all ranks.
+pub struct MpiWorld {
+    shared: Arc<Shared>,
+}
+
+impl MpiWorld {
+    /// Create a world of `size` ranks.
+    pub fn new(size: u32) -> Arc<Self> {
+        Arc::new(MpiWorld {
+            shared: Arc::new(Shared {
+                size,
+                mailbox: Mailbox { queues: Mutex::new(HashMap::new()), cond: Condvar::new() },
+                barrier: Barrier::new(size as usize),
+                reduce: Mutex::new(ReduceState::default()),
+                reduce_cond: Condvar::new(),
+            }),
+        })
+    }
+
+    /// Run `f(rank_comm)` on `size` threads, one per rank. Each thread's
+    /// tracer rank is set so traces are per-rank attributable (§3.2
+    /// rank-selective tracing). Panics in any rank propagate.
+    pub fn run<F>(self: &Arc<Self>, f: F)
+    where
+        F: Fn(MpiComm) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let mut handles = Vec::new();
+        for rank in 0..self.shared.size {
+            let shared = self.shared.clone();
+            let f = f.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mpi-rank-{rank}"))
+                    .spawn(move || {
+                        crate::tracer::set_thread_rank(rank);
+                        f(MpiComm { rank, shared, handles: HandleAllocator::new(), requests: Mutex::new(HashMap::new()) });
+                        crate::tracer::set_thread_rank(0);
+                    })
+                    .expect("spawn rank"),
+            );
+        }
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+enum PendingRequest {
+    /// Isend already delivered (buffered send): wait is a no-op.
+    SendDone,
+    /// Irecv: receive happens at wait time.
+    Recv { src: u32, tag: i32, dst_ptr: usize, max_len: usize },
+}
+
+/// One rank's communicator endpoint.
+pub struct MpiComm {
+    rank: u32,
+    shared: Arc<Shared>,
+    handles: HandleAllocator,
+    requests: Mutex<HashMap<u64, PendingRequest>>,
+}
+
+impl MpiComm {
+    /// This rank.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// World size.
+    pub fn size(&self) -> u32 {
+        self.shared.size
+    }
+
+    /// `MPI_Init`.
+    pub fn mpi_init(&self) -> u64 {
+        emit(TPS.init.0, |_e| {});
+        emit(TPS.init.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+
+    /// `MPI_Finalize`.
+    pub fn mpi_finalize(&self) -> u64 {
+        emit(TPS.finalize.0, |_e| {});
+        emit(TPS.finalize.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+
+    /// `MPI_Comm_size`.
+    pub fn mpi_comm_size(&self) -> (u64, i32) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.comm_size.0, |e| {
+            e.ptr(COMM_WORLD).ptr(p);
+        });
+        let n = self.shared.size as i32;
+        emit(TPS.comm_size.1, |e| {
+            e.u64(mpi_result::SUCCESS).i64(n as i64);
+        });
+        (mpi_result::SUCCESS, n)
+    }
+
+    /// `MPI_Comm_rank`.
+    pub fn mpi_comm_rank(&self) -> (u64, i32) {
+        let p = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.comm_rank.0, |e| {
+            e.ptr(COMM_WORLD).ptr(p);
+        });
+        let r = self.rank as i32;
+        emit(TPS.comm_rank.1, |e| {
+            e.u64(mpi_result::SUCCESS).i64(r as i64);
+        });
+        (mpi_result::SUCCESS, r)
+    }
+
+    fn deliver(&self, dst: u32, tag: i32, data: Vec<u8>) {
+        let mut q = self.shared.mailbox.queues.lock().unwrap();
+        q.entry((self.rank, dst, tag)).or_default().push_back(data);
+        self.shared.mailbox.cond.notify_all();
+    }
+
+    fn receive(&self, src: u32, tag: i32) -> Vec<u8> {
+        let mut q = self.shared.mailbox.queues.lock().unwrap();
+        loop {
+            if let Some(dq) = q.get_mut(&(src, self.rank, tag)) {
+                if let Some(msg) = dq.pop_front() {
+                    return msg;
+                }
+            }
+            q = self.shared.mailbox.cond.wait(q).unwrap();
+        }
+    }
+
+    /// `MPI_Send` (buffered, non-blocking delivery).
+    pub fn mpi_send(&self, buf: &[u8], datatype: Datatype, dest: u32, tag: i32) -> u64 {
+        let count = (buf.len() / datatype.size()) as i64;
+        emit(TPS.send.0, |e| {
+            e.ptr(buf.as_ptr() as u64)
+                .i64(count)
+                .u64(datatype.code())
+                .i64(dest as i64)
+                .i64(tag as i64)
+                .ptr(COMM_WORLD);
+        });
+        self.deliver(dest, tag, buf.to_vec());
+        emit(TPS.send.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+
+    /// `MPI_Recv` (blocking).
+    pub fn mpi_recv(&self, buf: &mut [u8], datatype: Datatype, source: u32, tag: i32) -> u64 {
+        let count = (buf.len() / datatype.size()) as i64;
+        emit(TPS.recv.0, |e| {
+            e.ptr(buf.as_ptr() as u64)
+                .i64(count)
+                .u64(datatype.code())
+                .i64(source as i64)
+                .i64(tag as i64)
+                .ptr(COMM_WORLD);
+        });
+        let msg = self.receive(source, tag);
+        let n = msg.len().min(buf.len());
+        buf[..n].copy_from_slice(&msg[..n]);
+        emit(TPS.recv.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+
+    /// `MPI_Isend` (buffered — completes immediately; request for Wait).
+    pub fn mpi_isend(&self, buf: &[u8], datatype: Datatype, dest: u32, tag: i32) -> (u64, u64) {
+        let count = (buf.len() / datatype.size()) as i64;
+        let preq = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.isend.0, |e| {
+            e.ptr(buf.as_ptr() as u64)
+                .i64(count)
+                .u64(datatype.code())
+                .i64(dest as i64)
+                .i64(tag as i64)
+                .ptr(COMM_WORLD)
+                .ptr(preq);
+        });
+        self.deliver(dest, tag, buf.to_vec());
+        let req = self.handles.alloc(HandleKind::Request);
+        self.requests.lock().unwrap().insert(req, PendingRequest::SendDone);
+        emit(TPS.isend.1, |e| {
+            e.u64(mpi_result::SUCCESS).ptr(req);
+        });
+        (mpi_result::SUCCESS, req)
+    }
+
+    /// `MPI_Irecv` — the receive is performed at `MPI_Wait`.
+    pub fn mpi_irecv(
+        &self,
+        buf: &mut [u8],
+        datatype: Datatype,
+        source: u32,
+        tag: i32,
+    ) -> (u64, u64) {
+        let count = (buf.len() / datatype.size()) as i64;
+        let preq = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.irecv.0, |e| {
+            e.ptr(buf.as_ptr() as u64)
+                .i64(count)
+                .u64(datatype.code())
+                .i64(source as i64)
+                .i64(tag as i64)
+                .ptr(COMM_WORLD)
+                .ptr(preq);
+        });
+        let req = self.handles.alloc(HandleKind::Request);
+        self.requests.lock().unwrap().insert(
+            req,
+            PendingRequest::Recv {
+                src: source,
+                tag,
+                dst_ptr: buf.as_mut_ptr() as usize,
+                max_len: buf.len(),
+            },
+        );
+        emit(TPS.irecv.1, |e| {
+            e.u64(mpi_result::SUCCESS).ptr(req);
+        });
+        (mpi_result::SUCCESS, req)
+    }
+
+    /// `MPI_Wait`.
+    ///
+    /// # Safety contract
+    /// The buffer passed to the matching `mpi_irecv` must outlive the wait
+    /// (guaranteed by the workloads, which keep buffers alive across the
+    /// exchange; real MPI has the same requirement).
+    pub fn mpi_wait(&self, request: u64) -> u64 {
+        let preq = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.wait.0, |e| {
+            e.ptr(preq);
+        });
+        let pending = self.requests.lock().unwrap().remove(&request);
+        let result = match pending {
+            Some(PendingRequest::SendDone) => mpi_result::SUCCESS,
+            Some(PendingRequest::Recv { src, tag, dst_ptr, max_len }) => {
+                let msg = self.receive(src, tag);
+                let n = msg.len().min(max_len);
+                // SAFETY: see doc comment — the irecv buffer is alive.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(msg.as_ptr(), dst_ptr as *mut u8, n);
+                }
+                mpi_result::SUCCESS
+            }
+            None => mpi_result::ERR_OTHER,
+        };
+        emit(TPS.wait.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `MPI_Test` (polling class — excluded from default tracing mode).
+    pub fn mpi_test(&self, request: u64) -> (u64, bool) {
+        let preq = self.handles.alloc(HandleKind::Desc);
+        let pflag = self.handles.alloc(HandleKind::Desc);
+        emit(TPS.test.0, |e| {
+            e.ptr(preq).ptr(pflag);
+        });
+        let reqs = self.requests.lock().unwrap();
+        let flag = match reqs.get(&request) {
+            Some(PendingRequest::SendDone) => true,
+            Some(PendingRequest::Recv { src, tag, .. }) => {
+                let q = self.shared.mailbox.queues.lock().unwrap();
+                q.get(&(*src, self.rank, *tag)).map(|d| !d.is_empty()).unwrap_or(false)
+            }
+            None => true,
+        };
+        drop(reqs);
+        emit(TPS.test.1, |e| {
+            e.u64(mpi_result::SUCCESS).i64(flag as i64);
+        });
+        (mpi_result::SUCCESS, flag)
+    }
+
+    /// `MPI_Allreduce` over f64 values (workloads reduce scalars/vectors of
+    /// f64; other dtypes convert at the call site).
+    pub fn mpi_allreduce(&self, send: &[f64], recv: &mut [f64], op: Op) -> u64 {
+        assert_eq!(send.len(), recv.len());
+        emit(TPS.allreduce.0, |e| {
+            e.ptr(send.as_ptr() as u64)
+                .ptr(recv.as_ptr() as u64)
+                .i64(send.len() as i64)
+                .u64(Datatype::Double.code())
+                .u64(op.code())
+                .ptr(COMM_WORLD);
+        });
+        {
+            let mut st = self.shared.reduce.lock().unwrap();
+            // wait for previous round to fully finish
+            while st.done_count != 0 && st.contributions.len() == self.shared.size as usize {
+                st = self.shared.reduce_cond.wait(st).unwrap();
+            }
+            st.contributions.push(send.to_vec());
+            if st.contributions.len() == self.shared.size as usize {
+                // last contributor reduces
+                let mut acc = st.contributions[0].clone();
+                for c in &st.contributions[1..] {
+                    for (a, v) in acc.iter_mut().zip(c) {
+                        *a = match op {
+                            Op::Sum => *a + v,
+                            Op::Max => a.max(*v),
+                            Op::Min => a.min(*v),
+                        };
+                    }
+                }
+                st.result = acc;
+                st.round += 1;
+                self.shared.reduce_cond.notify_all();
+            } else {
+                let round = st.round;
+                while st.round == round {
+                    st = self.shared.reduce_cond.wait(st).unwrap();
+                }
+            }
+            recv.copy_from_slice(&st.result);
+            st.done_count += 1;
+            if st.done_count == self.shared.size {
+                st.contributions.clear();
+                st.done_count = 0;
+                self.shared.reduce_cond.notify_all();
+            }
+        }
+        emit(TPS.allreduce.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+
+    /// `MPI_Barrier`.
+    pub fn mpi_barrier(&self) -> u64 {
+        emit(TPS.barrier.0, |e| {
+            e.ptr(COMM_WORLD);
+        });
+        self.shared.barrier.wait();
+        emit(TPS.barrier.1, |e| {
+            e.u64(mpi_result::SUCCESS);
+        });
+        mpi_result::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn ring_exchange_delivers_data() {
+        let world = MpiWorld::new(4);
+        let ok = Arc::new(AtomicU64::new(0));
+        let ok2 = ok.clone();
+        world.run(move |comm| {
+            comm.mpi_init();
+            let (_, size) = comm.mpi_comm_size();
+            let (_, rank) = comm.mpi_comm_rank();
+            let right = ((rank + 1) % size) as u32;
+            let left = ((rank + size - 1) % size) as u32;
+            let payload = vec![rank as u8; 64];
+            comm.mpi_send(&payload, Datatype::Byte, right, 7);
+            let mut buf = vec![0u8; 64];
+            comm.mpi_recv(&mut buf, Datatype::Byte, left, 7);
+            assert_eq!(buf, vec![left as u8; 64]);
+            ok2.fetch_add(1, Ordering::Relaxed);
+            comm.mpi_finalize();
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let world = MpiWorld::new(3);
+        world.run(|comm| {
+            comm.mpi_init();
+            let r = comm.rank() as f64;
+            let send = vec![r, 2.0 * r];
+            let mut recv = vec![0.0; 2];
+            comm.mpi_allreduce(&send, &mut recv, Op::Sum);
+            assert_eq!(recv, vec![3.0, 6.0]); // 0+1+2, 0+2+4
+            // second round works too (round-trip state machine)
+            let mut recv2 = vec![0.0; 1];
+            comm.mpi_allreduce(&[1.0], &mut recv2, Op::Max);
+            assert_eq!(recv2, vec![1.0]);
+            comm.mpi_finalize();
+        });
+    }
+
+    #[test]
+    fn isend_irecv_wait_roundtrip() {
+        let world = MpiWorld::new(2);
+        world.run(|comm| {
+            if comm.rank() == 0 {
+                let data = vec![1.5f64.to_le_bytes(), 2.5f64.to_le_bytes()].concat();
+                let (_, req) = comm.mpi_isend(&data, Datatype::Double, 1, 3);
+                comm.mpi_wait(req);
+            } else {
+                let mut buf = vec![0u8; 16];
+                let (_, req) = comm.mpi_irecv(&mut buf, Datatype::Double, 0, 3);
+                let (_, _flag) = comm.mpi_test(req);
+                comm.mpi_wait(req);
+                let v = f64::from_le_bytes(buf[0..8].try_into().unwrap());
+                assert_eq!(v, 1.5);
+            }
+            comm.mpi_barrier();
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes_all_ranks() {
+        let world = MpiWorld::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c2 = counter.clone();
+        world.run(move |comm| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            comm.mpi_barrier();
+            // after barrier, all 4 increments must be visible
+            assert_eq!(c2.load(Ordering::SeqCst), 4);
+        });
+    }
+}

@@ -1,0 +1,572 @@
+//! OpenCL frontend: the traced `cl*` runtime (its trace model comes from
+//! the XML registry rather than a C header — paper Fig. 1a).
+
+use super::declare_tps;
+use super::handles::{HandleAllocator, HandleKind};
+use super::profiling;
+use crate::device::{AllocKind, Command, DevEvent, Node};
+use crate::model::Api;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// `cl_int` error codes.
+pub mod cl_error {
+    /// CL_SUCCESS.
+    pub const SUCCESS: i64 = 0;
+    /// CL_INVALID_VALUE.
+    pub const INVALID_VALUE: i64 = -30;
+    /// CL_INVALID_MEM_OBJECT.
+    pub const INVALID_MEM_OBJECT: i64 = -38;
+    /// CL_OUT_OF_RESOURCES.
+    pub const OUT_OF_RESOURCES: i64 = -5;
+}
+
+declare_tps!(pub(crate) ClTps, Api::Cl, {
+    get_platform_ids: "clGetPlatformIDs",
+    get_device_ids: "clGetDeviceIDs",
+    create_context: "clCreateContext",
+    create_command_queue: "clCreateCommandQueue",
+    create_buffer: "clCreateBuffer",
+    release_mem_object: "clReleaseMemObject",
+    enqueue_write_buffer: "clEnqueueWriteBuffer",
+    enqueue_read_buffer: "clEnqueueReadBuffer",
+    create_program_with_source: "clCreateProgramWithSource",
+    build_program: "clBuildProgram",
+    create_kernel: "clCreateKernel",
+    set_kernel_arg: "clSetKernelArg",
+    enqueue_ndrange_kernel: "clEnqueueNDRangeKernel",
+    flush: "clFlush",
+    finish: "clFinish",
+});
+
+static TPS: Lazy<ClTps> = Lazy::new(ClTps::load);
+
+struct ClQueue {
+    gpu: u32,
+    fences: Vec<Arc<DevEvent>>,
+}
+
+#[derive(Default)]
+struct ClState {
+    queues: HashMap<u64, ClQueue>,
+    buffers: HashMap<u64, (u64, u64)>, // cl_mem -> (device ptr, size)
+    programs: HashMap<u64, String>,
+    built: HashMap<u64, bool>,
+    kernels: HashMap<u64, (String, HashMap<u32, u64>)>,
+}
+
+/// The OpenCL platform/runtime for one node.
+pub struct ClRuntime {
+    /// The node.
+    pub node: Arc<Node>,
+    handles: HandleAllocator,
+    platform: u64,
+    state: Mutex<ClState>,
+}
+
+impl ClRuntime {
+    /// Create the runtime.
+    pub fn new(node: Arc<Node>) -> Arc<Self> {
+        let handles = HandleAllocator::new();
+        let platform = handles.alloc(HandleKind::Driver);
+        Arc::new(ClRuntime { node, handles, platform, state: Mutex::new(ClState::default()) })
+    }
+
+    fn desc(&self) -> u64 {
+        self.handles.alloc(HandleKind::Desc)
+    }
+
+    /// `clGetPlatformIDs`.
+    pub fn cl_get_platform_ids(&self, platforms: &mut Vec<u64>) -> (i64, u32) {
+        let pp = self.desc();
+        let pn = self.desc();
+        emit(TPS.get_platform_ids.0, |e| {
+            e.u64(1).ptr(pp).ptr(pn);
+        });
+        platforms.clear();
+        platforms.push(self.platform);
+        emit(TPS.get_platform_ids.1, |e| {
+            e.i64(cl_error::SUCCESS).u64(1);
+        });
+        (cl_error::SUCCESS, 1)
+    }
+
+    /// `clGetDeviceIDs`.
+    pub fn cl_get_device_ids(&self, platform: u64, devices: &mut Vec<u64>) -> (i64, u32) {
+        let pd = self.desc();
+        let pn = self.desc();
+        emit(TPS.get_device_ids.0, |e| {
+            e.ptr(platform).u64(4 /*CL_DEVICE_TYPE_GPU*/).u64(16).ptr(pd).ptr(pn);
+        });
+        let (result, n) = if platform == self.platform {
+            devices.clear();
+            devices.extend(self.node.gpus.iter().map(|g| g.handle));
+            (cl_error::SUCCESS, devices.len() as u32)
+        } else {
+            (cl_error::INVALID_VALUE, 0)
+        };
+        emit(TPS.get_device_ids.1, |e| {
+            e.i64(result).u64(n as u64);
+        });
+        (result, n)
+    }
+
+    /// `clCreateContext` (returns the context handle; errcode out-param).
+    pub fn cl_create_context(&self, devices: &[u64]) -> (u64, i64) {
+        let props = self.desc();
+        let pd = self.desc();
+        let perr = self.desc();
+        emit(TPS.create_context.0, |e| {
+            e.ptr(props).u64(devices.len() as u64).ptr(pd).ptr(0).ptr(0).ptr(perr);
+        });
+        let ctx = self.handles.alloc(HandleKind::Context);
+        emit(TPS.create_context.1, |e| {
+            e.ptr(ctx).i64(cl_error::SUCCESS);
+        });
+        (ctx, cl_error::SUCCESS)
+    }
+
+    /// `clCreateCommandQueue`.
+    pub fn cl_create_command_queue(&self, context: u64, device: u64) -> (u64, i64) {
+        let perr = self.desc();
+        emit(TPS.create_command_queue.0, |e| {
+            e.ptr(context).ptr(device).u64(0).ptr(perr);
+        });
+        let idx = self.node.gpus.iter().position(|g| g.handle == device);
+        let (q, err) = match idx {
+            Some(i) => {
+                let q = self.handles.alloc(HandleKind::Queue);
+                self.state
+                    .lock()
+                    .unwrap()
+                    .queues
+                    .insert(q, ClQueue { gpu: i as u32, fences: Vec::new() });
+                (q, cl_error::SUCCESS)
+            }
+            None => (0, cl_error::INVALID_VALUE),
+        };
+        emit(TPS.create_command_queue.1, |e| {
+            e.ptr(q).i64(err);
+        });
+        (q, err)
+    }
+
+    /// `clCreateBuffer`.
+    pub fn cl_create_buffer(&self, context: u64, flags: u32, size: u64) -> (u64, i64) {
+        let perr = self.desc();
+        emit(TPS.create_buffer.0, |e| {
+            e.ptr(context).u64(flags as u64).u64(size).ptr(0).ptr(perr);
+        });
+        let (mem, err) = match self.node.gpus[0].alloc(AllocKind::Device, size) {
+            Ok(ptr) => {
+                let mem = self.handles.alloc(HandleKind::Buffer);
+                self.state.lock().unwrap().buffers.insert(mem, (ptr, size));
+                (mem, cl_error::SUCCESS)
+            }
+            Err(_) => (0, cl_error::OUT_OF_RESOURCES),
+        };
+        emit(TPS.create_buffer.1, |e| {
+            e.ptr(mem).i64(err);
+        });
+        (mem, err)
+    }
+
+    /// `clReleaseMemObject`.
+    pub fn cl_release_mem_object(&self, memobj: u64) -> i64 {
+        emit(TPS.release_mem_object.0, |e| {
+            e.ptr(memobj);
+        });
+        let entry = self.state.lock().unwrap().buffers.remove(&memobj);
+        let result = match entry {
+            Some((ptr, _)) => {
+                let _ = self.node.gpus[0].free(ptr);
+                cl_error::SUCCESS
+            }
+            None => cl_error::INVALID_MEM_OBJECT,
+        };
+        emit(TPS.release_mem_object.1, |e| {
+            e.i64(result);
+        });
+        result
+    }
+
+    fn enqueue_copy(
+        &self,
+        queue: u64,
+        buffer: u64,
+        blocking: bool,
+        offset: u64,
+        size: u64,
+        host_ptr: u64,
+        to_device: bool,
+    ) -> i64 {
+        let (gpu_idx, dev_ptr) = {
+            let st = self.state.lock().unwrap();
+            let Some(q) = st.queues.get(&queue) else {
+                return cl_error::INVALID_VALUE;
+            };
+            let Some((ptr, bsize)) = st.buffers.get(&buffer).copied() else {
+                return cl_error::INVALID_MEM_OBJECT;
+            };
+            if offset + size > bsize {
+                return cl_error::INVALID_VALUE;
+            }
+            (q.gpu, ptr)
+        };
+        let gpu = self.node.gpus[gpu_idx as usize].clone();
+        let fence = Arc::new(DevEvent::new());
+        let (dst, src) = if to_device {
+            (dev_ptr + offset, host_ptr)
+        } else {
+            (host_ptr, dev_ptr + offset)
+        };
+        gpu.submit(
+            gpu.tiles, // copy engine
+            queue,
+            vec![Command::Memcpy { dst, src, bytes: size, signal: None }],
+            Some(fence.clone()),
+        );
+        if blocking {
+            fence.wait(Duration::from_secs(600));
+            profiling::drain_and_emit(&gpu, Some(queue));
+        } else {
+            self.state.lock().unwrap().queues.get_mut(&queue).unwrap().fences.push(fence);
+        }
+        cl_error::SUCCESS
+    }
+
+    /// `clEnqueueWriteBuffer`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cl_enqueue_write_buffer(
+        &self,
+        queue: u64,
+        buffer: u64,
+        blocking: bool,
+        offset: u64,
+        size: u64,
+        host_ptr: u64,
+    ) -> i64 {
+        let pe = self.desc();
+        emit(TPS.enqueue_write_buffer.0, |e| {
+            e.ptr(queue)
+                .ptr(buffer)
+                .u64(blocking as u64)
+                .u64(offset)
+                .u64(size)
+                .ptr(host_ptr)
+                .u64(0)
+                .ptr(0)
+                .ptr(pe);
+        });
+        let result = self.enqueue_copy(queue, buffer, blocking, offset, size, host_ptr, true);
+        emit(TPS.enqueue_write_buffer.1, |e| {
+            e.i64(result).ptr(pe);
+        });
+        result
+    }
+
+    /// `clEnqueueReadBuffer`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cl_enqueue_read_buffer(
+        &self,
+        queue: u64,
+        buffer: u64,
+        blocking: bool,
+        offset: u64,
+        size: u64,
+        host_ptr: u64,
+    ) -> i64 {
+        let pe = self.desc();
+        emit(TPS.enqueue_read_buffer.0, |e| {
+            e.ptr(queue)
+                .ptr(buffer)
+                .u64(blocking as u64)
+                .u64(offset)
+                .u64(size)
+                .ptr(host_ptr)
+                .u64(0)
+                .ptr(0)
+                .ptr(pe);
+        });
+        let result = self.enqueue_copy(queue, buffer, blocking, offset, size, host_ptr, false);
+        emit(TPS.enqueue_read_buffer.1, |e| {
+            e.i64(result).ptr(pe);
+        });
+        result
+    }
+
+    /// `clCreateProgramWithSource` — "source" is the kernel name.
+    pub fn cl_create_program_with_source(&self, context: u64, source: &str) -> (u64, i64) {
+        let perr = self.desc();
+        emit(TPS.create_program_with_source.0, |e| {
+            e.ptr(context).u64(1).str(source).ptr(0).ptr(perr);
+        });
+        let program = self.handles.alloc(HandleKind::Module);
+        self.state.lock().unwrap().programs.insert(program, source.to_string());
+        emit(TPS.create_program_with_source.1, |e| {
+            e.ptr(program).i64(cl_error::SUCCESS);
+        });
+        (program, cl_error::SUCCESS)
+    }
+
+    /// `clBuildProgram` — the real PJRT compile happens here.
+    pub fn cl_build_program(&self, program: u64, options: &str) -> i64 {
+        let pd = self.desc();
+        emit(TPS.build_program.0, |e| {
+            e.ptr(program).u64(0).ptr(pd).str(options).ptr(0).ptr(0);
+        });
+        let name = self.state.lock().unwrap().programs.get(&program).cloned();
+        let result = match name {
+            Some(n) => match self.node.executor.compile(&n) {
+                Ok(_) => {
+                    self.state.lock().unwrap().built.insert(program, true);
+                    cl_error::SUCCESS
+                }
+                Err(_) => cl_error::INVALID_VALUE,
+            },
+            None => cl_error::INVALID_VALUE,
+        };
+        emit(TPS.build_program.1, |e| {
+            e.i64(result);
+        });
+        result
+    }
+
+    /// `clCreateKernel`.
+    pub fn cl_create_kernel(&self, program: u64, kernel_name: &str) -> (u64, i64) {
+        let perr = self.desc();
+        emit(TPS.create_kernel.0, |e| {
+            e.ptr(program).str(kernel_name).ptr(perr);
+        });
+        let st = self.state.lock().unwrap();
+        let ok = st.programs.get(&program).map(|n| n == kernel_name).unwrap_or(false)
+            && st.built.get(&program).copied().unwrap_or(false);
+        drop(st);
+        let (k, err) = if ok {
+            let k = self.handles.alloc(HandleKind::Kernel);
+            self.state
+                .lock()
+                .unwrap()
+                .kernels
+                .insert(k, (kernel_name.to_string(), HashMap::new()));
+            (k, cl_error::SUCCESS)
+        } else {
+            (0, cl_error::INVALID_VALUE)
+        };
+        emit(TPS.create_kernel.1, |e| {
+            e.ptr(k).i64(err);
+        });
+        (k, err)
+    }
+
+    /// `clSetKernelArg` — `value` is the cl_mem handle for the argument.
+    pub fn cl_set_kernel_arg(&self, kernel: u64, arg_index: u32, value: u64) -> i64 {
+        let pv = self.desc();
+        emit(TPS.set_kernel_arg.0, |e| {
+            e.ptr(kernel).u64(arg_index as u64).u64(8).ptr(pv);
+        });
+        let mut st = self.state.lock().unwrap();
+        let dev_ptr = st.buffers.get(&value).map(|(p, _)| *p);
+        let result = match (st.kernels.get_mut(&kernel), dev_ptr) {
+            (Some((_, args)), Some(p)) => {
+                args.insert(arg_index, p);
+                cl_error::SUCCESS
+            }
+            (Some(_), None) => cl_error::INVALID_MEM_OBJECT,
+            (None, _) => cl_error::INVALID_VALUE,
+        };
+        drop(st);
+        emit(TPS.set_kernel_arg.1, |e| {
+            e.i64(result);
+        });
+        result
+    }
+
+    /// `clEnqueueNDRangeKernel`.
+    pub fn cl_enqueue_ndrange_kernel(
+        &self,
+        queue: u64,
+        kernel: u64,
+        global_work_size: (u64, u64, u64),
+    ) -> i64 {
+        let pg = self.desc();
+        let pe = self.desc();
+        emit(TPS.enqueue_ndrange_kernel.0, |e| {
+            e.ptr(queue).ptr(kernel).u64(3).ptr(0).ptr(pg).ptr(0).u64(0).ptr(0).ptr(pe);
+        });
+        let mut st = self.state.lock().unwrap();
+        let kern = st.kernels.get(&kernel).cloned();
+        let result = match (kern, st.queues.get_mut(&queue)) {
+            (Some((name, args)), Some(q)) => {
+                let mut idx: Vec<_> = args.keys().copied().collect();
+                idx.sort_unstable();
+                let ptrs: Vec<u64> = idx.iter().map(|i| args[i]).collect();
+                let gpu = self.node.gpus[q.gpu as usize].clone();
+                let fence = Arc::new(DevEvent::new());
+                q.fences.push(fence.clone());
+                drop(st);
+                gpu.submit(
+                    0,
+                    queue,
+                    vec![Command::Kernel {
+                        name,
+                        args: ptrs,
+                        groups: (
+                            global_work_size.0 as u32,
+                            global_work_size.1 as u32,
+                            global_work_size.2 as u32,
+                        ),
+                        signal: None,
+                    }],
+                    Some(fence),
+                );
+                cl_error::SUCCESS
+            }
+            (None, _) => cl_error::INVALID_VALUE,
+            (_, None) => cl_error::INVALID_VALUE,
+        };
+        emit(TPS.enqueue_ndrange_kernel.1, |e| {
+            e.i64(result).ptr(pe);
+        });
+        result
+    }
+
+    /// `clFlush` (no-op — submission is eager).
+    pub fn cl_flush(&self, queue: u64) -> i64 {
+        emit(TPS.flush.0, |e| {
+            e.ptr(queue);
+        });
+        let result = if self.state.lock().unwrap().queues.contains_key(&queue) {
+            cl_error::SUCCESS
+        } else {
+            cl_error::INVALID_VALUE
+        };
+        emit(TPS.flush.1, |e| {
+            e.i64(result);
+        });
+        result
+    }
+
+    /// `clFinish` — waits for the queue and emits profiling events.
+    pub fn cl_finish(&self, queue: u64) -> i64 {
+        emit(TPS.finish.0, |e| {
+            e.ptr(queue);
+        });
+        let (fences, gpu_idx) = {
+            let mut st = self.state.lock().unwrap();
+            match st.queues.get_mut(&queue) {
+                Some(q) => (std::mem::take(&mut q.fences), q.gpu),
+                None => {
+                    drop(st);
+                    emit(TPS.finish.1, |e| {
+                        e.i64(cl_error::INVALID_VALUE);
+                    });
+                    return cl_error::INVALID_VALUE;
+                }
+            }
+        };
+        for f in &fences {
+            f.wait(Duration::from_secs(600));
+        }
+        let gpu = self.node.gpus[gpu_idx as usize].clone();
+        profiling::drain_and_emit(&gpu, Some(queue));
+        emit(TPS.finish.1, |e| {
+            e.i64(cl_error::SUCCESS);
+        });
+        cl_error::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{install_session, uninstall_session, SessionConfig};
+
+    fn cl() -> Arc<ClRuntime> {
+        ClRuntime::new(Node::new(NodeConfig::test_small()))
+    }
+
+    #[test]
+    fn end_to_end_conv1d_via_opencl() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let cl = cl();
+        let mut platforms = vec![];
+        cl.cl_get_platform_ids(&mut platforms);
+        let mut devices = vec![];
+        cl.cl_get_device_ids(platforms[0], &mut devices);
+        let (ctx, _) = cl.cl_create_context(&devices);
+        let (queue, err) = cl.cl_create_command_queue(ctx, devices[0]);
+        assert_eq!(err, cl_error::SUCCESS);
+
+        let (b, n, k) = (64usize, 4096usize, 33usize);
+        let xb = (b * n * 4) as u64;
+        let wb = (k * 4) as u64;
+        let (bx, _) = cl.cl_create_buffer(ctx, 0, xb);
+        let (bw, _) = cl.cl_create_buffer(ctx, 0, wb);
+        let (bbias, _) = cl.cl_create_buffer(ctx, 0, xb);
+        let (bout, _) = cl.cl_create_buffer(ctx, 0, xb);
+
+        let gpu = cl.node.gpu(0);
+        let hx = gpu.pool.alloc(AllocKind::Host, xb).unwrap();
+        let hw = gpu.pool.alloc(AllocKind::Host, wb).unwrap();
+        gpu.pool
+            .write(hx, &crate::runtime::executor::f32_to_bytes(&vec![1.0; b * n]))
+            .unwrap();
+        // identity tap
+        let mut taps = vec![0.0f32; k];
+        taps[k / 2] = 1.0;
+        gpu.pool.write(hw, &crate::runtime::executor::f32_to_bytes(&taps)).unwrap();
+        assert_eq!(cl.cl_enqueue_write_buffer(queue, bx, true, 0, xb, hx), cl_error::SUCCESS);
+        assert_eq!(cl.cl_enqueue_write_buffer(queue, bw, true, 0, wb, hw), cl_error::SUCCESS);
+
+        let (program, _) = cl.cl_create_program_with_source(ctx, "conv1d");
+        assert_eq!(cl.cl_build_program(program, "-O2"), cl_error::SUCCESS);
+        let (kernel, err) = cl.cl_create_kernel(program, "conv1d");
+        assert_eq!(err, cl_error::SUCCESS);
+        cl.cl_set_kernel_arg(kernel, 0, bx);
+        cl.cl_set_kernel_arg(kernel, 1, bw);
+        cl.cl_set_kernel_arg(kernel, 2, bbias);
+        cl.cl_set_kernel_arg(kernel, 3, bout);
+        assert_eq!(
+            cl.cl_enqueue_ndrange_kernel(queue, kernel, (b as u64, 1, 1)),
+            cl_error::SUCCESS
+        );
+        assert_eq!(cl.cl_finish(queue), cl_error::SUCCESS);
+
+        let hout = gpu.pool.alloc(AllocKind::Host, xb).unwrap();
+        cl.cl_enqueue_read_buffer(queue, bout, true, 0, xb, hout);
+        let out = crate::runtime::executor::bytes_to_f32(&gpu.pool.read(hout, xb).unwrap());
+        // relu(conv_identity(ones) + 0) = 1
+        assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-5));
+
+        let session = uninstall_session().unwrap();
+        assert!(session.stats().written > 20);
+    }
+
+    #[test]
+    fn unbuilt_program_cannot_create_kernel() {
+        let _g = test_support::lock();
+        let cl = cl();
+        let (ctx, _) = cl.cl_create_context(&[]);
+        let (program, _) = cl.cl_create_program_with_source(ctx, "saxpy");
+        let (_, err) = cl.cl_create_kernel(program, "saxpy");
+        assert_eq!(err, cl_error::INVALID_VALUE);
+    }
+
+    #[test]
+    fn buffer_release_and_errors() {
+        let _g = test_support::lock();
+        let cl = cl();
+        let (ctx, _) = cl.cl_create_context(&[]);
+        let (mem, err) = cl.cl_create_buffer(ctx, 0, 4096);
+        assert_eq!(err, cl_error::SUCCESS);
+        assert_eq!(cl.cl_release_mem_object(mem), cl_error::SUCCESS);
+        assert_eq!(cl.cl_release_mem_object(mem), cl_error::INVALID_MEM_OBJECT);
+    }
+}

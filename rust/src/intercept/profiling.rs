@@ -1,0 +1,81 @@
+//! GPU-profiling helpers: turn engine completion records into
+//! `lttng_ust_profiling:command_completed` events.
+//!
+//! THAPI's generated "Helper Functions" capture GPU timings by reading
+//! backend profiling data at synchronization points (paper Fig. 2,
+//! Scenario 2: "Level-Zero profiling / get the info during wait"). The
+//! frontends call [`emit_completions`] from every synchronize-style API
+//! after draining the device's completion log.
+
+use crate::device::{CompletionRecord, Gpu};
+use crate::model::class_by_name;
+use crate::model::EventClass;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+
+static COMMAND_COMPLETED: Lazy<&'static EventClass> =
+    Lazy::new(|| class_by_name("lttng_ust_profiling:command_completed").unwrap());
+
+/// Emit one profiling event per completion record.
+pub fn emit_completions(device_handle: u64, records: &[CompletionRecord]) {
+    for r in records {
+        emit(&COMMAND_COMPLETED, |e| {
+            e.ptr(device_handle)
+                .u32(r.engine_ordinal)
+                .u32(r.engine_kind.code())
+                .str(r.kind)
+                .str(&r.name)
+                .ptr(r.queue)
+                .u64(r.ts_start)
+                .u64(r.ts_end)
+                .u64(r.bytes);
+        });
+    }
+}
+
+/// Drain a GPU's completions (optionally for one queue) and emit them.
+/// Returns the drained records so callers can also inspect errors.
+pub fn drain_and_emit(gpu: &Gpu, queue: Option<u64>) -> Vec<CompletionRecord> {
+    let recs = gpu.drain_completions(queue);
+    emit_completions(gpu.handle, &recs);
+    recs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::EngineKind;
+
+    #[test]
+    fn emits_one_event_per_record() {
+        let _g = crate::tracer::session::test_support::lock();
+        crate::tracer::install_session(Default::default());
+        let recs = vec![
+            CompletionRecord {
+                queue: 1,
+                engine_ordinal: 0,
+                engine_kind: EngineKind::Compute,
+                kind: "kernel",
+                name: "lrn".into(),
+                ts_start: 10,
+                ts_end: 20,
+                bytes: 0,
+                error: None,
+            },
+            CompletionRecord {
+                queue: 1,
+                engine_ordinal: 2,
+                engine_kind: EngineKind::Copy,
+                kind: "memcpy",
+                name: String::new(),
+                ts_start: 20,
+                ts_end: 30,
+                bytes: 4096,
+                error: None,
+            },
+        ];
+        emit_completions(0xdead, &recs);
+        let session = crate::tracer::uninstall_session().unwrap();
+        assert_eq!(session.stats().written, 2);
+    }
+}

@@ -1,0 +1,1047 @@
+//! Level-Zero frontend: the traced `ze*` runtime over the simulated node.
+//!
+//! Every function emits a full-context `_entry`/`_exit` event pair with
+//! the exact fields the generated trace model declares (debug builds
+//! assert this). The runtime itself is a faithful-enough Level-Zero:
+//! contexts, command queues bound to engine ordinals, command lists with
+//! close/reset semantics, event pools/events, modules compiled by the
+//! *real* PJRT executor (so `zeModuleCreate` costs real milliseconds) and
+//! kernels with indexed arguments.
+
+use super::declare_tps;
+use super::handles::{HandleAllocator, HandleKind};
+use super::profiling;
+use crate::device::{Command, DevEvent, Gpu, Node};
+use crate::model::Api;
+use crate::tracer::emit;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// `ze_result_t` values (mirrors the bundled header enum).
+pub mod ze_result {
+    /// Success.
+    pub const SUCCESS: u64 = 0;
+    /// Not ready (event not signaled).
+    pub const NOT_READY: u64 = 1;
+    /// Invalid argument.
+    pub const INVALID_ARGUMENT: u64 = 3;
+    /// Uninitialized driver.
+    pub const UNINITIALIZED: u64 = 4;
+    /// Null handle.
+    pub const INVALID_NULL_HANDLE: u64 = 5;
+}
+
+declare_tps!(pub(crate) ZeTps, Api::Ze, {
+    init: "zeInit",
+    driver_get: "zeDriverGet",
+    device_get: "zeDeviceGet",
+    device_get_properties: "zeDeviceGetProperties",
+    context_create: "zeContextCreate",
+    context_destroy: "zeContextDestroy",
+    mem_alloc_device: "zeMemAllocDevice",
+    mem_alloc_host: "zeMemAllocHost",
+    mem_alloc_shared: "zeMemAllocShared",
+    mem_free: "zeMemFree",
+    queue_create: "zeCommandQueueCreate",
+    queue_destroy: "zeCommandQueueDestroy",
+    list_create: "zeCommandListCreate",
+    list_destroy: "zeCommandListDestroy",
+    list_close: "zeCommandListClose",
+    list_reset: "zeCommandListReset",
+    append_memory_copy: "zeCommandListAppendMemoryCopy",
+    append_launch_kernel: "zeCommandListAppendLaunchKernel",
+    append_barrier: "zeCommandListAppendBarrier",
+    queue_execute: "zeCommandQueueExecuteCommandLists",
+    queue_synchronize: "zeCommandQueueSynchronize",
+    event_pool_create: "zeEventPoolCreate",
+    event_pool_destroy: "zeEventPoolDestroy",
+    event_create: "zeEventCreate",
+    event_destroy: "zeEventDestroy",
+    event_host_synchronize: "zeEventHostSynchronize",
+    event_query_status: "zeEventQueryStatus",
+    event_host_reset: "zeEventHostReset",
+    module_create: "zeModuleCreate",
+    module_destroy: "zeModuleDestroy",
+    kernel_create: "zeKernelCreate",
+    kernel_destroy: "zeKernelDestroy",
+    kernel_set_group_size: "zeKernelSetGroupSize",
+    kernel_set_argument_value: "zeKernelSetArgumentValue",
+});
+
+static TPS: Lazy<ZeTps> = Lazy::new(ZeTps::load);
+
+/// Device-properties struct (the §4.2 UB case: `pNext` must be zeroed by
+/// the caller; the tracer records whatever value it holds).
+#[derive(Debug, Clone, Default)]
+pub struct ZeDeviceProperties {
+    /// Extension chain pointer — must be null-initialized by the app.
+    pub p_next: u64,
+    /// Device name (filled by the driver).
+    pub name: String,
+    /// Tile count.
+    pub num_tiles: u32,
+    /// Total device memory.
+    pub total_mem: u64,
+}
+
+struct ZeQueue {
+    gpu: u32,
+    ordinal: u32,
+    fences: Vec<Arc<DevEvent>>,
+}
+
+#[derive(Default)]
+struct ZeList {
+    /// Owning GPU (kept for cross-device validation checks).
+    #[allow(dead_code)]
+    gpu: u32,
+    commands: Vec<Command>,
+    closed: bool,
+    /// Number of times executed since last reset (validation: §4.2).
+    executions: u32,
+}
+
+struct ZeKernel {
+    /// Owning module (kept for teardown validation).
+    #[allow(dead_code)]
+    module: u64,
+    name: String,
+    args: HashMap<u32, u64>,
+    group_size: (u32, u32, u32),
+}
+
+#[derive(Default)]
+struct ZeState {
+    initialized: bool,
+    contexts: HashMap<u64, ()>,
+    queues: HashMap<u64, ZeQueue>,
+    lists: HashMap<u64, ZeList>,
+    event_pools: HashMap<u64, ()>,
+    events: HashMap<u64, Arc<DevEvent>>,
+    modules: HashMap<u64, String>,
+    kernels: HashMap<u64, ZeKernel>,
+}
+
+/// The Level-Zero driver instance for one node.
+pub struct ZeDriver {
+    /// The node this driver exposes.
+    pub node: Arc<Node>,
+    handles: HandleAllocator,
+    driver_handle: u64,
+    device_handles: Vec<u64>,
+    state: Mutex<ZeState>,
+}
+
+impl ZeDriver {
+    /// Create the driver for `node`.
+    pub fn new(node: Arc<Node>) -> Arc<Self> {
+        let handles = HandleAllocator::new();
+        let driver_handle = handles.alloc(HandleKind::Driver);
+        let device_handles = node.gpus.iter().map(|g| g.handle).collect();
+        Arc::new(ZeDriver {
+            node,
+            handles,
+            driver_handle,
+            device_handles,
+            state: Mutex::new(ZeState::default()),
+        })
+    }
+
+    fn desc(&self) -> u64 {
+        self.handles.alloc(HandleKind::Desc)
+    }
+
+    fn gpu_by_handle(&self, handle: u64) -> Option<&Arc<Gpu>> {
+        self.node.gpus.iter().find(|g| g.handle == handle)
+    }
+
+    // -----------------------------------------------------------------
+    // Initialization / discovery
+    // -----------------------------------------------------------------
+
+    /// `zeInit`.
+    pub fn ze_init(&self, flags: u32) -> u64 {
+        emit(TPS.init.0, |e| {
+            e.u64(flags as u64);
+        });
+        self.state.lock().unwrap().initialized = true;
+        let result = ze_result::SUCCESS;
+        emit(TPS.init.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeDriverGet` — fills `drivers` and returns (result, count).
+    pub fn ze_driver_get(&self, drivers: &mut Vec<u64>) -> (u64, u32) {
+        let p_count = self.desc();
+        let ph = self.desc();
+        emit(TPS.driver_get.0, |e| {
+            e.ptr(p_count).ptr(ph);
+        });
+        let initialized = self.state.lock().unwrap().initialized;
+        let (result, count) = if initialized {
+            drivers.clear();
+            drivers.push(self.driver_handle);
+            (ze_result::SUCCESS, 1u32)
+        } else {
+            (ze_result::UNINITIALIZED, 0)
+        };
+        let first = drivers.first().copied().unwrap_or(0);
+        emit(TPS.driver_get.1, |e| {
+            e.u64(result).u64(count as u64).ptr(first);
+        });
+        (result, count)
+    }
+
+    /// `zeDeviceGet`.
+    pub fn ze_device_get(&self, driver: u64, devices: &mut Vec<u64>) -> (u64, u32) {
+        let p_count = self.desc();
+        let ph = self.desc();
+        emit(TPS.device_get.0, |e| {
+            e.ptr(driver).ptr(p_count).ptr(ph);
+        });
+        let (result, count) = if driver == self.driver_handle {
+            devices.clear();
+            devices.extend_from_slice(&self.device_handles);
+            (ze_result::SUCCESS, devices.len() as u32)
+        } else {
+            (ze_result::INVALID_NULL_HANDLE, 0)
+        };
+        let first = devices.first().copied().unwrap_or(0);
+        emit(TPS.device_get.1, |e| {
+            e.u64(result).u64(count as u64).ptr(first);
+        });
+        (result, count)
+    }
+
+    /// `zeDeviceGetProperties`. The caller-provided struct's `pNext` is
+    /// traced verbatim — the §4.2 validation plugin flags non-null values.
+    pub fn ze_device_get_properties(&self, device: u64, props: &mut ZeDeviceProperties) -> u64 {
+        let p = self.desc();
+        emit(TPS.device_get_properties.0, |e| {
+            e.ptr(device).ptr(p).ptr(props.p_next);
+        });
+        let result = match self.gpu_by_handle(device) {
+            Some(g) => {
+                props.name = g.name.clone();
+                props.num_tiles = g.tiles;
+                props.total_mem = g.pool.device_usage().1;
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        emit(TPS.device_get_properties.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeContextCreate`.
+    pub fn ze_context_create(&self, driver: u64) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.context_create.0, |e| {
+            e.ptr(driver).ptr(desc).ptr(ph);
+        });
+        let ctx = self.handles.alloc(HandleKind::Context);
+        self.state.lock().unwrap().contexts.insert(ctx, ());
+        emit(TPS.context_create.1, |e| {
+            e.u64(ze_result::SUCCESS).ptr(ctx);
+        });
+        (ze_result::SUCCESS, ctx)
+    }
+
+    /// `zeContextDestroy`.
+    pub fn ze_context_destroy(&self, ctx: u64) -> u64 {
+        emit(TPS.context_destroy.0, |e| {
+            e.ptr(ctx);
+        });
+        let ok = self.state.lock().unwrap().contexts.remove(&ctx).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.context_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    // -----------------------------------------------------------------
+    // Memory
+    // -----------------------------------------------------------------
+
+    /// `zeMemAllocDevice`.
+    pub fn ze_mem_alloc_device(&self, ctx: u64, size: u64, alignment: u64, device: u64) -> (u64, u64) {
+        let desc = self.desc();
+        let pptr = self.desc();
+        emit(TPS.mem_alloc_device.0, |e| {
+            e.ptr(ctx).ptr(desc).u64(size).u64(alignment).ptr(device).ptr(pptr);
+        });
+        let (result, ptr) = match self.gpu_by_handle(device) {
+            Some(g) => match g.alloc(crate::device::AllocKind::Device, size) {
+                Ok(p) => (ze_result::SUCCESS, p),
+                Err(_) => (ze_result::INVALID_ARGUMENT, 0),
+            },
+            None => (ze_result::INVALID_NULL_HANDLE, 0),
+        };
+        emit(TPS.mem_alloc_device.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `zeMemAllocHost`.
+    pub fn ze_mem_alloc_host(&self, ctx: u64, size: u64, alignment: u64) -> (u64, u64) {
+        let desc = self.desc();
+        let pptr = self.desc();
+        emit(TPS.mem_alloc_host.0, |e| {
+            e.ptr(ctx).ptr(desc).u64(size).u64(alignment).ptr(pptr);
+        });
+        // host allocations go through GPU 0's pool (one host address space)
+        let (result, ptr) = match self.node.gpus[0].alloc(crate::device::AllocKind::Host, size) {
+            Ok(p) => (ze_result::SUCCESS, p),
+            Err(_) => (ze_result::INVALID_ARGUMENT, 0),
+        };
+        emit(TPS.mem_alloc_host.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `zeMemAllocShared`.
+    pub fn ze_mem_alloc_shared(&self, ctx: u64, size: u64, alignment: u64, device: u64) -> (u64, u64) {
+        let ddesc = self.desc();
+        let hdesc = self.desc();
+        let pptr = self.desc();
+        emit(TPS.mem_alloc_shared.0, |e| {
+            e.ptr(ctx).ptr(ddesc).ptr(hdesc).u64(size).u64(alignment).ptr(device).ptr(pptr);
+        });
+        let (result, ptr) = match self.gpu_by_handle(device) {
+            Some(g) => match g.alloc(crate::device::AllocKind::Shared, size) {
+                Ok(p) => (ze_result::SUCCESS, p),
+                Err(_) => (ze_result::INVALID_ARGUMENT, 0),
+            },
+            None => (ze_result::INVALID_NULL_HANDLE, 0),
+        };
+        emit(TPS.mem_alloc_shared.1, |e| {
+            e.u64(result).ptr(ptr);
+        });
+        (result, ptr)
+    }
+
+    /// `zeMemFree`. Frees from whichever GPU pool owns the pointer.
+    pub fn ze_mem_free(&self, ctx: u64, ptr: u64) -> u64 {
+        emit(TPS.mem_free.0, |e| {
+            e.ptr(ctx).ptr(ptr);
+        });
+        let mut result = ze_result::INVALID_ARGUMENT;
+        for g in &self.node.gpus {
+            if g.free(ptr).is_ok() {
+                result = ze_result::SUCCESS;
+                break;
+            }
+        }
+        emit(TPS.mem_free.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    // -----------------------------------------------------------------
+    // Queues and lists
+    // -----------------------------------------------------------------
+
+    /// `zeCommandQueueCreate`. `ordinal` selects the engine (compute tiles
+    /// first, then copy tiles — PVC-style engine groups).
+    pub fn ze_command_queue_create(&self, ctx: u64, device: u64, ordinal: u32) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.queue_create.0, |e| {
+            e.ptr(ctx).ptr(device).ptr(desc).ptr(ph);
+        });
+        let (result, q) = match self.gpu_by_handle(device) {
+            Some(g) => {
+                let q = self.handles.alloc(HandleKind::Queue);
+                self.state.lock().unwrap().queues.insert(
+                    q,
+                    ZeQueue { gpu: g.index, ordinal, fences: Vec::new() },
+                );
+                (ze_result::SUCCESS, q)
+            }
+            None => (ze_result::INVALID_NULL_HANDLE, 0),
+        };
+        emit(TPS.queue_create.1, |e| {
+            e.u64(result).ptr(q);
+        });
+        (result, q)
+    }
+
+    /// `zeCommandQueueDestroy`.
+    pub fn ze_command_queue_destroy(&self, queue: u64) -> u64 {
+        emit(TPS.queue_destroy.0, |e| {
+            e.ptr(queue);
+        });
+        let ok = self.state.lock().unwrap().queues.remove(&queue).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.queue_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListCreate`.
+    pub fn ze_command_list_create(&self, ctx: u64, device: u64) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.list_create.0, |e| {
+            e.ptr(ctx).ptr(device).ptr(desc).ptr(ph);
+        });
+        let (result, l) = match self.gpu_by_handle(device) {
+            Some(g) => {
+                let l = self.handles.alloc(HandleKind::List);
+                self.state
+                    .lock()
+                    .unwrap()
+                    .lists
+                    .insert(l, ZeList { gpu: g.index, ..Default::default() });
+                (ze_result::SUCCESS, l)
+            }
+            None => (ze_result::INVALID_NULL_HANDLE, 0),
+        };
+        emit(TPS.list_create.1, |e| {
+            e.u64(result).ptr(l);
+        });
+        (result, l)
+    }
+
+    /// `zeCommandListDestroy`.
+    pub fn ze_command_list_destroy(&self, list: u64) -> u64 {
+        emit(TPS.list_destroy.0, |e| {
+            e.ptr(list);
+        });
+        let ok = self.state.lock().unwrap().lists.remove(&list).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.list_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListClose`.
+    pub fn ze_command_list_close(&self, list: u64) -> u64 {
+        emit(TPS.list_close.0, |e| {
+            e.ptr(list);
+        });
+        let mut st = self.state.lock().unwrap();
+        let result = match st.lists.get_mut(&list) {
+            Some(l) => {
+                l.closed = true;
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.list_close.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListReset`.
+    pub fn ze_command_list_reset(&self, list: u64) -> u64 {
+        emit(TPS.list_reset.0, |e| {
+            e.ptr(list);
+        });
+        let mut st = self.state.lock().unwrap();
+        let result = match st.lists.get_mut(&list) {
+            Some(l) => {
+                l.commands.clear();
+                l.closed = false;
+                l.executions = 0;
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.list_reset.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListAppendMemoryCopy` — the paper's §1.1 example event.
+    pub fn ze_command_list_append_memory_copy(
+        &self,
+        list: u64,
+        dst: u64,
+        src: u64,
+        size: u64,
+        signal_event: u64,
+    ) -> u64 {
+        emit(TPS.append_memory_copy.0, |e| {
+            e.ptr(list).ptr(dst).ptr(src).u64(size).ptr(signal_event).u64(0).ptr(0);
+        });
+        let mut st = self.state.lock().unwrap();
+        let signal = st.events.get(&signal_event).cloned();
+        let result = match st.lists.get_mut(&list) {
+            Some(l) if !l.closed => {
+                l.commands.push(Command::Memcpy { dst, src, bytes: size, signal });
+                ze_result::SUCCESS
+            }
+            Some(_) => ze_result::INVALID_ARGUMENT,
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.append_memory_copy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListAppendLaunchKernel`.
+    pub fn ze_command_list_append_launch_kernel(
+        &self,
+        list: u64,
+        kernel: u64,
+        groups: (u32, u32, u32),
+        signal_event: u64,
+    ) -> u64 {
+        let group_ptr = self.desc();
+        emit(TPS.append_launch_kernel.0, |e| {
+            e.ptr(list).ptr(kernel).ptr(group_ptr).ptr(signal_event).u64(0).ptr(0);
+        });
+        let mut st = self.state.lock().unwrap();
+        let signal = st.events.get(&signal_event).cloned();
+        let cmd = match st.kernels.get(&kernel) {
+            Some(k) => {
+                let mut idx: Vec<_> = k.args.keys().copied().collect();
+                idx.sort_unstable();
+                let args: Vec<u64> = idx.iter().map(|i| k.args[i]).collect();
+                Some(Command::Kernel { name: k.name.clone(), args, groups, signal })
+            }
+            None => None,
+        };
+        let result = match (cmd, st.lists.get_mut(&list)) {
+            (Some(c), Some(l)) if !l.closed => {
+                l.commands.push(c);
+                ze_result::SUCCESS
+            }
+            (Some(_), Some(_)) => ze_result::INVALID_ARGUMENT,
+            (None, _) => ze_result::INVALID_NULL_HANDLE,
+            (_, None) => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.append_launch_kernel.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandListAppendBarrier`.
+    pub fn ze_command_list_append_barrier(&self, list: u64, signal_event: u64) -> u64 {
+        emit(TPS.append_barrier.0, |e| {
+            e.ptr(list).ptr(signal_event).u64(0).ptr(0);
+        });
+        let mut st = self.state.lock().unwrap();
+        let signal = st.events.get(&signal_event).cloned();
+        let result = match st.lists.get_mut(&list) {
+            Some(l) if !l.closed => {
+                l.commands.push(Command::Barrier { signal });
+                ze_result::SUCCESS
+            }
+            Some(_) => ze_result::INVALID_ARGUMENT,
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.append_barrier.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandQueueExecuteCommandLists`.
+    pub fn ze_command_queue_execute_command_lists(&self, queue: u64, lists: &[u64]) -> u64 {
+        let ph = self.desc();
+        emit(TPS.queue_execute.0, |e| {
+            e.ptr(queue).u64(lists.len() as u64).ptr(ph).ptr(0);
+        });
+        let mut st = self.state.lock().unwrap();
+        let mut result = ze_result::SUCCESS;
+        let (gpu_idx, ordinal) = match st.queues.get(&queue) {
+            Some(q) => (q.gpu, q.ordinal),
+            None => {
+                drop(st);
+                emit(TPS.queue_execute.1, |e| {
+                    e.u64(ze_result::INVALID_NULL_HANDLE);
+                });
+                return ze_result::INVALID_NULL_HANDLE;
+            }
+        };
+        let mut batches = Vec::new();
+        for lh in lists {
+            match st.lists.get_mut(lh) {
+                Some(l) if l.closed => {
+                    // NOTE: a second execution without reset is the §4.2
+                    // validation case — we allow it (UB in real L0) and the
+                    // validation plugin flags it post-mortem.
+                    l.executions += 1;
+                    batches.push(l.commands.clone());
+                }
+                _ => result = ze_result::INVALID_ARGUMENT,
+            }
+        }
+        let gpu = self.node.gpus[gpu_idx as usize].clone();
+        let mut fences = Vec::new();
+        for cmds in batches {
+            let fence = Arc::new(DevEvent::new());
+            gpu.submit(ordinal, queue, cmds, Some(fence.clone()));
+            fences.push(fence);
+        }
+        if let Some(q) = st.queues.get_mut(&queue) {
+            q.fences.extend(fences);
+        }
+        drop(st);
+        emit(TPS.queue_execute.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeCommandQueueSynchronize` — waits for all outstanding batches,
+    /// then lets the profiling helpers read device timestamps (Fig. 2).
+    pub fn ze_command_queue_synchronize(&self, queue: u64, timeout: u64) -> u64 {
+        emit(TPS.queue_synchronize.0, |e| {
+            e.ptr(queue).u64(timeout);
+        });
+        let fences = {
+            let mut st = self.state.lock().unwrap();
+            match st.queues.get_mut(&queue) {
+                Some(q) => std::mem::take(&mut q.fences),
+                None => {
+                    drop(st);
+                    emit(TPS.queue_synchronize.1, |e| {
+                        e.u64(ze_result::INVALID_NULL_HANDLE);
+                    });
+                    return ze_result::INVALID_NULL_HANDLE;
+                }
+            }
+        };
+        for f in &fences {
+            f.wait(Duration::from_secs(600));
+        }
+        let gpu_idx = self.state.lock().unwrap().queues[&queue].gpu;
+        let gpu = &self.node.gpus[gpu_idx as usize];
+        profiling::drain_and_emit(gpu, Some(queue));
+        emit(TPS.queue_synchronize.1, |e| {
+            e.u64(ze_result::SUCCESS);
+        });
+        ze_result::SUCCESS
+    }
+
+    // -----------------------------------------------------------------
+    // Events
+    // -----------------------------------------------------------------
+
+    /// `zeEventPoolCreate`.
+    pub fn ze_event_pool_create(&self, ctx: u64, count: u32) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.event_pool_create.0, |e| {
+            e.ptr(ctx).ptr(desc).u64(count as u64).ptr(0).ptr(ph);
+        });
+        let pool = self.handles.alloc(HandleKind::EventPool);
+        self.state.lock().unwrap().event_pools.insert(pool, ());
+        emit(TPS.event_pool_create.1, |e| {
+            e.u64(ze_result::SUCCESS).ptr(pool);
+        });
+        (ze_result::SUCCESS, pool)
+    }
+
+    /// `zeEventPoolDestroy`.
+    pub fn ze_event_pool_destroy(&self, pool: u64) -> u64 {
+        emit(TPS.event_pool_destroy.0, |e| {
+            e.ptr(pool);
+        });
+        let ok = self.state.lock().unwrap().event_pools.remove(&pool).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.event_pool_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeEventCreate`.
+    pub fn ze_event_create(&self, pool: u64) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.event_create.0, |e| {
+            e.ptr(pool).ptr(desc).ptr(ph);
+        });
+        let ev = self.handles.alloc(HandleKind::Event);
+        self.state.lock().unwrap().events.insert(ev, Arc::new(DevEvent::new()));
+        emit(TPS.event_create.1, |e| {
+            e.u64(ze_result::SUCCESS).ptr(ev);
+        });
+        (ze_result::SUCCESS, ev)
+    }
+
+    /// `zeEventDestroy`.
+    pub fn ze_event_destroy(&self, event: u64) -> u64 {
+        emit(TPS.event_destroy.0, |e| {
+            e.ptr(event);
+        });
+        let ok = self.state.lock().unwrap().events.remove(&event).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.event_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeEventHostSynchronize` with `timeout` ns. HIPLZ spins on this
+    /// with short timeouts — the 9.9-million-call row of the §4.3 tally.
+    pub fn ze_event_host_synchronize(&self, event: u64, timeout: u64) -> u64 {
+        emit(TPS.event_host_synchronize.0, |e| {
+            e.ptr(event).u64(timeout);
+        });
+        let ev = self.state.lock().unwrap().events.get(&event).cloned();
+        let result = match ev {
+            Some(ev) => {
+                if ev.wait(Duration::from_nanos(timeout)) {
+                    ze_result::SUCCESS
+                } else {
+                    ze_result::NOT_READY
+                }
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        emit(TPS.event_host_synchronize.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeEventQueryStatus` (polling class — dropped in default mode).
+    pub fn ze_event_query_status(&self, event: u64) -> u64 {
+        emit(TPS.event_query_status.0, |e| {
+            e.ptr(event);
+        });
+        let ev = self.state.lock().unwrap().events.get(&event).cloned();
+        let result = match ev {
+            Some(ev) => {
+                if ev.query() {
+                    ze_result::SUCCESS
+                } else {
+                    ze_result::NOT_READY
+                }
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        emit(TPS.event_query_status.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeEventHostReset`.
+    pub fn ze_event_host_reset(&self, event: u64) -> u64 {
+        emit(TPS.event_host_reset.0, |e| {
+            e.ptr(event);
+        });
+        let ev = self.state.lock().unwrap().events.get(&event).cloned();
+        let result = match ev {
+            Some(ev) => {
+                ev.reset();
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        emit(TPS.event_host_reset.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    // -----------------------------------------------------------------
+    // Modules and kernels
+    // -----------------------------------------------------------------
+
+    /// `zeModuleCreate` — compiles the named artifact through PJRT; the
+    /// (real) compile time is what the tally reports for this call.
+    pub fn ze_module_create(&self, ctx: u64, device: u64, kernel_name: &str) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        let phlog = self.desc();
+        emit(TPS.module_create.0, |e| {
+            e.ptr(ctx).ptr(device).ptr(desc).ptr(ph).ptr(phlog);
+        });
+        let (result, module) = match self.node.executor.compile(kernel_name) {
+            Ok(_elapsed) => {
+                let m = self.handles.alloc(HandleKind::Module);
+                self.state.lock().unwrap().modules.insert(m, kernel_name.to_string());
+                (ze_result::SUCCESS, m)
+            }
+            Err(_) => (ze_result::INVALID_ARGUMENT, 0),
+        };
+        emit(TPS.module_create.1, |e| {
+            e.u64(result).ptr(module).ptr(0);
+        });
+        (result, module)
+    }
+
+    /// `zeModuleDestroy`.
+    pub fn ze_module_destroy(&self, module: u64) -> u64 {
+        emit(TPS.module_destroy.0, |e| {
+            e.ptr(module);
+        });
+        let ok = self.state.lock().unwrap().modules.remove(&module).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.module_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeKernelCreate` — `name` must match the module's kernel.
+    pub fn ze_kernel_create(&self, module: u64, name: &str) -> (u64, u64) {
+        let desc = self.desc();
+        let ph = self.desc();
+        emit(TPS.kernel_create.0, |e| {
+            e.ptr(module).ptr(desc).ptr(ph);
+        });
+        let mut st = self.state.lock().unwrap();
+        let (result, k) = match st.modules.get(&module) {
+            Some(mname) if mname == name => {
+                let k = self.handles.alloc(HandleKind::Kernel);
+                st.kernels.insert(
+                    k,
+                    ZeKernel {
+                        module,
+                        name: name.to_string(),
+                        args: HashMap::new(),
+                        group_size: (1, 1, 1),
+                    },
+                );
+                (ze_result::SUCCESS, k)
+            }
+            Some(_) => (ze_result::INVALID_ARGUMENT, 0),
+            None => (ze_result::INVALID_NULL_HANDLE, 0),
+        };
+        drop(st);
+        emit(TPS.kernel_create.1, |e| {
+            e.u64(result).ptr(k);
+        });
+        (result, k)
+    }
+
+    /// `zeKernelDestroy`.
+    pub fn ze_kernel_destroy(&self, kernel: u64) -> u64 {
+        emit(TPS.kernel_destroy.0, |e| {
+            e.ptr(kernel);
+        });
+        let ok = self.state.lock().unwrap().kernels.remove(&kernel).is_some();
+        let result = if ok { ze_result::SUCCESS } else { ze_result::INVALID_NULL_HANDLE };
+        emit(TPS.kernel_destroy.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeKernelSetGroupSize`.
+    pub fn ze_kernel_set_group_size(&self, kernel: u64, x: u32, y: u32, z: u32) -> u64 {
+        emit(TPS.kernel_set_group_size.0, |e| {
+            e.ptr(kernel).u64(x as u64).u64(y as u64).u64(z as u64);
+        });
+        let mut st = self.state.lock().unwrap();
+        let result = match st.kernels.get_mut(&kernel) {
+            Some(k) => {
+                k.group_size = (x, y, z);
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.kernel_set_group_size.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// `zeKernelSetArgumentValue` — `value` is the 8-byte argument (a
+    /// device pointer); both the fabricated `pArgValue` host address and
+    /// the value behind it are traced (paper: "values behind pointers").
+    pub fn ze_kernel_set_argument_value(&self, kernel: u64, index: u32, value: u64) -> u64 {
+        let p_arg = self.desc();
+        emit(TPS.kernel_set_argument_value.0, |e| {
+            e.ptr(kernel).u64(index as u64).u64(8).ptr(p_arg).u64(value);
+        });
+        let mut st = self.state.lock().unwrap();
+        let result = match st.kernels.get_mut(&kernel) {
+            Some(k) => {
+                k.args.insert(index, value);
+                ze_result::SUCCESS
+            }
+            None => ze_result::INVALID_NULL_HANDLE,
+        };
+        drop(st);
+        emit(TPS.kernel_set_argument_value.1, |e| {
+            e.u64(result);
+        });
+        result
+    }
+
+    /// Convenience for layered runtimes (HIP/OMP): pick the engine
+    /// ordinal for a transfer. The fixed runtime uses the copy engine,
+    /// the buggy one (§4.1) the compute engine.
+    pub fn copy_ordinal(&self, device: u64, use_copy_engine: bool) -> u32 {
+        match self.gpu_by_handle(device) {
+            Some(g) if use_copy_engine => g.tiles, // first copy engine
+            _ => 0,                                // compute engine 0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NodeConfig;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{install_session, uninstall_session, SessionConfig};
+
+    fn driver() -> Arc<ZeDriver> {
+        ZeDriver::new(Node::new(NodeConfig::test_small()))
+    }
+
+    /// Full happy-path: init → alloc → copy in → launch saxpy → copy out.
+    #[test]
+    fn end_to_end_saxpy_via_ze_api() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let ze = driver();
+        assert_eq!(ze.ze_init(0), ze_result::SUCCESS);
+        let mut drivers = vec![];
+        let (r, n) = ze.ze_driver_get(&mut drivers);
+        assert_eq!((r, n), (ze_result::SUCCESS, 1));
+        let mut devices = vec![];
+        let (r, n) = ze.ze_device_get(drivers[0], &mut devices);
+        assert_eq!(r, ze_result::SUCCESS);
+        assert_eq!(n, 1);
+        let dev = devices[0];
+        let (_, ctx) = ze.ze_context_create(drivers[0]);
+
+        let elems = 1usize << 20;
+        let bytes = (elems * 4) as u64;
+        let (_, ha) = ze.ze_mem_alloc_host(ctx, 4, 4);
+        let (_, hx) = ze.ze_mem_alloc_host(ctx, bytes, 64);
+        let (_, hy) = ze.ze_mem_alloc_host(ctx, bytes, 64);
+        let (_, da) = ze.ze_mem_alloc_device(ctx, 4, 4, dev);
+        let (_, dx) = ze.ze_mem_alloc_device(ctx, bytes, 64, dev);
+        let (_, dy) = ze.ze_mem_alloc_device(ctx, bytes, 64, dev);
+        let (_, dout) = ze.ze_mem_alloc_device(ctx, bytes, 64, dev);
+        assert!(da >= 0xff00_0000_0000_0000, "device ptrs are 0xff-tagged");
+
+        // host data
+        let gpu = ze.node.gpu(0);
+        gpu.pool.write(ha, &2.0f32.to_le_bytes()).unwrap();
+        gpu.pool
+            .write(hx, &crate::runtime::executor::f32_to_bytes(&vec![3.0; elems]))
+            .unwrap();
+        gpu.pool
+            .write(hy, &crate::runtime::executor::f32_to_bytes(&vec![1.0; elems]))
+            .unwrap();
+
+        let (_, module) = ze.ze_module_create(ctx, dev, "saxpy");
+        assert_ne!(module, 0);
+        let (_, kernel) = ze.ze_kernel_create(module, "saxpy");
+        ze.ze_kernel_set_group_size(kernel, 64, 1, 1);
+        ze.ze_kernel_set_argument_value(kernel, 0, da);
+        ze.ze_kernel_set_argument_value(kernel, 1, dx);
+        ze.ze_kernel_set_argument_value(kernel, 2, dy);
+        ze.ze_kernel_set_argument_value(kernel, 3, dout);
+
+        let (_, queue) = ze.ze_command_queue_create(ctx, dev, 0);
+        let (_, list) = ze.ze_command_list_create(ctx, dev);
+        ze.ze_command_list_append_memory_copy(list, da, ha, 4, 0);
+        ze.ze_command_list_append_memory_copy(list, dx, hx, bytes, 0);
+        ze.ze_command_list_append_memory_copy(list, dy, hy, bytes, 0);
+        ze.ze_command_list_append_launch_kernel(list, kernel, (16, 1, 1), 0);
+        ze.ze_command_list_append_memory_copy(list, hy, dout, bytes, 0);
+        assert_eq!(ze.ze_command_list_close(list), ze_result::SUCCESS);
+        assert_eq!(
+            ze.ze_command_queue_execute_command_lists(queue, &[list]),
+            ze_result::SUCCESS
+        );
+        assert_eq!(ze.ze_command_queue_synchronize(queue, u64::MAX), ze_result::SUCCESS);
+
+        let out = crate::runtime::executor::bytes_to_f32(&gpu.pool.read(hy, bytes).unwrap());
+        assert!(out.iter().all(|&v| (v - 7.0).abs() < 1e-6), "saxpy through ZE wrong");
+
+        let session = uninstall_session().unwrap();
+        let stats = session.stats();
+        // every API call above contributed entry+exit, plus profiling events
+        assert!(stats.written > 40, "expected >40 events, got {}", stats.written);
+        assert_eq!(stats.dropped, 0);
+    }
+
+    #[test]
+    fn event_spin_wait_pattern() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let ze = driver();
+        ze.ze_init(0);
+        let mut drivers = vec![];
+        ze.ze_driver_get(&mut drivers);
+        let mut devices = vec![];
+        ze.ze_device_get(drivers[0], &mut devices);
+        let (_, ctx) = ze.ze_context_create(drivers[0]);
+        let (_, pool) = ze.ze_event_pool_create(ctx, 4);
+        let (_, ev) = ze.ze_event_create(pool);
+        // not signaled: poll returns NOT_READY
+        assert_eq!(ze.ze_event_host_synchronize(ev, 0), ze_result::NOT_READY);
+        assert_eq!(ze.ze_event_query_status(ev), ze_result::NOT_READY);
+        // signal through a barrier command
+        let (_, queue) = ze.ze_command_queue_create(ctx, devices[0], 0);
+        let (_, list) = ze.ze_command_list_create(ctx, devices[0]);
+        ze.ze_command_list_append_barrier(list, ev);
+        ze.ze_command_list_close(list);
+        ze.ze_command_queue_execute_command_lists(queue, &[list]);
+        // spin like HIPLZ does
+        let mut spins = 0u64;
+        while ze.ze_event_host_synchronize(ev, 10_000) != ze_result::SUCCESS {
+            spins += 1;
+            assert!(spins < 1_000_000, "event never signaled");
+        }
+        assert_eq!(ze.ze_event_query_status(ev), ze_result::SUCCESS);
+        ze.ze_event_host_reset(ev);
+        assert_eq!(ze.ze_event_query_status(ev), ze_result::NOT_READY);
+        ze.ze_command_queue_synchronize(queue, u64::MAX);
+        uninstall_session();
+    }
+
+    #[test]
+    fn invalid_handles_return_errors() {
+        let _g = test_support::lock();
+        let ze = driver();
+        assert_eq!(ze.ze_context_destroy(0xbad), ze_result::INVALID_NULL_HANDLE);
+        assert_eq!(ze.ze_command_list_close(0xbad), ze_result::INVALID_NULL_HANDLE);
+        assert_eq!(ze.ze_mem_free(0, 0xbad), ze_result::INVALID_ARGUMENT);
+        let (r, _) = ze.ze_kernel_create(0xbad, "saxpy");
+        assert_eq!(r, ze_result::INVALID_NULL_HANDLE);
+    }
+
+    #[test]
+    fn device_properties_reports_gpu_info() {
+        let _g = test_support::lock();
+        let ze = driver();
+        ze.ze_init(0);
+        let mut drivers = vec![];
+        ze.ze_driver_get(&mut drivers);
+        let mut devices = vec![];
+        ze.ze_device_get(drivers[0], &mut devices);
+        let mut props = ZeDeviceProperties { p_next: 0xdeadbeef, ..Default::default() };
+        assert_eq!(ze.ze_device_get_properties(devices[0], &mut props), ze_result::SUCCESS);
+        assert_eq!(props.num_tiles, 2);
+        assert!(!props.name.is_empty());
+    }
+}

@@ -1,0 +1,53 @@
+//! # THAPI-rs — Tracing Heterogeneous APIs, in Rust
+//!
+//! A reproduction of *"THAPI: Tracing Heterogeneous APIs"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system. The crate contains:
+//!
+//! * [`tracer`] — the LTTng-UST substitute: lockless per-thread ring buffers,
+//!   sessions with selective event enabling, tracing modes, and the BTF
+//!   binary trace format (CTF stand-in).
+//! * [`model`] — the automatic tracepoint-generation pipeline: C-header /
+//!   XML-registry parsing into the YAML API model, meta-parameter
+//!   enrichment, and trace-model / event-class generation (paper Fig. 1b,
+//!   Fig. 3).
+//! * [`runtime`] — PJRT executor: loads the AOT-lowered HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them (real compute
+//!   for every simulated kernel launch).
+//! * [`device`] — the simulated heterogeneous node: GPUs with compute/copy
+//!   engines, command queues/lists, events, device memory, telemetry.
+//! * [`intercept`] — the traced programming-model frontends: Level-Zero,
+//!   CUDA, HIP (layered on Level-Zero, i.e. HIPLZ), OpenCL, MPI and
+//!   OpenMP-offload, each emitting full-context entry/exit events.
+//! * [`analysis`] — the Babeltrace2/Metababel substitute: trace reading,
+//!   time-ordered muxing, interval pairing, and the generated plugins
+//!   (pretty print, tally, timeline, validation).
+//! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
+//! * [`aggregate`] — on-node aggregation and the local-/global-master
+//!   composite-profile merge (paper §3.7).
+//! * [`coordinator`] — the `iprof` launcher: session lifecycle, workload
+//!   execution, post-mortem analysis dispatch.
+//! * [`apps`] — the traced workloads: HeCBench-like mini-apps and
+//!   SPEChpc-like MPI+offload benchmarks, all executing real PJRT kernels.
+//! * [`bench_support`] — the in-crate benchmark harness (criterion
+//!   substitute) used by `benches/`.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod aggregate;
+pub mod analysis;
+pub mod apps;
+pub mod bench_support;
+pub mod coordinator;
+pub mod device;
+pub mod intercept;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod tracer;
+pub mod util;
+
+/// Crate version (also reported in trace metadata env blocks).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,217 @@
+//! `iprof` — the THAPI-rs launcher (paper §3.4).
+//!
+//! ```text
+//! iprof [OPTIONS] -- <workload>[,<workload>...]
+//!
+//!   -m, --mode <minimal|default|full>   tracing mode        [default]
+//!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
+//!   -n, --node <aurora|polaris|small>   node configuration  [small]
+//!   -t, --trace-dir <dir>               persist the BTF trace
+//!       --no-trace                      baseline run (tracing off)
+//!       --ranks <r0,r1,...>             trace only these ranks
+//!       --filter <pattern>              disable matching event classes
+//!   -a, --analysis <tally|pretty|timeline|validate|none>  [tally]
+//!       --scale <f>                     workload intensity  [1.0]
+//!       --list                          list available workloads
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::sync::Arc;
+use thapi::analysis;
+use thapi::apps::{hecbench, spechpc, Workload};
+use thapi::coordinator::{self, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::sampling::SamplingConfig;
+use thapi::tracer::{SinkKind, TracingMode};
+
+struct Options {
+    mode: TracingMode,
+    sample_ms: Option<u64>,
+    node: NodeConfig,
+    trace_dir: Option<std::path::PathBuf>,
+    tracing: bool,
+    ranks: Option<HashSet<u32>>,
+    filters: Vec<String>,
+    analysis: String,
+    workloads: Vec<String>,
+    list: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<Options> {
+    let mut o = Options {
+        mode: TracingMode::Default,
+        sample_ms: None,
+        node: NodeConfig::test_small(),
+        trace_dir: None,
+        tracing: true,
+        ranks: None,
+        filters: Vec::new(),
+        analysis: "tally".into(),
+        workloads: Vec::new(),
+        list: false,
+    };
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-m" | "--mode" => {
+                let v = it.next().context("--mode needs a value")?;
+                o.mode = match v.as_str() {
+                    "minimal" | "min" => TracingMode::Minimal,
+                    "default" => TracingMode::Default,
+                    "full" => TracingMode::Full,
+                    other => bail!("unknown mode {other}"),
+                };
+            }
+            "-s" | "--sample" => {
+                let ms = it
+                    .peek()
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .map(|v| {
+                        it.next();
+                        v
+                    })
+                    .unwrap_or(50);
+                o.sample_ms = Some(ms);
+            }
+            "-n" | "--node" => {
+                let v = it.next().context("--node needs a value")?;
+                o.node = match v.as_str() {
+                    "aurora" => NodeConfig::aurora(),
+                    "polaris" => NodeConfig::polaris(),
+                    "small" => NodeConfig::test_small(),
+                    other => bail!("unknown node {other}"),
+                };
+            }
+            "-t" | "--trace-dir" => {
+                o.trace_dir = Some(it.next().context("--trace-dir needs a value")?.into());
+            }
+            "--no-trace" => o.tracing = false,
+            "--ranks" => {
+                let v = it.next().context("--ranks needs a value")?;
+                o.ranks = Some(
+                    v.split(',')
+                        .map(|r| r.parse::<u32>().context("bad rank"))
+                        .collect::<Result<_>>()?,
+                );
+            }
+            "--filter" => o.filters.push(it.next().context("--filter needs a value")?.clone()),
+            "-a" | "--analysis" => {
+                o.analysis = it.next().context("--analysis needs a value")?.clone();
+            }
+            "--scale" => {
+                let v = it.next().context("--scale needs a value")?;
+                std::env::set_var("THAPI_APP_SCALE", v);
+            }
+            "--list" => o.list = true,
+            "--" => {
+                for w in it.by_ref() {
+                    o.workloads.extend(w.split(',').map(String::from));
+                }
+            }
+            "-h" | "--help" => {
+                println!("{}", HELP);
+                std::process::exit(0);
+            }
+            other => {
+                if other.starts_with('-') {
+                    bail!("unknown option {other} (see --help)");
+                }
+                o.workloads.extend(other.split(',').map(String::from));
+            }
+        }
+    }
+    Ok(o)
+}
+
+const HELP: &str = "iprof — THAPI-rs tracing launcher
+USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
+  -m, --mode <minimal|default|full>    tracing mode [default]
+  -s, --sample [<ms>]                  enable device sampling (50 ms default)
+  -n, --node <aurora|polaris|small>    node configuration [small]
+  -t, --trace-dir <dir>                persist the BTF trace to <dir>
+      --no-trace                       baseline run (tracing off)
+      --ranks <r0,r1,...>              trace only these ranks
+      --filter <pattern>               disable matching event classes
+  -a, --analysis <tally|pretty|timeline|validate|none>   [tally]
+      --scale <f>                      workload intensity multiplier
+      --list                           list available workloads";
+
+fn all_workloads() -> Vec<Arc<dyn Workload>> {
+    let mut v = hecbench::suite();
+    v.extend(spechpc::suite());
+    v
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let o = parse_args(&args)?;
+
+    let registry = all_workloads();
+    if o.list || o.workloads.is_empty() {
+        println!("available workloads:");
+        for w in &registry {
+            println!("  {:<22} [{}]", w.name(), w.backend());
+        }
+        if o.workloads.is_empty() && !o.list {
+            println!("\nrun: iprof [OPTIONS] <workload>");
+        }
+        return Ok(());
+    }
+
+    let node = Node::new(o.node.clone());
+    let config = IprofConfig {
+        tracing: o.tracing,
+        mode: o.mode,
+        sampling: o.sample_ms.map(|ms| SamplingConfig {
+            interval: std::time::Duration::from_millis(ms),
+        }),
+        sink: match &o.trace_dir {
+            Some(d) => SinkKind::Dir(d.clone()),
+            None => SinkKind::Memory,
+        },
+        selected_ranks: o.ranks.clone(),
+        disabled_patterns: o.filters.clone(),
+        ..Default::default()
+    };
+
+    for name in &o.workloads {
+        let w = registry
+            .iter()
+            .find(|w| w.name() == name)
+            .with_context(|| format!("unknown workload {name} (try --list)"))?;
+        eprintln!("iprof: running {name} [{}] config={}", w.backend(), config.label());
+        let report = coordinator::run(&node, w.as_ref(), &config);
+        eprintln!(
+            "iprof: {name}: wall={:.3}s events={} dropped={} trace={}B",
+            report.wall.as_secs_f64(),
+            report.stats.as_ref().map(|s| s.written).unwrap_or(0),
+            report.stats.as_ref().map(|s| s.dropped).unwrap_or(0),
+            report.trace_bytes()
+        );
+        if let Some(trace) = &report.trace {
+            let parsed = analysis::parse_trace(trace)?;
+            let msgs = analysis::mux(&parsed);
+            match o.analysis.as_str() {
+                "tally" => {
+                    let iv = analysis::pair_intervals(&msgs);
+                    println!("{}", analysis::Tally::build(&iv, &msgs).render());
+                }
+                "pretty" => print!("{}", analysis::pretty_print(&msgs)),
+                "timeline" => {
+                    let iv = analysis::pair_intervals(&msgs);
+                    let path = format!("{name}.trace.json");
+                    std::fs::write(&path, analysis::timeline_json(&iv, &msgs))?;
+                    eprintln!("iprof: wrote {path} (open in Perfetto)");
+                }
+                "validate" => {
+                    let findings = analysis::validate(&msgs);
+                    print!("{}", analysis::validate::render_report(&findings));
+                }
+                "none" => {}
+                other => bail!("unknown analysis {other}"),
+            }
+        }
+    }
+    Ok(())
+}

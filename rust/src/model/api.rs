@@ -1,0 +1,310 @@
+//! Core types of the API model and the generated trace model.
+
+use std::fmt;
+
+/// The programming-model APIs THAPI-rs supports (paper: OpenCL, CUDA,
+/// Level-Zero, HIP, MPI, OpenMP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Api {
+    /// Intel Level-Zero (`ze*`).
+    Ze,
+    /// CUDA driver API (`cu*`).
+    Cuda,
+    /// HIP (`hip*`) — implemented on the Level-Zero backend (HIPLZ).
+    Hip,
+    /// OpenCL (`cl*`).
+    Cl,
+    /// MPI (`MPI_*`).
+    Mpi,
+    /// OpenMP target offload (OMPT-style callbacks, `omp_*`).
+    Omp,
+    /// THAPI-internal: GPU profiling pseudo-events.
+    Profiling,
+    /// THAPI-internal: device telemetry sampling events.
+    Sampling,
+}
+
+impl Api {
+    /// The LTTng provider-name prefix used in event names,
+    /// e.g. `lttng_ust_ze`.
+    pub fn provider(&self) -> &'static str {
+        match self {
+            Api::Ze => "lttng_ust_ze",
+            Api::Cuda => "lttng_ust_cuda",
+            Api::Hip => "lttng_ust_hip",
+            Api::Cl => "lttng_ust_opencl",
+            Api::Mpi => "lttng_ust_mpi",
+            Api::Omp => "lttng_ust_omp",
+            Api::Profiling => "lttng_ust_profiling",
+            Api::Sampling => "lttng_ust_sampling",
+        }
+    }
+
+    /// Short label used in tally "BACKEND_*" headers.
+    pub fn backend_label(&self) -> &'static str {
+        match self {
+            Api::Ze => "ZE",
+            Api::Cuda => "CUDA",
+            Api::Hip => "HIP",
+            Api::Cl => "CL",
+            Api::Mpi => "MPI",
+            Api::Omp => "OMP",
+            Api::Profiling => "GPU",
+            Api::Sampling => "SAMPLING",
+        }
+    }
+
+    /// All externally traced APIs (not the internal pseudo-providers).
+    pub fn all_external() -> [Api; 6] {
+        [Api::Ze, Api::Cuda, Api::Hip, Api::Cl, Api::Mpi, Api::Omp]
+    }
+}
+
+impl fmt::Display for Api {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.backend_label())
+    }
+}
+
+/// A C type as parsed from the API headers — just enough structure to
+/// drive tracepoint generation (paper Fig. 3 "API Model: params/type").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CType {
+    /// `void`.
+    Void,
+    /// Signed integer type of the given bit width (`int`, `int64_t`, ...).
+    Int { bits: u8, name: String },
+    /// Unsigned integer type (`uint32_t`, `size_t`, ...).
+    Uint { bits: u8, name: String },
+    /// Floating-point type (`float`, `double`).
+    Float { bits: u8, name: String },
+    /// `char*` / `const char*` — traced as a string.
+    CString,
+    /// A named handle type (`ze_driver_handle_t`, `CUdeviceptr`, ...).
+    Handle { name: String },
+    /// An enum type (`ze_result_t`, `CUresult`, ...).
+    Enum { name: String },
+    /// Pointer to `inner` (`const` flag kept for in/out inference).
+    Ptr { inner: Box<CType>, is_const: bool },
+}
+
+impl CType {
+    /// The display name of the type (as written in the header).
+    pub fn name(&self) -> String {
+        match self {
+            CType::Void => "void".into(),
+            CType::Int { name, .. }
+            | CType::Uint { name, .. }
+            | CType::Float { name, .. }
+            | CType::Handle { name }
+            | CType::Enum { name } => name.clone(),
+            CType::CString => "const char*".into(),
+            CType::Ptr { inner, is_const } => {
+                if *is_const {
+                    format!("const {}*", inner.name())
+                } else {
+                    format!("{}*", inner.name())
+                }
+            }
+        }
+    }
+
+    /// True if this is any pointer type.
+    pub fn is_pointer(&self) -> bool {
+        matches!(self, CType::Ptr { .. } | CType::CString)
+    }
+
+    /// The trace field type a *by-value* occurrence of this type maps to.
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            CType::Int { .. } => FieldType::I64,
+            CType::Uint { .. } | CType::Enum { .. } => FieldType::U64,
+            CType::Float { .. } => FieldType::F64,
+            CType::Handle { .. } => FieldType::Ptr,
+            CType::CString => FieldType::Str,
+            CType::Ptr { .. } => FieldType::Ptr,
+            CType::Void => FieldType::U64,
+        }
+    }
+}
+
+/// One formal parameter of an API function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    /// Parameter name as written in the header.
+    pub name: String,
+    /// Parsed C type.
+    pub ty: CType,
+}
+
+/// One API function in the API model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FnModel {
+    /// Function name (`zeCommandListAppendMemoryCopy`, ...).
+    pub name: String,
+    /// Return type.
+    pub ret: CType,
+    /// Formal parameters, in order.
+    pub params: Vec<Param>,
+}
+
+/// The API model for one programming model: the parsed functions plus the
+/// enum values needed to pretty-print results.
+#[derive(Debug, Clone, Default)]
+pub struct ApiModel {
+    /// Which API this model describes.
+    pub api: Option<Api>,
+    /// Functions, in header order.
+    pub functions: Vec<FnModel>,
+    /// Enum definitions: name -> (value-name, value) pairs.
+    pub enums: Vec<(String, Vec<(String, i64)>)>,
+}
+
+impl ApiModel {
+    /// Find a function by name.
+    pub fn function(&self, name: &str) -> Option<&FnModel> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+}
+
+/// Wire type of one trace field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    /// 32-bit unsigned.
+    U32,
+    /// 64-bit unsigned.
+    U64,
+    /// 64-bit signed.
+    I64,
+    /// 64-bit float.
+    F64,
+    /// Pointer/handle (u64, hex-rendered).
+    Ptr,
+    /// Length-prefixed UTF-8 string.
+    Str,
+}
+
+/// One field of an event class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FieldDef {
+    /// Field name (parameter name, `*param` for dereferenced out-values,
+    /// or `result`).
+    pub name: String,
+    /// Wire type.
+    pub ty: FieldType,
+}
+
+impl FieldDef {
+    /// Construct a field definition.
+    pub fn new(name: impl Into<String>, ty: FieldType) -> Self {
+        FieldDef { name: name.into(), ty }
+    }
+}
+
+/// Behavioural flags on an event class, driving tracing-mode selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassFlags {
+    /// Entry/exit of a host API call.
+    pub host_api: bool,
+    /// A "non-spawned" polling API (e.g. `zeEventQueryStatus`) invoked in
+    /// spin-lock scenarios — excluded from the *default* tracing mode.
+    pub polling: bool,
+    /// A device-command event (launch/append) — kept in *minimal* mode.
+    pub device_command: bool,
+    /// GPU profiling pseudo-event (device timings) — kept in *minimal*.
+    pub profiling: bool,
+    /// Telemetry sampling event.
+    pub sampling: bool,
+}
+
+/// A generated event class: the runtime descriptor of one tracepoint
+/// (paper Fig. 3 "Lttng Trace Model" + `TRACEPOINT_EVENT`).
+#[derive(Debug, Clone)]
+pub struct EventClass {
+    /// Stable id assigned by the registry (index into the enable bitmap).
+    pub id: u32,
+    /// Full event name, e.g. `lttng_ust_ze:zeCommandListAppendMemoryCopy_entry`.
+    pub name: String,
+    /// Originating API.
+    pub api: Api,
+    /// Payload fields in wire order.
+    pub fields: Vec<FieldDef>,
+    /// Mode-selection flags.
+    pub flags: ClassFlags,
+}
+
+impl EventClass {
+    /// Test helper: build a descriptor outside the registry.
+    pub fn new_for_test(name: &str, fields: Vec<FieldDef>) -> Self {
+        EventClass {
+            id: 0,
+            name: name.into(),
+            api: Api::Ze,
+            fields,
+            flags: ClassFlags::default(),
+        }
+    }
+
+    /// The API function name this class traces (strips provider prefix and
+    /// `_entry`/`_exit` suffix).
+    pub fn api_function(&self) -> &str {
+        let base = self.name.split(':').nth(1).unwrap_or(&self.name);
+        base.strip_suffix("_entry")
+            .or_else(|| base.strip_suffix("_exit"))
+            .unwrap_or(base)
+    }
+
+    /// True if this is an `_entry` event.
+    pub fn is_entry(&self) -> bool {
+        self.name.ends_with("_entry")
+    }
+
+    /// True if this is an `_exit` event.
+    pub fn is_exit(&self) -> bool {
+        self.name.ends_with("_exit")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctype_names() {
+        let t = CType::Ptr {
+            inner: Box::new(CType::Uint { bits: 64, name: "uint64_t".into() }),
+            is_const: true,
+        };
+        assert_eq!(t.name(), "const uint64_t*");
+        assert!(t.is_pointer());
+        assert_eq!(t.field_type(), FieldType::Ptr);
+    }
+
+    #[test]
+    fn event_class_name_helpers() {
+        let c = EventClass::new_for_test("lttng_ust_ze:zeInit_entry", vec![]);
+        assert_eq!(c.api_function(), "zeInit");
+        assert!(c.is_entry());
+        assert!(!c.is_exit());
+    }
+
+    #[test]
+    fn api_provider_prefixes() {
+        assert_eq!(Api::Ze.provider(), "lttng_ust_ze");
+        assert_eq!(Api::Cuda.provider(), "lttng_ust_cuda");
+        assert_eq!(Api::all_external().len(), 6);
+    }
+
+    #[test]
+    fn field_type_mapping() {
+        assert_eq!(
+            CType::Int { bits: 32, name: "int".into() }.field_type(),
+            FieldType::I64
+        );
+        assert_eq!(CType::CString.field_type(), FieldType::Str);
+        assert_eq!(
+            CType::Enum { name: "ze_result_t".into() }.field_type(),
+            FieldType::U64
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! C-header-subset parser: prototypes + typedefs -> [`ApiModel`].
+//!
+//! THAPI parses the real vendor headers (CUDA, Level-Zero, HIP, OpenMP)
+//! to build its API model; this module does the same for the bundled
+//! header subset in `assets/headers/`. Supported grammar:
+//!
+//! * `typedef struct _X *X;` — declares an opaque handle type `X`.
+//! * `typedef enum _X { NAME = INT, ... } X;` — declares an enum with values.
+//! * `RET name(TYPE p1, TYPE p2, ...);` — a function prototype (may span
+//!   lines). `TYPE` is `[const] base [*...*]`.
+//! * `/* ... */` and `//` comments are stripped.
+
+use super::api::{ApiModel, CType, FnModel, Param};
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Parse a bundled header into an API model.
+pub fn parse_header(src: &str) -> Result<ApiModel> {
+    let clean = strip_comments(src);
+    let mut model = ApiModel::default();
+    let mut handles: HashSet<String> = HashSet::new();
+    let mut enums: HashMap<String, Vec<(String, i64)>> = HashMap::new();
+
+    // Statements are ';'-terminated. Enum bodies contain no ';'.
+    for stmt in clean.split(';') {
+        let stmt = stmt.trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        if let Some(rest) = stmt.strip_prefix("typedef") {
+            parse_typedef(rest.trim(), &mut handles, &mut enums)
+                .with_context(|| format!("bad typedef: {stmt}"))?;
+        } else {
+            let f = parse_proto(stmt, &handles, &enums)
+                .with_context(|| format!("bad prototype: {stmt}"))?;
+            model.functions.push(f);
+        }
+    }
+    model.enums = enums.into_iter().collect();
+    model.enums.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(model)
+}
+
+fn strip_comments(src: &str) -> String {
+    let mut out = String::with_capacity(src.len());
+    let mut chars = src.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '/' && chars.peek() == Some(&'*') {
+            chars.next();
+            let mut prev = ' ';
+            for c2 in chars.by_ref() {
+                if prev == '*' && c2 == '/' {
+                    break;
+                }
+                prev = c2;
+            }
+            out.push(' ');
+        } else if c == '/' && chars.peek() == Some(&'/') {
+            for c2 in chars.by_ref() {
+                if c2 == '\n' {
+                    out.push('\n');
+                    break;
+                }
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn parse_typedef(
+    rest: &str,
+    handles: &mut HashSet<String>,
+    enums: &mut HashMap<String, Vec<(String, i64)>>,
+) -> Result<()> {
+    if let Some(rest) = rest.strip_prefix("struct") {
+        // typedef struct _X *X   (opaque handle)  or struct body (skipped)
+        if let Some(star) = rest.find('*') {
+            let name = rest[star + 1..].trim().to_string();
+            if name.is_empty() {
+                bail!("missing handle name");
+            }
+            handles.insert(name);
+        }
+        Ok(())
+    } else if let Some(rest) = rest.strip_prefix("enum") {
+        let open = rest.find('{').context("enum without body")?;
+        let close = rest.rfind('}').context("enum without closing brace")?;
+        let body = &rest[open + 1..close];
+        let name = rest[close + 1..].trim().to_string();
+        let mut values = Vec::new();
+        let mut next = 0i64;
+        for item in body.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (vname, value) = match item.split_once('=') {
+                Some((n, v)) => {
+                    let value = v.trim().parse::<i64>().context("bad enum value")?;
+                    (n.trim().to_string(), value)
+                }
+                None => (item.to_string(), next),
+            };
+            next = value + 1;
+            values.push((vname, value));
+        }
+        if name.is_empty() {
+            bail!("anonymous enum");
+        }
+        enums.insert(name, values);
+        Ok(())
+    } else {
+        bail!("unsupported typedef kind: {rest}");
+    }
+}
+
+/// Parse a type expression like `const ze_event_handle_t*` or `uint32_t`.
+fn parse_type(
+    expr: &str,
+    handles: &HashSet<String>,
+    enums: &HashMap<String, Vec<(String, i64)>>,
+) -> Result<CType> {
+    let mut s = expr.trim().to_string();
+    // count and strip trailing stars
+    let mut stars = 0;
+    while s.ends_with('*') {
+        s.pop();
+        s = s.trim_end().to_string();
+        stars += 1;
+    }
+    let is_const = if let Some(r) = s.strip_prefix("const ") {
+        s = r.trim().to_string();
+        true
+    } else {
+        false
+    };
+    // also allow stars between const and the name already handled above
+    let base = match s.as_str() {
+        "void" => CType::Void,
+        "char" => {
+            // `char*` is a C string; bare `char` unlikely in our headers
+            if stars > 0 {
+                let mut t = CType::CString;
+                for _ in 1..stars {
+                    t = CType::Ptr { inner: Box::new(t), is_const };
+                }
+                return Ok(t);
+            }
+            CType::Int { bits: 8, name: "char".into() }
+        }
+        "int" | "int32_t" => CType::Int { bits: 32, name: s.clone() },
+        "int64_t" => CType::Int { bits: 64, name: s.clone() },
+        "uint32_t" | "unsigned" | "unsigned int" | "cl_uint" => {
+            CType::Uint { bits: 32, name: s.clone() }
+        }
+        "uint64_t" | "size_t" | "intptr_t" => CType::Uint { bits: 64, name: s.clone() },
+        "float" => CType::Float { bits: 32, name: s.clone() },
+        "double" => CType::Float { bits: 64, name: s.clone() },
+        other => {
+            if enums.contains_key(other) {
+                CType::Enum { name: other.into() }
+            } else if handles.contains(other) {
+                CType::Handle { name: other.into() }
+            } else {
+                // Unknown named type (struct descriptor etc.) — opaque.
+                CType::Handle { name: other.into() }
+            }
+        }
+    };
+    let mut t = base;
+    for _ in 0..stars {
+        t = CType::Ptr { inner: Box::new(t), is_const };
+    }
+    Ok(t)
+}
+
+fn parse_proto(
+    stmt: &str,
+    handles: &HashSet<String>,
+    enums: &HashMap<String, Vec<(String, i64)>>,
+) -> Result<FnModel> {
+    let stmt: String = stmt.split_whitespace().collect::<Vec<_>>().join(" ");
+    let open = stmt.find('(').context("no '(' in prototype")?;
+    let close = stmt.rfind(')').context("no ')' in prototype")?;
+    let head = stmt[..open].trim();
+    let args = &stmt[open + 1..close];
+
+    let name_start = head.rfind(|c: char| c.is_whitespace() || c == '*').map(|i| i + 1).unwrap_or(0);
+    let name = head[name_start..].to_string();
+    let ret_expr = head[..name_start].trim();
+    let ret = parse_type(ret_expr, handles, enums)?;
+    if name.is_empty() {
+        bail!("missing function name");
+    }
+
+    let mut params = Vec::new();
+    if args.trim() != "void" && !args.trim().is_empty() {
+        for arg in args.split(',') {
+            let arg: String = arg.split_whitespace().collect::<Vec<_>>().join(" ");
+            // Parameter name is the last identifier; stars may be glued to it.
+            let pos = arg
+                .rfind(|c: char| c.is_whitespace() || c == '*')
+                .context("cannot split parameter")?;
+            let (ty_expr, pname) = arg.split_at(pos + 1);
+            let ty = parse_type(ty_expr, handles, enums)?;
+            params.push(Param { name: pname.trim().to_string(), ty });
+        }
+    }
+    Ok(FnModel { name, ret, params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::api::FieldType;
+
+    const HDR: &str = r#"
+        /* comment */
+        typedef enum _ze_result_t { ZE_OK = 0, ZE_NOT_READY = 1, } ze_result_t;
+        typedef struct _ze_driver_handle_t *ze_driver_handle_t;
+        ze_result_t zeInit(uint32_t flags);
+        ze_result_t zeDriverGet(uint32_t* pCount, ze_driver_handle_t* phDrivers);
+        ze_result_t zeMemCopy(void* dst, const void* src, size_t size);
+        ze_result_t zeName(const char* name); // trailing comment
+        ze_result_t zeNoArgs(void);
+    "#;
+
+    #[test]
+    fn parses_functions_and_types() {
+        let m = parse_header(HDR).unwrap();
+        assert_eq!(m.functions.len(), 5);
+        let f = m.function("zeInit").unwrap();
+        assert_eq!(f.params.len(), 1);
+        assert_eq!(f.params[0].name, "flags");
+        assert_eq!(f.params[0].ty.field_type(), FieldType::U64);
+        assert!(matches!(f.ret, CType::Enum { .. }));
+    }
+
+    #[test]
+    fn pointer_params_are_pointers() {
+        let m = parse_header(HDR).unwrap();
+        let f = m.function("zeDriverGet").unwrap();
+        assert!(f.params[0].ty.is_pointer());
+        assert!(f.params[1].ty.is_pointer());
+        assert_eq!(f.params[1].name, "phDrivers");
+    }
+
+    #[test]
+    fn const_void_ptr_and_cstring() {
+        let m = parse_header(HDR).unwrap();
+        let f = m.function("zeMemCopy").unwrap();
+        assert!(matches!(&f.params[1].ty, CType::Ptr { is_const: true, .. }));
+        let g = m.function("zeName").unwrap();
+        assert_eq!(g.params[0].ty.field_type(), FieldType::Str);
+    }
+
+    #[test]
+    fn void_arglist_is_empty() {
+        let m = parse_header(HDR).unwrap();
+        assert!(m.function("zeNoArgs").unwrap().params.is_empty());
+    }
+
+    #[test]
+    fn enum_values_recorded() {
+        let m = parse_header(HDR).unwrap();
+        let (_, vals) = m.enums.iter().find(|(n, _)| n == "ze_result_t").unwrap();
+        assert_eq!(vals[0], ("ZE_OK".to_string(), 0));
+        assert_eq!(vals[1], ("ZE_NOT_READY".to_string(), 1));
+    }
+
+    #[test]
+    fn parses_all_bundled_headers() {
+        for (name, src) in super::super::headers::ALL_HEADERS {
+            let m = parse_header(src).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(!m.functions.is_empty(), "{name} has no functions");
+        }
+    }
+}

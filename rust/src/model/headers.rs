@@ -1,0 +1,27 @@
+//! Bundled API descriptions (embedded at compile time).
+//!
+//! THAPI consumes the vendor headers / Khronos XML shipped with the
+//! toolchains; THAPI-rs bundles equivalent subsets under `assets/` and
+//! embeds them so the binary is self-contained.
+
+/// Level-Zero header subset.
+pub const ZE_HEADER: &str = include_str!("../../../assets/headers/ze_api.h");
+/// CUDA driver API header subset.
+pub const CUDA_HEADER: &str = include_str!("../../../assets/headers/cuda.h");
+/// HIP header subset.
+pub const HIP_HEADER: &str = include_str!("../../../assets/headers/hip.h");
+/// MPI header subset.
+pub const MPI_HEADER: &str = include_str!("../../../assets/headers/mpi.h");
+/// OpenMP target-offload header subset.
+pub const OMP_HEADER: &str = include_str!("../../../assets/headers/omp.h");
+/// OpenCL XML registry subset.
+pub const CL_XML: &str = include_str!("../../../assets/cl_api.xml");
+
+/// All C-parsed headers as (name, source) pairs.
+pub const ALL_HEADERS: &[(&str, &str)] = &[
+    ("ze_api.h", ZE_HEADER),
+    ("cuda.h", CUDA_HEADER),
+    ("hip.h", HIP_HEADER),
+    ("mpi.h", MPI_HEADER),
+    ("omp.h", OMP_HEADER),
+];

@@ -1,0 +1,201 @@
+//! Meta-parameters: the "expert knowledge" layer of the API model.
+//!
+//! Headers alone cannot say whether a pointer is in or out, or that the
+//! value *behind* a pointer should be recorded (paper §3.3, Scenario 2 /
+//! Fig. 3 "Meta-parameter" block, e.g. `cuMemGetInfo: [OutScalar, free]`).
+//! This module is that supplementary metadata for every bundled API, plus
+//! the behavioural rule tables (polling APIs, device commands) that drive
+//! tracing-mode selection.
+
+use super::api::{Api, FieldType};
+
+/// One meta-parameter: how to enrich the generated tracepoints for a
+/// single API-function parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Meta {
+    /// At *exit*, record the value behind this scalar out-pointer as u64.
+    OutScalarU64(&'static str),
+    /// At *exit*, record the value behind this scalar out-pointer as i64.
+    OutScalarI64(&'static str),
+    /// At *exit*, record the handle/pointer written through this
+    /// out-pointer (e.g. `*phContext`).
+    OutHandle(&'static str),
+    /// At *entry*, record the 8-byte value behind this in-pointer
+    /// (e.g. the device pointer passed via `pArgValue`).
+    InScalarU64(&'static str),
+    /// At *entry*, record the `pNext` field of the struct behind this
+    /// pointer (enables the §4.2 uninitialized-pNext validation).
+    InStructPNext(&'static str),
+}
+
+impl Meta {
+    /// The parameter this meta applies to.
+    pub fn param(&self) -> &'static str {
+        match self {
+            Meta::OutScalarU64(p)
+            | Meta::OutScalarI64(p)
+            | Meta::OutHandle(p)
+            | Meta::InScalarU64(p)
+            | Meta::InStructPNext(p) => p,
+        }
+    }
+
+    /// True if the extra field is recorded on the entry event.
+    pub fn at_entry(&self) -> bool {
+        matches!(self, Meta::InScalarU64(_) | Meta::InStructPNext(_))
+    }
+
+    /// The generated extra field name.
+    pub fn field_name(&self) -> String {
+        match self {
+            Meta::InStructPNext(p) => format!("{p}_pNext"),
+            m => format!("*{}", m.param()),
+        }
+    }
+
+    /// The generated extra field type.
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            Meta::OutScalarU64(_) | Meta::InScalarU64(_) => FieldType::U64,
+            Meta::OutScalarI64(_) => FieldType::I64,
+            Meta::OutHandle(_) | Meta::InStructPNext(_) => FieldType::Ptr,
+        }
+    }
+}
+
+/// Meta-parameters for one API function.
+pub fn metaparams(api: Api, function: &str) -> &'static [Meta] {
+    use Meta::*;
+    match (api, function) {
+        // ---- Level-Zero --------------------------------------------------
+        (Api::Ze, "zeDriverGet") => &[OutScalarU64("pCount"), OutHandle("phDrivers")],
+        (Api::Ze, "zeDeviceGet") => &[OutScalarU64("pCount"), OutHandle("phDevices")],
+        (Api::Ze, "zeDeviceGetProperties") => &[InStructPNext("pDeviceProperties")],
+        (Api::Ze, "zeContextCreate") => &[OutHandle("phContext")],
+        (Api::Ze, "zeMemAllocDevice") | (Api::Ze, "zeMemAllocHost") | (Api::Ze, "zeMemAllocShared") => {
+            &[OutHandle("pptr")]
+        }
+        (Api::Ze, "zeCommandQueueCreate") => &[OutHandle("phCommandQueue")],
+        (Api::Ze, "zeCommandListCreate") => &[OutHandle("phCommandList")],
+        (Api::Ze, "zeEventPoolCreate") => &[OutHandle("phEventPool")],
+        (Api::Ze, "zeEventCreate") => &[OutHandle("phEvent")],
+        (Api::Ze, "zeModuleCreate") => &[OutHandle("phModule"), OutHandle("phBuildLog")],
+        (Api::Ze, "zeKernelCreate") => &[OutHandle("phKernel")],
+        (Api::Ze, "zeKernelSetArgumentValue") => &[InScalarU64("pArgValue")],
+        // ---- CUDA --------------------------------------------------------
+        (Api::Cuda, "cuDeviceGetCount") => &[OutScalarI64("count")],
+        (Api::Cuda, "cuDeviceGet") => &[OutHandle("device")],
+        (Api::Cuda, "cuCtxCreate") => &[OutHandle("pctx")],
+        (Api::Cuda, "cuMemGetInfo") => &[OutScalarU64("free"), OutScalarU64("total")],
+        (Api::Cuda, "cuMemAlloc") => &[OutHandle("dptr")],
+        (Api::Cuda, "cuMemAllocHost") => &[OutHandle("pp")],
+        (Api::Cuda, "cuModuleLoadData") => &[OutHandle("module")],
+        (Api::Cuda, "cuModuleGetFunction") => &[OutHandle("hfunc")],
+        (Api::Cuda, "cuStreamCreate") => &[OutHandle("phStream")],
+        (Api::Cuda, "cuEventCreate") => &[OutHandle("phEvent")],
+        // ---- HIP ---------------------------------------------------------
+        (Api::Hip, "hipGetDeviceCount") => &[OutScalarI64("count")],
+        (Api::Hip, "hipMalloc") => &[OutHandle("ptr")],
+        (Api::Hip, "hipModuleLoad") => &[OutHandle("module")],
+        (Api::Hip, "hipModuleGetFunction") => &[OutHandle("function")],
+        (Api::Hip, "hipStreamCreate") => &[OutHandle("stream")],
+        (Api::Hip, "hipRegisterFatBinary") => &[OutHandle("handle")],
+        // ---- MPI -----------------------------------------------------------
+        (Api::Mpi, "MPI_Comm_size") => &[OutScalarI64("size")],
+        (Api::Mpi, "MPI_Comm_rank") => &[OutScalarI64("rank")],
+        (Api::Mpi, "MPI_Isend") | (Api::Mpi, "MPI_Irecv") => &[OutHandle("request")],
+        (Api::Mpi, "MPI_Test") => &[OutScalarI64("flag")],
+        // ---- OpenMP --------------------------------------------------------
+        (Api::Omp, "omp_target_alloc") => &[OutHandle("ptr")],
+        // ---- OpenCL --------------------------------------------------------
+        (Api::Cl, "clGetPlatformIDs") => &[OutScalarU64("num_platforms")],
+        (Api::Cl, "clGetDeviceIDs") => &[OutScalarU64("num_devices")],
+        (Api::Cl, "clCreateContext")
+        | (Api::Cl, "clCreateCommandQueue")
+        | (Api::Cl, "clCreateBuffer")
+        | (Api::Cl, "clCreateProgramWithSource")
+        | (Api::Cl, "clCreateKernel") => &[OutScalarI64("errcode_ret")],
+        (Api::Cl, "clEnqueueWriteBuffer")
+        | (Api::Cl, "clEnqueueReadBuffer")
+        | (Api::Cl, "clEnqueueNDRangeKernel") => &[OutHandle("event")],
+        _ => &[],
+    }
+}
+
+/// Is this a "non-spawned" polling API (excluded from the *default*
+/// tracing mode; paper §5.2: "e.g., cuQueryEvent, mpiEventReady")?
+pub fn is_polling(api: Api, function: &str) -> bool {
+    matches!(
+        (api, function),
+        (Api::Ze, "zeEventQueryStatus")
+            | (Api::Cuda, "cuEventQuery")
+            | (Api::Cuda, "cuStreamQuery")
+            | (Api::Mpi, "MPI_Test")
+    )
+}
+
+/// Is this a device-command API (kept in *minimal* mode: launches,
+/// memory transfers, submissions)?
+pub fn is_device_command(api: Api, function: &str) -> bool {
+    let f = function;
+    match api {
+        Api::Ze => {
+            f.starts_with("zeCommandListAppend")
+                || f == "zeCommandQueueExecuteCommandLists"
+                || f == "zeCommandQueueSynchronize"
+        }
+        Api::Cuda => {
+            f.starts_with("cuMemcpy") || f == "cuLaunchKernel" || f == "cuCtxSynchronize"
+        }
+        Api::Hip => f == "hipMemcpy" || f == "hipLaunchKernel" || f == "hipDeviceSynchronize",
+        Api::Cl => f.starts_with("clEnqueue") || f == "clFinish",
+        Api::Omp => f == "ompt_target_submit" || f == "ompt_target_data_op",
+        Api::Mpi => false,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cu_mem_get_info_matches_paper_fig3() {
+        // Fig. 3: cuMemGetInfo: [OutScalar, free], [OutScalar, total]
+        let m = metaparams(Api::Cuda, "cuMemGetInfo");
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], Meta::OutScalarU64("free"));
+        assert_eq!(m[1], Meta::OutScalarU64("total"));
+        assert!(!m[0].at_entry());
+        assert_eq!(m[0].field_name(), "*free");
+    }
+
+    #[test]
+    fn pnext_meta_is_entry_side() {
+        let m = metaparams(Api::Ze, "zeDeviceGetProperties");
+        assert_eq!(m.len(), 1);
+        assert!(m[0].at_entry());
+        assert_eq!(m[0].field_name(), "pDeviceProperties_pNext");
+        assert_eq!(m[0].field_type(), FieldType::Ptr);
+    }
+
+    #[test]
+    fn polling_tables() {
+        assert!(is_polling(Api::Ze, "zeEventQueryStatus"));
+        assert!(is_polling(Api::Cuda, "cuEventQuery"));
+        assert!(!is_polling(Api::Ze, "zeEventHostSynchronize"));
+    }
+
+    #[test]
+    fn device_command_tables() {
+        assert!(is_device_command(Api::Ze, "zeCommandListAppendMemoryCopy"));
+        assert!(is_device_command(Api::Cuda, "cuLaunchKernel"));
+        assert!(is_device_command(Api::Cl, "clEnqueueNDRangeKernel"));
+        assert!(!is_device_command(Api::Ze, "zeMemAllocDevice"));
+    }
+
+    #[test]
+    fn unknown_function_has_no_meta() {
+        assert!(metaparams(Api::Ze, "zeInit").is_empty());
+    }
+}

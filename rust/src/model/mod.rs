@@ -1,0 +1,37 @@
+//! Automatic tracepoint generation (paper §3.3, Fig. 1b, Fig. 3).
+//!
+//! The pipeline reproduced here, end to end:
+//!
+//! ```text
+//! API headers (assets/headers/*.h)      OpenCL XML (assets/cl_api.xml)
+//!        │ [cparse]                            │ [xml]
+//!        └──────────────► API model ◄──────────┘
+//!                            │  + meta-parameters [metaparams]
+//!                            ▼  (in/out semantics, expert knowledge)
+//!                     YAML API model [yaml]   (the interchange form)
+//!                            │  [tracepoints]
+//!                            ▼
+//!            trace model: event classes (entry/exit, typed fields)
+//!                            │  [registry]
+//!                            ▼
+//!        runtime tracepoint registry (stable ids, enable bitmaps)
+//! ```
+//!
+//! The interception frontends in [`crate::intercept`] resolve their event
+//! classes from the registry at startup; the debug-mode [`crate::tracer::Encoder`]
+//! asserts the emitted fields match the generated descriptors, so wrappers
+//! cannot drift from the model.
+
+pub mod api;
+pub mod cparse;
+pub mod headers;
+pub mod metaparams;
+pub mod registry;
+pub mod tracepoints;
+pub mod xml;
+pub mod yaml;
+
+pub use api::{
+    Api, ApiModel, CType, ClassFlags, EventClass, FieldDef, FieldType, FnModel, Param,
+};
+pub use registry::{all_classes, class_by_name, class_count, registry};

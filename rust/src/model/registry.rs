@@ -1,0 +1,170 @@
+//! Runtime tracepoint registry: stable event-class ids + name lookup.
+//!
+//! Built once (lazily) by running the whole generation pipeline over the
+//! bundled API descriptions. Classes are leaked to `&'static` so the
+//! emit hot path can hold plain references with zero refcounting.
+
+use super::api::{Api, ApiModel, EventClass};
+use super::cparse::parse_header;
+use super::headers;
+use super::tracepoints::{generate_classes, internal_classes};
+use super::xml::parse_cl_registry;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+
+/// The global tracepoint registry.
+pub struct Registry {
+    classes: Vec<&'static EventClass>,
+    by_name: HashMap<&'static str, &'static EventClass>,
+    models: HashMap<Api, ApiModel>,
+}
+
+impl Registry {
+    fn build() -> Self {
+        let mut models: Vec<(Api, ApiModel)> = vec![
+            (Api::Ze, parse_header(headers::ZE_HEADER).expect("ze header")),
+            (Api::Cuda, parse_header(headers::CUDA_HEADER).expect("cuda header")),
+            (Api::Hip, parse_header(headers::HIP_HEADER).expect("hip header")),
+            (Api::Cl, parse_cl_registry(headers::CL_XML).expect("cl registry")),
+            (Api::Mpi, parse_header(headers::MPI_HEADER).expect("mpi header")),
+            (Api::Omp, parse_header(headers::OMP_HEADER).expect("omp header")),
+        ];
+        for (api, m) in models.iter_mut() {
+            m.api = Some(*api);
+        }
+
+        let mut all: Vec<EventClass> = Vec::new();
+        for (api, model) in &models {
+            all.extend(generate_classes(*api, model));
+        }
+        all.extend(internal_classes());
+
+        let mut classes: Vec<&'static EventClass> = Vec::with_capacity(all.len());
+        let mut by_name = HashMap::with_capacity(all.len());
+        for (id, mut c) in all.into_iter().enumerate() {
+            c.id = id as u32;
+            let leaked: &'static EventClass = Box::leak(Box::new(c));
+            classes.push(leaked);
+            by_name.insert(leaked.name.as_str(), leaked);
+        }
+        Registry { classes, by_name, models: models.into_iter().collect() }
+    }
+
+    /// All classes, indexed by id.
+    pub fn classes(&self) -> &[&'static EventClass] {
+        &self.classes
+    }
+
+    /// Look up a class by full name (`provider:function_entry`).
+    pub fn class(&self, name: &str) -> Option<&'static EventClass> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Entry+exit classes for an API function; panics if unknown
+    /// (interception wrappers resolve these once at startup).
+    pub fn tp(&self, api: Api, function: &str) -> (&'static EventClass, &'static EventClass) {
+        let entry = format!("{}:{function}_entry", api.provider());
+        let exit = format!("{}:{function}_exit", api.provider());
+        match (self.class(&entry), self.class(&exit)) {
+            (Some(e), Some(x)) => (e, x),
+            _ => panic!("unknown tracepoint {api:?}::{function}"),
+        }
+    }
+
+    /// The parsed API model for one API (for pretty-print enum rendering
+    /// and the YAML interchange tests).
+    pub fn model(&self, api: Api) -> &ApiModel {
+        &self.models[&api]
+    }
+
+    /// Number of registered classes (size of session enable bitmaps).
+    pub fn count(&self) -> usize {
+        self.classes.len()
+    }
+}
+
+static REGISTRY: Lazy<Registry> = Lazy::new(Registry::build);
+
+/// The global registry.
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+/// All event classes.
+pub fn all_classes() -> &'static [&'static EventClass] {
+    registry().classes()
+}
+
+/// Class lookup by name.
+pub fn class_by_name(name: &str) -> Option<&'static EventClass> {
+    registry().class(name)
+}
+
+/// Total class count.
+pub fn class_count() -> usize {
+    registry().count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_and_ids_are_dense() {
+        let r = registry();
+        assert!(r.count() > 150, "expected >150 classes, got {}", r.count());
+        for (i, c) in r.classes().iter().enumerate() {
+            assert_eq!(c.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let r = registry();
+        let mut names: Vec<_> = r.classes().iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), r.count());
+    }
+
+    #[test]
+    fn tp_lookup_returns_matching_pair() {
+        let (e, x) = registry().tp(Api::Ze, "zeCommandListAppendMemoryCopy");
+        assert!(e.is_entry() && x.is_exit());
+        assert_eq!(e.api_function(), "zeCommandListAppendMemoryCopy");
+        assert_eq!(e.api, Api::Ze);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown tracepoint")]
+    fn tp_lookup_panics_on_unknown() {
+        registry().tp(Api::Ze, "zeDoesNotExist");
+    }
+
+    #[test]
+    fn every_external_api_has_classes() {
+        let r = registry();
+        for api in Api::all_external() {
+            assert!(
+                r.classes().iter().any(|c| c.api == api),
+                "no classes for {api:?}"
+            );
+            assert!(!r.model(api).functions.is_empty());
+        }
+    }
+
+    #[test]
+    fn paper_headline_tracepoints_exist() {
+        // The specific tracepoints the paper's figures/case-studies rely on.
+        for name in [
+            "lttng_ust_ze:zeCommandListAppendMemoryCopy_entry",
+            "lttng_ust_cuda:cuMemGetInfo_exit",
+            "lttng_ust_hip:hipDeviceSynchronize_entry",
+            "lttng_ust_ze:zeEventHostSynchronize_entry",
+            "lttng_ust_profiling:command_completed",
+            "lttng_ust_sampling:gpu_power",
+        ] {
+            assert!(class_by_name(name).is_some(), "{name} missing");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Trace-model generation: API model + meta-parameters -> event classes.
+//!
+//! This is the paper's Fig. 3 transformation: for every API function an
+//! `_entry` class (all by-value params plus entry-side meta fields) and an
+//! `_exit` class (the result plus the values written through out
+//! pointers). Class flags (polling / device-command) come from the
+//! [`metaparams`](super::metaparams) rule tables and drive tracing modes.
+
+use super::api::{Api, ApiModel, ClassFlags, CType, EventClass, FieldDef, FieldType};
+use super::metaparams::{is_device_command, is_polling, metaparams};
+
+/// Generate entry+exit event classes for every function of `model`.
+/// Ids are assigned later by the registry; here they are left 0.
+pub fn generate_classes(api: Api, model: &ApiModel) -> Vec<EventClass> {
+    let mut out = Vec::with_capacity(model.functions.len() * 2);
+    for f in &model.functions {
+        let metas = metaparams(api, &f.name);
+        let flags = ClassFlags {
+            host_api: true,
+            polling: is_polling(api, &f.name),
+            device_command: is_device_command(api, &f.name),
+            profiling: false,
+            sampling: false,
+        };
+
+        let mut entry_fields = Vec::with_capacity(f.params.len() + 1);
+        for p in &f.params {
+            entry_fields.push(FieldDef::new(p.name.clone(), p.ty.field_type()));
+        }
+        for m in metas.iter().filter(|m| m.at_entry()) {
+            entry_fields.push(FieldDef::new(m.field_name(), m.field_type()));
+        }
+
+        let mut exit_fields = Vec::new();
+        if f.ret != CType::Void {
+            exit_fields.push(FieldDef::new("result", f.ret.field_type()));
+        }
+        for m in metas.iter().filter(|m| !m.at_entry()) {
+            exit_fields.push(FieldDef::new(m.field_name(), m.field_type()));
+        }
+
+        out.push(EventClass {
+            id: 0,
+            name: format!("{}:{}_entry", api.provider(), f.name),
+            api,
+            fields: entry_fields,
+            flags,
+        });
+        out.push(EventClass {
+            id: 0,
+            name: format!("{}:{}_exit", api.provider(), f.name),
+            api,
+            fields: exit_fields,
+            flags,
+        });
+    }
+    out
+}
+
+/// The hand-defined internal classes: GPU-profiling pseudo-events emitted
+/// by the profiling helpers at synchronization points, and the telemetry
+/// sampling events emitted by the daemon (paper §3.5).
+pub fn internal_classes() -> Vec<EventClass> {
+    let prof_flags = ClassFlags { profiling: true, ..Default::default() };
+    let samp_flags = ClassFlags { sampling: true, ..Default::default() };
+    vec![
+        // Device command completed: timings in host-clock ns, captured at
+        // synchronize (paper: "Level-Zero profiling / get the info during
+        // wait").
+        EventClass {
+            id: 0,
+            name: "lttng_ust_profiling:command_completed".into(),
+            api: Api::Profiling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("engine_ordinal", FieldType::U32),
+                FieldDef::new("engine_kind", FieldType::U32), // 0=compute 1=copy
+                FieldDef::new("kind", FieldType::Str),        // kernel|memcpy|barrier
+                FieldDef::new("name", FieldType::Str),        // kernel name or ""
+                FieldDef::new("queue", FieldType::Ptr),
+                FieldDef::new("ts_start", FieldType::U64),
+                FieldDef::new("ts_end", FieldType::U64),
+                FieldDef::new("bytes", FieldType::U64),
+            ],
+            flags: prof_flags,
+        },
+        EventClass {
+            id: 0,
+            name: "lttng_ust_sampling:gpu_power".into(),
+            api: Api::Sampling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("domain", FieldType::U32),
+                FieldDef::new("watts", FieldType::F64),
+                FieldDef::new("energy_uj", FieldType::U64),
+            ],
+            flags: samp_flags,
+        },
+        EventClass {
+            id: 0,
+            name: "lttng_ust_sampling:gpu_frequency".into(),
+            api: Api::Sampling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("domain", FieldType::U32),
+                FieldDef::new("mhz", FieldType::F64),
+            ],
+            flags: samp_flags,
+        },
+        EventClass {
+            id: 0,
+            name: "lttng_ust_sampling:gpu_engine_util".into(),
+            api: Api::Sampling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("engine_kind", FieldType::U32), // 0=compute 1=copy
+                FieldDef::new("domain", FieldType::U32),      // tile
+                FieldDef::new("util", FieldType::F64),        // 0..1
+            ],
+            flags: samp_flags,
+        },
+        EventClass {
+            id: 0,
+            name: "lttng_ust_sampling:gpu_memory".into(),
+            api: Api::Sampling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("used_bytes", FieldType::U64),
+                FieldDef::new("total_bytes", FieldType::U64),
+            ],
+            flags: samp_flags,
+        },
+        // Tile-to-tile fabric traffic counters.
+        EventClass {
+            id: 0,
+            name: "lttng_ust_sampling:gpu_fabric".into(),
+            api: Api::Sampling,
+            fields: vec![
+                FieldDef::new("device", FieldType::Ptr),
+                FieldDef::new("tx_bytes", FieldType::U64),
+                FieldDef::new("rx_bytes", FieldType::U64),
+            ],
+            flags: samp_flags,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cparse::parse_header;
+    use crate::model::headers::CUDA_HEADER;
+
+    fn cuda_model() -> ApiModel {
+        parse_header(CUDA_HEADER).unwrap()
+    }
+
+    #[test]
+    fn cu_mem_get_info_generates_fig3_classes() {
+        // Paper Fig. 3: cuMemGetInfo_entry carries the two pointers;
+        // cuMemGetInfo_exit carries cuResult + *free + *total.
+        let classes = generate_classes(Api::Cuda, &cuda_model());
+        let entry = classes
+            .iter()
+            .find(|c| c.name == "lttng_ust_cuda:cuMemGetInfo_entry")
+            .unwrap();
+        assert_eq!(entry.fields.len(), 2);
+        assert_eq!(entry.fields[0].name, "free");
+        assert_eq!(entry.fields[0].ty, FieldType::Ptr);
+        let exit = classes
+            .iter()
+            .find(|c| c.name == "lttng_ust_cuda:cuMemGetInfo_exit")
+            .unwrap();
+        assert_eq!(exit.fields.len(), 3);
+        assert_eq!(exit.fields[0].name, "result");
+        assert_eq!(exit.fields[1].name, "*free");
+        assert_eq!(exit.fields[1].ty, FieldType::U64);
+        assert_eq!(exit.fields[2].name, "*total");
+    }
+
+    #[test]
+    fn every_function_gets_entry_and_exit() {
+        let model = cuda_model();
+        let classes = generate_classes(Api::Cuda, &model);
+        assert_eq!(classes.len(), model.functions.len() * 2);
+        for f in &model.functions {
+            assert!(classes.iter().any(|c| c.name.ends_with(&format!("{}_entry", f.name))));
+            assert!(classes.iter().any(|c| c.name.ends_with(&format!("{}_exit", f.name))));
+        }
+    }
+
+    #[test]
+    fn polling_flag_set_on_query_classes() {
+        let classes = generate_classes(Api::Cuda, &cuda_model());
+        let q = classes.iter().find(|c| c.name.contains("cuEventQuery_entry")).unwrap();
+        assert!(q.flags.polling);
+        let l = classes.iter().find(|c| c.name.contains("cuLaunchKernel_entry")).unwrap();
+        assert!(!l.flags.polling);
+        assert!(l.flags.device_command);
+    }
+
+    #[test]
+    fn internal_classes_have_expected_names() {
+        let ic = internal_classes();
+        let names: Vec<_> = ic.iter().map(|c| c.name.as_str()).collect();
+        assert!(names.contains(&"lttng_ust_profiling:command_completed"));
+        assert!(names.contains(&"lttng_ust_sampling:gpu_power"));
+        assert!(ic.iter().all(|c| c.flags.profiling || c.flags.sampling));
+    }
+}

@@ -1,0 +1,221 @@
+//! Mini XML parser for the OpenCL API registry (`assets/cl_api.xml`).
+//!
+//! The paper: *"For OpenCL, the structured data is accessed directly from
+//! the XML API description."* This module parses the Khronos-`cl.xml`-style
+//! `<command>` elements into the same [`ApiModel`] the header parser
+//! produces. The parser supports exactly what the registry needs: nested
+//! elements, text content, comments, and the XML declaration.
+
+use super::api::{ApiModel, CType, FnModel, Param};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// One parsed XML element.
+#[derive(Debug, Clone)]
+pub struct Element {
+    /// Tag name.
+    pub tag: String,
+    /// Child elements in order.
+    pub children: Vec<Element>,
+    /// Concatenated direct text content (children's text not included),
+    /// in document order relative to children boundaries.
+    pub text: String,
+}
+
+impl Element {
+    /// First child with the given tag.
+    pub fn child(&self, tag: &str) -> Option<&Element> {
+        self.children.iter().find(|c| c.tag == tag)
+    }
+
+    /// All children with the given tag.
+    pub fn children_named<'a>(&'a self, tag: &'a str) -> impl Iterator<Item = &'a Element> {
+        self.children.iter().filter(move |c| c.tag == tag)
+    }
+}
+
+/// Parse an XML document into its root element.
+pub fn parse_xml(src: &str) -> Result<Element> {
+    let mut pos = 0;
+    let bytes = src.as_bytes();
+    skip_misc(bytes, &mut pos);
+    let root = parse_element(src, &mut pos)?;
+    Ok(root)
+}
+
+fn skip_misc(bytes: &[u8], pos: &mut usize) {
+    loop {
+        while *pos < bytes.len() && (bytes[*pos] as char).is_whitespace() {
+            *pos += 1;
+        }
+        if bytes[*pos..].starts_with(b"<?") {
+            while *pos < bytes.len() && !bytes[*pos..].starts_with(b"?>") {
+                *pos += 1;
+            }
+            *pos += 2;
+        } else if bytes[*pos..].starts_with(b"<!--") {
+            while *pos < bytes.len() && !bytes[*pos..].starts_with(b"-->") {
+                *pos += 1;
+            }
+            *pos += 3;
+        } else {
+            return;
+        }
+    }
+}
+
+fn parse_element(src: &str, pos: &mut usize) -> Result<Element> {
+    let bytes = src.as_bytes();
+    if bytes.get(*pos) != Some(&b'<') {
+        bail!("expected '<' at byte {pos}");
+    }
+    *pos += 1;
+    let tag_start = *pos;
+    while *pos < bytes.len() && !b" \t\n/>".contains(&bytes[*pos]) {
+        *pos += 1;
+    }
+    let tag = src[tag_start..*pos].to_string();
+    // skip attributes (none used by our registry, but tolerate them)
+    while *pos < bytes.len() && bytes[*pos] != b'>' && !bytes[*pos..].starts_with(b"/>") {
+        *pos += 1;
+    }
+    if bytes[*pos..].starts_with(b"/>") {
+        *pos += 2;
+        return Ok(Element { tag, children: vec![], text: String::new() });
+    }
+    *pos += 1; // consume '>'
+
+    let mut children = Vec::new();
+    let mut text = String::new();
+    loop {
+        if bytes[*pos..].starts_with(b"<!--") {
+            while *pos < bytes.len() && !bytes[*pos..].starts_with(b"-->") {
+                *pos += 1;
+            }
+            *pos += 3;
+            continue;
+        }
+        if bytes[*pos..].starts_with(b"</") {
+            *pos += 2;
+            let end_start = *pos;
+            while bytes[*pos] != b'>' {
+                *pos += 1;
+            }
+            let end_tag = &src[end_start..*pos];
+            *pos += 1;
+            if end_tag != tag {
+                bail!("mismatched close tag: <{tag}> vs </{end_tag}>");
+            }
+            return Ok(Element { tag, children, text });
+        }
+        if bytes[*pos] == b'<' {
+            children.push(parse_element(src, pos)?);
+        } else {
+            let t_start = *pos;
+            while *pos < bytes.len() && bytes[*pos] != b'<' {
+                *pos += 1;
+            }
+            text.push_str(&src[t_start..*pos]);
+        }
+        if *pos >= bytes.len() {
+            bail!("unexpected EOF inside <{tag}>");
+        }
+    }
+}
+
+/// Map a registry `<type>` name into a [`CType`].
+fn cl_type(name: &str) -> CType {
+    match name {
+        "void" => CType::Void,
+        "char" => CType::CString, // only appears as `char*` in the registry
+        "cl_int" => CType::Int { bits: 32, name: name.into() },
+        "cl_uint" => CType::Uint { bits: 32, name: name.into() },
+        "size_t" | "intptr_t" => CType::Uint { bits: 64, name: name.into() },
+        other => CType::Handle { name: other.into() },
+    }
+}
+
+/// Parse the OpenCL registry XML into an [`ApiModel`].
+pub fn parse_cl_registry(src: &str) -> Result<ApiModel> {
+    let root = parse_xml(src)?;
+    if root.tag != "registry" {
+        bail!("root element is <{}>, expected <registry>", root.tag);
+    }
+    let commands = root.child("commands").context("<commands> missing")?;
+    let mut model = ApiModel::default();
+    for cmd in commands.children_named("command") {
+        let proto = cmd.child("proto").context("<proto> missing")?;
+        let ret_ty = proto.child("type").context("proto <type> missing")?;
+        let name = proto.child("name").context("proto <name> missing")?;
+        let mut params = Vec::new();
+        for p in cmd.children_named("param") {
+            let tyname = p.child("type").context("param <type> missing")?.text.trim().to_string();
+            let pname = p.child("name").context("param <name> missing")?.text.trim().to_string();
+            let is_const = p.text.contains("const");
+            let stars = p.text.matches('*').count();
+            let mut ty = cl_type(&tyname);
+            // `char` + `*` is already a CString; extra stars wrap further.
+            let wrap = if matches!(ty, CType::CString) { stars.saturating_sub(1) } else { stars };
+            for _ in 0..wrap {
+                ty = CType::Ptr { inner: Box::new(ty), is_const };
+            }
+            params.push(Param { name: pname, ty });
+        }
+        model.functions.push(FnModel {
+            name: name.text.trim().to_string(),
+            ret: cl_type(ret_ty.text.trim()),
+            params,
+        });
+    }
+    // The registry carries no enums; error codes are cl_int values.
+    model.enums = Vec::new();
+    let _unused: HashMap<(), ()> = HashMap::new();
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::api::FieldType;
+    use crate::model::headers::CL_XML;
+
+    #[test]
+    fn parses_simple_document() {
+        let e = parse_xml("<a><b>hi</b><b>yo</b><c/></a>").unwrap();
+        assert_eq!(e.tag, "a");
+        assert_eq!(e.children.len(), 3);
+        assert_eq!(e.children[0].text, "hi");
+        assert_eq!(e.children_named("b").count(), 2);
+    }
+
+    #[test]
+    fn rejects_mismatched_tags() {
+        assert!(parse_xml("<a></b>").is_err());
+    }
+
+    #[test]
+    fn parses_cl_registry() {
+        let m = parse_cl_registry(CL_XML).unwrap();
+        assert!(m.functions.len() >= 14, "got {}", m.functions.len());
+        let f = m.function("clEnqueueWriteBuffer").unwrap();
+        assert_eq!(f.params.len(), 9);
+        assert_eq!(f.params[4].name, "size");
+        assert_eq!(f.params[4].ty.field_type(), FieldType::U64);
+        assert!(f.params[5].ty.is_pointer());
+    }
+
+    #[test]
+    fn cl_create_returns_handle() {
+        let m = parse_cl_registry(CL_XML).unwrap();
+        let f = m.function("clCreateBuffer").unwrap();
+        assert!(matches!(f.ret, CType::Handle { .. }));
+    }
+
+    #[test]
+    fn pointer_and_const_markers() {
+        let m = parse_cl_registry(CL_XML).unwrap();
+        let f = m.function("clCreateKernel").unwrap();
+        // const char* kernel_name -> string field
+        assert_eq!(f.params[1].ty.field_type(), FieldType::Str);
+    }
+}

@@ -1,0 +1,472 @@
+//! Mini-YAML: the intermediary API-model interchange format (paper Fig. 3).
+//!
+//! THAPI parses headers into an "intermediary YAML file, that we call the
+//! API model". This module provides the same stage: [`emit_api_model`]
+//! serializes an [`ApiModel`] to a YAML subset, [`parse`] reads a YAML
+//! subset back into a generic tree, and [`parse_api_model`] reconstructs
+//! the model — round-trip tested so the interchange is lossless.
+//!
+//! Supported YAML subset: block maps (`key: value`), block lists
+//! (`- item`), nesting by 2-space indent, plain scalars.
+
+use super::api::{ApiModel, CType, FnModel, Param};
+use anyhow::{bail, Context, Result};
+
+/// Generic YAML tree node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    /// Plain scalar (kept as a string).
+    Scalar(String),
+    /// Ordered map.
+    Map(Vec<(String, Yaml)>),
+    /// Sequence.
+    List(Vec<Yaml>),
+}
+
+impl Yaml {
+    /// Map lookup.
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Scalar view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Scalar(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// List view.
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Emission
+// ---------------------------------------------------------------------------
+
+fn emit_node(node: &Yaml, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match node {
+        Yaml::Scalar(s) => {
+            out.push_str(s);
+            out.push('\n');
+        }
+        Yaml::Map(entries) => {
+            for (i, (k, v)) in entries.iter().enumerate() {
+                if i > 0 || indent == 0 || true {
+                    out.push_str(&pad);
+                }
+                out.push_str(k);
+                out.push(':');
+                match v {
+                    Yaml::Scalar(s) => {
+                        out.push(' ');
+                        out.push_str(s);
+                        out.push('\n');
+                    }
+                    _ => {
+                        out.push('\n');
+                        emit_node(v, indent + 1, out);
+                    }
+                }
+            }
+        }
+        Yaml::List(items) => {
+            for item in items {
+                out.push_str(&pad);
+                out.push_str("- ");
+                match item {
+                    Yaml::Scalar(s) => {
+                        out.push_str(s);
+                        out.push('\n');
+                    }
+                    Yaml::Map(entries) if !entries.is_empty() => {
+                        // first entry on the dash line, rest indented
+                        let (k0, v0) = &entries[0];
+                        out.push_str(k0);
+                        out.push(':');
+                        match v0 {
+                            Yaml::Scalar(s) => {
+                                out.push(' ');
+                                out.push_str(s);
+                                out.push('\n');
+                            }
+                            _ => {
+                                out.push('\n');
+                                emit_node(v0, indent + 2, out);
+                            }
+                        }
+                        for (k, v) in &entries[1..] {
+                            out.push_str(&pad);
+                            out.push_str("  ");
+                            out.push_str(k);
+                            out.push(':');
+                            match v {
+                                Yaml::Scalar(s) => {
+                                    out.push(' ');
+                                    out.push_str(s);
+                                    out.push('\n');
+                                }
+                                _ => {
+                                    out.push('\n');
+                                    emit_node(v, indent + 2, out);
+                                }
+                            }
+                        }
+                    }
+                    other => {
+                        out.push('\n');
+                        emit_node(other, indent + 1, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serialize any YAML tree.
+pub fn emit(node: &Yaml) -> String {
+    let mut out = String::new();
+    emit_node(node, 0, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+struct Line<'a> {
+    indent: usize,
+    content: &'a str,
+}
+
+fn lines(src: &str) -> Vec<Line<'_>> {
+    src.lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| {
+            let indent = l.len() - l.trim_start().len();
+            Line { indent, content: l.trim_start() }
+        })
+        .collect()
+}
+
+/// Parse a YAML-subset document.
+pub fn parse(src: &str) -> Result<Yaml> {
+    let ls = lines(src);
+    let mut pos = 0;
+    let node = parse_block(&ls, &mut pos, 0)?;
+    if pos != ls.len() {
+        bail!("trailing content at line index {pos}");
+    }
+    Ok(node)
+}
+
+fn parse_block(ls: &[Line<'_>], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    if *pos >= ls.len() {
+        bail!("empty block");
+    }
+    if ls[*pos].content.starts_with("- ") || ls[*pos].content == "-" {
+        // list block
+        let mut items = Vec::new();
+        while *pos < ls.len() && ls[*pos].indent == indent && ls[*pos].content.starts_with('-') {
+            let rest = ls[*pos].content[1..].trim_start();
+            if rest.is_empty() {
+                *pos += 1;
+                items.push(parse_block(ls, pos, indent + 2)?);
+            } else if let Some((k, v)) = split_kv(rest) {
+                // inline first map entry; subsequent entries at indent+2
+                *pos += 1;
+                let mut entries = vec![];
+                if v.is_empty() {
+                    entries.push((k.to_string(), parse_empty_value(ls, pos, indent + 2)?));
+                } else {
+                    entries.push((k.to_string(), Yaml::Scalar(v.to_string())));
+                }
+                while *pos < ls.len()
+                    && ls[*pos].indent == indent + 2
+                    && !ls[*pos].content.starts_with('-')
+                {
+                    let (k2, v2) = split_kv(ls[*pos].content)
+                        .context("expected key: value inside list map")?;
+                    *pos += 1;
+                    if v2.is_empty() {
+                        entries.push((k2.to_string(), parse_empty_value(ls, pos, indent + 2)?));
+                    } else {
+                        entries.push((k2.to_string(), Yaml::Scalar(v2.to_string())));
+                    }
+                }
+                items.push(Yaml::Map(entries));
+            } else {
+                *pos += 1;
+                items.push(Yaml::Scalar(rest.to_string()));
+            }
+        }
+        Ok(Yaml::List(items))
+    } else {
+        // map block
+        let mut entries = Vec::new();
+        while *pos < ls.len() && ls[*pos].indent == indent && !ls[*pos].content.starts_with('-') {
+            let (k, v) = split_kv(ls[*pos].content).context("expected key: value")?;
+            *pos += 1;
+            if v.is_empty() {
+                let child_indent = if *pos < ls.len() { ls[*pos].indent } else { indent };
+                if child_indent <= indent {
+                    entries.push((k.to_string(), Yaml::Scalar(String::new())));
+                } else {
+                    let val = parse_block(ls, pos, child_indent)?;
+                    entries.push((k.to_string(), val));
+                }
+            } else {
+                entries.push((k.to_string(), Yaml::Scalar(v.to_string())));
+            }
+        }
+        if entries.is_empty() {
+            bail!("expected map entries at indent {indent}");
+        }
+        Ok(Yaml::Map(entries))
+    }
+}
+
+/// Parse the value of a `key:` line with nothing after the colon: a
+/// nested block if the next line is more indented than `key_indent`,
+/// otherwise an empty list (the shape our emitter produces for empty
+/// sequences — it writes nothing).
+fn parse_empty_value(ls: &[Line<'_>], pos: &mut usize, key_indent: usize) -> Result<Yaml> {
+    match ls.get(*pos) {
+        Some(next) if next.indent > key_indent => parse_block(ls, pos, next.indent),
+        _ => Ok(Yaml::List(vec![])),
+    }
+}
+
+fn split_kv(s: &str) -> Option<(&str, &str)> {
+    let idx = s.find(':')?;
+    let (k, v) = s.split_at(idx);
+    Some((k.trim(), v[1..].trim()))
+}
+
+// ---------------------------------------------------------------------------
+// ApiModel <-> YAML
+// ---------------------------------------------------------------------------
+
+fn type_to_yaml(t: &CType) -> Yaml {
+    match t {
+        CType::Ptr { inner, is_const } => Yaml::Map(vec![
+            ("kind".into(), Yaml::Scalar("pointer".into())),
+            ("const".into(), Yaml::Scalar(is_const.to_string())),
+            ("type".into(), type_to_yaml(inner)),
+        ]),
+        other => Yaml::Map(vec![
+            ("kind".into(), Yaml::Scalar(kind_name(other).into())),
+            ("name".into(), Yaml::Scalar(other.name())),
+        ]),
+    }
+}
+
+fn kind_name(t: &CType) -> &'static str {
+    match t {
+        CType::Void => "void",
+        CType::Int { .. } => "int",
+        CType::Uint { .. } => "unsigned",
+        CType::Float { .. } => "float",
+        CType::CString => "cstring",
+        CType::Handle { .. } => "handle",
+        CType::Enum { .. } => "enum",
+        CType::Ptr { .. } => "pointer",
+    }
+}
+
+fn yaml_to_type(y: &Yaml) -> Result<CType> {
+    let kind = y.get("kind").and_then(Yaml::as_str).context("type missing kind")?;
+    Ok(match kind {
+        "pointer" => {
+            let is_const = y.get("const").and_then(Yaml::as_str) == Some("true");
+            let inner = yaml_to_type(y.get("type").context("pointer missing inner type")?)?;
+            CType::Ptr { inner: Box::new(inner), is_const }
+        }
+        "void" => CType::Void,
+        "cstring" => CType::CString,
+        other => {
+            let name = y.get("name").and_then(Yaml::as_str).context("type missing name")?;
+            match other {
+                "int" => CType::Int { bits: bits_of(name), name: name.into() },
+                "unsigned" => CType::Uint { bits: bits_of(name), name: name.into() },
+                "float" => CType::Float {
+                    bits: if name == "double" { 64 } else { 32 },
+                    name: name.into(),
+                },
+                "handle" => CType::Handle { name: name.into() },
+                "enum" => CType::Enum { name: name.into() },
+                _ => bail!("unknown type kind {other}"),
+            }
+        }
+    })
+}
+
+fn bits_of(name: &str) -> u8 {
+    if name.contains("64") || name == "size_t" || name == "intptr_t" {
+        64
+    } else if name == "char" {
+        8
+    } else {
+        32
+    }
+}
+
+/// Serialize an API model to the intermediary YAML form.
+pub fn emit_api_model(model: &ApiModel) -> String {
+    let fns: Vec<Yaml> = model
+        .functions
+        .iter()
+        .map(|f| {
+            Yaml::Map(vec![
+                ("name".into(), Yaml::Scalar(f.name.clone())),
+                ("type".into(), type_to_yaml(&f.ret)),
+                (
+                    "params".into(),
+                    if f.params.is_empty() {
+                        Yaml::List(vec![])
+                    } else {
+                        Yaml::List(
+                            f.params
+                                .iter()
+                                .map(|p| {
+                                    Yaml::Map(vec![
+                                        ("name".into(), Yaml::Scalar(p.name.clone())),
+                                        ("type".into(), type_to_yaml(&p.ty)),
+                                    ])
+                                })
+                                .collect(),
+                        )
+                    },
+                ),
+            ])
+        })
+        .collect();
+    let enums: Vec<Yaml> = model
+        .enums
+        .iter()
+        .map(|(name, vals)| {
+            Yaml::Map(vec![
+                ("name".into(), Yaml::Scalar(name.clone())),
+                (
+                    "values".into(),
+                    Yaml::List(
+                        vals.iter()
+                            .map(|(n, v)| Yaml::Scalar(format!("{n}={v}")))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    emit(&Yaml::Map(vec![
+        ("functions".into(), Yaml::List(fns)),
+        ("enums".into(), Yaml::List(enums)),
+    ]))
+}
+
+/// Parse the intermediary YAML form back into an API model.
+pub fn parse_api_model(src: &str) -> Result<ApiModel> {
+    let doc = parse(src)?;
+    let mut model = ApiModel::default();
+    if let Some(fns) = doc.get("functions").and_then(Yaml::as_list) {
+        for f in fns {
+            let name = f.get("name").and_then(Yaml::as_str).context("fn missing name")?;
+            let ret = yaml_to_type(f.get("type").context("fn missing type")?)?;
+            let mut params = Vec::new();
+            if let Some(ps) = f.get("params").and_then(Yaml::as_list) {
+                for p in ps {
+                    let pname =
+                        p.get("name").and_then(Yaml::as_str).context("param missing name")?;
+                    let ty = yaml_to_type(p.get("type").context("param missing type")?)?;
+                    params.push(Param { name: pname.into(), ty });
+                }
+            }
+            model.functions.push(FnModel { name: name.into(), ret, params });
+        }
+    }
+    if let Some(enums) = doc.get("enums").and_then(Yaml::as_list) {
+        for e in enums {
+            let name = e.get("name").and_then(Yaml::as_str).context("enum missing name")?;
+            let mut vals = Vec::new();
+            if let Some(vs) = e.get("values").and_then(Yaml::as_list) {
+                for v in vs {
+                    let s = v.as_str().context("enum value not scalar")?;
+                    let (n, val) = s.split_once('=').context("enum value missing '='")?;
+                    vals.push((n.to_string(), val.parse::<i64>()?));
+                }
+            }
+            model.enums.push((name.into(), vals));
+        }
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cparse::parse_header;
+    use crate::model::headers::ALL_HEADERS;
+
+    #[test]
+    fn scalar_map_roundtrip() {
+        let doc = Yaml::Map(vec![
+            ("a".into(), Yaml::Scalar("1".into())),
+            ("b".into(), Yaml::List(vec![Yaml::Scalar("x".into()), Yaml::Scalar("y".into())])),
+        ]);
+        let text = emit(&doc);
+        let back = parse(&text).unwrap();
+        assert_eq!(doc, back);
+    }
+
+    #[test]
+    fn nested_list_of_maps_roundtrip() {
+        let doc = Yaml::Map(vec![(
+            "items".into(),
+            Yaml::List(vec![
+                Yaml::Map(vec![
+                    ("name".into(), Yaml::Scalar("first".into())),
+                    ("v".into(), Yaml::Scalar("1".into())),
+                ]),
+                Yaml::Map(vec![
+                    ("name".into(), Yaml::Scalar("second".into())),
+                    (
+                        "inner".into(),
+                        Yaml::Map(vec![("k".into(), Yaml::Scalar("v".into()))]),
+                    ),
+                ]),
+            ]),
+        )]);
+        let text = emit(&doc);
+        let back = parse(&text).unwrap();
+        assert_eq!(doc, back, "emitted:\n{text}");
+    }
+
+    #[test]
+    fn api_model_roundtrips_for_every_header() {
+        for (name, src) in ALL_HEADERS {
+            let model = parse_header(src).unwrap();
+            let yaml = emit_api_model(&model);
+            let back = parse_api_model(&yaml).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(model.functions, back.functions, "{name} functions drifted");
+            assert_eq!(model.enums, back.enums, "{name} enums drifted");
+        }
+    }
+
+    #[test]
+    fn cl_registry_model_roundtrips() {
+        let model = crate::model::xml::parse_cl_registry(crate::model::headers::CL_XML).unwrap();
+        let yaml = emit_api_model(&model);
+        let back = parse_api_model(&yaml).unwrap();
+        assert_eq!(model.functions, back.functions);
+    }
+}

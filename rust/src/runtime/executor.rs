@@ -1,0 +1,315 @@
+//! The PJRT executor thread.
+//!
+//! `xla::PjRtClient` holds an `Rc` internally and is not `Send`, so one
+//! dedicated thread owns the client and all compiled executables; the
+//! simulated GPU engines talk to it over an mpsc channel. This also
+//! serializes kernel execution, which is a reasonable model of a single
+//! physical accelerator.
+//!
+//! Requests:
+//! * `Compile(name)` — lazily compile an artifact; returns the real
+//!   compile wall-time (surfaced as `zeModuleCreate` / `cuModuleLoadData`
+//!   duration by the frontends).
+//! * `Execute(name, inputs)` — run with raw little-endian input buffers;
+//!   returns the raw result buffer.
+
+use super::manifest::{DType, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+enum Request {
+    Compile { name: String, reply: mpsc::Sender<Result<Duration>> },
+    Execute { name: String, inputs: Vec<Vec<u8>>, reply: mpsc::Sender<Result<Vec<u8>>> },
+    Shutdown,
+}
+
+/// Cumulative executor statistics.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    /// Kernels compiled.
+    pub compiled: AtomicU64,
+    /// Executions performed.
+    pub executed: AtomicU64,
+    /// Total execution nanoseconds (on the executor thread).
+    pub exec_ns: AtomicU64,
+}
+
+/// Handle to the executor thread. Clone-able via `Arc`.
+pub struct Executor {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+    /// Statistics.
+    pub stats: Arc<ExecStats>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Executor {
+    /// Start the executor for the artifacts in `manifest`.
+    pub fn start(manifest: Manifest) -> Arc<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(ExecStats::default());
+        let thread_manifest = manifest.clone();
+        let thread_stats = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("thapi-pjrt".into())
+            .spawn(move || executor_loop(rx, thread_manifest, thread_stats))
+            .expect("spawn pjrt executor");
+        Arc::new(Executor {
+            tx: Mutex::new(tx),
+            manifest,
+            stats,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// The manifest this executor serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or no-op if cached); returns the compile wall time.
+    pub fn compile(&self, name: &str) -> Result<Duration> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Compile { name: name.into(), reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().context("executor died")?
+    }
+
+    /// Execute a kernel with raw LE input buffers; returns raw result bytes.
+    pub fn execute(&self, name: &str, inputs: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute { name: name.into(), inputs, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().context("executor died")?
+    }
+
+    /// Stop the executor thread.
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn executor_loop(rx: mpsc::Receiver<Request>, manifest: Manifest, stats: Arc<ExecStats>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Answer every request with an error; don't crash the process.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Compile { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed: {e}")));
+                    }
+                    Request::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("PJRT client failed: {e}")));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Compile { name, reply } => {
+                let t0 = Instant::now();
+                let r = ensure_compiled(&client, &manifest, &mut exes, &name)
+                    .map(|_| t0.elapsed());
+                if r.is_ok() {
+                    stats.compiled.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = reply.send(r);
+            }
+            Request::Execute { name, inputs, reply } => {
+                let t0 = Instant::now();
+                let r = (|| -> Result<Vec<u8>> {
+                    ensure_compiled(&client, &manifest, &mut exes, &name)?;
+                    let exe = exes.get(&name).unwrap();
+                    run(exe, &manifest, &name, inputs)
+                })();
+                stats.executed.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .exec_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    exes: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<()> {
+    if exes.contains_key(name) {
+        return Ok(());
+    }
+    let spec = manifest.kernel(name).with_context(|| format!("unknown kernel {name}"))?;
+    let path = manifest.dir.join(&spec.file);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .map_err(|e| anyhow!("load {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+    exes.insert(name.to_string(), exe);
+    Ok(())
+}
+
+fn literal_from_bytes(dtype: DType, dims: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    let ty = match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+        .map_err(|e| anyhow!("literal: {e}"))
+}
+
+fn run(
+    exe: &xla::PjRtLoadedExecutable,
+    manifest: &Manifest,
+    name: &str,
+    inputs: Vec<Vec<u8>>,
+) -> Result<Vec<u8>> {
+    let spec = manifest.kernel(name).unwrap();
+    if inputs.len() != spec.params.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            spec.params.len(),
+            inputs.len()
+        );
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (i, (bytes, p)) in inputs.iter().zip(&spec.params).enumerate() {
+        if bytes.len() != p.bytes() {
+            bail!("{name}: input {i} is {} bytes, expected {}", bytes.len(), p.bytes());
+        }
+        literals.push(literal_from_bytes(p.dtype, &p.dims, bytes)?);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+    let mut bytes = vec![0u8; spec.result.bytes()];
+    match spec.result.dtype {
+        DType::F32 => {
+            let v = out.to_vec::<f32>().map_err(|e| anyhow!("tovec {name}: {e}"))?;
+            for (chunk, val) in bytes.chunks_exact_mut(4).zip(&v) {
+                chunk.copy_from_slice(&val.to_le_bytes());
+            }
+        }
+        DType::I32 => {
+            let v = out.to_vec::<i32>().map_err(|e| anyhow!("tovec {name}: {e}"))?;
+            for (chunk, val) in bytes.chunks_exact_mut(4).zip(&v) {
+                chunk.copy_from_slice(&val.to_le_bytes());
+            }
+        }
+    }
+    Ok(bytes)
+}
+
+/// Convert an f32 slice to LE bytes (helper for apps/tests).
+pub fn f32_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; v.len() * 4];
+    for (chunk, val) in out.chunks_exact_mut(4).zip(v) {
+        chunk.copy_from_slice(&val.to_le_bytes());
+    }
+    out
+}
+
+/// Convert LE bytes back to f32 (helper for apps/tests).
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Convert an i32 slice to LE bytes.
+pub fn i32_to_bytes(v: &[i32]) -> Vec<u8> {
+    let mut out = vec![0u8; v.len() * 4];
+    for (chunk, val) in out.chunks_exact_mut(4).zip(v) {
+        chunk.copy_from_slice(&val.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_executor() -> Option<Arc<Executor>> {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Executor::start(Manifest::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn saxpy_executes_with_correct_numerics() {
+        let Some(exec) = artifacts_executor() else { return };
+        let n = 1 << 20;
+        let a = f32_to_bytes(&[2.0]);
+        let x = f32_to_bytes(&vec![3.0f32; n]);
+        let y = f32_to_bytes(&vec![1.0f32; n]);
+        let out = exec.execute("saxpy", vec![a, x, y]).unwrap();
+        let vals = bytes_to_f32(&out);
+        assert_eq!(vals.len(), n);
+        assert!(vals.iter().all(|&v| (v - 7.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn compile_is_cached_and_timed() {
+        let Some(exec) = artifacts_executor() else { return };
+        let d1 = exec.compile("lrn").unwrap();
+        let d2 = exec.compile("lrn").unwrap();
+        assert!(d1.as_micros() > 0);
+        // cached second compile is much faster
+        assert!(d2 < d1 || d2.as_millis() < 5);
+        assert!(exec.stats.compiled.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn bad_kernel_name_errors() {
+        let Some(exec) = artifacts_executor() else { return };
+        assert!(exec.execute("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_arity_errors() {
+        let Some(exec) = artifacts_executor() else { return };
+        assert!(exec.execute("saxpy", vec![]).is_err());
+    }
+
+    #[test]
+    fn byte_conversions_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)), v);
+        let b = i32_to_bytes(&[1, -7]);
+        assert_eq!(b.len(), 8);
+    }
+}

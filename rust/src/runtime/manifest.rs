@@ -1,0 +1,208 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//!
+//! Line-based catalog emitted by `python/compile/aot.py`:
+//!
+//! ```text
+//! kernel conv1d conv1d.hlo.txt
+//! param f32 64x4096
+//! param f32 33
+//! param f32 64x4096
+//! result f32 64x4096
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Element dtype of a tensor parameter/result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    I32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type.
+    pub dtype: DType,
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Total byte size.
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+}
+
+/// One kernel entry: HLO file + signature.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    /// Kernel name (registry key; also the simulated `ze_kernel` name).
+    pub name: String,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: PathBuf,
+    /// Parameters in order.
+    pub params: Vec<TensorSpec>,
+    /// Result tensor.
+    pub result: TensorSpec,
+}
+
+/// Parsed manifest: kernel catalog.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Kernels by name.
+    pub kernels: HashMap<String, KernelSpec>,
+    /// The artifacts directory the manifest was read from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("no manifest.txt in {} (run `make artifacts`)", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut kernels = HashMap::new();
+        let mut current: Option<KernelSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let tag = it.next().unwrap();
+            match tag {
+                "kernel" => {
+                    if let Some(k) = current.take() {
+                        kernels.insert(k.name.clone(), k);
+                    }
+                    let name = it.next().context("kernel missing name")?;
+                    let file = it.next().context("kernel missing file")?;
+                    current = Some(KernelSpec {
+                        name: name.into(),
+                        file: PathBuf::from(file),
+                        params: Vec::new(),
+                        result: TensorSpec { dtype: DType::F32, dims: vec![] },
+                    });
+                }
+                "param" | "result" => {
+                    let k = current.as_mut().with_context(|| format!("line {lineno}: {tag} before kernel"))?;
+                    let dtype = DType::parse(it.next().context("missing dtype")?)?;
+                    let shape = it.next().context("missing shape")?;
+                    let dims = if shape == "scalar" {
+                        vec![]
+                    } else {
+                        shape
+                            .split('x')
+                            .map(|d| d.parse::<usize>().context("bad dim"))
+                            .collect::<Result<Vec<_>>>()?
+                    };
+                    let spec = TensorSpec { dtype, dims };
+                    if tag == "param" {
+                        k.params.push(spec);
+                    } else {
+                        k.result = spec;
+                    }
+                }
+                other => bail!("line {lineno}: unknown tag {other}"),
+            }
+        }
+        if let Some(k) = current.take() {
+            kernels.insert(k.name.clone(), k);
+        }
+        if kernels.is_empty() {
+            bail!("manifest has no kernels");
+        }
+        Ok(Manifest { kernels, dir: dir.to_path_buf() })
+    }
+
+    /// Kernel lookup.
+    pub fn kernel(&self, name: &str) -> Option<&KernelSpec> {
+        self.kernels.get(name)
+    }
+
+    /// Sorted kernel names.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.kernels.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+kernel saxpy saxpy.hlo.txt
+param f32 1
+param f32 1048576
+param f32 1048576
+result f32 1048576
+kernel xent xent.hlo.txt
+param f32 256x2048
+param i32 256
+result f32 1
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.names(), vec!["saxpy", "xent"]);
+        let s = m.kernel("saxpy").unwrap();
+        assert_eq!(s.params.len(), 3);
+        assert_eq!(s.params[1].elements(), 1 << 20);
+        assert_eq!(s.params[1].bytes(), 4 << 20);
+        let x = m.kernel("xent").unwrap();
+        assert_eq!(x.params[0].dims, vec![256, 2048]);
+        assert_eq!(x.params[1].dtype, DType::I32);
+        assert_eq!(x.result.dims, vec![1]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("param f32 4", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["saxpy", "conv1d", "lrn", "stencil", "matmul", "xent"] {
+                assert!(m.kernel(name).is_some(), "{name} missing from manifest");
+            }
+        }
+    }
+}

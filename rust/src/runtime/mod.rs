@@ -1,0 +1,43 @@
+//! PJRT runtime: loads AOT artifacts and executes them for the simulated
+//! GPU compute engines.
+//!
+//! `python/compile/aot.py` lowers every L2 model to HLO **text** (the only
+//! interchange format xla_extension 0.5.1 accepts from jax ≥ 0.5 — see
+//! DESIGN.md) plus `manifest.txt` describing parameter/result shapes. This
+//! module parses the manifest ([`manifest`]) and runs a dedicated executor
+//! thread ([`executor`]) that owns the (non-`Send`) `PjRtClient`; engines
+//! submit execution requests over a channel. Compilation is lazy per
+//! kernel and its wall time is reported back — that is the *real* cost a
+//! `zeModuleCreate` interception reports (the paper's §4.3 table shows
+//! zeModuleCreate at 256 ms for exactly this reason).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{ExecStats, Executor};
+pub use manifest::{DType, KernelSpec, Manifest, TensorSpec};
+
+use once_cell::sync::Lazy;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Default artifacts directory: `$THAPI_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("THAPI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+static GLOBAL_EXECUTOR: Lazy<Arc<Executor>> = Lazy::new(|| {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap_or_else(|e| {
+        panic!("cannot load artifacts from {}: {e:#}. Run `make artifacts`.", dir.display())
+    });
+    Executor::start(manifest)
+});
+
+/// The process-global PJRT executor (one compiled-executable cache shared
+/// by every simulated node — like a driver-level kernel cache).
+pub fn global_executor() -> Arc<Executor> {
+    GLOBAL_EXECUTOR.clone()
+}

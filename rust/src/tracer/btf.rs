@@ -1,0 +1,413 @@
+//! BTF — the Binary Trace Format (CTF stand-in).
+//!
+//! Like CTF, a BTF trace is a **metadata stream** (text, generated from the
+//! trace model: every event class with id, name, api and typed fields, plus
+//! an env block) and a set of **binary event streams** (one per traced
+//! thread, raw ring-buffer records). The analysis layer parses traces
+//! through this module only — it never touches the live registry — so
+//! post-mortem analysis is genuinely offline, like Babeltrace2 reading CTF.
+
+use super::ringbuf;
+use super::session::{Session, SinkKind};
+use crate::model::{FieldDef, FieldType};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Magic for stream files.
+const STREAM_MAGIC: &[u8; 4] = b"BTFS";
+/// Format version.
+const VERSION: u32 = 1;
+
+/// A whole trace: metadata + streams. The in-memory form; `write_dir` /
+/// `read_dir` persist and reload it.
+#[derive(Debug, Clone, Default)]
+pub struct TraceData {
+    /// Metadata text (event descriptors + env).
+    pub metadata: String,
+    /// Binary event streams.
+    pub streams: Vec<StreamData>,
+}
+
+/// One per-thread event stream.
+#[derive(Debug, Clone)]
+pub struct StreamData {
+    /// Hostname of the producing node.
+    pub hostname: String,
+    /// Logical rank.
+    pub rank: u32,
+    /// Process-unique thread id.
+    pub tid: u32,
+    /// Raw records (ring-buffer wire format).
+    pub bytes: Vec<u8>,
+}
+
+impl TraceData {
+    /// Total payload bytes across streams (the paper's "space requirement").
+    pub fn size_bytes(&self) -> u64 {
+        self.streams.iter().map(|s| s.bytes.len() as u64).sum::<u64>()
+            + self.metadata.len() as u64
+    }
+
+    /// Total record count.
+    pub fn record_count(&self) -> u64 {
+        let mut n = 0;
+        for s in &self.streams {
+            iter_records(&s.bytes, |_, _, _| n += 1);
+        }
+        n
+    }
+}
+
+/// Iterate raw records of one stream: `f(class_id, ts, payload)`.
+pub fn iter_records(bytes: &[u8], mut f: impl FnMut(u32, u64, &[u8])) {
+    let mut off = 0usize;
+    while off + ringbuf::RECORD_HEADER <= bytes.len() {
+        let total = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        if total == ringbuf::PAD_MARKER {
+            break; // padding never reaches stream files
+        }
+        let total = total as usize;
+        let (id, ts, payload) = ringbuf::parse_record(&bytes[off..off + total]);
+        f(id, ts, payload);
+        off += total;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metadata generation + parsing
+// ---------------------------------------------------------------------------
+
+fn field_type_name(t: FieldType) -> &'static str {
+    match t {
+        FieldType::U32 => "u32",
+        FieldType::U64 => "u64",
+        FieldType::I64 => "i64",
+        FieldType::F64 => "f64",
+        FieldType::Ptr => "ptr",
+        FieldType::Str => "str",
+    }
+}
+
+fn field_type_from_name(s: &str) -> Result<FieldType> {
+    Ok(match s {
+        "u32" => FieldType::U32,
+        "u64" => FieldType::U64,
+        "i64" => FieldType::I64,
+        "f64" => FieldType::F64,
+        "ptr" => FieldType::Ptr,
+        "str" => FieldType::Str,
+        other => bail!("unknown field type {other}"),
+    })
+}
+
+/// Generate the metadata text from the live registry plus env entries.
+pub fn generate_metadata(env: &[(String, String)]) -> String {
+    let mut out = String::new();
+    out.push_str("btf_version: 1\n");
+    out.push_str("env:\n");
+    for (k, v) in env {
+        out.push_str(&format!("  {k}: {v}\n"));
+    }
+    out.push_str("events:\n");
+    for class in crate::model::all_classes() {
+        out.push_str(&format!(
+            "  - id: {}\n    name: {}\n    api: {}\n    flags: {}{}{}{}\n    fields:\n",
+            class.id,
+            class.name,
+            class.api.backend_label(),
+            if class.flags.host_api { "h" } else { "" },
+            if class.flags.polling { "p" } else { "" },
+            if class.flags.device_command { "d" } else { "" },
+            if class.flags.profiling {
+                "g"
+            } else if class.flags.sampling {
+                "s"
+            } else {
+                ""
+            },
+        ));
+        for f in &class.fields {
+            out.push_str(&format!("      - {}: {}\n", f.name, field_type_name(f.ty)));
+        }
+    }
+    out
+}
+
+/// A decoded event-class descriptor as parsed back from metadata — what
+/// analysis plugins see (decoupled from the live registry).
+#[derive(Debug, Clone)]
+pub struct DecodedClass {
+    /// Class id (index into streams' records).
+    pub id: u32,
+    /// Full event name.
+    pub name: String,
+    /// Backend label (ZE, CUDA, ...).
+    pub api: String,
+    /// Flags string (h=host, p=polling, d=device-cmd, g=gpu-profiling,
+    /// s=sampling).
+    pub flags: String,
+    /// Typed fields in wire order.
+    pub fields: Vec<FieldDef>,
+}
+
+impl DecodedClass {
+    /// Strip provider + `_entry`/`_exit`.
+    pub fn api_function(&self) -> &str {
+        let base = self.name.split(':').nth(1).unwrap_or(&self.name);
+        base.strip_suffix("_entry")
+            .or_else(|| base.strip_suffix("_exit"))
+            .unwrap_or(base)
+    }
+
+    /// Is an `_entry` class.
+    pub fn is_entry(&self) -> bool {
+        self.name.ends_with("_entry")
+    }
+
+    /// Is an `_exit` class.
+    pub fn is_exit(&self) -> bool {
+        self.name.ends_with("_exit")
+    }
+}
+
+/// Parsed metadata: env + class table indexed by id.
+#[derive(Debug, Clone, Default)]
+pub struct Metadata {
+    /// Env entries.
+    pub env: Vec<(String, String)>,
+    /// Classes by id.
+    pub classes: HashMap<u32, DecodedClass>,
+}
+
+/// Parse metadata text.
+pub fn parse_metadata(text: &str) -> Result<Metadata> {
+    let mut md = Metadata::default();
+    let mut in_env = false;
+    let mut in_events = false;
+    let mut current: Option<DecodedClass> = None;
+    for line in text.lines() {
+        if line.starts_with("env:") {
+            in_env = true;
+            in_events = false;
+            continue;
+        }
+        if line.starts_with("events:") {
+            in_events = true;
+            in_env = false;
+            continue;
+        }
+        if in_env && line.starts_with("  ") {
+            if let Some((k, v)) = line.trim().split_once(':') {
+                md.env.push((k.trim().into(), v.trim().into()));
+            }
+            continue;
+        }
+        if !in_events {
+            continue;
+        }
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("- id:") {
+            if let Some(c) = current.take() {
+                md.classes.insert(c.id, c);
+            }
+            current = Some(DecodedClass {
+                id: rest.trim().parse().context("bad id")?,
+                name: String::new(),
+                api: String::new(),
+                flags: String::new(),
+                fields: Vec::new(),
+            });
+        } else if let Some(rest) = t.strip_prefix("name:") {
+            current.as_mut().context("name before id")?.name = rest.trim().into();
+        } else if let Some(rest) = t.strip_prefix("api:") {
+            current.as_mut().context("api before id")?.api = rest.trim().into();
+        } else if let Some(rest) = t.strip_prefix("flags:") {
+            current.as_mut().context("flags before id")?.flags = rest.trim().into();
+        } else if t.starts_with("fields:") {
+            // list follows
+        } else if let Some(rest) = t.strip_prefix("- ") {
+            let (name, ty) = rest.rsplit_once(':').context("bad field line")?;
+            current
+                .as_mut()
+                .context("field before id")?
+                .fields
+                .push(FieldDef::new(name.trim(), field_type_from_name(ty.trim())?));
+        }
+    }
+    if let Some(c) = current.take() {
+        md.classes.insert(c.id, c);
+    }
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// Session -> TraceData, and disk persistence
+// ---------------------------------------------------------------------------
+
+/// Collect a stopped session's streams into a [`TraceData`]. `env` extends
+/// the generated metadata env block.
+pub fn collect(session: &Session, env: &[(String, String)]) -> TraceData {
+    let mut full_env = vec![
+        ("tracer".to_string(), format!("thapi-rs {}", crate::version())),
+        ("hostname".to_string(), session.config.hostname.clone()),
+        ("mode".to_string(), session.config.mode.label().to_string()),
+    ];
+    full_env.extend(env.iter().cloned());
+    let metadata = generate_metadata(&full_env);
+    let mut streams = Vec::new();
+    for s in session.streams.lock().unwrap().iter() {
+        let bytes = std::mem::take(&mut *s.data.lock().unwrap());
+        streams.push(StreamData {
+            hostname: session.config.hostname.clone(),
+            rank: s.rank,
+            tid: s.tid,
+            bytes,
+        });
+    }
+    let trace = TraceData { metadata, streams };
+    if let SinkKind::Dir(dir) = &session.config.sink {
+        // Persist as requested; failures here are fatal for -t runs.
+        write_dir(&trace, dir).expect("failed to persist trace directory");
+    }
+    trace
+}
+
+/// Persist a trace to a directory: `metadata.btf` + `stream_R_T.btfs`.
+pub fn write_dir(trace: &TraceData, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("metadata.btf"), &trace.metadata)?;
+    for s in &trace.streams {
+        let path = dir.join(format!("stream_{}_{}.btfs", s.rank, s.tid));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(STREAM_MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&s.rank.to_le_bytes())?;
+        f.write_all(&s.tid.to_le_bytes())?;
+        let host = s.hostname.as_bytes();
+        f.write_all(&(host.len() as u16).to_le_bytes())?;
+        f.write_all(host)?;
+        f.write_all(&s.bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a trace from a directory written by [`write_dir`].
+pub fn read_dir(dir: &Path) -> Result<TraceData> {
+    let metadata = std::fs::read_to_string(dir.join("metadata.btf"))
+        .with_context(|| format!("no metadata.btf in {}", dir.display()))?;
+    let mut streams = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.extension().map(|e| e != "btfs").unwrap_or(true) {
+            continue;
+        }
+        let mut f = std::fs::File::open(&path)?;
+        let mut head = [0u8; 4 + 4 + 4 + 4 + 2];
+        f.read_exact(&mut head)?;
+        if &head[0..4] != STREAM_MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let rank = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let tid = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        let hlen = u16::from_le_bytes(head[16..18].try_into().unwrap()) as usize;
+        let mut hostname = vec![0u8; hlen];
+        f.read_exact(&mut hostname)?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        streams.push(StreamData {
+            hostname: String::from_utf8_lossy(&hostname).into_owned(),
+            rank,
+            tid,
+            bytes,
+        });
+    }
+    streams.sort_by_key(|s| (s.rank, s.tid));
+    Ok(TraceData { metadata, streams })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::class_by_name;
+    use crate::tracer::session::{
+        install_session, test_support, uninstall_session, SessionConfig,
+    };
+    use crate::tracer::emit;
+
+    #[test]
+    fn metadata_roundtrip_covers_all_classes() {
+        let md_text = generate_metadata(&[("k".into(), "v".into())]);
+        let md = parse_metadata(&md_text).unwrap();
+        assert_eq!(md.classes.len(), crate::model::class_count());
+        assert!(md.env.iter().any(|(k, v)| k == "k" && v == "v"));
+        // spot-check one descriptor field-for-field
+        let live = class_by_name("lttng_ust_cuda:cuMemGetInfo_exit").unwrap();
+        let dec = &md.classes[&live.id];
+        assert_eq!(dec.name, live.name);
+        assert_eq!(dec.fields.len(), live.fields.len());
+        for (a, b) in dec.fields.iter().zip(&live.fields) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(dec.api, "CUDA");
+        assert!(dec.is_exit());
+        assert_eq!(dec.api_function(), "cuMemGetInfo");
+    }
+
+    #[test]
+    fn collect_write_read_roundtrip() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        for i in 0..50 {
+            emit(class, |e| {
+                e.u64(i);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[("app".into(), "test".into())]);
+        assert_eq!(trace.record_count(), 50);
+
+        let dir = std::env::temp_dir().join(format!("btf_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_dir(&trace, &dir).unwrap();
+        let back = read_dir(&dir).unwrap();
+        assert_eq!(back.record_count(), 50);
+        assert_eq!(back.metadata, trace.metadata);
+        assert_eq!(back.streams.len(), trace.streams.len());
+        let s0 = &back.streams[0];
+        let o0 = trace.streams.iter().find(|s| s.tid == s0.tid).unwrap();
+        assert_eq!(s0.bytes, o0.bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn iter_records_decodes_payloads() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeCommandQueueSynchronize_entry").unwrap();
+        emit(class, |e| {
+            e.ptr(0xabcd).u64(u64::MAX);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let md = parse_metadata(&trace.metadata).unwrap();
+        let mut hits = 0;
+        for s in &trace.streams {
+            iter_records(&s.bytes, |id, _ts, payload| {
+                let dec = &md.classes[&id];
+                assert_eq!(dec.name, class.name);
+                let vals = crate::tracer::encoder::decode_payload(&dec.fields, payload);
+                assert_eq!(vals[0].as_u64(), 0xabcd);
+                assert_eq!(vals[1].as_u64(), u64::MAX);
+                hits += 1;
+            });
+        }
+        assert_eq!(hits, 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Trace clock: monotonic nanoseconds since process trace-clock origin.
+//!
+//! LTTng timestamps events from the TSC (constant-rate invariant
+//! timestamp counter) rather than `clock_gettime`, because a tracepoint
+//! must cost nanoseconds and a vDSO call costs ~20 ns by itself. We do
+//! the same on x86_64: `rdtsc` calibrated once against `Instant`, with a
+//! `clock_gettime`-based fallback elsewhere. Analysis only ever uses
+//! differences and ordering, so an arbitrary per-process origin is fine.
+//!
+//! The simulated *device* clock conversion happens in the engines (they
+//! timestamp commands with this same clock at execution, mirroring what
+//! THAPI's GPU-profiling helpers reconstruct at synchronize time).
+
+use once_cell::sync::Lazy;
+use std::time::Instant;
+
+static ORIGIN: Lazy<Instant> = Lazy::new(Instant::now);
+
+#[cfg(target_arch = "x86_64")]
+mod tsc {
+    use super::ORIGIN;
+    use once_cell::sync::Lazy;
+
+    /// ns per 2^20 TSC ticks (fixed-point), plus the TSC value at origin.
+    pub(super) struct Calib {
+        pub t0: u64,
+        pub ns_per_tick_x2_20: u64,
+    }
+
+    pub(super) static CALIB: Lazy<Calib> = Lazy::new(|| {
+        // Calibrate: measure TSC rate against Instant over a short window.
+        let i0 = *ORIGIN;
+        let t0 = unsafe { core::arch::x86_64::_rdtsc() };
+        let spin_start = std::time::Instant::now();
+        while spin_start.elapsed().as_micros() < 2_000 {
+            std::hint::spin_loop();
+        }
+        let t1 = unsafe { core::arch::x86_64::_rdtsc() };
+        let dt_ns = i0.elapsed().as_nanos() as u64;
+        let base_ns = dt_ns - spin_start.elapsed().as_nanos() as u64;
+        let ticks = (t1 - t0).max(1);
+        let window_ns = dt_ns - base_ns;
+        Calib {
+            // back-date t0 to the trace origin
+            t0: t0.saturating_sub(base_ns * ticks / window_ns.max(1)),
+            ns_per_tick_x2_20: (window_ns << 20) / ticks,
+        }
+    });
+}
+
+/// Nanoseconds since the trace-clock origin.
+#[inline]
+pub fn now_ns() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let c = &*tsc::CALIB;
+        let t = unsafe { core::arch::x86_64::_rdtsc() };
+        ((t.saturating_sub(c.t0) as u128 * c.ns_per_tick_x2_20 as u128) >> 20) as u64
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        ORIGIN.elapsed().as_nanos() as u64
+    }
+}
+
+/// Force-initialize the origin and TSC calibration (call early so
+/// timestamps start near zero and the first tracepoint doesn't pay the
+/// ~2 ms calibration).
+pub fn init() {
+    Lazy::force(&ORIGIN);
+    #[cfg(target_arch = "x86_64")]
+    Lazy::force(&tsc::CALIB);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic() {
+        init();
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn advances() {
+        init();
+        let a = now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(now_ns() - a >= 1_000_000);
+    }
+
+    #[test]
+    fn tracks_wall_time_within_five_percent() {
+        init();
+        let w0 = Instant::now();
+        let a = now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let dt_trace = (now_ns() - a) as f64;
+        let dt_wall = w0.elapsed().as_nanos() as f64;
+        let err = (dt_trace - dt_wall).abs() / dt_wall;
+        assert!(err < 0.05, "trace clock drift {err:.3} vs wall");
+    }
+}

@@ -1,0 +1,288 @@
+//! Payload encoder for trace events.
+//!
+//! Fields are encoded little-endian, unaligned, in the order declared by
+//! the event class descriptor (generated from the API model). In debug
+//! builds the encoder cross-checks every pushed value against the
+//! descriptor, so a wrapper whose emitted fields drift from the generated
+//! trace model fails loudly in tests — the Rust analogue of THAPI's
+//! "generated tracepoints cannot drift from the model" guarantee.
+
+use crate::model::{EventClass, FieldType};
+
+/// Encodes one event payload into a scratch buffer.
+pub struct Encoder<'a> {
+    buf: &'a mut Vec<u8>,
+    #[cfg(debug_assertions)]
+    class: &'a EventClass,
+    #[cfg(debug_assertions)]
+    next_field: usize,
+}
+
+impl<'a> Encoder<'a> {
+    /// Create an encoder writing into `buf` for event class `class`.
+    pub fn new(buf: &'a mut Vec<u8>, class: &'a EventClass) -> Self {
+        let _ = class;
+        Encoder {
+            buf,
+            #[cfg(debug_assertions)]
+            class,
+            #[cfg(debug_assertions)]
+            next_field: 0,
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[inline]
+    fn check(&mut self, ty: FieldType) {
+        let fields = &self.class.fields;
+        assert!(
+            self.next_field < fields.len(),
+            "event {}: extra field of type {:?} (descriptor has {})",
+            self.class.name,
+            ty,
+            fields.len()
+        );
+        let want = fields[self.next_field].ty;
+        assert!(
+            want == ty,
+            "event {}: field {} ({}) encoded as {:?}, descriptor says {:?}",
+            self.class.name,
+            self.next_field,
+            fields[self.next_field].name,
+            ty,
+            want
+        );
+        self.next_field += 1;
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn check(&mut self, _ty: FieldType) {}
+
+    /// Finish: in debug builds asserts all declared fields were encoded.
+    pub fn finish(self) {
+        #[cfg(debug_assertions)]
+        assert!(
+            self.next_field == self.class.fields.len(),
+            "event {}: encoded {} of {} fields",
+            self.class.name,
+            self.next_field,
+            self.class.fields.len()
+        );
+    }
+
+    /// Encode a `u32` field.
+    #[inline]
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.check(FieldType::U32);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Encode a `u64` field.
+    #[inline]
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.check(FieldType::U64);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Encode an `i64` field.
+    #[inline]
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.check(FieldType::I64);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Encode an `f64` field.
+    #[inline]
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.check(FieldType::F64);
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    /// Encode a pointer/handle field (hex-displayed u64).
+    #[inline]
+    pub fn ptr(&mut self, v: u64) -> &mut Self {
+        self.check(FieldType::Ptr);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Encode a string field (u16 length prefix + UTF-8 bytes, truncated
+    /// at 4 KiB to bound record size).
+    #[inline]
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.check(FieldType::Str);
+        let bytes = v.as_bytes();
+        let n = bytes.len().min(4096);
+        self.buf.extend_from_slice(&(n as u16).to_le_bytes());
+        self.buf.extend_from_slice(&bytes[..n]);
+        self
+    }
+}
+
+/// Decode a payload back into typed values, given the descriptor fields.
+/// Used by the BTF reader; the inverse of [`Encoder`].
+pub fn decode_payload(fields: &[crate::model::FieldDef], mut p: &[u8]) -> Vec<FieldValue> {
+    let mut out = Vec::with_capacity(fields.len());
+    for f in fields {
+        match f.ty {
+            FieldType::U32 => {
+                let (v, rest) = p.split_at(4);
+                out.push(FieldValue::U64(u32::from_le_bytes(v.try_into().unwrap()) as u64));
+                p = rest;
+            }
+            FieldType::U64 => {
+                let (v, rest) = p.split_at(8);
+                out.push(FieldValue::U64(u64::from_le_bytes(v.try_into().unwrap())));
+                p = rest;
+            }
+            FieldType::Ptr => {
+                let (v, rest) = p.split_at(8);
+                out.push(FieldValue::Ptr(u64::from_le_bytes(v.try_into().unwrap())));
+                p = rest;
+            }
+            FieldType::I64 => {
+                let (v, rest) = p.split_at(8);
+                out.push(FieldValue::I64(i64::from_le_bytes(v.try_into().unwrap())));
+                p = rest;
+            }
+            FieldType::F64 => {
+                let (v, rest) = p.split_at(8);
+                out.push(FieldValue::F64(f64::from_bits(u64::from_le_bytes(
+                    v.try_into().unwrap(),
+                ))));
+                p = rest;
+            }
+            FieldType::Str => {
+                let (l, rest) = p.split_at(2);
+                let n = u16::from_le_bytes(l.try_into().unwrap()) as usize;
+                let (s, rest) = rest.split_at(n);
+                out.push(FieldValue::Str(String::from_utf8_lossy(s).into_owned()));
+                p = rest;
+            }
+        }
+    }
+    out
+}
+
+/// A decoded field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    /// Unsigned integer (u32 widened to u64).
+    U64(u64),
+    /// Signed integer.
+    I64(i64),
+    /// Floating point.
+    F64(f64),
+    /// Pointer/handle — displayed in hex.
+    Ptr(u64),
+    /// String.
+    Str(String),
+}
+
+impl FieldValue {
+    /// Integer view (panics for Str/F64).
+    pub fn as_u64(&self) -> u64 {
+        match self {
+            FieldValue::U64(v) | FieldValue::Ptr(v) => *v,
+            FieldValue::I64(v) => *v as u64,
+            other => panic!("not an integer field: {other:?}"),
+        }
+    }
+
+    /// Float view (panics otherwise).
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            FieldValue::F64(v) => *v,
+            other => panic!("not a float field: {other:?}"),
+        }
+    }
+
+    /// String view (panics otherwise).
+    pub fn as_str(&self) -> &str {
+        match self {
+            FieldValue::Str(s) => s,
+            other => panic!("not a string field: {other:?}"),
+        }
+    }
+
+    /// Render for pretty-printing (pointers in hex, like babeltrace2).
+    pub fn render(&self) -> String {
+        match self {
+            FieldValue::U64(v) => v.to_string(),
+            FieldValue::I64(v) => v.to_string(),
+            FieldValue::F64(v) => format!("{v:.6}"),
+            FieldValue::Ptr(v) => format!("{v:#018x}"),
+            FieldValue::Str(s) => s.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{EventClass, FieldDef};
+
+    fn class(fields: Vec<FieldDef>) -> EventClass {
+        EventClass::new_for_test("test:ev", fields)
+    }
+
+    #[test]
+    fn roundtrip_all_types() {
+        let c = class(vec![
+            FieldDef::new("a", FieldType::U32),
+            FieldDef::new("b", FieldType::U64),
+            FieldDef::new("c", FieldType::I64),
+            FieldDef::new("d", FieldType::F64),
+            FieldDef::new("e", FieldType::Ptr),
+            FieldDef::new("f", FieldType::Str),
+        ]);
+        let mut buf = Vec::new();
+        let mut e = Encoder::new(&mut buf, &c);
+        e.u32(7).u64(1 << 40).i64(-3).f64(2.5).ptr(0xff00_0000_dead_beef).str("hi");
+        e.finish();
+        let vals = decode_payload(&c.fields, &buf);
+        assert_eq!(vals[0], FieldValue::U64(7));
+        assert_eq!(vals[1], FieldValue::U64(1 << 40));
+        assert_eq!(vals[2], FieldValue::I64(-3));
+        assert_eq!(vals[3], FieldValue::F64(2.5));
+        assert_eq!(vals[4], FieldValue::Ptr(0xff00_0000_dead_beef));
+        assert_eq!(vals[5], FieldValue::Str("hi".into()));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "encoded as")]
+    fn type_mismatch_panics_in_debug() {
+        let c = class(vec![FieldDef::new("a", FieldType::U64)]);
+        let mut buf = Vec::new();
+        let mut e = Encoder::new(&mut buf, &c);
+        e.u32(1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "encoded 1 of 2")]
+    fn missing_field_panics_in_debug() {
+        let c = class(vec![
+            FieldDef::new("a", FieldType::U64),
+            FieldDef::new("b", FieldType::U64),
+        ]);
+        let mut buf = Vec::new();
+        let mut e = Encoder::new(&mut buf, &c);
+        e.u64(1);
+        e.finish();
+    }
+
+    #[test]
+    fn ptr_renders_hex() {
+        assert_eq!(
+            FieldValue::Ptr(0xff).render(),
+            "0x00000000000000ff"
+        );
+    }
+}

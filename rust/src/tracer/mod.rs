@@ -1,0 +1,32 @@
+//! The LTTng-UST substitute: low-overhead userspace tracing substrate.
+//!
+//! Mirrors the properties the paper relies on (§3.1):
+//!
+//! * **lockless per-thread ring buffers** — each traced thread owns an SPSC
+//!   byte ring ([`ringbuf`]); the emit path takes no locks and performs no
+//!   allocation.
+//! * **discard mode** — if a buffer is full the event is dropped (counted),
+//!   never blocking the application.
+//! * **selective tracing** — sessions ([`session`]) enable/disable event
+//!   classes via an atomic bitmap; a disabled class costs two loads.
+//! * **binary trace format** — BTF ([`btf`]), our CTF stand-in: a text
+//!   metadata stream generated from the trace model plus per-thread binary
+//!   event streams, parsed offline by the [`crate::analysis`] plugins.
+//!
+//! The global entry point is [`emit`]; interception frontends call it with a
+//! pre-resolved [`EventClass`](crate::model::EventClass) and a closure that
+//! encodes the payload fields.
+
+pub mod btf;
+pub mod clock;
+pub mod consumer;
+pub mod encoder;
+pub mod ringbuf;
+pub mod session;
+
+pub use clock::now_ns;
+pub use encoder::Encoder;
+pub use session::{
+    emit, install_session, register_thread, session_stats, set_thread_rank, uninstall_session,
+    Session, SessionConfig, SessionStats, SinkKind, TracingMode,
+};

@@ -1,0 +1,266 @@
+//! Lockless SPSC byte ring buffer with LTTng-style *discard* semantics.
+//!
+//! One producer (the traced thread) and one consumer (the background
+//! [`consumer`](crate::tracer::consumer) thread). Records are written
+//! contiguously; a record that would straddle the physical end of the
+//! buffer is preceded by a padding marker so the consumer can skip to the
+//! wrap point. If there is not enough free space the record is **dropped
+//! and counted** — the tracer never blocks the application (paper §3.1).
+//!
+//! Record wire layout (4-byte aligned):
+//! `[u32 total_len][u32 class_id][u64 timestamp][payload...]`
+//! A `total_len` of [`PAD_MARKER`] means "skip to the end of the buffer".
+
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `total_len` sentinel marking wrap padding.
+pub const PAD_MARKER: u32 = u32::MAX;
+
+/// Fixed per-record header: total_len + class_id + timestamp.
+pub const RECORD_HEADER: usize = 4 + 4 + 8;
+
+/// Lockless single-producer single-consumer byte ring.
+pub struct RingBuf {
+    buf: UnsafeCell<Box<[u8]>>,
+    cap: usize,
+    /// Producer cursor: total bytes ever written (not wrapped).
+    head: CachePadded<AtomicU64>,
+    /// Consumer cursor: total bytes ever consumed.
+    tail: CachePadded<AtomicU64>,
+    /// Events dropped because the buffer was full.
+    dropped: AtomicU64,
+    /// Events successfully written.
+    written: AtomicU64,
+}
+
+// SAFETY: the byte region is only mutated by the single producer between
+// `tail..head` reservations, and only read by the single consumer below
+// `head` (Acquire). Cursor atomics order the accesses.
+unsafe impl Send for RingBuf {}
+unsafe impl Sync for RingBuf {}
+
+impl RingBuf {
+    /// Create a ring with capacity `cap` bytes (rounded up to a power of 2,
+    /// minimum 4 KiB).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(4096).next_power_of_two();
+        RingBuf {
+            buf: UnsafeCell::new(vec![0u8; cap].into_boxed_slice()),
+            cap,
+            head: CachePadded::new(AtomicU64::new(0)),
+            tail: CachePadded::new(AtomicU64::new(0)),
+            dropped: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    /// Buffer capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events dropped so far (discard mode).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events written so far.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn slot(&self, pos: u64) -> usize {
+        (pos as usize) & (self.cap - 1)
+    }
+
+    /// Producer: try to append one record. `class_id`, `ts` fill the record
+    /// header; `payload` is the encoded field data. Returns `false` (and
+    /// counts a drop) if there is not enough space.
+    ///
+    /// # Safety contract
+    /// Must only be called from the single producer thread for this ring.
+    #[inline]
+    pub fn try_write(&self, class_id: u32, ts: u64, payload: &[u8]) -> bool {
+        let len = RECORD_HEADER + payload.len();
+        let len = (len + 3) & !3; // keep 4-byte alignment
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        let free = self.cap - (head - tail) as usize;
+
+        let off = self.slot(head);
+        let until_end = self.cap - off;
+        let (pad, start) = if len <= until_end {
+            (0usize, head)
+        } else {
+            // Need to pad to the wrap point, then write at the start.
+            (until_end, head + until_end as u64)
+        };
+        if pad + len > free {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+
+        // SAFETY: region [head, head+pad+len) is unreachable by the consumer
+        // until we publish the new head below.
+        let buf = unsafe { &mut *self.buf.get() };
+        if pad > 0 {
+            // A pad region is always >= 4 bytes (records are 4-byte aligned).
+            debug_assert!(pad >= 4);
+            buf[off..off + 4].copy_from_slice(&PAD_MARKER.to_le_bytes());
+        }
+        let s = self.slot(start);
+        buf[s..s + 4].copy_from_slice(&(len as u32).to_le_bytes());
+        buf[s + 4..s + 8].copy_from_slice(&class_id.to_le_bytes());
+        buf[s + 8..s + 16].copy_from_slice(&ts.to_le_bytes());
+        buf[s + 16..s + 16 + payload.len()].copy_from_slice(payload);
+
+        self.head.store(start + len as u64, Ordering::Release);
+        self.written.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Consumer: drain all available records into `f` as raw record slices
+    /// (header included). Returns the number of records drained.
+    ///
+    /// # Safety contract
+    /// Must only be called from the single consumer thread for this ring.
+    pub fn drain(&self, mut f: impl FnMut(&[u8])) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        let mut count = 0usize;
+        // SAFETY: [tail, head) has been published by the producer.
+        let buf = unsafe { &*self.buf.get() };
+        while tail < head {
+            let off = self.slot(tail);
+            let total_len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            if total_len == PAD_MARKER {
+                tail += (self.cap - off) as u64;
+                continue;
+            }
+            let len = total_len as usize;
+            debug_assert!(len >= RECORD_HEADER && off + len <= self.cap);
+            f(&buf[off..off + len]);
+            tail += len as u64;
+            count += 1;
+        }
+        self.tail.store(tail, Ordering::Release);
+        count
+    }
+
+    /// Bytes currently buffered and not yet consumed.
+    pub fn backlog(&self) -> usize {
+        (self.head.load(Ordering::Relaxed) - self.tail.load(Ordering::Relaxed)) as usize
+    }
+}
+
+/// Parse a raw record slice (as passed to [`RingBuf::drain`]'s callback)
+/// into `(class_id, timestamp, payload)`.
+pub fn parse_record(rec: &[u8]) -> (u32, u64, &[u8]) {
+    let total = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as usize;
+    let class_id = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+    let ts = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+    (class_id, ts, &rec[RECORD_HEADER..total.min(rec.len())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip_single_record() {
+        let rb = RingBuf::new(4096);
+        assert!(rb.try_write(7, 123, b"hello"));
+        let mut seen = vec![];
+        rb.drain(|rec| {
+            let (id, ts, payload) = parse_record(rec);
+            seen.push((id, ts, payload.to_vec()));
+        });
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0].0, 7);
+        assert_eq!(seen[0].1, 123);
+        // payload is padded to 4-byte multiple; prefix must match
+        assert_eq!(&seen[0].2[..5], b"hello");
+    }
+
+    #[test]
+    fn drops_when_full_and_counts() {
+        let rb = RingBuf::new(4096);
+        let payload = vec![0u8; 512];
+        let mut wrote = 0;
+        for _ in 0..100 {
+            if rb.try_write(1, 0, &payload) {
+                wrote += 1;
+            }
+        }
+        assert!(wrote < 100);
+        assert_eq!(rb.dropped() as usize, 100 - wrote);
+        assert_eq!(rb.written() as usize, wrote);
+    }
+
+    #[test]
+    fn wraps_correctly_many_times() {
+        let rb = RingBuf::new(4096);
+        let mut total = 0u64;
+        for round in 0..200u64 {
+            let payload = vec![round as u8; (round % 97) as usize];
+            assert!(rb.try_write(round as u32, round, &payload));
+            let mut got = 0;
+            rb.drain(|rec| {
+                let (id, ts, p) = parse_record(rec);
+                assert_eq!(id, round as u32);
+                assert_eq!(ts, round);
+                assert_eq!(&p[..payload.len()], &payload[..]);
+                got += 1;
+            });
+            assert_eq!(got, 1);
+            total += 1;
+        }
+        assert_eq!(rb.written(), total);
+        assert_eq!(rb.dropped(), 0);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_preserves_all_records() {
+        let rb = Arc::new(RingBuf::new(1 << 16));
+        let n = 50_000u64;
+        let prod = {
+            let rb = rb.clone();
+            std::thread::spawn(move || {
+                let mut dropped = 0u64;
+                for i in 0..n {
+                    let payload = (i as u32).to_le_bytes();
+                    if !rb.try_write(9, i, &payload) {
+                        dropped += 1;
+                        std::thread::yield_now();
+                    }
+                }
+                dropped
+            })
+        };
+        let mut seen = 0u64;
+        let mut last_ts = None::<u64>;
+        while !prod.is_finished() || rb.backlog() > 0 {
+            rb.drain(|rec| {
+                let (_, ts, _) = parse_record(rec);
+                if let Some(prev) = last_ts {
+                    assert!(ts > prev, "per-buffer order must be monotonic");
+                }
+                last_ts = Some(ts);
+                seen += 1;
+            });
+        }
+        let dropped = prod.join().unwrap();
+        assert_eq!(seen + dropped, n);
+        assert_eq!(rb.dropped(), dropped);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(RingBuf::new(5000).capacity(), 8192);
+        assert_eq!(RingBuf::new(0).capacity(), 4096);
+    }
+}

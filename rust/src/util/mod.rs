@@ -1,0 +1,6 @@
+//! Small shared utilities: deterministic PRNG and a property-test helper.
+
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

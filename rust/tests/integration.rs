@@ -1,0 +1,272 @@
+//! Integration tests: whole-stack behaviour across modules.
+//!
+//! Each test drives real workloads through the traced frontends on a
+//! simulated node (with real PJRT kernel execution) and checks the
+//! resulting traces through the analysis pipeline. Requires artifacts
+//! (`make artifacts`).
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+use thapi::analysis;
+use thapi::apps::{hecbench, spechpc};
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::sampling::SamplingConfig;
+use thapi::tracer::{btf, SinkKind, TracingMode};
+
+/// Global-session tests cannot overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn small_node() -> std::sync::Arc<Node> {
+    Node::new(NodeConfig::test_small())
+}
+
+fn app(name: &str) -> std::sync::Arc<dyn thapi::apps::Workload> {
+    hecbench::suite()
+        .into_iter()
+        .chain(spechpc::suite())
+        .find(|a| a.name() == name)
+        .unwrap_or_else(|| panic!("app {name}"))
+}
+
+#[test]
+fn traced_run_roundtrips_through_disk() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let dir = std::env::temp_dir().join(format!("thapi_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = IprofConfig { sink: SinkKind::Dir(dir.clone()), ..Default::default() };
+    let report = run(&node, app("saxpy-ze").as_ref(), &config);
+    assert!(report.trace_bytes() > 0);
+
+    // reload from disk and compare event counts
+    let reloaded = btf::read_dir(&dir).unwrap();
+    assert_eq!(reloaded.record_count(), report.trace.as_ref().unwrap().record_count());
+    let parsed = analysis::parse_trace(&reloaded).unwrap();
+    let msgs = analysis::mux(&parsed);
+    assert!(!msgs.is_empty());
+    for w in msgs.windows(2) {
+        assert!(w[0].ts <= w[1].ts);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn mode_event_counts_are_ordered_min_default_full() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let a = app("eventspin-ze");
+    let mut sizes = Vec::new();
+    let mut counts = Vec::new();
+    for mode in [TracingMode::Minimal, TracingMode::Default, TracingMode::Full] {
+        let r = run(&node, a.as_ref(), &IprofConfig::paper_config(mode, false));
+        sizes.push(r.trace_bytes());
+        counts.push(r.stats.unwrap().written);
+    }
+    // The spin-loop iteration count varies run to run, so default-vs-full
+    // totals are not strictly ordered across *separate* runs; minimal
+    // mode's count, however, is structurally far below both.
+    assert!(
+        counts[0] * 10 < counts[1] && counts[0] * 10 < counts[2],
+        "minimal must track far fewer events: {counts:?}"
+    );
+    assert!(
+        sizes[0] * 3 < sizes[1].min(sizes[2]),
+        "minimal trace must be far smaller: {sizes:?}"
+    );
+}
+
+#[test]
+fn polling_app_separates_default_from_full() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let a = app("queryspin-cuda");
+    let d = run(&node, a.as_ref(), &IprofConfig::paper_config(TracingMode::Default, false));
+    let f = run(&node, a.as_ref(), &IprofConfig::paper_config(TracingMode::Full, false));
+    let dc = d.stats.unwrap().written;
+    let fc = f.stats.unwrap().written;
+    assert!(
+        fc > dc * 2,
+        "cuEventQuery storms must appear only in full mode (default {dc}, full {fc})"
+    );
+}
+
+#[test]
+fn sampling_adds_telemetry_events() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.15");
+    let node = small_node();
+    let a = app("jacobi2D-ze");
+    let mut config = IprofConfig::paper_config(TracingMode::Default, true);
+    config.sampling = Some(SamplingConfig { interval: Duration::from_millis(5) });
+    let r = run(&node, a.as_ref(), &config);
+    let trace = r.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let telemetry = msgs.iter().filter(|m| m.class.name.starts_with("lttng_ust_sampling")).count();
+    assert!(telemetry > 10, "expected telemetry events, got {telemetry}");
+    // power domains present: card + 2 tiles
+    let domains: std::collections::HashSet<u64> = msgs
+        .iter()
+        .filter(|m| m.class.name == "lttng_ust_sampling:gpu_power")
+        .map(|m| m.field("domain").unwrap().as_u64())
+        .collect();
+    assert_eq!(domains, [0u64, 1, 2].into_iter().collect());
+}
+
+#[test]
+fn tally_of_hiplz_app_shows_layering_shape() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.2");
+    let node = small_node();
+    let r = run(&node, app("lrn-hip").as_ref(), &IprofConfig::default());
+    let tally = r.tally().unwrap();
+    let rows = tally.host_rows();
+    let calls = |n: &str| rows.iter().find(|r| r.name == n).map(|r| r.calls).unwrap_or(0);
+    // the §4.3 shape: spin calls dominate call counts
+    assert!(calls("zeEventHostSynchronize") > calls("hipDeviceSynchronize"));
+    assert!(calls("hipLaunchKernel") > 0);
+    // device rows exist and carry the kernel name
+    assert!(tally.device.contains_key("lrn"), "device tally rows: {:?}", tally.device.keys());
+    // backend header counts both HIP and ZE
+    let bc = tally.backend_counts();
+    assert!(bc.contains_key("HIP") && bc.contains_key("ZE"));
+}
+
+#[test]
+fn spechpc_app_runs_traced_on_aurora_and_polaris() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    for cfg in [NodeConfig::aurora(), NodeConfig::polaris()] {
+        let gpus = cfg.gpu_count;
+        let node = Node::new(cfg);
+        let r = run(&node, app("519.clvleaf").as_ref(), &IprofConfig::default());
+        let tally = r.tally().unwrap();
+        assert_eq!(
+            tally.processes.len() as u32,
+            gpus,
+            "one MPI rank per GPU must appear in the tally"
+        );
+        assert!(tally.backend_counts().contains_key("MPI"));
+        assert!(tally.backend_counts().contains_key("OMP"));
+    }
+}
+
+#[test]
+fn rank_selection_restricts_trace() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig { gpu_count: 2, ..NodeConfig::test_small() });
+    let mut config = IprofConfig::default();
+    config.selected_ranks = Some([1u32].into_iter().collect());
+    let r = run(&node, app("505.lbm").as_ref(), &config);
+    let tally = r.tally().unwrap();
+    // only rank 1's thread streams exist (engine/sampler threads are rank 0
+    // but emit only profiling events, attributed to rank 0 streams if any)
+    assert!(tally.processes.contains(&1));
+    assert!(
+        !tally.host.keys().any(|(api, _)| api == "MPI") || !tally.processes.contains(&0),
+        "rank 0 host API calls must be filtered out"
+    );
+}
+
+#[test]
+fn event_filter_disables_matching_classes() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let mut config = IprofConfig::default();
+    config.disabled_patterns = vec!["zeKernelSetArgumentValue".into()];
+    let r = run(&node, app("saxpy-ze").as_ref(), &config);
+    let trace = r.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    assert!(
+        !msgs.iter().any(|m| m.class.name.contains("zeKernelSetArgumentValue")),
+        "filtered class must not appear"
+    );
+    assert!(msgs.iter().any(|m| m.class.name.contains("zeCommandListAppendLaunchKernel")));
+}
+
+#[test]
+fn pretty_print_covers_all_recorded_classes() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let r = run(&node, app("miniweather-ze").as_ref(), &IprofConfig::default());
+    let trace = r.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let text = analysis::pretty_print(&msgs);
+    assert_eq!(text.lines().count(), msgs.len());
+    // every line carries the hostname and a field block
+    for line in text.lines().take(50) {
+        assert!(line.contains("testnode"));
+        assert!(line.contains('{'));
+    }
+}
+
+#[test]
+fn timeline_json_from_sampled_run_is_valid_shape() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let mut config = IprofConfig::paper_config(TracingMode::Default, true);
+    config.sampling = Some(SamplingConfig { interval: Duration::from_millis(5) });
+    let r = run(&node, app("convolution1D-ze").as_ref(), &config);
+    let trace = r.trace.as_ref().unwrap();
+    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let iv = analysis::pair_intervals(&msgs);
+    let json = analysis::timeline_json(&iv, &msgs);
+    assert!(json.contains("traceEvents"));
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(json.contains("GPU Power Domain 0"));
+}
+
+#[test]
+fn clean_apps_pass_validation() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    for name in ["saxpy-ze", "gemm-cuda", "saxpy-cl"] {
+        let r = run(&node, app(name).as_ref(), &IprofConfig::default());
+        let trace = r.trace.as_ref().unwrap();
+        let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+        let findings = analysis::validate(&msgs);
+        let errors: Vec<_> =
+            findings.iter().filter(|f| f.severity == analysis::Severity::Error).collect();
+        assert!(errors.is_empty(), "{name} must validate clean, got {errors:?}");
+    }
+}
+
+#[test]
+fn aggregate_only_flow_from_real_traces() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = small_node();
+    let mut per_rank = Vec::new();
+    for node_id in 0..3u32 {
+        let r = run(&node, app("513.soma").as_ref(), &IprofConfig::default());
+        let tally = r.tally().unwrap();
+        per_rank.push((node_id, 0u32, tally));
+    }
+    let (composite, bytes) = thapi::aggregate::aggregate_tree(&per_rank).unwrap();
+    let soma_calls: u64 = composite
+        .host
+        .values()
+        .filter(|r| r.name == "MPI_Allreduce")
+        .map(|r| r.calls)
+        .sum();
+    let single_calls: u64 = per_rank[0]
+        .2
+        .host
+        .values()
+        .filter(|r| r.name == "MPI_Allreduce")
+        .map(|r| r.calls)
+        .sum();
+    assert_eq!(soma_calls, single_calls * 3);
+    assert!(bytes > 0);
+}

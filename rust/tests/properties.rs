@@ -1,0 +1,274 @@
+//! Property-based tests (in-crate `util::prop` harness) over the
+//! tracer/model/analysis invariants.
+
+use thapi::model::{ApiModel, CType, FnModel, Param};
+use thapi::tracer::ringbuf::{parse_record, RingBuf};
+use thapi::util::{prop, Rng};
+
+// ---------------------------------------------------------------------------
+// Ring buffer
+// ---------------------------------------------------------------------------
+
+/// Whatever the interleaving of writes and drains, every record drained
+/// parses back exactly as written, in order, with written+dropped == sent.
+#[test]
+fn prop_ringbuf_preserves_order_and_content() {
+    prop::check(50, 0x1234, |rng| {
+        let cap = 1usize << rng.range(12, 16);
+        let rb = RingBuf::new(cap);
+        let rounds = rng.range(1, 60);
+        let mut expect: std::collections::VecDeque<(u32, u64, Vec<u8>)> = Default::default();
+        let mut sent = 0u64;
+        for round in 0..rounds {
+            let burst = rng.range(1, 50);
+            for i in 0..burst {
+                let len = rng.range(0, 200);
+                let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                let id = (round * 1000 + i) as u32;
+                sent += 1;
+                if rb.try_write(id, sent, &payload) {
+                    expect.push_back((id, sent, payload));
+                }
+            }
+            if rng.chance(0.7) {
+                rb.drain(|rec| {
+                    let (id, ts, payload) = parse_record(rec);
+                    let (eid, ets, epayload) =
+                        expect.pop_front().expect("drained more than written");
+                    assert_eq!(id, eid);
+                    assert_eq!(ts, ets);
+                    assert_eq!(&payload[..epayload.len()], &epayload[..]);
+                });
+            }
+        }
+        rb.drain(|rec| {
+            let (id, _, _) = parse_record(rec);
+            let (eid, _, _) = expect.pop_front().expect("drained more than written");
+            assert_eq!(id, eid);
+        });
+        assert!(expect.is_empty(), "all surviving records must drain");
+        assert_eq!(rb.written() + rb.dropped(), sent);
+    });
+}
+
+/// Free space is fully reusable: after draining, a buffer accepts new
+/// records of any admissible size again (no fragmentation leak).
+#[test]
+fn prop_ringbuf_space_is_reusable() {
+    prop::check(30, 99, |rng| {
+        let rb = RingBuf::new(4096);
+        for _ in 0..rng.range(50, 400) {
+            let len = rng.range(0, 900);
+            let payload = vec![0u8; len];
+            if !rb.try_write(1, 1, &payload) {
+                // full: drain everything, then the same record must fit
+                rb.drain(|_| {});
+                assert!(
+                    rb.try_write(1, 1, &payload),
+                    "record of {len}B must fit into an empty 4096B ring"
+                );
+            }
+            if rng.chance(0.2) {
+                rb.drain(|_| {});
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// YAML API-model interchange
+// ---------------------------------------------------------------------------
+
+fn random_ctype(rng: &mut Rng, depth: u32) -> CType {
+    match rng.below(if depth > 2 { 6 } else { 7 }) {
+        0 => CType::Int { bits: 32, name: "int32_t".into() },
+        1 => CType::Uint { bits: 64, name: "size_t".into() },
+        2 => CType::Float { bits: 64, name: "double".into() },
+        3 => CType::Handle { name: format!("h{}_t", rng.below(20)) },
+        4 => CType::Enum { name: format!("e{}_t", rng.below(20)) },
+        5 => CType::CString,
+        _ => CType::Ptr {
+            inner: Box::new(random_ctype(rng, depth + 1)),
+            is_const: rng.chance(0.5),
+        },
+    }
+}
+
+/// Any API model survives the YAML emit→parse round trip.
+#[test]
+fn prop_yaml_api_model_roundtrip() {
+    prop::check(60, 0xabc, |rng| {
+        let n_fns = rng.range(1, 12);
+        let mut model = ApiModel::default();
+        for i in 0..n_fns {
+            let n_params = rng.range(0, 8);
+            model.functions.push(FnModel {
+                name: format!("fn{i}"),
+                ret: random_ctype(rng, 0),
+                params: (0..n_params)
+                    .map(|j| Param { name: format!("p{j}"), ty: random_ctype(rng, 0) })
+                    .collect(),
+            });
+        }
+        let n_enums = rng.range(0, 4);
+        for i in 0..n_enums {
+            let vals = (0..rng.range(1, 6))
+                .map(|j| (format!("V{j}"), rng.below(1000) as i64 - 500))
+                .collect();
+            model.enums.push((format!("enum{i}_t"), vals));
+        }
+        let text = thapi::model::yaml::emit_api_model(&model);
+        let back = thapi::model::yaml::parse_api_model(&text)
+            .unwrap_or_else(|e| panic!("parse failed: {e:#}\n{text}"));
+        assert_eq!(model.functions, back.functions);
+        assert_eq!(model.enums, back.enums);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tally merge algebra
+// ---------------------------------------------------------------------------
+
+fn random_tally(rng: &mut Rng) -> thapi::analysis::Tally {
+    use thapi::analysis::TallyRow;
+    let mut t = thapi::analysis::Tally::default();
+    let apis = ["ZE", "CUDA", "HIP"];
+    for _ in 0..rng.range(1, 10) {
+        let api = apis[rng.range(0, apis.len())].to_string();
+        let name = format!("fn{}", rng.below(6));
+        let calls = 1 + rng.below(1000);
+        let avg = 1 + rng.below(100_000);
+        let row = TallyRow {
+            name: name.clone(),
+            api: api.clone(),
+            time_ns: calls * avg,
+            calls,
+            min_ns: avg / 2 + 1,
+            max_ns: avg * 2,
+        };
+        match t.host.get_mut(&(api.clone(), name.clone())) {
+            Some(r) => {
+                r.time_ns += row.time_ns;
+                r.calls += row.calls;
+            }
+            None => {
+                t.host.insert((api, name), row);
+            }
+        }
+    }
+    t.processes.insert(rng.below(64) as u32);
+    t
+}
+
+/// Merge is commutative and associative on (time, calls) and
+/// min/max-correct.
+#[test]
+fn prop_tally_merge_is_commutative_and_associative() {
+    prop::check(60, 7, |rng| {
+        let a = random_tally(rng);
+        let b = random_tally(rng);
+        let c = random_tally(rng);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.host, ba.host, "merge must be commutative");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c.host, a_bc.host, "merge must be associative");
+
+        for (k, r) in &ab.host {
+            let ta = a.host.get(k).map(|r| r.time_ns).unwrap_or(0);
+            let tb = b.host.get(k).map(|r| r.time_ns).unwrap_or(0);
+            assert_eq!(r.time_ns, ta + tb);
+            assert!(r.min_ns <= r.max_ns);
+        }
+    });
+}
+
+/// serialize ∘ deserialize = identity.
+#[test]
+fn prop_tally_serialization_roundtrip() {
+    prop::check(60, 21, |rng| {
+        let t = random_tally(rng);
+        let s = t.serialize();
+        let back = thapi::analysis::Tally::deserialize(&s).unwrap();
+        assert_eq!(t.host, back.host);
+        assert_eq!(t.processes, back.processes);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Encoder/decoder
+// ---------------------------------------------------------------------------
+
+/// Random payloads round-trip through encode/decode for random field
+/// layouts.
+#[test]
+fn prop_encoder_decoder_roundtrip() {
+    use thapi::model::{EventClass, FieldDef, FieldType};
+    use thapi::tracer::encoder::{decode_payload, Encoder, FieldValue};
+    prop::check(80, 5, |rng| {
+        let types = [
+            FieldType::U32,
+            FieldType::U64,
+            FieldType::I64,
+            FieldType::F64,
+            FieldType::Ptr,
+            FieldType::Str,
+        ];
+        let n = rng.range(0, 10);
+        let fields: Vec<FieldDef> = (0..n)
+            .map(|i| FieldDef::new(format!("f{i}"), types[rng.range(0, types.len())]))
+            .collect();
+        let class = EventClass::new_for_test("p:q_entry", fields.clone());
+        let mut values = Vec::new();
+        let mut buf = Vec::new();
+        let mut enc = Encoder::new(&mut buf, &class);
+        for f in &fields {
+            match f.ty {
+                FieldType::U32 => {
+                    let v = rng.below(u32::MAX as u64 + 1) as u32;
+                    enc.u32(v);
+                    values.push(FieldValue::U64(v as u64));
+                }
+                FieldType::U64 => {
+                    let v = rng.next_u64();
+                    enc.u64(v);
+                    values.push(FieldValue::U64(v));
+                }
+                FieldType::I64 => {
+                    let v = rng.next_u64() as i64;
+                    enc.i64(v);
+                    values.push(FieldValue::I64(v));
+                }
+                FieldType::F64 => {
+                    let v = rng.f64() * 1e6 - 5e5;
+                    enc.f64(v);
+                    values.push(FieldValue::F64(v));
+                }
+                FieldType::Ptr => {
+                    let v = rng.next_u64();
+                    enc.ptr(v);
+                    values.push(FieldValue::Ptr(v));
+                }
+                FieldType::Str => {
+                    let len = rng.range(0, 64);
+                    let s: String =
+                        (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                    enc.str(&s);
+                    values.push(FieldValue::Str(s));
+                }
+            }
+        }
+        enc.finish();
+        let decoded = decode_payload(&fields, &buf);
+        assert_eq!(decoded, values);
+    });
+}
