@@ -3,7 +3,7 @@
 //! ("typically in the range of kilobytes").
 
 use std::time::Instant;
-use thapi::aggregate::aggregate_tree;
+use thapi::aggregate::{aggregate_tree, RankAggregate};
 use thapi::analysis::{Tally, TallyRow};
 use thapi::bench_support::Table;
 use thapi::util::Rng;
@@ -51,7 +51,46 @@ fn synthetic_tally(rng: &mut Rng, rank: u32) -> Tally {
     t
 }
 
+/// Aggregate-only mode on a real trace: one traced run per rank, each
+/// reduced to its kilobyte tally straight from the stream (lazy muxing +
+/// incremental pairing — the per-rank trace is never materialized as a
+/// merged `Vec<EventMsg>`).
+fn real_trace_rank_reduction() {
+    use thapi::apps::hecbench;
+    use thapi::coordinator::{run, IprofConfig};
+    use thapi::device::{Node, NodeConfig};
+
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.1");
+    }
+    let node = Node::new(NodeConfig::test_small());
+    let apps = hecbench::suite();
+    let app = apps.iter().find(|a| a.name() == "saxpy-ze").unwrap();
+
+    println!("=== §3.7 aggregate-only: per-rank reduction from real trace streams ===\n");
+    let mut table = Table::new(&["rank", "trace B", "reduce ms", "aggregate B"]);
+    let mut aggs = Vec::new();
+    for rank in 0..3u32 {
+        let r = run(&node, app.as_ref(), &IprofConfig::default());
+        let trace = r.trace.as_ref().unwrap();
+        let t0 = Instant::now();
+        let agg = RankAggregate::from_trace(0, rank, trace).unwrap();
+        let reduce = t0.elapsed();
+        table.row(&[
+            rank.to_string(),
+            trace.size_bytes().to_string(),
+            format!("{:.2}", reduce.as_secs_f64() * 1e3),
+            agg.size_bytes().to_string(),
+        ]);
+        aggs.push(agg);
+    }
+    println!("{}", table.render());
+    let merged = thapi::aggregate::local_master_merge(0, &aggs).unwrap();
+    println!("local-master aggregate: {} bytes\n", merged.size_bytes());
+}
+
 fn main() {
+    real_trace_rank_reduction();
     println!("\n=== E12: §3.7 two-level aggregation scaling ===\n");
     let mut table = Table::new(&["nodes", "ranks", "merge ms", "bytes moved", "per-hop B"]);
     for nodes in [8u32, 32, 128, 512] {

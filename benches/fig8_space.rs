@@ -6,11 +6,17 @@
 //! average default needs < 20 % and minimal < 17 % of the full-mode
 //! space; 534.hpgmgfv and 521.miniswp show the largest min↔full spread.
 
+use std::time::Instant;
+use thapi::analysis::{self, AnalysisSink, TallySink, TimelineSink, ValidateSink};
 use thapi::apps::spechpc;
-use thapi::bench_support::{mean_of, Table};
+use thapi::bench_support::{alloc_track, mean_of, Table};
 use thapi::coordinator::{run, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::tracer::TracingMode;
+
+// Exact heap accounting for the streaming-vs-materialized comparison.
+#[global_allocator]
+static ALLOC: alloc_track::CountingAlloc = alloc_track::CountingAlloc;
 
 fn human(bytes: u64) -> String {
     let b = bytes as f64;
@@ -83,4 +89,72 @@ fn main() {
     println!("=== Fig 8b: space normalized to T-full ===\n");
     println!("{}", norm.render());
     println!("paper reference: default < 20% and minimal < 17% of full-mode space.");
+
+    analysis_phase_memory(&node);
+}
+
+/// Analysis-phase cost: the seed's materialized two-pass path
+/// (`mux` clone-all + `pair_intervals` + per-sink rescans) vs the
+/// streaming single-pass graph driving tally+timeline+validate at once.
+/// Tracks wall clock and peak live heap over the same T-full trace.
+fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
+    let apps = spechpc::suite();
+    let app = &apps[0];
+    let r = run(node, app.as_ref(), &IprofConfig::paper_config(TracingMode::Full, false));
+    let trace = r.trace.as_ref().unwrap();
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let events = parsed.event_count();
+
+    // materialized baseline: every sink over owned vectors
+    let live0 = alloc_track::live_bytes();
+    alloc_track::reset_peak();
+    let t0 = Instant::now();
+    let msgs = analysis::mux(&parsed);
+    let intervals = analysis::pair_intervals(&msgs);
+    let tally_text = analysis::Tally::build(&intervals, &msgs).render();
+    let timeline_text = analysis::timeline_json(&intervals, &msgs);
+    let findings = analysis::validate(&msgs);
+    let mat_wall = t0.elapsed();
+    let mat_peak = alloc_track::peak_bytes().saturating_sub(live0);
+    let mat_out = (tally_text.len(), timeline_text.len(), findings.len());
+    drop((msgs, intervals, tally_text, timeline_text, findings));
+
+    // streaming graph: one pass, zero-copy source, three sinks
+    let live0 = alloc_track::live_bytes();
+    alloc_track::reset_peak();
+    let t0 = Instant::now();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![
+        Box::new(TallySink::new()),
+        Box::new(TimelineSink::new()),
+        Box::new(ValidateSink::new()),
+    ];
+    let reports = analysis::run_pipeline(&parsed, &mut sinks);
+    let stream_wall = t0.elapsed();
+    let stream_peak = alloc_track::peak_bytes().saturating_sub(live0);
+    let stream_out: usize = reports.iter().filter_map(|r| r.payload()).map(str::len).sum();
+    drop(reports);
+
+    println!(
+        "\n=== analysis phase: streaming single-pass vs materialized two-pass ({}: {} events) ===\n",
+        app.name(),
+        events
+    );
+    let mut t = Table::new(&["pipeline", "wall ms", "peak heap", "outputs"]);
+    t.row(&[
+        "materialized (mux + pair + 3 rescans)".into(),
+        format!("{:.2}", mat_wall.as_secs_f64() * 1e3),
+        human(mat_peak as u64),
+        format!("{}B tally, {}B timeline, {} findings", mat_out.0, mat_out.1, mat_out.2),
+    ]);
+    t.row(&[
+        "streaming (1 pass, 3 sinks)".into(),
+        format!("{:.2}", stream_wall.as_secs_f64() * 1e3),
+        human(stream_peak as u64),
+        format!("{stream_out}B total"),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "streaming peak is {:.1}% of materialized peak",
+        stream_peak as f64 * 100.0 / (mat_peak as f64).max(1.0)
+    );
 }

@@ -27,10 +27,12 @@ fn run_and_count(node: &Arc<Node>, use_copy_engine: bool) -> (u64, u64) {
     let _ = node.gpu(0).pool.free(host);
     let session = uninstall_session().unwrap();
     let trace = btf::collect(&session, &[]);
-    let msgs = analysis::mux(&analysis::parse_trace(&trace).unwrap());
+    let parsed = analysis::parse_trace(&trace).unwrap();
 
+    // Lazy streaming pass: profiling events are counted as they merge,
+    // without materializing the muxed sequence.
     let (mut on_compute, mut on_copy) = (0u64, 0u64);
-    for m in &msgs {
+    for m in analysis::MessageSource::new(&parsed) {
         if m.class.name == "lttng_ust_profiling:command_completed"
             && m.field("kind").unwrap().as_str() == "memcpy"
         {

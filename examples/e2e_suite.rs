@@ -66,18 +66,23 @@ fn main() {
     }
     println!("{}", t.render());
 
-    // One representative app end-to-end through every analysis plugin.
+    // One representative app end-to-end through every analysis plugin —
+    // a single streaming pass fans out to all three sinks at once.
     let app = apps.iter().find(|a| a.name() == "lrn-hip").unwrap();
     let report = run(&node, app.as_ref(), &IprofConfig::default());
-    let trace = report.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let intervals = analysis::pair_intervals(&msgs);
-    let tally = analysis::Tally::build(&intervals, &msgs);
-    println!("=== tally (lrn-hip) ===\n{}", tally.render());
-    let json = analysis::timeline_json(&intervals, &msgs);
-    std::fs::write("e2e_lrn_hip.trace.json", &json).unwrap();
+    let mut sinks: Vec<Box<dyn analysis::AnalysisSink>> = vec![
+        Box::new(analysis::TallySink::new()),
+        Box::new(analysis::TimelineSink::new()),
+        Box::new(analysis::ValidateSink::new()),
+    ];
+    let reports = report.analyze(&mut sinks).unwrap().unwrap();
+    println!("=== tally (lrn-hip) ===\n{}", reports[0].payload().unwrap());
+    let json = reports[1].payload().unwrap();
+    std::fs::write("e2e_lrn_hip.trace.json", json).unwrap();
     println!("timeline: wrote e2e_lrn_hip.trace.json ({} bytes)", json.len());
-    let findings = analysis::validate(&msgs);
-    println!("validation: {} finding(s)", findings.len());
-    println!("\nE2E complete: AOT kernels -> PJRT runtime -> traced frontends -> BTF -> plugins.");
+    println!(
+        "validation report:\n{}",
+        reports[2].payload().unwrap().lines().next().unwrap_or("")
+    );
+    println!("\nE2E complete: AOT kernels -> PJRT runtime -> traced frontends -> BTF -> plugins (one pass, three sinks).");
 }

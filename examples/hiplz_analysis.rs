@@ -18,10 +18,11 @@ fn main() {
     println!("{}", tally.render());
 
     // Layering analysis: how hipDeviceSynchronize decomposes into the
-    // zeEventHostSynchronize spin lock.
+    // zeEventHostSynchronize spin lock. Spans come straight from the
+    // streaming graph (lazy mux -> incremental pairing), no Vec<EventMsg>.
     let trace = report.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let intervals = analysis::pair_intervals(&msgs);
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let intervals = analysis::intervals_of(&parsed);
 
     let hip_sync: Vec<_> = intervals.iter().filter(|i| i.name == "hipDeviceSynchronize").collect();
     let ze_spin: Vec<_> =

@@ -29,14 +29,13 @@ fn main() {
 
     let trace = report.trace.as_ref().unwrap();
     let parsed = analysis::parse_trace(trace).unwrap();
-    let msgs = analysis::mux(&parsed);
 
     // The paper's §1.1 example: what THAPI records for one
     // zeCommandListAppendMemoryCopy_entry — every argument, with the
-    // host/device address spaces readable off the pointers.
+    // host/device address spaces readable off the pointers. The lazy
+    // MessageSource stops merging as soon as the event is found.
     println!("== §1.1 event detail (vs TAU's name+timestamp only) ==\n");
-    let memcpy = msgs
-        .iter()
+    let memcpy = analysis::MessageSource::new(&parsed)
         .find(|m| m.class.name == "lttng_ust_ze:zeCommandListAppendMemoryCopy_entry")
         .expect("memcpy event in trace");
     println!("{}\n", analysis::pretty::format_event(memcpy));

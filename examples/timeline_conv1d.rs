@@ -22,16 +22,34 @@ fn main() {
     println!("== Fig. 5: convolution1D with device sampling ==\n");
     let report = run(&node, app.as_ref(), &config);
     let trace = report.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let intervals = analysis::pair_intervals(&msgs);
-    let json = analysis::timeline_json(&intervals, &msgs);
+    let parsed = analysis::parse_trace(trace).unwrap();
+
+    // One streaming pass renders the Perfetto JSON.
+    let mut sinks: Vec<Box<dyn analysis::AnalysisSink>> =
+        vec![Box::new(analysis::TimelineSink::new())];
+    let reports = analysis::run_pipeline(&parsed, &mut sinks);
+    let json = reports[0].payload().unwrap();
 
     let out = "convolution1D.trace.json";
-    std::fs::write(out, &json).unwrap();
+    std::fs::write(out, json).unwrap();
 
-    // Row inventory, mirroring the paper's Fig. 5 description.
+    // Row inventory, mirroring the paper's Fig. 5 description — a second
+    // lazy pass over the borrowed streams (no materialized event vector).
+    let mut host_spans = 0usize;
+    let mut device_spans = 0usize;
+    let mut telemetry = 0usize;
     let mut rows = std::collections::BTreeSet::new();
-    for m in &msgs {
+    for m in analysis::MessageSource::new(&parsed) {
+        // every entry becomes exactly one span (paired or dangling)
+        if m.class.is_entry() {
+            host_spans += 1;
+        }
+        if m.class.name.contains("command_completed") {
+            device_spans += 1;
+        }
+        if m.class.name.contains("sampling") {
+            telemetry += 1;
+        }
         match m.class.name.as_str() {
             "lttng_ust_sampling:gpu_power" => {
                 rows.insert(format!("GPU Power Domain {}", m.field("domain").unwrap().as_u64()));
@@ -61,10 +79,7 @@ fn main() {
         println!("  {r}");
     }
     println!(
-        "\nhost spans: {}   device spans: {}   telemetry points: {}",
-        intervals.len(),
-        msgs.iter().filter(|m| m.class.name.contains("command_completed")).count(),
-        msgs.iter().filter(|m| m.class.name.contains("sampling")).count()
+        "\nhost spans: {host_spans}   device spans: {device_spans}   telemetry points: {telemetry}"
     );
     println!("\nwrote {out} ({} bytes) — open at https://ui.perfetto.dev", json.len());
     assert!(rows.iter().any(|r| r.contains("Power Domain 0")));

@@ -70,8 +70,14 @@ fn trace_app(node: &Arc<Node>, sloppy: bool) -> Vec<analysis::Finding> {
 
     let session = uninstall_session().unwrap();
     let trace = btf::collect(&session, &[]);
-    let msgs = analysis::mux(&analysis::parse_trace(&trace).unwrap());
-    analysis::validate(&msgs)
+    let parsed = analysis::parse_trace(&trace).unwrap();
+
+    // Streaming validation: rules observe each message as it merges.
+    let mut v = analysis::Validator::new();
+    for m in analysis::MessageSource::new(&parsed) {
+        v.observe(m);
+    }
+    v.finish()
 }
 
 fn main() {

@@ -7,7 +7,8 @@
 //! into the composite profile. The paper scales this to 512 nodes; the
 //! `aggregate_scale` bench reproduces that scaling curve.
 
-use crate::analysis::Tally;
+use crate::analysis::{self, Tally};
+use crate::tracer::btf::TraceData;
 use anyhow::Result;
 
 /// One rank's contribution: a serialized tally (what would travel over
@@ -31,6 +32,15 @@ impl RankAggregate {
     /// Payload size in bytes (the per-rank network cost).
     pub fn size_bytes(&self) -> usize {
         self.payload.len()
+    }
+
+    /// Build a rank's aggregate straight from its raw trace in one
+    /// streaming pass: the scratchpad trace is reduced to the kilobyte
+    /// tally (aggregate-only mode, §3.7) without ever materializing a
+    /// merged `Vec<EventMsg>`.
+    pub fn from_trace(node: u32, rank: u32, trace: &TraceData) -> Result<Self> {
+        let parsed = analysis::parse_trace(trace)?;
+        Ok(RankAggregate::new(node, rank, &Tally::from_parsed(&parsed)))
     }
 }
 
@@ -129,6 +139,33 @@ mod tests {
         // aggregates stay kilobytes per hop, not trace-sized
         let per_hop = bytes / (512 * 6 + 512);
         assert!(per_hop < 4096, "per-hop aggregate should be small, got {per_hop}");
+    }
+
+    #[test]
+    fn rank_aggregate_streams_straight_from_trace() {
+        use crate::model::class_by_name;
+        use crate::tracer::session::test_support;
+        use crate::tracer::{btf, emit, install_session, uninstall_session, SessionConfig};
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        for _ in 0..4 {
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = btf::collect(&session, &[]);
+        let agg = RankAggregate::from_trace(2, 5, &trace).unwrap();
+        assert_eq!(agg.node, 2);
+        assert_eq!(agg.rank, 5);
+        let tally = Tally::deserialize(&agg.payload).unwrap();
+        assert_eq!(tally.host[&("ZE".to_string(), "zeInit".to_string())].calls, 4);
+        assert!(agg.size_bytes() < 4096, "aggregate must stay kilobytes");
     }
 
     #[test]

@@ -50,25 +50,36 @@ impl<'a> Graph<'a> {
         self
     }
 
-    /// Push a message sequence through the graph.
-    pub fn run(&mut self, msgs: &[EventMsg]) {
+    /// Dispatch one message to every matching callback.
+    ///
+    /// The registration tables (`exact`/`patterns`/`all`) and the
+    /// callback vector are disjoint fields, so destructuring `self`
+    /// splits the borrow: the id lists stay immutably borrowed while
+    /// individual callbacks are called mutably — no per-event clone of
+    /// any callback-id list on the hot path.
+    pub fn dispatch(&mut self, m: &EventMsg) {
+        let Graph { exact, patterns, all, callbacks } = self;
+        if let Some(ids) = exact.get(m.class.name.as_str()) {
+            for &id in ids {
+                (callbacks[id])(m);
+            }
+        }
+        for (pat, id) in patterns.iter() {
+            if m.class.name.contains(pat.as_str()) {
+                (callbacks[*id])(m);
+            }
+        }
+        for &id in all.iter() {
+            (callbacks[id])(m);
+        }
+    }
+
+    /// Push a message sequence through the graph. Accepts any borrowed
+    /// message iterator — a `&[EventMsg]` slice or a lazy
+    /// [`super::muxer::MessageSource`].
+    pub fn run<'m>(&mut self, msgs: impl IntoIterator<Item = &'m EventMsg>) {
         for m in msgs {
-            if let Some(ids) = self.exact.get(m.class.name.as_str()) {
-                // ids are disjoint index sets; split_at_mut-free dispatch
-                // via raw indices is fine because we only borrow one at a
-                // time through the RefCell-free callbacks vec.
-                for &id in ids.clone().iter() {
-                    (self.callbacks[id])(m);
-                }
-            }
-            for (pat, id) in self.patterns.clone() {
-                if m.class.name.contains(&pat) {
-                    (self.callbacks[id])(m);
-                }
-            }
-            for id in self.all.clone() {
-                (self.callbacks[id])(m);
-            }
+            self.dispatch(m);
         }
     }
 }
@@ -118,5 +129,25 @@ mod tests {
         assert_eq!(exact_hits.get(), 1);
         assert_eq!(ze_hits.get(), 2);
         assert_eq!(all_hits.get(), 3);
+    }
+
+    #[test]
+    fn graph_runs_from_lazy_message_source() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let init = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        for _ in 0..3 {
+            emit(init, |e| {
+                e.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let hits = Cell::new(0);
+        let mut g = Graph::new();
+        g.on("lttng_ust_ze:zeInit_entry", |_| hits.set(hits.get() + 1));
+        g.run(crate::analysis::muxer::MessageSource::new(&parsed));
+        assert_eq!(hits.get(), 3);
     }
 }

@@ -3,8 +3,15 @@
 //! The "Interval plugins" of the paper (Fig. 1a): timing analysis based on
 //! the start and end times of events. Pairing is per (rank, tid) with a
 //! stack, so nested calls (HIP wrappers around ZE calls) pair correctly.
+//!
+//! [`IntervalTracker`] is the streaming form: it consumes one message at
+//! a time and emits each [`Interval`] the moment its exit arrives, so a
+//! single pass over a [`super::muxer::MessageSource`] produces spans with
+//! O(open-call-depth) state instead of an O(total-events) buffer. The
+//! eager [`pair_intervals`] is a thin shim over it.
 
-use super::msg::EventMsg;
+use super::msg::{EventMsg, ParsedTrace};
+use super::muxer::MessageSource;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -40,25 +47,39 @@ impl Interval {
     }
 }
 
-/// Pair entry/exit events from a muxed sequence into intervals.
-/// Unbalanced entries (no exit before end of trace) are emitted with
-/// `exit: None` and `end` = last seen timestamp.
-pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
-    struct Open {
-        entry: EventMsg,
-        depth: u32,
-    }
-    let mut stacks: HashMap<(u32, u32), Vec<Open>> = HashMap::new();
-    let mut out = Vec::new();
-    let mut last_ts = 0u64;
+struct Open {
+    entry: EventMsg,
+    depth: u32,
+}
 
-    for m in msgs {
-        last_ts = last_ts.max(m.ts);
+/// Incremental entry/exit pairing over a time-ordered message stream.
+///
+/// Feed every muxed message to [`IntervalTracker::push`]; completed spans
+/// are handed to the `emit` callback as soon as their exit arrives (the
+/// filter stage of the source → muxer → filter → sink graph). Call
+/// [`IntervalTracker::finish`] at end of stream to close dangling entries
+/// (no exit before end of trace) with `exit: None` and `end` = last seen
+/// timestamp.
+#[derive(Default)]
+pub struct IntervalTracker {
+    stacks: HashMap<(u32, u32), Vec<Open>>,
+    last_ts: u64,
+}
+
+impl IntervalTracker {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume one time-ordered message; emit any spans it completes.
+    pub fn push(&mut self, m: &EventMsg, mut emit: impl FnMut(Interval)) {
+        self.last_ts = self.last_ts.max(m.ts);
         if !(m.class.is_entry() || m.class.is_exit()) {
-            continue;
+            return;
         }
         let key = (m.rank, m.tid);
-        let stack = stacks.entry(key).or_default();
+        let stack = self.stacks.entry(key).or_default();
         if m.class.is_entry() {
             let depth = stack.len() as u32;
             stack.push(Open { entry: m.clone(), depth });
@@ -72,7 +93,7 @@ pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
                 let open = iter.next().unwrap();
                 // anything above the match lost its exit: close as unbalanced
                 for lost in iter {
-                    out.push(Interval {
+                    emit(Interval {
                         name: lost.entry.class.api_function().to_string(),
                         api: lost.entry.class.api.clone(),
                         rank: lost.entry.rank,
@@ -85,7 +106,7 @@ pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
                         exit: None,
                     });
                 }
-                out.push(Interval {
+                emit(Interval {
                     name: fname.to_string(),
                     api: open.entry.class.api.clone(),
                     rank: open.entry.rank,
@@ -101,25 +122,65 @@ pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
             // exit without any entry: dropped entry record — ignore
         }
     }
-    // close dangling entries
-    for (_, stack) in stacks {
-        for open in stack {
-            out.push(Interval {
-                name: open.entry.class.api_function().to_string(),
-                api: open.entry.class.api.clone(),
-                rank: open.entry.rank,
-                tid: open.entry.tid,
-                hostname: open.entry.hostname.clone(),
-                start: open.entry.ts,
-                end: last_ts,
-                depth: open.depth,
-                entry: open.entry,
-                exit: None,
-            });
+
+    /// Number of still-open (unmatched) entries.
+    pub fn open_count(&self) -> usize {
+        self.stacks.values().map(|s| s.len()).sum()
+    }
+
+    /// End of stream: close dangling entries at the last seen timestamp,
+    /// in (rank, tid) order so the flush is deterministic across runs.
+    pub fn finish(&mut self, mut emit: impl FnMut(Interval)) {
+        let last_ts = self.last_ts;
+        let mut stacks: Vec<_> = std::mem::take(&mut self.stacks).into_iter().collect();
+        stacks.sort_by_key(|(k, _)| *k);
+        for (_, stack) in stacks {
+            for open in stack {
+                emit(Interval {
+                    name: open.entry.class.api_function().to_string(),
+                    api: open.entry.class.api.clone(),
+                    rank: open.entry.rank,
+                    tid: open.entry.tid,
+                    hostname: open.entry.hostname.clone(),
+                    start: open.entry.ts,
+                    end: last_ts,
+                    depth: open.depth,
+                    entry: open.entry,
+                    exit: None,
+                });
+            }
         }
     }
+}
+
+/// Run any time-ordered borrowed message sequence through a fresh
+/// [`IntervalTracker`] and return the spans sorted by start timestamp
+/// (stable, so same-start spans keep completion order).
+fn collect_spans<'m>(msgs: impl IntoIterator<Item = &'m EventMsg>) -> Vec<Interval> {
+    let mut tracker = IntervalTracker::new();
+    let mut out = Vec::new();
+    for m in msgs {
+        tracker.push(m, |iv| out.push(iv));
+    }
+    tracker.finish(|iv| out.push(iv));
     out.sort_by_key(|i| i.start);
     out
+}
+
+/// Pair entry/exit events from a muxed sequence into intervals.
+/// Unbalanced entries (no exit before end of trace) are emitted with
+/// `exit: None` and `end` = last seen timestamp.
+///
+/// Compatibility shim over [`IntervalTracker`].
+pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
+    collect_spans(msgs)
+}
+
+/// Single-pass span extraction straight from a parsed trace: lazy muxing
+/// through [`MessageSource`] into an [`IntervalTracker`], no intermediate
+/// `Vec<EventMsg>`. Sorted by start timestamp like [`pair_intervals`].
+pub fn intervals_of(parsed: &ParsedTrace) -> Vec<Interval> {
+    collect_spans(MessageSource::new(parsed))
 }
 
 #[cfg(test)]
@@ -236,5 +297,34 @@ mod tests {
         assert_eq!(iv.len(), 200);
         assert!(iv.iter().all(|i| i.exit.is_some()));
         assert!(iv.iter().all(|i| i.depth == 0));
+    }
+
+    #[test]
+    fn tracker_emits_completed_spans_immediately() {
+        let msgs = record(|| {
+            let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+            let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+            emit(e, |en| {
+                en.u64(0);
+            });
+        });
+        let mut tracker = IntervalTracker::new();
+        let mut emitted = Vec::new();
+        for m in &msgs {
+            tracker.push(m, |iv| emitted.push(iv));
+        }
+        // the paired call is out before finish(); the dangling one is not
+        assert_eq!(emitted.len(), 1);
+        assert_eq!(tracker.open_count(), 1);
+        tracker.finish(|iv| emitted.push(iv));
+        assert_eq!(emitted.len(), 2);
+        assert_eq!(tracker.open_count(), 0);
+        assert!(emitted[1].exit.is_none());
     }
 }

@@ -1,15 +1,22 @@
 //! Trace analysis: the Babeltrace2 + Metababel substitute (paper §3.4).
 //!
 //! A BTF trace is parsed offline (never touching the live registry) and
-//! pushed through a source → muxer → filter → sink graph:
+//! pushed through a **streaming** source → muxer → filter → sink graph in
+//! a single pass:
 //!
 //! * [`msg`] — the message model: decoded events with stream context.
-//! * [`muxer`] — k-way merge of per-thread streams by timestamp (the
-//!   "Muxer plugin for serializing messages by time").
+//! * [`muxer`] — [`MessageSource`], the lazy k-way merge of per-thread
+//!   streams by timestamp (the "Muxer plugin for serializing messages by
+//!   time"); yields borrowed `&EventMsg`, no per-event clone.
+//! * [`interval`] — [`IntervalTracker`], the filter stage: pairs
+//!   `_entry`/`_exit` into host spans per (rank, thread) as messages
+//!   flow, handling nesting (HIP-on-ZE layering), and emits each
+//!   completed [`Interval`] downstream immediately.
+//! * [`sink`] — the [`AnalysisSink`] contract plus [`run_pipeline`]: any
+//!   set of sinks fans out from one pass over the trace
+//!   (`iprof -a tally,timeline,validate` decodes and merges once).
 //! * [`graph`] — Metababel-style callback dispatch: plugins are
 //!   collections of callbacks attached to event-name patterns.
-//! * [`interval`] — pairs `_entry`/`_exit` events into host spans per
-//!   (rank, thread), handling nesting (HIP-on-ZE layering).
 //! * [`pretty`] — Pretty Print: babeltrace2-style text, formatting every
 //!   field from the trace-model descriptors (the generated plugin).
 //! * [`tally`] — Tally: the §4.3 summary table (time/%/calls/avg/min/max
@@ -18,21 +25,29 @@
 //!   host rows, device rows and telemetry counter rows (Fig. 5/6).
 //! * [`validate`] — the §4.2 post-mortem validation plugin (uninitialized
 //!   `pNext`, unreleased events, non-reset command lists, ...).
+//!
+//! The eager helpers ([`mux`], [`pair_intervals`], [`pretty_print`],
+//! [`timeline_json`], [`validate()`](validate::validate)) remain as thin
+//! compatibility shims over the streaming machinery for call sites that
+//! want materialized values. See `rust/ARCHITECTURE.md` for how to write
+//! a new sink.
 
 pub mod graph;
 pub mod interval;
 pub mod msg;
 pub mod muxer;
 pub mod pretty;
+pub mod sink;
 pub mod tally;
 pub mod timeline;
 pub mod validate;
 
 pub use graph::Graph;
-pub use interval::{pair_intervals, Interval};
+pub use interval::{intervals_of, pair_intervals, Interval, IntervalTracker};
 pub use msg::{parse_trace, EventMsg, ParsedTrace};
-pub use muxer::mux;
-pub use pretty::pretty_print;
-pub use tally::{Tally, TallyRow};
-pub use timeline::timeline_json;
-pub use validate::{validate, Finding, Severity};
+pub use muxer::{mux, MessageSource};
+pub use pretty::{pretty_print, PrettySink};
+pub use sink::{run_pipeline, AnalysisSink, Report};
+pub use tally::{Tally, TallyRow, TallySink};
+pub use timeline::{timeline_json, TimelineSink};
+pub use validate::{validate, Finding, Severity, ValidateSink, Validator};

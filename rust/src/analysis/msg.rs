@@ -35,13 +35,21 @@ impl EventMsg {
 }
 
 /// A fully parsed trace: metadata + per-stream decoded events (stream
-/// order preserved; use [`crate::analysis::mux`] for time order).
+/// order preserved; iterate [`crate::analysis::MessageSource`] for lazy
+/// time order, or [`crate::analysis::mux`] for an owned merged vector).
 #[derive(Debug)]
 pub struct ParsedTrace {
     /// Parsed metadata.
     pub metadata: Metadata,
     /// Per-stream events, each stream in emit order.
     pub streams: Vec<Vec<EventMsg>>,
+}
+
+impl ParsedTrace {
+    /// Total decoded event count across streams.
+    pub fn event_count(&self) -> usize {
+        self.streams.iter().map(|s| s.len()).sum()
+    }
 }
 
 /// Decode a [`TraceData`] into messages.

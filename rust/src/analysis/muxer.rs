@@ -1,5 +1,12 @@
 //! Muxer: k-way merge of per-thread streams into one time-ordered
 //! message sequence (babeltrace2's `muxer` component).
+//!
+//! The merge is exposed as [`MessageSource`], a *lazy* message iterator:
+//! it holds one heap entry per stream and yields borrowed `&EventMsg`
+//! references in global time order, so a full analysis pass allocates
+//! O(#streams) — never an O(total-events) cloned vector. The eager
+//! [`mux`] function remains as a thin compatibility shim for call sites
+//! that genuinely need an owned, materialized sequence.
 
 use super::msg::{EventMsg, ParsedTrace};
 use std::cmp::Reverse;
@@ -28,25 +35,70 @@ impl Ord for HeapEntry {
     }
 }
 
-/// Merge all streams by timestamp (stable across streams by stream index).
-pub fn mux(trace: &ParsedTrace) -> Vec<EventMsg> {
-    let total: usize = trace.streams.iter().map(|s| s.len()).sum();
-    let mut out = Vec::with_capacity(total);
-    let mut heap: BinaryHeap<Reverse<HeapEntry>> = BinaryHeap::new();
-    for (si, s) in trace.streams.iter().enumerate() {
-        if !s.is_empty() {
-            heap.push(Reverse(HeapEntry { ts: s[0].ts, stream: si, index: 0 }));
-        }
+/// Lazy k-way merge over the streams of a [`ParsedTrace`].
+///
+/// Yields `&EventMsg` in non-decreasing timestamp order; ties are broken
+/// by stream index (stable across streams) and then by in-stream index,
+/// which matches the eager [`mux`] ordering exactly.
+pub struct MessageSource<'a> {
+    streams: &'a [Vec<EventMsg>],
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    remaining: usize,
+}
+
+impl<'a> MessageSource<'a> {
+    /// Open a message source over a parsed trace.
+    pub fn new(trace: &'a ParsedTrace) -> Self {
+        Self::over_streams(&trace.streams)
     }
-    while let Some(Reverse(e)) = heap.pop() {
-        let stream = &trace.streams[e.stream];
-        out.push(stream[e.index].clone());
+
+    /// Open a message source over raw per-stream message vectors (each
+    /// stream must be in non-decreasing timestamp order, as produced by
+    /// [`super::msg::parse_trace`]).
+    pub fn over_streams(streams: &'a [Vec<EventMsg>]) -> Self {
+        let mut heap = BinaryHeap::with_capacity(streams.len());
+        for (si, s) in streams.iter().enumerate() {
+            if !s.is_empty() {
+                heap.push(Reverse(HeapEntry { ts: s[0].ts, stream: si, index: 0 }));
+            }
+        }
+        let remaining = streams.iter().map(|s| s.len()).sum();
+        MessageSource { streams, heap, remaining }
+    }
+}
+
+impl<'a> Iterator for MessageSource<'a> {
+    type Item = &'a EventMsg;
+
+    fn next(&mut self) -> Option<&'a EventMsg> {
+        let Reverse(e) = self.heap.pop()?;
+        let stream = &self.streams[e.stream];
         let next = e.index + 1;
         if next < stream.len() {
-            heap.push(Reverse(HeapEntry { ts: stream[next].ts, stream: e.stream, index: next }));
+            self.heap.push(Reverse(HeapEntry {
+                ts: stream[next].ts,
+                stream: e.stream,
+                index: next,
+            }));
         }
+        self.remaining -= 1;
+        Some(&stream[e.index])
     }
-    out
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl<'a> ExactSizeIterator for MessageSource<'a> {}
+
+/// Merge all streams by timestamp (stable across streams by stream index).
+///
+/// Compatibility shim: materializes the [`MessageSource`] into an owned
+/// vector (one clone per event). Prefer iterating [`MessageSource`] or
+/// running [`super::sink::run_pipeline`] for single-pass analysis.
+pub fn mux(trace: &ParsedTrace) -> Vec<EventMsg> {
+    MessageSource::new(trace).cloned().collect()
 }
 
 #[cfg(test)]
@@ -88,6 +140,37 @@ mod tests {
     }
 
     #[test]
+    fn message_source_matches_eager_mux_without_cloning() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let class = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let mut handles = vec![];
+        for _ in 0..3 {
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    emit(class, |e| {
+                        e.u64(1);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let eager = mux(&parsed);
+        let src = MessageSource::new(&parsed);
+        assert_eq!(src.len(), eager.len());
+        for (lazy, owned) in MessageSource::new(&parsed).zip(eager.iter()) {
+            assert_eq!(lazy.ts, owned.ts);
+            assert_eq!(lazy.tid, owned.tid);
+            assert_eq!(lazy.class.id, owned.class.id);
+        }
+    }
+
+    #[test]
     fn mux_empty_trace_is_empty() {
         let trace = crate::tracer::btf::TraceData {
             metadata: crate::tracer::btf::generate_metadata(&[]),
@@ -95,5 +178,6 @@ mod tests {
         };
         let parsed = parse_trace(&trace).unwrap();
         assert!(mux(&parsed).is_empty());
+        assert_eq!(MessageSource::new(&parsed).count(), 0);
     }
 }

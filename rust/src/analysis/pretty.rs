@@ -8,6 +8,7 @@
 //! full field list (pointers in hex).
 
 use super::msg::EventMsg;
+use super::sink::{AnalysisSink, Report};
 use std::fmt::Write as _;
 
 /// Format one event.
@@ -38,6 +39,36 @@ pub fn pretty_print(msgs: &[EventMsg]) -> String {
         out.push('\n');
     }
     out
+}
+
+/// The Pretty Print plugin as a streaming [`AnalysisSink`]: each message
+/// is formatted the moment it flows past; only the rendered text (the
+/// output itself) is retained.
+#[derive(Default)]
+pub struct PrettySink {
+    out: String,
+}
+
+impl PrettySink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl AnalysisSink for PrettySink {
+    fn name(&self) -> &'static str {
+        "pretty"
+    }
+
+    fn consume_event(&mut self, m: &EventMsg) {
+        self.out.push_str(&format_event(m));
+        self.out.push('\n');
+    }
+
+    fn finish(&mut self) -> Report {
+        Report::Text(std::mem::take(&mut self.out))
+    }
 }
 
 #[cfg(test)]

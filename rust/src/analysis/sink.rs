@@ -1,0 +1,147 @@
+//! The sink stage of the analysis graph, and the single-pass driver.
+//!
+//! THAPI's babeltrace2 graph is source → muxer → filter → sink; this
+//! module is the sink contract plus the wiring. Any number of
+//! [`AnalysisSink`]s (Tally, Pretty, Timeline, Validate, or user-written
+//! plugins) attach to one [`run_pipeline`] call and are fed from a single
+//! lazy pass over the trace:
+//!
+//! * every muxed message is delivered to [`AnalysisSink::consume_event`]
+//!   as a borrowed `&EventMsg` (zero-copy — the message lives in the
+//!   parsed streams, never in an intermediate vector);
+//! * the built-in [`IntervalTracker`] filter pairs `_entry`/`_exit`
+//!   messages as they flow and delivers each completed span to
+//!   [`AnalysisSink::consume_interval`];
+//! * at end of stream, dangling spans are flushed and every sink's
+//!   [`AnalysisSink::finish`] produces its [`Report`].
+//!
+//! Running `iprof -a tally,timeline,validate` therefore decodes and
+//! merges the trace exactly once, regardless of how many sinks attach.
+
+use super::interval::{Interval, IntervalTracker};
+use super::msg::{EventMsg, ParsedTrace};
+use super::muxer::MessageSource;
+
+/// What a sink produces at end of stream.
+#[derive(Debug, Clone)]
+pub enum Report {
+    /// Nothing to show (pure side-effect or state-only sinks).
+    None,
+    /// Rendered text for stdout (tally table, pretty print, validation).
+    Text(String),
+    /// A JSON artifact the caller should persist (timeline trace).
+    Json(String),
+}
+
+impl Report {
+    /// The text/JSON payload, if any.
+    pub fn payload(&self) -> Option<&str> {
+        match self {
+            Report::None => None,
+            Report::Text(s) | Report::Json(s) => Some(s),
+        }
+    }
+}
+
+/// One analysis plugin attached to the streaming graph.
+///
+/// Both `consume_*` hooks default to no-ops so a sink only implements the
+/// stages it cares about (Pretty consumes events only; Tally consumes
+/// both: intervals for host rows, events for device/profiling rows).
+pub trait AnalysisSink {
+    /// Stable plugin name (`"tally"`, `"timeline"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// One time-ordered message (borrowed from the parsed streams).
+    fn consume_event(&mut self, _m: &EventMsg) {}
+
+    /// One completed host API span (emitted as soon as its exit arrives;
+    /// dangling spans arrive during the end-of-stream flush).
+    fn consume_interval(&mut self, _iv: &Interval) {}
+
+    /// End of stream: render the result.
+    fn finish(&mut self) -> Report;
+}
+
+/// Drive every sink from one lazy pass over `parsed`.
+///
+/// Returns one [`Report`] per sink, in sink order. The pass allocates no
+/// per-event copies: messages are borrowed from the parsed streams and
+/// spans are built incrementally by the interval filter.
+pub fn run_pipeline(parsed: &ParsedTrace, sinks: &mut [Box<dyn AnalysisSink + '_>]) -> Vec<Report> {
+    let mut tracker = IntervalTracker::new();
+    for m in MessageSource::new(parsed) {
+        for s in sinks.iter_mut() {
+            s.consume_event(m);
+        }
+        tracker.push(m, |iv| {
+            for s in sinks.iter_mut() {
+                s.consume_interval(&iv);
+            }
+        });
+    }
+    tracker.finish(|iv| {
+        for s in sinks.iter_mut() {
+            s.consume_interval(&iv);
+        }
+    });
+    sinks.iter_mut().map(|s| s.finish()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::msg::parse_trace;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    struct CountingSink {
+        events: usize,
+        intervals: usize,
+    }
+
+    impl AnalysisSink for CountingSink {
+        fn name(&self) -> &'static str {
+            "count"
+        }
+        fn consume_event(&mut self, _m: &EventMsg) {
+            self.events += 1;
+        }
+        fn consume_interval(&mut self, _iv: &Interval) {
+            self.intervals += 1;
+        }
+        fn finish(&mut self) -> Report {
+            Report::Text(format!("{} events, {} intervals", self.events, self.intervals))
+        }
+    }
+
+    #[test]
+    fn pipeline_fans_one_pass_out_to_all_sinks() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        for _ in 0..5 {
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![
+            Box::new(CountingSink { events: 0, intervals: 0 }),
+            Box::new(CountingSink { events: 0, intervals: 0 }),
+        ];
+        let reports = run_pipeline(&parsed, &mut sinks);
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.payload().unwrap(), "10 events, 5 intervals");
+        }
+    }
+}

@@ -7,8 +7,10 @@
 //! ships serialized tallies from local masters to the global master) and
 //! round-trip through a compact text serialization.
 
-use super::interval::Interval;
-use super::msg::EventMsg;
+use super::interval::{Interval, IntervalTracker};
+use super::msg::{EventMsg, ParsedTrace};
+use super::muxer::MessageSource;
+use super::sink::{AnalysisSink, Report};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashSet};
 use std::fmt::Write as _;
@@ -71,51 +73,77 @@ pub struct Tally {
 }
 
 impl Tally {
-    /// Build from paired host intervals and (optionally) profiling events.
+    /// Absorb one host API span (streaming sink stage).
+    pub fn add_interval(&mut self, iv: &Interval) {
+        self.hostnames.insert(iv.hostname.to_string());
+        self.processes.insert(iv.rank);
+        self.threads.insert((iv.rank, iv.tid));
+        let key = (iv.api.clone(), iv.name.clone());
+        let dur = iv.duration();
+        self.host
+            .entry(key)
+            .or_insert_with(|| TallyRow {
+                name: iv.name.clone(),
+                api: iv.api.clone(),
+                time_ns: 0,
+                calls: 0,
+                min_ns: u64::MAX,
+                max_ns: 0,
+            })
+            .absorb(dur);
+    }
+
+    /// Absorb one raw message: device rows come from the
+    /// `command_completed` profiling events (streaming sink stage).
+    pub fn add_event(&mut self, m: &EventMsg) {
+        if m.class.name != "lttng_ust_profiling:command_completed" {
+            return;
+        }
+        let kind = m.field("kind").map(|v| v.as_str().to_string()).unwrap_or_default();
+        let kname = m.field("name").map(|v| v.as_str().to_string()).unwrap_or_default();
+        let label = if kind == "kernel" { kname } else { kind.clone() };
+        if label.is_empty() || label == "barrier" {
+            return;
+        }
+        let start = m.field("ts_start").map(|v| v.as_u64()).unwrap_or(0);
+        let end = m.field("ts_end").map(|v| v.as_u64()).unwrap_or(0);
+        self.device
+            .entry(label.clone())
+            .or_insert_with(|| TallyRow {
+                name: label,
+                api: "GPU".into(),
+                time_ns: 0,
+                calls: 0,
+                min_ns: u64::MAX,
+                max_ns: 0,
+            })
+            .absorb(end.saturating_sub(start));
+    }
+
+    /// Build from paired host intervals and (optionally) profiling events
+    /// (compatibility shim over the streaming `add_*` methods).
     pub fn build(intervals: &[Interval], profiling: &[EventMsg]) -> Self {
         let mut t = Tally::default();
         for iv in intervals {
-            t.hostnames.insert(iv.hostname.to_string());
-            t.processes.insert(iv.rank);
-            t.threads.insert((iv.rank, iv.tid));
-            let key = (iv.api.clone(), iv.name.clone());
-            let dur = iv.duration();
-            t.host
-                .entry(key)
-                .or_insert_with(|| TallyRow {
-                    name: iv.name.clone(),
-                    api: iv.api.clone(),
-                    time_ns: 0,
-                    calls: 0,
-                    min_ns: u64::MAX,
-                    max_ns: 0,
-                })
-                .absorb(dur);
+            t.add_interval(iv);
         }
         for m in profiling {
-            if m.class.name != "lttng_ust_profiling:command_completed" {
-                continue;
-            }
-            let kind = m.field("kind").map(|v| v.as_str().to_string()).unwrap_or_default();
-            let kname = m.field("name").map(|v| v.as_str().to_string()).unwrap_or_default();
-            let label = if kind == "kernel" { kname } else { kind.clone() };
-            if label.is_empty() || label == "barrier" {
-                continue;
-            }
-            let start = m.field("ts_start").map(|v| v.as_u64()).unwrap_or(0);
-            let end = m.field("ts_end").map(|v| v.as_u64()).unwrap_or(0);
-            t.device
-                .entry(label.clone())
-                .or_insert_with(|| TallyRow {
-                    name: label,
-                    api: "GPU".into(),
-                    time_ns: 0,
-                    calls: 0,
-                    min_ns: u64::MAX,
-                    max_ns: 0,
-                })
-                .absorb(end.saturating_sub(start));
+            t.add_event(m);
         }
+        t
+    }
+
+    /// Build straight from a parsed trace in one streaming pass: lazy
+    /// muxing + incremental interval pairing, no `Vec<EventMsg>` and no
+    /// interval buffer (row aggregation is order-independent).
+    pub fn from_parsed(parsed: &ParsedTrace) -> Self {
+        let mut t = Tally::default();
+        let mut tracker = IntervalTracker::new();
+        for m in MessageSource::new(parsed) {
+            t.add_event(m);
+            tracker.push(m, |iv| t.add_interval(&iv));
+        }
+        tracker.finish(|iv| t.add_interval(&iv));
         t
     }
 
@@ -304,6 +332,49 @@ impl Tally {
     }
 }
 
+/// The Tally plugin as a streaming [`AnalysisSink`]: host rows from the
+/// interval filter, device rows from profiling events, rendered §4.3
+/// table at finish. State is O(distinct API functions), not trace-sized.
+#[derive(Default)]
+pub struct TallySink {
+    tally: Tally,
+}
+
+impl TallySink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The accumulated tally so far (final after the pipeline ends).
+    pub fn tally(&self) -> &Tally {
+        &self.tally
+    }
+
+    /// Take the accumulated tally out of the sink.
+    pub fn into_tally(self) -> Tally {
+        self.tally
+    }
+}
+
+impl AnalysisSink for TallySink {
+    fn name(&self) -> &'static str {
+        "tally"
+    }
+
+    fn consume_event(&mut self, m: &EventMsg) {
+        self.tally.add_event(m);
+    }
+
+    fn consume_interval(&mut self, iv: &Interval) {
+        self.tally.add_interval(iv);
+    }
+
+    fn finish(&mut self) -> Report {
+        Report::Text(self.tally.render())
+    }
+}
+
 /// Humanize a nanosecond quantity the way iprof does (471.80ns, 3.56ms,
 /// 4.73s).
 pub fn fmt_ns(ns: u64) -> String {
@@ -348,6 +419,31 @@ mod tests {
         let msgs = mux(&parse_trace(&trace).unwrap());
         let iv = pair_intervals(&msgs);
         Tally::build(&iv, &msgs)
+    }
+
+    #[test]
+    fn streaming_from_parsed_matches_two_pass_build() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        for _ in 0..7 {
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let msgs = mux(&parsed);
+        let two_pass = Tally::build(&pair_intervals(&msgs), &msgs);
+        let streaming = Tally::from_parsed(&parsed);
+        assert_eq!(streaming.host, two_pass.host);
+        assert_eq!(streaming.device, two_pass.device);
+        assert_eq!(streaming.render(), two_pass.render());
     }
 
     #[test]

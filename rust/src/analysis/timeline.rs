@@ -6,113 +6,157 @@
 //! tracks: Power Domain 0/1/2, Frequency Domain 0/1, ComputeEngine (%)
 //! Domain 0/1, CopyEngine (%) Domain 0/1. Perfetto opens chrome-trace
 //! JSON directly, standing in for the paper's protobuf encoder.
+//!
+//! [`TimelineSink`] is the streaming form: device/telemetry rows are
+//! rendered to JSON the moment each message flows past, and host spans
+//! are rendered as the interval filter completes them (only the rendered
+//! text plus a start-timestamp key is retained for the final stable
+//! sort, never the messages themselves). The eager [`timeline_json`]
+//! shim keeps the old two-slice signature.
 
 use super::interval::Interval;
 use super::msg::EventMsg;
-use std::fmt::Write as _;
+use super::sink::{AnalysisSink, Report};
 
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-/// Build chrome-trace JSON from paired intervals and raw messages
-/// (profiling + sampling events are picked out of `msgs`).
-pub fn timeline_json(intervals: &[Interval], msgs: &[EventMsg]) -> String {
+/// Render one host API span as a chrome-trace complete event.
+fn interval_entry(iv: &Interval) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}}}",
+        esc(&iv.name),
+        esc(&iv.api),
+        iv.start / 1000,
+        iv.duration().max(1) / 1000,
+        iv.rank,
+        iv.tid
+    )
+}
+
+/// Render one raw message as a device span or telemetry counter entry,
+/// if it is one of the profiling/sampling classes.
+fn event_entry(m: &EventMsg) -> Option<String> {
+    match m.class.name.as_str() {
+        "lttng_ust_profiling:command_completed" => {
+            let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
+            let kind = m.field("kind").map(|v| v.as_str()).unwrap_or("");
+            let name = m.field("name").map(|v| v.as_str()).unwrap_or("");
+            let label = if kind == "kernel" { name } else { kind };
+            let s = m.field("ts_start").map(|v| v.as_u64()).unwrap_or(0);
+            let e = m.field("ts_end").map(|v| v.as_u64()).unwrap_or(0);
+            let engine = m.field("engine_ordinal").map(|v| v.as_u64()).unwrap_or(0);
+            Some(format!(
+                "{{\"name\":\"{}\",\"cat\":\"device\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":\"Device {:#x}\",\"tid\":\"engine {}\"}}",
+                esc(label),
+                s / 1000,
+                (e.saturating_sub(s)).max(1) / 1000,
+                device,
+                engine
+            ))
+        }
+        "lttng_ust_sampling:gpu_power" => {
+            let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
+            let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
+            let watts = m.field("watts").map(|v| v.as_f64()).unwrap_or(0.0);
+            Some(format!(
+                "{{\"name\":\"GPU Power Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"W\":{watts:.1}}}}}",
+                m.ts / 1000
+            ))
+        }
+        "lttng_ust_sampling:gpu_frequency" => {
+            let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
+            let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
+            let mhz = m.field("mhz").map(|v| v.as_f64()).unwrap_or(0.0);
+            Some(format!(
+                "{{\"name\":\"GPU Frequency Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"MHz\":{mhz:.0}}}}}",
+                m.ts / 1000
+            ))
+        }
+        "lttng_ust_sampling:gpu_engine_util" => {
+            let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
+            let kind = m.field("engine_kind").map(|v| v.as_u64()).unwrap_or(0);
+            let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
+            let util = m.field("util").map(|v| v.as_f64()).unwrap_or(0.0);
+            let engine = if kind == 0 { "ComputeEngine" } else { "CopyEngine" };
+            Some(format!(
+                "{{\"name\":\"{engine} (%) Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"pct\":{:.1}}}}}",
+                m.ts / 1000,
+                util * 100.0
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Assemble the final document: host entries (already sorted by start),
+/// then device/telemetry entries, comma-joined.
+fn assemble(host: Vec<String>, device: Vec<String>) -> String {
     let mut out = String::from("{\"traceEvents\":[\n");
     let mut first = true;
-    let mut push = |s: String, out: &mut String| {
+    for entry in host.into_iter().chain(device) {
         if !std::mem::take(&mut first) {
             out.push_str(",\n");
         }
-        out.push_str(&s);
-    };
+        out.push_str(&entry);
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}");
+    out
+}
 
-    // Host API spans: pid = rank, tid = thread.
-    for iv in intervals {
-        push(
-            format!(
-                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}}}",
-                esc(&iv.name),
-                esc(&iv.api),
-                iv.start / 1000,
-                iv.duration().max(1) / 1000,
-                iv.rank,
-                iv.tid
-            ),
-            &mut out,
-        );
+/// Build chrome-trace JSON from paired intervals and raw messages
+/// (profiling + sampling events are picked out of `msgs`). Compatibility
+/// shim over the shared renderers; `intervals` must already be sorted by
+/// start (as [`super::interval::pair_intervals`] returns them).
+pub fn timeline_json(intervals: &[Interval], msgs: &[EventMsg]) -> String {
+    let host: Vec<String> = intervals.iter().map(interval_entry).collect();
+    let device: Vec<String> = msgs.iter().filter_map(event_entry).collect();
+    assemble(host, device)
+}
+
+/// The Timeline plugin as a streaming [`AnalysisSink`].
+///
+/// Memory stays proportional to the *output* (rendered JSON entries),
+/// not to the trace: no `EventMsg` or `Interval` is retained. Host spans
+/// carry their start timestamp so the finish stage can stable-sort them
+/// into the same start order the eager path produces.
+#[derive(Default)]
+pub struct TimelineSink {
+    host: Vec<(u64, String)>,
+    device: Vec<String>,
+}
+
+impl TimelineSink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl AnalysisSink for TimelineSink {
+    fn name(&self) -> &'static str {
+        "timeline"
     }
 
-    // Device command spans + telemetry counters.
-    for m in msgs {
-        match m.class.name.as_str() {
-            "lttng_ust_profiling:command_completed" => {
-                let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
-                let kind = m.field("kind").map(|v| v.as_str()).unwrap_or("");
-                let name = m.field("name").map(|v| v.as_str()).unwrap_or("");
-                let label = if kind == "kernel" { name } else { kind };
-                let s = m.field("ts_start").map(|v| v.as_u64()).unwrap_or(0);
-                let e = m.field("ts_end").map(|v| v.as_u64()).unwrap_or(0);
-                let engine = m.field("engine_ordinal").map(|v| v.as_u64()).unwrap_or(0);
-                push(
-                    format!(
-                        "{{\"name\":\"{}\",\"cat\":\"device\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":\"Device {:#x}\",\"tid\":\"engine {}\"}}",
-                        esc(label),
-                        s / 1000,
-                        (e.saturating_sub(s)).max(1) / 1000,
-                        device,
-                        engine
-                    ),
-                    &mut out,
-                );
-            }
-            "lttng_ust_sampling:gpu_power" => {
-                let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
-                let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
-                let watts = m.field("watts").map(|v| v.as_f64()).unwrap_or(0.0);
-                push(
-                    format!(
-                        "{{\"name\":\"GPU Power Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"W\":{watts:.1}}}}}",
-                        m.ts / 1000
-                    ),
-                    &mut out,
-                );
-            }
-            "lttng_ust_sampling:gpu_frequency" => {
-                let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
-                let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
-                let mhz = m.field("mhz").map(|v| v.as_f64()).unwrap_or(0.0);
-                push(
-                    format!(
-                        "{{\"name\":\"GPU Frequency Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"MHz\":{mhz:.0}}}}}",
-                        m.ts / 1000
-                    ),
-                    &mut out,
-                );
-            }
-            "lttng_ust_sampling:gpu_engine_util" => {
-                let device = m.field("device").map(|v| v.as_u64()).unwrap_or(0);
-                let kind = m.field("engine_kind").map(|v| v.as_u64()).unwrap_or(0);
-                let domain = m.field("domain").map(|v| v.as_u64()).unwrap_or(0);
-                let util = m.field("util").map(|v| v.as_f64()).unwrap_or(0.0);
-                let engine = if kind == 0 { "ComputeEngine" } else { "CopyEngine" };
-                push(
-                    format!(
-                        "{{\"name\":\"{engine} (%) Domain {domain}\",\"ph\":\"C\",\"ts\":{},\"pid\":\"Device {device:#x}\",\"args\":{{\"pct\":{:.1}}}}}",
-                        m.ts / 1000,
-                        util * 100.0
-                    ),
-                    &mut out,
-                );
-            }
-            _ => {}
+    fn consume_event(&mut self, m: &EventMsg) {
+        if let Some(entry) = event_entry(m) {
+            self.device.push(entry);
         }
     }
 
-    let mut meta = String::new();
-    let _ = write!(meta, "\n],\"displayTimeUnit\":\"ms\"}}");
-    out.push_str(&meta);
-    out
+    fn consume_interval(&mut self, iv: &Interval) {
+        self.host.push((iv.start, interval_entry(iv)));
+    }
+
+    fn finish(&mut self) -> Report {
+        let mut host = std::mem::take(&mut self.host);
+        // stable: same-start spans keep completion order, matching the
+        // eager pair_intervals sort
+        host.sort_by_key(|(start, _)| *start);
+        let host: Vec<String> = host.into_iter().map(|(_, e)| e).collect();
+        Report::Json(assemble(host, std::mem::take(&mut self.device)))
+    }
 }
 
 #[cfg(test)]
@@ -121,12 +165,13 @@ mod tests {
     use crate::analysis::msg::parse_trace;
     use crate::analysis::muxer::mux;
     use crate::analysis::pair_intervals;
+    use crate::analysis::sink::run_pipeline;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
     use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
 
-    fn build_sample() -> String {
+    fn sample_parsed() -> crate::analysis::ParsedTrace {
         let _g = test_support::lock();
         install_session(SessionConfig::default());
         let e = class_by_name("lttng_ust_ze:zeCommandQueueSynchronize_entry").unwrap();
@@ -159,7 +204,12 @@ mod tests {
         });
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        let msgs = mux(&parse_trace(&trace).unwrap());
+        parse_trace(&trace).unwrap()
+    }
+
+    fn build_sample() -> String {
+        let parsed = sample_parsed();
+        let msgs = mux(&parsed);
         let iv = pair_intervals(&msgs);
         timeline_json(&iv, &msgs)
     }
@@ -180,5 +230,15 @@ mod tests {
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
         assert!(j.ends_with("\"displayTimeUnit\":\"ms\"}"));
+    }
+
+    #[test]
+    fn streaming_sink_is_byte_identical_to_eager_path() {
+        let parsed = sample_parsed();
+        let msgs = mux(&parsed);
+        let eager = timeline_json(&pair_intervals(&msgs), &msgs);
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TimelineSink::new())];
+        let reports = run_pipeline(&parsed, &mut sinks);
+        assert_eq!(reports[0].payload().unwrap(), eager);
     }
 }

@@ -11,8 +11,13 @@
 //!   `zeCommandListReset` in between.
 //! * **Unreleased modules/kernels** and zero-byte copies as hygiene
 //!   warnings.
+//!
+//! The rules live in the incremental [`Validator`] (observe one message
+//! at a time, O(live-handles) state), which backs both the streaming
+//! [`ValidateSink`] and the eager [`validate`] shim.
 
 use super::msg::EventMsg;
+use super::sink::{AnalysisSink, Report};
 use std::collections::{HashMap, HashSet};
 
 /// Finding severity.
@@ -37,24 +42,33 @@ pub struct Finding {
     pub ts: u64,
 }
 
-/// Run all validation rules over a muxed message sequence.
-pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
-    let mut findings = Vec::new();
-
-    // --- rule state ---
-    let mut live_events: HashMap<u64, u64> = HashMap::new(); // handle -> create ts
-    let mut live_modules: HashMap<u64, u64> = HashMap::new();
-    let mut live_kernels: HashMap<u64, u64> = HashMap::new();
+/// Incremental rule engine: feed it every muxed message via
+/// [`Validator::observe`], then [`Validator::finish`] to flush the
+/// end-of-trace rules (unreleased handles) and collect sorted findings.
+#[derive(Default)]
+pub struct Validator {
+    findings: Vec<Finding>,
+    live_events: HashMap<u64, u64>, // handle -> create ts
+    live_modules: HashMap<u64, u64>,
+    live_kernels: HashMap<u64, u64>,
     // list handle -> executed-since-reset count
-    let mut list_exec: HashMap<u64, u32> = HashMap::new();
-    let mut flagged_lists: HashSet<u64> = HashSet::new();
+    list_exec: HashMap<u64, u32>,
+    flagged_lists: HashSet<u64>,
+}
 
-    for m in msgs {
+impl Validator {
+    /// Empty rule engine.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply every rule to one time-ordered message.
+    pub fn observe(&mut self, m: &EventMsg) {
         match m.class.name.as_str() {
             "lttng_ust_ze:zeDeviceGetProperties_entry" => {
                 if let Some(v) = m.field("pDeviceProperties_pNext") {
                     if v.as_u64() != 0 {
-                        findings.push(Finding {
+                        self.findings.push(Finding {
                             severity: Severity::Error,
                             rule: "ze-uninitialized-pnext",
                             message: format!(
@@ -71,42 +85,42 @@ pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
             "lttng_ust_ze:zeEventCreate_exit" | "lttng_ust_cuda:cuEventCreate_exit" => {
                 if let Some(h) = m.field("*phEvent") {
                     if h.as_u64() != 0 {
-                        live_events.insert(h.as_u64(), m.ts);
+                        self.live_events.insert(h.as_u64(), m.ts);
                     }
                 }
             }
             "lttng_ust_ze:zeEventDestroy_entry" | "lttng_ust_cuda:cuEventDestroy_entry" => {
                 if let Some(h) = m.field("hEvent") {
-                    live_events.remove(&h.as_u64());
+                    self.live_events.remove(&h.as_u64());
                 }
             }
             "lttng_ust_ze:zeModuleCreate_exit" => {
                 if let Some(h) = m.field("*phModule") {
                     if h.as_u64() != 0 {
-                        live_modules.insert(h.as_u64(), m.ts);
+                        self.live_modules.insert(h.as_u64(), m.ts);
                     }
                 }
             }
             "lttng_ust_ze:zeModuleDestroy_entry" => {
                 if let Some(h) = m.field("hModule") {
-                    live_modules.remove(&h.as_u64());
+                    self.live_modules.remove(&h.as_u64());
                 }
             }
             "lttng_ust_ze:zeKernelCreate_exit" => {
                 if let Some(h) = m.field("*phKernel") {
                     if h.as_u64() != 0 {
-                        live_kernels.insert(h.as_u64(), m.ts);
+                        self.live_kernels.insert(h.as_u64(), m.ts);
                     }
                 }
             }
             "lttng_ust_ze:zeKernelDestroy_entry" => {
                 if let Some(h) = m.field("hKernel") {
-                    live_kernels.remove(&h.as_u64());
+                    self.live_kernels.remove(&h.as_u64());
                 }
             }
             "lttng_ust_ze:zeCommandListReset_entry" => {
                 if let Some(h) = m.field("hCommandList") {
-                    list_exec.insert(h.as_u64(), 0);
+                    self.list_exec.insert(h.as_u64(), 0);
                 }
             }
             "lttng_ust_ze:zeCommandQueueExecuteCommandLists_entry" => {
@@ -116,11 +130,11 @@ pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
             }
             "lttng_ust_ze:zeCommandListClose_entry" => {
                 if let Some(h) = m.field("hCommandList") {
-                    let c = list_exec.entry(h.as_u64()).or_insert(0);
+                    let c = self.list_exec.entry(h.as_u64()).or_insert(0);
                     // closing again without reset after an execute -> the
                     // §4.2 non-reset pattern
-                    if *c > 0 && flagged_lists.insert(h.as_u64()) {
-                        findings.push(Finding {
+                    if *c > 0 && self.flagged_lists.insert(h.as_u64()) {
+                        self.findings.push(Finding {
                             severity: Severity::Error,
                             rule: "ze-list-not-reset",
                             message: format!(
@@ -137,7 +151,7 @@ pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
             "lttng_ust_ze:zeCommandListAppendMemoryCopy_entry" => {
                 if let Some(size) = m.field("size") {
                     if size.as_u64() == 0 {
-                        findings.push(Finding {
+                        self.findings.push(Finding {
                             severity: Severity::Warning,
                             rule: "ze-zero-byte-copy",
                             message: "zero-byte zeCommandListAppendMemoryCopy".into(),
@@ -150,33 +164,44 @@ pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
         }
     }
 
-    for (h, ts) in live_events {
-        findings.push(Finding {
-            severity: Severity::Warning,
-            rule: "unreleased-event",
-            message: format!("event {h:#x} created at t={ts}ns was never destroyed"),
-            ts: 0,
-        });
+    /// End of trace: flag still-live handles, sort and return findings.
+    /// Leaked-handle findings are emitted in handle order so the report
+    /// is deterministic across runs.
+    pub fn finish(&mut self) -> Vec<Finding> {
+        let live_events = std::mem::take(&mut self.live_events);
+        let live_modules = std::mem::take(&mut self.live_modules);
+        let live_kernels = std::mem::take(&mut self.live_kernels);
+        let mut findings = std::mem::take(&mut self.findings);
+        let sets = [
+            (live_events, "unreleased-event", "event"),
+            (live_modules, "unreleased-module", "module"),
+            (live_kernels, "unreleased-kernel", "kernel"),
+        ];
+        for (map, rule, what) in sets {
+            let mut leaked: Vec<_> = map.into_iter().collect();
+            leaked.sort_unstable();
+            for (h, ts) in leaked {
+                findings.push(Finding {
+                    severity: Severity::Warning,
+                    rule,
+                    message: format!("{what} {h:#x} created at t={ts}ns was never destroyed"),
+                    ts: 0,
+                });
+            }
+        }
+        findings.sort_by_key(|f| f.ts);
+        findings
     }
-    for (h, ts) in live_modules {
-        findings.push(Finding {
-            severity: Severity::Warning,
-            rule: "unreleased-module",
-            message: format!("module {h:#x} created at t={ts}ns was never destroyed"),
-            ts: 0,
-        });
-    }
-    for (h, ts) in live_kernels {
-        findings.push(Finding {
-            severity: Severity::Warning,
-            rule: "unreleased-kernel",
-            message: format!("kernel {h:#x} created at t={ts}ns was never destroyed"),
-            ts: 0,
-        });
-    }
+}
 
-    findings.sort_by_key(|f| f.ts);
-    findings
+/// Run all validation rules over a muxed message sequence
+/// (compatibility shim over [`Validator`]).
+pub fn validate(msgs: &[EventMsg]) -> Vec<Finding> {
+    let mut v = Validator::new();
+    for m in msgs {
+        v.observe(m);
+    }
+    v.finish()
 }
 
 /// Render findings as a report.
@@ -194,6 +219,33 @@ pub fn render_report(findings: &[Finding]) -> String {
         let _ = writeln!(out, "[{tag}] {}: {}", f.rule, f.message);
     }
     out
+}
+
+/// The validation plugin as a streaming [`AnalysisSink`].
+#[derive(Default)]
+pub struct ValidateSink {
+    validator: Validator,
+}
+
+impl ValidateSink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl AnalysisSink for ValidateSink {
+    fn name(&self) -> &'static str {
+        "validate"
+    }
+
+    fn consume_event(&mut self, m: &EventMsg) {
+        self.validator.observe(m);
+    }
+
+    fn finish(&mut self) -> Report {
+        Report::Text(render_report(&self.validator.finish()))
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +352,28 @@ mod tests {
             });
         });
         assert!(findings.iter().any(|f| f.rule == "ze-zero-byte-copy"));
+    }
+
+    #[test]
+    fn streaming_validator_matches_eager_validate() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let cx = class_by_name("lttng_ust_ze:zeEventCreate_exit").unwrap();
+        emit(cx, |e| {
+            e.u64(0).ptr(0xe00f);
+        });
+        let c = class_by_name("lttng_ust_ze:zeDeviceGetProperties_entry").unwrap();
+        emit(c, |e| {
+            e.ptr(0xde0).ptr(0x7ffe).ptr(0xbad);
+        });
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+        let parsed = parse_trace(&trace).unwrap();
+        let msgs = mux(&parsed);
+        let eager = render_report(&validate(&msgs));
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(ValidateSink::new())];
+        let reports = crate::analysis::sink::run_pipeline(&parsed, &mut sinks);
+        assert_eq!(reports[0].payload().unwrap(), eager);
     }
 
     #[test]

@@ -4,6 +4,82 @@
 
 use std::time::{Duration, Instant};
 
+pub mod alloc_track {
+    //! Heap-usage tracking for benchmarks: a counting [`GlobalAlloc`]
+    //! wrapper around the system allocator. A bench binary opts in with
+    //!
+    //! ```ignore
+    //! #[global_allocator]
+    //! static ALLOC: thapi::bench_support::alloc_track::CountingAlloc =
+    //!     thapi::bench_support::alloc_track::CountingAlloc;
+    //! ```
+    //!
+    //! and then brackets a phase with [`reset_peak`] + [`peak_bytes`] to
+    //! read the phase's peak resident heap (e.g. streaming vs
+    //! materialized analysis in `benches/fig8_space.rs`).
+
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static LIVE: AtomicUsize = AtomicUsize::new(0);
+    static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+    /// Counting allocator; zero-cost pass-through to [`System`] plus two
+    /// relaxed atomics per alloc/free.
+    pub struct CountingAlloc;
+
+    fn on_alloc(size: usize) {
+        let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_free(size: usize) {
+        LIVE.fetch_sub(size, Ordering::Relaxed);
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            on_free(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                // count the new block before releasing the old one: during
+                // a growing realloc both buffers coexist, and PEAK must see
+                // that instant
+                on_alloc(new_size);
+                on_free(layout.size());
+            }
+            p
+        }
+    }
+
+    /// Currently live heap bytes.
+    pub fn live_bytes() -> usize {
+        LIVE.load(Ordering::Relaxed)
+    }
+
+    /// Peak live heap bytes since the last [`reset_peak`].
+    pub fn peak_bytes() -> usize {
+        PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Start a new measurement phase: peak := current live.
+    pub fn reset_peak() {
+        PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
 /// Simple timing statistics over repeated measurements.
 #[derive(Debug, Clone)]
 pub struct Stats {

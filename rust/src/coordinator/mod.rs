@@ -9,7 +9,8 @@
 //! [`RunReport`] with wall time, tracer statistics and the requested
 //! analyses — the building block of every §5 experiment.
 
-use crate::analysis::{self, Tally};
+use crate::analysis::{self, AnalysisSink, Report as AnalysisReport, Tally};
+use anyhow::Result;
 use crate::apps::Workload;
 use crate::device::Node;
 use crate::sampling::{Sampler, SamplingConfig};
@@ -102,13 +103,24 @@ impl RunReport {
         self.trace.as_ref().map(|t| t.size_bytes()).unwrap_or(0)
     }
 
-    /// Run the tally analysis over the collected trace.
+    /// Run the tally analysis over the collected trace in one streaming
+    /// pass (lazy muxing + incremental interval pairing — no
+    /// materialized `Vec<EventMsg>`).
     pub fn tally(&self) -> Option<Tally> {
         let trace = self.trace.as_ref()?;
         let parsed = analysis::parse_trace(trace).ok()?;
-        let msgs = analysis::mux(&parsed);
-        let intervals = analysis::pair_intervals(&msgs);
-        Some(Tally::build(&intervals, &msgs))
+        Some(Tally::from_parsed(&parsed))
+    }
+
+    /// Drive an arbitrary set of analysis sinks from one streaming pass
+    /// over the collected trace. Returns `None` for baseline runs
+    /// (no trace), one [`AnalysisReport`] per sink otherwise.
+    pub fn analyze(
+        &self,
+        sinks: &mut [Box<dyn AnalysisSink + '_>],
+    ) -> Option<Result<Vec<AnalysisReport>>> {
+        let trace = self.trace.as_ref()?;
+        Some(analysis::parse_trace(trace).map(|parsed| analysis::run_pipeline(&parsed, sinks)))
     }
 }
 
@@ -225,6 +237,26 @@ mod tests {
         let tally = r.tally().unwrap();
         assert!(tally.host.keys().any(|(api, _)| api == "ZE"));
         assert!(!tally.device.is_empty(), "device rows from profiling events");
+    }
+
+    #[test]
+    fn analyze_drives_multiple_sinks_in_one_pass() {
+        let _g = test_support::lock();
+        let node = Node::new(NodeConfig::test_small());
+        let apps = hecbench::suite();
+        let app = apps.iter().find(|a| a.name() == "saxpy-ze").unwrap();
+        let r = run(&node, app.as_ref(), &IprofConfig::default());
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![
+            Box::new(crate::analysis::TallySink::new()),
+            Box::new(crate::analysis::TimelineSink::new()),
+        ];
+        let reports = r.analyze(&mut sinks).unwrap().unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(reports[0].payload().unwrap().contains("Time(%)"));
+        assert!(reports[1].payload().unwrap().contains("traceEvents"));
+        // baseline has no trace -> None
+        let base = run(&node, app.as_ref(), &IprofConfig::baseline());
+        assert!(base.analyze(&mut sinks).is_none());
     }
 
     #[test]

@@ -18,9 +18,11 @@
 //! * [`intercept`] — the traced programming-model frontends: Level-Zero,
 //!   CUDA, HIP (layered on Level-Zero, i.e. HIPLZ), OpenCL, MPI and
 //!   OpenMP-offload, each emitting full-context entry/exit events.
-//! * [`analysis`] — the Babeltrace2/Metababel substitute: trace reading,
-//!   time-ordered muxing, interval pairing, and the generated plugins
-//!   (pretty print, tally, timeline, validation).
+//! * [`analysis`] — the Babeltrace2/Metababel substitute: a streaming
+//!   source → muxer → filter → sink graph (lazy time-ordered muxing,
+//!   incremental interval pairing, single-pass sink fan-out) behind the
+//!   generated plugins (pretty print, tally, timeline, validation). See
+//!   `rust/ARCHITECTURE.md`.
 //! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
 //! * [`aggregate`] — on-node aggregation and the local-/global-master
 //!   composite-profile merge (paper §3.7).

@@ -10,20 +10,79 @@
 //!       --no-trace                      baseline run (tracing off)
 //!       --ranks <r0,r1,...>             trace only these ranks
 //!       --filter <pattern>              disable matching event classes
-//!   -a, --analysis <tally|pretty|timeline|validate|none>  [tally]
+//!   -a, --analysis <tally,pretty,timeline,validate|none>  [tally]
 //!       --scale <f>                     workload intensity  [1.0]
 //!       --list                          list available workloads
 //! ```
+//!
+//! `-a` accepts a comma-separated list; all requested sinks are driven
+//! by ONE streaming pass over the trace (source → muxer → filter →
+//! sinks), and unknown analysis names are rejected at argument-parse
+//! time — before any workload has run.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
 use std::sync::Arc;
-use thapi::analysis;
+use thapi::analysis::{
+    self, AnalysisSink, PrettySink, Report, TallySink, TimelineSink, ValidateSink,
+};
 use thapi::apps::{hecbench, spechpc, Workload};
 use thapi::coordinator::{self, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::sampling::SamplingConfig;
 use thapi::tracer::{SinkKind, TracingMode};
+
+/// One requested analysis plugin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AnalysisKind {
+    Tally,
+    Pretty,
+    Timeline,
+    Validate,
+}
+
+impl AnalysisKind {
+    fn parse(s: &str) -> Result<AnalysisKind> {
+        Ok(match s {
+            "tally" => AnalysisKind::Tally,
+            "pretty" => AnalysisKind::Pretty,
+            "timeline" => AnalysisKind::Timeline,
+            "validate" => AnalysisKind::Validate,
+            other => bail!("unknown analysis {other} (expected tally, pretty, timeline, validate or none)"),
+        })
+    }
+
+    fn sink(&self) -> Box<dyn AnalysisSink> {
+        match self {
+            AnalysisKind::Tally => Box::new(TallySink::new()),
+            AnalysisKind::Pretty => Box::new(PrettySink::new()),
+            AnalysisKind::Timeline => Box::new(TimelineSink::new()),
+            AnalysisKind::Validate => Box::new(ValidateSink::new()),
+        }
+    }
+}
+
+/// Parse `-a` values: a comma-separated plugin list, or `none`.
+/// Duplicates collapse; unknown names fail here, at parse time.
+fn parse_analyses(v: &str) -> Result<Vec<AnalysisKind>> {
+    if v == "none" {
+        return Ok(Vec::new());
+    }
+    let mut kinds = Vec::new();
+    for part in v.split(',').filter(|p| !p.is_empty()) {
+        if part == "none" {
+            bail!("analysis 'none' cannot be combined with other analyses");
+        }
+        let k = AnalysisKind::parse(part)?;
+        if !kinds.contains(&k) {
+            kinds.push(k);
+        }
+    }
+    if kinds.is_empty() {
+        bail!("--analysis needs at least one of tally, pretty, timeline, validate (or none)");
+    }
+    Ok(kinds)
+}
 
 struct Options {
     mode: TracingMode,
@@ -33,7 +92,7 @@ struct Options {
     tracing: bool,
     ranks: Option<HashSet<u32>>,
     filters: Vec<String>,
-    analysis: String,
+    analyses: Vec<AnalysisKind>,
     workloads: Vec<String>,
     list: bool,
 }
@@ -47,7 +106,7 @@ fn parse_args(args: &[String]) -> Result<Options> {
         tracing: true,
         ranks: None,
         filters: Vec::new(),
-        analysis: "tally".into(),
+        analyses: vec![AnalysisKind::Tally],
         workloads: Vec::new(),
         list: false,
     };
@@ -97,7 +156,8 @@ fn parse_args(args: &[String]) -> Result<Options> {
             }
             "--filter" => o.filters.push(it.next().context("--filter needs a value")?.clone()),
             "-a" | "--analysis" => {
-                o.analysis = it.next().context("--analysis needs a value")?.clone();
+                let v = it.next().context("--analysis needs a value")?;
+                o.analyses = parse_analyses(v)?;
             }
             "--scale" => {
                 let v = it.next().context("--scale needs a value")?;
@@ -133,7 +193,9 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
       --no-trace                       baseline run (tracing off)
       --ranks <r0,r1,...>              trace only these ranks
       --filter <pattern>               disable matching event classes
-  -a, --analysis <tally|pretty|timeline|validate|none>   [tally]
+  -a, --analysis <list|none>           comma-separated sinks driven in one
+                                       streaming pass: tally, pretty,
+                                       timeline, validate   [tally]
       --scale <f>                      workload intensity multiplier
       --list                           list available workloads";
 
@@ -189,27 +251,28 @@ fn main() -> Result<()> {
             report.stats.as_ref().map(|s| s.dropped).unwrap_or(0),
             report.trace_bytes()
         );
+        if o.analyses.is_empty() {
+            continue;
+        }
         if let Some(trace) = &report.trace {
+            // One streaming pass drives every requested sink.
             let parsed = analysis::parse_trace(trace)?;
-            let msgs = analysis::mux(&parsed);
-            match o.analysis.as_str() {
-                "tally" => {
-                    let iv = analysis::pair_intervals(&msgs);
-                    println!("{}", analysis::Tally::build(&iv, &msgs).render());
+            let mut sinks: Vec<Box<dyn AnalysisSink>> =
+                o.analyses.iter().map(|k| k.sink()).collect();
+            let reports = analysis::run_pipeline(&parsed, &mut sinks);
+            for (kind, rep) in o.analyses.iter().zip(reports) {
+                match (kind, rep) {
+                    (AnalysisKind::Timeline, Report::Json(json)) => {
+                        let path = format!("{name}.trace.json");
+                        std::fs::write(&path, json)?;
+                        eprintln!("iprof: wrote {path} (open in Perfetto)");
+                    }
+                    (AnalysisKind::Pretty | AnalysisKind::Validate, Report::Text(text)) => {
+                        print!("{text}");
+                    }
+                    (_, Report::Text(text)) => println!("{text}"),
+                    (_, _) => {}
                 }
-                "pretty" => print!("{}", analysis::pretty_print(&msgs)),
-                "timeline" => {
-                    let iv = analysis::pair_intervals(&msgs);
-                    let path = format!("{name}.trace.json");
-                    std::fs::write(&path, analysis::timeline_json(&iv, &msgs))?;
-                    eprintln!("iprof: wrote {path} (open in Perfetto)");
-                }
-                "validate" => {
-                    let findings = analysis::validate(&msgs);
-                    print!("{}", analysis::validate::render_report(&findings));
-                }
-                "none" => {}
-                other => bail!("unknown analysis {other}"),
             }
         }
     }

@@ -205,6 +205,93 @@ fn prop_tally_serialization_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// Streaming muxer
+// ---------------------------------------------------------------------------
+
+/// A synthetic multi-stream parsed trace: each stream non-decreasing in
+/// time (as `parse_trace` produces), with deliberate cross-stream and
+/// in-stream timestamp ties. Stream index is encoded in `rank` and the
+/// in-stream position in `tid` so the merge order is fully observable.
+fn synthetic_parsed(rng: &mut Rng) -> thapi::analysis::ParsedTrace {
+    use std::sync::Arc;
+    use thapi::analysis::EventMsg;
+    use thapi::tracer::btf::{DecodedClass, Metadata};
+    let class = Arc::new(DecodedClass {
+        id: 0,
+        name: "lttng_ust_ze:zeInit_entry".to_string(),
+        api: "ZE".to_string(),
+        flags: "h".to_string(),
+        fields: vec![],
+    });
+    let hostname: Arc<str> = Arc::from("propnode");
+    let n_streams = rng.range(1, 8);
+    let mut streams = Vec::with_capacity(n_streams);
+    for si in 0..n_streams {
+        let mut ts = rng.below(4);
+        let n = rng.range(0, 60);
+        let mut events = Vec::with_capacity(n);
+        for i in 0..n {
+            ts += rng.below(3); // 0 increments force equal timestamps
+            events.push(EventMsg {
+                ts,
+                rank: si as u32,
+                tid: i as u32,
+                hostname: hostname.clone(),
+                class: class.clone(),
+                fields: vec![],
+            });
+        }
+        streams.push(events);
+    }
+    thapi::analysis::ParsedTrace { metadata: Metadata::default(), streams }
+}
+
+/// The streaming muxer preserves global time order and stream-index
+/// stability: its output is exactly the stable sort of all events by
+/// (ts, stream index, in-stream index), i.e. ties break by stream and
+/// per-stream order is never reordered — and the eager `mux` shim
+/// agrees with the lazy `MessageSource`.
+#[test]
+fn prop_streaming_muxer_time_order_and_stream_stability() {
+    use thapi::analysis::MessageSource;
+    prop::check(60, 0x5eed, |rng| {
+        let parsed = synthetic_parsed(rng);
+        let total: usize = parsed.streams.iter().map(|s| s.len()).sum();
+
+        // reference: stable global order per the muxer contract
+        let mut expected: Vec<(u64, u32, u32)> = parsed
+            .streams
+            .iter()
+            .flat_map(|s| s.iter().map(|m| (m.ts, m.rank, m.tid)))
+            .collect();
+        expected.sort_by_key(|&(ts, stream, idx)| (ts, stream, idx));
+
+        let merged: Vec<(u64, u32, u32)> =
+            MessageSource::new(&parsed).map(|m| (m.ts, m.rank, m.tid)).collect();
+        assert_eq!(merged.len(), total);
+        assert_eq!(merged, expected, "lazy merge must be the stable (ts, stream) order");
+
+        // global time order + per-stream stability, stated directly
+        for w in merged.windows(2) {
+            assert!(w[0].0 <= w[1].0, "time order violated: {w:?}");
+            if w[0].0 == w[1].0 {
+                assert!(
+                    (w[0].1, w[0].2) < (w[1].1, w[1].2),
+                    "tie must break by (stream, index): {w:?}"
+                );
+            }
+        }
+
+        // the eager shim is the same sequence, element for element
+        let eager = thapi::analysis::mux(&parsed);
+        assert_eq!(eager.len(), total);
+        for (lazy, owned) in MessageSource::new(&parsed).zip(eager.iter()) {
+            assert_eq!((lazy.ts, lazy.rank, lazy.tid), (owned.ts, owned.rank, owned.tid));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Encoder/decoder
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,144 @@
+//! Golden equivalence tests for the streaming analysis graph.
+//!
+//! The seed implementation materialized everything: `mux` cloned every
+//! decoded event into one `Vec<EventMsg>`, `pair_intervals` built a
+//! second vector, and every plugin re-scanned those slices. The
+//! streaming graph (lazy `MessageSource` → incremental `IntervalTracker`
+//! → `AnalysisSink` fan-out) must produce **byte-identical** output for
+//! tally, timeline, pretty and validate from a single pass — these tests
+//! pin that equivalence on real traced workloads.
+
+use std::sync::{Mutex, MutexGuard};
+use thapi::analysis::{
+    self, AnalysisSink, PrettySink, TallySink, TimelineSink, ValidateSink,
+};
+use thapi::apps::{hecbench, spechpc};
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::tracer::TracingMode;
+
+/// Global-session tests cannot overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn app(name: &str) -> std::sync::Arc<dyn thapi::apps::Workload> {
+    hecbench::suite()
+        .into_iter()
+        .chain(spechpc::suite())
+        .find(|a| a.name() == name)
+        .unwrap_or_else(|| panic!("app {name}"))
+}
+
+/// Trace one workload and return the parsed trace.
+fn traced_on(name: &str, cfg: NodeConfig) -> analysis::ParsedTrace {
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(cfg);
+    let r = run(
+        &node,
+        app(name).as_ref(),
+        &IprofConfig::paper_config(TracingMode::Default, false),
+    );
+    analysis::parse_trace(r.trace.as_ref().unwrap()).unwrap()
+}
+
+fn traced(name: &str) -> analysis::ParsedTrace {
+    traced_on(name, NodeConfig::test_small())
+}
+
+/// The seed's two-pass materialized outputs: (tally, timeline, pretty,
+/// validate) rendered text.
+fn two_pass(parsed: &analysis::ParsedTrace) -> (String, String, String, String) {
+    let msgs = analysis::mux(parsed);
+    let intervals = analysis::pair_intervals(&msgs);
+    (
+        analysis::Tally::build(&intervals, &msgs).render(),
+        analysis::timeline_json(&intervals, &msgs),
+        analysis::pretty_print(&msgs),
+        analysis::validate::render_report(&analysis::validate(&msgs)),
+    )
+}
+
+/// The streaming single-pass outputs in the same order.
+fn single_pass(parsed: &analysis::ParsedTrace) -> (String, String, String, String) {
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![
+        Box::new(TallySink::new()),
+        Box::new(TimelineSink::new()),
+        Box::new(PrettySink::new()),
+        Box::new(ValidateSink::new()),
+    ];
+    let reports = analysis::run_pipeline(parsed, &mut sinks);
+    let mut texts: Vec<String> =
+        reports.iter().map(|r| r.payload().unwrap_or("").to_string()).collect();
+    let validate = texts.pop().unwrap();
+    let pretty = texts.pop().unwrap();
+    let timeline = texts.pop().unwrap();
+    let tally = texts.pop().unwrap();
+    (tally, timeline, pretty, validate)
+}
+
+#[test]
+fn streaming_graph_is_byte_identical_on_hiplz_app() {
+    let _g = lock();
+    // lrn-hip layers HIP on ZE: nested intervals, device rows, kernels
+    let parsed = traced("lrn-hip");
+    assert!(parsed.event_count() > 100);
+    let (t2, j2, p2, v2) = two_pass(&parsed);
+    let (t1, j1, p1, v1) = single_pass(&parsed);
+    assert_eq!(t1, t2, "tally must match byte-for-byte");
+    assert_eq!(j1, j2, "timeline must match byte-for-byte");
+    assert_eq!(p1, p2, "pretty print must match byte-for-byte");
+    assert_eq!(v1, v2, "validation report must match byte-for-byte");
+}
+
+#[test]
+fn streaming_graph_is_byte_identical_on_mpi_offload_app() {
+    let _g = lock();
+    // multi-rank MPI + OpenMP offload on a multi-GPU node: many streams
+    // through the muxer
+    let parsed = traced_on("513.soma", NodeConfig::polaris());
+    assert!(parsed.streams.len() > 1, "need a multi-stream trace");
+    let (t2, j2, p2, v2) = two_pass(&parsed);
+    let (t1, j1, p1, v1) = single_pass(&parsed);
+    assert_eq!(t1, t2);
+    assert_eq!(j1, j2);
+    assert_eq!(p1, p2);
+    assert_eq!(v1, v2);
+}
+
+#[test]
+fn one_pass_drives_multiple_sinks_like_iprof_a_tally_timeline() {
+    let _g = lock();
+    // the `iprof -a tally,timeline` shape: two sinks, one pass, both
+    // outputs equal to their dedicated-run counterparts
+    let parsed = traced("saxpy-ze");
+    let mut both: Vec<Box<dyn AnalysisSink>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let reports = analysis::run_pipeline(&parsed, &mut both);
+    assert_eq!(reports.len(), 2);
+
+    let mut only_tally: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let mut only_timeline: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TimelineSink::new())];
+    let rt = analysis::run_pipeline(&parsed, &mut only_tally);
+    let rj = analysis::run_pipeline(&parsed, &mut only_timeline);
+    assert_eq!(reports[0].payload(), rt[0].payload());
+    assert_eq!(reports[1].payload(), rj[0].payload());
+    assert!(reports[0].payload().unwrap().contains("Time(%)"));
+    assert!(reports[1].payload().unwrap().contains("traceEvents"));
+}
+
+#[test]
+fn streaming_tally_matches_runreport_tally() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let r = run(&node, app("saxpy-ze").as_ref(), &IprofConfig::default());
+    let tally = r.tally().unwrap();
+    let parsed = analysis::parse_trace(r.trace.as_ref().unwrap()).unwrap();
+    let msgs = analysis::mux(&parsed);
+    let two_pass = analysis::Tally::build(&analysis::pair_intervals(&msgs), &msgs);
+    assert_eq!(tally.host, two_pass.host);
+    assert_eq!(tally.device, two_pass.device);
+    assert_eq!(tally.render(), two_pass.render());
+}
