@@ -12,6 +12,7 @@ use thapi::apps::spechpc;
 use thapi::bench_support::{alloc_track, mean_of, Table};
 use thapi::coordinator::{run, IprofConfig};
 use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, LiveHub, LiveSource};
 use thapi::tracer::TracingMode;
 
 // Exact heap accounting for the streaming-vs-materialized comparison.
@@ -91,12 +92,14 @@ fn main() {
     println!("paper reference: default < 20% and minimal < 17% of full-mode space.");
 
     analysis_phase_memory(&node);
+    live_analysis_memory(&node);
 }
 
 /// Analysis-phase cost: the seed's materialized two-pass path
 /// (`mux` clone-all + `pair_intervals` + per-sink rescans) vs the
 /// streaming single-pass graph driving tally+timeline+validate at once.
 /// Tracks wall clock and peak live heap over the same T-full trace.
+#[allow(deprecated)] // the materialized baseline IS the deprecated shim path
 fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
     let apps = spechpc::suite();
     let app = &apps[0];
@@ -157,4 +160,92 @@ fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
         "streaming peak is {:.1}% of materialized peak",
         stream_peak as f64 * 100.0 / (mat_peak as f64).max(1.0)
     );
+}
+
+/// Live vs post-mortem analysis: peak heap and event staleness.
+///
+/// Post-mortem must hold the decoded trace (`parse_trace` + merge state)
+/// before the first sink sees a message; live analysis streams the same
+/// records through bounded channels, so its peak is O(streams × channel
+/// depth) — independent of trace length. Both paths run the tally sink
+/// over the SAME recorded trace (live via `replay_trace`, which feeds
+/// the channels losslessly with beacons, exactly like the consumer
+/// thread does on-line), so outputs are byte-identical and the memory
+/// difference is purely architectural. Two channel depths show the live
+/// peak tracking depth, not trace size.
+fn live_analysis_memory(node: &std::sync::Arc<thapi::device::Node>) {
+    let apps = spechpc::suite();
+    let app = &apps[0];
+    let r = run(node, app.as_ref(), &IprofConfig::paper_config(TracingMode::Full, false));
+    let trace = r.trace.as_ref().unwrap();
+    let events = trace.record_count();
+
+    // post-mortem: decode-everything-then-analyze (parse included in the
+    // measured region — live mode never pays it at all)
+    let live0 = alloc_track::live_bytes();
+    alloc_track::reset_peak();
+    let t0 = Instant::now();
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut sinks);
+    let pm_wall = t0.elapsed();
+    let pm_peak = alloc_track::peak_bytes().saturating_sub(live0);
+    let pm_text = pm_reports[0].payload().unwrap().to_string();
+    drop((parsed, pm_reports, sinks));
+
+    let mut t = Table::new(&["pipeline", "wall ms", "peak heap", "staleness mean/max"]);
+    t.row(&[
+        "post-mortem (parse + 1 pass)".into(),
+        format!("{:.2}", pm_wall.as_secs_f64() * 1e3),
+        human(pm_peak as u64),
+        "whole run (analysis starts at exit)".into(),
+    ]);
+
+    let mut live_peaks = Vec::new();
+    for depth in [256usize, 4096] {
+        let live0 = alloc_track::live_bytes();
+        alloc_track::reset_peak();
+        let t0 = Instant::now();
+        let hub = LiveHub::new(&node.config.hostname, depth, false);
+        let source = LiveSource::new(hub.clone());
+        let out = std::thread::scope(|s| {
+            let feeder = s.spawn(|| replay_trace(&hub, trace, 64));
+            let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+            let out = thapi::live::run_live_pipeline(source, &mut sinks, None, |_| {});
+            feeder.join().unwrap();
+            out
+        });
+        let live_wall = t0.elapsed();
+        let live_peak = alloc_track::peak_bytes().saturating_sub(live0);
+        live_peaks.push(live_peak);
+        assert_eq!(hub.stats().dropped, 0, "replay is lossless");
+        assert_eq!(
+            out.reports[0].payload().unwrap(),
+            pm_text,
+            "live output must be byte-identical to post-mortem"
+        );
+        t.row(&[
+            format!("live (bounded channels, depth {depth})"),
+            format!("{:.2}", live_wall.as_secs_f64() * 1e3),
+            human(live_peak as u64),
+            format!(
+                "{:.2}ms / {:.2}ms",
+                out.latency.mean().as_secs_f64() * 1e3,
+                out.latency.max.as_secs_f64() * 1e3
+            ),
+        ]);
+    }
+
+    println!(
+        "\n=== live vs post-mortem analysis ({}: {} events, T-full) ===\n",
+        app.name(),
+        events
+    );
+    println!("{}", t.render());
+    println!(
+        "live peak is {:.1}% (depth 256) / {:.1}% (depth 4096) of the post-mortem peak;",
+        live_peaks[0] as f64 * 100.0 / (pm_peak as f64).max(1.0),
+        live_peaks[1] as f64 * 100.0 / (pm_peak as f64).max(1.0),
+    );
+    println!("live analysis memory is bounded by channel depth, not by trace size.");
 }

@@ -1,0 +1,62 @@
+//! Live tally (experiment E-live): analyze a workload ON-LINE.
+//!
+//! `iprof --live -a tally --refresh 100` in library form: the session's
+//! consumer thread decodes ring records as it drains them and feeds the
+//! tally sink through bounded, beacon-watermarked channels — interim
+//! tables print while the workload is still executing, and no trace is
+//! ever materialized (analysis memory is O(streams × channel depth)).
+//!
+//! ```sh
+//! cargo run --release --example live_tally
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+use thapi::analysis::{AnalysisSink, TallySink};
+use thapi::coordinator::{run_live, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::LiveConfig;
+
+fn main() {
+    std::env::set_var("THAPI_APP_SCALE", "0.6");
+    let node = Node::new(NodeConfig::test_small());
+    let apps = thapi::apps::hecbench::suite();
+    let app = apps.iter().find(|a| a.name() == "jacobi2D-ze").unwrap();
+
+    println!("== live-tracing {} (tally runs while the app executes) ==\n", app.name());
+    let live_cfg = LiveConfig {
+        channel_depth: 1024,
+        retain: false,
+        refresh: Some(Duration::from_millis(100)),
+    };
+    let sinks: Vec<Box<dyn AnalysisSink + Send>> = vec![Box::new(TallySink::new())];
+    let refreshes = AtomicUsize::new(0);
+    let report = run_live(&node, app.as_ref(), &IprofConfig::default(), &live_cfg, sinks, |text| {
+        let n = refreshes.fetch_add(1, Ordering::Relaxed) + 1;
+        println!("-- interim tally #{n} (application still running) --");
+        // print the header + top three rows, like a `top` for APIs
+        for line in text.lines().take(5) {
+            println!("{line}");
+        }
+        println!();
+    });
+
+    println!("== final tally (same bytes a post-mortem run would print) ==\n");
+    println!("{}", report.reports[0].payload().unwrap());
+    println!(
+        "wall {:.3}s | {} events written, {} merged on-line, {} dropped | \
+         {} beacons | staleness mean {:.2}ms max {:.2}ms | interim reports: {}",
+        report.wall.as_secs_f64(),
+        report.stats.written,
+        report.latency.merged,
+        report.total_dropped(),
+        report.live.beacons,
+        report.latency.mean().as_secs_f64() * 1e3,
+        report.latency.max.as_secs_f64() * 1e3,
+        refreshes.load(Ordering::Relaxed),
+    );
+    println!(
+        "analysis-side memory: {} channels x {} messages (bounded) — no TraceData, no ParsedTrace",
+        report.live.channels, live_cfg.channel_depth
+    );
+}

@@ -85,6 +85,7 @@ impl<'a> Graph<'a> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -172,6 +172,10 @@ fn collect_spans<'m>(msgs: impl IntoIterator<Item = &'m EventMsg>) -> Vec<Interv
 /// `exit: None` and `end` = last seen timestamp.
 ///
 /// Compatibility shim over [`IntervalTracker`].
+#[deprecated(
+    note = "feed an IntervalTracker from the streaming pass (run_pipeline) or use intervals_of \
+            instead of materializing a span vector from an owned event vector"
+)]
 pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
     collect_spans(msgs)
 }
@@ -184,6 +188,7 @@ pub fn intervals_of(parsed: &ParsedTrace) -> Vec<Interval> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the eager shims are under test here
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -28,9 +28,14 @@
 //!
 //! The eager helpers ([`mux`], [`pair_intervals`], [`pretty_print`],
 //! [`timeline_json`], [`validate()`](validate::validate)) remain as thin
-//! compatibility shims over the streaming machinery for call sites that
-//! want materialized values. See `rust/ARCHITECTURE.md` for how to write
-//! a new sink.
+//! compatibility shims over the streaming machinery; `mux` and
+//! `pair_intervals` are **deprecated** (one golden shim-vs-stream
+//! equivalence test in `rust/tests/streaming.rs` keeps them honest).
+//! The same graph also runs **on-line** while the application executes:
+//! [`crate::live`] feeds the [`PipelineDriver`] core from the tracing
+//! consumer thread through bounded watermarked channels. See
+//! `rust/ARCHITECTURE.md` for how to write a new sink and for the live
+//! mode design.
 
 pub mod graph;
 pub mod interval;
@@ -43,11 +48,15 @@ pub mod timeline;
 pub mod validate;
 
 pub use graph::Graph;
-pub use interval::{intervals_of, pair_intervals, Interval, IntervalTracker};
+pub use interval::{intervals_of, Interval, IntervalTracker};
+#[allow(deprecated)]
+pub use interval::pair_intervals;
 pub use msg::{parse_trace, EventMsg, ParsedTrace};
-pub use muxer::{mux, MessageSource};
+pub use muxer::MessageSource;
+#[allow(deprecated)]
+pub use muxer::mux;
 pub use pretty::{pretty_print, PrettySink};
-pub use sink::{run_pipeline, AnalysisSink, Report};
+pub use sink::{run_pipeline, AnalysisSink, PipelineDriver, Report};
 pub use tally::{Tally, TallyRow, TallySink};
 pub use timeline::{timeline_json, TimelineSink};
 pub use validate::{validate, Finding, Severity, ValidateSink, Validator};

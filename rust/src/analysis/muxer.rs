@@ -97,11 +97,16 @@ impl<'a> ExactSizeIterator for MessageSource<'a> {}
 /// Compatibility shim: materializes the [`MessageSource`] into an owned
 /// vector (one clone per event). Prefer iterating [`MessageSource`] or
 /// running [`super::sink::run_pipeline`] for single-pass analysis.
+#[deprecated(
+    note = "iterate the zero-copy MessageSource (or run_pipeline) instead of materializing \
+            an owned event vector"
+)]
 pub fn mux(trace: &ParsedTrace) -> Vec<EventMsg> {
     MessageSource::new(trace).cloned().collect()
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the eager `mux` shim is under test here
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -72,6 +72,7 @@ impl AnalysisSink for PrettySink {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -59,8 +59,68 @@ pub trait AnalysisSink {
     /// dangling spans arrive during the end-of-stream flush).
     fn consume_interval(&mut self, _iv: &Interval) {}
 
+    /// Mid-stream snapshot for live mode's periodic refresh
+    /// (`iprof --live --refresh <ms>`). A sink opts in by returning an
+    /// interim [`Report`] built from its current state; the default
+    /// `None` means "not refreshable" and live mode skips it. Must not
+    /// disturb the state `finish` will render.
+    fn refresh(&mut self) -> Option<Report> {
+        None
+    }
+
     /// End of stream: render the result.
     fn finish(&mut self) -> Report;
+}
+
+/// The shared pipeline core: interval filter + sink fan-out, one message
+/// at a time.
+///
+/// [`run_pipeline`] drives it from a lazy post-mortem [`MessageSource`];
+/// [`crate::live::run_live_pipeline`] drives it from a blocking
+/// [`crate::live::LiveSource`] while the application is still running.
+/// Both deliver every message to [`AnalysisSink::consume_event`], pair
+/// entries/exits through one [`IntervalTracker`], and fan completed
+/// spans out to [`AnalysisSink::consume_interval`].
+#[derive(Default)]
+pub struct PipelineDriver {
+    tracker: IntervalTracker,
+}
+
+impl PipelineDriver {
+    /// Fresh driver (empty interval filter).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deliver one time-ordered message to every sink (and any host span
+    /// it completes).
+    pub fn feed<S>(&mut self, m: &EventMsg, sinks: &mut [Box<S>])
+    where
+        S: AnalysisSink + ?Sized,
+    {
+        for s in sinks.iter_mut() {
+            s.consume_event(m);
+        }
+        self.tracker.push(m, |iv| {
+            for s in sinks.iter_mut() {
+                s.consume_interval(&iv);
+            }
+        });
+    }
+
+    /// End of stream: flush dangling spans and render every sink's
+    /// [`Report`], in sink order.
+    pub fn finish<S>(&mut self, sinks: &mut [Box<S>]) -> Vec<Report>
+    where
+        S: AnalysisSink + ?Sized,
+    {
+        self.tracker.finish(|iv| {
+            for s in sinks.iter_mut() {
+                s.consume_interval(&iv);
+            }
+        });
+        sinks.iter_mut().map(|s| s.finish()).collect()
+    }
 }
 
 /// Drive every sink from one lazy pass over `parsed`.
@@ -68,24 +128,15 @@ pub trait AnalysisSink {
 /// Returns one [`Report`] per sink, in sink order. The pass allocates no
 /// per-event copies: messages are borrowed from the parsed streams and
 /// spans are built incrementally by the interval filter.
-pub fn run_pipeline(parsed: &ParsedTrace, sinks: &mut [Box<dyn AnalysisSink + '_>]) -> Vec<Report> {
-    let mut tracker = IntervalTracker::new();
+pub fn run_pipeline<S>(parsed: &ParsedTrace, sinks: &mut [Box<S>]) -> Vec<Report>
+where
+    S: AnalysisSink + ?Sized,
+{
+    let mut driver = PipelineDriver::new();
     for m in MessageSource::new(parsed) {
-        for s in sinks.iter_mut() {
-            s.consume_event(m);
-        }
-        tracker.push(m, |iv| {
-            for s in sinks.iter_mut() {
-                s.consume_interval(&iv);
-            }
-        });
+        driver.feed(m, sinks);
     }
-    tracker.finish(|iv| {
-        for s in sinks.iter_mut() {
-            s.consume_interval(&iv);
-        }
-    });
-    sinks.iter_mut().map(|s| s.finish()).collect()
+    driver.finish(sinks)
 }
 
 #[cfg(test)]

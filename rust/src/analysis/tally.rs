@@ -370,6 +370,13 @@ impl AnalysisSink for TallySink {
         self.tally.add_interval(iv);
     }
 
+    /// Live-mode refresh: render the tally accumulated *so far*. Rows
+    /// are aggregates, so a snapshot is cheap and leaves the final
+    /// `finish` state untouched.
+    fn refresh(&mut self) -> Option<Report> {
+        Some(Report::Text(self.tally.render()))
+    }
+
     fn finish(&mut self) -> Report {
         Report::Text(self.tally.render())
     }
@@ -391,6 +398,7 @@ pub fn fmt_ns(ns: u64) -> String {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // two-pass shim comparisons are under test here
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -160,6 +160,7 @@ impl AnalysisSink for TimelineSink {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -249,6 +249,7 @@ impl AnalysisSink for ValidateSink {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;

@@ -257,8 +257,9 @@ mod tests {
         let session = crate::tracer::uninstall_session().unwrap();
         let trace = crate::tracer::btf::collect(&session, &[]);
         let parsed = crate::analysis::parse_trace(&trace).unwrap();
-        let msgs = crate::analysis::mux(&parsed);
-        let has = |p: &str| msgs.iter().any(|m| m.class.name.starts_with(p));
+        let has = |p: &str| {
+            crate::analysis::MessageSource::new(&parsed).any(|m| m.class.name.starts_with(p))
+        };
         assert!(has("lttng_ust_mpi"), "MPI events missing");
         assert!(has("lttng_ust_omp"), "OMP events missing");
         assert!(has("lttng_ust_ze"), "layered ZE events missing");

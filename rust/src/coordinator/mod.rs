@@ -13,6 +13,7 @@ use crate::analysis::{self, AnalysisSink, Report as AnalysisReport, Tally};
 use anyhow::Result;
 use crate::apps::Workload;
 use crate::device::Node;
+use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats};
 use crate::sampling::{Sampler, SamplingConfig};
 use crate::tracer::btf::{self, TraceData};
 use crate::tracer::{
@@ -181,6 +182,121 @@ pub fn run(node: &Arc<Node>, workload: &dyn Workload, config: &IprofConfig) -> R
     }
 }
 
+/// Result of one live `iprof --live` run: the usual run report fields
+/// plus the live-transport statistics and the on-line analysis output.
+#[derive(Debug)]
+pub struct LiveRunReport {
+    /// Workload name.
+    pub app: String,
+    /// Configuration label.
+    pub config: String,
+    /// Application wall time.
+    pub wall: Duration,
+    /// Tracer statistics (ring-level written/dropped).
+    pub stats: SessionStats,
+    /// The collected trace — only with [`LiveConfig::retain`] (used by
+    /// the live-vs-post-mortem equivalence tests), `None` in production
+    /// live mode where nothing trace-sized is ever materialized.
+    pub trace: Option<TraceData>,
+    /// Channel-level statistics: received/dropped/beacons.
+    pub live: LiveStats,
+    /// One final report per sink, in sink order — same contract as
+    /// [`RunReport::analyze`], produced on-line.
+    pub reports: Vec<AnalysisReport>,
+    /// Merge latency: how stale each message was when analyzed.
+    pub latency: LatencySummary,
+}
+
+impl LiveRunReport {
+    /// Total events lost to backpressure anywhere on the live path
+    /// (ring discard + channel drop). Zero means the on-line reports
+    /// cover exactly what a post-mortem run would have seen.
+    pub fn total_dropped(&self) -> u64 {
+        self.stats.dropped + self.live.dropped
+    }
+}
+
+/// Run `workload` under `config` with **on-line analysis**: the session's
+/// consumer thread decodes records as it drains them and feeds `sinks`
+/// through the live hub while the workload executes
+/// (ROADMAP: "`run_pipeline` feeds from the session's consumer thread
+/// instead of a collected trace").
+///
+/// The analysis runs on its own thread off a [`LiveSource`] merge;
+/// `on_refresh` receives interim snapshots from sinks that implement
+/// [`AnalysisSink::refresh`], every `live.refresh` period. The traced
+/// application is never blocked by analysis: full channels drop and
+/// count (see [`LiveRunReport::total_dropped`]).
+pub fn run_live(
+    node: &Arc<Node>,
+    workload: &dyn Workload,
+    config: &IprofConfig,
+    live_cfg: &LiveConfig,
+    mut sinks: Vec<Box<dyn AnalysisSink + Send>>,
+    on_refresh: impl FnMut(&str) + Send,
+) -> LiveRunReport {
+    assert!(config.tracing, "live mode requires tracing");
+    let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    let session = install_session(SessionConfig {
+        mode: config.mode,
+        buffer_capacity: config.buffer_capacity,
+        sink: SinkKind::Live(hub.clone()),
+        selected_ranks: config.selected_ranks.clone(),
+        hostname: node.config.hostname.clone(),
+        consumer_interval: Duration::from_millis(2),
+    });
+    for p in &config.disabled_patterns {
+        session.disable_matching(p);
+    }
+    let sampler = config
+        .sampling
+        .clone()
+        .map(|s| Sampler::start(node.clone(), s));
+
+    let source = LiveSource::new(hub.clone());
+    let refresh = live_cfg.refresh;
+    let (pipe, wall) = std::thread::scope(|scope| {
+        let analysis = scope.spawn(move || {
+            live::run_live_pipeline(source, &mut sinks, refresh, on_refresh)
+        });
+        let t0 = Instant::now();
+        // A panicking workload must still tear the session down (final
+        // drain + hub close), or the analysis thread would wait forever
+        // and the scope would hang instead of propagating the panic.
+        let run_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            workload.run(node);
+            node.synchronize();
+        }));
+        let wall = t0.elapsed();
+        if let Some(s) = sampler {
+            s.stop();
+        }
+        // Stops the consumer: final drain, then hub close — which is what
+        // terminates the analysis thread's merge.
+        uninstall_session().expect("session vanished");
+        let pipe = analysis.join().expect("live analysis thread panicked");
+        if let Err(p) = run_result {
+            std::panic::resume_unwind(p);
+        }
+        (pipe, wall)
+    });
+
+    let stats = session.stats();
+    let trace = live_cfg.retain.then(|| {
+        btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
+    });
+    LiveRunReport {
+        app: workload.name().to_string(),
+        config: config.label(),
+        wall,
+        stats,
+        trace,
+        live: hub.stats(),
+        reports: pipe.reports,
+        latency: pipe.latency,
+    }
+}
+
 /// Run baseline + each config, with one warmup baseline run first (primes
 /// PJRT compile caches so module-create cost doesn't skew a single cell).
 /// Returns reports in the same order as `configs`, prefixed by baseline.
@@ -257,6 +373,33 @@ mod tests {
         // baseline has no trace -> None
         let base = run(&node, app.as_ref(), &IprofConfig::baseline());
         assert!(base.analyze(&mut sinks).is_none());
+    }
+
+    #[test]
+    fn live_run_reports_match_postmortem_over_identical_trace() {
+        let _g = test_support::lock();
+        std::env::set_var("THAPI_APP_SCALE", "0.1");
+        let node = Node::new(NodeConfig::test_small());
+        let apps = hecbench::suite();
+        let app = apps.iter().find(|a| a.name() == "saxpy-ze").unwrap();
+        // deep channels (no drops) + retain so the same run feeds both paths
+        let live_cfg = LiveConfig { channel_depth: 1 << 16, retain: true, refresh: None };
+        let sinks: Vec<Box<dyn AnalysisSink + Send>> =
+            vec![Box::new(crate::analysis::TallySink::new())];
+        let r = run_live(&node, app.as_ref(), &IprofConfig::default(), &live_cfg, sinks, |_| {});
+        assert_eq!(r.live.dropped, 0, "deep channels must not drop");
+        assert!(r.live.received > 50, "live path received {}", r.live.received);
+        assert_eq!(r.reports.len(), 1);
+
+        let parsed = analysis::parse_trace(r.trace.as_ref().unwrap()).unwrap();
+        let mut pm: Vec<Box<dyn AnalysisSink>> =
+            vec![Box::new(crate::analysis::TallySink::new())];
+        let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+        assert_eq!(
+            r.reports[0].payload(),
+            pm_reports[0].payload(),
+            "on-line tally must be byte-identical to post-mortem"
+        );
     }
 
     #[test]

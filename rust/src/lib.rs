@@ -23,6 +23,11 @@
 //!   incremental interval pairing, single-pass sink fan-out) behind the
 //!   generated plugins (pretty print, tally, timeline, validation). See
 //!   `rust/ARCHITECTURE.md`.
+//! * [`live`] — on-line analysis: the consumer thread decodes records as
+//!   it drains them and feeds the same sink graph through bounded,
+//!   watermarked per-stream channels (beacons for quiet streams), so
+//!   every analysis runs while the application executes with
+//!   O(streams × channel-depth) memory (`iprof --live`).
 //! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
 //! * [`aggregate`] — on-node aggregation and the local-/global-master
 //!   composite-profile merge (paper §3.7).
@@ -43,6 +48,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod device;
 pub mod intercept;
+pub mod live;
 pub mod model;
 pub mod runtime;
 pub mod sampling;

@@ -1,0 +1,330 @@
+//! The live hub: bounded per-stream message channels with watermarks.
+//!
+//! One [`LiveHub`] sits between the tracing consumer thread and the live
+//! analysis pipeline (the lttng-live relay analogue). Each traced stream
+//! gets one bounded FIFO channel; the consumer decodes ring records as it
+//! drains them and *try-pushes* the resulting [`EventMsg`]s — if a channel
+//! is full the message is **dropped and counted**, never blocking the
+//! consumer and therefore never back-pressuring the traced application
+//! (paper §3.1 invariant, extended end to end).
+//!
+//! Each channel also carries a **watermark**: a timestamp lower bound for
+//! every message the channel will deliver in the future. Watermarks
+//! advance implicitly with every pushed event (per-stream timestamps are
+//! non-decreasing) and explicitly through **beacons** — the LTTng-live
+//! trick for quiet streams: the consumer periodically publishes "this
+//! stream is quiet up to T" so the k-way merge can advance global time
+//! without waiting on a stream that may never speak again.
+//!
+//! The hub is deliberately a single `Mutex<HubState>` + `Condvar`: the
+//! consumer pushes whole drain batches under one short lock, the merge
+//! ([`super::source::LiveSource`]) scans channel heads under the same
+//! lock, and blocked producers/consumers park on the shared condvar.
+
+use crate::analysis::msg::EventMsg;
+use crate::tracer::btf::{registry_classes, DecodedClass};
+use crate::tracer::encoder::decode_payload;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One entry in a channel queue: arrival sequence (merge tie-break),
+/// the decoded message, and the push instant (latency accounting).
+pub(super) struct Entry {
+    pub(super) seq: u64,
+    pub(super) msg: EventMsg,
+    pub(super) pushed: Instant,
+}
+
+/// Per-stream channel state.
+pub(super) struct Channel {
+    pub(super) queue: VecDeque<Entry>,
+    /// Arrival counter (monotone per channel).
+    next_seq: u64,
+    /// Lower bound on the timestamp of every future message.
+    pub(super) watermark: u64,
+    /// No further messages will ever arrive.
+    pub(super) closed: bool,
+    /// Messages accepted.
+    received: u64,
+    /// Messages dropped because the queue was full.
+    dropped: u64,
+    /// Beacons observed.
+    beacons: u64,
+}
+
+impl Channel {
+    fn new() -> Self {
+        Channel {
+            queue: VecDeque::new(),
+            next_seq: 0,
+            watermark: 0,
+            closed: false,
+            received: 0,
+            dropped: 0,
+            beacons: 0,
+        }
+    }
+}
+
+pub(super) struct HubState {
+    pub(super) channels: Vec<Channel>,
+    /// Set by [`LiveHub::close_all`]: no new channels will appear.
+    pub(super) sealed: bool,
+}
+
+/// Aggregate live-transport statistics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LiveStats {
+    /// Channels (one per traced stream).
+    pub channels: usize,
+    /// Messages accepted into channels.
+    pub received: u64,
+    /// Messages dropped at full channels (backpressure policy).
+    pub dropped: u64,
+    /// Beacons published.
+    pub beacons: u64,
+}
+
+/// The live transport hub (see module docs).
+pub struct LiveHub {
+    pub(super) inner: Mutex<HubState>,
+    pub(super) progress: Condvar,
+    /// Per-channel queue bound, in messages.
+    depth: usize,
+    /// Also retain raw drained bytes in the session streams (memory-sink
+    /// behaviour), so the same run can be re-analyzed post-mortem.
+    retain: bool,
+    /// Decoded-class table (registry metadata roundtrip) for on-line decode.
+    classes: HashMap<u32, Arc<DecodedClass>>,
+    /// Hostname stamped on decoded messages.
+    hostname: Arc<str>,
+}
+
+impl std::fmt::Debug for LiveHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LiveHub")
+            .field("depth", &self.depth)
+            .field("retain", &self.retain)
+            .field("hostname", &self.hostname)
+            .finish_non_exhaustive()
+    }
+}
+
+impl LiveHub {
+    /// Create a hub for a session on `hostname` with the given per-stream
+    /// channel `depth`. With `retain`, the consumer keeps the raw drained
+    /// bytes as well (like the memory sink), so the identical run can also
+    /// be analyzed post-mortem — used by the equivalence tests; production
+    /// live mode runs with `retain = false` and O(streams × depth) memory.
+    pub fn new(hostname: &str, depth: usize, retain: bool) -> Arc<LiveHub> {
+        Arc::new(LiveHub {
+            inner: Mutex::new(HubState { channels: Vec::new(), sealed: false }),
+            progress: Condvar::new(),
+            depth: depth.max(1),
+            retain,
+            classes: registry_classes(),
+            hostname: Arc::from(hostname),
+        })
+    }
+
+    /// Per-stream channel bound, in messages.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Whether raw drained bytes are also retained for post-mortem use.
+    pub fn retain(&self) -> bool {
+        self.retain
+    }
+
+    /// Decode one raw ring record into a message, using the hub's
+    /// registry-derived class table (`None` for unknown class ids, same
+    /// policy as `parse_trace`).
+    pub fn decode(&self, rank: u32, tid: u32, id: u32, ts: u64, payload: &[u8]) -> Option<EventMsg> {
+        let class = self.classes.get(&id)?;
+        Some(EventMsg {
+            ts,
+            rank,
+            tid,
+            hostname: self.hostname.clone(),
+            class: class.clone(),
+            fields: decode_payload(&class.fields, payload),
+        })
+    }
+
+    /// Make sure channels `0..n` exist. Channel index i is the session's
+    /// stream index i (registration order), which is also the stream's
+    /// index in a post-mortem `collect` — the merge tie-break relies on
+    /// this equality for byte-identical ordering.
+    pub fn ensure_channels(&self, n: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if st.channels.len() < n {
+            while st.channels.len() < n {
+                st.channels.push(Channel::new());
+            }
+            self.progress.notify_all();
+        }
+    }
+
+    /// Try-push a batch of decoded messages onto channel `idx`, in order.
+    /// Messages beyond the queue bound are dropped and counted — this
+    /// call NEVER blocks (the consumer thread must stay realtime).
+    /// Returns the number of messages dropped.
+    pub fn push_batch(&self, idx: usize, batch: Vec<EventMsg>) -> u64 {
+        if batch.is_empty() {
+            return 0;
+        }
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let depth = self.depth;
+        let ch = &mut st.channels[idx];
+        let mut dropped = 0;
+        let now = Instant::now();
+        for msg in batch {
+            // the watermark advances with every delivered event: per-stream
+            // timestamps are non-decreasing, so nothing later can undercut it
+            ch.watermark = ch.watermark.max(msg.ts);
+            if ch.queue.len() >= depth {
+                dropped += 1;
+                continue;
+            }
+            let seq = ch.next_seq;
+            ch.next_seq += 1;
+            ch.received += 1;
+            ch.queue.push_back(Entry { seq, msg, pushed: now });
+        }
+        ch.dropped += dropped;
+        self.progress.notify_all();
+        dropped
+    }
+
+    /// Blocking push used by trace **replay** (benches / golden tests):
+    /// waits for queue space instead of dropping, so a replay through
+    /// bounded channels is lossless. The tracing consumer must never use
+    /// this — it uses [`LiveHub::push_batch`].
+    pub fn feed_blocking(&self, idx: usize, batch: Vec<EventMsg>) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        for msg in batch {
+            while st.channels[idx].queue.len() >= self.depth {
+                st = self.progress.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            let ch = &mut st.channels[idx];
+            ch.watermark = ch.watermark.max(msg.ts);
+            let seq = ch.next_seq;
+            ch.next_seq += 1;
+            ch.received += 1;
+            // stamp AFTER any wait: residence latency must not include
+            // the producer's own blocked time
+            ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+            self.progress.notify_all();
+        }
+    }
+
+    /// Publish a beacon on channel `idx`: every future message on this
+    /// channel will have `ts >= watermark`. Watermarks only move forward.
+    pub fn beacon(&self, idx: usize, watermark: u64) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let ch = &mut st.channels[idx];
+        ch.beacons += 1;
+        if watermark > ch.watermark {
+            ch.watermark = watermark;
+            self.progress.notify_all();
+        }
+    }
+
+    /// Close channel `idx`: no further messages will arrive (equivalent
+    /// to a watermark of +infinity once its queue drains).
+    pub fn close(&self, idx: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if !st.channels[idx].closed {
+            st.channels[idx].closed = true;
+            self.progress.notify_all();
+        }
+    }
+
+    /// Close every channel and seal the hub (no new channels): the merge
+    /// drains what is queued and then terminates. Called by the consumer
+    /// after its final drain.
+    pub fn close_all(&self) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.sealed = true;
+        for ch in st.channels.iter_mut() {
+            ch.closed = true;
+        }
+        self.progress.notify_all();
+    }
+
+    /// Aggregate transport statistics.
+    pub fn stats(&self) -> LiveStats {
+        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut s = LiveStats { channels: st.channels.len(), ..Default::default() };
+        for ch in &st.channels {
+            s.received += ch.received;
+            s.dropped += ch.dropped;
+            s.beacons += ch.beacons;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracer::btf::DecodedClass;
+
+    fn msg(ts: u64, rank: u32, tid: u32) -> EventMsg {
+        EventMsg {
+            ts,
+            rank,
+            tid,
+            hostname: Arc::from("hubtest"),
+            class: Arc::new(DecodedClass {
+                id: 0,
+                name: "lttng_ust_ze:zeInit_entry".into(),
+                api: "ZE".into(),
+                flags: "h".into(),
+                fields: vec![],
+            }),
+            fields: vec![],
+        }
+    }
+
+    #[test]
+    fn push_batch_drops_and_counts_beyond_depth() {
+        let hub = LiveHub::new("hubtest", 2, false);
+        hub.ensure_channels(1);
+        let dropped = hub.push_batch(0, (0..10).map(|i| msg(i, 0, 0)).collect());
+        assert_eq!(dropped, 8);
+        let s = hub.stats();
+        assert_eq!(s.received, 2);
+        assert_eq!(s.dropped, 8);
+        // the watermark still advanced past the dropped events
+        let st = hub.inner.lock().unwrap();
+        assert_eq!(st.channels[0].watermark, 9);
+    }
+
+    #[test]
+    fn beacons_only_move_watermarks_forward() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        hub.ensure_channels(1);
+        hub.beacon(0, 100);
+        hub.beacon(0, 50); // stale beacon must not rewind
+        let st = hub.inner.lock().unwrap();
+        assert_eq!(st.channels[0].watermark, 100);
+        assert_eq!(st.channels[0].beacons, 2);
+    }
+
+    #[test]
+    fn decode_uses_registry_classes() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let class = crate::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let payload = 7u64.to_le_bytes();
+        let m = hub.decode(3, 9, class.id, 42, &payload).unwrap();
+        assert_eq!(m.ts, 42);
+        assert_eq!(m.rank, 3);
+        assert_eq!(m.tid, 9);
+        assert_eq!(m.class.name, "lttng_ust_ze:zeInit_entry");
+        assert_eq!(m.fields[0].as_u64(), 7);
+        assert!(hub.decode(0, 0, u32::MAX, 0, &[]).is_none(), "unknown id -> None");
+    }
+}

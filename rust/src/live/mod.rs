@@ -1,0 +1,187 @@
+//! Live analysis: on-line sinks fed from the tracing consumer thread.
+//!
+//! The lttng-live / babeltrace2-live analogue. Post-mortem analysis
+//! (paper §3.4) retains the whole trace before looking at it; at scale
+//! that is exactly what doesn't fit. Live mode runs the *same* streaming
+//! analysis graph while the application executes:
+//!
+//! ```text
+//!  traced threads ── SPSC rings ──► consumer thread
+//!                                      │ decode + try-push   (never blocks)
+//!                                      ▼
+//!                  LiveHub: bounded per-stream channels        channel.rs
+//!                  + watermarks advanced by events and BEACONS
+//!                                      │
+//!                                      ▼
+//!                  LiveSource: blocking k-way merge,           source.rs
+//!                  byte-identical order to MessageSource
+//!                                      │
+//!                                      ▼
+//!                  run_live_pipeline: IntervalTracker filter   pipeline.rs
+//!                  + unmodified AnalysisSink fan-out, optional
+//!                  periodic refresh snapshots
+//! ```
+//!
+//! Three invariants carry the design:
+//!
+//! 1. **The application never blocks.** Rings drop-and-count when full
+//!    (as before); channels drop-and-count when full; the consumer only
+//!    ever try-pushes. A slow sink costs *completeness* (counted), never
+//!    application time.
+//! 2. **Bounded memory.** Analysis-side state is O(#streams × channel
+//!    depth) plus sink state — independent of trace length. No
+//!    `TraceData`, no `ParsedTrace`.
+//! 3. **Byte-identical ordering.** `LiveSource` releases messages in the
+//!    exact (ts, stream index, in-stream index) order of the post-mortem
+//!    merge, using per-stream watermarks: beacons (periodic per-stream
+//!    quiescence timestamps published by the consumer, LTTng-live style)
+//!    let global time advance past quiet streams without unbounded
+//!    buffering. See `rust/ARCHITECTURE.md` § "Live mode".
+//!
+//! Entry points: [`crate::coordinator::run_live`] (whole-workload runs,
+//! `iprof --live`), [`replay_trace`] (drive a recorded trace through the
+//! live machinery, for benches and equivalence tests).
+
+pub mod channel;
+pub mod pipeline;
+pub mod source;
+
+pub use channel::{LiveHub, LiveStats};
+pub use pipeline::{run_live_pipeline, LivePipelineResult};
+pub use source::{LatencySummary, LiveSource};
+
+use crate::tracer::btf::TraceData;
+use crate::tracer::ringbuf::{self, RECORD_HEADER};
+use std::time::Duration;
+
+/// Live-mode knobs (the `iprof --live` surface).
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Per-stream channel bound, in messages. Live analysis memory is
+    /// O(#streams × depth); a full channel drops (and counts) messages.
+    pub channel_depth: usize,
+    /// Also retain raw drained bytes (memory-sink behaviour) so the same
+    /// run can be re-analyzed post-mortem. Used by equivalence tests;
+    /// defeats the memory bound, so off by default.
+    pub retain: bool,
+    /// Period for interim sink snapshots (`--refresh <ms>`); `None`
+    /// disables refresh.
+    pub refresh: Option<Duration>,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig { channel_depth: 1024, retain: false, refresh: None }
+    }
+}
+
+/// Replay a recorded trace through the live machinery: one feeder thread
+/// per stream walks its raw records in `chunk`-sized batches, decodes
+/// through the hub's class table, and **blocking-pushes** (lossless),
+/// publishing a beacon at the next pending record's timestamp after every
+/// batch — so the merge advances exactly as it would have on-line.
+///
+/// Feeders are per-stream threads on purpose: a blocked feeder only ever
+/// waits for the merge to drain *its own full queue*, and the merge is
+/// only ever vetoed by an *empty* channel — so no wait cycle can form.
+/// Closes every channel (and seals the hub) when all streams end.
+///
+/// The class ids in `trace` must come from this process's registry
+/// (true for any trace recorded or collected in-process).
+pub fn replay_trace(hub: &LiveHub, trace: &TraceData, chunk: usize) {
+    hub.ensure_channels(trace.streams.len());
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for (i, stream) in trace.streams.iter().enumerate() {
+            scope.spawn(move || {
+                let mut off = 0usize;
+                loop {
+                    let mut batch = Vec::with_capacity(chunk);
+                    let mut next_ts = None;
+                    while let Some((ts, record)) = peek_record(&stream.bytes, off) {
+                        if batch.len() >= chunk {
+                            next_ts = Some(ts);
+                            break;
+                        }
+                        off += record.len();
+                        let (id, ts, payload) = ringbuf::parse_record(record);
+                        if let Some(msg) = hub.decode(stream.rank, stream.tid, id, ts, payload) {
+                            batch.push(msg);
+                        }
+                    }
+                    if !batch.is_empty() {
+                        hub.feed_blocking(i, batch);
+                    }
+                    match next_ts {
+                        // future records on this stream start exactly at next_ts
+                        Some(ts) => hub.beacon(i, ts),
+                        None => {
+                            hub.close(i);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    hub.close_all();
+}
+
+/// The record starting at `off`, as `(ts, full record slice)`, or `None`
+/// at end of stream (or at wrap padding, which never reaches collected
+/// streams).
+fn peek_record(bytes: &[u8], off: usize) -> Option<(u64, &[u8])> {
+    if off + RECORD_HEADER > bytes.len() {
+        return None;
+    }
+    let total = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    if total == ringbuf::PAD_MARKER {
+        return None;
+    }
+    let total = total as usize;
+    let record = &bytes[off..off + total];
+    let (_, ts, _) = ringbuf::parse_record(record);
+    Some((ts, record))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::class_by_name;
+    use crate::tracer::btf::collect;
+    use crate::tracer::session::test_support;
+    use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
+
+    #[test]
+    fn replay_trace_is_lossless_and_ordered() {
+        let _g = test_support::lock();
+        install_session(SessionConfig::default());
+        let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+        for _ in 0..100 {
+            emit(e, |en| {
+                en.u64(0);
+            });
+            emit(x, |en| {
+                en.u64(0);
+            });
+        }
+        let session = uninstall_session().unwrap();
+        let trace = collect(&session, &[]);
+
+        // tiny depth + tiny chunk: the blocking feed must still be lossless
+        let hub = LiveHub::new("replaynode", 4, false);
+        let source = LiveSource::new(hub.clone());
+        let merged = std::thread::scope(|s| {
+            let feeder = s.spawn(|| replay_trace(&hub, &trace, 3));
+            let merged: Vec<u64> = source.map(|m| m.ts).collect();
+            feeder.join().unwrap();
+            merged
+        });
+        assert_eq!(merged.len() as u64, trace.record_count());
+        assert!(merged.windows(2).all(|w| w[0] <= w[1]), "replay must be time-ordered");
+        let stats = hub.stats();
+        assert_eq!(stats.dropped, 0, "blocking replay never drops");
+        assert_eq!(stats.received, trace.record_count());
+    }
+}

@@ -1,0 +1,205 @@
+//! `LiveSource`: the on-line k-way merge over a hub's channels.
+//!
+//! Yields decoded messages in exactly the global order the post-mortem
+//! [`crate::analysis::MessageSource`] produces — non-decreasing timestamp,
+//! ties broken by (stream index, in-stream arrival order) — but *while the
+//! application is still running*. A message is released only once it is
+//! provably final:
+//!
+//! * channels with queued messages are compared head-to-head;
+//! * a channel with an **empty** queue vetoes release until its watermark
+//!   moves strictly past the candidate timestamp (beacons advance the
+//!   watermark when the stream is quiet) or the channel closes.
+//!
+//! The strict `>` matters: a watermark of `W` still permits a future
+//! message at exactly `W`, and if that message belongs to an
+//! earlier-indexed stream it must sort *before* an equal-timestamp
+//! candidate — releasing on `>=` would break byte-identity with the
+//! post-mortem merge.
+//!
+//! Memory is O(#streams × channel depth); the merge never buffers beyond
+//! the channel bounds, which is the whole point of live mode.
+
+use super::channel::LiveHub;
+use crate::analysis::msg::EventMsg;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Latency accounting for merged messages (push → pop).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    /// Messages merged.
+    pub merged: u64,
+    /// Sum of per-message channel residence times.
+    pub total: Duration,
+    /// Worst per-message channel residence time.
+    pub max: Duration,
+}
+
+impl LatencySummary {
+    /// Mean channel residence time per message.
+    pub fn mean(&self) -> Duration {
+        if self.merged == 0 {
+            Duration::ZERO
+        } else {
+            // divide in u128 nanos: `Duration / u32` would truncate the
+            // count (and panic on exact multiples of 2^32)
+            Duration::from_nanos((self.total.as_nanos() / self.merged as u128) as u64)
+        }
+    }
+
+    fn record(&mut self, d: Duration) {
+        self.merged += 1;
+        self.total += d;
+        self.max = self.max.max(d);
+    }
+}
+
+/// Blocking message iterator over a [`LiveHub`] (see module docs).
+pub struct LiveSource {
+    hub: Arc<LiveHub>,
+    latency: LatencySummary,
+}
+
+impl LiveSource {
+    /// Open the merge over `hub`. One `LiveSource` per hub: the merge is
+    /// the single consumer of every channel.
+    pub fn new(hub: Arc<LiveHub>) -> Self {
+        LiveSource { hub, latency: LatencySummary::default() }
+    }
+
+    /// Latency summary over everything merged so far.
+    pub fn latency(&self) -> &LatencySummary {
+        &self.latency
+    }
+}
+
+impl Iterator for LiveSource {
+    type Item = EventMsg;
+
+    /// Blocks until the next globally-ordered message is releasable, or
+    /// returns `None` once the hub is sealed and fully drained.
+    fn next(&mut self) -> Option<EventMsg> {
+        let mut st = self.hub.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            // Head-of-queue candidate: min (ts, channel index, arrival seq).
+            let mut best: Option<(u64, usize, u64)> = None;
+            for (i, ch) in st.channels.iter().enumerate() {
+                if let Some(e) = ch.queue.front() {
+                    let key = (e.msg.ts, i, e.seq);
+                    best = Some(match best {
+                        Some(b) => b.min(key),
+                        None => key,
+                    });
+                }
+            }
+            if let Some((ts, idx, _)) = best {
+                let releasable = st.channels.iter().all(|ch| {
+                    !ch.queue.is_empty() || ch.closed || ch.watermark > ts
+                });
+                if releasable {
+                    let entry = st.channels[idx].queue.pop_front().unwrap();
+                    self.latency.record(entry.pushed.elapsed());
+                    // replay producers may be parked waiting for queue space
+                    self.hub.progress.notify_all();
+                    return Some(entry.msg);
+                }
+            } else if st.sealed && st.channels.iter().all(|ch| ch.closed && ch.queue.is_empty()) {
+                return None;
+            }
+            // Nothing releasable: park until a push/beacon/close moves the
+            // world. The timeout is a liveness backstop only (a vanished
+            // producer); correctness never depends on it.
+            let (guard, _) = self
+                .hub
+                .progress
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracer::btf::DecodedClass;
+
+    fn msg(ts: u64, rank: u32, tid: u32) -> EventMsg {
+        EventMsg {
+            ts,
+            rank,
+            tid,
+            hostname: Arc::from("srctest"),
+            class: Arc::new(DecodedClass {
+                id: 0,
+                name: "lttng_ust_ze:zeInit_entry".into(),
+                api: "ZE".into(),
+                flags: "h".into(),
+                fields: vec![],
+            }),
+            fields: vec![],
+        }
+    }
+
+    #[test]
+    fn merges_two_channels_in_time_order_with_stream_tiebreak() {
+        let hub = LiveHub::new("srctest", 64, false);
+        hub.ensure_channels(2);
+        hub.push_batch(0, vec![msg(5, 0, 0), msg(10, 0, 1)]);
+        hub.push_batch(1, vec![msg(5, 1, 0), msg(7, 1, 1)]);
+        hub.close_all();
+        let got: Vec<(u64, u32)> = LiveSource::new(hub).map(|m| (m.ts, m.rank)).collect();
+        // equal ts 5: stream 0 first; then 7 from stream 1; then 10
+        assert_eq!(got, vec![(5, 0), (5, 1), (7, 1), (10, 0)]);
+    }
+
+    #[test]
+    fn empty_channel_holds_merge_until_watermark_passes_strictly() {
+        let hub = LiveHub::new("srctest", 64, false);
+        hub.ensure_channels(2);
+        hub.push_batch(0, vec![msg(100, 0, 0)]);
+        // channel 1 quiet with watermark == candidate ts: must NOT release
+        hub.beacon(1, 100);
+        {
+            let st = hub.inner.lock().unwrap();
+            let releasable = st.channels.iter().all(|ch| {
+                !ch.queue.is_empty() || ch.closed || ch.watermark > 100
+            });
+            assert!(!releasable, "watermark == ts must still veto release");
+        }
+        // a late equal-timestamp message on the quiet LOWER-indexed..
+        // (here higher-indexed) stream arrives and must sort after;
+        // then the strictly-greater beacon releases everything
+        hub.push_batch(1, vec![msg(100, 1, 0)]);
+        hub.close_all();
+        let got: Vec<(u64, u32)> = LiveSource::new(hub).map(|m| (m.ts, m.rank)).collect();
+        assert_eq!(got, vec![(100, 0), (100, 1)]);
+    }
+
+    #[test]
+    fn quiet_beacon_only_channel_does_not_stall_the_merge() {
+        let hub = LiveHub::new("srctest", 64, false);
+        hub.ensure_channels(2);
+        let h2 = hub.clone();
+        let feeder = std::thread::spawn(move || {
+            for i in 0..50u64 {
+                h2.push_batch(0, vec![msg(i * 10, 0, i as u32)]);
+                // channel 1 never carries an event — beacons only
+                h2.beacon(1, i * 10 + 1);
+            }
+            h2.close_all();
+        });
+        let got: Vec<u64> = LiveSource::new(hub).map(|m| m.ts).collect();
+        feeder.join().unwrap();
+        assert_eq!(got.len(), 50);
+        assert!(got.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn sealed_empty_hub_terminates() {
+        let hub = LiveHub::new("srctest", 4, false);
+        hub.close_all();
+        assert_eq!(LiveSource::new(hub).count(), 0);
+    }
+}

@@ -11,6 +11,15 @@
 //!       --ranks <r0,r1,...>             trace only these ranks
 //!       --filter <pattern>              disable matching event classes
 //!   -a, --analysis <tally,pretty,timeline,validate|none>  [tally]
+//!       --live                          analyze ON-LINE: sinks run from the
+//!                                       consumer thread while the workload
+//!                                       executes (bounded memory, beacons)
+//!       --refresh <ms>                  with --live: periodic interim
+//!                                       reports from refreshable sinks
+//!       --live-depth <n>                per-stream live channel depth in
+//!                                       messages               [1024]
+//!       --live-strict                   with --live: exit nonzero if any
+//!                                       event was dropped (ring or channel)
 //!       --scale <f>                     workload intensity  [1.0]
 //!       --list                          list available workloads
 //! ```
@@ -29,6 +38,7 @@ use thapi::analysis::{
 use thapi::apps::{hecbench, spechpc, Workload};
 use thapi::coordinator::{self, IprofConfig};
 use thapi::device::{Node, NodeConfig};
+use thapi::live::LiveConfig;
 use thapi::sampling::SamplingConfig;
 use thapi::tracer::{SinkKind, TracingMode};
 
@@ -52,7 +62,7 @@ impl AnalysisKind {
         })
     }
 
-    fn sink(&self) -> Box<dyn AnalysisSink> {
+    fn sink(&self) -> Box<dyn AnalysisSink + Send> {
         match self {
             AnalysisKind::Tally => Box::new(TallySink::new()),
             AnalysisKind::Pretty => Box::new(PrettySink::new()),
@@ -95,6 +105,10 @@ struct Options {
     analyses: Vec<AnalysisKind>,
     workloads: Vec<String>,
     list: bool,
+    live: bool,
+    refresh_ms: Option<u64>,
+    live_depth: Option<usize>,
+    live_strict: bool,
 }
 
 fn parse_args(args: &[String]) -> Result<Options> {
@@ -109,6 +123,10 @@ fn parse_args(args: &[String]) -> Result<Options> {
         analyses: vec![AnalysisKind::Tally],
         workloads: Vec::new(),
         list: false,
+        live: false,
+        refresh_ms: None,
+        live_depth: None,
+        live_strict: false,
     };
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
@@ -155,6 +173,20 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 );
             }
             "--filter" => o.filters.push(it.next().context("--filter needs a value")?.clone()),
+            "--live" => o.live = true,
+            "--refresh" => {
+                let v = it.next().context("--refresh needs a value (ms)")?;
+                o.refresh_ms = Some(v.parse().context("bad --refresh value")?);
+            }
+            "--live-depth" => {
+                let v = it.next().context("--live-depth needs a value")?;
+                let depth: usize = v.parse().context("bad --live-depth value")?;
+                if depth == 0 {
+                    bail!("--live-depth must be at least 1");
+                }
+                o.live_depth = Some(depth);
+            }
+            "--live-strict" => o.live_strict = true,
             "-a" | "--analysis" => {
                 let v = it.next().context("--analysis needs a value")?;
                 o.analyses = parse_analyses(v)?;
@@ -196,6 +228,12 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
   -a, --analysis <list|none>           comma-separated sinks driven in one
                                        streaming pass: tally, pretty,
                                        timeline, validate   [tally]
+      --live                           run the sinks ON-LINE from the consumer
+                                       thread while the workload executes
+      --refresh <ms>                   with --live: periodic interim reports
+      --live-depth <n>                 per-stream live channel depth [1024]
+      --live-strict                    with --live: exit nonzero on any
+                                       dropped event (ring or channel)
       --scale <f>                      workload intensity multiplier
       --list                           list available workloads";
 
@@ -205,9 +243,39 @@ fn all_workloads() -> Vec<Arc<dyn Workload>> {
     v
 }
 
+/// Print/persist one report per requested analysis (shared by the
+/// post-mortem and live paths; both produce reports in `-a` order).
+fn emit_reports(name: &str, analyses: &[AnalysisKind], reports: Vec<Report>) -> Result<()> {
+    for (kind, rep) in analyses.iter().zip(reports) {
+        match (kind, rep) {
+            (AnalysisKind::Timeline, Report::Json(json)) => {
+                let path = format!("{name}.trace.json");
+                std::fs::write(&path, json)?;
+                eprintln!("iprof: wrote {path} (open in Perfetto)");
+            }
+            (AnalysisKind::Pretty | AnalysisKind::Validate, Report::Text(text)) => {
+                print!("{text}");
+            }
+            (_, Report::Text(text)) => println!("{text}"),
+            (_, _) => {}
+        }
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let o = parse_args(&args)?;
+    if o.live {
+        if !o.tracing {
+            bail!("--live requires tracing (drop --no-trace)");
+        }
+        if o.trace_dir.is_some() {
+            bail!("--live analyzes on-line and persists no trace (drop --trace-dir)");
+        }
+    } else if o.refresh_ms.is_some() || o.live_strict || o.live_depth.is_some() {
+        bail!("--refresh/--live-depth/--live-strict only make sense with --live");
+    }
 
     let registry = all_workloads();
     if o.list || o.workloads.is_empty() {
@@ -243,6 +311,46 @@ fn main() -> Result<()> {
             .find(|w| w.name() == name)
             .with_context(|| format!("unknown workload {name} (try --list)"))?;
         eprintln!("iprof: running {name} [{}] config={}", w.backend(), config.label());
+
+        if o.live {
+            // On-line path: sinks run from the consumer thread while the
+            // workload executes; nothing trace-sized is materialized.
+            let live_cfg = LiveConfig {
+                channel_depth: o.live_depth.unwrap_or(LiveConfig::default().channel_depth),
+                retain: false,
+                refresh: o.refresh_ms.map(std::time::Duration::from_millis),
+            };
+            let sinks: Vec<Box<dyn AnalysisSink + Send>> =
+                o.analyses.iter().map(|k| k.sink()).collect();
+            let r = coordinator::run_live(&node, w.as_ref(), &config, &live_cfg, sinks, |text| {
+                eprintln!("iprof: live refresh [{name}]\n{text}");
+            });
+            eprintln!(
+                "iprof: {name}: wall={:.3}s events={} merged={} dropped={} \
+                 (ring {} + channel {}) beacons={} latency mean={:.2}ms max={:.2}ms",
+                r.wall.as_secs_f64(),
+                r.stats.written,
+                r.latency.merged,
+                r.total_dropped(),
+                r.stats.dropped,
+                r.live.dropped,
+                r.live.beacons,
+                r.latency.mean().as_secs_f64() * 1e3,
+                r.latency.max.as_secs_f64() * 1e3,
+            );
+            emit_reports(name, &o.analyses, r.reports)?;
+            if o.live_strict && r.total_dropped() > 0 {
+                bail!(
+                    "live: {} events dropped ({} at rings, {} at channels of depth {})",
+                    r.total_dropped(),
+                    r.stats.dropped,
+                    r.live.dropped,
+                    live_cfg.channel_depth
+                );
+            }
+            continue;
+        }
+
         let report = coordinator::run(&node, w.as_ref(), &config);
         eprintln!(
             "iprof: {name}: wall={:.3}s events={} dropped={} trace={}B",
@@ -257,23 +365,10 @@ fn main() -> Result<()> {
         if let Some(trace) = &report.trace {
             // One streaming pass drives every requested sink.
             let parsed = analysis::parse_trace(trace)?;
-            let mut sinks: Vec<Box<dyn AnalysisSink>> =
+            let mut sinks: Vec<Box<dyn AnalysisSink + Send>> =
                 o.analyses.iter().map(|k| k.sink()).collect();
             let reports = analysis::run_pipeline(&parsed, &mut sinks);
-            for (kind, rep) in o.analyses.iter().zip(reports) {
-                match (kind, rep) {
-                    (AnalysisKind::Timeline, Report::Json(json)) => {
-                        let path = format!("{name}.trace.json");
-                        std::fs::write(&path, json)?;
-                        eprintln!("iprof: wrote {path} (open in Perfetto)");
-                    }
-                    (AnalysisKind::Pretty | AnalysisKind::Validate, Report::Text(text)) => {
-                        print!("{text}");
-                    }
-                    (_, Report::Text(text)) => println!("{text}"),
-                    (_, _) => {}
-                }
-            }
+            emit_reports(name, &o.analyses, reports)?;
         }
     }
     Ok(())

@@ -172,6 +172,21 @@ impl DecodedClass {
     }
 }
 
+/// Decoded-class table of the *live registry* (metadata emit→parse
+/// round trip), keyed by class id. This is how on-line consumers (live
+/// mode) decode ring records the moment they are drained, through the
+/// same descriptor path post-mortem analysis uses — never the registry
+/// structs themselves, preserving the "analysis reads metadata only"
+/// decoupling.
+pub fn registry_classes() -> HashMap<u32, std::sync::Arc<DecodedClass>> {
+    let md = parse_metadata(&generate_metadata(&[]))
+        .expect("generated registry metadata must parse");
+    md.classes
+        .into_iter()
+        .map(|(id, c)| (id, std::sync::Arc::new(c)))
+        .collect()
+}
+
 /// Parsed metadata: env + class table indexed by id.
 #[derive(Debug, Clone, Default)]
 pub struct Metadata {

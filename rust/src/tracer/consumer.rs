@@ -2,11 +2,21 @@
 //!
 //! The LTTng consumer-daemon analogue. Wakes at the session's interval,
 //! drains every registered stream's ring into its sink (memory vector,
-//! file, or /dev/null-style counter), and performs a final drain on stop
-//! so no committed record is lost at teardown.
+//! file, /dev/null-style counter, or the live hub), and performs a final
+//! drain on stop so no committed record is lost at teardown.
+//!
+//! For [`SinkKind::Live`] sessions the consumer is also the *decoder and
+//! beacon emitter*: every drained record becomes an
+//! [`EventMsg`](crate::analysis::EventMsg) try-pushed onto the stream's
+//! bounded channel, and after each drain
+//! round the consumer publishes per-stream **beacons** — wall-clock
+//! watermarks proving a stream quiet — so the live merge can advance
+//! global time past idle streams (see `rust/src/live/`).
 
-use super::ringbuf::RECORD_HEADER;
-use super::session::{Session, SinkKind};
+use super::clock;
+use super::ringbuf::{self, RECORD_HEADER};
+use super::session::{Session, SinkKind, Stream};
+use crate::live::LiveHub;
 use std::io::Write;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
@@ -37,6 +47,10 @@ impl Consumer {
                     drop(guard);
                     drain_all(&session);
                     if done {
+                        // live sessions: end of stream — unblock the merge
+                        if let SinkKind::Live(hub) = &session.config.sink {
+                            hub.close_all();
+                        }
                         break;
                     }
                 }
@@ -58,6 +72,10 @@ fn drain_all(session: &Session) {
     // Snapshot the stream list; new streams are picked up next round (and
     // by the final drain, which runs after all producers detached).
     let streams: Vec<_> = session.streams.lock().unwrap().clone();
+    if let SinkKind::Live(hub) = &session.config.sink {
+        drain_live(session, hub, &streams);
+        return;
+    }
     for stream in streams {
         let mut drained: u64 = 0;
         match &session.config.sink {
@@ -77,6 +95,7 @@ fn drain_all(session: &Session) {
                     drained += rec.len() as u64;
                 });
             }
+            SinkKind::Live(_) => unreachable!("handled above"),
         }
         if drained > 0 {
             session
@@ -86,6 +105,90 @@ fn drain_all(session: &Session) {
     }
     // Flush point for file sinks would go here; memory sinks need none.
     let _ = std::io::sink().flush();
+}
+
+/// One live drain round: decode-and-forward every stream's pending
+/// records, then publish beacons for the streams that are provably quiet.
+///
+/// Channel index i is stream index i (registration order) — the same
+/// index a post-mortem `collect` gives the stream, which is what makes
+/// the live merge's tie-break byte-identical to `MessageSource`.
+///
+/// Beacon safety: a beacon value W promises "every record this stream
+/// publishes from now on has ts >= W". W is a consumer-side clock read,
+/// so the promise needs proof that no producer is holding an
+/// already-taken (older) timestamp it has yet to publish. The proof is
+/// the emit seqlock bracketing in `session::emit`:
+///
+/// 1. drain the ring (everything published so far is out);
+/// 2. read `emit_seq` — must be even (no emit in flight);
+/// 3. read W = now;
+/// 4. re-read `emit_seq` — must be unchanged (no emit started around W);
+/// 5. re-check the ring is still empty (nothing slipped in before 2.).
+///
+/// Any emit that begins after step 4 takes its timestamp after W on a
+/// globally monotonic clock, so ts >= W holds; any earlier emit either
+/// flips the seqlock or lands in the ring and fails 5. If any check
+/// fails we simply skip the beacon — the next round (a few ms later)
+/// retries, and event pushes advance the watermark meanwhile.
+fn drain_live(session: &Session, hub: &LiveHub, streams: &[Arc<Stream>]) {
+    hub.ensure_channels(streams.len());
+    let mut beacons: Vec<(usize, u64)> = Vec::with_capacity(streams.len());
+    for (i, stream) in streams.iter().enumerate() {
+        let mut drained: u64 = 0;
+        let mut batch = Vec::new();
+        let mut raw: Vec<u8> = Vec::new();
+        let keep_raw = hub.retain();
+        stream.buf.drain(|rec| {
+            debug_assert!(rec.len() >= RECORD_HEADER);
+            drained += rec.len() as u64;
+            if keep_raw {
+                raw.extend_from_slice(rec);
+            }
+            let (id, ts, payload) = ringbuf::parse_record(rec);
+            if let Some(msg) = hub.decode(stream.rank, stream.tid, id, ts, payload) {
+                batch.push(msg);
+            }
+        });
+        if keep_raw && !raw.is_empty() {
+            stream.data.lock().unwrap().extend_from_slice(&raw);
+        }
+        // Registration barrier, event edition: a stream that registered
+        // after this round's snapshot may already hold an event OLDER
+        // than everything in `batch` (it registers before taking its
+        // first timestamp, while these records were published before our
+        // drain). Its (empty, watermark-0 → merge-blocking) channel must
+        // exist before this batch becomes releasable, or the merge could
+        // emit past the newcomer's first timestamp. Streams registering
+        // after this re-snapshot take their first timestamp after the
+        // drain above, so they cannot undercut this batch.
+        if !batch.is_empty() {
+            hub.ensure_channels(session.streams.lock().unwrap().len());
+        }
+        hub.push_batch(i, batch);
+        if drained > 0 {
+            session.consumed_bytes.fetch_add(drained, Ordering::Relaxed);
+        }
+        // Quiescence proof (see above); skip the beacon on any failure.
+        let seq1 = stream.emit_seq.load(Ordering::SeqCst);
+        if seq1 % 2 == 0 {
+            let w = clock::now_ns();
+            let seq2 = stream.emit_seq.load(Ordering::SeqCst);
+            if seq2 == seq1 && stream.buf.backlog() == 0 {
+                beacons.push((i, w));
+            }
+        }
+    }
+    // Registration barrier: a stream that registered during this round
+    // must have its (empty, watermark-0) channel in place BEFORE any of
+    // this round's beacons publish, otherwise the merge could advance
+    // past the new stream's first timestamp. Streams registering after
+    // this re-snapshot take their first timestamp after our beacon clock
+    // reads, so they cannot undercut them.
+    hub.ensure_channels(session.streams.lock().unwrap().len());
+    for (i, w) in beacons {
+        hub.beacon(i, w);
+    }
 }
 
 #[cfg(test)]

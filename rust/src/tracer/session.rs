@@ -52,6 +52,13 @@ pub enum SinkKind {
     Dir(PathBuf),
     /// Count-and-discard (pure overhead measurement).
     Null,
+    /// Live analysis: the consumer decodes records as it drains them and
+    /// forwards messages over the hub's bounded per-stream channels
+    /// (with beacons for quiet streams), feeding
+    /// [`crate::live::LiveSource`] while the application runs. With
+    /// `hub.retain()` the raw bytes are additionally kept in memory like
+    /// [`SinkKind::Memory`].
+    Live(std::sync::Arc<crate::live::LiveHub>),
 }
 
 /// Session configuration.
@@ -95,6 +102,13 @@ pub struct Stream {
     pub buf: Arc<RingBuf>,
     /// Consumed bytes (memory sink) — drained records land here.
     pub data: Mutex<Vec<u8>>,
+    /// Emit-in-progress seqlock, maintained only for live sessions: odd
+    /// while the producer is between taking a timestamp and publishing
+    /// the record. The consumer reads it to prove quiescence before
+    /// publishing a wall-clock beacon — a beacon taken while an emit is
+    /// in flight could claim a watermark *above* that event's timestamp
+    /// and break the live merge's ordering guarantee.
+    pub(super) emit_seq: AtomicU64,
 }
 
 /// Aggregate statistics of a finished (or running) session.
@@ -114,6 +128,11 @@ pub struct SessionStats {
 pub struct Session {
     /// Immutable configuration.
     pub config: SessionConfig,
+    /// Live sink installed: emitters maintain the per-stream emit seqlock
+    /// (two extra uncontended atomic ops per event) so the consumer can
+    /// publish safe beacons. False for every other sink — the hot path
+    /// is unchanged there.
+    pub(super) live: bool,
     /// Epoch this session was installed under.
     epoch: u64,
     /// Enable bitmap, one bit per event-class id.
@@ -132,8 +151,10 @@ impl Session {
         let n_classes = class_count();
         let words = n_classes.div_ceil(64);
         let enabled: Vec<AtomicU64> = (0..words).map(|_| AtomicU64::new(0)).collect();
+        let live = matches!(config.sink, SinkKind::Live(_));
         let s = Arc::new(Session {
             config,
+            live,
             epoch: 0,
             enabled,
             streams: Mutex::new(Vec::new()),
@@ -195,6 +216,7 @@ impl Session {
             tid,
             buf: Arc::new(RingBuf::new(self.config.buffer_capacity)),
             data: Mutex::new(Vec::new()),
+            emit_seq: AtomicU64::new(0),
         });
         self.streams.lock().unwrap().push(stream.clone());
         stream
@@ -349,12 +371,25 @@ pub fn emit<F: FnOnce(&mut Encoder)>(class: &'static EventClass, fill: F) {
             return;
         }
         let Some(stream) = stream.as_ref() else { return };
+        // Live sessions only: open the emit seqlock BEFORE taking the
+        // timestamp, close it AFTER publishing. The consumer's beacon
+        // protocol (consumer.rs) relies on this bracketing: if it reads
+        // an even, unchanged seq around a clock read W with an empty
+        // ring, every event this stream ever publishes later must carry
+        // ts >= W (the trace clock is globally monotonic).
+        let live = session.live;
+        if live {
+            stream.emit_seq.fetch_add(1, Ordering::SeqCst);
+        }
         let ts = clock::now_ns();
         scratch.clear();
         let mut enc = Encoder::new(scratch, class);
         fill(&mut enc);
         enc.finish();
         stream.buf.try_write(class.id, ts, scratch);
+        if live {
+            stream.emit_seq.fetch_add(1, Ordering::SeqCst);
+        }
     });
 }
 

@@ -47,11 +47,16 @@ fn traced_run_roundtrips_through_disk() {
     let reloaded = btf::read_dir(&dir).unwrap();
     assert_eq!(reloaded.record_count(), report.trace.as_ref().unwrap().record_count());
     let parsed = analysis::parse_trace(&reloaded).unwrap();
-    let msgs = analysis::mux(&parsed);
-    assert!(!msgs.is_empty());
-    for w in msgs.windows(2) {
-        assert!(w[0].ts <= w[1].ts);
+    assert!(parsed.event_count() > 0);
+    // the zero-copy merge yields every event in global time order
+    let mut merged = 0usize;
+    let mut prev = 0u64;
+    for m in analysis::MessageSource::new(&parsed) {
+        assert!(m.ts >= prev);
+        prev = m.ts;
+        merged += 1;
     }
+    assert_eq!(merged, parsed.event_count());
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -107,12 +112,13 @@ fn sampling_adds_telemetry_events() {
     config.sampling = Some(SamplingConfig { interval: Duration::from_millis(5) });
     let r = run(&node, a.as_ref(), &config);
     let trace = r.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let telemetry = msgs.iter().filter(|m| m.class.name.starts_with("lttng_ust_sampling")).count();
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let telemetry = analysis::MessageSource::new(&parsed)
+        .filter(|m| m.class.name.starts_with("lttng_ust_sampling"))
+        .count();
     assert!(telemetry > 10, "expected telemetry events, got {telemetry}");
     // power domains present: card + 2 tiles
-    let domains: std::collections::HashSet<u64> = msgs
-        .iter()
+    let domains: std::collections::HashSet<u64> = analysis::MessageSource::new(&parsed)
         .filter(|m| m.class.name == "lttng_ust_sampling:gpu_power")
         .map(|m| m.field("domain").unwrap().as_u64())
         .collect();
@@ -184,12 +190,14 @@ fn event_filter_disables_matching_classes() {
     config.disabled_patterns = vec!["zeKernelSetArgumentValue".into()];
     let r = run(&node, app("saxpy-ze").as_ref(), &config);
     let trace = r.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
+    let parsed = analysis::parse_trace(trace).unwrap();
     assert!(
-        !msgs.iter().any(|m| m.class.name.contains("zeKernelSetArgumentValue")),
+        !analysis::MessageSource::new(&parsed)
+            .any(|m| m.class.name.contains("zeKernelSetArgumentValue")),
         "filtered class must not appear"
     );
-    assert!(msgs.iter().any(|m| m.class.name.contains("zeCommandListAppendLaunchKernel")));
+    assert!(analysis::MessageSource::new(&parsed)
+        .any(|m| m.class.name.contains("zeCommandListAppendLaunchKernel")));
 }
 
 #[test]
@@ -199,9 +207,12 @@ fn pretty_print_covers_all_recorded_classes() {
     let node = small_node();
     let r = run(&node, app("miniweather-ze").as_ref(), &IprofConfig::default());
     let trace = r.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let text = analysis::pretty_print(&msgs);
-    assert_eq!(text.lines().count(), msgs.len());
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut sinks: Vec<Box<dyn analysis::AnalysisSink>> =
+        vec![Box::new(analysis::PrettySink::new())];
+    let reports = analysis::run_pipeline(&parsed, &mut sinks);
+    let text = reports[0].payload().unwrap();
+    assert_eq!(text.lines().count(), parsed.event_count());
     // every line carries the hostname and a field block
     for line in text.lines().take(50) {
         assert!(line.contains("testnode"));
@@ -218,9 +229,11 @@ fn timeline_json_from_sampled_run_is_valid_shape() {
     config.sampling = Some(SamplingConfig { interval: Duration::from_millis(5) });
     let r = run(&node, app("convolution1D-ze").as_ref(), &config);
     let trace = r.trace.as_ref().unwrap();
-    let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-    let iv = analysis::pair_intervals(&msgs);
-    let json = analysis::timeline_json(&iv, &msgs);
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut sinks: Vec<Box<dyn analysis::AnalysisSink>> =
+        vec![Box::new(analysis::TimelineSink::new())];
+    let reports = analysis::run_pipeline(&parsed, &mut sinks);
+    let json = reports[0].payload().unwrap();
     assert!(json.contains("traceEvents"));
     assert_eq!(json.matches('{').count(), json.matches('}').count());
     assert!(json.contains("GPU Power Domain 0"));
@@ -234,8 +247,12 @@ fn clean_apps_pass_validation() {
     for name in ["saxpy-ze", "gemm-cuda", "saxpy-cl"] {
         let r = run(&node, app(name).as_ref(), &IprofConfig::default());
         let trace = r.trace.as_ref().unwrap();
-        let msgs = analysis::mux(&analysis::parse_trace(trace).unwrap());
-        let findings = analysis::validate(&msgs);
+        let parsed = analysis::parse_trace(trace).unwrap();
+        let mut validator = analysis::Validator::new();
+        for m in analysis::MessageSource::new(&parsed) {
+            validator.observe(m);
+        }
+        let findings = validator.finish();
         let errors: Vec<_> =
             findings.iter().filter(|f| f.severity == analysis::Severity::Error).collect();
         assert!(errors.is_empty(), "{name} must validate clean, got {errors:?}");

@@ -1,0 +1,334 @@
+//! Live-analysis subsystem tests: ordering equivalence, backpressure,
+//! beacons, and whole-stack `run_live` golden comparisons.
+//!
+//! The acceptance bar: the on-line path (`consumer thread → bounded
+//! channels + beacons → LiveSource merge → sinks`) must produce output
+//! **byte-identical** to the post-mortem path (`collect → parse_trace →
+//! MessageSource → sinks`) over the same events, while never blocking
+//! the producing side.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+use thapi::analysis::{
+    self, AnalysisSink, EventMsg, MessageSource, ParsedTrace, TallySink, TimelineSink,
+};
+use thapi::apps::{hecbench, spechpc};
+use thapi::coordinator::{run_live, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, LiveConfig, LiveHub, LiveSource};
+use thapi::tracer::btf::{DecodedClass, Metadata};
+use thapi::util::{prop, Rng};
+
+/// Global-session tests cannot overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn app(name: &str) -> std::sync::Arc<dyn thapi::apps::Workload> {
+    hecbench::suite()
+        .into_iter()
+        .chain(spechpc::suite())
+        .find(|a| a.name() == name)
+        .unwrap_or_else(|| panic!("app {name}"))
+}
+
+// ---------------------------------------------------------------------------
+// Property: live merge == post-mortem merge on randomized traces
+// ---------------------------------------------------------------------------
+
+/// Synthetic multi-stream trace with deliberate in-stream and
+/// cross-stream timestamp ties; stream index encoded in `rank`, in-stream
+/// position in `tid`, so the full merge order is observable.
+fn synthetic_parsed(rng: &mut Rng) -> ParsedTrace {
+    let class = Arc::new(DecodedClass {
+        id: 0,
+        name: "lttng_ust_ze:zeInit_entry".to_string(),
+        api: "ZE".to_string(),
+        flags: "h".to_string(),
+        fields: vec![],
+    });
+    let hostname: Arc<str> = Arc::from("livenode");
+    let n_streams = rng.range(1, 7);
+    let mut streams = Vec::with_capacity(n_streams + 1);
+    for si in 0..n_streams {
+        let mut ts = rng.below(4);
+        let n = rng.range(0, 50);
+        let mut events = Vec::with_capacity(n);
+        for i in 0..n {
+            ts += rng.below(3); // zero increments force equal timestamps
+            events.push(EventMsg {
+                ts,
+                rank: si as u32,
+                tid: i as u32,
+                hostname: hostname.clone(),
+                class: class.clone(),
+                fields: vec![],
+            });
+        }
+        streams.push(events);
+    }
+    // one permanently quiet stream: it will only ever publish beacons —
+    // the merge must advance past it without a single event
+    streams.push(Vec::new());
+    ParsedTrace { metadata: Metadata::default(), streams }
+}
+
+/// Feed a synthetic parsed trace's streams through a hub the way the
+/// consumer would: per-stream chunks through the lossless blocking path,
+/// each followed by a beacon at the next pending event's timestamp (a
+/// valid watermark: per stream, future events start exactly there).
+/// Quiet/exhausted streams beacon far ahead, then everything closes.
+///
+/// One feeder thread per stream, deliberately: a blocked feeder only
+/// ever waits on the merge draining its own full queue, and the merge is
+/// only vetoed by *empty* channels, so no wait cycle can form (a single
+/// round-robin feeder could deadlock: blocked on a full stream A while
+/// the merge waits for stream B's next equal-timestamp event).
+fn feed_synthetic(hub: &LiveHub, streams: &[Vec<EventMsg>], seed: u64) {
+    hub.ensure_channels(streams.len());
+    let mut max_ts = 0u64;
+    for s in streams {
+        if let Some(last) = s.last() {
+            max_ts = max_ts.max(last.ts);
+        }
+    }
+    std::thread::scope(|scope| {
+        for (i, s) in streams.iter().enumerate() {
+            let mut rng = Rng::new(seed.wrapping_add(i as u64));
+            scope.spawn(move || {
+                let mut off = 0usize;
+                while off < s.len() {
+                    let end = (off + rng.range(1, 6)).min(s.len());
+                    hub.feed_blocking(i, s[off..end].to_vec());
+                    off = end;
+                    if let Some(next) = s.get(off) {
+                        // future events on this stream start exactly here
+                        hub.beacon(i, next.ts);
+                    }
+                }
+                // exhausted (or born quiet): beacon past everything, as a
+                // wall-clock consumer beacon would, then close
+                hub.beacon(i, max_ts + 1);
+                hub.close(i);
+            });
+        }
+    });
+    hub.close_all();
+}
+
+/// LiveSource output is element-for-element identical to the post-mortem
+/// MessageSource on randomized multi-stream traces — including equal
+/// timestamps (tie-break by stream, then in-stream order) and a quiet
+/// stream that only beacons.
+#[test]
+fn prop_live_source_is_byte_identical_to_postmortem_merge() {
+    prop::check(40, 0x11fe, |rng| {
+        let parsed = synthetic_parsed(rng);
+        let expected: Vec<(u64, u32, u32)> =
+            MessageSource::new(&parsed).map(|m| (m.ts, m.rank, m.tid)).collect();
+
+        let hub = LiveHub::new("livenode", 8, false);
+        let source = LiveSource::new(hub.clone());
+        let seed = rng.next_u64();
+        let got = std::thread::scope(|s| {
+            let hub = &hub;
+            let streams = &parsed.streams;
+            let feeder = s.spawn(move || feed_synthetic(hub, streams, seed));
+            let got: Vec<(u64, u32, u32)> = source.map(|m| (m.ts, m.rank, m.tid)).collect();
+            feeder.join().unwrap();
+            got
+        });
+        assert_eq!(got, expected, "live merge must equal the post-mortem merge exactly");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backpressure: tiny channels drop-and-count, never block
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tiny_channels_drop_and_count_without_blocking_the_producer() {
+    let class = Arc::new(DecodedClass {
+        id: 0,
+        name: "lttng_ust_ze:zeInit_entry".to_string(),
+        api: "ZE".to_string(),
+        flags: "h".to_string(),
+        fields: vec![],
+    });
+    let hub = LiveHub::new("droptest", 2, false);
+    hub.ensure_channels(1);
+    let n = 10_000u64;
+    let t0 = Instant::now();
+    // Nothing consumes: a blocking channel would deadlock right here.
+    for i in 0..n {
+        hub.push_batch(
+            0,
+            vec![EventMsg {
+                ts: i,
+                rank: 0,
+                tid: i as u32,
+                hostname: Arc::from("droptest"),
+                class: class.clone(),
+                fields: vec![],
+            }],
+        );
+    }
+    let push_time = t0.elapsed();
+    assert!(
+        push_time < Duration::from_secs(10),
+        "try-push must never block (took {push_time:?})"
+    );
+    let stats = hub.stats();
+    assert_eq!(stats.received + stats.dropped, n, "every event accounted for");
+    assert_eq!(stats.received, 2, "only `depth` events fit");
+    assert!(stats.dropped > 0);
+    // the survivors still merge, in order
+    hub.close_all();
+    let survivors: Vec<u64> = LiveSource::new(hub).map(|m| m.ts).collect();
+    assert_eq!(survivors, vec![0, 1]);
+}
+
+// ---------------------------------------------------------------------------
+// Whole stack: run_live vs post-mortem on the identical run
+// ---------------------------------------------------------------------------
+
+/// `iprof --live -a tally,timeline` byte-identity: run ONE workload with
+/// retain on, drive tally+timeline on-line, then re-analyze the retained
+/// (identical) trace post-mortem and compare both reports byte-for-byte.
+#[test]
+fn run_live_tally_and_timeline_are_byte_identical_to_postmortem() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let live_cfg = LiveConfig { channel_depth: 1 << 16, retain: true, refresh: None };
+    let sinks: Vec<Box<dyn AnalysisSink + Send>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let r = run_live(
+        &node,
+        app("lrn-hip").as_ref(),
+        &IprofConfig::default(),
+        &live_cfg,
+        sinks,
+        |_| {},
+    );
+    assert_eq!(r.live.dropped, 0, "deep channels must not drop");
+    assert_eq!(r.stats.dropped, 0, "rings must not drop at this scale");
+    assert_eq!(r.live.received, r.stats.written, "every written event reached the merge");
+    assert_eq!(r.latency.merged, r.stats.written, "every event was analyzed");
+
+    let parsed = analysis::parse_trace(r.trace.as_ref().unwrap()).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+    assert_eq!(
+        r.reports[0].payload(),
+        pm_reports[0].payload(),
+        "live tally must be byte-identical"
+    );
+    assert_eq!(
+        r.reports[1].payload(),
+        pm_reports[1].payload(),
+        "live timeline must be byte-identical"
+    );
+}
+
+/// Live analysis observes events while the application is still running:
+/// a long-lived quiet thread (one early event, then silence) must not
+/// stall the merge, thanks to consumer beacons.
+#[test]
+fn live_merge_advances_past_a_quiet_thread_mid_run() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let live_cfg = LiveConfig { channel_depth: 1 << 14, retain: false, refresh: None };
+
+    struct QuietThenBusy;
+    impl thapi::apps::Workload for QuietThenBusy {
+        fn name(&self) -> &str {
+            "quiet-then-busy"
+        }
+        fn backend(&self) -> &'static str {
+            "ZE"
+        }
+        fn run(&self, _node: &std::sync::Arc<Node>) {
+            let entry = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+            let exit = thapi::model::class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
+            let (tx, rx) = std::sync::mpsc::channel::<()>();
+            // quiet thread: one span, then alive-but-silent until released
+            let quiet = std::thread::spawn(move || {
+                thapi::tracer::emit(entry, |e| {
+                    e.u64(0);
+                });
+                thapi::tracer::emit(exit, |e| {
+                    e.u64(0);
+                });
+                let _ = rx.recv();
+            });
+            // busy thread: keeps emitting while the quiet thread idles —
+            // these events can only be merged if beacons advance the
+            // quiet stream's watermark
+            for _ in 0..2000 {
+                thapi::tracer::emit(entry, |e| {
+                    e.u64(0);
+                });
+                thapi::tracer::emit(exit, |e| {
+                    e.u64(0);
+                });
+            }
+            std::thread::sleep(Duration::from_millis(30));
+            let _ = tx.send(());
+            quiet.join().unwrap();
+        }
+    }
+
+    let sinks: Vec<Box<dyn AnalysisSink + Send>> = vec![Box::new(TallySink::new())];
+    let r = run_live(&node, &QuietThenBusy, &IprofConfig::default(), &live_cfg, sinks, |_| {});
+    assert_eq!(r.live.dropped, 0);
+    assert_eq!(r.latency.merged, r.stats.written);
+    assert!(r.live.beacons > 0, "the quiet thread forces beacon-driven progress");
+    // the 30ms idle window proves events merged before teardown: if the
+    // merge had waited for close_all, every message would be >= 30ms stale
+    assert!(
+        r.latency.mean() < Duration::from_millis(30),
+        "mean latency {:?} suggests the merge only ran at teardown",
+        r.latency.mean()
+    );
+    let text = r.reports[0].payload().unwrap();
+    assert!(text.contains("zeInit"));
+}
+
+// ---------------------------------------------------------------------------
+// Replay: recorded trace through the live machinery == post-mortem
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replayed_trace_reports_match_postmortem_even_with_tiny_channels() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let r = thapi::coordinator::run(&node, app("saxpy-ze").as_ref(), &IprofConfig::default());
+    let trace = r.trace.as_ref().unwrap();
+
+    // post-mortem reference
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+
+    // live replay through depth-8 channels: lossless blocking feed
+    let hub = LiveHub::new(&node.config.hostname, 8, false);
+    let source = LiveSource::new(hub.clone());
+    let live_reports = std::thread::scope(|s| {
+        let feeder = s.spawn(|| replay_trace(&hub, trace, 4));
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let out = thapi::live::run_live_pipeline(source, &mut sinks, None, |_| {});
+        feeder.join().unwrap();
+        out
+    });
+    assert_eq!(hub.stats().dropped, 0);
+    assert_eq!(
+        live_reports.reports[0].payload(),
+        pm_reports[0].payload(),
+        "replayed live tally must equal post-mortem tally byte-for-byte"
+    );
+}

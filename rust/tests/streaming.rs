@@ -7,6 +7,11 @@
 //! → `AnalysisSink` fan-out) must produce **byte-identical** output for
 //! tally, timeline, pretty and validate from a single pass — these tests
 //! pin that equivalence on real traced workloads.
+//!
+//! This file is THE golden shim-vs-stream equivalence suite: it is the
+//! one deliberate consumer of the deprecated eager `mux`/`pair_intervals`
+//! shims, kept to prove the streaming graph still reproduces them.
+#![allow(deprecated)]
 
 use std::sync::{Mutex, MutexGuard};
 use thapi::analysis::{
