@@ -95,11 +95,13 @@ fn main() {
     live_analysis_memory(&node);
 }
 
-/// Analysis-phase cost: the seed's materialized two-pass path
-/// (`mux` clone-all + `pair_intervals` + per-sink rescans) vs the
-/// streaming single-pass graph driving tally+timeline+validate at once.
-/// Tracks wall clock and peak live heap over the same T-full trace.
-#[allow(deprecated)] // the materialized baseline IS the deprecated shim path
+/// Analysis-phase cost: the seed-style materialized two-pass path (clone
+/// every event into an owned merged vector, build a full span vector,
+/// then run each eager renderer over those slices) vs the streaming
+/// single-pass graph driving tally+timeline+validate at once. Tracks
+/// wall clock and peak live heap over the same T-full trace. (The
+/// `mux`/`pair_intervals` shims are deleted; the baseline reconstructs
+/// the same materialization from the streaming primitives.)
 fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
     let apps = spechpc::suite();
     let app = &apps[0];
@@ -108,12 +110,21 @@ fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
     let parsed = analysis::parse_trace(trace).unwrap();
     let events = parsed.event_count();
 
-    // materialized baseline: every sink over owned vectors
+    // materialized baseline: every sink over owned vectors. One merge
+    // only (like the seed's mux + pair_intervals shape): the span vector
+    // is paired from the already-merged `msgs`, not by re-merging.
     let live0 = alloc_track::live_bytes();
     alloc_track::reset_peak();
     let t0 = Instant::now();
-    let msgs = analysis::mux(&parsed);
-    let intervals = analysis::pair_intervals(&msgs);
+    let msgs: Vec<analysis::EventMsg> =
+        analysis::MessageSource::new(&parsed).cloned().collect();
+    let mut tracker = analysis::IntervalTracker::new();
+    let mut intervals = Vec::new();
+    for m in &msgs {
+        tracker.push(m, |iv| intervals.push(iv));
+    }
+    tracker.finish(|iv| intervals.push(iv));
+    intervals.sort_by_key(|iv| iv.start);
     let tally_text = analysis::Tally::build(&intervals, &msgs).render();
     let timeline_text = analysis::timeline_json(&intervals, &msgs);
     let findings = analysis::validate(&msgs);
@@ -144,7 +155,7 @@ fn analysis_phase_memory(node: &std::sync::Arc<thapi::device::Node>) {
     );
     let mut t = Table::new(&["pipeline", "wall ms", "peak heap", "outputs"]);
     t.row(&[
-        "materialized (mux + pair + 3 rescans)".into(),
+        "materialized (owned merge + span vec + 3 rescans)".into(),
         format!("{:.2}", mat_wall.as_secs_f64() * 1e3),
         human(mat_peak as u64),
         format!("{}B tally, {}B timeline, {} findings", mat_out.0, mat_out.1, mat_out.2),

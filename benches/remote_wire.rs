@@ -1,0 +1,175 @@
+//! Remote wire-protocol cost: THRL codec throughput and the loopback
+//! end-to-end relay.
+//!
+//! Three measurements frame whether the network hop can keep up with the
+//! tracer (paper §5 asks the same of every pipeline stage):
+//!
+//! 1. **encode** — frames/s and MB/s serializing a realistic Event mix;
+//! 2. **decode** — the same wire parsed back;
+//! 3. **loopback relay** — a recorded trace replayed through a hub,
+//!    published into a Vec, attached from it, and merged into a tally:
+//!    the whole remote path minus the kernel socket.
+//!
+//! ```sh
+//! cargo bench --bench remote_wire
+//! ```
+
+use std::time::Instant;
+use thapi::analysis::{AnalysisSink, TallySink};
+use thapi::apps::spechpc;
+use thapi::bench_support::{Stats, Table};
+use thapi::coordinator::{run, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, LiveHub};
+use thapi::remote::{decode, encode, publish, Attachment, Frame, WireEvent};
+use thapi::tracer::encoder::FieldValue;
+use thapi::tracer::TracingMode;
+use thapi::util::Rng;
+
+fn human_rate(per_s: f64) -> String {
+    if per_s >= 1e6 {
+        format!("{:.2}M/s", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.1}K/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.0}/s")
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0x7431_e51e);
+    bench_codec(&mut rng);
+    bench_loopback();
+}
+
+/// Codec throughput over a realistic Event mix (4-field events like the
+/// ZE memcpy wrappers, plus beacons every 64 events like a consumer
+/// round).
+fn bench_codec(rng: &mut Rng) {
+    const N: usize = 100_000;
+    let frames: Vec<Frame> = (0..N)
+        .map(|i| {
+            if i % 64 == 63 {
+                Frame::Beacon { stream: (i % 8) as u32, watermark: i as u64 }
+            } else {
+                Frame::Event {
+                    stream: (i % 8) as u32,
+                    event: WireEvent {
+                        ts: i as u64,
+                        rank: (i % 4) as u32,
+                        tid: (i % 16) as u32,
+                        class_id: (i % 300) as u32,
+                        fields: vec![
+                            FieldValue::Ptr(rng.next_u64()),
+                            FieldValue::Ptr(rng.next_u64()),
+                            FieldValue::U64(rng.below(1 << 20)),
+                            FieldValue::U64(0),
+                        ],
+                    },
+                }
+            }
+        })
+        .collect();
+
+    let mut wire = Vec::new();
+    let enc = Stats::measure(2, 10, || {
+        wire.clear();
+        for f in &frames {
+            encode(f, &mut wire);
+        }
+    });
+    let bytes = wire.len();
+
+    let mut decoded = 0usize;
+    let dec = Stats::measure(2, 10, || {
+        decoded = 0;
+        let mut off = 0;
+        while off < wire.len() {
+            let (_, n) = decode(&wire[off..]).unwrap().unwrap();
+            off += n;
+            decoded += 1;
+        }
+    });
+    assert_eq!(decoded, N);
+
+    println!("\n=== THRL codec throughput ({N} frames, {bytes} wire bytes) ===\n");
+    let mut t = Table::new(&["direction", "median wall ms", "frames", "bytes"]);
+    for (name, s) in [("encode", &enc), ("decode", &dec)] {
+        let secs = s.median().as_secs_f64();
+        t.row(&[
+            name.into(),
+            format!("{:.2}", secs * 1e3),
+            human_rate(N as f64 / secs),
+            human_rate(bytes as f64 / secs),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// End-to-end loopback: trace once, then replay → hub → publish(Vec) →
+/// attach → merge → tally, asserting byte-identity with post-mortem on
+/// the way.
+fn bench_loopback() {
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.3");
+    }
+    let node = Node::new(NodeConfig::aurora());
+    let apps = spechpc::suite();
+    let app = &apps[0];
+    let r = run(&node, app.as_ref(), &IprofConfig::paper_config(TracingMode::Full, false));
+    let trace = r.trace.as_ref().unwrap();
+    let events = trace.record_count();
+
+    let pm_text = {
+        let parsed = thapi::analysis::parse_trace(trace).unwrap();
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let reports = thapi::analysis::run_pipeline(&parsed, &mut sinks);
+        reports[0].payload().unwrap().to_string()
+    };
+
+    let t0 = Instant::now();
+    let hub = LiveHub::new(&node.config.hostname, 4096, false);
+    let wire = std::thread::scope(|s| {
+        let feeder = s.spawn(|| replay_trace(&hub, trace, 64));
+        let mut buf = Vec::new();
+        publish(&hub, &mut buf).unwrap();
+        feeder.join().unwrap();
+        buf
+    });
+    let publish_wall = t0.elapsed();
+
+    let t0 = Instant::now();
+    let att = Attachment::open(std::io::Cursor::new(wire.clone()), 4096).unwrap();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let out = thapi::live::run_live_pipeline(att.source(), &mut sinks, None, |_| {});
+    let stats = att.finish().unwrap();
+    let attach_wall = t0.elapsed();
+
+    assert_eq!(stats.server_dropped, 0);
+    assert_eq!(
+        out.reports[0].payload().unwrap(),
+        pm_text,
+        "loopback relay must stay byte-identical to post-mortem"
+    );
+
+    println!(
+        "\n=== loopback relay ({}: {events} events, {} wire bytes) ===\n",
+        app.name(),
+        wire.len()
+    );
+    let mut t = Table::new(&["stage", "wall ms", "events", "wire bytes/event"]);
+    t.row(&[
+        "replay + publish (hub tee -> frames)".into(),
+        format!("{:.2}", publish_wall.as_secs_f64() * 1e3),
+        human_rate(events as f64 / publish_wall.as_secs_f64()),
+        format!("{:.1}", wire.len() as f64 / events.max(1) as f64),
+    ]);
+    t.row(&[
+        "attach + merge + tally (frames -> report)".into(),
+        format!("{:.2}", attach_wall.as_secs_f64() * 1e3),
+        human_rate(events as f64 / attach_wall.as_secs_f64()),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+    println!("output asserted byte-identical to post-mortem; drops: 0");
+}

@@ -1,0 +1,85 @@
+//! Remote live viewer (experiment E-remote): `iprof serve` + `iprof
+//! attach` in one process, over a real localhost TCP socket.
+//!
+//! The publisher thread traces a workload and relays its live per-stream
+//! channels as THRL frames (docs/PROTOCOL.md); the subscriber thread
+//! attaches, mirrors the hub, and drives the UNMODIFIED LiveSource merge
+//! + tally sink — interim tables print while the traced app is still
+//! running on the other end of the socket.
+//!
+//! ```sh
+//! cargo run --release --example remote_live
+//! ```
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+use thapi::analysis::{AnalysisSink, TallySink};
+use thapi::coordinator::{run_attach, run_serve, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::LiveConfig;
+
+fn main() {
+    std::env::set_var("THAPI_APP_SCALE", "0.6");
+    let node = Node::new(NodeConfig::test_small());
+    let apps = thapi::apps::hecbench::suite();
+    let app = apps.iter().find(|a| a.name() == "jacobi2D-ze").unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    println!("== publisher on {addr}, tracing {} ==\n", app.name());
+
+    std::thread::scope(|scope| {
+        // Publisher: accept one subscriber, then run the traced workload.
+        let serve = scope.spawn(|| {
+            let (conn, _) = listener.accept().expect("accept");
+            let live_cfg = LiveConfig { channel_depth: 4096, retain: false, refresh: None };
+            run_serve(&node, app.as_ref(), &IprofConfig::default(), &live_cfg, conn)
+                .expect("publish")
+        });
+
+        // Subscriber: attach over TCP and tally on-line.
+        let conn = TcpStream::connect(addr).expect("connect");
+        let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let refreshes = AtomicUsize::new(0);
+        let attach = run_attach(conn, 4096, sinks, Some(Duration::from_millis(100)), |text| {
+            let n = refreshes.fetch_add(1, Ordering::Relaxed) + 1;
+            println!("-- interim remote tally #{n} (app still running remotely) --");
+            for line in text.lines().take(5) {
+                println!("{line}");
+            }
+            println!();
+        })
+        .expect("attach");
+        let serve = serve.join().expect("serve thread");
+
+        println!("== final remote tally (same bytes a local --live run prints) ==\n");
+        println!("{}", attach.reports[0].payload().unwrap());
+        println!(
+            "publisher: wall {:.3}s | {} events written | {} relayed in {} frames ({}B) | \
+             {} dropped",
+            serve.wall.as_secs_f64(),
+            serve.stats.written,
+            serve.publish.events,
+            serve.publish.frames,
+            serve.publish.bytes,
+            serve.total_dropped(),
+        );
+        println!(
+            "subscriber: host {} | {} merged | server received {} dropped {} | \
+             staleness mean {:.2}ms max {:.2}ms | interim reports: {}",
+            attach.hostname,
+            attach.latency.merged,
+            attach.remote.server_received,
+            attach.remote.server_dropped,
+            attach.latency.mean().as_secs_f64() * 1e3,
+            attach.latency.max.as_secs_f64() * 1e3,
+            refreshes.load(Ordering::Relaxed),
+        );
+        assert_eq!(
+            serve.total_dropped(),
+            0,
+            "loopback at this scale must be lossless"
+        );
+    });
+}

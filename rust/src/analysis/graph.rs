@@ -85,11 +85,10 @@ impl<'a> Graph<'a> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
+    use crate::analysis::muxer::MessageSource;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
@@ -113,7 +112,8 @@ mod tests {
         });
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        mux(&parse_trace(&trace).unwrap())
+        let parsed = parse_trace(&trace).unwrap();
+        MessageSource::new(&parsed).cloned().collect()
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! [`IntervalTracker`] is the streaming form: it consumes one message at
 //! a time and emits each [`Interval`] the moment its exit arrives, so a
 //! single pass over a [`super::muxer::MessageSource`] produces spans with
-//! O(open-call-depth) state instead of an O(total-events) buffer. The
-//! eager [`pair_intervals`] is a thin shim over it.
+//! O(open-call-depth) state instead of an O(total-events) buffer.
+//! [`intervals_of`] materializes that pass for callers that want the
+//! span vector. (The seed's eager `pair_intervals` shim is gone.)
 
 use super::msg::{EventMsg, ParsedTrace};
 use super::muxer::MessageSource;
@@ -167,49 +168,37 @@ fn collect_spans<'m>(msgs: impl IntoIterator<Item = &'m EventMsg>) -> Vec<Interv
     out
 }
 
-/// Pair entry/exit events from a muxed sequence into intervals.
-/// Unbalanced entries (no exit before end of trace) are emitted with
-/// `exit: None` and `end` = last seen timestamp.
-///
-/// Compatibility shim over [`IntervalTracker`].
-#[deprecated(
-    note = "feed an IntervalTracker from the streaming pass (run_pipeline) or use intervals_of \
-            instead of materializing a span vector from an owned event vector"
-)]
-pub fn pair_intervals(msgs: &[EventMsg]) -> Vec<Interval> {
-    collect_spans(msgs)
-}
-
 /// Single-pass span extraction straight from a parsed trace: lazy muxing
 /// through [`MessageSource`] into an [`IntervalTracker`], no intermediate
-/// `Vec<EventMsg>`. Sorted by start timestamp like [`pair_intervals`].
+/// `Vec<EventMsg>`. Spans are sorted by start timestamp (stable, so
+/// same-start spans keep completion order); unbalanced entries (no exit
+/// before end of trace) come out with `exit: None` and `end` = last seen
+/// timestamp.
 pub fn intervals_of(parsed: &ParsedTrace) -> Vec<Interval> {
     collect_spans(MessageSource::new(parsed))
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the eager shims are under test here
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
     use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
 
-    fn record<F: FnOnce()>(f: F) -> Vec<EventMsg> {
+    fn record<F: FnOnce()>(f: F) -> ParsedTrace {
         let _g = test_support::lock();
         install_session(SessionConfig::default());
         f();
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        mux(&parse_trace(&trace).unwrap())
+        parse_trace(&trace).unwrap()
     }
 
     #[test]
     fn simple_pairing() {
-        let msgs = record(|| {
+        let parsed = record(|| {
             let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
             let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
             emit(e, |en| {
@@ -219,7 +208,7 @@ mod tests {
                 en.u64(0);
             });
         });
-        let iv = pair_intervals(&msgs);
+        let iv = intervals_of(&parsed);
         assert_eq!(iv.len(), 1);
         assert_eq!(iv[0].name, "zeInit");
         assert_eq!(iv[0].depth, 0);
@@ -229,7 +218,7 @@ mod tests {
 
     #[test]
     fn nested_layering_depths() {
-        let msgs = record(|| {
+        let parsed = record(|| {
             // hipMemcpy wrapping a ze append (the HIPLZ pattern)
             let he = class_by_name("lttng_ust_hip:hipMemcpy_entry").unwrap();
             let hx = class_by_name("lttng_ust_hip:hipMemcpy_exit").unwrap();
@@ -248,7 +237,7 @@ mod tests {
                 e.u64(0);
             });
         });
-        let iv = pair_intervals(&msgs);
+        let iv = intervals_of(&parsed);
         assert_eq!(iv.len(), 2);
         let hip = iv.iter().find(|i| i.name == "hipMemcpy").unwrap();
         let ze = iv.iter().find(|i| i.name == "zeCommandListClose").unwrap();
@@ -259,20 +248,20 @@ mod tests {
 
     #[test]
     fn dangling_entry_closes_at_trace_end() {
-        let msgs = record(|| {
+        let parsed = record(|| {
             let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
             emit(e, |en| {
                 en.u64(0);
             });
         });
-        let iv = pair_intervals(&msgs);
+        let iv = intervals_of(&parsed);
         assert_eq!(iv.len(), 1);
         assert!(iv[0].exit.is_none());
     }
 
     #[test]
     fn interleaved_threads_pair_independently() {
-        let msgs = record(|| {
+        let parsed = record(|| {
             let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
             let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
             let t1 = std::thread::spawn(move || {
@@ -298,7 +287,7 @@ mod tests {
             t1.join().unwrap();
             t2.join().unwrap();
         });
-        let iv = pair_intervals(&msgs);
+        let iv = intervals_of(&parsed);
         assert_eq!(iv.len(), 200);
         assert!(iv.iter().all(|i| i.exit.is_some()));
         assert!(iv.iter().all(|i| i.depth == 0));
@@ -306,7 +295,7 @@ mod tests {
 
     #[test]
     fn tracker_emits_completed_spans_immediately() {
-        let msgs = record(|| {
+        let parsed = record(|| {
             let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
             let x = class_by_name("lttng_ust_ze:zeInit_exit").unwrap();
             emit(e, |en| {
@@ -321,7 +310,7 @@ mod tests {
         });
         let mut tracker = IntervalTracker::new();
         let mut emitted = Vec::new();
-        for m in &msgs {
+        for m in MessageSource::new(&parsed) {
             tracker.push(m, |iv| emitted.push(iv));
         }
         // the paired call is out before finish(); the dangling one is not

@@ -26,16 +26,19 @@
 //! * [`validate`] — the §4.2 post-mortem validation plugin (uninitialized
 //!   `pNext`, unreleased events, non-reset command lists, ...).
 //!
-//! The eager helpers ([`mux`], [`pair_intervals`], [`pretty_print`],
-//! [`timeline_json`], [`validate()`](validate::validate)) remain as thin
-//! compatibility shims over the streaming machinery; `mux` and
-//! `pair_intervals` are **deprecated** (one golden shim-vs-stream
-//! equivalence test in `rust/tests/streaming.rs` keeps them honest).
+//! The eager renderers ([`pretty_print`], [`timeline_json`],
+//! [`Tally::build`], [`validate()`](validate::validate)) remain as
+//! independent second implementations over owned slices — the golden
+//! suite in `rust/tests/streaming.rs` pins the streaming sinks
+//! byte-for-byte against them. (The seed's `mux`/`pair_intervals`
+//! materializing shims went through deprecation in PR 2 and are now
+//! deleted; [`MessageSource`] + [`intervals_of`] cover every call site.)
 //! The same graph also runs **on-line** while the application executes:
 //! [`crate::live`] feeds the [`PipelineDriver`] core from the tracing
-//! consumer thread through bounded watermarked channels. See
+//! consumer thread through bounded watermarked channels, and
+//! [`crate::remote`] extends that over a socket. See
 //! `rust/ARCHITECTURE.md` for how to write a new sink and for the live
-//! mode design.
+//! and remote designs.
 
 pub mod graph;
 pub mod interval;
@@ -49,12 +52,8 @@ pub mod validate;
 
 pub use graph::Graph;
 pub use interval::{intervals_of, Interval, IntervalTracker};
-#[allow(deprecated)]
-pub use interval::pair_intervals;
 pub use msg::{parse_trace, EventMsg, ParsedTrace};
 pub use muxer::MessageSource;
-#[allow(deprecated)]
-pub use muxer::mux;
 pub use pretty::{pretty_print, PrettySink};
 pub use sink::{run_pipeline, AnalysisSink, PipelineDriver, Report};
 pub use tally::{Tally, TallyRow, TallySink};

@@ -36,7 +36,7 @@ impl EventMsg {
 
 /// A fully parsed trace: metadata + per-stream decoded events (stream
 /// order preserved; iterate [`crate::analysis::MessageSource`] for lazy
-/// time order, or [`crate::analysis::mux`] for an owned merged vector).
+/// time order).
 #[derive(Debug)]
 pub struct ParsedTrace {
     /// Parsed metadata.

@@ -4,9 +4,10 @@
 //! The merge is exposed as [`MessageSource`], a *lazy* message iterator:
 //! it holds one heap entry per stream and yields borrowed `&EventMsg`
 //! references in global time order, so a full analysis pass allocates
-//! O(#streams) — never an O(total-events) cloned vector. The eager
-//! [`mux`] function remains as a thin compatibility shim for call sites
-//! that genuinely need an owned, materialized sequence.
+//! O(#streams) — never an O(total-events) cloned vector. (The seed's
+//! eager `mux` shim cloned every event; it is gone — a call site that
+//! genuinely needs owned data writes
+//! `MessageSource::new(&parsed).cloned().collect()`.)
 
 use super::msg::{EventMsg, ParsedTrace};
 use std::cmp::Reverse;
@@ -38,8 +39,9 @@ impl Ord for HeapEntry {
 /// Lazy k-way merge over the streams of a [`ParsedTrace`].
 ///
 /// Yields `&EventMsg` in non-decreasing timestamp order; ties are broken
-/// by stream index (stable across streams) and then by in-stream index,
-/// which matches the eager [`mux`] ordering exactly.
+/// by stream index (stable across streams) and then by in-stream index —
+/// the canonical global order every other path (live merge, remote
+/// merge) reproduces byte-for-byte.
 pub struct MessageSource<'a> {
     streams: &'a [Vec<EventMsg>],
     heap: BinaryHeap<Reverse<HeapEntry>>,
@@ -92,21 +94,7 @@ impl<'a> Iterator for MessageSource<'a> {
 
 impl<'a> ExactSizeIterator for MessageSource<'a> {}
 
-/// Merge all streams by timestamp (stable across streams by stream index).
-///
-/// Compatibility shim: materializes the [`MessageSource`] into an owned
-/// vector (one clone per event). Prefer iterating [`MessageSource`] or
-/// running [`super::sink::run_pipeline`] for single-pass analysis.
-#[deprecated(
-    note = "iterate the zero-copy MessageSource (or run_pipeline) instead of materializing \
-            an owned event vector"
-)]
-pub fn mux(trace: &ParsedTrace) -> Vec<EventMsg> {
-    MessageSource::new(trace).cloned().collect()
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // the eager `mux` shim is under test here
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;
@@ -116,7 +104,7 @@ mod tests {
     use crate::tracer::{emit, install_session, uninstall_session, SessionConfig};
 
     #[test]
-    fn mux_produces_global_time_order_across_threads() {
+    fn message_source_produces_global_time_order_across_threads() {
         let _g = test_support::lock();
         install_session(SessionConfig::default());
         let class = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
@@ -137,15 +125,15 @@ mod tests {
         let trace = collect(&session, &[]);
         let parsed = parse_trace(&trace).unwrap();
         assert!(parsed.streams.len() >= 4);
-        let merged = mux(&parsed);
+        let merged: Vec<u64> = MessageSource::new(&parsed).map(|m| m.ts).collect();
         assert_eq!(merged.len(), 800);
         for w in merged.windows(2) {
-            assert!(w[0].ts <= w[1].ts, "mux must be time-ordered");
+            assert!(w[0] <= w[1], "merge must be time-ordered");
         }
     }
 
     #[test]
-    fn message_source_matches_eager_mux_without_cloning() {
+    fn message_source_is_exact_size_and_stable_across_passes() {
         let _g = test_support::lock();
         install_session(SessionConfig::default());
         let class = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
@@ -165,24 +153,26 @@ mod tests {
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
         let parsed = parse_trace(&trace).unwrap();
-        let eager = mux(&parsed);
+        let owned: Vec<EventMsg> = MessageSource::new(&parsed).cloned().collect();
         let src = MessageSource::new(&parsed);
-        assert_eq!(src.len(), eager.len());
-        for (lazy, owned) in MessageSource::new(&parsed).zip(eager.iter()) {
-            assert_eq!(lazy.ts, owned.ts);
-            assert_eq!(lazy.tid, owned.tid);
-            assert_eq!(lazy.class.id, owned.class.id);
+        assert_eq!(src.len(), owned.len());
+        assert_eq!(owned.len(), 150);
+        // two lazy passes over the same parsed trace yield the identical
+        // sequence — the merge is a pure function of the streams
+        for (lazy, first) in MessageSource::new(&parsed).zip(owned.iter()) {
+            assert_eq!(lazy.ts, first.ts);
+            assert_eq!(lazy.tid, first.tid);
+            assert_eq!(lazy.class.id, first.class.id);
         }
     }
 
     #[test]
-    fn mux_empty_trace_is_empty() {
+    fn empty_trace_yields_empty_merge() {
         let trace = crate::tracer::btf::TraceData {
             metadata: crate::tracer::btf::generate_metadata(&[]),
             streams: vec![],
         };
         let parsed = parse_trace(&trace).unwrap();
-        assert!(mux(&parsed).is_empty());
         assert_eq!(MessageSource::new(&parsed).count(), 0);
     }
 }

@@ -72,11 +72,10 @@ impl AnalysisSink for PrettySink {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
+    use crate::analysis::muxer::MessageSource;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
@@ -98,7 +97,8 @@ mod tests {
         });
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        let msgs = mux(&parse_trace(&trace).unwrap());
+        let parsed = parse_trace(&trace).unwrap();
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
         let text = pretty_print(&msgs);
         // The paper's point: source/dest pointers + size are all visible,
         // and the address spaces are readable off the hex values.
@@ -121,7 +121,8 @@ mod tests {
         });
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        let msgs = mux(&parse_trace(&trace).unwrap());
+        let parsed = parse_trace(&trace).unwrap();
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
         let text = pretty_print(&msgs);
         assert!(text.contains("*free: 51539607552"));
         assert!(text.contains("*total: 68719476736"));

@@ -398,12 +398,11 @@ pub fn fmt_ns(ns: u64) -> String {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // two-pass shim comparisons are under test here
 mod tests {
     use super::*;
+    use crate::analysis::interval::intervals_of;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
-    use crate::analysis::pair_intervals;
+    use crate::analysis::muxer::MessageSource;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
@@ -424,13 +423,11 @@ mod tests {
         }
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        let msgs = mux(&parse_trace(&trace).unwrap());
-        let iv = pair_intervals(&msgs);
-        Tally::build(&iv, &msgs)
+        Tally::from_parsed(&parse_trace(&trace).unwrap())
     }
 
     #[test]
-    fn streaming_from_parsed_matches_two_pass_build() {
+    fn eager_build_matches_streaming_from_parsed() {
         let _g = test_support::lock();
         install_session(SessionConfig::default());
         let e = class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
@@ -446,12 +443,14 @@ mod tests {
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
         let parsed = parse_trace(&trace).unwrap();
-        let msgs = mux(&parsed);
-        let two_pass = Tally::build(&pair_intervals(&msgs), &msgs);
+        // materialized reference: owned merge + span vector through the
+        // eager Tally::build entry point
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
+        let eager = Tally::build(&intervals_of(&parsed), &msgs);
         let streaming = Tally::from_parsed(&parsed);
-        assert_eq!(streaming.host, two_pass.host);
-        assert_eq!(streaming.device, two_pass.device);
-        assert_eq!(streaming.render(), two_pass.render());
+        assert_eq!(streaming.host, eager.host);
+        assert_eq!(streaming.device, eager.device);
+        assert_eq!(streaming.render(), eager.render());
     }
 
     #[test]

@@ -106,9 +106,9 @@ fn assemble(host: Vec<String>, device: Vec<String>) -> String {
 }
 
 /// Build chrome-trace JSON from paired intervals and raw messages
-/// (profiling + sampling events are picked out of `msgs`). Compatibility
-/// shim over the shared renderers; `intervals` must already be sorted by
-/// start (as [`super::interval::pair_intervals`] returns them).
+/// (profiling + sampling events are picked out of `msgs`). Eager entry
+/// point over the shared renderers; `intervals` must already be sorted
+/// by start (as [`super::interval::intervals_of`] returns them).
 pub fn timeline_json(intervals: &[Interval], msgs: &[EventMsg]) -> String {
     let host: Vec<String> = intervals.iter().map(interval_entry).collect();
     let device: Vec<String> = msgs.iter().filter_map(event_entry).collect();
@@ -152,7 +152,7 @@ impl AnalysisSink for TimelineSink {
     fn finish(&mut self) -> Report {
         let mut host = std::mem::take(&mut self.host);
         // stable: same-start spans keep completion order, matching the
-        // eager pair_intervals sort
+        // eager intervals_of sort
         host.sort_by_key(|(start, _)| *start);
         let host: Vec<String> = host.into_iter().map(|(_, e)| e).collect();
         Report::Json(assemble(host, std::mem::take(&mut self.device)))
@@ -160,12 +160,11 @@ impl AnalysisSink for TimelineSink {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
+    use crate::analysis::interval::intervals_of;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
-    use crate::analysis::pair_intervals;
+    use crate::analysis::muxer::MessageSource;
     use crate::analysis::sink::run_pipeline;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
@@ -210,9 +209,8 @@ mod tests {
 
     fn build_sample() -> String {
         let parsed = sample_parsed();
-        let msgs = mux(&parsed);
-        let iv = pair_intervals(&msgs);
-        timeline_json(&iv, &msgs)
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
+        timeline_json(&intervals_of(&parsed), &msgs)
     }
 
     #[test]
@@ -236,8 +234,8 @@ mod tests {
     #[test]
     fn streaming_sink_is_byte_identical_to_eager_path() {
         let parsed = sample_parsed();
-        let msgs = mux(&parsed);
-        let eager = timeline_json(&pair_intervals(&msgs), &msgs);
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
+        let eager = timeline_json(&intervals_of(&parsed), &msgs);
         let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TimelineSink::new())];
         let reports = run_pipeline(&parsed, &mut sinks);
         assert_eq!(reports[0].payload().unwrap(), eager);

@@ -249,11 +249,10 @@ impl AnalysisSink for ValidateSink {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // eager-shim equivalence exercised in unit tests
 mod tests {
     use super::*;
     use crate::analysis::msg::parse_trace;
-    use crate::analysis::muxer::mux;
+    use crate::analysis::muxer::MessageSource;
     use crate::model::class_by_name;
     use crate::tracer::btf::collect;
     use crate::tracer::session::test_support;
@@ -265,7 +264,9 @@ mod tests {
         f();
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
-        validate(&mux(&parse_trace(&trace).unwrap()))
+        let parsed = parse_trace(&trace).unwrap();
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
+        validate(&msgs)
     }
 
     #[test]
@@ -370,7 +371,7 @@ mod tests {
         let session = uninstall_session().unwrap();
         let trace = collect(&session, &[]);
         let parsed = parse_trace(&trace).unwrap();
-        let msgs = mux(&parsed);
+        let msgs: Vec<_> = MessageSource::new(&parsed).cloned().collect();
         let eager = render_report(&validate(&msgs));
         let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(ValidateSink::new())];
         let reports = crate::analysis::sink::run_pipeline(&parsed, &mut sinks);

@@ -14,12 +14,14 @@ use anyhow::Result;
 use crate::apps::Workload;
 use crate::device::Node;
 use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats};
+use crate::remote::{self, Attachment, PublishStats, RemoteStats};
 use crate::sampling::{Sampler, SamplingConfig};
 use crate::tracer::btf::{self, TraceData};
 use crate::tracer::{
     install_session, uninstall_session, SessionConfig, SessionStats, SinkKind, TracingMode,
 };
 use std::collections::HashSet;
+use std::io::{Read, Write};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -295,6 +297,158 @@ pub fn run_live(
         reports: pipe.reports,
         latency: pipe.latency,
     }
+}
+
+/// Result of one `iprof serve --live` run: the live run fields plus what
+/// the publisher relayed over the wire.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Workload name.
+    pub app: String,
+    /// Configuration label.
+    pub config: String,
+    /// Application wall time.
+    pub wall: Duration,
+    /// Tracer statistics (ring-level written/dropped).
+    pub stats: SessionStats,
+    /// The collected trace — only with [`LiveConfig::retain`] (used by
+    /// the remote equivalence tests), `None` in production serve mode.
+    pub trace: Option<TraceData>,
+    /// Channel-level statistics: received/dropped/beacons.
+    pub live: LiveStats,
+    /// Wire-level statistics: frames/events/beacons/bytes relayed.
+    pub publish: PublishStats,
+}
+
+impl ServeReport {
+    /// Total events lost to backpressure anywhere on the serve path
+    /// (ring discard + channel drop — a stalled subscriber shows up
+    /// here, never as application time). Zero means the subscriber saw
+    /// exactly what a local `--live` run would have.
+    pub fn total_dropped(&self) -> u64 {
+        self.stats.dropped + self.live.dropped
+    }
+}
+
+/// Run `workload` under `config` and **publish** the live channels over
+/// `conn` instead of analyzing locally: the session's consumer feeds the
+/// hub exactly as in [`run_live`], and a publisher thread tees every
+/// event/beacon/close into THRL frames ([`crate::remote`]) for a remote
+/// `iprof attach` to merge and analyze.
+///
+/// Blocks until the workload finishes and the wire drains. Transport
+/// failures tear nothing down on the traced side — the session completes
+/// and the error is returned after teardown.
+pub fn run_serve<W: Write + Send>(
+    node: &Arc<Node>,
+    workload: &dyn Workload,
+    config: &IprofConfig,
+    live_cfg: &LiveConfig,
+    conn: W,
+) -> std::io::Result<ServeReport> {
+    assert!(config.tracing, "serve mode requires tracing");
+    let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    let session = install_session(SessionConfig {
+        mode: config.mode,
+        buffer_capacity: config.buffer_capacity,
+        sink: SinkKind::Live(hub.clone()),
+        selected_ranks: config.selected_ranks.clone(),
+        hostname: node.config.hostname.clone(),
+        consumer_interval: Duration::from_millis(2),
+    });
+    for p in &config.disabled_patterns {
+        session.disable_matching(p);
+    }
+    let sampler = config
+        .sampling
+        .clone()
+        .map(|s| Sampler::start(node.clone(), s));
+
+    let (published, wall) = std::thread::scope(|scope| {
+        let hub_ref = &hub;
+        let publisher = scope.spawn(move || remote::publish(hub_ref, conn));
+        let t0 = Instant::now();
+        // Same teardown discipline as run_live: a panicking workload must
+        // still uninstall (final drain + hub close) so the publisher's
+        // batch loop terminates and the scope can propagate the panic.
+        let run_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            workload.run(node);
+            node.synchronize();
+        }));
+        let wall = t0.elapsed();
+        if let Some(s) = sampler {
+            s.stop();
+        }
+        uninstall_session().expect("session vanished");
+        let published = publisher.join().expect("publisher thread panicked");
+        if let Err(p) = run_result {
+            std::panic::resume_unwind(p);
+        }
+        (published, wall)
+    });
+
+    let stats = session.stats();
+    let trace = live_cfg.retain.then(|| {
+        btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
+    });
+    Ok(ServeReport {
+        app: workload.name().to_string(),
+        config: config.label(),
+        wall,
+        stats,
+        trace,
+        live: hub.stats(),
+        publish: published?,
+    })
+}
+
+/// Result of one `iprof attach` run.
+#[derive(Debug)]
+pub struct AttachReport {
+    /// Hostname announced by the publisher.
+    pub hostname: String,
+    /// One final report per sink, in sink order — same contract as
+    /// [`run_live`], produced from the remote stream.
+    pub reports: Vec<AnalysisReport>,
+    /// Merge latency over the mirror hub (staleness as seen here).
+    pub latency: LatencySummary,
+    /// Mirror-hub statistics (received == events merged; never drops,
+    /// the attach feed is lossless).
+    pub local: LiveStats,
+    /// Connection statistics, including the publisher's drop totals —
+    /// the remote half of the drop accounting. If the publisher died
+    /// before a clean Eos, [`RemoteStats::error`] is set and the
+    /// reports above cover everything received up to the cut (partial
+    /// analysis of a dying app is preserved, not discarded).
+    pub remote: RemoteStats,
+}
+
+/// Attach to a remote publisher over `conn` and drive `sinks` on-line
+/// from its stream: handshake, mirror the hub, run the **unmodified**
+/// [`LiveSource`] merge through [`live::run_live_pipeline`] with
+/// optional periodic refresh — the receiving half of `iprof serve`.
+///
+/// For a lossless feed (`remote.server_dropped == 0`) the reports are
+/// byte-identical to a local `iprof --live` of the same run.
+pub fn run_attach<R: Read + Send + 'static>(
+    conn: R,
+    depth: usize,
+    mut sinks: Vec<Box<dyn AnalysisSink>>,
+    refresh: Option<Duration>,
+    on_refresh: impl FnMut(&str),
+) -> std::io::Result<AttachReport> {
+    let att = Attachment::open(conn, depth)?;
+    let hostname = att.hostname.clone();
+    let pipe = live::run_live_pipeline(att.source(), &mut sinks, refresh, on_refresh);
+    let local = att.hub().stats();
+    let remote = att.finish()?;
+    Ok(AttachReport {
+        hostname,
+        reports: pipe.reports,
+        latency: pipe.latency,
+        local,
+        remote,
+    })
 }
 
 /// Run baseline + each config, with one warmup baseline run first (primes

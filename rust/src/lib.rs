@@ -28,6 +28,10 @@
 //!   watermarked per-stream channels (beacons for quiet streams), so
 //!   every analysis runs while the application executes with
 //!   O(streams × channel-depth) memory (`iprof --live`).
+//! * [`remote`] — the network hop between hub and merge: a versioned,
+//!   length-prefixed frame protocol (`docs/PROTOCOL.md`) over which
+//!   `iprof serve` publishes the live channels and `iprof attach` drives
+//!   the unmodified merge + sinks on another machine.
 //! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
 //! * [`aggregate`] — on-node aggregation and the local-/global-master
 //!   composite-profile merge (paper §3.7).
@@ -50,6 +54,7 @@ pub mod device;
 pub mod intercept;
 pub mod live;
 pub mod model;
+pub mod remote;
 pub mod runtime;
 pub mod sampling;
 pub mod tracer;

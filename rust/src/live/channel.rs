@@ -26,7 +26,7 @@ use crate::tracer::btf::{registry_classes, DecodedClass};
 use crate::tracer::encoder::decode_payload;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One entry in a channel queue: arrival sequence (merge tie-break),
 /// the decoded message, and the push instant (latency accounting).
@@ -71,6 +71,82 @@ pub(super) struct HubState {
     pub(super) channels: Vec<Channel>,
     /// Set by [`LiveHub::close_all`]: no new channels will appear.
     pub(super) sealed: bool,
+}
+
+impl HubState {
+    /// THE release predicate of the live merge: a candidate at timestamp
+    /// `ts` may be released iff every *empty* channel has closed or
+    /// watermarked **strictly** past it (a watermark of exactly `ts`
+    /// still admits a future equal-timestamp message that may sort
+    /// earlier by stream index). [`super::source::LiveSource`] releases
+    /// through this, and [`LiveHub::feed_remote`] waits through it — one
+    /// definition, so the strict `>` byte-identity rule cannot drift
+    /// between the two.
+    pub(super) fn releasable(&self, ts: u64) -> bool {
+        self.channels
+            .iter()
+            .all(|ch| !ch.queue.is_empty() || ch.closed || ch.watermark > ts)
+    }
+
+    /// Is at least one queued message releasable right now? (The head
+    /// with the minimum timestamp is releasable iff any is.) Used by
+    /// [`LiveHub::feed_remote`] to wait for queue space only when the
+    /// merge is provably able to make progress.
+    pub(super) fn has_releasable(&self) -> bool {
+        let mut min_ts: Option<u64> = None;
+        for ch in &self.channels {
+            if let Some(e) = ch.queue.front() {
+                min_ts = Some(min_ts.map_or(e.msg.ts, |b| b.min(e.msg.ts)));
+            }
+        }
+        min_ts.map(|ts| self.releasable(ts)).unwrap_or(false)
+    }
+}
+
+/// Cursor a remote forwarder keeps between [`LiveHub::next_forward_batch`]
+/// calls: what has already been announced to the subscriber, so each
+/// batch carries only the delta.
+#[derive(Debug, Default)]
+pub struct ForwardCursor {
+    /// Channel count already announced.
+    announced: usize,
+    /// Per-channel last-forwarded state.
+    per: Vec<ChannelCursor>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ChannelCursor {
+    watermark: u64,
+    dropped: u64,
+    closed: bool,
+}
+
+/// One round of forwardable progress popped from a hub — everything a
+/// remote publisher must relay to keep a subscriber's mirror hub
+/// equivalent. Events come out in per-stream FIFO order (the order the
+/// consumer pushed them), which is all the subscriber's merge needs.
+#[derive(Debug, Default)]
+pub struct ForwardBatch {
+    /// The channel set grew to this count (announce before the events).
+    pub grown_to: Option<usize>,
+    /// Popped messages as `(channel index, message)`.
+    pub events: Vec<(usize, EventMsg)>,
+    /// Channels whose watermark advanced, with the new watermark.
+    pub beacons: Vec<(usize, u64)>,
+    /// Channels whose drop count grew, with the new cumulative count.
+    pub drops: Vec<(usize, u64)>,
+    /// Channels that closed since the last batch.
+    pub closed: Vec<usize>,
+}
+
+impl ForwardBatch {
+    fn is_empty(&self) -> bool {
+        self.grown_to.is_none()
+            && self.events.is_empty()
+            && self.beacons.is_empty()
+            && self.drops.is_empty()
+            && self.closed.is_empty()
+    }
 }
 
 /// Aggregate live-transport statistics.
@@ -254,6 +330,97 @@ impl LiveHub {
         self.progress.notify_all();
     }
 
+    /// Hostname this hub stamps on decoded messages.
+    pub fn hostname(&self) -> &str {
+        &self.hostname
+    }
+
+    /// Block until there is forwardable progress beyond `cursor`, pop it
+    /// and return it; `None` once the hub is sealed, every channel is
+    /// closed and every queue is drained (clean end of stream).
+    ///
+    /// This is the **tee** a remote publisher (`iprof serve`) drains
+    /// instead of a local [`super::source::LiveSource`]: it takes the
+    /// merge's role of sole queue consumer, but performs no ordering work
+    /// — events leave in per-stream FIFO order and the subscriber's own
+    /// merge re-establishes global order. Watermarks, drop counts and
+    /// closes are reported as deltas against `cursor`, so relaying every
+    /// batch in order reproduces the hub state machine exactly.
+    pub fn next_forward_batch(&self, cursor: &mut ForwardCursor) -> Option<ForwardBatch> {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            let mut batch = ForwardBatch::default();
+            if st.channels.len() > cursor.per.len() {
+                cursor.per.resize(st.channels.len(), ChannelCursor::default());
+            }
+            if st.channels.len() > cursor.announced {
+                cursor.announced = st.channels.len();
+                batch.grown_to = Some(cursor.announced);
+            }
+            for (i, ch) in st.channels.iter_mut().enumerate() {
+                let cur = &mut cursor.per[i];
+                while let Some(e) = ch.queue.pop_front() {
+                    batch.events.push((i, e.msg));
+                }
+                if ch.watermark > cur.watermark {
+                    cur.watermark = ch.watermark;
+                    batch.beacons.push((i, ch.watermark));
+                }
+                if ch.dropped > cur.dropped {
+                    cur.dropped = ch.dropped;
+                    batch.drops.push((i, ch.dropped));
+                }
+                if ch.closed && !cur.closed {
+                    cur.closed = true;
+                    batch.closed.push(i);
+                }
+            }
+            if !batch.is_empty() {
+                // replay producers may be parked waiting for queue space
+                self.progress.notify_all();
+                return Some(batch);
+            }
+            if st.sealed && st.channels.iter().all(|ch| ch.closed && ch.queue.is_empty()) {
+                return None;
+            }
+            // Liveness backstop only, like the merge's own wait.
+            let (guard, _) = self
+                .progress
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+        }
+    }
+
+    /// Lossless single-message feed for a **remote subscriber's** mirror
+    /// hub (`iprof attach`). Unlike [`LiveHub::feed_blocking`] it ignores
+    /// the per-channel depth and instead waits only while the *total*
+    /// queued message count is at or above `soft_cap` **and** the merge
+    /// has releasable work — the one situation where waiting is provably
+    /// deadlock-free. A single reader thread multiplexes every stream of
+    /// the connection, so blocking on one full channel could starve the
+    /// very beacon frame (later in the byte stream) the merge needs to
+    /// drain it; when nothing is releasable the message is admitted
+    /// immediately and memory grows transiently, bounded by one publisher
+    /// watermark round, not by the trace.
+    pub fn feed_remote(&self, idx: usize, msg: EventMsg, soft_cap: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            let total: usize = st.channels.iter().map(|c| c.queue.len()).sum();
+            if total < soft_cap || !st.has_releasable() {
+                let ch = &mut st.channels[idx];
+                ch.watermark = ch.watermark.max(msg.ts);
+                let seq = ch.next_seq;
+                ch.next_seq += 1;
+                ch.received += 1;
+                ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+                self.progress.notify_all();
+                return;
+            }
+            st = self.progress.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
     /// Aggregate transport statistics.
     pub fn stats(&self) -> LiveStats {
         let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
@@ -312,6 +479,44 @@ mod tests {
         let st = hub.inner.lock().unwrap();
         assert_eq!(st.channels[0].watermark, 100);
         assert_eq!(st.channels[0].beacons, 2);
+    }
+
+    #[test]
+    fn forward_batches_report_events_watermarks_drops_and_eos() {
+        let hub = LiveHub::new("hubtest", 2, false);
+        hub.ensure_channels(2);
+        hub.push_batch(0, (0..5).map(|i| msg(i, 0, 0)).collect()); // 3 drop
+        hub.beacon(1, 77);
+        let mut cursor = ForwardCursor::default();
+        let b = hub.next_forward_batch(&mut cursor).unwrap();
+        assert_eq!(b.grown_to, Some(2));
+        assert_eq!(b.events.len(), 2, "only the accepted messages are popped");
+        assert_eq!(b.events[0].0, 0);
+        assert!(b.beacons.contains(&(0, 4)), "watermark passed the dropped events");
+        assert!(b.beacons.contains(&(1, 77)));
+        assert_eq!(b.drops, vec![(0, 3)]);
+        assert!(b.closed.is_empty());
+        hub.close_all();
+        let b = hub.next_forward_batch(&mut cursor).unwrap();
+        assert!(b.events.is_empty());
+        assert_eq!(b.closed, vec![0, 1]);
+        assert!(hub.next_forward_batch(&mut cursor).is_none(), "then clean EOS");
+        // the cursor keeps batches delta-only: nothing is ever re-reported
+    }
+
+    #[test]
+    fn feed_remote_ignores_per_channel_depth_when_nothing_is_releasable() {
+        let hub = LiveHub::new("hubtest", 2, false);
+        hub.ensure_channels(2);
+        // channel 1 stays empty with watermark 0: nothing is releasable,
+        // so feed_remote must admit far beyond depth*channels without
+        // blocking (a blocked reader here would deadlock a real attach)
+        for i in 0..50 {
+            hub.feed_remote(0, msg(i, 0, 0), 4);
+        }
+        let st = hub.inner.lock().unwrap();
+        assert_eq!(st.channels[0].queue.len(), 50, "lossless: nothing dropped");
+        assert!(!st.has_releasable(), "channel 1 still vetoes");
     }
 
     #[test]

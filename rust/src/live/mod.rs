@@ -40,13 +40,17 @@
 //!
 //! Entry points: [`crate::coordinator::run_live`] (whole-workload runs,
 //! `iprof --live`), [`replay_trace`] (drive a recorded trace through the
-//! live machinery, for benches and equivalence tests).
+//! live machinery, for benches and equivalence tests). The hub also
+//! exposes a forwarding tee ([`LiveHub::next_forward_batch`]) and a
+//! remote-subscriber feed ([`LiveHub::feed_remote`]) so [`crate::remote`]
+//! can split this pipeline across a socket (`iprof serve` /
+//! `iprof attach`) without touching the merge.
 
 pub mod channel;
 pub mod pipeline;
 pub mod source;
 
-pub use channel::{LiveHub, LiveStats};
+pub use channel::{ForwardBatch, ForwardCursor, LiveHub, LiveStats};
 pub use pipeline::{run_live_pipeline, LivePipelineResult};
 pub use source::{LatencySummary, LiveSource};
 

@@ -94,10 +94,9 @@ impl Iterator for LiveSource {
                 }
             }
             if let Some((ts, idx, _)) = best {
-                let releasable = st.channels.iter().all(|ch| {
-                    !ch.queue.is_empty() || ch.closed || ch.watermark > ts
-                });
-                if releasable {
+                // shared predicate (channel.rs): empty channels veto until
+                // their watermark moves STRICTLY past the candidate
+                if st.releasable(ts) {
                     let entry = st.channels[idx].queue.pop_front().unwrap();
                     self.latency.record(entry.pushed.elapsed());
                     // replay producers may be parked waiting for queue space
@@ -163,10 +162,7 @@ mod tests {
         hub.beacon(1, 100);
         {
             let st = hub.inner.lock().unwrap();
-            let releasable = st.channels.iter().all(|ch| {
-                !ch.queue.is_empty() || ch.closed || ch.watermark > 100
-            });
-            assert!(!releasable, "watermark == ts must still veto release");
+            assert!(!st.releasable(100), "watermark == ts must still veto release");
         }
         // a late equal-timestamp message on the quiet LOWER-indexed..
         // (here higher-indexed) stream arrives and must sort after;

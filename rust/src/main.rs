@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! iprof [OPTIONS] -- <workload>[,<workload>...]
+//! iprof serve <bind-addr> [OPTIONS] -- <workload>    publish live channels
+//! iprof attach <addr> [-a <list>] [--refresh <ms>]   remote live viewer
 //!
 //!   -m, --mode <minimal|default|full>   tracing mode        [default]
 //!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
@@ -218,6 +220,12 @@ fn parse_args(args: &[String]) -> Result<Options> {
 
 const HELP: &str = "iprof — THAPI-rs tracing launcher
 USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
+       iprof serve <bind-addr> [OPTIONS] [--] <workload>
+         trace the workload and PUBLISH the live per-stream channels over a
+         socket (docs/PROTOCOL.md); waits for one subscriber, then runs
+       iprof attach <addr> [-a <list>] [--refresh <ms>] [--live-depth <n>]
+         connect to a publisher and run the analysis sinks here, fed by the
+         same merge local --live uses (byte-identical for lossless feeds)
   -m, --mode <minimal|default|full>    tracing mode [default]
   -s, --sample [<ms>]                  enable device sampling (50 ms default)
   -n, --node <aurora|polaris|small>    node configuration [small]
@@ -263,8 +271,149 @@ fn emit_reports(name: &str, analyses: &[AnalysisKind], reports: Vec<Report>) -> 
     Ok(())
 }
 
+/// `iprof serve <bind-addr> [OPTIONS] -- <workload>`: trace one workload
+/// and publish its live channels to the first subscriber that connects.
+fn serve_main(args: &[String]) -> Result<()> {
+    let addr = args
+        .first()
+        .filter(|a| !a.starts_with('-'))
+        .context("serve needs a bind address (e.g. iprof serve 127.0.0.1:7007 -- saxpy-ze)")?;
+    let o = parse_args(&args[1..])?;
+    if !o.tracing {
+        bail!("serve requires tracing (drop --no-trace)");
+    }
+    if o.trace_dir.is_some() {
+        bail!("serve relays on-line and persists no trace (drop --trace-dir)");
+    }
+    if o.refresh_ms.is_some() {
+        bail!("--refresh belongs to the viewer: pass it to iprof attach instead");
+    }
+    if o.workloads.len() != 1 {
+        bail!("serve publishes exactly one workload run (got {})", o.workloads.len());
+    }
+    let name = &o.workloads[0];
+    let registry = all_workloads();
+    let w = registry
+        .iter()
+        .find(|w| w.name() == name)
+        .with_context(|| format!("unknown workload {name} (try --list)"))?;
+
+    let node = Node::new(o.node.clone());
+    let config = IprofConfig {
+        tracing: true,
+        mode: o.mode,
+        sampling: o.sample_ms.map(|ms| SamplingConfig {
+            interval: std::time::Duration::from_millis(ms),
+        }),
+        sink: SinkKind::Memory, // superseded by the live sink inside run_serve
+        selected_ranks: o.ranks.clone(),
+        disabled_patterns: o.filters.clone(),
+        ..Default::default()
+    };
+    let live_cfg = LiveConfig {
+        channel_depth: o.live_depth.unwrap_or(LiveConfig::default().channel_depth),
+        retain: false,
+        refresh: None,
+    };
+
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("cannot bind {addr}"))?;
+    eprintln!(
+        "iprof: serving {name} on {} — waiting for one subscriber (iprof attach)",
+        listener.local_addr()?
+    );
+    let (conn, peer) = listener.accept().context("accept failed")?;
+    eprintln!("iprof: subscriber {peer} connected, running {name} [{}]", w.backend());
+
+    let r = coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn)
+        .context("publishing failed")?;
+    eprintln!(
+        "iprof: {name}: wall={:.3}s events={} relayed={} ({} frames, {}B) dropped={} \
+         (ring {} + channel {}) beacons={}",
+        r.wall.as_secs_f64(),
+        r.stats.written,
+        r.publish.events,
+        r.publish.frames,
+        r.publish.bytes,
+        r.total_dropped(),
+        r.stats.dropped,
+        r.live.dropped,
+        r.publish.beacons,
+    );
+    if o.live_strict && r.total_dropped() > 0 {
+        bail!(
+            "serve: {} events dropped ({} at rings, {} at channels of depth {})",
+            r.total_dropped(),
+            r.stats.dropped,
+            r.live.dropped,
+            live_cfg.channel_depth
+        );
+    }
+    Ok(())
+}
+
+/// `iprof attach <addr> [-a <list>] [--refresh <ms>]`: subscribe to a
+/// publisher and run the analysis sinks here.
+fn attach_main(args: &[String]) -> Result<()> {
+    let addr = args
+        .first()
+        .filter(|a| !a.starts_with('-'))
+        .context("attach needs a publisher address (e.g. iprof attach 127.0.0.1:7007)")?;
+    let o = parse_args(&args[1..])?;
+    if !o.workloads.is_empty() {
+        bail!("attach analyzes a remote run; it takes no workload");
+    }
+    if o.analyses.is_empty() {
+        bail!("attach needs at least one analysis sink (-a tally,...)");
+    }
+    let conn = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("cannot connect to {addr}"))?;
+    eprintln!("iprof: attached to {addr}");
+    let depth = o.live_depth.unwrap_or(LiveConfig::default().channel_depth);
+    let sinks: Vec<Box<dyn AnalysisSink>> = o
+        .analyses
+        .iter()
+        .map(|k| -> Box<dyn AnalysisSink> { k.sink() })
+        .collect();
+    let refresh = o.refresh_ms.map(std::time::Duration::from_millis);
+    let r = coordinator::run_attach(conn, depth, sinks, refresh, |text| {
+        eprintln!("iprof: live refresh [remote]\n{text}");
+    })
+    .context("attach failed")?;
+    eprintln!(
+        "iprof: remote {}: merged={} frames={} beacons={} server received={} \
+         server dropped={} latency mean={:.2}ms max={:.2}ms",
+        r.hostname,
+        r.latency.merged,
+        r.remote.frames,
+        r.remote.beacons,
+        r.remote.server_received,
+        r.remote.server_dropped,
+        r.latency.mean().as_secs_f64() * 1e3,
+        r.latency.max.as_secs_f64() * 1e3,
+    );
+    emit_reports(&format!("remote-{}", r.hostname), &o.analyses, r.reports)?;
+    // reports are emitted first: a dying publisher still yields the partial
+    // analysis of everything received before the cut
+    if let Some(err) = &r.remote.error {
+        bail!("attach: publisher connection ended early ({err}); reports above are partial");
+    }
+    if o.live_strict && r.remote.server_dropped > 0 {
+        bail!(
+            "attach: publisher dropped {} events — the on-line view is incomplete",
+            r.remote.server_dropped
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => return serve_main(&args[1..]),
+        Some("attach") => return attach_main(&args[1..]),
+        _ => {}
+    }
     let o = parse_args(&args)?;
     if o.live {
         if !o.tracing {

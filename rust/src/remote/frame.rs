@@ -1,0 +1,638 @@
+//! The THRL wire codec: versioned, length-prefixed binary frames.
+//!
+//! Everything on a remote-live connection after the fixed
+//! [`MAGIC`]+[`VERSION`] preamble is a sequence of frames, each
+//!
+//! ```text
+//! len:  u32 LE   — byte length of what follows (type + body)
+//! type: u8       — frame discriminator
+//! body: len-1 B  — type-specific payload
+//! ```
+//!
+//! The codec is a pure function of its input: [`encode`] appends exactly
+//! one frame to a buffer, [`decode`] parses exactly one frame back (or
+//! reports "incomplete" so a reader can buffer), and
+//! `decode(encode(f)) == f` for every representable frame — pinned by a
+//! property test over randomized frames in `rust/tests/remote.rs`. No
+//! clocks, no process state, no platform-dependent layout: two builds of
+//! this module always agree on the bytes.
+//!
+//! The full grammar, field encodings and semantics (beacon contract, drop
+//! accounting, EOS) are specified in `docs/PROTOCOL.md`; this module is
+//! the reference implementation.
+
+use crate::tracer::encoder::FieldValue;
+use std::io::{self, Read, Write};
+
+/// Connection preamble magic: "THRL" (THapi Remote Live).
+pub const MAGIC: [u8; 4] = *b"THRL";
+
+/// Protocol version spoken by this build. The preamble carries it; a
+/// subscriber must reject any version it does not implement.
+pub const VERSION: u32 = 1;
+
+/// Upper bound on `len` (type + body bytes). Frames beyond this are a
+/// protocol error, never an allocation request — a corrupt or hostile
+/// length prefix cannot make a reader allocate gigabytes.
+pub const MAX_FRAME_LEN: usize = 16 << 20;
+
+/// Upper bound on stream counts and stream indices a subscriber will
+/// honor (one channel per traced thread; 2^20 is far beyond any real
+/// session). Same rationale as [`MAX_FRAME_LEN`]: a corrupt or hostile
+/// `Streams`/`Event` frame must never translate into a multi-gigabyte
+/// channel-table allocation.
+pub const MAX_STREAMS: u32 = 1 << 20;
+
+// Frame type discriminators (u8 on the wire).
+const T_HELLO: u8 = 0x01;
+const T_STREAMS: u8 = 0x02;
+const T_EVENT: u8 = 0x03;
+const T_BEACON: u8 = 0x04;
+const T_DROPS: u8 = 0x05;
+const T_CLOSE: u8 = 0x06;
+const T_EOS: u8 = 0x07;
+
+// Field value tags inside Event frames.
+const F_U64: u8 = 0;
+const F_I64: u8 = 1;
+const F_F64: u8 = 2;
+const F_PTR: u8 = 3;
+const F_STR: u8 = 4;
+
+/// One decoded event as carried on the wire: the stream-independent parts
+/// of an [`EventMsg`](crate::analysis::EventMsg). The class is referenced
+/// by id — the subscriber resolves it against the class table shipped in
+/// the [`Frame::Hello`] metadata, exactly how post-mortem analysis
+/// resolves record ids against `metadata.btf`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireEvent {
+    /// Timestamp (trace-clock ns).
+    pub ts: u64,
+    /// Producing rank.
+    pub rank: u32,
+    /// Producing thread.
+    pub tid: u32,
+    /// Event-class id (resolved via the Hello metadata).
+    pub class_id: u32,
+    /// Decoded field values, self-describing (tag + value) so the codec
+    /// round-trips without a class table.
+    pub fields: Vec<FieldValue>,
+}
+
+/// One protocol frame. See `docs/PROTOCOL.md` for the normative grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// First frame on every connection: who is publishing and how to
+    /// decode it. `metadata` is the full BTF metadata text (the stream
+    /// registry's class table); `streams` is the channel count known at
+    /// connect time (may grow via [`Frame::Streams`]).
+    Hello {
+        /// Publisher hostname (stamped on every reconstructed message).
+        hostname: String,
+        /// BTF metadata text: the event-class registry.
+        metadata: String,
+        /// Channels existing at connect time.
+        streams: u32,
+    },
+    /// The per-stream channel set grew to `count` (late-registering
+    /// threads). Idempotent; counts never shrink.
+    Streams {
+        /// New total channel count.
+        count: u32,
+    },
+    /// One decoded event on channel `stream`. Per-stream frame order is
+    /// the stream's event order; cross-stream order is unspecified (the
+    /// subscriber re-merges).
+    Event {
+        /// Channel index (== session stream registration index).
+        stream: u32,
+        /// The event payload.
+        event: WireEvent,
+    },
+    /// Watermark promise: every future `Event` on `stream` has
+    /// `ts >= watermark`. Monotone per stream.
+    Beacon {
+        /// Channel index.
+        stream: u32,
+        /// Timestamp lower bound for all future events of this stream.
+        watermark: u64,
+    },
+    /// Cumulative count of messages the publisher dropped on `stream`
+    /// (bounded-channel backpressure). Monotone per stream; the latest
+    /// value is the total.
+    Drops {
+        /// Channel index.
+        stream: u32,
+        /// Cumulative dropped-message count for this stream.
+        dropped: u64,
+    },
+    /// No further events or beacons will ever arrive on `stream`.
+    Close {
+        /// Channel index.
+        stream: u32,
+    },
+    /// Clean end of session; always the final frame. Carries the
+    /// publisher's hub totals so both ends agree on completeness.
+    Eos {
+        /// Messages the publisher's channels accepted in total.
+        received: u64,
+        /// Messages the publisher's channels dropped in total.
+        dropped: u64,
+    },
+}
+
+/// Codec errors. `Incomplete` is not among them: [`decode`] signals a
+/// partial frame with `Ok(None)` so buffering readers can distinguish
+/// "need more bytes" from "stream is corrupt".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The connection preamble did not start with [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The publisher speaks a protocol version this build does not.
+    BadVersion(u32),
+    /// Unknown frame type discriminator.
+    BadFrameType(u8),
+    /// Unknown field-value tag inside an Event frame.
+    BadFieldTag(u8),
+    /// The length prefix exceeds [`MAX_FRAME_LEN`] (or is zero).
+    BadLength(usize),
+    /// A frame body ended early or carried trailing bytes.
+    Malformed(&'static str),
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad preamble magic {m:02x?} (expected THRL)"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            FrameError::BadFrameType(t) => write!(f, "unknown frame type {t:#04x}"),
+            FrameError::BadFieldTag(t) => write!(f, "unknown field tag {t:#04x}"),
+            FrameError::BadLength(n) => write!(f, "frame length {n} out of bounds"),
+            FrameError::Malformed(what) => write!(f, "malformed frame: {what}"),
+            FrameError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<FrameError> for io::Error {
+    fn from(e: FrameError) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u16 length + UTF-8 bytes (hostnames, string fields). Strings longer
+/// than 64 KiB are truncated on a char boundary — the wire stays valid
+/// UTF-8 (decoding never fails), at the cost of losing the tail of such
+/// a string; event string fields are capped at 4 KiB upstream, so this
+/// is unreachable in practice.
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let mut n = s.len().min(u16::MAX as usize);
+    while n > 0 && !s.is_char_boundary(n) {
+        n -= 1;
+    }
+    put_u16(out, n as u16);
+    out.extend_from_slice(&s.as_bytes()[..n]);
+}
+
+/// u32 length + UTF-8 bytes (metadata text).
+fn put_str32(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+fn put_field(out: &mut Vec<u8>, v: &FieldValue) {
+    match v {
+        FieldValue::U64(x) => {
+            out.push(F_U64);
+            put_u64(out, *x);
+        }
+        FieldValue::I64(x) => {
+            out.push(F_I64);
+            put_u64(out, *x as u64);
+        }
+        FieldValue::F64(x) => {
+            out.push(F_F64);
+            put_u64(out, x.to_bits());
+        }
+        FieldValue::Ptr(x) => {
+            out.push(F_PTR);
+            put_u64(out, *x);
+        }
+        FieldValue::Str(s) => {
+            out.push(F_STR);
+            put_str16(out, s);
+        }
+    }
+}
+
+/// Append one length-prefixed frame to `out`. Deterministic: equal frames
+/// always produce equal bytes.
+pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
+    let len_at = out.len();
+    put_u32(out, 0); // length backpatched below
+    match frame {
+        Frame::Hello { hostname, metadata, streams } => {
+            out.push(T_HELLO);
+            put_str16(out, hostname);
+            put_str32(out, metadata);
+            put_u32(out, *streams);
+        }
+        Frame::Streams { count } => {
+            out.push(T_STREAMS);
+            put_u32(out, *count);
+        }
+        Frame::Event { stream, event } => {
+            out.push(T_EVENT);
+            put_u32(out, *stream);
+            put_u64(out, event.ts);
+            put_u32(out, event.rank);
+            put_u32(out, event.tid);
+            put_u32(out, event.class_id);
+            let nfields = event.fields.len().min(u16::MAX as usize);
+            put_u16(out, nfields as u16);
+            for f in &event.fields[..nfields] {
+                put_field(out, f);
+            }
+        }
+        Frame::Beacon { stream, watermark } => {
+            out.push(T_BEACON);
+            put_u32(out, *stream);
+            put_u64(out, *watermark);
+        }
+        Frame::Drops { stream, dropped } => {
+            out.push(T_DROPS);
+            put_u32(out, *stream);
+            put_u64(out, *dropped);
+        }
+        Frame::Close { stream } => {
+            out.push(T_CLOSE);
+            put_u32(out, *stream);
+        }
+        Frame::Eos { received, dropped } => {
+            out.push(T_EOS);
+            put_u64(out, *received);
+            put_u64(out, *dropped);
+        }
+    }
+    let body_len = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Little bounds-checked reader over a frame body.
+struct Body<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Body<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() < n {
+            return Err(FrameError::Malformed("body ended early"));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String, FrameError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::BadUtf8)
+    }
+
+    fn str32(&mut self) -> Result<String, FrameError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::BadUtf8)
+    }
+
+    fn field(&mut self) -> Result<FieldValue, FrameError> {
+        let tag = self.u8()?;
+        Ok(match tag {
+            F_U64 => FieldValue::U64(self.u64()?),
+            F_I64 => FieldValue::I64(self.u64()? as i64),
+            F_F64 => FieldValue::F64(f64::from_bits(self.u64()?)),
+            F_PTR => FieldValue::Ptr(self.u64()?),
+            F_STR => FieldValue::Str(self.str16()?),
+            other => return Err(FrameError::BadFieldTag(other)),
+        })
+    }
+
+    fn finish(self) -> Result<(), FrameError> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(FrameError::Malformed("trailing bytes in body"))
+        }
+    }
+}
+
+/// Decode one frame from the front of `buf`.
+///
+/// Returns `Ok(Some((frame, consumed)))` for a complete frame,
+/// `Ok(None)` when `buf` holds only a prefix of a frame (read more and
+/// retry), and `Err` for protocol violations. `consumed` covers the
+/// length prefix too, so `&buf[consumed..]` starts the next frame.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len == 0 || len > MAX_FRAME_LEN {
+        return Err(FrameError::BadLength(len));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let frame = decode_body(&buf[4..4 + len])?;
+    Ok(Some((frame, 4 + len)))
+}
+
+/// Decode a frame body (everything after the length prefix). The body
+/// must contain exactly one frame: early EOF and trailing bytes are both
+/// errors.
+pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
+    let mut b = Body { buf: body };
+    let ty = b.u8()?;
+    let frame = match ty {
+        T_HELLO => Frame::Hello {
+            hostname: b.str16()?,
+            metadata: b.str32()?,
+            streams: b.u32()?,
+        },
+        T_STREAMS => Frame::Streams { count: b.u32()? },
+        T_EVENT => {
+            let stream = b.u32()?;
+            let ts = b.u64()?;
+            let rank = b.u32()?;
+            let tid = b.u32()?;
+            let class_id = b.u32()?;
+            let nfields = b.u16()? as usize;
+            let mut fields = Vec::with_capacity(nfields.min(256));
+            for _ in 0..nfields {
+                fields.push(b.field()?);
+            }
+            Frame::Event { stream, event: WireEvent { ts, rank, tid, class_id, fields } }
+        }
+        T_BEACON => Frame::Beacon { stream: b.u32()?, watermark: b.u64()? },
+        T_DROPS => Frame::Drops { stream: b.u32()?, dropped: b.u64()? },
+        T_CLOSE => Frame::Close { stream: b.u32()? },
+        T_EOS => Frame::Eos { received: b.u64()?, dropped: b.u64()? },
+        other => return Err(FrameError::BadFrameType(other)),
+    };
+    b.finish()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------------
+// Blocking I/O helpers
+// ---------------------------------------------------------------------------
+
+/// Write the connection preamble (magic + version). The publisher sends
+/// this once, immediately after accepting the subscriber.
+pub fn write_preamble(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())
+}
+
+/// Read and verify the connection preamble; errors on wrong magic or a
+/// version this build does not speak (the entire version negotiation:
+/// v1 is take-it-or-leave-it, see `docs/PROTOCOL.md` § Versioning).
+pub fn read_preamble(r: &mut impl Read) -> io::Result<()> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic).into());
+    }
+    let mut v = [0u8; 4];
+    r.read_exact(&mut v)?;
+    let version = u32::from_le_bytes(v);
+    if version != VERSION {
+        return Err(FrameError::BadVersion(version).into());
+    }
+    Ok(())
+}
+
+/// Encode and write one frame; returns the bytes written.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<usize> {
+    let mut buf = Vec::with_capacity(64);
+    encode(frame, &mut buf);
+    w.write_all(&buf)?;
+    Ok(buf.len())
+}
+
+/// Read exactly one frame. An EOF at a frame boundary is reported as
+/// `UnexpectedEof` — the protocol ends with [`Frame::Eos`], never by the
+/// transport closing, so any EOF here is abnormal.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut lenbuf = [0u8; 4];
+    r.read_exact(&mut lenbuf)?;
+    let len = u32::from_le_bytes(lenbuf) as usize;
+    if len == 0 || len > MAX_FRAME_LEN {
+        return Err(FrameError::BadLength(len).into());
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(decode_body(&body)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        encode(&f, &mut buf);
+        let (back, consumed) = decode(&buf).unwrap().unwrap();
+        assert_eq!(back, f);
+        assert_eq!(consumed, buf.len());
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Hello {
+            hostname: "node0".into(),
+            metadata: "btf_version: 1\nevents:\n".into(),
+            streams: 3,
+        });
+        roundtrip(Frame::Streams { count: 7 });
+        roundtrip(Frame::Event {
+            stream: 2,
+            event: WireEvent {
+                ts: u64::MAX,
+                rank: 1,
+                tid: 42,
+                class_id: 9,
+                fields: vec![
+                    FieldValue::U64(7),
+                    FieldValue::I64(-3),
+                    FieldValue::F64(2.5),
+                    FieldValue::Ptr(0xff00_0000_dead_beef),
+                    FieldValue::Str("kernel".into()),
+                ],
+            },
+        });
+        roundtrip(Frame::Beacon { stream: 0, watermark: 123_456 });
+        roundtrip(Frame::Drops { stream: 5, dropped: 99 });
+        roundtrip(Frame::Close { stream: 1 });
+        roundtrip(Frame::Eos { received: 1000, dropped: 4 });
+    }
+
+    #[test]
+    fn incomplete_prefix_is_not_an_error() {
+        let mut buf = Vec::new();
+        encode(&Frame::Streams { count: 1 }, &mut buf);
+        for cut in 0..buf.len() {
+            assert_eq!(decode(&buf[..cut]).unwrap(), None, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_inputs_are_rejected_not_misread() {
+        // zero-length frame
+        assert!(matches!(decode(&[0, 0, 0, 0, 0]), Err(FrameError::BadLength(0))));
+        // absurd length prefix must not allocate
+        let huge = (MAX_FRAME_LEN as u32 + 1).to_le_bytes();
+        assert!(matches!(decode(&huge), Err(FrameError::BadLength(_))));
+        // unknown frame type
+        let mut buf = Vec::new();
+        encode(&Frame::Close { stream: 0 }, &mut buf);
+        buf[4] = 0x7f;
+        assert!(matches!(decode(&buf), Err(FrameError::BadFrameType(0x7f))));
+        // trailing garbage inside the declared body length
+        let mut buf = Vec::new();
+        encode(&Frame::Close { stream: 0 }, &mut buf);
+        buf.push(0xee);
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) + 1;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(decode(&buf), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn preamble_roundtrip_and_rejection() {
+        let mut buf = Vec::new();
+        write_preamble(&mut buf).unwrap();
+        read_preamble(&mut &buf[..]).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let err = read_preamble(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        let mut newer = buf.clone();
+        newer[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let err = read_preamble(&mut &newer[..]).unwrap_err();
+        assert!(err.to_string().contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_sequentially() {
+        let mut buf = Vec::new();
+        let frames = vec![
+            Frame::Streams { count: 2 },
+            Frame::Beacon { stream: 1, watermark: 10 },
+            Frame::Eos { received: 5, dropped: 0 },
+        ];
+        for f in &frames {
+            encode(f, &mut buf);
+        }
+        let mut off = 0;
+        let mut got = Vec::new();
+        while off < buf.len() {
+            let (f, n) = decode(&buf[off..]).unwrap().unwrap();
+            got.push(f);
+            off += n;
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn oversized_strings_truncate_on_char_boundaries() {
+        // 'é' is 2 bytes; an odd-length cut must step back to a boundary
+        let big: String = "é".repeat(40_000); // 80_000 bytes > u16::MAX
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Event {
+                stream: 0,
+                event: WireEvent {
+                    ts: 0,
+                    rank: 0,
+                    tid: 0,
+                    class_id: 0,
+                    fields: vec![FieldValue::Str(big)],
+                },
+            },
+            &mut buf,
+        );
+        // the truncated wire must still decode as valid UTF-8
+        let (back, _) = decode(&buf).unwrap().unwrap();
+        let Frame::Event { event, .. } = back else { panic!("wrong frame") };
+        let FieldValue::Str(s) = &event.fields[0] else { panic!("wrong field") };
+        assert!(s.len() <= u16::MAX as usize);
+        assert!(s.chars().all(|c| c == 'é'), "no mangled tail character");
+    }
+
+    #[test]
+    fn nan_payloads_survive_by_bits() {
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Event {
+                stream: 0,
+                event: WireEvent {
+                    ts: 1,
+                    rank: 0,
+                    tid: 0,
+                    class_id: 0,
+                    fields: vec![FieldValue::F64(f64::NAN)],
+                },
+            },
+            &mut buf,
+        );
+        let (back, _) = decode(&buf).unwrap().unwrap();
+        let Frame::Event { event, .. } = back else { panic!("wrong frame") };
+        let FieldValue::F64(v) = event.fields[0] else { panic!("wrong field") };
+        assert_eq!(v.to_bits(), f64::NAN.to_bits(), "NaN must round-trip bit-exactly");
+    }
+}

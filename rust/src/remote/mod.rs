@@ -1,0 +1,56 @@
+//! Remote live viewing: the network hop between hub and merge.
+//!
+//! PR 2's live mode runs collection and analysis in one process; this
+//! module splits them across a socket — the `lttng-relayd` /
+//! babeltrace2-live analogue, and the first step toward multi-node
+//! fan-in:
+//!
+//! ```text
+//!  traced app ── rings ──► consumer ──► LiveHub (bounded channels)
+//!                                          │ next_forward_batch (tee)
+//!                 iprof serve              ▼
+//!                                publish: THRL frames          publish.rs
+//!                                preamble · Hello(metadata) ·
+//!                                Event/Beacon/Drops/Close · Eos
+//!                                          │
+//!                                     any byte stream (TCP)    frame.rs
+//!                                          │
+//!                 iprof attach             ▼
+//!                                Attachment: mirror LiveHub     attach.rs
+//!                                          │
+//!                                          ▼
+//!                           UNMODIFIED LiveSource k-way merge
+//!                                          │
+//!                                          ▼
+//!                           run_live_pipeline → existing sinks
+//! ```
+//!
+//! Three properties carry the design (all pinned by `rust/tests/remote.rs`):
+//!
+//! 1. **Byte-identical remote output.** The subscriber rebuilds a hub
+//!    whose (events, watermarks, closes) sequence is equivalent to the
+//!    publisher's, and drains it with the same merge and sinks as local
+//!    `--live` — for a lossless feed, `iprof attach` output equals local
+//!    output byte for byte.
+//! 2. **The traced application never blocks.** A slow subscriber stalls
+//!    the publisher thread, the hub's channels fill, and the consumer's
+//!    try-push drops-and-counts — loss is reported on *both* ends
+//!    ([`Frame::Drops`] per stream, totals in [`Frame::Eos`]), never
+//!    converted into application latency.
+//! 3. **A deterministic codec.** Frames are pure data
+//!    ([`encode`]/[`decode`] round-trip property-tested); version
+//!    negotiation, the frame grammar and the beacon/drop/EOS semantics
+//!    are specified in `docs/PROTOCOL.md`.
+//!
+//! Entry points: [`crate::coordinator::run_serve`] /
+//! [`crate::coordinator::run_attach`] (the `iprof serve` / `iprof
+//! attach` CLI), or [`publish`] + [`Attachment`] directly for custom
+//! transports (anything `Read`/`Write`).
+
+pub mod attach;
+pub mod frame;
+pub mod publish;
+
+pub use attach::{Attachment, RemoteStats};
+pub use frame::{decode, decode_body, encode, Frame, FrameError, WireEvent, MAGIC, VERSION};
+pub use publish::{publish, PublishStats};

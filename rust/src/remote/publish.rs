@@ -1,0 +1,200 @@
+//! The publishing end of a remote-live connection (`iprof serve`).
+//!
+//! [`publish`] is the `lttng-relayd` analogue collapsed into the traced
+//! process: it drains a [`LiveHub`]'s per-stream channels through
+//! [`LiveHub::next_forward_batch`] and relays everything — events,
+//! watermark beacons, drop counts, closes — as THRL frames over any
+//! reliable byte stream, finishing with a clean [`Frame::Eos`].
+//!
+//! The publisher inherits the hub's backpressure contract end to end: it
+//! never pushes back on the tracing consumer. If the transport stalls
+//! (slow subscriber, slow network), the hub's bounded channels fill and
+//! the consumer's try-push **drops and counts**; the loss is then
+//! reported to the subscriber through [`Frame::Drops`] / [`Frame::Eos`],
+//! so both ends always agree on completeness. The traced application
+//! never waits on a socket.
+
+use super::frame::{self, Frame, WireEvent};
+use crate::live::{ForwardCursor, LiveHub};
+use crate::tracer::btf::generate_metadata;
+use std::io::{self, BufWriter, Write};
+
+/// What one [`publish`] call relayed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PublishStats {
+    /// Frames written (preamble excluded).
+    pub frames: u64,
+    /// Event frames among them.
+    pub events: u64,
+    /// Beacon frames among them.
+    pub beacons: u64,
+    /// Bytes written, preamble included.
+    pub bytes: u64,
+}
+
+/// Publish `hub` over `conn` until the hub seals and drains: preamble,
+/// then [`Frame::Hello`] carrying the hostname and the full BTF metadata
+/// text (the subscriber's class table), then forward batches as they
+/// appear, then [`Frame::Eos`] with the hub's final received/dropped
+/// totals.
+///
+/// Blocks until end of stream; run it on its own thread next to the
+/// workload (see [`crate::coordinator::run_serve`]). Returns an error as
+/// soon as the transport fails — the traced session is unaffected, the
+/// hub just stops being drained and its channels degrade to
+/// drop-and-count.
+pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
+    let mut w = BufWriter::new(conn);
+    let mut stats = PublishStats::default();
+    frame::write_preamble(&mut w)?;
+    stats.bytes += 8;
+
+    let hello = Frame::Hello {
+        hostname: hub.hostname().to_string(),
+        // The same registry-derived metadata a post-mortem `collect`
+        // writes: the subscriber decodes class ids through the identical
+        // descriptor path.
+        metadata: generate_metadata(&[]),
+        streams: hub.stats().channels as u32,
+    };
+    stats.bytes += frame::write_frame(&mut w, &hello)? as u64;
+    stats.frames += 1;
+    w.flush()?;
+
+    let mut cursor = ForwardCursor::default();
+    while let Some(batch) = hub.next_forward_batch(&mut cursor) {
+        if let Some(count) = batch.grown_to {
+            stats.bytes += frame::write_frame(&mut w, &Frame::Streams { count: count as u32 })? as u64;
+            stats.frames += 1;
+        }
+        for (idx, msg) in batch.events {
+            let f = Frame::Event {
+                stream: idx as u32,
+                event: WireEvent {
+                    ts: msg.ts,
+                    rank: msg.rank,
+                    tid: msg.tid,
+                    class_id: msg.class.id,
+                    fields: msg.fields,
+                },
+            };
+            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
+            stats.frames += 1;
+            stats.events += 1;
+        }
+        for (idx, watermark) in batch.beacons {
+            let f = Frame::Beacon { stream: idx as u32, watermark };
+            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
+            stats.frames += 1;
+            stats.beacons += 1;
+        }
+        for (idx, dropped) in batch.drops {
+            let f = Frame::Drops { stream: idx as u32, dropped };
+            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
+            stats.frames += 1;
+        }
+        for idx in batch.closed {
+            stats.bytes += frame::write_frame(&mut w, &Frame::Close { stream: idx as u32 })? as u64;
+            stats.frames += 1;
+        }
+        // One flush per batch: frames reach the subscriber with drain-round
+        // granularity (milliseconds), not buffer-fill granularity.
+        w.flush()?;
+    }
+
+    let totals = hub.stats();
+    let eos = Frame::Eos { received: totals.received, dropped: totals.dropped };
+    stats.bytes += frame::write_frame(&mut w, &eos)? as u64;
+    stats.frames += 1;
+    w.flush()?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::EventMsg;
+    use crate::tracer::btf::DecodedClass;
+    use std::sync::Arc;
+
+    fn msg(ts: u64) -> EventMsg {
+        EventMsg {
+            ts,
+            rank: 0,
+            tid: 0,
+            hostname: Arc::from("pubtest"),
+            class: Arc::new(DecodedClass {
+                id: 0,
+                name: "lttng_ust_ze:zeInit_entry".into(),
+                api: "ZE".into(),
+                flags: "h".into(),
+                fields: vec![],
+            }),
+            fields: vec![],
+        }
+    }
+
+    #[test]
+    fn publish_emits_preamble_hello_events_and_eos() {
+        let hub = LiveHub::new("pubtest", 8, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, vec![msg(1), msg(2)]);
+        hub.close_all();
+
+        let mut wire = Vec::new();
+        let stats = publish(&hub, &mut wire).unwrap();
+        assert_eq!(stats.events, 2);
+        assert_eq!(stats.bytes as usize, wire.len());
+
+        let mut r = &wire[..];
+        frame::read_preamble(&mut r).unwrap();
+        let mut frames = Vec::new();
+        // read until Eos (the protocol guarantees it terminates the stream)
+        loop {
+            let f = frame::read_frame(&mut r).unwrap();
+            let done = matches!(f, Frame::Eos { .. });
+            frames.push(f);
+            if done {
+                break;
+            }
+        }
+        assert!(matches!(frames[0], Frame::Hello { .. }));
+        let events: Vec<u64> = frames
+            .iter()
+            .filter_map(|f| match f {
+                Frame::Event { event, .. } => Some(event.ts),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(events, vec![1, 2], "per-stream event order is preserved");
+        assert!(frames.iter().any(|f| matches!(f, Frame::Close { stream: 0 })));
+        assert!(matches!(frames.last(), Some(Frame::Eos { received: 2, dropped: 0 })));
+        assert!(r.is_empty(), "Eos is the final frame");
+    }
+
+    #[test]
+    fn publish_relays_drop_counts() {
+        let hub = LiveHub::new("pubtest", 2, false);
+        hub.ensure_channels(1);
+        // depth 2: 3 of 5 messages drop at the hub
+        hub.push_batch(0, (0..5).map(msg).collect());
+        hub.close_all();
+        let mut wire = Vec::new();
+        publish(&hub, &mut wire).unwrap();
+        let mut r = &wire[..];
+        frame::read_preamble(&mut r).unwrap();
+        let mut saw_drops = None;
+        loop {
+            match frame::read_frame(&mut r).unwrap() {
+                Frame::Drops { stream: 0, dropped } => saw_drops = Some(dropped),
+                Frame::Eos { received, dropped } => {
+                    assert_eq!(received, 2);
+                    assert_eq!(dropped, 3);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(saw_drops, Some(3), "per-stream cumulative drop count is relayed");
+    }
+}

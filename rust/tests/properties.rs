@@ -249,9 +249,9 @@ fn synthetic_parsed(rng: &mut Rng) -> thapi::analysis::ParsedTrace {
 /// The streaming muxer preserves global time order and stream-index
 /// stability: its output is exactly the stable sort of all events by
 /// (ts, stream index, in-stream index), i.e. ties break by stream and
-/// per-stream order is never reordered. (The deprecated eager `mux`
-/// shim is pinned to this order by the golden equivalence tests in
-/// `rust/tests/streaming.rs`.)
+/// per-stream order is never reordered. (The live and remote merges are
+/// pinned to this same order by `rust/tests/live.rs` and
+/// `rust/tests/remote.rs`.)
 #[test]
 fn prop_streaming_muxer_time_order_and_stream_stability() {
     use thapi::analysis::MessageSource;

@@ -1,0 +1,445 @@
+//! Remote live viewer tests: codec round-trip property, loopback
+//! byte-identity, drop accounting, and the whole serve/attach stack.
+//!
+//! The acceptance bar: `iprof serve --live` + `iprof attach` over a real
+//! socket must produce sink output **byte-identical** to local
+//! `iprof --live` (and therefore to post-mortem analysis) for lossless
+//! feeds, with drop counts surfaced on both ends when feeds are lossy.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use thapi::analysis::{self, AnalysisSink, TallySink, TimelineSink};
+use thapi::coordinator::{run_attach, run_serve, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, LiveConfig, LiveHub, LiveSource};
+use thapi::remote::{decode, encode, publish, Attachment, Frame, WireEvent};
+use thapi::tracer::encoder::FieldValue;
+use thapi::util::{prop, Rng};
+
+/// Global-session tests cannot overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn app(name: &str) -> std::sync::Arc<dyn thapi::apps::Workload> {
+    thapi::apps::hecbench::suite()
+        .into_iter()
+        .chain(thapi::apps::spechpc::suite())
+        .find(|a| a.name() == name)
+        .unwrap_or_else(|| panic!("app {name}"))
+}
+
+// ---------------------------------------------------------------------------
+// Property: decode(encode(frame)) round-trips for arbitrary frames
+// ---------------------------------------------------------------------------
+
+fn arbitrary_field(rng: &mut Rng) -> FieldValue {
+    match rng.below(5) {
+        0 => FieldValue::U64(rng.next_u64()),
+        1 => FieldValue::I64(rng.next_u64() as i64),
+        // finite values only: the equality below goes through PartialEq,
+        // under which NaN != NaN; NaN bit-exactness is covered by the
+        // codec's own unit tests
+        2 => FieldValue::F64((rng.next_u64() as i64 as f64) / 1024.0),
+        3 => FieldValue::Ptr(rng.next_u64()),
+        _ => {
+            let n = rng.range(0, 64);
+            let s: String = (0..n)
+                .map(|_| char::from_u32(0x20 + rng.below(0x5e) as u32).unwrap())
+                .collect();
+            FieldValue::Str(s)
+        }
+    }
+}
+
+fn arbitrary_frame(rng: &mut Rng) -> Frame {
+    match rng.below(7) {
+        0 => {
+            let n = rng.range(0, 512);
+            let metadata: String = (0..n)
+                .map(|_| char::from_u32(0x20 + rng.below(0x5e) as u32).unwrap())
+                .collect();
+            Frame::Hello {
+                hostname: format!("node{}", rng.below(1000)),
+                metadata,
+                streams: rng.next_u64() as u32,
+            }
+        }
+        1 => Frame::Streams { count: rng.next_u64() as u32 },
+        2 => Frame::Event {
+            stream: rng.below(1 << 16) as u32,
+            event: WireEvent {
+                ts: rng.next_u64(),
+                rank: rng.next_u64() as u32,
+                tid: rng.next_u64() as u32,
+                class_id: rng.next_u64() as u32,
+                fields: (0..rng.range(0, 12)).map(|_| arbitrary_field(rng)).collect(),
+            },
+        },
+        3 => Frame::Beacon { stream: rng.below(1 << 16) as u32, watermark: rng.next_u64() },
+        4 => Frame::Drops { stream: rng.below(1 << 16) as u32, dropped: rng.next_u64() },
+        5 => Frame::Close { stream: rng.below(1 << 16) as u32 },
+        _ => Frame::Eos { received: rng.next_u64(), dropped: rng.next_u64() },
+    }
+}
+
+/// `decode(encode(f)) == f` for arbitrary frames, alone and back-to-back
+/// in one buffer, and every strict prefix reads as "incomplete", never as
+/// a wrong frame.
+#[test]
+fn prop_frame_codec_roundtrips_arbitrary_frames() {
+    prop::check(200, 0x2e07e, |rng| {
+        let frames: Vec<Frame> = (0..rng.range(1, 8)).map(|_| arbitrary_frame(rng)).collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            encode(f, &mut wire);
+        }
+        // sequential decode returns the exact frame sequence
+        let mut off = 0;
+        let mut got = Vec::new();
+        while off < wire.len() {
+            let (f, n) = decode(&wire[off..]).expect("valid wire").expect("complete frame");
+            assert!(n > 4, "every frame consumes its length prefix and body");
+            got.push(f);
+            off += n;
+        }
+        assert_eq!(off, wire.len());
+        assert_eq!(got, frames);
+        // a strict prefix of the first frame is incomplete, not corrupt
+        let (_, first_len) = decode(&wire).unwrap().unwrap();
+        let cut = rng.range(0, first_len);
+        assert_eq!(decode(&wire[..cut]).expect("prefix is not an error"), None);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Loopback: replayed trace through serve/attach == local live == post-mortem
+// ---------------------------------------------------------------------------
+
+/// The acceptance-criteria core: a lossless replayed trace published over
+/// a real TCP socket and analyzed by `attach` produces tally output
+/// byte-identical to the local `--live` replay AND to post-mortem
+/// analysis of the same trace.
+#[test]
+fn attach_tally_is_byte_identical_to_local_live_and_postmortem() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let r = thapi::coordinator::run(&node, app("saxpy-ze").as_ref(), &IprofConfig::default());
+    let trace = r.trace.as_ref().unwrap();
+
+    // post-mortem reference
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+    let pm_text = pm_reports[0].payload().unwrap().to_string();
+
+    // local live replay reference (lossless blocking feed)
+    let local_hub = LiveHub::new(&node.config.hostname, 64, false);
+    let local_source = LiveSource::new(local_hub.clone());
+    let local_text = std::thread::scope(|s| {
+        let feeder = s.spawn(|| replay_trace(&local_hub, trace, 16));
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let out = thapi::live::run_live_pipeline(local_source, &mut sinks, None, |_| {});
+        feeder.join().unwrap();
+        out.reports[0].payload().unwrap().to_string()
+    });
+    assert_eq!(local_text, pm_text, "precondition: local live equals post-mortem");
+
+    // remote: replay into a serve-side hub, publish over TCP, attach here
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let serve_hub = LiveHub::new(&node.config.hostname, 64, false);
+    let (attach_report, publish_stats) = std::thread::scope(|s| {
+        let hub = &serve_hub;
+        let publisher = s.spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            publish(hub, conn).unwrap()
+        });
+        let feeder = s.spawn(move || replay_trace(hub, trace, 16));
+        let conn = TcpStream::connect(addr).unwrap();
+        let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let report = run_attach(conn, 64, sinks, None, |_| {}).unwrap();
+        feeder.join().unwrap();
+        (report, publisher.join().unwrap())
+    });
+
+    assert_eq!(
+        attach_report.reports[0].payload().unwrap(),
+        pm_text,
+        "remote tally must be byte-identical to post-mortem (and local live)"
+    );
+    assert_eq!(attach_report.remote.server_dropped, 0, "lossless replay");
+    assert_eq!(attach_report.remote.server_received, trace.record_count());
+    assert_eq!(attach_report.latency.merged, trace.record_count());
+    assert_eq!(publish_stats.events, trace.record_count());
+    assert_eq!(attach_report.local.dropped, 0, "the attach feed never drops");
+}
+
+/// Same bar for the full two-sink shape over an in-memory wire: the
+/// remote merge must reproduce the exact (ts, stream, seq) order, which
+/// timeline output is sensitive to.
+#[test]
+fn attach_tally_and_timeline_match_postmortem_over_memory_wire() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::polaris());
+    let r = thapi::coordinator::run(&node, app("513.soma").as_ref(), &IprofConfig::default());
+    let trace = r.trace.as_ref().unwrap();
+    assert!(trace.streams.len() > 1, "need a multi-stream trace");
+
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+
+    // publish a lossless replay into a Vec<u8>, then attach from it —
+    // the codec alone carries the whole session
+    let hub = LiveHub::new(&node.config.hostname, 256, false);
+    let wire = std::thread::scope(|s| {
+        let feeder = s.spawn(|| replay_trace(&hub, trace, 32));
+        let mut buf = Vec::new();
+        publish(&hub, &mut buf).unwrap();
+        feeder.join().unwrap();
+        buf
+    });
+
+    let att = Attachment::open(std::io::Cursor::new(wire), 256).unwrap();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let out = thapi::live::run_live_pipeline(att.source(), &mut sinks, None, |_| {});
+    let stats = att.finish().unwrap();
+    assert_eq!(stats.server_dropped, 0);
+    assert_eq!(out.reports[0].payload(), pm_reports[0].payload(), "tally byte-identical");
+    assert_eq!(out.reports[1].payload(), pm_reports[1].payload(), "timeline byte-identical");
+}
+
+// ---------------------------------------------------------------------------
+// Whole stack: run_serve + run_attach with a real traced workload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_and_attach_whole_stack_matches_postmortem_of_retained_trace() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::test_small());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // deep channels (no drops) + retain so the identical run feeds both paths
+    let live_cfg = LiveConfig { channel_depth: 1 << 16, retain: true, refresh: None };
+
+    let (serve_report, attach_report) = std::thread::scope(|s| {
+        let node_ref = &node;
+        let cfg_ref = &live_cfg;
+        let server = s.spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            run_serve(
+                node_ref,
+                app("saxpy-ze").as_ref(),
+                &IprofConfig::default(),
+                cfg_ref,
+                conn,
+            )
+            .unwrap()
+        });
+        let conn = TcpStream::connect(addr).unwrap();
+        let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let attach = run_attach(conn, 1 << 16, sinks, None, |_| {}).unwrap();
+        (server.join().unwrap(), attach)
+    });
+
+    assert_eq!(serve_report.total_dropped(), 0, "deep channels must not drop");
+    assert!(serve_report.stats.written > 50);
+    assert_eq!(serve_report.publish.events, serve_report.stats.written);
+    assert_eq!(attach_report.remote.server_received, serve_report.stats.written);
+    assert_eq!(attach_report.latency.merged, serve_report.stats.written);
+    assert_eq!(attach_report.hostname, node.config.hostname);
+
+    let parsed = analysis::parse_trace(serve_report.trace.as_ref().unwrap()).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+    assert_eq!(
+        attach_report.reports[0].payload(),
+        pm_reports[0].payload(),
+        "remote on-line tally must be byte-identical to post-mortem of the same run"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Drop accounting: lossy feeds are visible on both ends
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lossy_publisher_surfaces_drop_counts_to_the_subscriber() {
+    // depth-2 hub, nothing draining during the pushes: most messages drop
+    // at the publisher and the subscriber must learn the exact count
+    let hub = LiveHub::new("lossy", 2, false);
+    hub.ensure_channels(1);
+    let class = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+    let n: u64 = 50;
+    for i in 0..n {
+        let msg = hub.decode(0, 0, class.id, i, &0u64.to_le_bytes()).unwrap();
+        hub.push_batch(0, vec![msg]);
+    }
+    hub.close_all();
+    let server_stats = hub.stats();
+    assert_eq!(server_stats.received, 2);
+    assert_eq!(server_stats.dropped, n - 2, "publisher end: drops counted");
+
+    let mut wire = Vec::new();
+    publish(&hub, &mut wire).unwrap();
+    let att = Attachment::open(std::io::Cursor::new(wire), 8).unwrap();
+    let merged = att.source().count();
+    let stats = att.finish().unwrap();
+    assert_eq!(merged, 2, "only the surviving messages arrive");
+    assert_eq!(stats.server_dropped, n - 2, "subscriber end: drops surfaced");
+    assert_eq!(stats.server_received, 2);
+}
+
+/// A publisher that dies before Eos must still yield the partial
+/// analysis of everything received — that is the point of watching a
+/// run live — with the transport error surfaced in the stats.
+#[test]
+fn dying_publisher_still_yields_partial_reports() {
+    let hub = LiveHub::new("dying", 64, false);
+    hub.ensure_channels(1);
+    let class = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+    for i in 0..10 {
+        let msg = hub.decode(0, 0, class.id, i, &0u64.to_le_bytes()).unwrap();
+        hub.push_batch(0, vec![msg]);
+    }
+    hub.close_all();
+    let mut wire = Vec::new();
+    publish(&hub, &mut wire).unwrap();
+    // cut the connection mid-stream: drop the Eos frame and then some
+    wire.truncate(wire.len() - 20);
+
+    let att = Attachment::open(std::io::Cursor::new(wire), 64).unwrap();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let out = thapi::live::run_live_pipeline(att.source(), &mut sinks, None, |_| {});
+    let stats = att.finish().unwrap();
+    assert!(stats.error.is_some(), "the cut must be surfaced: {stats:?}");
+    assert!(out.latency.merged > 0, "events before the cut were still analyzed");
+    assert_eq!(out.reports.len(), 1, "partial report produced, not discarded");
+    assert!(out.reports[0].payload().unwrap().contains("zeInit"));
+}
+
+// ---------------------------------------------------------------------------
+// Ordering: the remote merge reproduces the live tie-break exactly
+// ---------------------------------------------------------------------------
+
+/// Randomized multi-stream feeds with deliberate timestamp ties: the
+/// subscriber's merged (ts, rank, tid) sequence equals the post-mortem
+/// MessageSource order — through the wire.
+#[test]
+fn prop_remote_merge_order_equals_postmortem_merge() {
+    use thapi::analysis::{EventMsg, MessageSource, ParsedTrace};
+    use thapi::tracer::btf::{DecodedClass, Metadata};
+
+    prop::check(25, 0x27e40, |rng| {
+        let class = Arc::new(DecodedClass {
+            id: 0,
+            name: "lttng_ust_ze:zeInit_entry".to_string(),
+            api: "ZE".to_string(),
+            flags: "h".to_string(),
+            fields: vec![],
+        });
+        let hostname: Arc<str> = Arc::from("remotenode");
+        let n_streams = rng.range(1, 6);
+        let mut streams = Vec::with_capacity(n_streams);
+        for si in 0..n_streams {
+            let mut ts = rng.below(4);
+            let n = rng.range(0, 40);
+            let mut events = Vec::with_capacity(n);
+            for i in 0..n {
+                ts += rng.below(3); // zero increments force equal timestamps
+                events.push(EventMsg {
+                    ts,
+                    rank: si as u32,
+                    tid: i as u32,
+                    hostname: hostname.clone(),
+                    class: class.clone(),
+                    fields: vec![],
+                });
+            }
+            streams.push(events);
+        }
+        let parsed = ParsedTrace { metadata: Metadata::default(), streams };
+        let expected: Vec<(u64, u32, u32)> =
+            MessageSource::new(&parsed).map(|m| (m.ts, m.rank, m.tid)).collect();
+
+        // hand-build the wire: Hello (empty metadata is fine — the tid/rank
+        // carry the identity; class id 0 must resolve, so ship a one-class
+        // table), then per-stream event runs with watermark beacons
+        let mut md = String::from("btf_version: 1\nenv:\nevents:\n");
+        md.push_str("  - id: 0\n    name: lttng_ust_ze:zeInit_entry\n    api: ZE\n    flags: h\n    fields:\n");
+        let mut wire = Vec::new();
+        thapi::remote::frame::write_preamble(&mut wire).unwrap();
+        thapi::remote::frame::write_frame(
+            &mut wire,
+            &Frame::Hello {
+                hostname: "remotenode".into(),
+                metadata: md,
+                streams: parsed.streams.len() as u32,
+            },
+        )
+        .unwrap();
+        // interleave bounded runs from each stream, then close everything:
+        // cursor[i] tracks how much of stream i is already on the wire
+        let mut cursor = vec![0usize; parsed.streams.len()];
+        loop {
+            let mut progressed = false;
+            for (i, s) in parsed.streams.iter().enumerate() {
+                if cursor[i] >= s.len() {
+                    continue;
+                }
+                progressed = true;
+                let run = rng.range(1, 6).min(s.len() - cursor[i]);
+                for m in &s[cursor[i]..cursor[i] + run] {
+                    thapi::remote::frame::write_frame(
+                        &mut wire,
+                        &Frame::Event {
+                            stream: i as u32,
+                            event: WireEvent {
+                                ts: m.ts,
+                                rank: m.rank,
+                                tid: m.tid,
+                                class_id: 0,
+                                fields: vec![],
+                            },
+                        },
+                    )
+                    .unwrap();
+                }
+                cursor[i] += run;
+                if let Some(next) = s.get(cursor[i]) {
+                    // valid watermark: this stream's future events start here
+                    thapi::remote::frame::write_frame(
+                        &mut wire,
+                        &Frame::Beacon { stream: i as u32, watermark: next.ts },
+                    )
+                    .unwrap();
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        for i in 0..parsed.streams.len() {
+            thapi::remote::frame::write_frame(&mut wire, &Frame::Close { stream: i as u32 })
+                .unwrap();
+        }
+        let total: u64 = parsed.streams.iter().map(|s| s.len() as u64).sum();
+        thapi::remote::frame::write_frame(
+            &mut wire,
+            &Frame::Eos { received: total, dropped: 0 },
+        )
+        .unwrap();
+
+        let att = Attachment::open(std::io::Cursor::new(wire), 8).unwrap();
+        let got: Vec<(u64, u32, u32)> = att.source().map(|m| (m.ts, m.rank, m.tid)).collect();
+        att.finish().unwrap();
+        assert_eq!(got, expected, "remote merge must equal the post-mortem merge exactly");
+    });
+}

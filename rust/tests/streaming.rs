@@ -1,21 +1,21 @@
 //! Golden equivalence tests for the streaming analysis graph.
 //!
-//! The seed implementation materialized everything: `mux` cloned every
-//! decoded event into one `Vec<EventMsg>`, `pair_intervals` built a
-//! second vector, and every plugin re-scanned those slices. The
-//! streaming graph (lazy `MessageSource` → incremental `IntervalTracker`
-//! → `AnalysisSink` fan-out) must produce **byte-identical** output for
-//! tally, timeline, pretty and validate from a single pass — these tests
-//! pin that equivalence on real traced workloads.
-//!
-//! This file is THE golden shim-vs-stream equivalence suite: it is the
-//! one deliberate consumer of the deprecated eager `mux`/`pair_intervals`
-//! shims, kept to prove the streaming graph still reproduces them.
-#![allow(deprecated)]
+//! The seed implementation materialized everything: an owned merged
+//! `Vec<EventMsg>`, a second `Vec<Interval>`, and per-plugin rescans of
+//! both. Those shims (`mux`, `pair_intervals`) are deleted; what remains
+//! as an independent second implementation are the **eager renderers**
+//! (`Tally::build`, `timeline_json`, `pretty_print`, `validate`), which
+//! consume owned slices and share no pass with the sink graph. This
+//! suite pins the streaming single-pass graph (lazy `MessageSource` →
+//! incremental `IntervalTracker` → `AnalysisSink` fan-out) **byte for
+//! byte** against those renderers on real traced workloads — the same
+//! golden bar the shim suite used to set, now anchored on the streaming
+//! primitives themselves.
 
 use std::sync::{Mutex, MutexGuard};
 use thapi::analysis::{
-    self, AnalysisSink, PrettySink, TallySink, TimelineSink, ValidateSink,
+    self, AnalysisSink, EventMsg, MessageSource, PrettySink, TallySink, TimelineSink,
+    ValidateSink,
 };
 use thapi::apps::{hecbench, spechpc};
 use thapi::coordinator::{run, IprofConfig};
@@ -52,11 +52,12 @@ fn traced(name: &str) -> analysis::ParsedTrace {
     traced_on(name, NodeConfig::test_small())
 }
 
-/// The seed's two-pass materialized outputs: (tally, timeline, pretty,
-/// validate) rendered text.
-fn two_pass(parsed: &analysis::ParsedTrace) -> (String, String, String, String) {
-    let msgs = analysis::mux(parsed);
-    let intervals = analysis::pair_intervals(&msgs);
+/// The eager-renderer reference outputs: (tally, timeline, pretty,
+/// validate) rendered from an owned merged vector + span vector —
+/// deliberately NOT the sink path.
+fn eager_reference(parsed: &analysis::ParsedTrace) -> (String, String, String, String) {
+    let msgs: Vec<EventMsg> = MessageSource::new(parsed).cloned().collect();
+    let intervals = analysis::intervals_of(parsed);
     (
         analysis::Tally::build(&intervals, &msgs).render(),
         analysis::timeline_json(&intervals, &msgs),
@@ -89,7 +90,7 @@ fn streaming_graph_is_byte_identical_on_hiplz_app() {
     // lrn-hip layers HIP on ZE: nested intervals, device rows, kernels
     let parsed = traced("lrn-hip");
     assert!(parsed.event_count() > 100);
-    let (t2, j2, p2, v2) = two_pass(&parsed);
+    let (t2, j2, p2, v2) = eager_reference(&parsed);
     let (t1, j1, p1, v1) = single_pass(&parsed);
     assert_eq!(t1, t2, "tally must match byte-for-byte");
     assert_eq!(j1, j2, "timeline must match byte-for-byte");
@@ -104,7 +105,7 @@ fn streaming_graph_is_byte_identical_on_mpi_offload_app() {
     // through the muxer
     let parsed = traced_on("513.soma", NodeConfig::polaris());
     assert!(parsed.streams.len() > 1, "need a multi-stream trace");
-    let (t2, j2, p2, v2) = two_pass(&parsed);
+    let (t2, j2, p2, v2) = eager_reference(&parsed);
     let (t1, j1, p1, v1) = single_pass(&parsed);
     assert_eq!(t1, t2);
     assert_eq!(j1, j2);
@@ -141,9 +142,25 @@ fn streaming_tally_matches_runreport_tally() {
     let r = run(&node, app("saxpy-ze").as_ref(), &IprofConfig::default());
     let tally = r.tally().unwrap();
     let parsed = analysis::parse_trace(r.trace.as_ref().unwrap()).unwrap();
-    let msgs = analysis::mux(&parsed);
-    let two_pass = analysis::Tally::build(&analysis::pair_intervals(&msgs), &msgs);
-    assert_eq!(tally.host, two_pass.host);
-    assert_eq!(tally.device, two_pass.device);
-    assert_eq!(tally.render(), two_pass.render());
+    let msgs: Vec<EventMsg> = MessageSource::new(&parsed).cloned().collect();
+    let eager = analysis::Tally::build(&analysis::intervals_of(&parsed), &msgs);
+    assert_eq!(tally.host, eager.host);
+    assert_eq!(tally.device, eager.device);
+    assert_eq!(tally.render(), eager.render());
+}
+
+#[test]
+fn lazy_merge_is_reproducible_and_ordered() {
+    let _g = lock();
+    // deleting the owned-vector shims must not lose the ordering contract:
+    // two lazy passes agree element-for-element and are time-ordered with
+    // the (ts, stream, in-stream) tie-break
+    let parsed = traced_on("513.soma", NodeConfig::polaris());
+    let a: Vec<(u64, u32, u32)> =
+        MessageSource::new(&parsed).map(|m| (m.ts, m.rank, m.tid)).collect();
+    let b: Vec<(u64, u32, u32)> =
+        MessageSource::new(&parsed).map(|m| (m.ts, m.rank, m.tid)).collect();
+    assert_eq!(a, b, "the merge is a pure function of the parsed trace");
+    assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "non-decreasing timestamps");
+    assert_eq!(a.len(), parsed.event_count());
 }
