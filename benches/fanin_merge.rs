@@ -1,0 +1,123 @@
+//! Fan-in merge cost: how the subscriber-side union merge scales with
+//! publisher count.
+//!
+//! One recorded trace is split into K publisher wires (replay → hub →
+//! publish into a Vec), then attached as a K-way fan-in and merged into
+//! a tally — the whole multi-node subscriber path minus the kernel
+//! socket. K = 1 is exactly the single-publisher `iprof attach` path,
+//! so the K > 1 rows show the marginal cost of namespacing + merging
+//! more origins over the SAME total event count (byte-identical output
+//! is asserted every round).
+//!
+//! ```sh
+//! cargo bench --bench fanin_merge
+//! ```
+
+use std::io::Cursor;
+use std::time::Instant;
+use thapi::analysis::{AnalysisSink, TallySink};
+use thapi::apps::spechpc;
+use thapi::bench_support::Table;
+use thapi::coordinator::{run, run_fanin, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, LiveHub};
+use thapi::remote::publish;
+use thapi::tracer::btf::TraceData;
+use thapi::tracer::TracingMode;
+
+fn human_rate(per_s: f64) -> String {
+    if per_s >= 1e6 {
+        format!("{:.2}M/s", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.1}K/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.0}/s")
+    }
+}
+
+/// Split `trace` into `k` contiguous stream subsets (in order, so the
+/// fan-in concatenation reproduces the original stream layout).
+fn split(trace: &TraceData, k: usize) -> Vec<TraceData> {
+    let n = trace.streams.len();
+    let per = n.div_ceil(k);
+    (0..k)
+        .map(|i| TraceData {
+            metadata: trace.metadata.clone(),
+            streams: trace.streams[(i * per).min(n)..((i + 1) * per).min(n)].to_vec(),
+        })
+        .collect()
+}
+
+fn main() {
+    if std::env::var("THAPI_APP_SCALE").is_err() {
+        std::env::set_var("THAPI_APP_SCALE", "0.3");
+    }
+    let node = Node::new(NodeConfig::aurora());
+    let apps = spechpc::suite();
+    let app = &apps[0];
+    let r = run(&node, app.as_ref(), &IprofConfig::paper_config(TracingMode::Full, false));
+    let trace = r.trace.as_ref().unwrap();
+    let events = trace.record_count();
+
+    let pm_text = {
+        let parsed = thapi::analysis::parse_trace(trace).unwrap();
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let reports = thapi::analysis::run_pipeline(&parsed, &mut sinks);
+        reports[0].payload().unwrap().to_string()
+    };
+
+    println!(
+        "\n=== fan-in merge scaling ({}: {events} events, {} streams) ===\n",
+        app.name(),
+        trace.streams.len()
+    );
+    let mut t = Table::new(&["publishers", "publish ms", "fan-in+tally ms", "merge rate"]);
+    for k in [1usize, 2, 4] {
+        if k > trace.streams.len() {
+            println!("(skipping K={k}: only {} streams)", trace.streams.len());
+            continue;
+        }
+        let parts = split(trace, k);
+
+        // publish each split into its own in-memory wire
+        let t0 = Instant::now();
+        let wires: Vec<Vec<u8>> = parts
+            .iter()
+            .map(|part| {
+                let hub = LiveHub::new(&node.config.hostname, 4096, false);
+                std::thread::scope(|s| {
+                    let feeder = s.spawn(|| replay_trace(&hub, part, 64));
+                    let mut buf = Vec::new();
+                    publish(&hub, &mut buf).unwrap();
+                    feeder.join().unwrap();
+                    buf
+                })
+            })
+            .collect();
+        let publish_wall = t0.elapsed();
+
+        // K-way fan-in: handshake, namespace, merge, tally
+        let t0 = Instant::now();
+        let conns: Vec<Cursor<Vec<u8>>> = wires.into_iter().map(Cursor::new).collect();
+        let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let report = run_fanin(conns, 4096, sinks, None, |_| {}).unwrap();
+        let fanin_wall = t0.elapsed();
+
+        assert_eq!(report.failed_publishers(), 0);
+        assert_eq!(report.server_dropped(), 0);
+        assert_eq!(
+            report.reports[0].payload().unwrap(),
+            pm_text,
+            "K={k} fan-in must stay byte-identical to whole-trace post-mortem"
+        );
+
+        t.row(&[
+            format!("{k}"),
+            format!("{:.2}", publish_wall.as_secs_f64() * 1e3),
+            format!("{:.2}", fanin_wall.as_secs_f64() * 1e3),
+            human_rate(events as f64 / fanin_wall.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("every row asserted byte-identical to post-mortem; drops: 0");
+}

@@ -13,8 +13,8 @@ use crate::analysis::{self, AnalysisSink, Report as AnalysisReport, Tally};
 use anyhow::Result;
 use crate::apps::Workload;
 use crate::device::Node;
-use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats};
-use crate::remote::{self, Attachment, PublishStats, RemoteStats};
+use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats, OriginStats};
+use crate::remote::{self, FanIn, PublishStats, RemoteStats};
 use crate::sampling::{Sampler, SamplingConfig};
 use crate::tracer::btf::{self, TraceData};
 use crate::tracer::{
@@ -427,27 +427,114 @@ pub struct AttachReport {
 /// from its stream: handshake, mirror the hub, run the **unmodified**
 /// [`LiveSource`] merge through [`live::run_live_pipeline`] with
 /// optional periodic refresh — the receiving half of `iprof serve`.
+/// The single-connection special case of [`run_fanin`].
 ///
 /// For a lossless feed (`remote.server_dropped == 0`) the reports are
 /// byte-identical to a local `iprof --live` of the same run.
 pub fn run_attach<R: Read + Send + 'static>(
     conn: R,
     depth: usize,
-    mut sinks: Vec<Box<dyn AnalysisSink>>,
+    sinks: Vec<Box<dyn AnalysisSink>>,
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
 ) -> std::io::Result<AttachReport> {
-    let att = Attachment::open(conn, depth)?;
-    let hostname = att.hostname.clone();
-    let pipe = live::run_live_pipeline(att.source(), &mut sinks, refresh, on_refresh);
-    let local = att.hub().stats();
-    let remote = att.finish()?;
+    let mut r = run_fanin(vec![conn], depth, sinks, refresh, on_refresh)?;
     Ok(AttachReport {
-        hostname,
+        hostname: r.hostnames.swap_remove(0),
+        reports: r.reports,
+        latency: r.latency,
+        local: r.local,
+        remote: r.stats.per.swap_remove(0),
+    })
+}
+
+/// Result of one multi-publisher `iprof attach <addr> <addr>...` run.
+#[derive(Debug)]
+pub struct FanInReport {
+    /// Hostname announced by each publisher, in connection order.
+    pub hostnames: Vec<String>,
+    /// One final report per sink, in sink order — same contract as
+    /// [`run_live`], produced from the merged union of every
+    /// publisher's streams.
+    pub reports: Vec<AnalysisReport>,
+    /// Merge latency over the shared mirror hub.
+    pub latency: LatencySummary,
+    /// Shared mirror-hub statistics over the whole union.
+    pub local: LiveStats,
+    /// Per-origin accounting (channels, events merged, publisher-side
+    /// drops), in connection order.
+    pub origins: Vec<OriginStats>,
+    /// Per-connection statistics, in connection order
+    /// ([`FanInStats::per`]). A publisher that died before its Eos keeps
+    /// its partial accounting there with [`RemoteStats::error`] set —
+    /// the reports above then cover everything received from it before
+    /// the cut, plus everything from every surviving publisher.
+    pub stats: FanInStats,
+}
+
+impl FanInReport {
+    /// Sum of publisher-side accepted totals (saturating).
+    pub fn server_received(&self) -> u64 {
+        self.stats.server_received()
+    }
+
+    /// Sum of publisher-side dropped totals from clean Eos frames
+    /// (saturating). Zero means every publisher *certified* losslessness.
+    pub fn server_dropped(&self) -> u64 {
+        self.stats.server_dropped()
+    }
+
+    /// Publishers that ended without a clean Eos.
+    pub fn failed_publishers(&self) -> usize {
+        self.stats.failed()
+    }
+
+    /// Best known publisher-side loss (saturating): per publisher, the
+    /// larger of its Eos total and its cumulative per-stream `Drops`
+    /// ledger — so a publisher that reported drops and then died before
+    /// Eos still counts as lossy (`--live-strict` gates on this, not on
+    /// [`FanInReport::server_dropped`] alone).
+    pub fn known_dropped(&self) -> u64 {
+        self.stats
+            .per
+            .iter()
+            .zip(&self.origins)
+            .fold(0u64, |a, (s, o)| {
+                a.saturating_add(s.server_dropped.max(o.remote_dropped))
+            })
+    }
+}
+
+/// Attach to N remote publishers and drive `sinks` on-line from the
+/// merged union of all their streams: handshake every connection,
+/// namespace each publisher's stream ids into one shared mirror hub
+/// ([`FanIn`]), and run the **unmodified** [`LiveSource`] merge through
+/// [`live::run_live_pipeline`] — fleet-scale `iprof attach`.
+///
+/// For lossless feeds the reports are byte-identical to a single local
+/// `--live` run over the concatenated stream set. One dying publisher
+/// only ends its own streams: the analysis completes over the rest and
+/// the failure is recorded in that publisher's [`RemoteStats`].
+pub fn run_fanin<R: Read + Send + 'static>(
+    conns: Vec<R>,
+    depth: usize,
+    mut sinks: Vec<Box<dyn AnalysisSink>>,
+    refresh: Option<Duration>,
+    on_refresh: impl FnMut(&str),
+) -> std::io::Result<FanInReport> {
+    let fan = FanIn::open(conns, depth)?;
+    let hostnames = fan.hostnames.clone();
+    let pipe = live::run_live_pipeline(fan.source(), &mut sinks, refresh, on_refresh);
+    let local = fan.hub().stats();
+    let origins = fan.hub().origin_stats();
+    let stats = fan.finish()?;
+    Ok(FanInReport {
+        hostnames,
         reports: pipe.reports,
         latency: pipe.latency,
         local,
-        remote,
+        origins,
+        stats,
     })
 }
 

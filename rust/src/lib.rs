@@ -29,9 +29,12 @@
 //!   every analysis runs while the application executes with
 //!   O(streams × channel-depth) memory (`iprof --live`).
 //! * [`remote`] — the network hop between hub and merge: a versioned,
-//!   length-prefixed frame protocol (`docs/PROTOCOL.md`) over which
+//!   length-prefixed frame protocol (`docs/PROTOCOL.md`, frozen by the
+//!   golden fixtures in `rust/tests/fixtures/thrl/`) over which
 //!   `iprof serve` publishes the live channels and `iprof attach` drives
-//!   the unmodified merge + sinks on another machine.
+//!   the unmodified merge + sinks on another machine — for one publisher
+//!   or, via the fan-in (`iprof attach <addr> <addr>...`), for a whole
+//!   fleet merged by one subscriber.
 //! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
 //! * [`aggregate`] — on-node aggregation and the local-/global-master
 //!   composite-profile merge (paper §3.7).

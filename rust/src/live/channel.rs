@@ -20,6 +20,25 @@
 //! consumer pushes whole drain batches under one short lock, the merge
 //! ([`super::source::LiveSource`]) scans channel heads under the same
 //! lock, and blocked producers/consumers park on the shared condvar.
+//!
+//! # Origins (multi-publisher namespacing)
+//!
+//! A hub can also act as the shared mirror of **several** remote
+//! publishers (`iprof attach <addr> <addr>...`, see
+//! [`crate::remote::fanin`]). Each publisher registers as an **origin**
+//! ([`LiveHub::register_origin`]) and gets its own translation table from
+//! *remote* stream ids to *shared* channel indices — two publishers that
+//! both call their first stream "0" can never alias onto one channel.
+//! Blocks are allocated in origin order at handshake time
+//! ([`LiveHub::ensure_origin_channels`]), so the shared index order is
+//! exactly the concatenation of the publishers' stream sets — which is
+//! what makes the fan-in merge byte-identical to a single local `--live`
+//! run over that concatenation. Late-registering remote streams append at
+//! the end of the shared space (same tie-break caveat as any
+//! late-registering local stream). Per-origin accounting
+//! ([`LiveHub::origin_stats`]) keeps publisher-side drop totals separate
+//! and **saturating** — a hostile or wrapped counter can never roll a
+//! drop total back to "lossless".
 
 use crate::analysis::msg::EventMsg;
 use crate::tracer::btf::{registry_classes, DecodedClass};
@@ -67,8 +86,51 @@ impl Channel {
     }
 }
 
+/// One registered remote publisher whose streams are namespaced into
+/// this hub's shared channel index space (see module docs § Origins).
+struct OriginState {
+    /// Display label (usually the publisher's hostname).
+    label: String,
+    /// Remote stream index → shared channel index.
+    map: Vec<usize>,
+    /// Latest cumulative publisher-side drop count per remote stream
+    /// (monotone: a stale or rewound wire value never lowers it).
+    remote_drops: Vec<u64>,
+    /// Publisher-side hub totals from its Eos frame, if one arrived.
+    eos: Option<(u64, u64)>,
+    /// All of this origin's channels have been closed.
+    closed: bool,
+}
+
+/// Per-origin accounting snapshot (see [`LiveHub::origin_stats`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OriginStats {
+    /// Origin label (publisher hostname).
+    pub label: String,
+    /// Shared channels mapped to this origin.
+    pub channels: usize,
+    /// Messages accepted into this origin's channels (for a lossless
+    /// fan-in feed: events merged from this publisher once drained).
+    pub received: u64,
+    /// Messages dropped at this origin's channels (always 0 for the
+    /// lossless fan-in feed; nonzero only for local try-push use).
+    pub dropped: u64,
+    /// Beacons applied to this origin's channels.
+    pub beacons: u64,
+    /// Publisher-side cumulative drops reported over the wire —
+    /// saturating sum of the latest per-stream counters.
+    pub remote_dropped: u64,
+    /// Publisher-side Eos totals `(received, dropped)`, if the origin
+    /// ended cleanly; `None` means the publisher died before Eos.
+    pub eos: Option<(u64, u64)>,
+    /// Every channel of this origin has closed.
+    pub closed: bool,
+}
+
 pub(super) struct HubState {
     pub(super) channels: Vec<Channel>,
+    /// Registered remote publishers (empty for purely local hubs).
+    origins: Vec<OriginState>,
     /// Set by [`LiveHub::close_all`]: no new channels will appear.
     pub(super) sealed: bool,
 }
@@ -195,7 +257,11 @@ impl LiveHub {
     /// live mode runs with `retain = false` and O(streams × depth) memory.
     pub fn new(hostname: &str, depth: usize, retain: bool) -> Arc<LiveHub> {
         Arc::new(LiveHub {
-            inner: Mutex::new(HubState { channels: Vec::new(), sealed: false }),
+            inner: Mutex::new(HubState {
+                channels: Vec::new(),
+                origins: Vec::new(),
+                sealed: false,
+            }),
             progress: Condvar::new(),
             depth: depth.max(1),
             retain,
@@ -243,6 +309,115 @@ impl LiveHub {
         }
     }
 
+    /// Register a remote publisher as an **origin** of this hub and
+    /// return its origin id. Origins namespace remote stream ids: each
+    /// origin's streams map to their own shared channels, so identical
+    /// per-publisher stream ids can never alias (see module docs).
+    pub fn register_origin(&self, label: &str) -> usize {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.origins.push(OriginState {
+            label: label.to_string(),
+            map: Vec::new(),
+            remote_drops: Vec::new(),
+            eos: None,
+            closed: false,
+        });
+        st.origins.len() - 1
+    }
+
+    /// Extend `origin`'s map so remote streams `0..n` all have shared
+    /// channels. New channels append at the end of the shared space —
+    /// called in origin order at handshake time this lays the origins
+    /// out as contiguous, concatenated blocks.
+    pub fn ensure_origin_channels(&self, origin: usize, n: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if st.origins[origin].map.len() < n {
+            while st.origins[origin].map.len() < n {
+                let shared = st.channels.len();
+                st.channels.push(Channel::new());
+                st.origins[origin].map.push(shared);
+            }
+            self.progress.notify_all();
+        }
+    }
+
+    /// Translate `origin`'s remote stream index into its shared channel
+    /// index, allocating the mapping (and channel) if it is new.
+    pub fn origin_channel(&self, origin: usize, remote: usize) -> usize {
+        self.ensure_origin_channels(origin, remote + 1);
+        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.origins[origin].map[remote]
+    }
+
+    /// Snapshot of `origin`'s remote→shared channel map (readers cache
+    /// this so the hot event path needs no extra hub lock).
+    pub fn origin_map(&self, origin: usize) -> Vec<usize> {
+        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.origins[origin].map.clone()
+    }
+
+    /// Record a publisher-side cumulative drop count for `origin`'s
+    /// remote stream. Monotone per stream (a stale or rewound wire value
+    /// never lowers it); totals aggregate saturating, never wrapping.
+    pub fn record_origin_drops(&self, origin: usize, remote: usize, cumulative: u64) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let o = &mut st.origins[origin];
+        if o.remote_drops.len() <= remote {
+            o.remote_drops.resize(remote + 1, 0);
+        }
+        if cumulative > o.remote_drops[remote] {
+            o.remote_drops[remote] = cumulative;
+        }
+    }
+
+    /// Record `origin`'s publisher-side Eos totals `(received, dropped)`.
+    pub fn record_origin_eos(&self, origin: usize, received: u64, dropped: u64) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.origins[origin].eos = Some((received, dropped));
+    }
+
+    /// Close every channel mapped to `origin` — and only those. A dying
+    /// publisher ends its own streams without touching the rest of the
+    /// union, so the fan-in merge degrades to a partial-but-correct
+    /// analysis instead of stalling or tearing the session down.
+    pub fn close_origin(&self, origin: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mapped = st.origins[origin].map.clone();
+        for idx in mapped {
+            st.channels[idx].closed = true;
+        }
+        st.origins[origin].closed = true;
+        self.progress.notify_all();
+    }
+
+    /// Per-origin accounting, in registration order (empty for purely
+    /// local hubs). All sums saturate.
+    pub fn origin_stats(&self) -> Vec<OriginStats> {
+        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        st.origins
+            .iter()
+            .map(|o| {
+                let mut s = OriginStats {
+                    label: o.label.clone(),
+                    channels: o.map.len(),
+                    eos: o.eos,
+                    closed: o.closed,
+                    ..Default::default()
+                };
+                for &idx in &o.map {
+                    let ch = &st.channels[idx];
+                    s.received = s.received.saturating_add(ch.received);
+                    s.dropped = s.dropped.saturating_add(ch.dropped);
+                    s.beacons = s.beacons.saturating_add(ch.beacons);
+                }
+                for &d in &o.remote_drops {
+                    s.remote_dropped = s.remote_dropped.saturating_add(d);
+                }
+                s
+            })
+            .collect()
+    }
+
     /// Try-push a batch of decoded messages onto channel `idx`, in order.
     /// Messages beyond the queue bound are dropped and counted — this
     /// call NEVER blocks (the consumer thread must stay realtime).
@@ -269,7 +444,9 @@ impl LiveHub {
             ch.received += 1;
             ch.queue.push_back(Entry { seq, msg, pushed: now });
         }
-        ch.dropped += dropped;
+        // saturating: a pathological counter must stick at max, never
+        // wrap back toward "lossless"
+        ch.dropped = ch.dropped.saturating_add(dropped);
         self.progress.notify_all();
         dropped
     }
@@ -395,18 +572,22 @@ impl LiveHub {
     /// Lossless single-message feed for a **remote subscriber's** mirror
     /// hub (`iprof attach`). Unlike [`LiveHub::feed_blocking`] it ignores
     /// the per-channel depth and instead waits only while the *total*
-    /// queued message count is at or above `soft_cap` **and** the merge
-    /// has releasable work — the one situation where waiting is provably
-    /// deadlock-free. A single reader thread multiplexes every stream of
-    /// the connection, so blocking on one full channel could starve the
-    /// very beacon frame (later in the byte stream) the merge needs to
-    /// drain it; when nothing is releasable the message is admitted
-    /// immediately and memory grows transiently, bounded by one publisher
-    /// watermark round, not by the trace.
-    pub fn feed_remote(&self, idx: usize, msg: EventMsg, soft_cap: usize) {
+    /// queued message count is at or above a soft cap of
+    /// `depth × (total shared channels)` **and** the merge has releasable
+    /// work — the one situation where waiting is provably deadlock-free.
+    /// The cap is computed against the whole hub, so N fan-in readers
+    /// sharing one hub throttle at the same union backlog a single
+    /// attach would, not N times earlier. A reader thread multiplexes
+    /// every stream of its connection, so blocking on one full channel
+    /// could starve the very beacon frame (later in the byte stream) the
+    /// merge needs to drain it; when nothing is releasable the message
+    /// is admitted immediately and memory grows transiently, bounded by
+    /// one publisher watermark round, not by the trace.
+    pub fn feed_remote(&self, idx: usize, msg: EventMsg, depth: usize) {
         let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             let total: usize = st.channels.iter().map(|c| c.queue.len()).sum();
+            let soft_cap = depth.max(1) * st.channels.len().max(1);
             if total < soft_cap || !st.has_releasable() {
                 let ch = &mut st.channels[idx];
                 ch.watermark = ch.watermark.max(msg.ts);
@@ -517,6 +698,60 @@ mod tests {
         let st = hub.inner.lock().unwrap();
         assert_eq!(st.channels[0].queue.len(), 50, "lossless: nothing dropped");
         assert!(!st.has_releasable(), "channel 1 still vetoes");
+    }
+
+    #[test]
+    fn colliding_origin_stream_ids_never_alias() {
+        // the latent bug fan-in surfaced: two publishers both call their
+        // first stream "0" — without namespacing they'd share a channel
+        let hub = LiveHub::new("hubtest", 8, false);
+        let a = hub.register_origin("node-a");
+        let b = hub.register_origin("node-b");
+        hub.ensure_origin_channels(a, 2);
+        hub.ensure_origin_channels(b, 2);
+        // contiguous blocks in origin order: a=[0,1], b=[2,3]
+        assert_eq!(hub.origin_map(a), vec![0, 1]);
+        assert_eq!(hub.origin_map(b), vec![2, 3]);
+        assert_ne!(hub.origin_channel(a, 0), hub.origin_channel(b, 0));
+        // both "stream 0" events land on distinct channels
+        hub.feed_remote(hub.origin_channel(a, 0), msg(5, 0, 0), 64);
+        hub.feed_remote(hub.origin_channel(b, 0), msg(5, 1, 0), 64);
+        let stats = hub.origin_stats();
+        assert_eq!(stats[a].received, 1);
+        assert_eq!(stats[b].received, 1);
+        // late growth appends at the end of the shared space
+        assert_eq!(hub.origin_channel(a, 2), 4);
+        assert_eq!(hub.origin_map(a), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn origin_drop_counters_saturate_and_never_rewind() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let o = hub.register_origin("lossy-node");
+        hub.record_origin_drops(o, 0, u64::MAX);
+        hub.record_origin_drops(o, 1, 7);
+        // sum would wrap past u64::MAX: must saturate instead
+        assert_eq!(hub.origin_stats()[o].remote_dropped, u64::MAX);
+        // cumulative counters are monotone: a rewound value is ignored
+        hub.record_origin_drops(o, 1, 3);
+        let st = hub.inner.lock().unwrap();
+        assert_eq!(st.origins[o].remote_drops[1], 7);
+    }
+
+    #[test]
+    fn close_origin_closes_only_its_own_channels() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let a = hub.register_origin("a");
+        let b = hub.register_origin("b");
+        hub.ensure_origin_channels(a, 2);
+        hub.ensure_origin_channels(b, 1);
+        hub.close_origin(a);
+        let stats = hub.origin_stats();
+        assert!(stats[a].closed);
+        assert!(!stats[b].closed);
+        let st = hub.inner.lock().unwrap();
+        assert!(st.channels[0].closed && st.channels[1].closed);
+        assert!(!st.channels[2].closed, "origin b must keep flowing");
     }
 
     #[test]

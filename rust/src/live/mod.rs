@@ -44,13 +44,16 @@
 //! exposes a forwarding tee ([`LiveHub::next_forward_batch`]) and a
 //! remote-subscriber feed ([`LiveHub::feed_remote`]) so [`crate::remote`]
 //! can split this pipeline across a socket (`iprof serve` /
-//! `iprof attach`) without touching the merge.
+//! `iprof attach`) without touching the merge — and origin registration
+//! ([`LiveHub::register_origin`]) so one hub can mirror **several**
+//! publishers at once with namespaced stream ids (`iprof attach
+//! <addr> <addr>...`, see [`crate::remote::fanin`]).
 
 pub mod channel;
 pub mod pipeline;
 pub mod source;
 
-pub use channel::{ForwardBatch, ForwardCursor, LiveHub, LiveStats};
+pub use channel::{ForwardBatch, ForwardCursor, LiveHub, LiveStats, OriginStats};
 pub use pipeline::{run_live_pipeline, LivePipelineResult};
 pub use source::{LatencySummary, LiveSource};
 

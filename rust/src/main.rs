@@ -3,7 +3,9 @@
 //! ```text
 //! iprof [OPTIONS] -- <workload>[,<workload>...]
 //! iprof serve <bind-addr> [OPTIONS] -- <workload>    publish live channels
-//! iprof attach <addr> [-a <list>] [--refresh <ms>]   remote live viewer
+//! iprof attach <addr> [<addr>...] [-a <list>]        remote live viewer:
+//!              [--refresh <ms>]                      1 publisher, or N
+//!                                                    merged as one fan-in
 //!
 //!   -m, --mode <minimal|default|full>   tracing mode        [default]
 //!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
@@ -223,9 +225,14 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
        iprof serve <bind-addr> [OPTIONS] [--] <workload>
          trace the workload and PUBLISH the live per-stream channels over a
          socket (docs/PROTOCOL.md); waits for one subscriber, then runs
-       iprof attach <addr> [-a <list>] [--refresh <ms>] [--live-depth <n>]
-         connect to a publisher and run the analysis sinks here, fed by the
-         same merge local --live uses (byte-identical for lossless feeds)
+       iprof attach <addr> [<addr>...] [-a <list>] [--refresh <ms>]
+             [--live-depth <n>]
+         connect to one or more publishers and run the analysis sinks here
+         over the merged union of all their streams, fed by the same merge
+         local --live uses (byte-identical for lossless feeds; with N
+         addresses, identical to one local run over the concatenated
+         streams). One dying publisher yields a partial analysis of the
+         rest, with per-publisher accounting
   -m, --mode <minimal|default|full>    tracing mode [default]
   -s, --sample [<ms>]                  enable device sampling (50 ms default)
   -n, --node <aurora|polaris|small>    node configuration [small]
@@ -352,23 +359,31 @@ fn serve_main(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `iprof attach <addr> [-a <list>] [--refresh <ms>]`: subscribe to a
-/// publisher and run the analysis sinks here.
+/// `iprof attach <addr> [<addr>...] [-a <list>] [--refresh <ms>]`:
+/// subscribe to one or more publishers and run the analysis sinks here
+/// over the merged union of all their streams (multi-publisher fan-in).
 fn attach_main(args: &[String]) -> Result<()> {
-    let addr = args
-        .first()
-        .filter(|a| !a.starts_with('-'))
-        .context("attach needs a publisher address (e.g. iprof attach 127.0.0.1:7007)")?;
-    let o = parse_args(&args[1..])?;
+    let addrs: Vec<&String> = args.iter().take_while(|a| !a.starts_with('-')).collect();
+    if addrs.is_empty() {
+        bail!(
+            "attach needs at least one publisher address \
+             (e.g. iprof attach 127.0.0.1:7007 [127.0.0.1:7008 ...])"
+        );
+    }
+    let o = parse_args(&args[addrs.len()..])?;
     if !o.workloads.is_empty() {
-        bail!("attach analyzes a remote run; it takes no workload");
+        bail!("attach analyzes remote runs; it takes no workload");
     }
     if o.analyses.is_empty() {
         bail!("attach needs at least one analysis sink (-a tally,...)");
     }
-    let conn = std::net::TcpStream::connect(addr)
-        .with_context(|| format!("cannot connect to {addr}"))?;
-    eprintln!("iprof: attached to {addr}");
+    let mut conns = Vec::with_capacity(addrs.len());
+    for addr in &addrs {
+        let conn = std::net::TcpStream::connect(addr.as_str())
+            .with_context(|| format!("cannot connect to {addr}"))?;
+        conns.push(conn);
+    }
+    eprintln!("iprof: attached to {} publisher(s)", conns.len());
     let depth = o.live_depth.unwrap_or(LiveConfig::default().channel_depth);
     let sinks: Vec<Box<dyn AnalysisSink>> = o
         .analyses
@@ -376,35 +391,80 @@ fn attach_main(args: &[String]) -> Result<()> {
         .map(|k| -> Box<dyn AnalysisSink> { k.sink() })
         .collect();
     let refresh = o.refresh_ms.map(std::time::Duration::from_millis);
-    let r = coordinator::run_attach(conn, depth, sinks, refresh, |text| {
+    let r = coordinator::run_fanin(conns, depth, sinks, refresh, |text| {
         eprintln!("iprof: live refresh [remote]\n{text}");
     })
     .context("attach failed")?;
+    // Per-publisher accounting: who contributed what, who dropped, who died.
+    // "wire drops" is the cumulative per-stream Drops ledger — for a clean
+    // publisher the Eos total subsumes it, but a publisher that died before
+    // Eos has ONLY the ledger, so both are shown.
+    for (i, (addr, stats)) in addrs.iter().zip(&r.stats.per).enumerate() {
+        let origin = &r.origins[i];
+        eprintln!(
+            "iprof: remote {} ({addr}): streams={} merged={} frames={} beacons={} \
+             server received={} server dropped={} wire drops={}{}",
+            r.hostnames[i],
+            origin.channels,
+            origin.received,
+            stats.frames,
+            stats.beacons,
+            stats.server_received,
+            stats.server_dropped,
+            origin.remote_dropped,
+            match &stats.error {
+                Some(e) => format!(" DIED ({e})"),
+                None => String::new(),
+            },
+        );
+    }
     eprintln!(
-        "iprof: remote {}: merged={} frames={} beacons={} server received={} \
-         server dropped={} latency mean={:.2}ms max={:.2}ms",
-        r.hostname,
+        "iprof: union: publishers={} merged={} server received={} known dropped={} \
+         latency mean={:.2}ms max={:.2}ms",
+        r.stats.per.len(),
         r.latency.merged,
-        r.remote.frames,
-        r.remote.beacons,
-        r.remote.server_received,
-        r.remote.server_dropped,
+        r.server_received(),
+        r.known_dropped(),
         r.latency.mean().as_secs_f64() * 1e3,
         r.latency.max.as_secs_f64() * 1e3,
     );
-    emit_reports(&format!("remote-{}", r.hostname), &o.analyses, r.reports)?;
+    emit_reports(
+        &format!("remote-{}", safe_name(&r.hostnames.join("+"))),
+        &o.analyses,
+        r.reports,
+    )?;
     // reports are emitted first: a dying publisher still yields the partial
-    // analysis of everything received before the cut
-    if let Some(err) = &r.remote.error {
-        bail!("attach: publisher connection ended early ({err}); reports above are partial");
-    }
-    if o.live_strict && r.remote.server_dropped > 0 {
+    // analysis of everything received before the cut (plus everything from
+    // every surviving publisher)
+    if r.failed_publishers() > 0 {
         bail!(
-            "attach: publisher dropped {} events — the on-line view is incomplete",
-            r.remote.server_dropped
+            "attach: {} of {} publisher connection(s) ended early; reports above are partial",
+            r.failed_publishers(),
+            r.stats.per.len()
+        );
+    }
+    if o.live_strict && r.known_dropped() > 0 {
+        bail!(
+            "attach: publishers dropped {} events — the on-line view is incomplete",
+            r.known_dropped()
         );
     }
     Ok(())
+}
+
+/// Remote hostnames arrive over the wire; keep only path-safe characters
+/// before they reach a local filename (a malicious publisher must not
+/// get to choose where `emit_reports` writes timeline output).
+fn safe_name(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | '+') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 fn main() -> Result<()> {

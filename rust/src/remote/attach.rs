@@ -1,14 +1,16 @@
 //! The subscribing end of a remote-live connection (`iprof attach`).
 //!
+//! [`Attachment`] is the single-publisher special case of the
+//! multi-publisher fan-in ([`super::fanin::FanIn`]) and delegates to it:
 //! [`Attachment::open`] performs the handshake (preamble check +
-//! [`Frame::Hello`]), rebuilds the publisher's class table from the
-//! shipped BTF metadata, and spawns a reader thread that mirrors every
-//! frame into a local [`LiveHub`]: events are reconstructed into
-//! [`EventMsg`]s and fed losslessly, beacons move watermarks, closes
-//! close channels, and [`Frame::Eos`] seals the hub. The **unmodified**
-//! [`LiveSource`] k-way merge then drains that mirror hub — so a remote
-//! viewer runs the exact same merge + sinks as local `iprof --live`, and
-//! for a lossless feed produces byte-identical output.
+//! [`Frame::Hello`](super::frame::Frame::Hello)) synchronously, then a
+//! reader thread mirrors every frame into a local [`LiveHub`]: events
+//! are reconstructed into [`EventMsg`](crate::analysis::EventMsg)s and
+//! fed losslessly, beacons move watermarks, closes close channels, and
+//! Eos seals the hub. The **unmodified** [`LiveSource`] k-way merge then
+//! drains that mirror hub — so a remote viewer runs the exact same merge
+//! + sinks as local `iprof --live`, and for a lossless feed produces
+//! byte-identical output.
 //!
 //! The reader multiplexes all streams from one byte stream, so it must
 //! never block on a single full channel (the beacon that would drain it
@@ -16,45 +18,15 @@
 //! [`LiveHub::feed_remote`], which waits for queue space only while the
 //! merge provably has releasable work.
 
-use super::frame::{self, Frame, FrameError};
-use crate::analysis::EventMsg;
+use super::fanin::FanIn;
+pub use super::fanin::RemoteStats;
 use crate::live::{LiveHub, LiveSource};
-use crate::tracer::btf::{parse_metadata, DecodedClass};
-use std::collections::HashMap;
-use std::io::{self, BufReader, Read};
+use std::io::{self, Read};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
-/// What the reader thread observed over the whole connection.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct RemoteStats {
-    /// Frames received (Hello included).
-    pub frames: u64,
-    /// Event frames among them.
-    pub events: u64,
-    /// Beacon frames among them.
-    pub beacons: u64,
-    /// Events skipped because their class id was not in the Hello
-    /// metadata (same skip-unknown policy as `parse_trace`).
-    pub unknown_classes: u64,
-    /// Publisher-side total accepted messages (from Eos).
-    pub server_received: u64,
-    /// Publisher-side total dropped messages (from Eos) — the remote
-    /// end of the drop accounting: nonzero means the on-line view is
-    /// incomplete and says by exactly how much.
-    pub server_dropped: u64,
-    /// Transport/protocol error that ended the stream before a clean
-    /// Eos, if any. The mirror hub is sealed either way, so everything
-    /// received up to the cut was still merged and analyzed — partial
-    /// reports survive a dying publisher, which is the whole point of
-    /// watching one live.
-    pub error: Option<String>,
-}
-
-/// A live connection to a remote publisher (see module docs).
+/// A live connection to one remote publisher (see module docs).
 pub struct Attachment {
-    hub: Arc<LiveHub>,
-    reader: JoinHandle<RemoteStats>,
+    fanin: FanIn,
     /// Hostname announced by the publisher's Hello.
     pub hostname: String,
 }
@@ -68,53 +40,20 @@ impl Attachment {
     /// the same way `--live-depth` does locally; the reader's soft cap is
     /// `depth × channels` total messages (see [`LiveHub::feed_remote`]).
     pub fn open<R: Read + Send + 'static>(conn: R, depth: usize) -> io::Result<Attachment> {
-        let mut r = BufReader::new(conn);
-        frame::read_preamble(&mut r)?;
-        let hello = frame::read_frame(&mut r)?;
-        let Frame::Hello { hostname, metadata, streams } = hello else {
-            return Err(FrameError::Malformed("first frame must be Hello").into());
-        };
-        if streams > frame::MAX_STREAMS {
-            return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
-        }
-        let md = parse_metadata(&metadata)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-        let classes: HashMap<u32, Arc<DecodedClass>> =
-            md.classes.into_iter().map(|(id, c)| (id, Arc::new(c))).collect();
-
-        let hub = LiveHub::new(&hostname, depth, false);
-        hub.ensure_channels(streams as usize);
-        let host_arc: Arc<str> = Arc::from(hostname.as_str());
-        let hub2 = hub.clone();
-        let depth = depth.max(1);
-        let reader = std::thread::Builder::new()
-            .name("thapi-attach".into())
-            .spawn(move || {
-                let mut stats = RemoteStats { frames: 1, ..Default::default() };
-                let mut channels = streams as usize;
-                let res = pump(&mut r, &hub2, &classes, &host_arc, depth, &mut channels, &mut stats);
-                // Always seal the mirror hub — also on transport errors —
-                // so the merge terminates instead of waiting forever; the
-                // stats (with the error recorded) survive alongside the
-                // partial analysis.
-                hub2.close_all();
-                if let Err(e) = res {
-                    stats.error = Some(e.to_string());
-                }
-                stats
-            })?;
-        Ok(Attachment { hub, reader, hostname })
+        let fanin = FanIn::open(vec![conn], depth)?;
+        let hostname = fanin.hostnames[0].clone();
+        Ok(Attachment { fanin, hostname })
     }
 
     /// The mirror hub (e.g. for [`LiveHub::stats`] after the run).
     pub fn hub(&self) -> &Arc<LiveHub> {
-        &self.hub
+        self.fanin.hub()
     }
 
     /// Open the merge over the mirror hub. One source per attachment,
     /// like one `LiveSource` per local hub.
     pub fn source(&self) -> LiveSource {
-        LiveSource::new(self.hub.clone())
+        self.fanin.source()
     }
 
     /// Join the reader and return the connection totals. Call after the
@@ -122,94 +61,16 @@ impl Attachment {
     /// transport error is recorded in [`RemoteStats::error`] rather than
     /// discarding the stats, so partial runs keep their accounting).
     pub fn finish(self) -> io::Result<RemoteStats> {
-        self.reader
-            .join()
-            .map_err(|_| io::Error::new(io::ErrorKind::Other, "attach reader thread panicked"))
-    }
-}
-
-/// Frame pump: apply every frame to the mirror hub until Eos.
-///
-/// `channels` is the reader's local view of the channel count — grown on
-/// `Streams` frames and on out-of-range indices — so the hot Event path
-/// takes no extra hub lock to recompute its soft cap. Stream counts and
-/// indices are bounded by [`frame::MAX_STREAMS`]: a corrupt frame is a
-/// protocol error, never a giant allocation.
-fn pump(
-    r: &mut impl Read,
-    hub: &LiveHub,
-    classes: &HashMap<u32, Arc<DecodedClass>>,
-    hostname: &Arc<str>,
-    depth: usize,
-    channels: &mut usize,
-    stats: &mut RemoteStats,
-) -> io::Result<()> {
-    fn grow(hub: &LiveHub, channels: &mut usize, want: u32) -> io::Result<usize> {
-        if want > frame::MAX_STREAMS {
-            return Err(FrameError::Malformed("stream index exceeds MAX_STREAMS").into());
-        }
-        let want = want as usize;
-        if want > *channels {
-            hub.ensure_channels(want);
-            *channels = want;
-        }
-        Ok(want)
-    }
-
-    loop {
-        let f = frame::read_frame(r)?;
-        stats.frames += 1;
-        match f {
-            Frame::Hello { .. } => {
-                return Err(FrameError::Malformed("duplicate Hello").into());
-            }
-            Frame::Streams { count } => {
-                grow(hub, channels, count)?;
-            }
-            Frame::Event { stream, event } => {
-                let idx = grow(hub, channels, stream.saturating_add(1))? - 1;
-                stats.events += 1;
-                match classes.get(&event.class_id) {
-                    Some(class) => {
-                        let msg = EventMsg {
-                            ts: event.ts,
-                            rank: event.rank,
-                            tid: event.tid,
-                            hostname: hostname.clone(),
-                            class: class.clone(),
-                            fields: event.fields,
-                        };
-                        hub.feed_remote(idx, msg, depth * (*channels).max(1));
-                    }
-                    None => stats.unknown_classes += 1,
-                }
-            }
-            Frame::Beacon { stream, watermark } => {
-                let idx = grow(hub, channels, stream.saturating_add(1))? - 1;
-                hub.beacon(idx, watermark);
-                stats.beacons += 1;
-            }
-            Frame::Drops { .. } => {
-                // Cumulative per-stream counts; the Eos totals are what we
-                // surface. Nothing to mirror locally — drops happened
-                // before the wire.
-            }
-            Frame::Close { stream } => {
-                let idx = grow(hub, channels, stream.saturating_add(1))? - 1;
-                hub.close(idx);
-            }
-            Frame::Eos { received, dropped } => {
-                stats.server_received = received;
-                stats.server_dropped = dropped;
-                return Ok(());
-            }
-        }
+        let stats = self.fanin.finish()?;
+        Ok(stats.per.into_iter().next().expect("one reader per attachment"))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::EventMsg;
+    use crate::remote::frame::{self, Frame};
     use crate::remote::publish::publish;
     use crate::tracer::btf::registry_classes;
     use std::io::Cursor;

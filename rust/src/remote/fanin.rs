@@ -1,0 +1,445 @@
+//! Multi-publisher fan-in: one subscriber merging several nodes' hubs
+//! (`iprof attach <addr> <addr>...`).
+//!
+//! [`FanIn::open`] handshakes N independent THRL connections (preamble +
+//! [`Frame::Hello`], each publisher shipping its own BTF class registry),
+//! registers each publisher as an **origin** of one shared mirror
+//! [`LiveHub`], and spawns one reader thread per connection. Readers
+//! translate every per-publisher stream id through the origin's map
+//! before touching the hub — events feed the translated channel
+//! losslessly, **watermark beacons move the translated channel's
+//! watermark**, closes close it — so the release predicate the merge
+//! runs is exactly the shared one over the union of all publishers'
+//! channels, and the **unmodified** [`LiveSource`] k-way merge drains
+//! the union in one globally consistent order.
+//!
+//! Two properties carry the design (pinned by `rust/tests/fanin.rs`):
+//!
+//! 1. **Concatenation byte-identity.** Origin blocks are allocated in
+//!    connection order at handshake time, so shared channel index order
+//!    is the concatenation of the publishers' stream sets. For lossless
+//!    feeds, attaching to N publishers produces sink output
+//!    byte-identical to a single local `--live` run over that
+//!    concatenated stream set — equal-timestamp ties break by
+//!    (connection order, per-publisher stream index, arrival order),
+//!    independent of network interleaving.
+//! 2. **Failure isolation.** A publisher that dies (EOF or protocol
+//!    error before [`Frame::Eos`]) has *only its own* origin's channels
+//!    closed ([`LiveHub::close_origin`]); every other feed keeps
+//!    flowing, and the analysis completes over everything received —
+//!    partial but correct, with the error recorded in that publisher's
+//!    [`RemoteStats`]. The last reader to finish seals the whole hub so
+//!    the merge terminates exactly once.
+//!
+//! Single-publisher [`Attachment`](super::attach::Attachment) is the
+//! N = 1 special case and delegates here.
+
+use super::frame::{self, Frame, FrameError};
+use crate::analysis::EventMsg;
+use crate::live::{LiveHub, LiveSource};
+use crate::tracer::btf::{parse_metadata, DecodedClass};
+use std::collections::HashMap;
+use std::io::{self, BufReader, Read};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// What one reader thread observed over its whole connection.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// Frames received (Hello included).
+    pub frames: u64,
+    /// Event frames among them.
+    pub events: u64,
+    /// Beacon frames among them.
+    pub beacons: u64,
+    /// Events skipped because their class id was not in the Hello
+    /// metadata (same skip-unknown policy as `parse_trace`).
+    pub unknown_classes: u64,
+    /// Publisher-side total accepted messages (from Eos).
+    pub server_received: u64,
+    /// Publisher-side total dropped messages (from Eos) — the remote
+    /// end of the drop accounting: nonzero means the on-line view is
+    /// incomplete and says by exactly how much.
+    pub server_dropped: u64,
+    /// Transport/protocol error that ended the stream before a clean
+    /// Eos, if any. Only this publisher's channels are closed on error,
+    /// so everything received up to the cut is still merged and
+    /// analyzed — and, in a fan-in, every *other* publisher's feed
+    /// keeps flowing.
+    pub error: Option<String>,
+}
+
+/// Per-connection aggregate of a whole fan-in run, in connection order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FanInStats {
+    /// One entry per publisher, in [`FanIn::open`] connection order.
+    pub per: Vec<RemoteStats>,
+}
+
+impl FanInStats {
+    /// Sum of publisher-side accepted totals (saturating).
+    pub fn server_received(&self) -> u64 {
+        self.per.iter().fold(0u64, |a, s| a.saturating_add(s.server_received))
+    }
+
+    /// Sum of publisher-side dropped totals (saturating). Zero certifies
+    /// the union analysis covers every event every publisher decoded.
+    pub fn server_dropped(&self) -> u64 {
+        self.per.iter().fold(0u64, |a, s| a.saturating_add(s.server_dropped))
+    }
+
+    /// Publishers that ended without a clean Eos.
+    pub fn failed(&self) -> usize {
+        self.per.iter().filter(|s| s.error.is_some()).count()
+    }
+}
+
+/// Post-handshake state of one connection, before its reader spawns.
+struct Pending<R: Read> {
+    r: BufReader<R>,
+    hostname: String,
+    classes: HashMap<u32, Arc<DecodedClass>>,
+}
+
+/// A live fan-in over N remote publishers (see module docs).
+pub struct FanIn {
+    hub: Arc<LiveHub>,
+    readers: Vec<JoinHandle<RemoteStats>>,
+    /// Hostname announced by each publisher's Hello, in connection order.
+    pub hostnames: Vec<String>,
+}
+
+impl FanIn {
+    /// Handshake every connection and start mirroring them all into one
+    /// shared hub.
+    ///
+    /// Handshakes run synchronously in connection order, so bad magic,
+    /// an unsupported version, a missing Hello or a hostile stream count
+    /// on *any* connection fails here, before anything starts. Origin
+    /// channel blocks are allocated in the same order, which fixes the
+    /// merge tie-break to the concatenated stream layout. `depth` bounds
+    /// the readers' shared soft cap exactly as it does for a single
+    /// [`Attachment`](super::attach::Attachment): `depth × (total shared
+    /// channels)`, computed union-wide so K readers throttle at the same
+    /// backlog one would (see [`LiveHub::feed_remote`]).
+    pub fn open<R: Read + Send + 'static>(conns: Vec<R>, depth: usize) -> io::Result<FanIn> {
+        if conns.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "fan-in needs at least one connection",
+            ));
+        }
+        let mut pending = Vec::with_capacity(conns.len());
+        let mut announced = Vec::with_capacity(conns.len());
+        for conn in conns {
+            let mut r = BufReader::new(conn);
+            frame::read_preamble(&mut r)?;
+            let hello = frame::read_frame(&mut r)?;
+            let Frame::Hello { hostname, metadata, streams } = hello else {
+                return Err(FrameError::Malformed("first frame must be Hello").into());
+            };
+            if streams > frame::MAX_STREAMS {
+                return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
+            }
+            let md = parse_metadata(&metadata)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+            let classes: HashMap<u32, Arc<DecodedClass>> =
+                md.classes.into_iter().map(|(id, c)| (id, Arc::new(c))).collect();
+            pending.push(Pending { r, hostname, classes });
+            announced.push(streams as usize);
+        }
+
+        // One shared mirror hub; every origin's Hello-announced block is
+        // allocated BEFORE any reader runs, in connection order — the
+        // shared channel layout is the concatenation of the publishers'
+        // stream sets, which is the whole byte-identity story.
+        let hub = LiveHub::new(&pending[0].hostname, depth, false);
+        let origins: Vec<usize> = pending
+            .iter()
+            .zip(&announced)
+            .map(|(p, &n)| {
+                let o = hub.register_origin(&p.hostname);
+                hub.ensure_origin_channels(o, n);
+                o
+            })
+            .collect();
+
+        let depth = depth.max(1);
+        let remaining = Arc::new(AtomicUsize::new(pending.len()));
+        let mut readers = Vec::with_capacity(pending.len());
+        let mut hostnames = Vec::with_capacity(pending.len());
+        for (i, p) in pending.into_iter().enumerate() {
+            let origin = origins[i];
+            hostnames.push(p.hostname.clone());
+            let host_arc: Arc<str> = Arc::from(p.hostname.as_str());
+            let hub2 = hub.clone();
+            let remaining2 = remaining.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("thapi-fanin-{i}"))
+                .spawn(move || {
+                    let Pending { mut r, classes, .. } = p;
+                    let mut stats = RemoteStats { frames: 1, ..Default::default() };
+                    let mut map = hub2.origin_map(origin);
+                    let res = pump(
+                        &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map, &mut stats,
+                    );
+                    // Always end THIS origin's channels — also on
+                    // transport errors — so the union merge never waits
+                    // on a dead publisher; the other feeds keep flowing.
+                    // The last reader out seals the whole hub so the
+                    // merge terminates.
+                    hub2.close_origin(origin);
+                    if remaining2.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        hub2.close_all();
+                    }
+                    if let Err(e) = res {
+                        stats.error = Some(e.to_string());
+                    }
+                    stats
+                });
+            match spawned {
+                Ok(handle) => readers.push(handle),
+                Err(e) => {
+                    // Thread creation failed mid-loop (resource pressure):
+                    // already-spawned readers cannot be cancelled, but the
+                    // hub must stay consistent for them — close every
+                    // origin that will never get a reader and retire their
+                    // countdown slots so the last LIVE reader still seals
+                    // the hub instead of waiting on ghosts.
+                    for &o in &origins[i..] {
+                        hub.close_origin(o);
+                    }
+                    let unspawned = origins.len() - i;
+                    if remaining.fetch_sub(unspawned, Ordering::AcqRel) == unspawned {
+                        hub.close_all();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(FanIn { hub, readers, hostnames })
+    }
+
+    /// The shared mirror hub (e.g. for [`LiveHub::stats`] /
+    /// [`LiveHub::origin_stats`] after the run).
+    pub fn hub(&self) -> &Arc<LiveHub> {
+        &self.hub
+    }
+
+    /// Open the merge over the shared mirror hub: one [`LiveSource`]
+    /// drains the union of every publisher's channels.
+    pub fn source(&self) -> LiveSource {
+        LiveSource::new(self.hub.clone())
+    }
+
+    /// Join every reader and return the per-publisher connection totals,
+    /// in connection order. Call after the merge has drained. A
+    /// publisher that died keeps its partial accounting with
+    /// [`RemoteStats::error`] set, rather than poisoning the rest.
+    pub fn finish(self) -> io::Result<FanInStats> {
+        let mut per = Vec::with_capacity(self.readers.len());
+        for handle in self.readers {
+            let stats = handle.join().map_err(|_| {
+                io::Error::new(io::ErrorKind::Other, "fan-in reader thread panicked")
+            })?;
+            per.push(stats);
+        }
+        Ok(FanInStats { per })
+    }
+}
+
+/// Frame pump for one origin: apply every frame to the shared hub —
+/// through the origin's stream-id translation — until Eos.
+///
+/// `map` is the reader's cache of its origin's remote→shared channel
+/// map, so the hot Event path takes no extra hub lock; only this reader
+/// grows its own origin, so the cache never goes stale. Stream counts
+/// and indices are bounded by [`frame::MAX_STREAMS`]: a corrupt frame
+/// is a protocol error, never a giant allocation.
+#[allow(clippy::too_many_arguments)]
+fn pump(
+    r: &mut impl Read,
+    hub: &LiveHub,
+    origin: usize,
+    classes: &HashMap<u32, Arc<DecodedClass>>,
+    hostname: &Arc<str>,
+    depth: usize,
+    map: &mut Vec<usize>,
+    stats: &mut RemoteStats,
+) -> io::Result<()> {
+    fn translate(
+        hub: &LiveHub,
+        origin: usize,
+        map: &mut Vec<usize>,
+        remote: u32,
+    ) -> io::Result<usize> {
+        if remote >= frame::MAX_STREAMS {
+            return Err(FrameError::Malformed("stream index exceeds MAX_STREAMS").into());
+        }
+        let remote = remote as usize;
+        if remote >= map.len() {
+            hub.ensure_origin_channels(origin, remote + 1);
+            *map = hub.origin_map(origin);
+        }
+        Ok(map[remote])
+    }
+
+    loop {
+        let f = frame::read_frame(r)?;
+        stats.frames += 1;
+        match f {
+            Frame::Hello { .. } => {
+                return Err(FrameError::Malformed("duplicate Hello").into());
+            }
+            Frame::Streams { count } => {
+                if count > frame::MAX_STREAMS {
+                    return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
+                }
+                if count as usize > map.len() {
+                    hub.ensure_origin_channels(origin, count as usize);
+                    *map = hub.origin_map(origin);
+                }
+            }
+            Frame::Event { stream, event } => {
+                let idx = translate(hub, origin, map, stream)?;
+                stats.events += 1;
+                match classes.get(&event.class_id) {
+                    Some(class) => {
+                        let msg = EventMsg {
+                            ts: event.ts,
+                            rank: event.rank,
+                            tid: event.tid,
+                            hostname: hostname.clone(),
+                            class: class.clone(),
+                            fields: event.fields,
+                        };
+                        hub.feed_remote(idx, msg, depth);
+                    }
+                    None => stats.unknown_classes += 1,
+                }
+            }
+            Frame::Beacon { stream, watermark } => {
+                // The watermark promise travels WITH the stream into its
+                // shared channel: the merge's release predicate stays
+                // exactly the shared one over the whole union.
+                let idx = translate(hub, origin, map, stream)?;
+                hub.beacon(idx, watermark);
+                stats.beacons += 1;
+            }
+            Frame::Drops { stream, dropped } => {
+                if stream >= frame::MAX_STREAMS {
+                    return Err(FrameError::Malformed("stream index exceeds MAX_STREAMS").into());
+                }
+                // Cumulative per-stream publisher-side counts: keep the
+                // per-origin ledger (saturating) so the fan-in summary
+                // can attribute loss to the node that suffered it.
+                hub.record_origin_drops(origin, stream as usize, dropped);
+            }
+            Frame::Close { stream } => {
+                let idx = translate(hub, origin, map, stream)?;
+                hub.close(idx);
+            }
+            Frame::Eos { received, dropped } => {
+                stats.server_received = received;
+                stats.server_dropped = dropped;
+                hub.record_origin_eos(origin, received, dropped);
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::live::LiveHub;
+    use crate::remote::publish::publish;
+
+    fn sample_msg(hub: &LiveHub, ts: u64, rank: u32) -> EventMsg {
+        let class = crate::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        hub.decode(rank, 7, class.id, ts, &0u64.to_le_bytes()).unwrap()
+    }
+
+    /// Publish a tiny 1-stream hub to a wire, tagging events with `rank`.
+    fn wire_for(rank: u32, timestamps: &[u64]) -> Vec<u8> {
+        let hub = LiveHub::new("fan", 64, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, timestamps.iter().map(|&t| sample_msg(&hub, t, rank)).collect());
+        hub.close_all();
+        let mut wire = Vec::new();
+        publish(&hub, &mut wire).unwrap();
+        wire
+    }
+
+    #[test]
+    fn two_publishers_merge_into_one_ordered_union() {
+        let a = wire_for(0, &[5, 10]);
+        let b = wire_for(1, &[7, 12]);
+        let fan =
+            FanIn::open(vec![std::io::Cursor::new(a), std::io::Cursor::new(b)], 8).unwrap();
+        assert_eq!(fan.hostnames, vec!["fan".to_string(), "fan".to_string()]);
+        let merged: Vec<(u64, u32)> = fan.source().map(|m| (m.ts, m.rank)).collect();
+        assert_eq!(merged, vec![(5, 0), (7, 1), (10, 0), (12, 1)]);
+        let stats = fan.finish().unwrap();
+        assert_eq!(stats.per.len(), 2);
+        assert_eq!(stats.per[0].events, 2);
+        assert_eq!(stats.per[1].events, 2);
+        assert_eq!(stats.server_received(), 4);
+        assert_eq!(stats.server_dropped(), 0);
+        assert_eq!(stats.failed(), 0);
+    }
+
+    #[test]
+    fn equal_timestamps_break_ties_by_connection_order() {
+        // both publishers call their stream "0" and collide on ts too:
+        // namespacing must keep both events and order them by origin
+        let a = wire_for(0, &[100]);
+        let b = wire_for(1, &[100]);
+        let fan =
+            FanIn::open(vec![std::io::Cursor::new(a), std::io::Cursor::new(b)], 8).unwrap();
+        let merged: Vec<(u64, u32)> = fan.source().map(|m| (m.ts, m.rank)).collect();
+        assert_eq!(merged, vec![(100, 0), (100, 1)], "no aliasing, origin-order ties");
+        let origins = fan.hub().origin_stats();
+        assert_eq!(origins.len(), 2);
+        assert_eq!(origins[0].received, 1);
+        assert_eq!(origins[1].received, 1);
+        fan.finish().unwrap();
+    }
+
+    #[test]
+    fn empty_connection_list_is_rejected() {
+        let err = FanIn::open(Vec::<std::io::Cursor<Vec<u8>>>::new(), 8).unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+    }
+
+    #[test]
+    fn bad_handshake_on_any_connection_fails_synchronously() {
+        let good = wire_for(0, &[1]);
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&frame::MAGIC);
+        bad.extend_from_slice(&99u32.to_le_bytes());
+        let err = FanIn::open(
+            vec![std::io::Cursor::new(good), std::io::Cursor::new(bad)],
+            8,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn dead_publisher_closes_only_its_origin() {
+        let a = wire_for(0, &[1, 2, 3]);
+        let mut b = wire_for(1, &[4, 5, 6]);
+        b.truncate(b.len().saturating_sub(10)); // kill B before Eos
+        let fan =
+            FanIn::open(vec![std::io::Cursor::new(a), std::io::Cursor::new(b)], 8).unwrap();
+        let merged = fan.source().count();
+        assert!(merged >= 3, "all of A must survive B's death (got {merged})");
+        let stats = fan.finish().unwrap();
+        assert!(stats.per[0].error.is_none());
+        assert!(stats.per[1].error.is_some(), "{:?}", stats.per[1]);
+        assert_eq!(stats.failed(), 1);
+        assert_eq!(stats.per[0].server_received, 3, "A's Eos accounting intact");
+    }
+}

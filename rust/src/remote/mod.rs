@@ -42,15 +42,31 @@
 //!    negotiation, the frame grammar and the beacon/drop/EOS semantics
 //!    are specified in `docs/PROTOCOL.md`.
 //!
+//! A fourth property arrived with multi-publisher fan-in
+//! ([`fanin`], `iprof attach <addr> <addr>...`, pinned by
+//! `rust/tests/fanin.rs`):
+//!
+//! 4. **N publishers, one merge.** [`FanIn`] handshakes N connections,
+//!    namespaces each publisher's stream ids into one shared hub
+//!    (origin blocks in connection order — colliding per-node ids can
+//!    never alias), translates every per-publisher watermark beacon onto its
+//!    shared channel, and drains the union with the same UNMODIFIED
+//!    merge — byte-identical to a single local `--live` run over the
+//!    concatenated stream set for lossless feeds, and degrading to a
+//!    partial-but-correct analysis when a publisher dies.
+//!
 //! Entry points: [`crate::coordinator::run_serve`] /
-//! [`crate::coordinator::run_attach`] (the `iprof serve` / `iprof
-//! attach` CLI), or [`publish`] + [`Attachment`] directly for custom
-//! transports (anything `Read`/`Write`).
+//! [`crate::coordinator::run_attach`] /
+//! [`crate::coordinator::run_fanin`] (the `iprof serve` / `iprof
+//! attach` CLI), or [`publish`] + [`Attachment`] / [`FanIn`] directly
+//! for custom transports (anything `Read`/`Write`).
 
 pub mod attach;
+pub mod fanin;
 pub mod frame;
 pub mod publish;
 
-pub use attach::{Attachment, RemoteStats};
+pub use attach::Attachment;
+pub use fanin::{FanIn, FanInStats, RemoteStats};
 pub use frame::{decode, decode_body, encode, Frame, FrameError, WireEvent, MAGIC, VERSION};
 pub use publish::{publish, PublishStats};

@@ -1,0 +1,286 @@
+//! THRL wire-format conformance + decoder robustness.
+//!
+//! The conformance half pins the codec to **frozen golden bytes**
+//! (`rust/tests/fixtures/thrl/*.hex`, one file per frame kind plus the
+//! version-negotiation preamble): every fixture must decode to its
+//! documented frame value and re-encode byte-identically. If the
+//! encoding ever drifts from `docs/PROTOCOL.md` — field order, widths,
+//! endianness, length accounting — these tests fail loudly instead of
+//! letting two builds disagree on the wire. The fixtures are loaded
+//! with `include_str!`, so deleting one fails the *build*, not just a
+//! test run.
+//!
+//! The robustness half is the hostile-input property: truncated,
+//! bit-flipped and random byte streams must always produce a structured
+//! [`FrameError`] (or a clean "incomplete") — never a panic, never an
+//! unbounded allocation (length prefixes and stream counts are capped),
+//! never misreading garbage as a frame that then over-consumes.
+
+use thapi::remote::frame::{
+    read_frame, read_preamble, write_preamble, MAX_FRAME_LEN, MAX_STREAMS,
+};
+use thapi::remote::{decode, decode_body, encode, Frame, FrameError, WireEvent};
+use thapi::tracer::encoder::FieldValue;
+use thapi::util::prop;
+
+/// Parse a `.hex` fixture: `#` lines are comments, whitespace is free.
+fn unhex(fixture: &str) -> Vec<u8> {
+    let hex: String = fixture
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#'))
+        .collect::<Vec<_>>()
+        .join("");
+    let hex: String = hex.chars().filter(|c| !c.is_whitespace()).collect();
+    assert_eq!(hex.len() % 2, 0, "odd hex digit count in fixture");
+    (0..hex.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&hex[i..i + 2], 16).expect("bad hex in fixture"))
+        .collect()
+}
+
+/// The frozen corpus: fixture name, raw file, and the frame value the
+/// bytes MUST decode to (the same values documented in the fixture
+/// comments and `docs/PROTOCOL.md`).
+fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
+    vec![
+        (
+            "hello",
+            include_str!("fixtures/thrl/hello.hex"),
+            Frame::Hello {
+                hostname: "node0".into(),
+                metadata: "btf_version: 1\nevents:\n".into(),
+                streams: 3,
+            },
+        ),
+        (
+            "streams",
+            include_str!("fixtures/thrl/streams.hex"),
+            Frame::Streams { count: 7 },
+        ),
+        (
+            "event",
+            include_str!("fixtures/thrl/event.hex"),
+            Frame::Event {
+                stream: 2,
+                event: WireEvent {
+                    ts: u64::MAX,
+                    rank: 1,
+                    tid: 42,
+                    class_id: 9,
+                    fields: vec![
+                        FieldValue::U64(7),
+                        FieldValue::I64(-3),
+                        FieldValue::F64(2.5),
+                        FieldValue::Ptr(0xff00_0000_dead_beef),
+                        FieldValue::Str("kernel".into()),
+                    ],
+                },
+            },
+        ),
+        (
+            "beacon",
+            include_str!("fixtures/thrl/beacon.hex"),
+            Frame::Beacon { stream: 0, watermark: 123_456 },
+        ),
+        (
+            "drops",
+            include_str!("fixtures/thrl/drops.hex"),
+            Frame::Drops { stream: 5, dropped: 99 },
+        ),
+        (
+            "close",
+            include_str!("fixtures/thrl/close.hex"),
+            Frame::Close { stream: 1 },
+        ),
+        (
+            "eos",
+            include_str!("fixtures/thrl/eos.hex"),
+            Frame::Eos { received: 1000, dropped: 4 },
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Conformance: frozen bytes <-> documented frames, both directions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preamble_fixture_is_frozen() {
+    let golden = unhex(include_str!("fixtures/thrl/preamble.hex"));
+    let mut ours = Vec::new();
+    write_preamble(&mut ours).unwrap();
+    assert_eq!(
+        ours, golden,
+        "preamble encoding drifted from the frozen fixture (docs/PROTOCOL.md)"
+    );
+    read_preamble(&mut &golden[..]).expect("the frozen preamble must be accepted");
+}
+
+#[test]
+fn every_fixture_decodes_to_its_golden_frame_and_reencodes_byte_identically() {
+    for (name, raw, expected) in golden_frames() {
+        let bytes = unhex(raw);
+        let (frame, consumed) = decode(&bytes)
+            .unwrap_or_else(|e| panic!("fixture {name} must decode: {e}"))
+            .unwrap_or_else(|| panic!("fixture {name} is a complete frame"));
+        assert_eq!(frame, expected, "fixture {name}: decoded frame drifted");
+        assert_eq!(consumed, bytes.len(), "fixture {name}: length accounting drifted");
+        let mut reencoded = Vec::new();
+        encode(&expected, &mut reencoded);
+        assert_eq!(
+            reencoded, bytes,
+            "fixture {name}: ENCODING drifted from the frozen wire bytes — \
+             this breaks old subscribers; bump the protocol version instead"
+        );
+    }
+}
+
+#[test]
+fn fixture_corpus_covers_every_frame_kind() {
+    // one fixture per discriminant: adding a frame kind to the protocol
+    // without freezing its bytes here must fail
+    let frames = golden_frames();
+    let kinds: std::collections::HashSet<std::mem::Discriminant<Frame>> =
+        frames.iter().map(|(_, _, f)| std::mem::discriminant(f)).collect();
+    assert_eq!(kinds.len(), 7, "fixture corpus no longer covers every frame kind");
+}
+
+#[test]
+fn concatenated_fixtures_read_as_one_conforming_connection() {
+    // preamble + Hello .. Eos in grammar order is a complete valid
+    // connection; the blocking reader must consume it frame by frame
+    let mut wire = unhex(include_str!("fixtures/thrl/preamble.hex"));
+    let frames = golden_frames();
+    for (_, raw, _) in &frames {
+        wire.extend_from_slice(&unhex(raw));
+    }
+    let mut r = &wire[..];
+    read_preamble(&mut r).unwrap();
+    for (name, _, expected) in &frames {
+        let got = read_frame(&mut r).unwrap_or_else(|e| panic!("reading {name}: {e}"));
+        assert_eq!(&got, expected);
+    }
+    assert!(r.is_empty(), "nothing may trail the Eos fixture");
+}
+
+// ---------------------------------------------------------------------------
+// Robustness: hostile inputs produce structured errors, never panics,
+// never unbounded allocations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_length_prefixes_are_rejected_not_allocated() {
+    // length prefix far beyond MAX_FRAME_LEN: structured error, and by
+    // construction no allocation of the claimed size
+    for len in [MAX_FRAME_LEN as u32 + 1, u32::MAX / 2, u32::MAX] {
+        let mut buf = len.to_le_bytes().to_vec();
+        buf.push(0x03);
+        assert!(
+            matches!(decode(&buf), Err(FrameError::BadLength(_))),
+            "len {len} must be a BadLength error"
+        );
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "{err}");
+    }
+    // zero length is equally invalid (a frame always has a type byte)
+    assert!(matches!(decode(&[0, 0, 0, 0]), Err(FrameError::BadLength(0))));
+    // a maximal-but-legal length with missing bytes is "incomplete", so a
+    // buffering reader waits instead of allocating eagerly
+    let buf = (MAX_FRAME_LEN as u32).to_le_bytes().to_vec();
+    assert_eq!(decode(&buf).unwrap(), None);
+}
+
+#[test]
+fn hostile_field_and_string_counts_inside_bodies_are_structured_errors() {
+    // an Event body claiming 65535 fields but carrying none: the decoder
+    // must fail on the missing bytes, not pre-allocate 65535 entries
+    let mut body = vec![0x03u8]; // T_EVENT
+    body.extend_from_slice(&0u32.to_le_bytes()); // stream
+    body.extend_from_slice(&0u64.to_le_bytes()); // ts
+    body.extend_from_slice(&0u32.to_le_bytes()); // rank
+    body.extend_from_slice(&0u32.to_le_bytes()); // tid
+    body.extend_from_slice(&0u32.to_le_bytes()); // class
+    body.extend_from_slice(&u16::MAX.to_le_bytes()); // nfields lie
+    assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+
+    // a Hello whose str32 metadata length lies about the body size
+    let mut body = vec![0x01u8]; // T_HELLO
+    body.extend_from_slice(&0u16.to_le_bytes()); // empty hostname
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // metadata length lie
+    assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+
+    // MAX_STREAMS is the subscriber-side cap the reader enforces on
+    // Streams/Event indices; sanity-pin its order of magnitude here so a
+    // refactor can't silently turn it into an unbounded allocation
+    assert!(MAX_STREAMS <= 1 << 20);
+}
+
+#[test]
+fn prop_truncations_of_valid_wires_are_incomplete_or_structured_errors() {
+    prop::check(100, 0xc0f0, |rng| {
+        let frames = golden_frames();
+        let (_, raw, _) = &frames[rng.range(0, frames.len())];
+        let bytes = unhex(raw);
+        // every strict prefix of a single valid frame reads as
+        // "incomplete", never as a wrong frame and never as corruption
+        let cut = rng.range(0, bytes.len());
+        assert_eq!(decode(&bytes[..cut]).expect("prefix must not be an error"), None);
+        // through the blocking reader a truncation is an UnexpectedEof
+        // io error (the publisher died), still never a panic
+        if cut > 0 {
+            let _ = read_frame(&mut &bytes[..cut]);
+        }
+    });
+}
+
+#[test]
+fn prop_bit_flips_never_panic_and_never_over_consume() {
+    prop::check(300, 0xb17f, |rng| {
+        // a small multi-frame wire, then one flipped bit anywhere
+        let frames = golden_frames();
+        let mut wire = Vec::new();
+        for _ in 0..rng.range(1, 4) {
+            let (_, raw, _) = &frames[rng.range(0, frames.len())];
+            wire.extend_from_slice(&unhex(raw));
+        }
+        let bit = rng.range(0, wire.len() * 8);
+        wire[bit / 8] ^= 1u8 << (bit % 8);
+        // sequential decode must terminate with Ok(None), Ok(Some) with
+        // sane consumption, or a structured error — anything but a panic
+        // or runaway consumption
+        let mut off = 0usize;
+        let mut steps = 0usize;
+        while off < wire.len() {
+            match decode(&wire[off..]) {
+                Ok(Some((_, n))) => {
+                    assert!(n > 4 && n <= wire.len() - off, "consumed {n} of {}", wire.len() - off);
+                    off += n;
+                }
+                Ok(None) => break,  // truncated tail: reader would wait
+                Err(_) => break,    // structured protocol error: reader aborts
+            }
+            steps += 1;
+            assert!(steps <= wire.len(), "decoder failed to make progress");
+        }
+    });
+}
+
+#[test]
+fn prop_random_byte_streams_never_panic_the_decoder() {
+    prop::check(500, 0x5eed, |rng| {
+        let n = rng.range(0, 128);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // plain decode: any structured outcome is fine
+        match decode(&bytes) {
+            Ok(Some((_, consumed))) => assert!(consumed <= bytes.len()),
+            Ok(None) | Err(_) => {}
+        }
+        // body decode at every offset: same bar
+        if !bytes.is_empty() {
+            let off = rng.range(0, bytes.len());
+            let _ = decode_body(&bytes[off..]);
+        }
+        // and through the blocking reader
+        let _ = read_frame(&mut &bytes[..]);
+    });
+}

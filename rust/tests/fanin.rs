@@ -1,0 +1,455 @@
+//! Multi-publisher fan-in tests (`iprof attach <addr> <addr>...`).
+//!
+//! The acceptance bar: attaching to N **lossless** publishers is
+//! byte-identical to a single local `--live` run over the concatenated
+//! stream set — pinned by a split-trace TCP golden and a randomized
+//! merge-order property — and a publisher that dies mid-stream degrades
+//! the union to a partial-but-correct analysis with exact per-publisher
+//! drop/EOS accounting, never a torn-down session. Stream-id collisions
+//! across publishers (the latent `LiveHub` aliasing bug the fan-in
+//! design surfaced) are pinned too.
+
+use std::io::Cursor;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use thapi::analysis::{
+    self, AnalysisSink, EventMsg, MessageSource, ParsedTrace, TallySink, TimelineSink,
+};
+use thapi::coordinator::{run, run_fanin, IprofConfig};
+use thapi::device::{Node, NodeConfig};
+use thapi::live::{replay_trace, run_live_pipeline, LiveHub, LiveSource};
+use thapi::remote::{frame, publish, FanIn, Frame, WireEvent};
+use thapi::tracer::btf::{generate_metadata, DecodedClass, Metadata, TraceData};
+use thapi::util::prop;
+
+/// Global-session tests cannot overlap.
+static LOCK: Mutex<()> = Mutex::new(());
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn app(name: &str) -> std::sync::Arc<dyn thapi::apps::Workload> {
+    thapi::apps::hecbench::suite()
+        .into_iter()
+        .chain(thapi::apps::spechpc::suite())
+        .find(|a| a.name() == name)
+        .unwrap_or_else(|| panic!("app {name}"))
+}
+
+/// Decode a registry-class message through `hub` (so the class id
+/// resolves on the attach side exactly like a real consumer's would).
+fn reg_msg(hub: &LiveHub, name: &str, ts: u64, rank: u32, tid: u32) -> EventMsg {
+    let class = thapi::model::class_by_name(name).unwrap();
+    hub.decode(rank, tid, class.id, ts, &0u64.to_le_bytes()).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Golden: split one real trace across two TCP publishers; the fan-in
+// union must be byte-identical to post-mortem analysis of the whole
+// trace (which PR 2/3 pinned byte-identical to a single local --live)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fanin_split_trace_over_tcp_is_byte_identical_to_whole_trace_postmortem() {
+    let _g = lock();
+    std::env::set_var("THAPI_APP_SCALE", "0.1");
+    let node = Node::new(NodeConfig::polaris());
+    let r = run(&node, app("513.soma").as_ref(), &IprofConfig::default());
+    let trace = r.trace.as_ref().unwrap();
+    assert!(trace.streams.len() > 1, "need a multi-stream trace to split");
+
+    // post-mortem reference over the WHOLE trace
+    let parsed = analysis::parse_trace(trace).unwrap();
+    let mut pm: Vec<Box<dyn AnalysisSink>> =
+        vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+    let pm_reports = analysis::run_pipeline(&parsed, &mut pm);
+
+    // split the stream set: publisher A gets the first half, B the rest;
+    // fan-in connection order A, B makes the shared channel layout the
+    // exact concatenation — i.e. the original stream order
+    let mid = trace.streams.len() / 2;
+    let sub_a = TraceData {
+        metadata: trace.metadata.clone(),
+        streams: trace.streams[..mid].to_vec(),
+    };
+    let sub_b = TraceData {
+        metadata: trace.metadata.clone(),
+        streams: trace.streams[mid..].to_vec(),
+    };
+
+    let hub_a = LiveHub::new(&node.config.hostname, 256, false);
+    let hub_b = LiveHub::new(&node.config.hostname, 256, false);
+    let la = TcpListener::bind("127.0.0.1:0").unwrap();
+    let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+    let (addr_a, addr_b) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+
+    let report = std::thread::scope(|s| {
+        let (ha, hb) = (&hub_a, &hub_b);
+        let (ta, tb) = (&sub_a, &sub_b);
+        s.spawn(move || {
+            let (conn, _) = la.accept().unwrap();
+            publish(ha, conn).unwrap()
+        });
+        s.spawn(move || {
+            let (conn, _) = lb.accept().unwrap();
+            publish(hb, conn).unwrap()
+        });
+        s.spawn(move || replay_trace(ha, ta, 32));
+        s.spawn(move || replay_trace(hb, tb, 32));
+        let conns = vec![
+            TcpStream::connect(addr_a).unwrap(),
+            TcpStream::connect(addr_b).unwrap(),
+        ];
+        let sinks: Vec<Box<dyn AnalysisSink>> =
+            vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
+        run_fanin(conns, 256, sinks, None, |_| {}).unwrap()
+    });
+
+    assert_eq!(report.stats.per.len(), 2);
+    assert_eq!(report.failed_publishers(), 0);
+    assert_eq!(report.server_dropped(), 0, "lossless replay on both publishers");
+    assert_eq!(report.server_received(), trace.record_count());
+    assert_eq!(report.latency.merged, trace.record_count());
+    assert_eq!(
+        report.reports[0].payload(),
+        pm_reports[0].payload(),
+        "fan-in tally must be byte-identical to whole-trace post-mortem"
+    );
+    assert_eq!(
+        report.reports[1].payload(),
+        pm_reports[1].payload(),
+        "fan-in timeline must be byte-identical (order-sensitive)"
+    );
+    // per-publisher accounting splits exactly along the stream split
+    let a_events: u64 = sub_a.record_count();
+    assert_eq!(report.stats.per[0].server_received, a_events);
+    assert_eq!(report.origins[0].received, a_events);
+    assert_eq!(
+        report.origins[1].received,
+        trace.record_count() - a_events,
+        "origin accounting covers the rest"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden: synthetic publishers vs a single local --live hub over the
+// concatenated stream set (the ISSUE invariant stated directly)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fanin_equals_single_local_live_over_concatenated_streams() {
+    // publisher A: 2 streams, publisher B: 1 stream — with cross-publisher
+    // timestamp ties that the concatenated tie-break must resolve
+    let batches_a: Vec<Vec<(u64, u32, u32)>> = vec![
+        vec![(10, 0, 1), (15, 0, 1), (20, 0, 1), (25, 0, 1)],
+        vec![(10, 0, 2), (17, 0, 2)],
+    ];
+    let batches_b: Vec<Vec<(u64, u32, u32)>> = vec![vec![(10, 1, 1), (15, 1, 1)]];
+    let mk = |hub: &LiveHub, batch: &[(u64, u32, u32)]| -> Vec<EventMsg> {
+        batch
+            .iter()
+            .enumerate()
+            .map(|(i, &(ts, rank, tid))| {
+                let name = if i % 2 == 0 {
+                    "lttng_ust_ze:zeInit_entry"
+                } else {
+                    "lttng_ust_ze:zeInit_exit"
+                };
+                reg_msg(hub, name, ts, rank, tid)
+            })
+            .collect()
+    };
+
+    // reference: ONE local hub holding the concatenation A ++ B
+    let local = LiveHub::new("fan", 64, false);
+    local.ensure_channels(3);
+    for (i, b) in batches_a.iter().chain(batches_b.iter()).enumerate() {
+        local.push_batch(i, mk(&local, b));
+    }
+    local.close_all();
+    let mut ref_sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let ref_out = run_live_pipeline(LiveSource::new(local), &mut ref_sinks, None, |_| {});
+
+    // fan-in: the same streams split across two publishers
+    let wire = |batches: &[Vec<(u64, u32, u32)>]| -> Vec<u8> {
+        let hub = LiveHub::new("fan", 64, false);
+        hub.ensure_channels(batches.len());
+        for (i, b) in batches.iter().enumerate() {
+            hub.push_batch(i, mk(&hub, b));
+        }
+        hub.close_all();
+        let mut buf = Vec::new();
+        publish(&hub, &mut buf).unwrap();
+        buf
+    };
+    let fan = FanIn::open(
+        vec![Cursor::new(wire(&batches_a)), Cursor::new(wire(&batches_b))],
+        64,
+    )
+    .unwrap();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let out = run_live_pipeline(fan.source(), &mut sinks, None, |_| {});
+    let stats = fan.finish().unwrap();
+
+    assert_eq!(stats.failed(), 0);
+    assert_eq!(stats.server_dropped(), 0);
+    assert_eq!(
+        out.reports[0].payload(),
+        ref_out.reports[0].payload(),
+        "fan-in over 2 publishers must equal one local --live over the concatenation"
+    );
+    assert_eq!(out.latency.merged, 8);
+}
+
+// ---------------------------------------------------------------------------
+// Property: randomized publishers, streams, ties, run interleavings —
+// the fan-in merge equals the post-mortem merge of the concatenation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fanin_merge_order_equals_concatenated_postmortem_merge() {
+    prop::check(20, 0xfa71, |rng| {
+        let class = Arc::new(DecodedClass {
+            id: 0,
+            name: "lttng_ust_ze:zeInit_entry".to_string(),
+            api: "ZE".to_string(),
+            flags: "h".to_string(),
+            fields: vec![],
+        });
+        let hostname: Arc<str> = Arc::from("fan");
+        let n_pubs = rng.range(2, 5);
+        // publisher p -> its own list of streams of (ts-tied) events
+        let mut pubs: Vec<Vec<Vec<EventMsg>>> = Vec::with_capacity(n_pubs);
+        for p in 0..n_pubs {
+            let n_streams = rng.range(1, 4);
+            let mut streams = Vec::with_capacity(n_streams);
+            for si in 0..n_streams {
+                let mut ts = rng.below(4);
+                let n = rng.range(0, 30);
+                let mut events = Vec::with_capacity(n);
+                for i in 0..n {
+                    ts += rng.below(3); // zero increments force equal timestamps
+                    events.push(EventMsg {
+                        ts,
+                        rank: p as u32,
+                        tid: (si * 1000 + i) as u32,
+                        hostname: hostname.clone(),
+                        class: class.clone(),
+                        fields: vec![],
+                    });
+                }
+                streams.push(events);
+            }
+            pubs.push(streams);
+        }
+
+        // expected: post-mortem merge over the CONCATENATED stream set
+        let concat = ParsedTrace {
+            metadata: Metadata::default(),
+            streams: pubs.iter().flat_map(|s| s.iter().cloned()).collect(),
+        };
+        let expected: Vec<(u64, u32, u32)> =
+            MessageSource::new(&concat).map(|m| (m.ts, m.rank, m.tid)).collect();
+
+        // one hand-built wire per publisher: random-length per-stream runs
+        // with honest watermark beacons, then closes and Eos
+        let md = "btf_version: 1\nenv:\nevents:\n  - id: 0\n    \
+                  name: lttng_ust_ze:zeInit_entry\n    api: ZE\n    flags: h\n    fields:\n";
+        let mut wires = Vec::with_capacity(n_pubs);
+        for streams in &pubs {
+            let mut wire = Vec::new();
+            frame::write_preamble(&mut wire).unwrap();
+            frame::write_frame(
+                &mut wire,
+                &Frame::Hello {
+                    hostname: "fan".into(),
+                    metadata: md.to_string(),
+                    streams: streams.len() as u32,
+                },
+            )
+            .unwrap();
+            let mut cursor = vec![0usize; streams.len()];
+            loop {
+                let mut progressed = false;
+                for (i, s) in streams.iter().enumerate() {
+                    if cursor[i] >= s.len() {
+                        continue;
+                    }
+                    progressed = true;
+                    let run = rng.range(1, 6).min(s.len() - cursor[i]);
+                    for m in &s[cursor[i]..cursor[i] + run] {
+                        frame::write_frame(
+                            &mut wire,
+                            &Frame::Event {
+                                stream: i as u32,
+                                event: WireEvent {
+                                    ts: m.ts,
+                                    rank: m.rank,
+                                    tid: m.tid,
+                                    class_id: 0,
+                                    fields: vec![],
+                                },
+                            },
+                        )
+                        .unwrap();
+                    }
+                    cursor[i] += run;
+                    if let Some(next) = s.get(cursor[i]) {
+                        frame::write_frame(
+                            &mut wire,
+                            &Frame::Beacon { stream: i as u32, watermark: next.ts },
+                        )
+                        .unwrap();
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            for i in 0..streams.len() {
+                frame::write_frame(&mut wire, &Frame::Close { stream: i as u32 }).unwrap();
+            }
+            let total: u64 = streams.iter().map(|s| s.len() as u64).sum();
+            frame::write_frame(&mut wire, &Frame::Eos { received: total, dropped: 0 })
+                .unwrap();
+            wires.push(wire);
+        }
+
+        let fan =
+            FanIn::open(wires.into_iter().map(Cursor::new).collect::<Vec<_>>(), 8).unwrap();
+        let got: Vec<(u64, u32, u32)> = fan.source().map(|m| (m.ts, m.rank, m.tid)).collect();
+        let stats = fan.finish().unwrap();
+        assert_eq!(stats.failed(), 0);
+        assert_eq!(
+            got, expected,
+            "fan-in merge must equal the concatenated post-mortem merge exactly"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Failure isolation: a killed publisher degrades the union to a
+// partial-but-correct analysis with exact per-publisher accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_publisher_yields_partial_union_analysis_with_accounting() {
+    // publisher A: complete session, 4 events, clean Eos
+    let hub_a = LiveHub::new("alive", 64, false);
+    hub_a.ensure_channels(1);
+    hub_a.push_batch(
+        0,
+        vec![
+            reg_msg(&hub_a, "lttng_ust_ze:zeInit_entry", 10, 0, 1),
+            reg_msg(&hub_a, "lttng_ust_ze:zeInit_exit", 15, 0, 1),
+            reg_msg(&hub_a, "lttng_ust_ze:zeInit_entry", 20, 0, 1),
+            reg_msg(&hub_a, "lttng_ust_ze:zeInit_exit", 25, 0, 1),
+        ],
+    );
+    hub_a.close_all();
+    let mut wire_a = Vec::new();
+    publish(&hub_a, &mut wire_a).unwrap();
+
+    // publisher B: 2 complete events, then killed mid-frame (no Eos)
+    let mut wire_b = Vec::new();
+    frame::write_preamble(&mut wire_b).unwrap();
+    frame::write_frame(
+        &mut wire_b,
+        &Frame::Hello {
+            hostname: "dying".into(),
+            metadata: generate_metadata(&[]),
+            streams: 1,
+        },
+    )
+    .unwrap();
+    let entry_id = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap().id;
+    for ts in [12u64, 17] {
+        frame::write_frame(
+            &mut wire_b,
+            &Frame::Event {
+                stream: 0,
+                event: WireEvent {
+                    ts,
+                    rank: 1,
+                    tid: 9,
+                    class_id: entry_id,
+                    fields: vec![thapi::tracer::encoder::FieldValue::U64(0)],
+                },
+            },
+        )
+        .unwrap();
+    }
+    let mut cut_frame = Vec::new();
+    frame::write_frame(
+        &mut cut_frame,
+        &Frame::Beacon { stream: 0, watermark: 99 },
+    )
+    .unwrap();
+    wire_b.extend_from_slice(&cut_frame[..cut_frame.len() / 2]); // the kill
+
+    let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let report = run_fanin(
+        vec![Cursor::new(wire_a), Cursor::new(wire_b)],
+        64,
+        sinks,
+        None,
+        |_| {},
+    )
+    .unwrap();
+
+    // the union analysis survived and covers A fully + B up to the cut
+    assert_eq!(report.reports.len(), 1, "partial report produced, not discarded");
+    assert!(report.reports[0].payload().unwrap().contains("zeInit"));
+    assert_eq!(report.latency.merged, 6, "4 from A + 2 from B before the cut");
+    // per-publisher accounting: A clean, B dead with its partial counts
+    assert_eq!(report.failed_publishers(), 1);
+    assert!(report.stats.per[0].error.is_none());
+    assert_eq!(report.stats.per[0].server_received, 4, "A's Eos accounting intact");
+    assert_eq!(report.stats.per[0].server_dropped, 0);
+    let dead = &report.stats.per[1];
+    assert!(dead.error.is_some(), "{dead:?}");
+    assert_eq!(dead.events, 2, "B's frames before the cut are counted");
+    assert_eq!(dead.server_received, 0, "no Eos ever arrived from B");
+    assert_eq!(report.origins[0].received, 4);
+    assert_eq!(report.origins[1].received, 2);
+    assert!(report.origins[1].eos.is_none(), "B died before Eos");
+    assert_eq!(report.origins[0].eos, Some((4, 0)));
+    assert_eq!(report.hostnames, vec!["alive".to_string(), "dying".to_string()]);
+}
+
+// ---------------------------------------------------------------------------
+// Stream-id collision: identical per-publisher ids must not alias
+// ---------------------------------------------------------------------------
+
+#[test]
+fn colliding_stream_ids_across_publishers_do_not_alias() {
+    // both publishers use stream id 0 AND the same timestamp: without
+    // origin namespacing the second feed would interleave into the first
+    // publisher's channel (the pre-fan-in latent bug)
+    let wire = |rank: u32| -> Vec<u8> {
+        let hub = LiveHub::new(&format!("node{rank}"), 8, false);
+        hub.ensure_channels(1);
+        hub.push_batch(
+            0,
+            vec![
+                reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 100, rank, rank),
+                reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 200, rank, rank),
+            ],
+        );
+        hub.close_all();
+        let mut buf = Vec::new();
+        publish(&hub, &mut buf).unwrap();
+        buf
+    };
+    let fan = FanIn::open(vec![Cursor::new(wire(0)), Cursor::new(wire(1))], 8).unwrap();
+    let merged: Vec<(u64, u32)> = fan.source().map(|m| (m.ts, m.rank)).collect();
+    // all four events survive; equal timestamps order by connection order
+    assert_eq!(merged, vec![(100, 0), (100, 1), (200, 0), (200, 1)]);
+    let origins = fan.hub().origin_stats();
+    assert_eq!(origins.len(), 2);
+    assert_eq!((origins[0].received, origins[1].received), (2, 2));
+    assert_eq!(origins[0].label, "node0");
+    assert_eq!(origins[1].label, "node1");
+    let stats = fan.finish().unwrap();
+    assert_eq!(stats.server_received(), 4);
+}
