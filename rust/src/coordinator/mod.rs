@@ -14,7 +14,9 @@ use anyhow::Result;
 use crate::apps::Workload;
 use crate::device::Node;
 use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats, OriginStats};
-use crate::remote::{self, FanIn, PublishStats, RemoteStats};
+use crate::remote::{
+    self, FanIn, FanInStats, PublishStats, Publisher, ReconnectPolicy, RemoteStats, ServeOutcome,
+};
 use crate::sampling::{Sampler, SamplingConfig};
 use crate::tracer::btf::{self, TraceData};
 use crate::tracer::{
@@ -316,8 +318,13 @@ pub struct ServeReport {
     pub trace: Option<TraceData>,
     /// Channel-level statistics: received/dropped/beacons.
     pub live: LiveStats,
-    /// Wire-level statistics: frames/events/beacons/bytes relayed.
+    /// Wire-level statistics: frames/events/beacons/bytes relayed —
+    /// cumulative across every connection for a resumable serve.
     pub publish: PublishStats,
+    /// One entry per subscriber connection that ended before Eos, with
+    /// the reason (always empty for the one-shot [`run_serve`]). A
+    /// resumable serve kept going after each of these.
+    pub disconnects: Vec<String>,
 }
 
 impl ServeReport {
@@ -399,6 +406,111 @@ pub fn run_serve<W: Write + Send>(
         trace,
         live: hub.stats(),
         publish: published?,
+        disconnects: Vec::new(),
+    })
+}
+
+/// Run `workload` and publish its live channels as a **resumable**
+/// session (`iprof serve --resume-buffer <bytes>`): the publisher owns a
+/// session epoch and a byte-budgeted replay ring, `accept` supplies
+/// subscriber connections, and a dropped subscriber can reconnect and
+/// resume from its per-stream cursors without losing anything the ring
+/// still holds (`docs/PROTOCOL.md` § Session resumption). Publishing
+/// ends only at a clean Eos on the wire.
+///
+/// `accept` supplies subscriber connections: `Ok(Some(conn))` serves
+/// it, `Ok(None)` means "no subscriber right now" — the publisher then
+/// drains pending hub progress into the replay ring and polls again, so
+/// `accept` should sleep briefly before returning `None` (the CLI polls
+/// a nonblocking listener at ~20 ms). An `Err` from it is fatal to the
+/// *publishing* side only — the traced run still completes and is
+/// reported, with the error returned here after teardown.
+pub fn run_serve_resumable<S, A>(
+    node: &Arc<Node>,
+    workload: &dyn Workload,
+    config: &IprofConfig,
+    live_cfg: &LiveConfig,
+    mut accept: A,
+    resume_buffer: usize,
+) -> std::io::Result<ServeReport>
+where
+    S: Read + Write + Send,
+    A: FnMut() -> std::io::Result<Option<S>> + Send,
+{
+    assert!(config.tracing, "serve mode requires tracing");
+    let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    let session = install_session(SessionConfig {
+        mode: config.mode,
+        buffer_capacity: config.buffer_capacity,
+        sink: SinkKind::Live(hub.clone()),
+        selected_ranks: config.selected_ranks.clone(),
+        hostname: node.config.hostname.clone(),
+        consumer_interval: Duration::from_millis(2),
+    });
+    for p in &config.disabled_patterns {
+        session.disable_matching(p);
+    }
+    let sampler = config
+        .sampling
+        .clone()
+        .map(|s| Sampler::start(node.clone(), s));
+
+    let pub_hub = hub.clone();
+    let (published, wall) = std::thread::scope(|scope| {
+        let publisher_thread = scope.spawn(move || {
+            let mut publisher =
+                Publisher::new(pub_hub, Publisher::fresh_epoch(), resume_buffer);
+            let mut disconnects = Vec::new();
+            loop {
+                match accept()? {
+                    Some(conn) => match publisher.serve_connection(conn) {
+                        ServeOutcome::Complete => {
+                            return Ok((publisher.stats(), disconnects));
+                        }
+                        ServeOutcome::Lost(reason) => disconnects.push(reason),
+                    },
+                    // nobody attached: keep hub → ring so the outage
+                    // costs ring budget, not events
+                    None => publisher.drain_to_ring(),
+                }
+            }
+        });
+        let t0 = Instant::now();
+        // Same teardown discipline as run_serve: a panicking workload
+        // must still uninstall (final drain + hub close). The publisher
+        // keeps serving until the wire reaches Eos — between subscriber
+        // connections the hub drains into the replay ring, so nothing
+        // is lost while no one is attached.
+        let run_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            workload.run(node);
+            node.synchronize();
+        }));
+        let wall = t0.elapsed();
+        if let Some(s) = sampler {
+            s.stop();
+        }
+        uninstall_session().expect("session vanished");
+        let published = publisher_thread.join().expect("publisher thread panicked");
+        if let Err(p) = run_result {
+            std::panic::resume_unwind(p);
+        }
+        (published, wall)
+    });
+
+    let stats = session.stats();
+    let trace = live_cfg.retain.then(|| {
+        btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
+    });
+    let (publish, disconnects) = published?;
+    Ok(ServeReport {
+        app: workload.name().to_string(),
+        config: config.label(),
+        wall,
+        stats,
+        trace,
+        live: hub.stats(),
+        publish,
+        disconnects,
     })
 }
 
@@ -491,8 +603,11 @@ impl FanInReport {
 
     /// Best known publisher-side loss (saturating): per publisher, the
     /// larger of its Eos total and its cumulative per-stream `Drops`
-    /// ledger — so a publisher that reported drops and then died before
-    /// Eos still counts as lossy (`--live-strict` gates on this, not on
+    /// ledger, **plus** any resume gaps (events the publisher's replay
+    /// ring evicted before a reconnect could fetch them) — so a
+    /// publisher that reported drops and then died before Eos still
+    /// counts as lossy, and a resumed-with-gap session can never pass
+    /// as lossless (`--live-strict` gates on this, not on
     /// [`FanInReport::server_dropped`] alone).
     pub fn known_dropped(&self) -> u64 {
         self.stats
@@ -501,7 +616,18 @@ impl FanInReport {
             .zip(&self.origins)
             .fold(0u64, |a, (s, o)| {
                 a.saturating_add(s.server_dropped.max(o.remote_dropped))
+                    .saturating_add(o.resume_gaps)
             })
+    }
+
+    /// Successful session resumes across every publisher connection.
+    pub fn reconnects(&self) -> u64 {
+        self.stats.reconnects()
+    }
+
+    /// Events lost to resume gaps across every publisher (saturating).
+    pub fn resume_gaps(&self) -> u64 {
+        self.stats.resume_gaps()
     }
 }
 
@@ -518,11 +644,46 @@ impl FanInReport {
 pub fn run_fanin<R: Read + Send + 'static>(
     conns: Vec<R>,
     depth: usize,
+    sinks: Vec<Box<dyn AnalysisSink>>,
+    refresh: Option<Duration>,
+    on_refresh: impl FnMut(&str),
+) -> std::io::Result<FanInReport> {
+    drive_fanin(FanIn::open(conns, depth)?, sinks, refresh, on_refresh)
+}
+
+/// [`run_fanin`] with reconnect/resume: every connection comes from a
+/// redialable `connector`, and a dropped connection to a resumable
+/// publisher (`iprof serve --resume-buffer`) is resumed under `policy`
+/// — the reader redials with backoff, re-handshakes, validates the
+/// session epoch and continues from its per-stream cursors, replaying
+/// the lost tail from the publisher's ring. With no gaps the reports
+/// are byte-identical to an uninterrupted run; ring-evicted events land
+/// in [`FanInReport::known_dropped`] (and fail `--live-strict`) instead
+/// of tearing the feed down.
+pub fn run_fanin_resumable<S, C>(
+    connectors: Vec<C>,
+    depth: usize,
+    policy: ReconnectPolicy,
+    sinks: Vec<Box<dyn AnalysisSink>>,
+    refresh: Option<Duration>,
+    on_refresh: impl FnMut(&str),
+) -> std::io::Result<FanInReport>
+where
+    S: Read + Write + Send + 'static,
+    C: FnMut() -> std::io::Result<S> + Send + 'static,
+{
+    drive_fanin(FanIn::open_resumable(connectors, depth, policy)?, sinks, refresh, on_refresh)
+}
+
+/// Shared tail of [`run_fanin`] / [`run_fanin_resumable`]: drive the
+/// unmodified merge + sinks over the opened fan-in and gather every
+/// accounting surface.
+fn drive_fanin(
+    fan: FanIn,
     mut sinks: Vec<Box<dyn AnalysisSink>>,
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
 ) -> std::io::Result<FanInReport> {
-    let fan = FanIn::open(conns, depth)?;
     let hostnames = fan.hostnames.clone();
     let pipe = live::run_live_pipeline(fan.source(), &mut sinks, refresh, on_refresh);
     let local = fan.hub().stats();

@@ -96,6 +96,10 @@ struct OriginState {
     /// Latest cumulative publisher-side drop count per remote stream
     /// (monotone: a stale or rewound wire value never lowers it).
     remote_drops: Vec<u64>,
+    /// Events irrecoverably lost to resume gaps (`ResumeGap` frames:
+    /// the publisher's replay ring evicted them before the subscriber
+    /// reconnected). Saturating; see [`LiveHub::record_origin_gap`].
+    resume_gaps: u64,
     /// Publisher-side hub totals from its Eos frame, if one arrived.
     eos: Option<(u64, u64)>,
     /// All of this origin's channels have been closed.
@@ -120,6 +124,11 @@ pub struct OriginStats {
     /// Publisher-side cumulative drops reported over the wire —
     /// saturating sum of the latest per-stream counters.
     pub remote_dropped: u64,
+    /// Events lost to resume gaps: the publisher replay-ring evicted
+    /// them before a reconnecting subscriber could fetch them. Nonzero
+    /// means the resumed view is incomplete by exactly this many events
+    /// (`--live-strict` fails on it).
+    pub resume_gaps: u64,
     /// Publisher-side Eos totals `(received, dropped)`, if the origin
     /// ended cleanly; `None` means the publisher died before Eos.
     pub eos: Option<(u64, u64)>,
@@ -176,6 +185,22 @@ pub struct ForwardCursor {
     per: Vec<ChannelCursor>,
 }
 
+impl ForwardCursor {
+    /// Reset the delta baseline for a NEW subscriber connection that
+    /// already knows about `announced` channels (its Hello said so):
+    /// per-channel watermark/drop/close state is zeroed so the next
+    /// [`LiveHub::next_forward_batch`] re-reports the *current* hub
+    /// state in full. Watermarks and drop counters are monotone and
+    /// closes idempotent on the subscriber, so re-reporting is always
+    /// safe — this is how a resumed session resynchronizes everything
+    /// that is not an event (events replay from the publisher's ring
+    /// instead, see `crate::remote::publish`).
+    pub fn resync(&mut self, announced: usize) {
+        self.announced = announced;
+        self.per.clear();
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 struct ChannelCursor {
     watermark: u64,
@@ -225,6 +250,26 @@ pub struct LiveStats {
 }
 
 /// The live transport hub (see module docs).
+///
+/// # Examples
+///
+/// A miniature hub: one event on channel 0, channel 1 quiet — the
+/// beacon and the close let the [`super::source::LiveSource`] merge
+/// release past the quiet stream:
+///
+/// ```
+/// use thapi::live::{LiveHub, LiveSource};
+///
+/// let hub = LiveHub::new("docnode", 64, false);
+/// hub.ensure_channels(2);
+/// let class = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+/// let msg = hub.decode(0, 0, class.id, 42, &0u64.to_le_bytes()).unwrap();
+/// hub.push_batch(0, vec![msg]);
+/// hub.beacon(1, 100); // stream 1 promises: nothing earlier than t=100
+/// hub.close_all();
+/// let merged: Vec<u64> = LiveSource::new(hub).map(|m| m.ts).collect();
+/// assert_eq!(merged, vec![42]);
+/// ```
 pub struct LiveHub {
     pub(super) inner: Mutex<HubState>,
     pub(super) progress: Condvar,
@@ -319,6 +364,7 @@ impl LiveHub {
             label: label.to_string(),
             map: Vec::new(),
             remote_drops: Vec::new(),
+            resume_gaps: 0,
             eos: None,
             closed: false,
         });
@@ -376,6 +422,44 @@ impl LiveHub {
         st.origins[origin].eos = Some((received, dropped));
     }
 
+    /// Book `missed` events of `origin`'s remote stream as lost to a
+    /// resume gap (a `ResumeGap` frame: the publisher's replay ring
+    /// evicted them before the subscriber reconnected). Gaps accumulate
+    /// saturating into the origin's drops ledger — unlike
+    /// [`LiveHub::record_origin_drops`] these are deltas, not cumulative
+    /// wire counters, because each gap names events that are gone for
+    /// good. The remote stream index is recorded for attribution only;
+    /// no channel state changes (the stream keeps flowing past the gap).
+    pub fn record_origin_gap(&self, origin: usize, _remote: usize, missed: u64) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let o = &mut st.origins[origin];
+        o.resume_gaps = o.resume_gaps.saturating_add(missed);
+    }
+
+    /// Re-admit `origin` after a successful session resume: clears the
+    /// origin's closed flag and re-opens its channels so replayed events
+    /// can flow again. The inverse of [`LiveHub::close_origin`], for the
+    /// reconnect path (`iprof attach --reconnect`).
+    ///
+    /// Safe by construction: re-opening only makes the merge *more*
+    /// conservative (an empty, open channel holds candidates at or past
+    /// its watermark until the publisher's post-resume state resync
+    /// re-reports any genuine closes, which arrive immediately after the
+    /// replay). No-op once the hub is sealed — the merge may already
+    /// have terminated, and a terminated merge must stay terminated.
+    pub fn reopen_origin(&self, origin: usize) {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if st.sealed {
+            return;
+        }
+        let mapped = st.origins[origin].map.clone();
+        for idx in mapped {
+            st.channels[idx].closed = false;
+        }
+        st.origins[origin].closed = false;
+        self.progress.notify_all();
+    }
+
     /// Close every channel mapped to `origin` — and only those. A dying
     /// publisher ends its own streams without touching the rest of the
     /// union, so the fan-in merge degrades to a partial-but-correct
@@ -400,6 +484,7 @@ impl LiveHub {
                 let mut s = OriginStats {
                     label: o.label.clone(),
                     channels: o.map.len(),
+                    resume_gaps: o.resume_gaps,
                     eos: o.eos,
                     closed: o.closed,
                     ..Default::default()
@@ -526,32 +611,7 @@ impl LiveHub {
     pub fn next_forward_batch(&self, cursor: &mut ForwardCursor) -> Option<ForwardBatch> {
         let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            let mut batch = ForwardBatch::default();
-            if st.channels.len() > cursor.per.len() {
-                cursor.per.resize(st.channels.len(), ChannelCursor::default());
-            }
-            if st.channels.len() > cursor.announced {
-                cursor.announced = st.channels.len();
-                batch.grown_to = Some(cursor.announced);
-            }
-            for (i, ch) in st.channels.iter_mut().enumerate() {
-                let cur = &mut cursor.per[i];
-                while let Some(e) = ch.queue.pop_front() {
-                    batch.events.push((i, e.msg));
-                }
-                if ch.watermark > cur.watermark {
-                    cur.watermark = ch.watermark;
-                    batch.beacons.push((i, ch.watermark));
-                }
-                if ch.dropped > cur.dropped {
-                    cur.dropped = ch.dropped;
-                    batch.drops.push((i, ch.dropped));
-                }
-                if ch.closed && !cur.closed {
-                    cur.closed = true;
-                    batch.closed.push(i);
-                }
-            }
+            let batch = Self::build_forward_batch(&mut st, cursor);
             if !batch.is_empty() {
                 // replay producers may be parked waiting for queue space
                 self.progress.notify_all();
@@ -567,6 +627,56 @@ impl LiveHub {
                 .unwrap_or_else(|p| p.into_inner());
             st = guard;
         }
+    }
+
+    /// Non-blocking [`LiveHub::next_forward_batch`]: pop and return
+    /// whatever is forwardable *right now*, or `None` when there is
+    /// nothing new — including at end of stream. A resumable publisher
+    /// uses this between subscriber connections to keep draining the
+    /// hub into its replay ring, so a mid-run outage costs ring budget,
+    /// not events.
+    pub fn try_forward_batch(&self, cursor: &mut ForwardCursor) -> Option<ForwardBatch> {
+        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let batch = Self::build_forward_batch(&mut st, cursor);
+        if batch.is_empty() {
+            None
+        } else {
+            self.progress.notify_all();
+            Some(batch)
+        }
+    }
+
+    /// The one forward-batch builder both flavors share: everything new
+    /// past `cursor` is popped (events) or delta-reported (growth,
+    /// watermarks, drops, closes).
+    fn build_forward_batch(st: &mut HubState, cursor: &mut ForwardCursor) -> ForwardBatch {
+        let mut batch = ForwardBatch::default();
+        if st.channels.len() > cursor.per.len() {
+            cursor.per.resize(st.channels.len(), ChannelCursor::default());
+        }
+        if st.channels.len() > cursor.announced {
+            cursor.announced = st.channels.len();
+            batch.grown_to = Some(cursor.announced);
+        }
+        for (i, ch) in st.channels.iter_mut().enumerate() {
+            let cur = &mut cursor.per[i];
+            while let Some(e) = ch.queue.pop_front() {
+                batch.events.push((i, e.msg));
+            }
+            if ch.watermark > cur.watermark {
+                cur.watermark = ch.watermark;
+                batch.beacons.push((i, ch.watermark));
+            }
+            if ch.dropped > cur.dropped {
+                cur.dropped = ch.dropped;
+                batch.drops.push((i, ch.dropped));
+            }
+            if ch.closed && !cur.closed {
+                cur.closed = true;
+                batch.closed.push(i);
+            }
+        }
+        batch
     }
 
     /// Lossless single-message feed for a **remote subscriber's** mirror
@@ -736,6 +846,61 @@ mod tests {
         hub.record_origin_drops(o, 1, 3);
         let st = hub.inner.lock().unwrap();
         assert_eq!(st.origins[o].remote_drops[1], 7);
+    }
+
+    #[test]
+    fn resume_gaps_accumulate_saturating_into_origin_stats() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let o = hub.register_origin("flappy");
+        hub.record_origin_gap(o, 0, 5);
+        hub.record_origin_gap(o, 1, 7);
+        assert_eq!(hub.origin_stats()[o].resume_gaps, 12, "gaps are deltas, they add");
+        hub.record_origin_gap(o, 0, u64::MAX);
+        assert_eq!(hub.origin_stats()[o].resume_gaps, u64::MAX, "saturating, never wrapping");
+    }
+
+    #[test]
+    fn reopen_origin_reverses_close_origin_until_sealed() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let a = hub.register_origin("a");
+        hub.ensure_origin_channels(a, 2);
+        hub.close_origin(a);
+        assert!(hub.origin_stats()[a].closed);
+        hub.reopen_origin(a);
+        assert!(!hub.origin_stats()[a].closed);
+        {
+            let st = hub.inner.lock().unwrap();
+            assert!(!st.channels[0].closed && !st.channels[1].closed);
+        }
+        // a reopened channel accepts events again
+        hub.feed_remote(0, msg(5, 0, 0), 8);
+        assert_eq!(hub.origin_stats()[a].received, 1);
+        // but a sealed hub stays terminated: reopen is a no-op
+        hub.close_all();
+        hub.reopen_origin(a);
+        let st = hub.inner.lock().unwrap();
+        assert!(st.channels[0].closed, "reopen after seal must not resurrect the merge");
+    }
+
+    #[test]
+    fn forward_cursor_resync_rereports_current_state_without_duplicating_events() {
+        let hub = LiveHub::new("hubtest", 2, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, (0..5).map(|i| msg(i, 0, 0)).collect()); // 3 drop
+        let mut cursor = ForwardCursor::default();
+        let b = hub.next_forward_batch(&mut cursor).unwrap();
+        assert_eq!(b.events.len(), 2);
+        // a new subscriber connection: resync re-reports watermark and
+        // drops in full, but popped events are gone from the hub (the
+        // publisher's replay ring re-sends those)
+        cursor.resync(1);
+        hub.close_all();
+        let b = hub.next_forward_batch(&mut cursor).unwrap();
+        assert!(b.events.is_empty(), "no event duplication from the hub side");
+        assert_eq!(b.grown_to, None, "Hello already announced the channel");
+        assert!(b.beacons.contains(&(0, 4)), "current watermark re-reported");
+        assert_eq!(b.drops, vec![(0, 3)], "cumulative drops re-reported");
+        assert_eq!(b.closed, vec![0], "closes re-reported");
     }
 
     #[test]

@@ -41,13 +41,19 @@
 //! Entry points: [`crate::coordinator::run_live`] (whole-workload runs,
 //! `iprof --live`), [`replay_trace`] (drive a recorded trace through the
 //! live machinery, for benches and equivalence tests). The hub also
-//! exposes a forwarding tee ([`LiveHub::next_forward_batch`]) and a
-//! remote-subscriber feed ([`LiveHub::feed_remote`]) so [`crate::remote`]
-//! can split this pipeline across a socket (`iprof serve` /
-//! `iprof attach`) without touching the merge — and origin registration
+//! exposes a forwarding tee ([`LiveHub::next_forward_batch`], plus the
+//! non-blocking [`LiveHub::try_forward_batch`] a resumable publisher
+//! drains between subscriber connections) and a remote-subscriber feed
+//! ([`LiveHub::feed_remote`]) so [`crate::remote`] can split this
+//! pipeline across a socket (`iprof serve` / `iprof attach`) without
+//! touching the merge — origin registration
 //! ([`LiveHub::register_origin`]) so one hub can mirror **several**
 //! publishers at once with namespaced stream ids (`iprof attach
-//! <addr> <addr>...`, see [`crate::remote::fanin`]).
+//! <addr> <addr>...`, see [`crate::remote::fanin`]) — and the
+//! reconnect bookkeeping ([`LiveHub::record_origin_gap`] /
+//! [`LiveHub::reopen_origin`]) that lets a dropped publisher re-join
+//! its own origin with resume gaps accounted, never silent (THRL v2
+//! session resumption; operator view in `docs/GUIDE.md`).
 
 pub mod channel;
 pub mod pipeline;

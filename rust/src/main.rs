@@ -3,9 +3,12 @@
 //! ```text
 //! iprof [OPTIONS] -- <workload>[,<workload>...]
 //! iprof serve <bind-addr> [OPTIONS] -- <workload>    publish live channels
+//!              [--resume-buffer <bytes>]             (resumable session:
+//!              [--kill-after <bytes>]                 replay ring + epochs)
 //! iprof attach <addr> [<addr>...] [-a <list>]        remote live viewer:
-//!              [--refresh <ms>]                      1 publisher, or N
-//!                                                    merged as one fan-in
+//!              [--refresh <ms>] [--reconnect <n>]    1 publisher, or N
+//!              [--backoff <ms>]                      merged as one fan-in;
+//!                                                    reconnect + resume
 //!
 //!   -m, --mode <minimal|default|full>   tracing mode        [default]
 //!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
@@ -113,6 +116,29 @@ struct Options {
     refresh_ms: Option<u64>,
     live_depth: Option<usize>,
     live_strict: bool,
+    /// serve: replay-ring byte budget; Some = resumable session.
+    resume_buffer: Option<usize>,
+    /// serve: fault injection — kill the FIRST subscriber connection
+    /// after this many written bytes (reconnect testing/CI).
+    kill_after: Option<usize>,
+    /// attach: redial attempts per disconnect.
+    reconnect: Option<u32>,
+    /// attach: base backoff before the first redial, in ms.
+    backoff_ms: Option<u64>,
+}
+
+/// Parse a byte count with an optional k/m/g suffix (powers of 1024):
+/// `65536`, `512k`, `8m`, `1g`.
+fn parse_bytes(v: &str) -> Result<usize> {
+    let v = v.trim();
+    let (digits, mult) = match v.chars().last() {
+        Some('k') | Some('K') => (&v[..v.len() - 1], 1usize << 10),
+        Some('m') | Some('M') => (&v[..v.len() - 1], 1usize << 20),
+        Some('g') | Some('G') => (&v[..v.len() - 1], 1usize << 30),
+        _ => (v, 1),
+    };
+    let n: usize = digits.parse().with_context(|| format!("bad byte count {v}"))?;
+    n.checked_mul(mult).context("byte count overflows")
 }
 
 fn parse_args(args: &[String]) -> Result<Options> {
@@ -131,6 +157,10 @@ fn parse_args(args: &[String]) -> Result<Options> {
         refresh_ms: None,
         live_depth: None,
         live_strict: false,
+        resume_buffer: None,
+        kill_after: None,
+        reconnect: None,
+        backoff_ms: None,
     };
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
@@ -191,6 +221,26 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 o.live_depth = Some(depth);
             }
             "--live-strict" => o.live_strict = true,
+            "--resume-buffer" => {
+                let v = it.next().context("--resume-buffer needs a byte count")?;
+                let bytes = parse_bytes(v)?;
+                if bytes == 0 {
+                    bail!("--resume-buffer must be at least 1 byte");
+                }
+                o.resume_buffer = Some(bytes);
+            }
+            "--kill-after" => {
+                let v = it.next().context("--kill-after needs a byte count")?;
+                o.kill_after = Some(parse_bytes(v)?);
+            }
+            "--reconnect" => {
+                let v = it.next().context("--reconnect needs an attempt count")?;
+                o.reconnect = Some(v.parse().context("bad --reconnect value")?);
+            }
+            "--backoff" => {
+                let v = it.next().context("--backoff needs a value (ms)")?;
+                o.backoff_ms = Some(v.parse().context("bad --backoff value")?);
+            }
             "-a" | "--analysis" => {
                 let v = it.next().context("--analysis needs a value")?;
                 o.analyses = parse_analyses(v)?;
@@ -224,15 +274,19 @@ const HELP: &str = "iprof — THAPI-rs tracing launcher
 USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
        iprof serve <bind-addr> [OPTIONS] [--] <workload>
          trace the workload and PUBLISH the live per-stream channels over a
-         socket (docs/PROTOCOL.md); waits for one subscriber, then runs
+         socket (docs/PROTOCOL.md); waits for one subscriber, then runs.
+         With --resume-buffer <bytes> the session is RESUMABLE: a dropped
+         subscriber may reconnect and resume from where it left off, the
+         lost tail replayed from a ring of that many bytes
        iprof attach <addr> [<addr>...] [-a <list>] [--refresh <ms>]
-             [--live-depth <n>]
+             [--live-depth <n>] [--reconnect <n>] [--backoff <ms>]
          connect to one or more publishers and run the analysis sinks here
          over the merged union of all their streams, fed by the same merge
          local --live uses (byte-identical for lossless feeds; with N
          addresses, identical to one local run over the concatenated
          streams). One dying publisher yields a partial analysis of the
-         rest, with per-publisher accounting
+         rest, with per-publisher accounting; --reconnect makes a dropped
+         resumable publisher re-join its own streams instead of dying
   -m, --mode <minimal|default|full>    tracing mode [default]
   -s, --sample [<ms>]                  enable device sampling (50 ms default)
   -n, --node <aurora|polaris|small>    node configuration [small]
@@ -249,6 +303,16 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
       --live-depth <n>                 per-stream live channel depth [1024]
       --live-strict                    with --live: exit nonzero on any
                                        dropped event (ring or channel)
+      --resume-buffer <bytes>          serve: keep a replay ring of this many
+                                       bytes and allow subscribers to
+                                       reconnect + resume (suffixes k/m/g)
+      --kill-after <bytes>             serve: fault injection — kill the first
+                                       subscriber connection after this many
+                                       written bytes (reconnect testing)
+      --reconnect <n>                  attach: redial a dropped resumable
+                                       publisher up to n times per outage [0]
+      --backoff <ms>                   attach: backoff before the first redial,
+                                       doubling per attempt, cap 5 s   [250]
       --scale <f>                      workload intensity multiplier
       --list                           list available workloads";
 
@@ -295,6 +359,12 @@ fn serve_main(args: &[String]) -> Result<()> {
     if o.refresh_ms.is_some() {
         bail!("--refresh belongs to the viewer: pass it to iprof attach instead");
     }
+    if o.reconnect.is_some() || o.backoff_ms.is_some() {
+        bail!("--reconnect/--backoff belong to the viewer: pass them to iprof attach instead");
+    }
+    if o.kill_after.is_some() && o.resume_buffer.is_none() {
+        bail!("--kill-after is reconnect fault injection; it needs --resume-buffer");
+    }
     if o.workloads.len() != 1 {
         bail!("serve publishes exactly one workload run (got {})", o.workloads.len());
     }
@@ -325,18 +395,53 @@ fn serve_main(args: &[String]) -> Result<()> {
 
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("cannot bind {addr}"))?;
-    eprintln!(
-        "iprof: serving {name} on {} — waiting for one subscriber (iprof attach)",
-        listener.local_addr()?
-    );
-    let (conn, peer) = listener.accept().context("accept failed")?;
-    eprintln!("iprof: subscriber {peer} connected, running {name} [{}]", w.backend());
 
-    let r = coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn)
-        .context("publishing failed")?;
+    let r = if let Some(resume_buffer) = o.resume_buffer {
+        // Resumable session: poll for subscribers so the publisher can
+        // keep draining the hub into its replay ring while nobody (or
+        // nobody *anymore*) is attached; a reconnecting subscriber
+        // resumes from its cursors (docs/PROTOCOL.md § Session
+        // resumption).
+        eprintln!(
+            "iprof: serving {name} on {} — resumable session, replay ring {resume_buffer}B \
+             (iprof attach --reconnect <n>)",
+            listener.local_addr()?
+        );
+        listener
+            .set_nonblocking(true)
+            .context("cannot poll the listener")?;
+        let mut kill_budget = o.kill_after; // fault injection: first conn only
+        let accept = move || -> std::io::Result<Option<thapi::remote::KillAfter<std::net::TcpStream>>> {
+            match listener.accept() {
+                Ok((conn, peer)) => {
+                    conn.set_nonblocking(false)?;
+                    eprintln!("iprof: subscriber {peer} connected");
+                    let budget = kill_budget.take().unwrap_or(usize::MAX);
+                    Ok(Some(thapi::remote::KillAfter::new(conn, budget)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    Ok(None)
+                }
+                Err(e) => Err(e),
+            }
+        };
+        coordinator::run_serve_resumable(&node, w.as_ref(), &config, &live_cfg, accept, resume_buffer)
+            .context("publishing failed")?
+    } else {
+        eprintln!(
+            "iprof: serving {name} on {} — waiting for one subscriber (iprof attach)",
+            listener.local_addr()?
+        );
+        let (conn, peer) = listener.accept().context("accept failed")?;
+        eprintln!("iprof: subscriber {peer} connected, running {name} [{}]", w.backend());
+        coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn)
+            .context("publishing failed")?
+    };
+
     eprintln!(
         "iprof: {name}: wall={:.3}s events={} relayed={} ({} frames, {}B) dropped={} \
-         (ring {} + channel {}) beacons={}",
+         (ring {} + channel {}) beacons={} connections={} replayed={} gaps={}",
         r.wall.as_secs_f64(),
         r.stats.written,
         r.publish.events,
@@ -346,14 +451,23 @@ fn serve_main(args: &[String]) -> Result<()> {
         r.stats.dropped,
         r.live.dropped,
         r.publish.beacons,
+        r.publish.connections,
+        r.publish.replayed,
+        r.publish.gaps,
     );
-    if o.live_strict && r.total_dropped() > 0 {
+    for reason in &r.disconnects {
+        eprintln!("iprof: subscriber connection lost ({reason}) — session resumed");
+    }
+    if o.live_strict && (r.total_dropped() > 0 || r.publish.gaps > 0) {
         bail!(
-            "serve: {} events dropped ({} at rings, {} at channels of depth {})",
+            "serve: {} events dropped ({} at rings, {} at channels of depth {}), {} lost to \
+             resume gaps (ring of {}B)",
             r.total_dropped(),
             r.stats.dropped,
             r.live.dropped,
-            live_cfg.channel_depth
+            live_cfg.channel_depth,
+            r.publish.gaps,
+            o.resume_buffer.unwrap_or(0),
         );
     }
     Ok(())
@@ -377,13 +491,32 @@ fn attach_main(args: &[String]) -> Result<()> {
     if o.analyses.is_empty() {
         bail!("attach needs at least one analysis sink (-a tally,...)");
     }
-    let mut conns = Vec::with_capacity(addrs.len());
-    for addr in &addrs {
-        let conn = std::net::TcpStream::connect(addr.as_str())
-            .with_context(|| format!("cannot connect to {addr}"))?;
-        conns.push(conn);
+    if o.resume_buffer.is_some() || o.kill_after.is_some() {
+        bail!("--resume-buffer/--kill-after belong to the publisher: pass them to iprof serve");
     }
-    eprintln!("iprof: attached to {} publisher(s)", conns.len());
+    // Every TCP attach goes through the resumable path: a writable
+    // connection is what lets us answer a resumable publisher's Hello
+    // with a Resume frame, and --reconnect N adds redial-with-backoff.
+    let policy = thapi::remote::ReconnectPolicy {
+        attempts: o.reconnect.unwrap_or(0),
+        backoff: std::time::Duration::from_millis(o.backoff_ms.unwrap_or(250)),
+    };
+    let connectors: Vec<_> = addrs
+        .iter()
+        .map(|addr| {
+            let addr = addr.to_string();
+            move || {
+                std::net::TcpStream::connect(addr.as_str()).map_err(|e| {
+                    std::io::Error::new(e.kind(), format!("cannot connect to {addr}: {e}"))
+                })
+            }
+        })
+        .collect();
+    eprintln!(
+        "iprof: attaching to {} publisher(s) (reconnect attempts per outage: {})",
+        addrs.len(),
+        policy.attempts
+    );
     let depth = o.live_depth.unwrap_or(LiveConfig::default().channel_depth);
     let sinks: Vec<Box<dyn AnalysisSink>> = o
         .analyses
@@ -391,7 +524,7 @@ fn attach_main(args: &[String]) -> Result<()> {
         .map(|k| -> Box<dyn AnalysisSink> { k.sink() })
         .collect();
     let refresh = o.refresh_ms.map(std::time::Duration::from_millis);
-    let r = coordinator::run_fanin(conns, depth, sinks, refresh, |text| {
+    let r = coordinator::run_fanin_resumable(connectors, depth, policy, sinks, refresh, |text| {
         eprintln!("iprof: live refresh [remote]\n{text}");
     })
     .context("attach failed")?;
@@ -403,7 +536,7 @@ fn attach_main(args: &[String]) -> Result<()> {
         let origin = &r.origins[i];
         eprintln!(
             "iprof: remote {} ({addr}): streams={} merged={} frames={} beacons={} \
-             server received={} server dropped={} wire drops={}{}",
+             server received={} server dropped={} wire drops={} reconnects={} resume gaps={}{}",
             r.hostnames[i],
             origin.channels,
             origin.received,
@@ -412,6 +545,8 @@ fn attach_main(args: &[String]) -> Result<()> {
             stats.server_received,
             stats.server_dropped,
             origin.remote_dropped,
+            stats.reconnects,
+            origin.resume_gaps,
             match &stats.error {
                 Some(e) => format!(" DIED ({e})"),
                 None => String::new(),
@@ -484,6 +619,12 @@ fn main() -> Result<()> {
         }
     } else if o.refresh_ms.is_some() || o.live_strict || o.live_depth.is_some() {
         bail!("--refresh/--live-depth/--live-strict only make sense with --live");
+    }
+    if o.resume_buffer.is_some() || o.kill_after.is_some() {
+        bail!("--resume-buffer/--kill-after only make sense with iprof serve");
+    }
+    if o.reconnect.is_some() || o.backoff_ms.is_some() {
+        bail!("--reconnect/--backoff only make sense with iprof attach");
     }
 
     let registry = all_workloads();

@@ -25,6 +25,38 @@ use std::io::{self, Read};
 use std::sync::Arc;
 
 /// A live connection to one remote publisher (see module docs).
+///
+/// # Examples
+///
+/// Mirror a published wire (here: an in-memory one) and drain it with
+/// the standard merge:
+///
+/// ```
+/// use thapi::live::LiveHub;
+/// use thapi::remote::{publish, Attachment};
+///
+/// // a tiny publisher-side hub with one event, published to bytes
+/// let hub = LiveHub::new("node0", 64, false);
+/// hub.ensure_channels(1);
+/// let class = thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+/// let msg = hub.decode(0, 0, class.id, 5, &0u64.to_le_bytes()).unwrap();
+/// hub.push_batch(0, vec![msg]);
+/// hub.close_all();
+/// let mut wire = Vec::new();
+/// publish(&hub, &mut wire).unwrap();
+///
+/// // the subscriber side: handshake, mirror, merge, account
+/// let att = Attachment::open(std::io::Cursor::new(wire), 64).unwrap();
+/// assert_eq!(att.hostname, "node0");
+/// let merged: Vec<u64> = att.source().map(|m| m.ts).collect();
+/// assert_eq!(merged, vec![5]);
+/// let stats = att.finish().unwrap();
+/// assert_eq!(stats.server_dropped, 0, "lossless feed");
+/// ```
+///
+/// For reconnect/resume against a live `iprof serve --resume-buffer`
+/// publisher, use [`FanIn::open_resumable`] (an `Attachment` is its
+/// N = 1 case) — see `docs/GUIDE.md`.
 pub struct Attachment {
     fanin: FanIn,
     /// Hostname announced by the publisher's Hello.
@@ -123,6 +155,7 @@ mod tests {
                 hostname: "h".into(),
                 metadata: String::new(),
                 streams: 1,
+                epoch: 0,
             },
         )
         .unwrap();
@@ -143,6 +176,7 @@ mod tests {
                 hostname: "h".into(),
                 metadata: String::new(),
                 streams: u32::MAX,
+                epoch: 0,
             },
         )
         .unwrap();
@@ -170,6 +204,7 @@ mod tests {
                 hostname: "h".into(),
                 metadata: crate::tracer::btf::generate_metadata(&[]),
                 streams: 1,
+                epoch: 0,
             },
         )
         .unwrap();

@@ -13,7 +13,7 @@
 //! channels, and the **unmodified** [`LiveSource`] k-way merge drains
 //! the union in one globally consistent order.
 //!
-//! Two properties carry the design (pinned by `rust/tests/fanin.rs`):
+//! Three properties carry the design (pinned by `rust/tests/fanin.rs`):
 //!
 //! 1. **Concatenation byte-identity.** Origin blocks are allocated in
 //!    connection order at handshake time, so shared channel index order
@@ -30,6 +30,19 @@
 //!    partial but correct, with the error recorded in that publisher's
 //!    [`RemoteStats`]. The last reader to finish seals the whole hub so
 //!    the merge terminates exactly once.
+//! 3. **Reconnect/resume.** With [`FanIn::open_resumable`] a dropped
+//!    connection to a *resumable* publisher (session epoch ≠ 0, see
+//!    `docs/PROTOCOL.md` § Session resumption) is not a death: the
+//!    origin's reader redials with exponential backoff, validates the
+//!    epoch, and sends a [`Frame::Resume`] carrying its per-stream
+//!    delivered cursors; the publisher replays the lost tail from its
+//!    ring so the merged output stays **byte-identical to an
+//!    uninterrupted run**. During the outage the origin's channels stay
+//!    open — the union merge holds, exactly as it would for a quiet
+//!    publisher, which is what preserves byte-identity. A cursor that
+//!    fell out of the ring arrives back as [`Frame::ResumeGap`] and is
+//!    booked into the origin's drops ledger
+//!    ([`LiveHub::record_origin_gap`]) instead of killing the feed.
 //!
 //! Single-publisher [`Attachment`](super::attach::Attachment) is the
 //! N = 1 special case and delegates here.
@@ -39,10 +52,11 @@ use crate::analysis::EventMsg;
 use crate::live::{LiveHub, LiveSource};
 use crate::tracer::btf::{parse_metadata, DecodedClass};
 use std::collections::HashMap;
-use std::io::{self, BufReader, Read};
+use std::io::{self, BufReader, Read, Write};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// What one reader thread observed over its whole connection.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -62,12 +76,53 @@ pub struct RemoteStats {
     /// end of the drop accounting: nonzero means the on-line view is
     /// incomplete and says by exactly how much.
     pub server_dropped: u64,
+    /// Successful session resumes on this connection (each one is a
+    /// redial + epoch check + [`Frame::Resume`] handshake that worked).
+    pub reconnects: u64,
+    /// Events lost to resume gaps: the publisher's replay ring evicted
+    /// them before this subscriber reconnected ([`Frame::ResumeGap`]
+    /// totals; also booked per origin in the hub's drops ledger).
+    pub resume_gap: u64,
     /// Transport/protocol error that ended the stream before a clean
-    /// Eos, if any. Only this publisher's channels are closed on error,
-    /// so everything received up to the cut is still merged and
-    /// analyzed — and, in a fan-in, every *other* publisher's feed
-    /// keeps flowing.
+    /// Eos, if any — after any reconnect budget was exhausted. Only
+    /// this publisher's channels are closed on error, so everything
+    /// received up to the cut is still merged and analyzed — and, in a
+    /// fan-in, every *other* publisher's feed keeps flowing.
     pub error: Option<String>,
+}
+
+/// When and how hard a fan-in reader tries to re-join a resumable
+/// publisher after its connection drops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReconnectPolicy {
+    /// Redial attempts per disconnect (0 = never reconnect — every
+    /// drop is final, the pre-resume behaviour). A successful resume
+    /// refills the budget, so a long-lived flapping publisher gets
+    /// `attempts` tries at every new outage.
+    pub attempts: u32,
+    /// Delay before the first redial of an outage; doubles per failed
+    /// attempt, capped at 5 s.
+    pub backoff: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy { attempts: 0, backoff: Duration::from_millis(250) }
+    }
+}
+
+impl ReconnectPolicy {
+    /// Never reconnect (every disconnect is final).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Backoff before redial `attempt` (0-based): exponential doubling
+    /// from [`ReconnectPolicy::backoff`], capped at 5 s.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let factor = 1u32 << attempt.min(16);
+        self.backoff.saturating_mul(factor).min(Duration::from_secs(5))
+    }
 }
 
 /// Per-connection aggregate of a whole fan-in run, in connection order.
@@ -93,13 +148,95 @@ impl FanInStats {
     pub fn failed(&self) -> usize {
         self.per.iter().filter(|s| s.error.is_some()).count()
     }
+
+    /// Successful session resumes across every connection.
+    pub fn reconnects(&self) -> u64 {
+        self.per.iter().fold(0u64, |a, s| a.saturating_add(s.reconnects))
+    }
+
+    /// Events lost to resume gaps across every connection (saturating).
+    pub fn resume_gaps(&self) -> u64 {
+        self.per.iter().fold(0u64, |a, s| a.saturating_add(s.resume_gap))
+    }
+}
+
+/// Wraps a read-only transport so the shared fan-in machinery can hold
+/// every connection as `Read + Write`. Only a *resumable* publisher
+/// (epoch ≠ 0) ever provokes a write — against a read-only transport
+/// that surfaces as a clean `Unsupported` error at handshake time,
+/// pointing at [`FanIn::open_resumable`].
+struct ReadOnly<R>(R);
+
+impl<R: Read> Read for ReadOnly<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.0.read(buf)
+    }
+}
+
+impl<R> Write for ReadOnly<R> {
+    fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "resumable publisher needs a writable connection (use FanIn::open_resumable)",
+        ))
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
 }
 
 /// Post-handshake state of one connection, before its reader spawns.
-struct Pending<R: Read> {
-    r: BufReader<R>,
+struct Pending<S: Read + Write, C> {
+    r: BufReader<S>,
+    /// Redials the same publisher (resumable attach); `None` for fixed
+    /// transports.
+    connector: Option<C>,
+    /// Session epoch from the Hello (0 = not resumable).
+    epoch: u64,
     hostname: String,
     classes: HashMap<u32, Arc<DecodedClass>>,
+}
+
+/// Preamble + Hello on a fresh connection; a *resumable* publisher
+/// (epoch ≠ 0) is answered with a [`Frame::Resume`] carrying `cursors`
+/// (empty = deliver from the beginning). Returns the buffered reader
+/// positioned at the first item frame plus the Hello contents.
+fn handshake<S: Read + Write>(
+    conn: S,
+    cursors: &[u64],
+) -> io::Result<(BufReader<S>, String, String, u32, u64)> {
+    let mut r = BufReader::new(conn);
+    frame::read_preamble(&mut r)?;
+    let hello = frame::read_frame(&mut r)?;
+    let Frame::Hello { hostname, metadata, streams, epoch } = hello else {
+        return Err(FrameError::Malformed("first frame must be Hello").into());
+    };
+    if streams > frame::MAX_STREAMS {
+        return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
+    }
+    if epoch != 0 {
+        frame::write_frame(r.get_mut(), &Frame::Resume { epoch, cursors: cursors.to_vec() })?;
+        r.get_mut().flush()?;
+    }
+    Ok((r, hostname, metadata, streams, epoch))
+}
+
+/// Type of one fully prepared connection: buffered reader positioned at
+/// the first item frame, publisher hostname, its parsed class table,
+/// the Hello-announced stream count, and the session epoch.
+type Prepared<S> = (BufReader<S>, String, HashMap<u32, Arc<DecodedClass>>, usize, u64);
+
+/// [`handshake`] a fresh connection (empty cursors — deliver from the
+/// beginning) and parse the publisher's BTF metadata into its class
+/// table.
+fn prepare<S: Read + Write>(conn: S) -> io::Result<Prepared<S>> {
+    let (r, hostname, metadata, streams, epoch) = handshake(conn, &[])?;
+    let md = parse_metadata(&metadata)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let classes: HashMap<u32, Arc<DecodedClass>> =
+        md.classes.into_iter().map(|(id, c)| (id, Arc::new(c))).collect();
+    Ok((r, hostname, classes, streams as usize, epoch))
 }
 
 /// A live fan-in over N remote publishers (see module docs).
@@ -124,30 +261,94 @@ impl FanIn {
     /// channels)`, computed union-wide so K readers throttle at the same
     /// backlog one would (see [`LiveHub::feed_remote`]).
     pub fn open<R: Read + Send + 'static>(conns: Vec<R>, depth: usize) -> io::Result<FanIn> {
-        if conns.is_empty() {
+        type NoDial<R> = fn() -> io::Result<ReadOnly<R>>;
+        let mut pending: Vec<Pending<ReadOnly<R>, NoDial<R>>> = Vec::with_capacity(conns.len());
+        let mut announced = Vec::with_capacity(conns.len());
+        for conn in conns {
+            let (r, hostname, classes, streams, epoch) = prepare(ReadOnly(conn))?;
+            pending.push(Pending { r, connector: None, epoch, hostname, classes });
+            announced.push(streams);
+        }
+        Self::finish_open(pending, announced, depth, ReconnectPolicy::none())
+    }
+
+    /// Like [`FanIn::open`], but every connection comes from a
+    /// `connector` that can redial its publisher, and a dropped
+    /// connection to a resumable publisher is resumed under `policy`
+    /// instead of being final (module docs, property 3). Each connector
+    /// is dialed here for the synchronous handshake — in connection
+    /// order, so the origin layout is identical to [`FanIn::open`] —
+    /// and kept for redials. The reconnect budget covers this initial
+    /// dial+handshake too (with the same backoff), so a publisher that
+    /// is still starting up, or whose first connection dies mid-Hello,
+    /// does not fail the whole attach.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// # fn main() -> std::io::Result<()> {
+    /// use thapi::remote::{FanIn, ReconnectPolicy};
+    /// use std::net::TcpStream;
+    /// use std::time::Duration;
+    ///
+    /// let addrs = ["10.0.0.1:7007", "10.0.0.2:7007"];
+    /// let connectors: Vec<_> = addrs
+    ///     .iter()
+    ///     .map(|a| move || TcpStream::connect(*a))
+    ///     .collect();
+    /// let policy = ReconnectPolicy { attempts: 5, backoff: Duration::from_millis(250) };
+    /// let fan = FanIn::open_resumable(connectors, 1024, policy)?;
+    /// for _msg in fan.source() {
+    ///     // every publisher's events, one globally consistent order
+    /// }
+    /// let _stats = fan.finish()?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn open_resumable<S, C>(
+        connectors: Vec<C>,
+        depth: usize,
+        policy: ReconnectPolicy,
+    ) -> io::Result<FanIn>
+    where
+        S: Read + Write + Send + 'static,
+        C: FnMut() -> io::Result<S> + Send + 'static,
+    {
+        let mut pending = Vec::with_capacity(connectors.len());
+        let mut announced = Vec::with_capacity(connectors.len());
+        for mut dial in connectors {
+            let mut attempt = 0u32;
+            let (r, hostname, classes, streams, epoch) = loop {
+                match dial().and_then(prepare) {
+                    Ok(ok) => break ok,
+                    Err(_) if attempt < policy.attempts => {
+                        std::thread::sleep(policy.delay(attempt));
+                        attempt += 1;
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            pending.push(Pending { r, connector: Some(dial), epoch, hostname, classes });
+            announced.push(streams);
+        }
+        Self::finish_open(pending, announced, depth, policy)
+    }
+
+    fn finish_open<S, C>(
+        pending: Vec<Pending<S, C>>,
+        announced: Vec<usize>,
+        depth: usize,
+        policy: ReconnectPolicy,
+    ) -> io::Result<FanIn>
+    where
+        S: Read + Write + Send + 'static,
+        C: FnMut() -> io::Result<S> + Send + 'static,
+    {
+        if pending.is_empty() {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidInput,
                 "fan-in needs at least one connection",
             ));
-        }
-        let mut pending = Vec::with_capacity(conns.len());
-        let mut announced = Vec::with_capacity(conns.len());
-        for conn in conns {
-            let mut r = BufReader::new(conn);
-            frame::read_preamble(&mut r)?;
-            let hello = frame::read_frame(&mut r)?;
-            let Frame::Hello { hostname, metadata, streams } = hello else {
-                return Err(FrameError::Malformed("first frame must be Hello").into());
-            };
-            if streams > frame::MAX_STREAMS {
-                return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
-            }
-            let md = parse_metadata(&metadata)
-                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-            let classes: HashMap<u32, Arc<DecodedClass>> =
-                md.classes.into_iter().map(|(id, c)| (id, Arc::new(c))).collect();
-            pending.push(Pending { r, hostname, classes });
-            announced.push(streams as usize);
         }
 
         // One shared mirror hub; every origin's Hello-announced block is
@@ -178,12 +379,70 @@ impl FanIn {
             let spawned = std::thread::Builder::new()
                 .name(format!("thapi-fanin-{i}"))
                 .spawn(move || {
-                    let Pending { mut r, classes, .. } = p;
+                    let Pending { mut r, mut connector, epoch, classes, .. } = p;
                     let mut stats = RemoteStats { frames: 1, ..Default::default() };
                     let mut map = hub2.origin_map(origin);
-                    let res = pump(
-                        &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map, &mut stats,
-                    );
+                    let mut delivered: Vec<u64> = Vec::new();
+                    // Progress bound: each successful resume refills the
+                    // per-outage dial budget, so a pathological publisher
+                    // that always completes the handshake and then dies
+                    // without ever delivering a frame could spin forever.
+                    // Count consecutive *barren* resumed connections (no
+                    // frame received) and give up once they exceed the
+                    // policy's own attempt budget.
+                    let mut frames_checkpoint = stats.frames;
+                    let mut barren = 0u32;
+                    let res = loop {
+                        match pump(
+                            &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map,
+                            &mut stats, &mut delivered,
+                        ) {
+                            Ok(()) => break Ok(()),
+                            Err(e) => {
+                                if stats.frames > frames_checkpoint {
+                                    barren = 0;
+                                } else {
+                                    barren += 1;
+                                }
+                                frames_checkpoint = stats.frames;
+                                if barren > policy.attempts {
+                                    break Err(io::Error::new(
+                                        e.kind(),
+                                        format!(
+                                            "{e} (gave up: {barren} consecutive resumed \
+                                             connections delivered nothing)"
+                                        ),
+                                    ));
+                                }
+                                // A drop is final only once resume is off
+                                // the table: non-resumable publisher, no
+                                // redialer, epoch changed, or the retry
+                                // budget ran dry. While we redial, the
+                                // origin's channels stay OPEN: the union
+                                // merge holds exactly as it would for a
+                                // quiet publisher, which is what keeps a
+                                // resumed run byte-identical to an
+                                // uninterrupted one.
+                                match try_resume(
+                                    &mut connector, epoch, policy, &delivered, &mut stats,
+                                ) {
+                                    Ok(newr) => {
+                                        // replayed events re-join the SAME
+                                        // origin block; re-admit it in case
+                                        // an earlier teardown closed it
+                                        hub2.reopen_origin(origin);
+                                        r = newr;
+                                    }
+                                    Err(reason) => {
+                                        break Err(io::Error::new(
+                                            e.kind(),
+                                            format!("{e} ({reason})"),
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    };
                     // Always end THIS origin's channels — also on
                     // transport errors — so the union merge never waits
                     // on a dead publisher; the other feeds keep flowing.
@@ -249,6 +508,66 @@ impl FanIn {
     }
 }
 
+/// Redial and resume one origin after a disconnect: sleep out the
+/// backoff, dial, re-handshake, verify the session epoch, and send a
+/// [`Frame::Resume`] with our per-stream `delivered` cursors. `Ok`
+/// hands back a freshly handshaken reader positioned right before the
+/// publisher's replay; `Err(reason)` means the outage is final (no
+/// redialer, non-resumable publisher, retries disabled or exhausted, or
+/// the publisher restarted into a different epoch — where our cursors
+/// would be meaningless, so they are never sent).
+fn try_resume<S, C>(
+    connector: &mut Option<C>,
+    epoch: u64,
+    policy: ReconnectPolicy,
+    delivered: &[u64],
+    stats: &mut RemoteStats,
+) -> Result<BufReader<S>, String>
+where
+    S: Read + Write,
+    C: FnMut() -> io::Result<S>,
+{
+    let Some(dial) = connector.as_mut() else {
+        return Err("transport is not redialable".into());
+    };
+    if epoch == 0 {
+        return Err("publisher is not resumable (session epoch 0)".into());
+    }
+    if policy.attempts == 0 {
+        return Err("reconnect disabled".into());
+    }
+    for attempt in 0..policy.attempts {
+        std::thread::sleep(policy.delay(attempt));
+        let redialed = (|| -> io::Result<(BufReader<S>, u64)> {
+            let mut r = BufReader::new(dial()?);
+            frame::read_preamble(&mut r)?;
+            let Frame::Hello { epoch: seen, streams, .. } = frame::read_frame(&mut r)? else {
+                return Err(FrameError::Malformed("first frame must be Hello").into());
+            };
+            if streams > frame::MAX_STREAMS {
+                return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
+            }
+            Ok((r, seen))
+        })();
+        if let Ok((mut r, seen)) = redialed {
+            if seen != epoch {
+                return Err(format!(
+                    "session epoch changed ({epoch:#x} -> {seen:#x}): publisher restarted"
+                ));
+            }
+            let resume = Frame::Resume { epoch, cursors: delivered.to_vec() };
+            let sent = frame::write_frame(r.get_mut(), &resume).and(r.get_mut().flush());
+            if sent.is_ok() {
+                stats.reconnects += 1;
+                return Ok(r);
+            }
+        }
+        // transport-level failure: the publisher may still be coming
+        // back — burn an attempt and back off harder
+    }
+    Err(format!("gave up after {} reconnect attempt(s)", policy.attempts))
+}
+
 /// Frame pump for one origin: apply every frame to the shared hub —
 /// through the origin's stream-id translation — until Eos.
 ///
@@ -257,6 +576,11 @@ impl FanIn {
 /// grows its own origin, so the cache never goes stale. Stream counts
 /// and indices are bounded by [`frame::MAX_STREAMS`]: a corrupt frame
 /// is a protocol error, never a giant allocation.
+///
+/// `delivered[i]` counts the Event frames fully processed per remote
+/// stream — the resume cursors. Resume gaps advance it too: the
+/// publisher's sequence numbers cover the evicted events, so a cursor
+/// that did not skip the gap would misalign every later replay.
 #[allow(clippy::too_many_arguments)]
 fn pump(
     r: &mut impl Read,
@@ -267,6 +591,7 @@ fn pump(
     depth: usize,
     map: &mut Vec<usize>,
     stats: &mut RemoteStats,
+    delivered: &mut Vec<u64>,
 ) -> io::Result<()> {
     fn translate(
         hub: &LiveHub,
@@ -318,6 +643,13 @@ fn pump(
                     }
                     None => stats.unknown_classes += 1,
                 }
+                // delivered AFTER processing: an event that errors out
+                // above is re-requested by the next resume cursor
+                let s = stream as usize;
+                if s >= delivered.len() {
+                    delivered.resize(s + 1, 0);
+                }
+                delivered[s] += 1;
             }
             Frame::Beacon { stream, watermark } => {
                 // The watermark promise travels WITH the stream into its
@@ -345,6 +677,28 @@ fn pump(
                 stats.server_dropped = dropped;
                 hub.record_origin_eos(origin, received, dropped);
                 return Ok(());
+            }
+            Frame::Resume { .. } => {
+                // strictly subscriber→publisher; a publisher echoing it
+                // back is broken
+                return Err(FrameError::Malformed("unexpected Resume from publisher").into());
+            }
+            Frame::ResumeGap { stream, missed } => {
+                if stream >= frame::MAX_STREAMS {
+                    return Err(FrameError::Malformed("stream index exceeds MAX_STREAMS").into());
+                }
+                // The replay ring evicted `missed` events we never got:
+                // book them into the origin's drops ledger (the merged
+                // view is incomplete by exactly that many events — the
+                // strict gate fails on it) and advance our cursor past
+                // the publisher's now-unreachable sequence numbers.
+                hub.record_origin_gap(origin, stream as usize, missed);
+                stats.resume_gap = stats.resume_gap.saturating_add(missed);
+                let s = stream as usize;
+                if s >= delivered.len() {
+                    delivered.resize(s + 1, 0);
+                }
+                delivered[s] = delivered[s].saturating_add(missed);
             }
         }
     }

@@ -29,7 +29,23 @@ pub const MAGIC: [u8; 4] = *b"THRL";
 
 /// Protocol version spoken by this build. The preamble carries it; a
 /// subscriber must reject any version it does not implement.
-pub const VERSION: u32 = 1;
+///
+/// Version 2 added session resumption: [`Frame::Hello`] grew a trailing
+/// session `epoch`, and the [`Frame::Resume`] / [`Frame::ResumeGap`]
+/// pair lets a reconnecting subscriber continue a session from its
+/// last-delivered per-stream cursors (see `docs/PROTOCOL.md` § Session
+/// resumption). v2 changed the Hello layout, so v1 and v2 are mutually
+/// unintelligible past the preamble — negotiation stays
+/// reject-on-mismatch.
+pub const VERSION: u32 = 2;
+
+/// Every protocol version this build can speak. Version negotiation
+/// ([`read_preamble`]) accepts exactly these; anything else is a
+/// [`FrameError::BadVersion`]. v1 (no epochs, no resumption) is
+/// deliberately absent: its Hello layout is a strict prefix of v2's and
+/// decoding it under v2 rules would mis-parse, so a v2 build rejects v1
+/// peers outright instead of guessing.
+pub const SUPPORTED_VERSIONS: [u32; 1] = [VERSION];
 
 /// Upper bound on `len` (type + body bytes). Frames beyond this are a
 /// protocol error, never an allocation request — a corrupt or hostile
@@ -51,6 +67,8 @@ const T_BEACON: u8 = 0x04;
 const T_DROPS: u8 = 0x05;
 const T_CLOSE: u8 = 0x06;
 const T_EOS: u8 = 0x07;
+const T_RESUME: u8 = 0x08;
+const T_RESUME_GAP: u8 = 0x09;
 
 // Field value tags inside Event frames.
 const F_U64: u8 = 0;
@@ -93,6 +111,16 @@ pub enum Frame {
         metadata: String,
         /// Channels existing at connect time.
         streams: u32,
+        /// Session epoch. `0` means the session is NOT resumable (the
+        /// publisher streams immediately and never reads from the
+        /// connection — the whole v1 flow). Any nonzero value
+        /// identifies one session *instance*: the publisher keeps a
+        /// replay ring and waits for a [`Frame::Resume`] echoing this
+        /// epoch before streaming. A subscriber that reconnects and
+        /// sees a *different* nonzero epoch knows the publisher
+        /// restarted into a new session — its cursors are meaningless
+        /// there and it must not send them.
+        epoch: u64,
     },
     /// The per-stream channel set grew to `count` (late-registering
     /// threads). Idempotent; counts never shrink.
@@ -138,6 +166,36 @@ pub enum Frame {
         received: u64,
         /// Messages the publisher's channels dropped in total.
         dropped: u64,
+    },
+    /// The only subscriber→publisher frame: sent once per connection to
+    /// a *resumable* publisher (Hello `epoch != 0`), immediately after
+    /// the subscriber validates the Hello. `cursors[i]` is the number
+    /// of [`Frame::Event`]s the subscriber has fully delivered on
+    /// remote stream `i` — a fresh attach sends an empty cursor list
+    /// (deliver from the beginning). The publisher replays every event
+    /// past each cursor from its replay ring, answering
+    /// [`Frame::ResumeGap`] per stream whose cursor fell out of the
+    /// ring.
+    Resume {
+        /// Echo of the Hello epoch (the publisher rejects mismatches).
+        epoch: u64,
+        /// Per-remote-stream delivered-event counts, indexed by the
+        /// publisher's own stream ids. Streams beyond the list resume
+        /// from 0.
+        cursors: Vec<u64>,
+    },
+    /// Publisher→subscriber resumption verdict for one stream: `missed`
+    /// events between the subscriber's cursor and the oldest event
+    /// still in the replay ring were evicted and cannot be replayed.
+    /// The subscriber books them into its per-origin drops ledger (the
+    /// live view is incomplete by exactly `missed` events on this
+    /// stream; `--live-strict` fails) and advances its cursor past the
+    /// gap so later replays stay aligned.
+    ResumeGap {
+        /// Channel index (publisher's stream id).
+        stream: u32,
+        /// Events irrecoverably lost from the ring for this stream.
+        missed: u64,
     },
 }
 
@@ -254,11 +312,12 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
     let len_at = out.len();
     put_u32(out, 0); // length backpatched below
     match frame {
-        Frame::Hello { hostname, metadata, streams } => {
+        Frame::Hello { hostname, metadata, streams, epoch } => {
             out.push(T_HELLO);
             put_str16(out, hostname);
             put_str32(out, metadata);
             put_u32(out, *streams);
+            put_u64(out, *epoch);
         }
         Frame::Streams { count } => {
             out.push(T_STREAMS);
@@ -295,6 +354,20 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
             out.push(T_EOS);
             put_u64(out, *received);
             put_u64(out, *dropped);
+        }
+        Frame::Resume { epoch, cursors } => {
+            out.push(T_RESUME);
+            put_u64(out, *epoch);
+            let n = cursors.len().min(MAX_STREAMS as usize);
+            put_u32(out, n as u32);
+            for c in &cursors[..n] {
+                put_u64(out, *c);
+            }
+        }
+        Frame::ResumeGap { stream, missed } => {
+            out.push(T_RESUME_GAP);
+            put_u32(out, *stream);
+            put_u64(out, *missed);
         }
     }
     let body_len = (out.len() - len_at - 4) as u32;
@@ -401,6 +474,7 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
             hostname: b.str16()?,
             metadata: b.str32()?,
             streams: b.u32()?,
+            epoch: b.u64()?,
         },
         T_STREAMS => Frame::Streams { count: b.u32()? },
         T_EVENT => {
@@ -420,6 +494,22 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
         T_DROPS => Frame::Drops { stream: b.u32()?, dropped: b.u64()? },
         T_CLOSE => Frame::Close { stream: b.u32()? },
         T_EOS => Frame::Eos { received: b.u64()?, dropped: b.u64()? },
+        T_RESUME => {
+            let epoch = b.u64()?;
+            let n = b.u32()?;
+            if n > MAX_STREAMS {
+                // same rationale as MAX_STREAMS everywhere: a corrupt
+                // count must never become a multi-GB cursor table
+                return Err(FrameError::Malformed("resume cursor count exceeds MAX_STREAMS"));
+            }
+            let n = n as usize;
+            let mut cursors = Vec::with_capacity(n.min(256));
+            for _ in 0..n {
+                cursors.push(b.u64()?);
+            }
+            Frame::Resume { epoch, cursors }
+        }
+        T_RESUME_GAP => Frame::ResumeGap { stream: b.u32()?, missed: b.u64()? },
         other => return Err(FrameError::BadFrameType(other)),
     };
     b.finish()?;
@@ -437,10 +527,13 @@ pub fn write_preamble(w: &mut impl Write) -> io::Result<()> {
     w.write_all(&VERSION.to_le_bytes())
 }
 
-/// Read and verify the connection preamble; errors on wrong magic or a
-/// version this build does not speak (the entire version negotiation:
-/// v1 is take-it-or-leave-it, see `docs/PROTOCOL.md` § Versioning).
-pub fn read_preamble(r: &mut impl Read) -> io::Result<()> {
+/// Read and verify the connection preamble, returning the negotiated
+/// version. Errors on wrong magic or any version outside
+/// [`SUPPORTED_VERSIONS`] — the entire version negotiation is
+/// reject-on-mismatch (see `docs/PROTOCOL.md` § Versioning); in
+/// particular v1 preambles are rejected here, before any frame is read,
+/// because the v1 Hello layout would mis-parse under v2 rules.
+pub fn read_preamble(r: &mut impl Read) -> io::Result<u32> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if magic != MAGIC {
@@ -449,10 +542,10 @@ pub fn read_preamble(r: &mut impl Read) -> io::Result<()> {
     let mut v = [0u8; 4];
     r.read_exact(&mut v)?;
     let version = u32::from_le_bytes(v);
-    if version != VERSION {
+    if !SUPPORTED_VERSIONS.contains(&version) {
         return Err(FrameError::BadVersion(version).into());
     }
-    Ok(())
+    Ok(version)
 }
 
 /// Encode and write one frame; returns the bytes written.
@@ -496,6 +589,7 @@ mod tests {
             hostname: "node0".into(),
             metadata: "btf_version: 1\nevents:\n".into(),
             streams: 3,
+            epoch: 0x0123_4567_89ab_cdef,
         });
         roundtrip(Frame::Streams { count: 7 });
         roundtrip(Frame::Event {
@@ -518,6 +612,19 @@ mod tests {
         roundtrip(Frame::Drops { stream: 5, dropped: 99 });
         roundtrip(Frame::Close { stream: 1 });
         roundtrip(Frame::Eos { received: 1000, dropped: 4 });
+        roundtrip(Frame::Resume { epoch: 0x0123_4567_89ab_cdef, cursors: vec![7, 0, 42] });
+        roundtrip(Frame::Resume { epoch: 1, cursors: vec![] });
+        roundtrip(Frame::ResumeGap { stream: 2, missed: 17 });
+    }
+
+    #[test]
+    fn hostile_resume_cursor_counts_are_rejected_not_allocated() {
+        // a 17-byte Resume frame claiming u32::MAX cursors must fail on
+        // the missing bytes, never pre-allocate the claimed table
+        let mut body = vec![0x08u8];
+        body.extend_from_slice(&1u64.to_le_bytes()); // epoch
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // cursor-count lie
+        assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
     }
 
     #[test]
@@ -554,17 +661,21 @@ mod tests {
     fn preamble_roundtrip_and_rejection() {
         let mut buf = Vec::new();
         write_preamble(&mut buf).unwrap();
-        read_preamble(&mut &buf[..]).unwrap();
+        assert_eq!(read_preamble(&mut &buf[..]).unwrap(), VERSION);
 
         let mut bad = buf.clone();
         bad[0] = b'X';
         let err = read_preamble(&mut &bad[..]).unwrap_err();
         assert!(err.to_string().contains("magic"), "{err}");
 
-        let mut newer = buf.clone();
-        newer[4..8].copy_from_slice(&2u32.to_le_bytes());
-        let err = read_preamble(&mut &newer[..]).unwrap_err();
-        assert!(err.to_string().contains("version 2"), "{err}");
+        // neither the retired v1 nor a future v3 is accepted: the Hello
+        // layout changed in v2, so cross-version guessing would mis-parse
+        for unsupported in [1u32, 3] {
+            let mut other = buf.clone();
+            other[4..8].copy_from_slice(&unsupported.to_le_bytes());
+            let err = read_preamble(&mut &other[..]).unwrap_err();
+            assert!(err.to_string().contains(&format!("version {unsupported}")), "{err}");
+        }
     }
 
     #[test]

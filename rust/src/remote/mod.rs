@@ -55,10 +55,34 @@
 //!    concatenated stream set for lossless feeds, and degrading to a
 //!    partial-but-correct analysis when a publisher dies.
 //!
+//! And a fifth with session resumption (protocol v2, `iprof serve
+//! --resume-buffer` + `iprof attach --reconnect`):
+//!
+//! 5. **A dropped connection is not data loss.** A resumable
+//!    [`Publisher`] owns a session *epoch* and a byte-budgeted replay
+//!    ring of every event frame it relays; a reconnecting subscriber
+//!    sends [`Frame::Resume`] with its per-stream delivered cursors and
+//!    the publisher replays exactly the lost tail — merged output stays
+//!    byte-identical to an uninterrupted run. Only when a cursor falls
+//!    out of the ring does loss occur, and then it is *accounted*
+//!    ([`Frame::ResumeGap`] → the per-origin drops ledger), never
+//!    silent:
+//!
+//!    ```text
+//!    subscriber  ──connect──► Hello(epoch E)
+//!                ──Resume(E, cursors)──►
+//!                ◄── [ResumeGap?] + ring replay + live frames ... Eos
+//!         ▲                                   │
+//!         └────── redial with backoff ◄───────┘ (connection drops)
+//!    ```
+//!
 //! Entry points: [`crate::coordinator::run_serve`] /
+//! [`crate::coordinator::run_serve_resumable`] /
 //! [`crate::coordinator::run_attach`] /
-//! [`crate::coordinator::run_fanin`] (the `iprof serve` / `iprof
-//! attach` CLI), or [`publish`] + [`Attachment`] / [`FanIn`] directly
+//! [`crate::coordinator::run_fanin`] /
+//! [`crate::coordinator::run_fanin_resumable`] (the `iprof serve` /
+//! `iprof attach` CLI — see `docs/GUIDE.md` for the operator view), or
+//! [`publish`] / [`Publisher`] + [`Attachment`] / [`FanIn`] directly
 //! for custom transports (anything `Read`/`Write`).
 
 pub mod attach;
@@ -67,6 +91,8 @@ pub mod frame;
 pub mod publish;
 
 pub use attach::Attachment;
-pub use fanin::{FanIn, FanInStats, RemoteStats};
-pub use frame::{decode, decode_body, encode, Frame, FrameError, WireEvent, MAGIC, VERSION};
-pub use publish::{publish, PublishStats};
+pub use fanin::{FanIn, FanInStats, ReconnectPolicy, RemoteStats};
+pub use frame::{
+    decode, decode_body, encode, Frame, FrameError, WireEvent, MAGIC, SUPPORTED_VERSIONS, VERSION,
+};
+pub use publish::{publish, KillAfter, PublishStats, Publisher, ServeOutcome};

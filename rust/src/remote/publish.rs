@@ -4,7 +4,29 @@
 //! process: it drains a [`LiveHub`]'s per-stream channels through
 //! [`LiveHub::next_forward_batch`] and relays everything — events,
 //! watermark beacons, drop counts, closes — as THRL frames over any
-//! reliable byte stream, finishing with a clean [`Frame::Eos`].
+//! reliable byte stream, finishing with a clean [`Frame::Eos`]. It is
+//! the one-shot, non-resumable path: Hello advertises epoch 0 and a
+//! dropped connection ends the relay for good.
+//!
+//! [`Publisher`] is the resumable flavor (`iprof serve --resume-buffer`):
+//! it owns a session **epoch** and a byte-budgeted [replay ring] of the
+//! event frames it has relayed, and serves a *sequence* of connections
+//! over the same session. Each connection handshakes
+//! `Hello(epoch) → Resume(epoch, cursors)`, replays every ringed event
+//! past the subscriber's per-stream cursors (answering
+//! [`Frame::ResumeGap`] where the ring already evicted them), resyncs
+//! watermark/drop/close state, and then pumps live batches until the
+//! next disconnect or the final [`Frame::Eos`]:
+//!
+//! ```text
+//!            ┌───────────── one session (epoch E) ──────────────┐
+//! subscriber │ conn 1            conn 2                conn 3   │
+//!   ────────►│ Hello(E)          Hello(E)              Hello(E) │
+//!   Resume ─►│ (E, [])           (E, cursors)          ...      │
+//!   ◄──────  │ events...  ✂      ResumeGap? + replay + events...│──► Eos
+//!            └──────────────────────────────────────────────────┘
+//!                    ✂ = transport died; ring keeps the tail
+//! ```
 //!
 //! The publisher inherits the hub's backpressure contract end to end: it
 //! never pushes back on the tracing consumer. If the transport stalls
@@ -12,24 +34,67 @@
 //! the consumer's try-push **drops and counts**; the loss is then
 //! reported to the subscriber through [`Frame::Drops`] / [`Frame::Eos`],
 //! so both ends always agree on completeness. The traced application
-//! never waits on a socket.
+//! never waits on a socket — and never waits on a *vanished* subscriber
+//! either: between connections the hub keeps draining into the ring
+//! exactly as fast as before.
+//!
+//! [replay ring]: Publisher#replay-ring-semantics
 
-use super::frame::{self, Frame, WireEvent};
+use super::frame::{self, Frame, FrameError, WireEvent};
 use crate::live::{ForwardCursor, LiveHub};
 use crate::tracer::btf::generate_metadata;
-use std::io::{self, BufWriter, Write};
+use std::collections::VecDeque;
+use std::io::{self, BufWriter, Read, Write};
+use std::sync::Arc;
 
-/// What one [`publish`] call relayed.
+/// What one [`publish`] call (or one whole [`Publisher`] session)
+/// relayed.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PublishStats {
     /// Frames written (preamble excluded).
     pub frames: u64,
-    /// Event frames among them.
+    /// Event frames among them (replays excluded).
     pub events: u64,
     /// Beacon frames among them.
     pub beacons: u64,
-    /// Bytes written, preamble included.
+    /// Bytes written, preambles included.
     pub bytes: u64,
+    /// Subscriber connections served (always 1 for [`publish`]).
+    pub connections: u64,
+    /// Event frames re-sent from the replay ring on resume.
+    pub replayed: u64,
+    /// Events a resuming subscriber asked for that the ring had already
+    /// evicted (the sum of all [`Frame::ResumeGap`] `missed` counts) —
+    /// each one is an event permanently absent from the remote view.
+    pub gaps: u64,
+}
+
+/// Encode one hub message as its complete wire `Event` frame — the ONE
+/// place an [`EventMsg`](crate::analysis::EventMsg) becomes bytes, so
+/// the one-shot, offline-drain and live-resumable paths can never
+/// encode differently (ring replay byte-identity depends on that).
+fn encode_event(stream: usize, msg: crate::analysis::EventMsg) -> Vec<u8> {
+    let f = Frame::Event {
+        stream: stream as u32,
+        event: WireEvent {
+            ts: msg.ts,
+            rank: msg.rank,
+            tid: msg.tid,
+            class_id: msg.class.id,
+            fields: msg.fields,
+        },
+    };
+    let mut buf = Vec::with_capacity(64);
+    frame::encode(&f, &mut buf);
+    buf
+}
+
+/// Write one frame and account it in `stats` (bytes + frame count).
+fn tracked_write(stats: &mut PublishStats, w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let n = frame::write_frame(w, frame)?;
+    stats.bytes += n as u64;
+    stats.frames += 1;
+    Ok(())
 }
 
 /// Publish `hub` over `conn` until the hub seals and drains: preamble,
@@ -45,7 +110,7 @@ pub struct PublishStats {
 /// drop-and-count.
 pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
     let mut w = BufWriter::new(conn);
-    let mut stats = PublishStats::default();
+    let mut stats = PublishStats { connections: 1, ..Default::default() };
     frame::write_preamble(&mut w)?;
     stats.bytes += 8;
 
@@ -56,6 +121,9 @@ pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
         // descriptor path.
         metadata: generate_metadata(&[]),
         streams: hub.stats().channels as u32,
+        // epoch 0 = not resumable: the subscriber must not send Resume,
+        // and a dropped connection is a permanent end of feed
+        epoch: 0,
     };
     stats.bytes += frame::write_frame(&mut w, &hello)? as u64;
     stats.frames += 1;
@@ -68,17 +136,9 @@ pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
             stats.frames += 1;
         }
         for (idx, msg) in batch.events {
-            let f = Frame::Event {
-                stream: idx as u32,
-                event: WireEvent {
-                    ts: msg.ts,
-                    rank: msg.rank,
-                    tid: msg.tid,
-                    class_id: msg.class.id,
-                    fields: msg.fields,
-                },
-            };
-            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
+            let buf = encode_event(idx, msg);
+            w.write_all(&buf)?;
+            stats.bytes += buf.len() as u64;
             stats.frames += 1;
             stats.events += 1;
         }
@@ -108,6 +168,392 @@ pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
     stats.frames += 1;
     w.flush()?;
     Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Replay ring: the bounded memory a resumable session keeps per stream
+// ---------------------------------------------------------------------------
+
+/// Per-stream retained window. `start_seq..end_seq` are the sequence
+/// numbers of the encoded event frames currently held: `end_seq` counts
+/// every event ever relayed on the stream, `start_seq` trails it by the
+/// entries not yet evicted (`end_seq - start_seq == entries.len()`
+/// always).
+#[derive(Default)]
+struct StreamRing {
+    start_seq: u64,
+    end_seq: u64,
+    entries: VecDeque<Vec<u8>>,
+}
+
+/// What one [`ReplayRing::replay`] wrote.
+#[derive(Debug, Default, PartialEq, Eq)]
+struct ReplaySummary {
+    /// Event frames re-sent.
+    replayed: u64,
+    /// Events irrecoverably lost (sum of all `ResumeGap.missed`).
+    gaps: u64,
+    /// `ResumeGap` frames written (streams with a gap).
+    gap_frames: u64,
+    /// Total bytes written.
+    bytes: u64,
+}
+
+/// Byte-budgeted replay storage for a resumable session: every event
+/// frame relayed to the subscriber is retained until the total retained
+/// size exceeds the budget, then the globally oldest entries are evicted
+/// first. Sequence numbers are per stream and *dense* — a subscriber's
+/// cursor is simply its count of delivered events on that stream.
+struct ReplayRing {
+    streams: Vec<StreamRing>,
+    /// Streams in global push order: per-stream queues are FIFO, so the
+    /// front of this queue always names the stream holding the globally
+    /// oldest retained entry — O(1) eviction instead of an O(streams)
+    /// scan per evicted event.
+    evict_order: VecDeque<u32>,
+    budget: usize,
+    total: usize,
+}
+
+impl ReplayRing {
+    fn new(budget: usize) -> ReplayRing {
+        ReplayRing {
+            streams: Vec::new(),
+            evict_order: VecDeque::new(),
+            budget: budget.max(1),
+            total: 0,
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.streams.len() < n {
+            self.streams.push(StreamRing::default());
+        }
+    }
+
+    /// Retain one relayed event frame, evicting oldest-first (across all
+    /// streams) once over budget. Eviction moves the stream's
+    /// `start_seq` forward: a later resume below it is a gap.
+    fn push(&mut self, stream: usize, bytes: Vec<u8>) {
+        self.ensure(stream + 1);
+        self.total += bytes.len();
+        let s = &mut self.streams[stream];
+        s.entries.push_back(bytes);
+        s.end_seq += 1;
+        self.evict_order.push_back(stream as u32);
+        while self.total > self.budget {
+            let Some(idx) = self.evict_order.pop_front() else { break };
+            let s = &mut self.streams[idx as usize];
+            let evicted = s.entries.pop_front().expect("evict queue tracks live entries 1:1");
+            self.total -= evicted.len();
+            s.start_seq += 1;
+        }
+    }
+
+    /// Replay everything past the subscriber's per-stream `cursors` into
+    /// `w`, stream by stream: a [`Frame::ResumeGap`] for any stream
+    /// whose cursor fell below the retained window, immediately followed
+    /// by that stream's retained event frames in original order (the
+    /// `stream-replay` production in `docs/PROTOCOL.md`).
+    fn replay<W: Write>(&self, cursors: &[u64], w: &mut W) -> io::Result<ReplaySummary> {
+        // cursors beyond the streams we ever relayed on can only be 0
+        for (i, &c) in cursors.iter().enumerate() {
+            let sent = self.streams.get(i).map(|s| s.end_seq).unwrap_or(0);
+            if c > sent {
+                return Err(FrameError::Malformed("resume cursor beyond relayed events").into());
+            }
+        }
+        let mut out = ReplaySummary::default();
+        for (i, s) in self.streams.iter().enumerate() {
+            let c = cursors.get(i).copied().unwrap_or(0);
+            if c < s.start_seq {
+                let missed = s.start_seq - c;
+                out.bytes +=
+                    frame::write_frame(w, &Frame::ResumeGap { stream: i as u32, missed })? as u64;
+                out.gaps += missed;
+                out.gap_frames += 1;
+            }
+            let skip = c.saturating_sub(s.start_seq) as usize;
+            for e in s.entries.iter().skip(skip) {
+                w.write_all(e)?;
+                out.bytes += e.len() as u64;
+                out.replayed += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resumable publisher
+// ---------------------------------------------------------------------------
+
+/// How one subscriber connection ended, from the publisher's side.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// The session fully drained and [`Frame::Eos`] reached the wire:
+    /// the publisher is done for good.
+    Complete,
+    /// The connection died (transport error, bad handshake, hostile
+    /// subscriber) before Eos. The session state — replay ring, epoch,
+    /// totals — is intact; accept another connection and call
+    /// [`Publisher::serve_connection`] again to let the subscriber
+    /// resume.
+    Lost(String),
+}
+
+/// A resumable publishing session over a sequence of connections (see
+/// the module docs for the wire lifecycle).
+///
+/// # Replay ring semantics
+///
+/// Every event frame relayed to the subscriber is also pushed into a
+/// byte-budgeted ring (`--resume-buffer <bytes>`), keyed by dense
+/// per-stream sequence numbers — the subscriber's resume cursor for a
+/// stream is simply how many events it has delivered there. On resume
+/// the publisher replays `ring[cursor..]` per stream; cursors that fell
+/// below the retained window get a [`Frame::ResumeGap`] with the exact
+/// evicted count, which the subscriber books into its drops ledger (the
+/// merged view is then incomplete by exactly that many events and
+/// `--live-strict` fails). Watermarks, cumulative drop counts and closes
+/// are *not* ringed: they are monotone or idempotent, so each new
+/// connection just re-reports the current values
+/// ([`ForwardCursor::resync`]).
+pub struct Publisher {
+    hub: Arc<LiveHub>,
+    epoch: u64,
+    ring: ReplayRing,
+    cursor: ForwardCursor,
+    stats: PublishStats,
+}
+
+impl Publisher {
+    /// Create a resumable session over `hub` with a `resume_buffer`-byte
+    /// replay ring. `epoch` must be nonzero (use
+    /// [`Publisher::fresh_epoch`] outside of tests): epoch 0 on the wire
+    /// means "not resumable".
+    pub fn new(hub: Arc<LiveHub>, epoch: u64, resume_buffer: usize) -> Publisher {
+        assert!(epoch != 0, "epoch 0 means non-resumable; pick a nonzero session epoch");
+        Publisher {
+            hub,
+            epoch,
+            ring: ReplayRing::new(resume_buffer),
+            cursor: ForwardCursor::default(),
+            stats: PublishStats::default(),
+        }
+    }
+
+    /// A fresh, effectively unique nonzero session epoch (wall-clock
+    /// nanoseconds mixed with the process id). Two session *instances*
+    /// never share an epoch in practice, which is all resumption needs:
+    /// a subscriber reconnecting to a restarted publisher must see a
+    /// different epoch and know its cursors are meaningless.
+    pub fn fresh_epoch() -> u64 {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        (nanos ^ ((std::process::id() as u64) << 48)) | 1
+    }
+
+    /// The session epoch advertised in every Hello.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Cumulative wire statistics across every connection served so far.
+    pub fn stats(&self) -> PublishStats {
+        self.stats.clone()
+    }
+
+    /// Drain whatever the hub holds *right now* into the replay ring,
+    /// without a connection. A resumable serve loop calls this while no
+    /// subscriber is attached, so a mid-run outage consumes ring budget
+    /// instead of filling the hub's bounded channels (which would make
+    /// the consumer drop-and-count — loss that resumption exists to
+    /// avoid). Watermark/drop/close deltas need no recording: every new
+    /// connection re-reports current state via
+    /// [`ForwardCursor::resync`].
+    pub fn drain_to_ring(&mut self) {
+        while let Some(batch) = self.hub.try_forward_batch(&mut self.cursor) {
+            for (idx, msg) in batch.events {
+                self.ring.push(idx, encode_event(idx, msg));
+            }
+        }
+    }
+
+    /// Serve one subscriber connection: handshake (preamble, Hello with
+    /// this session's epoch, then the subscriber's [`Frame::Resume`]),
+    /// replay past its cursors, resync state, pump live batches, and
+    /// finish with [`Frame::Eos`] once the hub drains.
+    ///
+    /// Returns [`ServeOutcome::Lost`] on any error — the session
+    /// survives, call again with the next accepted connection. A
+    /// disconnect can race the final Eos; a subscriber that missed it
+    /// reconnects and this method re-runs the (now trivial) pump to a
+    /// clean Eos again.
+    pub fn serve_connection<S: Read + Write>(&mut self, mut conn: S) -> ServeOutcome {
+        self.stats.connections += 1;
+        match self.serve_inner(&mut conn) {
+            Ok(()) => ServeOutcome::Complete,
+            Err(e) => ServeOutcome::Lost(e.to_string()),
+        }
+    }
+
+    fn serve_inner<S: Read + Write>(&mut self, conn: &mut S) -> io::Result<()> {
+        // Handshake. The Hello goes out unbuffered so the subscriber can
+        // answer; the streaming phase below buffers.
+        let announced = self.hub.stats().channels;
+        let mut head = Vec::with_capacity(256);
+        frame::write_preamble(&mut head)?;
+        frame::encode(
+            &Frame::Hello {
+                hostname: self.hub.hostname().to_string(),
+                metadata: generate_metadata(&[]),
+                streams: announced as u32,
+                epoch: self.epoch,
+            },
+            &mut head,
+        );
+        conn.write_all(&head)?;
+        conn.flush()?;
+        self.stats.bytes += head.len() as u64;
+        self.stats.frames += 1;
+
+        // The one subscriber→publisher frame: where to resume from.
+        let Frame::Resume { epoch, cursors } = frame::read_frame(conn)? else {
+            return Err(FrameError::Malformed("expected Resume after Hello").into());
+        };
+        if epoch != self.epoch {
+            return Err(FrameError::Malformed("Resume epoch does not match this session").into());
+        }
+
+        let mut w = BufWriter::new(conn);
+        let replay = self.ring.replay(&cursors, &mut w)?;
+        self.stats.replayed += replay.replayed;
+        self.stats.gaps += replay.gaps;
+        self.stats.bytes += replay.bytes;
+        self.stats.frames += replay.replayed + replay.gap_frames;
+        w.flush()?;
+
+        // Re-report current watermarks/drops/closes from scratch: all
+        // monotone or idempotent on the subscriber, so a fresh delta
+        // baseline resynchronizes everything that is not an event.
+        self.cursor.resync(announced);
+        while let Some(batch) = self.hub.next_forward_batch(&mut self.cursor) {
+            let mut io_err: Option<io::Error> = None;
+            if let Some(count) = batch.grown_to {
+                let f = Frame::Streams { count: count as u32 };
+                io_err = tracked_write(&mut self.stats, &mut w, &f).err();
+            }
+            for (idx, msg) in batch.events {
+                let buf = encode_event(idx, msg);
+                if io_err.is_none() {
+                    match w.write_all(&buf) {
+                        Ok(()) => {
+                            self.stats.bytes += buf.len() as u64;
+                            self.stats.frames += 1;
+                            self.stats.events += 1;
+                        }
+                        Err(e) => io_err = Some(e),
+                    }
+                }
+                // Ring EVERY popped event, even after the wire just died
+                // mid-batch: popped events exist nowhere else, and the
+                // resuming subscriber's cursor decides which ones it
+                // actually got.
+                self.ring.push(idx, buf);
+            }
+            if io_err.is_none() {
+                for (idx, watermark) in batch.beacons {
+                    let f = Frame::Beacon { stream: idx as u32, watermark };
+                    match tracked_write(&mut self.stats, &mut w, &f) {
+                        Ok(()) => self.stats.beacons += 1,
+                        Err(e) => {
+                            io_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            if io_err.is_none() {
+                for (idx, dropped) in batch.drops {
+                    let f = Frame::Drops { stream: idx as u32, dropped };
+                    if let Err(e) = tracked_write(&mut self.stats, &mut w, &f) {
+                        io_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if io_err.is_none() {
+                for idx in batch.closed {
+                    let f = Frame::Close { stream: idx as u32 };
+                    if let Err(e) = tracked_write(&mut self.stats, &mut w, &f) {
+                        io_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = io_err {
+                return Err(e);
+            }
+            w.flush()?;
+        }
+
+        let totals = self.hub.stats();
+        let eos = Frame::Eos { received: totals.received, dropped: totals.dropped };
+        tracked_write(&mut self.stats, &mut w, &eos)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Fault-injection wrapper for reconnect testing (`iprof serve
+/// --kill-after <bytes>` and the CI reconnect-smoke job): reads pass
+/// through untouched; writes fail with `BrokenPipe` once `budget` bytes
+/// have gone through — from the subscriber's side the publisher dies
+/// mid-stream, possibly mid-frame. Dropping the wrapper drops the inner
+/// connection, so a TCP peer observes EOF.
+pub struct KillAfter<S> {
+    inner: S,
+    remaining: usize,
+}
+
+impl<S> KillAfter<S> {
+    /// Fail every write after `budget` bytes have been written.
+    pub fn new(inner: S, budget: usize) -> KillAfter<S> {
+        KillAfter { inner, remaining: budget }
+    }
+}
+
+impl<S: Read> Read for KillAfter<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for KillAfter<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.remaining == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "injected connection kill (--kill-after)",
+            ));
+        }
+        let n = buf.len().min(self.remaining);
+        let written = self.inner.write(&buf[..n])?;
+        self.remaining -= written;
+        Ok(written)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 #[cfg(test)]
@@ -158,7 +604,10 @@ mod tests {
                 break;
             }
         }
-        assert!(matches!(frames[0], Frame::Hello { .. }));
+        assert!(
+            matches!(frames[0], Frame::Hello { epoch: 0, .. }),
+            "one-shot publish advertises a non-resumable session (epoch 0)"
+        );
         let events: Vec<u64> = frames
             .iter()
             .filter_map(|f| match f {
@@ -196,5 +645,88 @@ mod tests {
             }
         }
         assert_eq!(saw_drops, Some(3), "per-stream cumulative drop count is relayed");
+    }
+
+    /// Encode one fake event frame of a known payload size.
+    fn fake_event_frame(stream: u32, ts: u64) -> Vec<u8> {
+        let mut buf = Vec::new();
+        frame::encode(
+            &Frame::Event {
+                stream,
+                event: WireEvent { ts, rank: 0, tid: 0, class_id: 0, fields: vec![] },
+            },
+            &mut buf,
+        );
+        buf
+    }
+
+    #[test]
+    fn replay_ring_replays_exactly_past_the_cursor() {
+        let mut ring = ReplayRing::new(1 << 20);
+        for ts in 0..5 {
+            ring.push(0, fake_event_frame(0, ts));
+        }
+        ring.push(1, fake_event_frame(1, 100));
+        // cursor [2, 0]: replay stream 0 events 2..5 and all of stream 1
+        let mut out = Vec::new();
+        let s = ring.replay(&[2], &mut out).unwrap();
+        assert_eq!((s.replayed, s.gaps, s.gap_frames), (4, 0, 0));
+        assert_eq!(s.bytes as usize, out.len());
+        let mut ts_seen = Vec::new();
+        let mut off = 0;
+        while off < out.len() {
+            let (f, n) = frame::decode(&out[off..]).unwrap().unwrap();
+            let Frame::Event { event, .. } = f else { panic!("only events replay") };
+            ts_seen.push(event.ts);
+            off += n;
+        }
+        assert_eq!(ts_seen, vec![2, 3, 4, 100]);
+        // a cursor claiming more than was ever relayed is a protocol error
+        assert!(ring.replay(&[9], &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn replay_ring_evicts_oldest_first_and_reports_gaps() {
+        let one = fake_event_frame(0, 0).len();
+        // budget for exactly 3 frames: pushing 5 evicts the oldest 2
+        let mut ring = ReplayRing::new(3 * one);
+        for ts in 0..5 {
+            ring.push(0, fake_event_frame(0, ts));
+        }
+        assert_eq!(ring.streams[0].start_seq, 2);
+        assert_eq!(ring.streams[0].end_seq, 5);
+        // a fresh cursor (0) fell below the window: gap of 2, then replay 3
+        let mut out = Vec::new();
+        let s = ring.replay(&[0], &mut out).unwrap();
+        assert_eq!((s.replayed, s.gaps, s.gap_frames), (3, 2, 1));
+        let (f, n) = frame::decode(&out).unwrap().unwrap();
+        assert_eq!(
+            f,
+            Frame::ResumeGap { stream: 0, missed: 2 },
+            "the gap precedes the replayed events"
+        );
+        let (f, _) = frame::decode(&out[n..]).unwrap().unwrap();
+        let Frame::Event { event, .. } = f else { panic!("replay follows the gap") };
+        assert_eq!(event.ts, 2, "replay starts at the oldest retained event");
+        // a cursor inside the window replays gap-free
+        let s = ring.replay(&[4], &mut Vec::new()).unwrap();
+        assert_eq!((s.replayed, s.gaps), (1, 0));
+    }
+
+    #[test]
+    fn kill_after_passes_then_breaks_writes_mid_buffer() {
+        let mut sink = Vec::new();
+        let mut conn = KillAfter::new(&mut sink, 10);
+        assert_eq!(conn.write(&[0u8; 8]).unwrap(), 8);
+        // partial write up to the budget, then hard failure
+        assert_eq!(conn.write(&[1u8; 8]).unwrap(), 2);
+        let err = conn.write(&[2u8; 8]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(sink.len(), 10, "exactly the budget reached the wire");
+    }
+
+    #[test]
+    fn fresh_epochs_are_nonzero() {
+        assert_ne!(Publisher::fresh_epoch() & 1, 0, "low bit forced: never zero");
     }
 }

@@ -10,6 +10,12 @@
 //! with `include_str!`, so deleting one fails the *build*, not just a
 //! test run.
 //!
+//! The corpus freezes protocol **version 2** (session resumption:
+//! Hello grew an epoch, Resume/ResumeGap arrived). The retired v1
+//! fixtures (`preamble.hex`, `hello.hex`) stay on disk as *rejection*
+//! goldens: a v2 build must refuse them structurally, never mis-parse
+//! them.
+//!
 //! The robustness half is the hostile-input property: truncated,
 //! bit-flipped and random byte streams must always produce a structured
 //! [`FrameError`] (or a clean "incomplete") — never a panic, never an
@@ -44,12 +50,13 @@ fn unhex(fixture: &str) -> Vec<u8> {
 fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
     vec![
         (
-            "hello",
-            include_str!("fixtures/thrl/hello.hex"),
+            "hello_v2",
+            include_str!("fixtures/thrl/hello_v2.hex"),
             Frame::Hello {
                 hostname: "node0".into(),
                 metadata: "btf_version: 1\nevents:\n".into(),
                 streams: 3,
+                epoch: 0x0123_4567_89ab_cdef,
             },
         ),
         (
@@ -97,6 +104,16 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
             include_str!("fixtures/thrl/eos.hex"),
             Frame::Eos { received: 1000, dropped: 4 },
         ),
+        (
+            "resume",
+            include_str!("fixtures/thrl/resume.hex"),
+            Frame::Resume { epoch: 0x0123_4567_89ab_cdef, cursors: vec![7, 0, 42] },
+        ),
+        (
+            "resume_gap",
+            include_str!("fixtures/thrl/resume_gap.hex"),
+            Frame::ResumeGap { stream: 2, missed: 17 },
+        ),
     ]
 }
 
@@ -106,14 +123,33 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
 
 #[test]
 fn preamble_fixture_is_frozen() {
-    let golden = unhex(include_str!("fixtures/thrl/preamble.hex"));
+    let golden = unhex(include_str!("fixtures/thrl/preamble_v2.hex"));
     let mut ours = Vec::new();
     write_preamble(&mut ours).unwrap();
     assert_eq!(
         ours, golden,
         "preamble encoding drifted from the frozen fixture (docs/PROTOCOL.md)"
     );
-    read_preamble(&mut &golden[..]).expect("the frozen preamble must be accepted");
+    let v = read_preamble(&mut &golden[..]).expect("the frozen preamble must be accepted");
+    assert_eq!(v, 2, "this corpus freezes protocol version 2");
+}
+
+/// Version 2 deliberately broke v1 (the Hello layout grew a session
+/// epoch): the retired v1 fixtures stay in the corpus as *rejection*
+/// goldens — a v2 build must refuse them loudly rather than mis-parse.
+#[test]
+fn retired_v1_fixtures_are_rejected_not_misread() {
+    // the v1 preamble fails version negotiation before any frame is read
+    let v1 = unhex(include_str!("fixtures/thrl/preamble.hex"));
+    let err = read_preamble(&mut &v1[..]).unwrap_err();
+    assert!(err.to_string().contains("version 1"), "{err}");
+    // and a v1 Hello body (no epoch) no longer decodes under v2 rules —
+    // it is 8 bytes short, a structured Malformed error, never a guess
+    let hello_v1 = unhex(include_str!("fixtures/thrl/hello.hex"));
+    assert!(
+        matches!(decode(&hello_v1), Err(FrameError::Malformed(_))),
+        "a v1 Hello must fail structurally under v2"
+    );
 }
 
 #[test]
@@ -142,14 +178,16 @@ fn fixture_corpus_covers_every_frame_kind() {
     let frames = golden_frames();
     let kinds: std::collections::HashSet<std::mem::Discriminant<Frame>> =
         frames.iter().map(|(_, _, f)| std::mem::discriminant(f)).collect();
-    assert_eq!(kinds.len(), 7, "fixture corpus no longer covers every frame kind");
+    assert_eq!(kinds.len(), 9, "fixture corpus no longer covers every frame kind");
 }
 
 #[test]
-fn concatenated_fixtures_read_as_one_conforming_connection() {
-    // preamble + Hello .. Eos in grammar order is a complete valid
-    // connection; the blocking reader must consume it frame by frame
-    let mut wire = unhex(include_str!("fixtures/thrl/preamble.hex"));
+fn concatenated_fixtures_read_as_one_frame_stream() {
+    // the whole corpus back to back after the preamble: the blocking
+    // reader must consume it frame by frame with exact length accounting
+    // (grammar-wise Resume flows the other way, but the codec is
+    // direction-agnostic)
+    let mut wire = unhex(include_str!("fixtures/thrl/preamble_v2.hex"));
     let frames = golden_frames();
     for (_, raw, _) in &frames {
         wire.extend_from_slice(&unhex(raw));
@@ -160,7 +198,7 @@ fn concatenated_fixtures_read_as_one_conforming_connection() {
         let got = read_frame(&mut r).unwrap_or_else(|e| panic!("reading {name}: {e}"));
         assert_eq!(&got, expected);
     }
-    assert!(r.is_empty(), "nothing may trail the Eos fixture");
+    assert!(r.is_empty(), "nothing may trail the final fixture");
 }
 
 // ---------------------------------------------------------------------------

@@ -12,13 +12,17 @@
 use std::io::Cursor;
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 use thapi::analysis::{
     self, AnalysisSink, EventMsg, MessageSource, ParsedTrace, TallySink, TimelineSink,
 };
-use thapi::coordinator::{run, run_fanin, IprofConfig};
+use thapi::coordinator::{run, run_fanin, run_fanin_resumable, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::{replay_trace, run_live_pipeline, LiveHub, LiveSource};
-use thapi::remote::{frame, publish, FanIn, Frame, WireEvent};
+use thapi::remote::{
+    frame, publish, FanIn, Frame, KillAfter, PublishStats, Publisher, ReconnectPolicy,
+    ServeOutcome, WireEvent,
+};
 use thapi::tracer::btf::{generate_metadata, DecodedClass, Metadata, TraceData};
 use thapi::util::prop;
 
@@ -265,6 +269,7 @@ fn prop_fanin_merge_order_equals_concatenated_postmortem_merge() {
                     hostname: "fan".into(),
                     metadata: md.to_string(),
                     streams: streams.len() as u32,
+                    epoch: 0,
                 },
             )
             .unwrap();
@@ -359,6 +364,7 @@ fn killed_publisher_yields_partial_union_analysis_with_accounting() {
             hostname: "dying".into(),
             metadata: generate_metadata(&[]),
             streams: 1,
+            epoch: 0,
         },
     )
     .unwrap();
@@ -452,4 +458,214 @@ fn colliding_stream_ids_across_publishers_do_not_alias() {
     assert_eq!(origins[1].label, "node1");
     let stats = fan.finish().unwrap();
     assert_eq!(stats.server_received(), 4);
+}
+
+// ---------------------------------------------------------------------------
+// Reconnect/resume goldens: a killed-and-resumed publisher is
+// byte-identical to an uninterrupted run; a ring overflow books its gap
+// into the per-origin Drops ledger instead of dying
+// ---------------------------------------------------------------------------
+
+/// Serve one resumable session over TCP until the wire reaches Eos:
+/// accept, optionally kill the FIRST connection after `kill_first_after`
+/// written bytes (fault injection), and keep accepting so the
+/// subscriber can resume.
+fn serve_resumable_publisher(
+    listener: TcpListener,
+    hub: Arc<LiveHub>,
+    epoch: u64,
+    resume_buffer: usize,
+    kill_first_after: Option<usize>,
+) -> PublishStats {
+    let mut publisher = Publisher::new(hub, epoch, resume_buffer);
+    let mut kill = kill_first_after;
+    loop {
+        let (conn, _) = listener.accept().unwrap();
+        let conn = KillAfter::new(conn, kill.take().unwrap_or(usize::MAX));
+        match publisher.serve_connection(conn) {
+            ServeOutcome::Complete => return publisher.stats(),
+            ServeOutcome::Lost(_) => continue,
+        }
+    }
+}
+
+/// Wire size of the Hello a resumable publisher sends for `streams`
+/// channels — lets a test aim its kill budget past the handshake and
+/// into the event stream.
+fn hello_wire_len(hostname: &str, streams: u32, epoch: u64) -> usize {
+    let mut buf = Vec::new();
+    thapi::remote::encode(
+        &Frame::Hello {
+            hostname: hostname.into(),
+            metadata: generate_metadata(&[]),
+            streams,
+            epoch,
+        },
+        &mut buf,
+    );
+    buf.len()
+}
+
+#[test]
+fn killed_and_resumed_publisher_is_byte_identical_to_uninterrupted_run() {
+    // publisher A: two streams; publisher B: one stream, with timestamps
+    // interleaved (and tied) against A's so any ordering drift after the
+    // resume would show up in the merged tuple sequence
+    let batches_a: Vec<Vec<(u64, u32)>> = vec![
+        vec![(10, 1), (15, 1), (20, 1), (25, 1), (30, 1), (35, 1)],
+        vec![(12, 2), (17, 2), (22, 2)],
+    ];
+    let batches_b: Vec<Vec<(u64, u32)>> = vec![vec![(10, 9), (16, 9), (21, 9), (26, 9), (31, 9)]];
+    let fill = |hostname: &str, batches: &[Vec<(u64, u32)>]| -> Arc<LiveHub> {
+        let hub = LiveHub::new(hostname, 64, false);
+        hub.ensure_channels(batches.len());
+        for (i, b) in batches.iter().enumerate() {
+            let msgs = b
+                .iter()
+                .enumerate()
+                .map(|(j, &(ts, tid))| {
+                    let name = if j % 2 == 0 {
+                        "lttng_ust_ze:zeInit_entry"
+                    } else {
+                        "lttng_ust_ze:zeInit_exit"
+                    };
+                    reg_msg(&hub, name, ts, 0, tid)
+                })
+                .collect();
+            hub.push_batch(i, msgs);
+        }
+        hub.close_all();
+        hub
+    };
+
+    // kill B's first connection a few events past the handshake: the cut
+    // lands mid-event-stream (possibly mid-frame), which is exactly what
+    // resumption must absorb
+    let kill_at = 8 + hello_wire_len("nodeB", 1, 0xB0B) + 150;
+
+    let mut run_once = |kill_b: Option<usize>| {
+        let la = TcpListener::bind("127.0.0.1:0").unwrap();
+        let lb = TcpListener::bind("127.0.0.1:0").unwrap();
+        let (addr_a, addr_b) = (la.local_addr().unwrap(), lb.local_addr().unwrap());
+        let hub_a = fill("nodeA", &batches_a);
+        let hub_b = fill("nodeB", &batches_b);
+        std::thread::scope(|s| {
+            s.spawn(move || serve_resumable_publisher(la, hub_a, 0xA11CE, 1 << 20, None));
+            s.spawn(move || serve_resumable_publisher(lb, hub_b, 0xB0B, 1 << 20, kill_b));
+            let mk = |addr: std::net::SocketAddr| move || TcpStream::connect(addr);
+            let fan = FanIn::open_resumable(
+                vec![mk(addr_a), mk(addr_b)],
+                64,
+                ReconnectPolicy { attempts: 8, backoff: Duration::from_millis(10) },
+            )
+            .unwrap();
+            let merged: Vec<(u64, u32, u32)> =
+                fan.source().map(|m| (m.ts, m.rank, m.tid)).collect();
+            let gaps = fan.hub().origin_stats().iter().map(|o| o.resume_gaps).sum::<u64>();
+            let stats = fan.finish().unwrap();
+            (merged, stats, gaps)
+        })
+    };
+
+    let (reference, ref_stats, ref_gaps) = run_once(None);
+    assert_eq!(ref_stats.reconnects(), 0);
+    assert_eq!(ref_gaps, 0);
+    assert_eq!(reference.len(), 14, "6 + 3 from A, 5 from B");
+
+    let (resumed, stats, gaps) = run_once(Some(kill_at));
+    assert_eq!(stats.failed(), 0, "the killed publisher resumed, nobody died: {stats:?}");
+    assert!(stats.per[1].reconnects >= 1, "B's connection was killed and re-joined: {stats:?}");
+    assert_eq!(gaps, 0, "a roomy ring replays everything — no gap");
+    assert_eq!(stats.server_dropped(), 0);
+    assert_eq!(
+        resumed, reference,
+        "a killed-and-resumed publisher must merge byte-identically to an uninterrupted run"
+    );
+}
+
+#[test]
+fn ring_overflow_books_gap_into_drops_ledger_and_fails_strict() {
+    // one stream, 40 events; the replay ring only holds ~3 event frames,
+    // and the first connection dies well past what the ring can keep —
+    // the resume MUST come back with a gap, not an error
+    let n_events = 40u64;
+    let hub = LiveHub::new("lossyring", 64, false);
+    hub.ensure_channels(1);
+    let msgs: Vec<EventMsg> = (0..n_events)
+        .map(|i| {
+            let name = if i % 2 == 0 {
+                "lttng_ust_ze:zeInit_entry"
+            } else {
+                "lttng_ust_ze:zeInit_exit"
+            };
+            reg_msg(&hub, name, 10 + i * 5, 0, 1)
+        })
+        .collect();
+    hub.push_batch(0, msgs);
+    hub.close_all();
+
+    // one encoded event frame, to size the ring in whole events
+    let event_len = {
+        let mut buf = Vec::new();
+        thapi::remote::encode(
+            &Frame::Event {
+                stream: 0,
+                event: WireEvent {
+                    ts: 10,
+                    rank: 0,
+                    tid: 1,
+                    class_id: thapi::model::class_by_name("lttng_ust_ze:zeInit_entry")
+                        .unwrap()
+                        .id,
+                    fields: vec![thapi::tracer::encoder::FieldValue::U64(0)],
+                },
+            },
+            &mut buf,
+        );
+        buf.len()
+    };
+    let ring_budget = 3 * event_len;
+    let kill_at = 8 + hello_wire_len("lossyring", 1, 0x10557) + 20 * event_len;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (report, publish_stats) = std::thread::scope(|s| {
+        let server = s.spawn(move || {
+            serve_resumable_publisher(listener, hub, 0x10557, ring_budget, Some(kill_at))
+        });
+        let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let report = run_fanin_resumable(
+            vec![move || TcpStream::connect(addr)],
+            64,
+            ReconnectPolicy { attempts: 8, backoff: Duration::from_millis(10) },
+            sinks,
+            None,
+            |_| {},
+        )
+        .unwrap();
+        (report, server.join().unwrap())
+    });
+
+    // non-strict semantics: the run COMPLETES, with the gap accounted
+    assert_eq!(report.failed_publishers(), 0, "{:?}", report.stats);
+    assert!(report.reconnects() >= 1);
+    assert_eq!(report.reports.len(), 1, "analysis completed over everything recoverable");
+    let gap = report.resume_gaps();
+    assert!(gap > 0, "a 3-event ring cannot cover the outage: {report:?}");
+    assert_eq!(
+        report.origins[0].resume_gaps, gap,
+        "the gap lands in the per-origin Drops ledger"
+    );
+    assert_eq!(publish_stats.gaps, gap, "both ends agree on the exact loss");
+    assert_eq!(
+        report.latency.merged,
+        n_events - gap,
+        "everything outside the gap was merged exactly once"
+    );
+    // strict semantics: the gate iprof attach --live-strict applies
+    assert!(
+        report.known_dropped() >= gap && report.known_dropped() > 0,
+        "--live-strict must fail on a resume gap (known_dropped {})",
+        report.known_dropped()
+    );
 }

@@ -54,7 +54,7 @@ fn arbitrary_field(rng: &mut Rng) -> FieldValue {
 }
 
 fn arbitrary_frame(rng: &mut Rng) -> Frame {
-    match rng.below(7) {
+    match rng.below(9) {
         0 => {
             let n = rng.range(0, 512);
             let metadata: String = (0..n)
@@ -64,6 +64,7 @@ fn arbitrary_frame(rng: &mut Rng) -> Frame {
                 hostname: format!("node{}", rng.below(1000)),
                 metadata,
                 streams: rng.next_u64() as u32,
+                epoch: rng.next_u64(),
             }
         }
         1 => Frame::Streams { count: rng.next_u64() as u32 },
@@ -80,6 +81,11 @@ fn arbitrary_frame(rng: &mut Rng) -> Frame {
         3 => Frame::Beacon { stream: rng.below(1 << 16) as u32, watermark: rng.next_u64() },
         4 => Frame::Drops { stream: rng.below(1 << 16) as u32, dropped: rng.next_u64() },
         5 => Frame::Close { stream: rng.below(1 << 16) as u32 },
+        6 => Frame::Resume {
+            epoch: rng.next_u64(),
+            cursors: (0..rng.range(0, 9)).map(|_| rng.next_u64()).collect(),
+        },
+        7 => Frame::ResumeGap { stream: rng.below(1 << 16) as u32, missed: rng.next_u64() },
         _ => Frame::Eos { received: rng.next_u64(), dropped: rng.next_u64() },
     }
 }
@@ -382,6 +388,7 @@ fn prop_remote_merge_order_equals_postmortem_merge() {
                 hostname: "remotenode".into(),
                 metadata: md,
                 streams: parsed.streams.len() as u32,
+                epoch: 0,
             },
         )
         .unwrap();

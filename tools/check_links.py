@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's docs surface.
+
+Checks every relative link target in the given markdown files (defaults
+to docs/*.md, ROADMAP.md, rust/ARCHITECTURE.md) against the filesystem:
+a `[text](path)` or `[text](path#anchor)` whose `path` does not exist —
+file or directory, resolved against the linking file's own directory —
+fails the run. External links (http/https/mailto) are skipped: CI must
+not flake on someone else's uptime. Anchors are checked only for
+markdown targets we also scanned, by slugifying their headings the way
+GitHub does.
+
+Usage: python3 tools/check_links.py [file.md ...]
+Exit status: 0 = all links resolve, 1 = at least one broken link.
+"""
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces to dashes."""
+    heading = re.sub(r"[`*_]", "", heading.strip())
+    slug = []
+    for ch in heading.lower():
+        if ch.isalnum():
+            slug.append(ch)
+        elif ch in (" ", "-"):
+            slug.append("-")
+        # other punctuation drops out
+    return "".join(slug)
+
+
+def headings_of(path: str) -> set:
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError:
+        return set()
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def check(files):
+    errors = []
+    anchor_cache = {}
+    for md in files:
+        base = os.path.dirname(os.path.abspath(md))
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                # external, or an in-file anchor: check the latter
+                if target.startswith("#"):
+                    own = anchor_cache.setdefault(md, headings_of(md))
+                    if github_slug(target[1:]) not in own and target[1:] not in own:
+                        errors.append(f"{md}: broken in-file anchor {target}")
+                continue
+            path, _, anchor = target.partition("#")
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken link {target} -> {resolved}")
+                continue
+            if anchor and resolved.endswith(".md"):
+                anchors = anchor_cache.setdefault(resolved, headings_of(resolved))
+                if github_slug(anchor) not in anchors and anchor not in anchors:
+                    errors.append(f"{md}: broken anchor {target}")
+    return errors
+
+
+def main(argv):
+    files = argv[1:]
+    if not files:
+        files = sorted(glob.glob("docs/*.md")) + ["ROADMAP.md", "rust/ARCHITECTURE.md"]
+    missing = [f for f in files if not os.path.exists(f)]
+    if missing:
+        print("no such file(s): " + ", ".join(missing))
+        return 1
+    errors = check(files)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} file(s): " + ("FAIL" if errors else "ok"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
