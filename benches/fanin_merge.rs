@@ -7,7 +7,13 @@
 //! socket. K = 1 is exactly the single-publisher `iprof attach` path,
 //! so the K > 1 rows show the marginal cost of namespacing + merging
 //! more origins over the SAME total event count (byte-identical output
-//! is asserted every round).
+//! is asserted every round). With the sharded `LiveHub`, the K reader
+//! threads feed per-origin shards instead of serializing on one hub
+//! mutex, so the `merge rate` column should hold (or improve) as K
+//! grows — `scaling_k4_over_k1` in the JSON records exactly that.
+//!
+//! Results land in `BENCH_fanin_merge.json` (see `EXPERIMENTS.md`).
+//! `THAPI_BENCH_QUICK=1` shrinks the workload for CI smoke runs.
 //!
 //! ```sh
 //! cargo bench --bench fanin_merge
@@ -17,7 +23,7 @@ use std::io::Cursor;
 use std::time::Instant;
 use thapi::analysis::{AnalysisSink, TallySink};
 use thapi::apps::spechpc;
-use thapi::bench_support::Table;
+use thapi::bench_support::{js_num, js_str, quick_mode, BenchJson, Table};
 use thapi::coordinator::{run, run_fanin, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::{replay_trace, LiveHub};
@@ -50,7 +56,7 @@ fn split(trace: &TraceData, k: usize) -> Vec<TraceData> {
 
 fn main() {
     if std::env::var("THAPI_APP_SCALE").is_err() {
-        std::env::set_var("THAPI_APP_SCALE", "0.3");
+        std::env::set_var("THAPI_APP_SCALE", if quick_mode() { "0.05" } else { "0.3" });
     }
     let node = Node::new(NodeConfig::aurora());
     let apps = spechpc::suite();
@@ -66,12 +72,19 @@ fn main() {
         reports[0].payload().unwrap().to_string()
     };
 
+    let mut json = BenchJson::new("fanin_merge");
+    json.meta("quick", format!("{}", quick_mode()));
+    json.meta("app", js_str(app.name()));
+    json.meta("events", js_num(events as f64));
+    json.meta("streams", js_num(trace.streams.len() as f64));
+
     println!(
         "\n=== fan-in merge scaling ({}: {events} events, {} streams) ===\n",
         app.name(),
         trace.streams.len()
     );
     let mut t = Table::new(&["publishers", "publish ms", "fan-in+tally ms", "merge rate"]);
+    let mut rate_by_k: Vec<(usize, f64)> = Vec::new();
     for k in [1usize, 2, 4] {
         if k > trace.streams.len() {
             println!("(skipping K={k}: only {} streams)", trace.streams.len());
@@ -79,7 +92,7 @@ fn main() {
         }
         let parts = split(trace, k);
 
-        // publish each split into its own in-memory wire
+        // publish each split into its own in-memory wire (v3 batched)
         let t0 = Instant::now();
         let wires: Vec<Vec<u8>> = parts
             .iter()
@@ -96,7 +109,8 @@ fn main() {
             .collect();
         let publish_wall = t0.elapsed();
 
-        // K-way fan-in: handshake, namespace, merge, tally
+        // K-way fan-in: handshake, namespace, batch-decode, merge, tally —
+        // K reader threads feeding the sharded hub concurrently
         let t0 = Instant::now();
         let conns: Vec<Cursor<Vec<u8>>> = wires.into_iter().map(Cursor::new).collect();
         let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
@@ -111,13 +125,31 @@ fn main() {
             "K={k} fan-in must stay byte-identical to whole-trace post-mortem"
         );
 
+        let merge_rate = events as f64 / fanin_wall.as_secs_f64();
+        rate_by_k.push((k, merge_rate));
         t.row(&[
             format!("{k}"),
             format!("{:.2}", publish_wall.as_secs_f64() * 1e3),
             format!("{:.2}", fanin_wall.as_secs_f64() * 1e3),
-            human_rate(events as f64 / fanin_wall.as_secs_f64()),
+            human_rate(merge_rate),
+        ]);
+        json.result(&[
+            ("k", js_num(k as f64)),
+            ("publish_ms", js_num(publish_wall.as_secs_f64() * 1e3)),
+            ("fanin_ms", js_num(fanin_wall.as_secs_f64() * 1e3)),
+            ("merge_events_per_s", js_num(merge_rate)),
         ]);
     }
     println!("{}", t.render());
     println!("every row asserted byte-identical to post-mortem; drops: 0");
+
+    let rate_at = |k: usize| rate_by_k.iter().find(|(kk, _)| *kk == k).map(|(_, r)| *r);
+    if let (Some(r1), Some(r4)) = (rate_at(1), rate_at(4)) {
+        println!("K=4 merge rate vs K=1: {:.2}x", r4 / r1);
+        json.meta("scaling_k4_over_k1", js_num(r4 / r1));
+    }
+    match json.write() {
+        Ok(path) => println!("results written to {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_fanin_merge.json: {e}"),
+    }
 }

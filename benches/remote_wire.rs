@@ -1,14 +1,24 @@
-//! Remote wire-protocol cost: THRL codec throughput and the loopback
-//! end-to-end relay.
+//! Remote wire-protocol cost: THRL codec throughput (v2 per-event vs
+//! v3 batched) and the loopback end-to-end relay.
 //!
-//! Three measurements frame whether the network hop can keep up with the
+//! Four measurements frame whether the network hop can keep up with the
 //! tracer (paper §5 asks the same of every pipeline stage):
 //!
-//! 1. **encode** — frames/s and MB/s serializing a realistic Event mix;
-//! 2. **decode** — the same wire parsed back;
+//! 1. **encode v2 / v3** — events/s and MB/s serializing a realistic
+//!    event mix: one `Event` frame per event on the v2 wire vs
+//!    dictionary-compressed `EventBatch` frames on v3;
+//! 2. **decode v2 / v3** — the same wires parsed back; v3 uses the
+//!    stateful fast path (`decode_batch_into`) the subscriber runs;
 //! 3. **loopback relay** — a recorded trace replayed through a hub,
-//!    published into a Vec, attached from it, and merged into a tally:
-//!    the whole remote path minus the kernel socket.
+//!    published into a Vec on each wire, attached from it, and merged
+//!    into a tally: the whole remote path minus the kernel socket.
+//!
+//! Beacons/closes don't batch and are identical on both wires, so the
+//! codec comparison uses a pure event stream; the loopback rows carry
+//! the full frame mix.
+//!
+//! Results land in `BENCH_remote_wire.json` (see `EXPERIMENTS.md`).
+//! `THAPI_BENCH_QUICK=1` shrinks the workload for CI smoke runs.
 //!
 //! ```sh
 //! cargo bench --bench remote_wire
@@ -17,11 +27,14 @@
 use std::time::Instant;
 use thapi::analysis::{AnalysisSink, TallySink};
 use thapi::apps::spechpc;
-use thapi::bench_support::{Stats, Table};
+use thapi::bench_support::{js_num, js_str, quick_mode, BenchJson, Stats, Table};
 use thapi::coordinator::{run, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::{replay_trace, LiveHub};
-use thapi::remote::{decode, encode, publish, Attachment, Frame, WireEvent};
+use thapi::remote::{
+    decode, decode_batch_into, encode, is_event_batch, publish_with, Attachment, BatchDict,
+    BatchDictEncoder, BatchEvent, Frame, WireEvent,
+};
 use thapi::tracer::encoder::FieldValue;
 use thapi::tracer::TracingMode;
 use thapi::util::Rng;
@@ -38,80 +51,177 @@ fn human_rate(per_s: f64) -> String {
 
 fn main() {
     let mut rng = Rng::new(0x7431_e51e);
-    bench_codec(&mut rng);
-    bench_loopback();
+    let mut json = BenchJson::new("remote_wire");
+    json.meta("quick", format!("{}", quick_mode()));
+    bench_codec(&mut rng, &mut json);
+    bench_loopback(&mut json);
+    match json.write() {
+        Ok(path) => println!("\nresults written to {}", path.display()),
+        Err(e) => eprintln!("\ncould not write BENCH_remote_wire.json: {e}"),
+    }
 }
 
-/// Codec throughput over a realistic Event mix (4-field events like the
-/// ZE memcpy wrappers, plus beacons every 64 events like a consumer
-/// round).
-fn bench_codec(rng: &mut Rng) {
-    const N: usize = 100_000;
-    let frames: Vec<Frame> = (0..N)
+/// One forward round's worth of events per EventBatch — the publisher
+/// pump cuts batches at stream changes, so a per-stream run is the
+/// realistic unit.
+const BATCH: usize = 256;
+
+/// Codec throughput over a realistic event mix: 4-field events like the
+/// ZE memcpy wrappers from 16 distinct `(rank, tid, class_id)` origins
+/// (the dictionary-friendly regime a real consumer round produces).
+fn bench_codec(rng: &mut Rng, json: &mut BenchJson) {
+    let n: usize = if quick_mode() { 20_000 } else { 200_000 };
+    let (warmup, reps) = if quick_mode() { (1, 3) } else { (2, 10) };
+    let raw: Vec<(u64, u32, u32, u32, Vec<FieldValue>)> = (0..n)
         .map(|i| {
-            if i % 64 == 63 {
-                Frame::Beacon { stream: (i % 8) as u32, watermark: i as u64 }
-            } else {
-                Frame::Event {
-                    stream: (i % 8) as u32,
-                    event: WireEvent {
-                        ts: i as u64,
-                        rank: (i % 4) as u32,
-                        tid: (i % 16) as u32,
-                        class_id: (i % 300) as u32,
-                        fields: vec![
-                            FieldValue::Ptr(rng.next_u64()),
-                            FieldValue::Ptr(rng.next_u64()),
-                            FieldValue::U64(rng.below(1 << 20)),
-                            FieldValue::U64(0),
-                        ],
-                    },
-                }
-            }
+            let fields = vec![
+                FieldValue::Ptr(rng.next_u64()),
+                FieldValue::Ptr(rng.next_u64()),
+                FieldValue::U64(rng.below(1 << 20)),
+                FieldValue::U64(0),
+            ];
+            // small monotone-ish ts steps: the delta-varint sweet spot
+            ((i as u64) * 30 + rng.below(10), (i % 4) as u32, (i % 16) as u32, (i % 12) as u32, fields)
         })
         .collect();
 
-    let mut wire = Vec::new();
-    let enc = Stats::measure(2, 10, || {
-        wire.clear();
-        for f in &frames {
-            encode(f, &mut wire);
+    // v2: one Event frame per event
+    let v2_frames: Vec<Frame> = raw
+        .iter()
+        .map(|(ts, rank, tid, class_id, fields)| Frame::Event {
+            stream: 0,
+            event: WireEvent {
+                ts: *ts,
+                rank: *rank,
+                tid: *tid,
+                class_id: *class_id,
+                fields: fields.clone(),
+            },
+        })
+        .collect();
+
+    // v3: EventBatch frames of BATCH events, keys through one connection
+    // dictionary (the same assignment the publisher pump performs)
+    let mut dict_enc = BatchDictEncoder::new();
+    let v3_frames: Vec<Frame> = raw
+        .chunks(BATCH)
+        .map(|chunk| Frame::EventBatch {
+            stream: 0,
+            events: chunk
+                .iter()
+                .map(|(ts, rank, tid, class_id, fields)| BatchEvent {
+                    ts: *ts,
+                    key: dict_enc.key_for(*rank, *tid, *class_id),
+                    fields: fields.clone(),
+                })
+                .collect(),
+        })
+        .collect();
+
+    let mut wire_v2 = Vec::new();
+    let enc_v2 = Stats::measure(warmup, reps, || {
+        wire_v2.clear();
+        for f in &v2_frames {
+            encode(f, &mut wire_v2);
         }
     });
-    let bytes = wire.len();
+    let mut wire_v3 = Vec::new();
+    let enc_v3 = Stats::measure(warmup, reps, || {
+        wire_v3.clear();
+        for f in &v3_frames {
+            encode(f, &mut wire_v3);
+        }
+    });
 
     let mut decoded = 0usize;
-    let dec = Stats::measure(2, 10, || {
+    let dec_v2 = Stats::measure(warmup, reps, || {
         decoded = 0;
         let mut off = 0;
-        while off < wire.len() {
-            let (_, n) = decode(&wire[off..]).unwrap().unwrap();
-            off += n;
+        while off < wire_v2.len() {
+            let (_, consumed) = decode(&wire_v2[off..]).unwrap().unwrap();
+            off += consumed;
             decoded += 1;
         }
     });
-    assert_eq!(decoded, N);
+    assert_eq!(decoded, n);
 
-    println!("\n=== THRL codec throughput ({N} frames, {bytes} wire bytes) ===\n");
-    let mut t = Table::new(&["direction", "median wall ms", "frames", "bytes"]);
-    for (name, s) in [("encode", &enc), ("decode", &dec)] {
+    // v3 decode through the stateful fast path the subscriber runs:
+    // frame split + decode_batch_into, fields landing in the reused
+    // scratch buffer
+    let dec_v3 = Stats::measure(warmup, reps, || {
+        decoded = 0;
+        let mut dict = BatchDict::new();
+        let mut off = 0;
+        while off < wire_v3.len() {
+            let len = u32::from_le_bytes(wire_v3[off..off + 4].try_into().unwrap()) as usize;
+            let body = &wire_v3[off + 4..off + 4 + len];
+            assert!(is_event_batch(body));
+            let (_, events) = decode_batch_into(body, &mut dict, |_, _, _, _, _| ()).unwrap();
+            decoded += events;
+            off += 4 + len;
+        }
+    });
+    assert_eq!(decoded, n);
+
+    let rate = |s: &Stats| n as f64 / s.median().as_secs_f64();
+    let enc_speedup = rate(&enc_v3) / rate(&enc_v2);
+    let dec_speedup = rate(&dec_v3) / rate(&dec_v2);
+
+    println!(
+        "\n=== THRL codec throughput ({n} events; v2 {} B, v3 {} B on the wire) ===\n",
+        wire_v2.len(),
+        wire_v3.len()
+    );
+    let mut t = Table::new(&["direction", "median wall ms", "events", "bytes/event"]);
+    let rows: [(&str, &Stats, usize); 4] = [
+        ("encode v2 per-event", &enc_v2, wire_v2.len()),
+        ("encode v3 batched", &enc_v3, wire_v3.len()),
+        ("decode v2 per-event", &dec_v2, wire_v2.len()),
+        ("decode v3 batched", &dec_v3, wire_v3.len()),
+    ];
+    for (name, s, bytes) in rows {
         let secs = s.median().as_secs_f64();
         t.row(&[
             name.into(),
             format!("{:.2}", secs * 1e3),
-            human_rate(N as f64 / secs),
-            human_rate(bytes as f64 / secs),
+            human_rate(n as f64 / secs),
+            format!("{:.1}", bytes as f64 / n as f64),
         ]);
     }
     println!("{}", t.render());
+    println!(
+        "v3 speedup: encode {enc_speedup:.2}x, decode {dec_speedup:.2}x, \
+         wire size {:.2}x smaller (target: >= 3x codec throughput)",
+        wire_v2.len() as f64 / wire_v3.len() as f64
+    );
+
+    json.meta("codec_events", js_num(n as f64));
+    json.meta("batch_size", js_num(BATCH as f64));
+    json.meta("encode_speedup_v3_over_v2", js_num(enc_speedup));
+    json.meta("decode_speedup_v3_over_v2", js_num(dec_speedup));
+    for (name, s, bytes) in [
+        ("encode_v2", &enc_v2, wire_v2.len()),
+        ("encode_v3", &enc_v3, wire_v3.len()),
+        ("decode_v2", &dec_v2, wire_v2.len()),
+        ("decode_v3", &dec_v3, wire_v3.len()),
+    ] {
+        let secs = s.median().as_secs_f64();
+        json.result(&[
+            ("name", js_str(name)),
+            ("events_per_s", js_num(n as f64 / secs)),
+            ("mb_per_s", js_num(bytes as f64 / secs / 1e6)),
+            ("bytes_per_event", js_num(bytes as f64 / n as f64)),
+            ("median_ms", js_num(secs * 1e3)),
+        ]);
+    }
 }
 
-/// End-to-end loopback: trace once, then replay → hub → publish(Vec) →
-/// attach → merge → tally, asserting byte-identity with post-mortem on
-/// the way.
-fn bench_loopback() {
+/// End-to-end loopback on each wire: trace once, then replay → hub →
+/// publish(Vec) → attach → merge → tally, asserting byte-identity with
+/// post-mortem on the way.
+fn bench_loopback(json: &mut BenchJson) {
     if std::env::var("THAPI_APP_SCALE").is_err() {
-        std::env::set_var("THAPI_APP_SCALE", "0.3");
+        std::env::set_var("THAPI_APP_SCALE", if quick_mode() { "0.05" } else { "0.3" });
     }
     let node = Node::new(NodeConfig::aurora());
     let apps = spechpc::suite();
@@ -127,49 +237,51 @@ fn bench_loopback() {
         reports[0].payload().unwrap().to_string()
     };
 
-    let t0 = Instant::now();
-    let hub = LiveHub::new(&node.config.hostname, 4096, false);
-    let wire = std::thread::scope(|s| {
-        let feeder = s.spawn(|| replay_trace(&hub, trace, 64));
-        let mut buf = Vec::new();
-        publish(&hub, &mut buf).unwrap();
-        feeder.join().unwrap();
-        buf
-    });
-    let publish_wall = t0.elapsed();
+    println!("\n=== loopback relay ({}: {events} events) ===\n", app.name());
+    let mut t = Table::new(&["wire", "publish ms", "attach+merge ms", "wire bytes/event"]);
+    json.meta("loopback_app", js_str(app.name()));
+    json.meta("loopback_events", js_num(events as f64));
+    for wire_version in [2u32, 3] {
+        let t0 = Instant::now();
+        let hub = LiveHub::new(&node.config.hostname, 4096, false);
+        let wire = std::thread::scope(|s| {
+            let feeder = s.spawn(|| replay_trace(&hub, trace, 64));
+            let mut buf = Vec::new();
+            publish_with(&hub, &mut buf, wire_version).unwrap();
+            feeder.join().unwrap();
+            buf
+        });
+        let publish_wall = t0.elapsed();
 
-    let t0 = Instant::now();
-    let att = Attachment::open(std::io::Cursor::new(wire.clone()), 4096).unwrap();
-    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
-    let out = thapi::live::run_live_pipeline(att.source(), &mut sinks, None, |_| {});
-    let stats = att.finish().unwrap();
-    let attach_wall = t0.elapsed();
+        let t0 = Instant::now();
+        let att = Attachment::open(std::io::Cursor::new(wire.clone()), 4096).unwrap();
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let out = thapi::live::run_live_pipeline(att.source(), &mut sinks, None, |_| {});
+        let stats = att.finish().unwrap();
+        let attach_wall = t0.elapsed();
 
-    assert_eq!(stats.server_dropped, 0);
-    assert_eq!(
-        out.reports[0].payload().unwrap(),
-        pm_text,
-        "loopback relay must stay byte-identical to post-mortem"
-    );
+        assert_eq!(stats.server_dropped, 0);
+        assert_eq!(stats.wire_version, wire_version);
+        assert_eq!(
+            out.reports[0].payload().unwrap(),
+            pm_text,
+            "loopback relay (wire v{wire_version}) must stay byte-identical to post-mortem"
+        );
 
-    println!(
-        "\n=== loopback relay ({}: {events} events, {} wire bytes) ===\n",
-        app.name(),
-        wire.len()
-    );
-    let mut t = Table::new(&["stage", "wall ms", "events", "wire bytes/event"]);
-    t.row(&[
-        "replay + publish (hub tee -> frames)".into(),
-        format!("{:.2}", publish_wall.as_secs_f64() * 1e3),
-        human_rate(events as f64 / publish_wall.as_secs_f64()),
-        format!("{:.1}", wire.len() as f64 / events.max(1) as f64),
-    ]);
-    t.row(&[
-        "attach + merge + tally (frames -> report)".into(),
-        format!("{:.2}", attach_wall.as_secs_f64() * 1e3),
-        human_rate(events as f64 / attach_wall.as_secs_f64()),
-        "-".into(),
-    ]);
+        t.row(&[
+            format!("v{wire_version}"),
+            format!("{:.2}", publish_wall.as_secs_f64() * 1e3),
+            format!("{:.2}", attach_wall.as_secs_f64() * 1e3),
+            format!("{:.1}", wire.len() as f64 / events.max(1) as f64),
+        ]);
+        json.result(&[
+            ("name", js_str(&format!("loopback_v{wire_version}"))),
+            ("publish_ms", js_num(publish_wall.as_secs_f64() * 1e3)),
+            ("attach_ms", js_num(attach_wall.as_secs_f64() * 1e3)),
+            ("wire_bytes", js_num(wire.len() as f64)),
+            ("bytes_per_event", js_num(wire.len() as f64 / events.max(1) as f64)),
+        ]);
+    }
     println!("{}", t.render());
-    println!("output asserted byte-identical to post-mortem; drops: 0");
+    println!("both wires asserted byte-identical to post-mortem; drops: 0");
 }

@@ -80,6 +80,106 @@ pub mod alloc_track {
     }
 }
 
+/// `1` / `true` in `THAPI_BENCH_QUICK` selects the bounded quick mode:
+/// benches shrink their workloads to a few seconds total so CI can smoke
+/// them on every push. Full runs (the numbers recorded in
+/// `BENCH_*.json`) leave it unset.
+pub fn quick_mode() -> bool {
+    matches!(
+        std::env::var("THAPI_BENCH_QUICK").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
+
+/// Minimal JSON emitter for the `BENCH_<name>.json` result files the
+/// benches check in (no serde in-tree; the format is flat on purpose:
+/// one `meta` object and one `results` array of uniform metric rows, so
+/// a later PR can diff before/after numbers mechanically).
+pub struct BenchJson {
+    name: String,
+    meta: Vec<(String, String)>,
+    results: Vec<Vec<(String, String)>>,
+}
+
+/// Quote and escape a JSON string value.
+pub fn js_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a finite number as a JSON value (NaN/inf become null).
+pub fn js_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".into()
+    }
+}
+
+impl BenchJson {
+    /// Start a result file for bench `name` (file: `BENCH_<name>.json`).
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), meta: Vec::new(), results: Vec::new() }
+    }
+
+    /// Add a top-level meta field; `raw` must already be valid JSON
+    /// (use [`js_str`] / [`js_num`]).
+    pub fn meta(&mut self, key: &str, raw: String) -> &mut Self {
+        self.meta.push((key.to_string(), raw));
+        self
+    }
+
+    /// Append one metric row; values must already be valid JSON.
+    pub fn result(&mut self, fields: &[(&str, String)]) -> &mut Self {
+        self.results
+            .push(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+        self
+    }
+
+    /// Render the document.
+    pub fn render(&self) -> String {
+        let obj = |fields: &[(String, String)], indent: &str| -> String {
+            let body: Vec<String> =
+                fields.iter().map(|(k, v)| format!("{indent}  {}: {v}", js_str(k))).collect();
+            format!("{{\n{}\n{indent}}}", body.join(",\n"))
+        };
+        let rows: Vec<String> =
+            self.results.iter().map(|r| format!("    {}", obj(r, "    "))).collect();
+        let mut meta = vec![("bench".to_string(), js_str(&self.name))];
+        meta.extend(self.meta.iter().cloned());
+        let meta_body: Vec<String> =
+            meta.iter().map(|(k, v)| format!("  {}: {v}", js_str(k))).collect();
+        format!(
+            "{{\n{},\n  \"results\": [\n{}\n  ]\n}}\n",
+            meta_body.join(",\n"),
+            rows.join(",\n")
+        )
+    }
+
+    /// Write `BENCH_<name>.json` into `$THAPI_BENCH_JSON_DIR` (default:
+    /// the working directory — the repo root under `cargo bench`) and
+    /// return the path.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("THAPI_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 /// Simple timing statistics over repeated measurements.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -232,6 +332,24 @@ mod tests {
         assert_eq!(median_of(&[5.0, 1.0, 3.0]), 3.0);
         assert_eq!(median_of(&[4.0, 1.0, 3.0, 2.0]), 2.5);
         assert_eq!(mean_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn bench_json_renders_valid_flat_documents() {
+        let mut j = BenchJson::new("demo");
+        j.meta("events", js_num(100.0));
+        j.meta("app", js_str("with \"quotes\"\nand newline"));
+        j.result(&[("name", js_str("encode")), ("rate", js_num(1.5))]);
+        j.result(&[("name", js_str("decode")), ("rate", js_num(f64::NAN))]);
+        let doc = j.render();
+        assert!(doc.contains("\"bench\": \"demo\""));
+        assert!(doc.contains("\"events\": 100.000"));
+        assert!(doc.contains("\\\"quotes\\\"\\nand newline"));
+        assert!(doc.contains("\"rate\": null"), "non-finite numbers become null");
+        // structurally balanced (cheap stand-in for a JSON parser)
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+        assert_eq!(doc.matches('"').count() % 2, 0);
     }
 
     #[test]

@@ -346,12 +346,18 @@ impl ServeReport {
 /// Blocks until the workload finishes and the wire drains. Transport
 /// failures tear nothing down on the traced side — the session completes
 /// and the error is returned after teardown.
+///
+/// `wire` selects the THRL version the publisher speaks (`--wire`):
+/// 3 (default) batches events, 2 keeps the frozen per-event stream for
+/// v2-only subscribers — the subscriber hard-rejects versions it does
+/// not speak, so the downgrade is always publisher-selected.
 pub fn run_serve<W: Write + Send>(
     node: &Arc<Node>,
     workload: &dyn Workload,
     config: &IprofConfig,
     live_cfg: &LiveConfig,
     conn: W,
+    wire: u32,
 ) -> std::io::Result<ServeReport> {
     assert!(config.tracing, "serve mode requires tracing");
     let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
@@ -373,7 +379,7 @@ pub fn run_serve<W: Write + Send>(
 
     let (published, wall) = std::thread::scope(|scope| {
         let hub_ref = &hub;
-        let publisher = scope.spawn(move || remote::publish(hub_ref, conn));
+        let publisher = scope.spawn(move || remote::publish_with(hub_ref, conn, wire));
         let t0 = Instant::now();
         // Same teardown discipline as run_live: a panicking workload must
         // still uninstall (final drain + hub close) so the publisher's
@@ -432,6 +438,7 @@ pub fn run_serve_resumable<S, A>(
     live_cfg: &LiveConfig,
     mut accept: A,
     resume_buffer: usize,
+    wire: u32,
 ) -> std::io::Result<ServeReport>
 where
     S: Read + Write + Send,
@@ -459,7 +466,7 @@ where
     let (published, wall) = std::thread::scope(|scope| {
         let publisher_thread = scope.spawn(move || {
             let mut publisher =
-                Publisher::new(pub_hub, Publisher::fresh_epoch(), resume_buffer);
+                Publisher::new(pub_hub, Publisher::fresh_epoch(), resume_buffer).with_wire(wire);
             let mut disconnects = Vec::new();
             loop {
                 match accept()? {

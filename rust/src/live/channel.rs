@@ -1,4 +1,5 @@
-//! The live hub: bounded per-stream message channels with watermarks.
+//! The live hub: bounded per-stream message channels with watermarks,
+//! sharded by origin.
 //!
 //! One [`LiveHub`] sits between the tracing consumer thread and the live
 //! analysis pipeline (the lttng-live relay analogue). Each traced stream
@@ -16,26 +17,52 @@
 //! stream is quiet up to T" so the k-way merge can advance global time
 //! without waiting on a stream that may never speak again.
 //!
-//! The hub is deliberately a single `Mutex<HubState>` + `Condvar`: the
-//! consumer pushes whole drain batches under one short lock, the merge
-//! ([`super::source::LiveSource`]) scans channel heads under the same
-//! lock, and blocked producers/consumers park on the shared condvar.
+//! # Sharding (the fan-in hot path)
+//!
+//! Channels live in **shards**: shard 0 holds the hub's local streams,
+//! and every registered origin (remote publisher) gets its own shard.
+//! Each shard has its own mutex, so K fan-in reader threads pushing into
+//! K origins never contend with each other — a reader's hot path is one
+//! shard lock plus two atomics (the global queued-total and channel
+//! count), not one hub-wide mutex serializing every event in the
+//! process. The merge takes a coherent *snapshot* per round
+//! ([`LiveHub::merge_view`]: one short lock acquisition per shard) and
+//! re-validates the hub topology version before popping
+//! ([`LiveHub::pop_candidate`]), which restores the atomicity the old
+//! single-lock design got for free:
+//!
+//! * a push to a **non-empty** channel appends behind that channel's
+//!   head, and per-stream timestamps are non-decreasing, so it can never
+//!   beat the snapshot's best candidate in `(ts, stream, seq)` order;
+//! * a push to an **empty, open** channel carries `ts >=` that channel's
+//!   watermark at push time, and the snapshot only declared the best
+//!   releasable because every such watermark was *strictly* above the
+//!   candidate — so the late event sorts strictly after it;
+//! * a **new channel** bumps the topology version, which
+//!   [`LiveHub::pop_candidate`] detects and turns into a rescan.
+//!
+//! Blocked producers and the merge park on one hub-wide condvar whose
+//! waits are all bounded (50 ms re-check loops). With per-shard locks a
+//! notification can in principle race a sleeper's predicate check; the
+//! bound turns that lost wakeup into at most 50 ms of extra latency,
+//! never a correctness problem — the same "liveness backstop only"
+//! contract the waits documented before sharding.
 //!
 //! # Origins (multi-publisher namespacing)
 //!
 //! A hub can also act as the shared mirror of **several** remote
 //! publishers (`iprof attach <addr> <addr>...`, see
 //! [`crate::remote::fanin`]). Each publisher registers as an **origin**
-//! ([`LiveHub::register_origin`]) and gets its own translation table from
-//! *remote* stream ids to *shared* channel indices — two publishers that
-//! both call their first stream "0" can never alias onto one channel.
-//! Blocks are allocated in origin order at handshake time
-//! ([`LiveHub::ensure_origin_channels`]), so the shared index order is
-//! exactly the concatenation of the publishers' stream sets — which is
-//! what makes the fan-in merge byte-identical to a single local `--live`
-//! run over that concatenation. Late-registering remote streams append at
-//! the end of the shared space (same tie-break caveat as any
-//! late-registering local stream). Per-origin accounting
+//! ([`LiveHub::register_origin`]) and gets its own shard plus a
+//! translation table from *remote* stream ids to *shared* channel
+//! indices — two publishers that both call their first stream "0" can
+//! never alias onto one channel. Blocks are allocated in origin order at
+//! handshake time ([`LiveHub::ensure_origin_channels`]), so the shared
+//! index order is exactly the concatenation of the publishers' stream
+//! sets — which is what makes the fan-in merge byte-identical to a
+//! single local `--live` run over that concatenation. Late-registering
+//! remote streams append at the end of the shared space (same tie-break
+//! caveat as any late-registering local stream). Per-origin accounting
 //! ([`LiveHub::origin_stats`]) keeps publisher-side drop totals separate
 //! and **saturating** — a hostile or wrapped counter can never roll a
 //! drop total back to "lossless".
@@ -43,8 +70,10 @@
 use crate::analysis::msg::EventMsg;
 use crate::tracer::btf::{registry_classes, DecodedClass};
 use crate::tracer::encoder::decode_payload;
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
 
 /// One entry in a channel queue: arrival sequence (merge tie-break),
@@ -56,14 +85,14 @@ pub(super) struct Entry {
 }
 
 /// Per-stream channel state.
-pub(super) struct Channel {
-    pub(super) queue: VecDeque<Entry>,
+struct Channel {
+    queue: VecDeque<Entry>,
     /// Arrival counter (monotone per channel).
     next_seq: u64,
     /// Lower bound on the timestamp of every future message.
-    pub(super) watermark: u64,
+    watermark: u64,
     /// No further messages will ever arrive.
-    pub(super) closed: bool,
+    closed: bool,
     /// Messages accepted.
     received: u64,
     /// Messages dropped because the queue was full.
@@ -86,12 +115,12 @@ impl Channel {
     }
 }
 
-/// One registered remote publisher whose streams are namespaced into
-/// this hub's shared channel index space (see module docs § Origins).
-struct OriginState {
+/// Bookkeeping for the remote publisher whose streams live in one origin
+/// shard (see module docs § Origins).
+struct OriginBook {
     /// Display label (usually the publisher's hostname).
     label: String,
-    /// Remote stream index → shared channel index.
+    /// Remote stream index → shared (global) channel index.
     map: Vec<usize>,
     /// Latest cumulative publisher-side drop count per remote stream
     /// (monotone: a stale or rewound wire value never lowers it).
@@ -104,6 +133,13 @@ struct OriginState {
     eos: Option<(u64, u64)>,
     /// All of this origin's channels have been closed.
     closed: bool,
+    /// Negotiated THRL protocol version for this origin's connection
+    /// (0 until the handshake reports one). v3 connections may carry
+    /// batched events; v2 connections fall back to per-event frames.
+    wire_version: u32,
+    /// `EventBatch` frames decoded from this origin (0 on a v2
+    /// connection — the batched-vs-fallback telltale). Saturating.
+    batches: u64,
 }
 
 /// Per-origin accounting snapshot (see [`LiveHub::origin_stats`]).
@@ -134,44 +170,86 @@ pub struct OriginStats {
     pub eos: Option<(u64, u64)>,
     /// Every channel of this origin has closed.
     pub closed: bool,
+    /// Negotiated THRL protocol version (0 = not yet reported). A v3
+    /// publisher streams batched; a v2 one fell back to per-event
+    /// frames — `iprof attach` surfaces this per publisher.
+    pub wire_version: u32,
+    /// `EventBatch` frames decoded from this origin (0 under the v2
+    /// per-event fallback). Saturating.
+    pub batches: u64,
 }
 
-pub(super) struct HubState {
-    pub(super) channels: Vec<Channel>,
-    /// Registered remote publishers (empty for purely local hubs).
-    origins: Vec<OriginState>,
-    /// Set by [`LiveHub::close_all`]: no new channels will appear.
-    pub(super) sealed: bool,
+/// One shard: a run of channels under their own lock. Shard 0 holds the
+/// hub's local streams; every origin gets its own shard.
+struct Shard {
+    state: Mutex<ShardState>,
 }
 
-impl HubState {
-    /// THE release predicate of the live merge: a candidate at timestamp
-    /// `ts` may be released iff every *empty* channel has closed or
-    /// watermarked **strictly** past it (a watermark of exactly `ts`
+impl Shard {
+    fn new(origin: Option<OriginBook>) -> Arc<Shard> {
+        Arc::new(Shard {
+            state: Mutex::new(ShardState { channels: Vec::new(), global_ids: Vec::new(), origin }),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+struct ShardState {
+    channels: Vec<Channel>,
+    /// Shard-local channel index → global channel index.
+    global_ids: Vec<usize>,
+    /// `Some` for origin shards, `None` for shard 0 (local streams).
+    origin: Option<OriginBook>,
+}
+
+/// The hub's channel directory: which shard owns which global channel.
+/// Grows under the write lock only; every grower bumps
+/// [`LiveHub::topo_version`] so snapshot consumers can detect it.
+struct Topology {
+    /// Global channel index → (shard index, shard-local index).
+    dir: Vec<(usize, usize)>,
+    /// Shard 0 = local streams; shard `1 + i` = origin `i`.
+    shards: Vec<Arc<Shard>>,
+    /// Set by [`LiveHub::close_all`]: no new channels will appear and
+    /// the merge, once drained, stays terminated.
+    sealed: bool,
+}
+
+/// The merge's per-round snapshot: best head candidate, whether it is
+/// releasable, and whether the hub has fully terminated. Built by
+/// [`LiveHub::merge_view`], consumed by [`LiveHub::pop_candidate`].
+pub(super) struct MergeView {
+    /// Topology version the snapshot was taken under.
+    version: u64,
+    /// Minimum head entry by `(ts, global index, seq)`, if any queue is
+    /// non-empty.
+    best: Option<BestHead>,
+    /// THE release predicate of the live merge: the candidate may be
+    /// released iff every *empty, open* channel has watermarked
+    /// **strictly** past its timestamp (a watermark of exactly `ts`
     /// still admits a future equal-timestamp message that may sort
-    /// earlier by stream index). [`super::source::LiveSource`] releases
-    /// through this, and [`LiveHub::feed_remote`] waits through it — one
-    /// definition, so the strict `>` byte-identity rule cannot drift
-    /// between the two.
-    pub(super) fn releasable(&self, ts: u64) -> bool {
-        self.channels
-            .iter()
-            .all(|ch| !ch.queue.is_empty() || ch.closed || ch.watermark > ts)
-    }
+    /// earlier by stream index).
+    pub(super) releasable: bool,
+    /// Sealed, every channel closed, every queue drained: clean end.
+    pub(super) finished: bool,
+}
 
-    /// Is at least one queued message releasable right now? (The head
-    /// with the minimum timestamp is releasable iff any is.) Used by
-    /// [`LiveHub::feed_remote`] to wait for queue space only when the
-    /// merge is provably able to make progress.
-    pub(super) fn has_releasable(&self) -> bool {
-        let mut min_ts: Option<u64> = None;
-        for ch in &self.channels {
-            if let Some(e) = ch.queue.front() {
-                min_ts = Some(min_ts.map_or(e.msg.ts, |b| b.min(e.msg.ts)));
-            }
-        }
-        min_ts.map(|ts| self.releasable(ts)).unwrap_or(false)
+impl MergeView {
+    /// Is there any queued candidate at all?
+    pub(super) fn has_candidate(&self) -> bool {
+        self.best.is_some()
     }
+}
+
+struct BestHead {
+    ts: u64,
+    global: usize,
+    seq: u64,
+    shard: usize,
+    local: usize,
 }
 
 /// Cursor a remote forwarder keeps between [`LiveHub::next_forward_batch`]
@@ -181,7 +259,7 @@ impl HubState {
 pub struct ForwardCursor {
     /// Channel count already announced.
     announced: usize,
-    /// Per-channel last-forwarded state.
+    /// Per-channel last-forwarded state, indexed by global channel.
     per: Vec<ChannelCursor>,
 }
 
@@ -271,7 +349,24 @@ pub struct LiveStats {
 /// assert_eq!(merged, vec![42]);
 /// ```
 pub struct LiveHub {
-    pub(super) inner: Mutex<HubState>,
+    /// Channel directory + shards. Read-locked on every data-path
+    /// operation (shard routing), write-locked only to grow or seal.
+    topo: RwLock<Topology>,
+    /// Bumped on every topology growth (new channel or shard), so
+    /// snapshot consumers ([`LiveHub::pop_candidate`]) can detect a
+    /// directory that changed under their scan and rescan instead.
+    topo_version: AtomicU64,
+    /// Total queued entries across all shards ([`LiveHub::feed_remote`]'s
+    /// soft cap reads this without touching any shard lock).
+    queued: AtomicUsize,
+    /// Total channels across all shards (same purpose).
+    nchannels: AtomicUsize,
+    /// Parking lot for blocked producers and the merge. The condvar
+    /// deliberately pairs with this otherwise-empty mutex — not with any
+    /// shard lock — so notifiers never need a shard lock to wake
+    /// sleepers; all waits are 50 ms-bounded re-check loops (see module
+    /// docs § Sharding).
+    gate: Mutex<()>,
     pub(super) progress: Condvar,
     /// Per-channel queue bound, in messages.
     depth: usize,
@@ -302,17 +397,39 @@ impl LiveHub {
     /// live mode runs with `retain = false` and O(streams × depth) memory.
     pub fn new(hostname: &str, depth: usize, retain: bool) -> Arc<LiveHub> {
         Arc::new(LiveHub {
-            inner: Mutex::new(HubState {
-                channels: Vec::new(),
-                origins: Vec::new(),
+            topo: RwLock::new(Topology {
+                dir: Vec::new(),
+                shards: vec![Shard::new(None)],
                 sealed: false,
             }),
+            topo_version: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            nchannels: AtomicUsize::new(0),
+            gate: Mutex::new(()),
             progress: Condvar::new(),
             depth: depth.max(1),
             retain,
             classes: registry_classes(),
             hostname: Arc::from(hostname),
         })
+    }
+
+    fn topo_read(&self) -> std::sync::RwLockReadGuard<'_, Topology> {
+        self.topo.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn topo_write(&self) -> std::sync::RwLockWriteGuard<'_, Topology> {
+        self.topo.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Park for one bounded re-check interval (see module docs: the
+    /// timeout is a liveness backstop only, never a correctness lever).
+    pub(super) fn wait_progress(&self) {
+        let guard = self.gate.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = self
+            .progress
+            .wait_timeout(guard, Duration::from_millis(50))
+            .unwrap_or_else(|p| p.into_inner());
     }
 
     /// Per-stream channel bound, in messages.
@@ -343,32 +460,53 @@ impl LiveHub {
     /// Make sure channels `0..n` exist. Channel index i is the session's
     /// stream index i (registration order), which is also the stream's
     /// index in a post-mortem `collect` — the merge tie-break relies on
-    /// this equality for byte-identical ordering.
+    /// this equality for byte-identical ordering. Local channels live in
+    /// shard 0.
     pub fn ensure_channels(&self, n: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        if st.channels.len() < n {
-            while st.channels.len() < n {
-                st.channels.push(Channel::new());
-            }
-            self.progress.notify_all();
+        let mut topo = self.topo_write();
+        if topo.dir.len() >= n {
+            return;
         }
+        let shard = topo.shards[0].clone();
+        let mut st = shard.lock();
+        while topo.dir.len() < n {
+            let global = topo.dir.len();
+            topo.dir.push((0, st.channels.len()));
+            st.channels.push(Channel::new());
+            st.global_ids.push(global);
+        }
+        self.nchannels.store(topo.dir.len(), Ordering::Relaxed);
+        self.topo_version.fetch_add(1, Ordering::Release);
+        drop(st);
+        drop(topo);
+        self.progress.notify_all();
     }
 
     /// Register a remote publisher as an **origin** of this hub and
     /// return its origin id. Origins namespace remote stream ids: each
-    /// origin's streams map to their own shared channels, so identical
-    /// per-publisher stream ids can never alias (see module docs).
+    /// origin gets its own shard, so identical per-publisher stream ids
+    /// can never alias and per-origin readers never contend on one lock
+    /// (see module docs).
     pub fn register_origin(&self, label: &str) -> usize {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.origins.push(OriginState {
+        let mut topo = self.topo_write();
+        topo.shards.push(Shard::new(Some(OriginBook {
             label: label.to_string(),
             map: Vec::new(),
             remote_drops: Vec::new(),
             resume_gaps: 0,
             eos: None,
             closed: false,
-        });
-        st.origins.len() - 1
+            wire_version: 0,
+            batches: 0,
+        })));
+        self.topo_version.fetch_add(1, Ordering::Release);
+        topo.shards.len() - 2
+    }
+
+    /// `origin`'s shard (origin `i` owns shard `i + 1`; shard 0 is the
+    /// local-stream shard).
+    fn origin_shard(topo: &Topology, origin: usize) -> &Arc<Shard> {
+        &topo.shards[origin + 1]
     }
 
     /// Extend `origin`'s map so remote streams `0..n` all have shared
@@ -376,50 +514,83 @@ impl LiveHub {
     /// called in origin order at handshake time this lays the origins
     /// out as contiguous, concatenated blocks.
     pub fn ensure_origin_channels(&self, origin: usize, n: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        if st.origins[origin].map.len() < n {
-            while st.origins[origin].map.len() < n {
-                let shared = st.channels.len();
-                st.channels.push(Channel::new());
-                st.origins[origin].map.push(shared);
-            }
-            self.progress.notify_all();
+        let mut topo = self.topo_write();
+        let si = origin + 1;
+        let shard = topo.shards[si].clone();
+        let mut st = shard.lock();
+        let book = st.origin.as_ref().expect("origin shard");
+        if book.map.len() >= n {
+            return;
         }
+        while st.origin.as_ref().expect("origin shard").map.len() < n {
+            let global = topo.dir.len();
+            topo.dir.push((si, st.channels.len()));
+            st.channels.push(Channel::new());
+            st.global_ids.push(global);
+            st.origin.as_mut().expect("origin shard").map.push(global);
+        }
+        self.nchannels.store(topo.dir.len(), Ordering::Relaxed);
+        self.topo_version.fetch_add(1, Ordering::Release);
+        drop(st);
+        drop(topo);
+        self.progress.notify_all();
     }
 
     /// Translate `origin`'s remote stream index into its shared channel
     /// index, allocating the mapping (and channel) if it is new.
     pub fn origin_channel(&self, origin: usize, remote: usize) -> usize {
         self.ensure_origin_channels(origin, remote + 1);
-        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.origins[origin].map[remote]
+        let topo = self.topo_read();
+        let st = Self::origin_shard(&topo, origin).lock();
+        st.origin.as_ref().expect("origin shard").map[remote]
     }
 
     /// Snapshot of `origin`'s remote→shared channel map (readers cache
     /// this so the hot event path needs no extra hub lock).
     pub fn origin_map(&self, origin: usize) -> Vec<usize> {
-        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.origins[origin].map.clone()
+        let topo = self.topo_read();
+        let st = Self::origin_shard(&topo, origin).lock();
+        st.origin.as_ref().expect("origin shard").map.clone()
+    }
+
+    /// Run `f` over `origin`'s bookkeeping under its shard lock.
+    fn with_origin_book<T>(&self, origin: usize, f: impl FnOnce(&mut OriginBook) -> T) -> T {
+        let topo = self.topo_read();
+        let mut st = Self::origin_shard(&topo, origin).lock();
+        f(st.origin.as_mut().expect("origin shard"))
     }
 
     /// Record a publisher-side cumulative drop count for `origin`'s
     /// remote stream. Monotone per stream (a stale or rewound wire value
     /// never lowers it); totals aggregate saturating, never wrapping.
     pub fn record_origin_drops(&self, origin: usize, remote: usize, cumulative: u64) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let o = &mut st.origins[origin];
-        if o.remote_drops.len() <= remote {
-            o.remote_drops.resize(remote + 1, 0);
-        }
-        if cumulative > o.remote_drops[remote] {
-            o.remote_drops[remote] = cumulative;
-        }
+        self.with_origin_book(origin, |book| {
+            if book.remote_drops.len() <= remote {
+                book.remote_drops.resize(remote + 1, 0);
+            }
+            if cumulative > book.remote_drops[remote] {
+                book.remote_drops[remote] = cumulative;
+            }
+        });
     }
 
     /// Record `origin`'s publisher-side Eos totals `(received, dropped)`.
     pub fn record_origin_eos(&self, origin: usize, received: u64, dropped: u64) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.origins[origin].eos = Some((received, dropped));
+        self.with_origin_book(origin, |book| book.eos = Some((received, dropped)));
+    }
+
+    /// Record the THRL protocol version negotiated with `origin`'s
+    /// publisher (from the connection preamble). Reported per publisher
+    /// by `iprof attach` so operators can see who fell back to the v2
+    /// per-event wire.
+    pub fn record_origin_wire(&self, origin: usize, version: u32) {
+        self.with_origin_book(origin, |book| book.wire_version = version);
+    }
+
+    /// Count `n` decoded `EventBatch` frames against `origin`.
+    /// Saturating, like every other origin counter.
+    pub fn record_origin_batches(&self, origin: usize, n: u64) {
+        self.with_origin_book(origin, |book| book.batches = book.batches.saturating_add(n));
     }
 
     /// Book `missed` events of `origin`'s remote stream as lost to a
@@ -431,9 +602,9 @@ impl LiveHub {
     /// good. The remote stream index is recorded for attribution only;
     /// no channel state changes (the stream keeps flowing past the gap).
     pub fn record_origin_gap(&self, origin: usize, _remote: usize, missed: u64) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let o = &mut st.origins[origin];
-        o.resume_gaps = o.resume_gaps.saturating_add(missed);
+        self.with_origin_book(origin, |book| {
+            book.resume_gaps = book.resume_gaps.saturating_add(missed);
+        });
     }
 
     /// Re-admit `origin` after a successful session resume: clears the
@@ -447,16 +618,21 @@ impl LiveHub {
     /// re-reports any genuine closes, which arrive immediately after the
     /// replay). No-op once the hub is sealed — the merge may already
     /// have terminated, and a terminated merge must stay terminated.
+    /// (The seal check and the shard mutation happen under the topology
+    /// read lock, which [`LiveHub::close_all`] excludes with its write
+    /// lock — reopen-vs-seal can never interleave.)
     pub fn reopen_origin(&self, origin: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        if st.sealed {
+        let topo = self.topo_read();
+        if topo.sealed {
             return;
         }
-        let mapped = st.origins[origin].map.clone();
-        for idx in mapped {
-            st.channels[idx].closed = false;
+        let mut st = Self::origin_shard(&topo, origin).lock();
+        for ch in st.channels.iter_mut() {
+            ch.closed = false;
         }
-        st.origins[origin].closed = false;
+        st.origin.as_mut().expect("origin shard").closed = false;
+        drop(st);
+        drop(topo);
         self.progress.notify_all();
     }
 
@@ -465,37 +641,42 @@ impl LiveHub {
     /// union, so the fan-in merge degrades to a partial-but-correct
     /// analysis instead of stalling or tearing the session down.
     pub fn close_origin(&self, origin: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let mapped = st.origins[origin].map.clone();
-        for idx in mapped {
-            st.channels[idx].closed = true;
+        let topo = self.topo_read();
+        let mut st = Self::origin_shard(&topo, origin).lock();
+        for ch in st.channels.iter_mut() {
+            ch.closed = true;
         }
-        st.origins[origin].closed = true;
+        st.origin.as_mut().expect("origin shard").closed = true;
+        drop(st);
+        drop(topo);
         self.progress.notify_all();
     }
 
     /// Per-origin accounting, in registration order (empty for purely
     /// local hubs). All sums saturate.
     pub fn origin_stats(&self) -> Vec<OriginStats> {
-        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.origins
+        let topo = self.topo_read();
+        topo.shards[1..]
             .iter()
-            .map(|o| {
+            .map(|shard| {
+                let st = shard.lock();
+                let book = st.origin.as_ref().expect("origin shard");
                 let mut s = OriginStats {
-                    label: o.label.clone(),
-                    channels: o.map.len(),
-                    resume_gaps: o.resume_gaps,
-                    eos: o.eos,
-                    closed: o.closed,
+                    label: book.label.clone(),
+                    channels: book.map.len(),
+                    resume_gaps: book.resume_gaps,
+                    eos: book.eos,
+                    closed: book.closed,
+                    wire_version: book.wire_version,
+                    batches: book.batches,
                     ..Default::default()
                 };
-                for &idx in &o.map {
-                    let ch = &st.channels[idx];
+                for ch in &st.channels {
                     s.received = s.received.saturating_add(ch.received);
                     s.dropped = s.dropped.saturating_add(ch.dropped);
                     s.beacons = s.beacons.saturating_add(ch.beacons);
                 }
-                for &d in &o.remote_drops {
+                for &d in &book.remote_drops {
                     s.remote_dropped = s.remote_dropped.saturating_add(d);
                 }
                 s
@@ -511,27 +692,34 @@ impl LiveHub {
         if batch.is_empty() {
             return 0;
         }
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         let depth = self.depth;
-        let ch = &mut st.channels[idx];
-        let mut dropped = 0;
-        let now = Instant::now();
-        for msg in batch {
-            // the watermark advances with every delivered event: per-stream
-            // timestamps are non-decreasing, so nothing later can undercut it
-            ch.watermark = ch.watermark.max(msg.ts);
-            if ch.queue.len() >= depth {
-                dropped += 1;
-                continue;
+        let mut accepted = 0usize;
+        let mut dropped = 0u64;
+        {
+            let topo = self.topo_read();
+            let (si, li) = topo.dir[idx];
+            let mut st = topo.shards[si].lock();
+            let ch = &mut st.channels[li];
+            let now = Instant::now();
+            for msg in batch {
+                // the watermark advances with every delivered event: per-stream
+                // timestamps are non-decreasing, so nothing later can undercut it
+                ch.watermark = ch.watermark.max(msg.ts);
+                if ch.queue.len() >= depth {
+                    dropped += 1;
+                    continue;
+                }
+                let seq = ch.next_seq;
+                ch.next_seq += 1;
+                ch.received += 1;
+                accepted += 1;
+                ch.queue.push_back(Entry { seq, msg, pushed: now });
             }
-            let seq = ch.next_seq;
-            ch.next_seq += 1;
-            ch.received += 1;
-            ch.queue.push_back(Entry { seq, msg, pushed: now });
+            // saturating: a pathological counter must stick at max, never
+            // wrap back toward "lossless"
+            ch.dropped = ch.dropped.saturating_add(dropped);
         }
-        // saturating: a pathological counter must stick at max, never
-        // wrap back toward "lossless"
-        ch.dropped = ch.dropped.saturating_add(dropped);
+        self.queued.fetch_add(accepted, Ordering::Relaxed);
         self.progress.notify_all();
         dropped
     }
@@ -541,31 +729,52 @@ impl LiveHub {
     /// bounded channels is lossless. The tracing consumer must never use
     /// this — it uses [`LiveHub::push_batch`].
     pub fn feed_blocking(&self, idx: usize, batch: Vec<EventMsg>) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         for msg in batch {
-            while st.channels[idx].queue.len() >= self.depth {
-                st = self.progress.wait(st).unwrap_or_else(|p| p.into_inner());
+            let mut msg = Some(msg);
+            loop {
+                {
+                    let topo = self.topo_read();
+                    let (si, li) = topo.dir[idx];
+                    let mut st = topo.shards[si].lock();
+                    let ch = &mut st.channels[li];
+                    if ch.queue.len() < self.depth {
+                        let msg = msg.take().expect("unpushed message");
+                        ch.watermark = ch.watermark.max(msg.ts);
+                        let seq = ch.next_seq;
+                        ch.next_seq += 1;
+                        ch.received += 1;
+                        // stamp AFTER any wait: residence latency must not
+                        // include the producer's own blocked time
+                        ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+                    }
+                }
+                if msg.is_none() {
+                    self.queued.fetch_add(1, Ordering::Relaxed);
+                    self.progress.notify_all();
+                    break;
+                }
+                self.wait_progress();
             }
-            let ch = &mut st.channels[idx];
-            ch.watermark = ch.watermark.max(msg.ts);
-            let seq = ch.next_seq;
-            ch.next_seq += 1;
-            ch.received += 1;
-            // stamp AFTER any wait: residence latency must not include
-            // the producer's own blocked time
-            ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
-            self.progress.notify_all();
         }
     }
 
     /// Publish a beacon on channel `idx`: every future message on this
     /// channel will have `ts >= watermark`. Watermarks only move forward.
     pub fn beacon(&self, idx: usize, watermark: u64) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let ch = &mut st.channels[idx];
-        ch.beacons += 1;
-        if watermark > ch.watermark {
-            ch.watermark = watermark;
+        let advanced = {
+            let topo = self.topo_read();
+            let (si, li) = topo.dir[idx];
+            let mut st = topo.shards[si].lock();
+            let ch = &mut st.channels[li];
+            ch.beacons += 1;
+            if watermark > ch.watermark {
+                ch.watermark = watermark;
+                true
+            } else {
+                false
+            }
+        };
+        if advanced {
             self.progress.notify_all();
         }
     }
@@ -573,21 +782,34 @@ impl LiveHub {
     /// Close channel `idx`: no further messages will arrive (equivalent
     /// to a watermark of +infinity once its queue drains).
     pub fn close(&self, idx: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        if !st.channels[idx].closed {
-            st.channels[idx].closed = true;
+        let newly = {
+            let topo = self.topo_read();
+            let (si, li) = topo.dir[idx];
+            let mut st = topo.shards[si].lock();
+            let ch = &mut st.channels[li];
+            let newly = !ch.closed;
+            ch.closed = true;
+            newly
+        };
+        if newly {
             self.progress.notify_all();
         }
     }
 
     /// Close every channel and seal the hub (no new channels): the merge
     /// drains what is queued and then terminates. Called by the consumer
-    /// after its final drain.
+    /// after its final drain. Holds the topology write lock across the
+    /// whole sweep so it cannot interleave with [`LiveHub::reopen_origin`].
     pub fn close_all(&self) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        st.sealed = true;
-        for ch in st.channels.iter_mut() {
-            ch.closed = true;
+        {
+            let mut topo = self.topo_write();
+            topo.sealed = true;
+            for shard in &topo.shards {
+                let mut st = shard.lock();
+                for ch in st.channels.iter_mut() {
+                    ch.closed = true;
+                }
+            }
         }
         self.progress.notify_all();
     }
@@ -595,6 +817,94 @@ impl LiveHub {
     /// Hostname this hub stamps on decoded messages.
     pub fn hostname(&self) -> &str {
         &self.hostname
+    }
+
+    /// Take the merge's per-round snapshot: one short lock acquisition
+    /// per shard, no global lock. See [`MergeView`] and module docs
+    /// § Sharding for why a snapshot plus [`LiveHub::pop_candidate`]'s
+    /// version re-validation is as good as the old hub-wide mutex.
+    pub(super) fn merge_view(&self) -> MergeView {
+        let topo = self.topo_read();
+        // safe to read after taking the read lock: bumps happen only
+        // under the write lock, which we now exclude
+        let version = self.topo_version.load(Ordering::Acquire);
+        let mut best: Option<BestHead> = None;
+        let mut gate = u64::MAX;
+        let mut all_closed_drained = true;
+        for (si, shard) in topo.shards.iter().enumerate() {
+            let st = shard.lock();
+            for (li, ch) in st.channels.iter().enumerate() {
+                if !(ch.closed && ch.queue.is_empty()) {
+                    all_closed_drained = false;
+                }
+                match ch.queue.front() {
+                    Some(e) => {
+                        let global = st.global_ids[li];
+                        let better = match &best {
+                            None => true,
+                            Some(b) => (e.msg.ts, global, e.seq) < (b.ts, b.global, b.seq),
+                        };
+                        if better {
+                            best = Some(BestHead {
+                                ts: e.msg.ts,
+                                global,
+                                seq: e.seq,
+                                shard: si,
+                                local: li,
+                            });
+                        }
+                    }
+                    None => {
+                        if !ch.closed {
+                            gate = gate.min(ch.watermark);
+                        }
+                    }
+                }
+            }
+        }
+        // strict `>`: the candidate releases only if every empty open
+        // channel has watermarked strictly past it
+        let releasable = best.as_ref().map_or(false, |b| b.ts < gate);
+        let finished = topo.sealed && all_closed_drained && best.is_none();
+        MergeView { version, best, releasable, finished }
+    }
+
+    /// Pop the snapshot's best candidate, or `None` if the topology
+    /// changed since [`LiveHub::merge_view`] (a new channel could have
+    /// invalidated the release decision — rescan). The head entry itself
+    /// cannot have changed: the merge is the sole consumer and pushes
+    /// only append.
+    pub(super) fn pop_candidate(&self, view: &MergeView) -> Option<Entry> {
+        let best = view.best.as_ref()?;
+        let topo = self.topo_read();
+        if self.topo_version.load(Ordering::Acquire) != view.version {
+            return None;
+        }
+        let mut st = topo.shards[best.shard].lock();
+        let entry = st.channels[best.local]
+            .queue
+            .pop_front()
+            .expect("merge candidate vanished (sole-consumer contract)");
+        self.queued.fetch_sub(1, Ordering::Relaxed);
+        Some(entry)
+    }
+
+    /// Is at least one queued message releasable right now? (The head
+    /// with the minimum timestamp is releasable iff any is.) Used by
+    /// [`LiveHub::feed_remote`] to wait for queue space only when the
+    /// merge is provably able to make progress.
+    fn has_releasable(&self) -> bool {
+        self.merge_view().releasable
+    }
+
+    /// Sealed, all closed, all drained?
+    fn is_finished(&self) -> bool {
+        let topo = self.topo_read();
+        topo.sealed
+            && topo.shards.iter().all(|shard| {
+                let st = shard.lock();
+                st.channels.iter().all(|ch| ch.closed && ch.queue.is_empty())
+            })
     }
 
     /// Block until there is forwardable progress beyond `cursor`, pop it
@@ -609,23 +919,15 @@ impl LiveHub {
     /// closes are reported as deltas against `cursor`, so relaying every
     /// batch in order reproduces the hub state machine exactly.
     pub fn next_forward_batch(&self, cursor: &mut ForwardCursor) -> Option<ForwardBatch> {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            let batch = Self::build_forward_batch(&mut st, cursor);
-            if !batch.is_empty() {
-                // replay producers may be parked waiting for queue space
-                self.progress.notify_all();
+            if let Some(batch) = self.try_forward_batch(cursor) {
                 return Some(batch);
             }
-            if st.sealed && st.channels.iter().all(|ch| ch.closed && ch.queue.is_empty()) {
+            if self.is_finished() {
                 return None;
             }
             // Liveness backstop only, like the merge's own wait.
-            let (guard, _) = self
-                .progress
-                .wait_timeout(st, Duration::from_millis(50))
-                .unwrap_or_else(|p| p.into_inner());
-            st = guard;
+            self.wait_progress();
         }
     }
 
@@ -636,11 +938,11 @@ impl LiveHub {
     /// hub into its replay ring, so a mid-run outage costs ring budget,
     /// not events.
     pub fn try_forward_batch(&self, cursor: &mut ForwardCursor) -> Option<ForwardBatch> {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let batch = Self::build_forward_batch(&mut st, cursor);
+        let batch = self.build_forward_batch(cursor);
         if batch.is_empty() {
             None
         } else {
+            // replay producers may be parked waiting for queue space
             self.progress.notify_all();
             Some(batch)
         }
@@ -648,34 +950,48 @@ impl LiveHub {
 
     /// The one forward-batch builder both flavors share: everything new
     /// past `cursor` is popped (events) or delta-reported (growth,
-    /// watermarks, drops, closes).
-    fn build_forward_batch(st: &mut HubState, cursor: &mut ForwardCursor) -> ForwardBatch {
+    /// watermarks, drops, closes). Takes every shard lock for the walk
+    /// (ascending order, one acquisition each) so the batch is a
+    /// coherent cross-shard snapshot in **global channel order** —
+    /// identical output to the pre-sharding single-lock builder. The
+    /// forwarder is one thread and per-origin readers still only ever
+    /// contend for their own shard, briefly.
+    fn build_forward_batch(&self, cursor: &mut ForwardCursor) -> ForwardBatch {
+        let topo = self.topo_read();
+        let mut guards: Vec<MutexGuard<'_, ShardState>> =
+            topo.shards.iter().map(|s| s.lock()).collect();
+        let n = topo.dir.len();
         let mut batch = ForwardBatch::default();
-        if st.channels.len() > cursor.per.len() {
-            cursor.per.resize(st.channels.len(), ChannelCursor::default());
+        if n > cursor.per.len() {
+            cursor.per.resize(n, ChannelCursor::default());
         }
-        if st.channels.len() > cursor.announced {
-            cursor.announced = st.channels.len();
-            batch.grown_to = Some(cursor.announced);
+        if n > cursor.announced {
+            cursor.announced = n;
+            batch.grown_to = Some(n);
         }
-        for (i, ch) in st.channels.iter_mut().enumerate() {
-            let cur = &mut cursor.per[i];
+        let mut popped = 0usize;
+        for global in 0..n {
+            let (si, li) = topo.dir[global];
+            let ch = &mut guards[si].channels[li];
+            let cur = &mut cursor.per[global];
             while let Some(e) = ch.queue.pop_front() {
-                batch.events.push((i, e.msg));
+                batch.events.push((global, e.msg));
+                popped += 1;
             }
             if ch.watermark > cur.watermark {
                 cur.watermark = ch.watermark;
-                batch.beacons.push((i, ch.watermark));
+                batch.beacons.push((global, ch.watermark));
             }
             if ch.dropped > cur.dropped {
                 cur.dropped = ch.dropped;
-                batch.drops.push((i, ch.dropped));
+                batch.drops.push((global, ch.dropped));
             }
             if ch.closed && !cur.closed {
                 cur.closed = true;
-                batch.closed.push(i);
+                batch.closed.push(global);
             }
         }
+        self.queued.fetch_sub(popped, Ordering::Relaxed);
         batch
     }
 
@@ -692,36 +1008,151 @@ impl LiveHub {
     /// could starve the very beacon frame (later in the byte stream) the
     /// merge needs to drain it; when nothing is releasable the message
     /// is admitted immediately and memory grows transiently, bounded by
-    /// one publisher watermark round, not by the trace.
+    /// one publisher watermark round, not by the trace. The cap check
+    /// reads two atomics — the fast path under cap never scans the hub.
     pub fn feed_remote(&self, idx: usize, msg: EventMsg, depth: usize) {
-        let mut st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut msg = Some(msg);
         loop {
-            let total: usize = st.channels.iter().map(|c| c.queue.len()).sum();
-            let soft_cap = depth.max(1) * st.channels.len().max(1);
-            if total < soft_cap || !st.has_releasable() {
-                let ch = &mut st.channels[idx];
-                ch.watermark = ch.watermark.max(msg.ts);
-                let seq = ch.next_seq;
-                ch.next_seq += 1;
-                ch.received += 1;
-                ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+            let total = self.queued.load(Ordering::Relaxed);
+            let soft_cap = depth.max(1) * self.nchannels.load(Ordering::Relaxed).max(1);
+            if total < soft_cap || !self.has_releasable() {
+                let taken = msg.take().expect("unpushed message");
+                self.feed_now(idx, taken);
+                return;
+            }
+            self.wait_progress();
+        }
+    }
+
+    /// Batched [`LiveHub::feed_remote`]: one soft-cap check and one
+    /// shard-lock acquisition admit the whole batch — the subscriber
+    /// hot path for v3 `EventBatch` frames. The cap stays soft exactly
+    /// as for single feeds (a batch may overshoot it by its own length,
+    /// bounded by the wire's `MAX_BATCH_EVENTS`); accounting is per
+    /// *event*, so drop ledgers and stats cannot tell a batch from the
+    /// same events fed one by one.
+    pub fn feed_remote_batch(&self, idx: usize, batch: Vec<EventMsg>, depth: usize) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut batch = Some(batch);
+        loop {
+            let total = self.queued.load(Ordering::Relaxed);
+            let soft_cap = depth.max(1) * self.nchannels.load(Ordering::Relaxed).max(1);
+            if total < soft_cap || !self.has_releasable() {
+                let taken = batch.take().expect("unpushed batch");
+                let n = taken.len();
+                {
+                    let topo = self.topo_read();
+                    let (si, li) = topo.dir[idx];
+                    let mut st = topo.shards[si].lock();
+                    let ch = &mut st.channels[li];
+                    let now = Instant::now();
+                    for msg in taken {
+                        ch.watermark = ch.watermark.max(msg.ts);
+                        let seq = ch.next_seq;
+                        ch.next_seq += 1;
+                        ch.received += 1;
+                        ch.queue.push_back(Entry { seq, msg, pushed: now });
+                    }
+                }
+                self.queued.fetch_add(n, Ordering::Relaxed);
                 self.progress.notify_all();
                 return;
             }
-            st = self.progress.wait(st).unwrap_or_else(|p| p.into_inner());
+            self.wait_progress();
         }
+    }
+
+    /// The push half of [`LiveHub::feed_remote`], once admitted.
+    fn feed_now(&self, idx: usize, msg: EventMsg) {
+        {
+            let topo = self.topo_read();
+            let (si, li) = topo.dir[idx];
+            let mut st = topo.shards[si].lock();
+            let ch = &mut st.channels[li];
+            ch.watermark = ch.watermark.max(msg.ts);
+            let seq = ch.next_seq;
+            ch.next_seq += 1;
+            ch.received += 1;
+            ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+        }
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.progress.notify_all();
     }
 
     /// Aggregate transport statistics.
     pub fn stats(&self) -> LiveStats {
-        let st = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let mut s = LiveStats { channels: st.channels.len(), ..Default::default() };
-        for ch in &st.channels {
-            s.received += ch.received;
-            s.dropped += ch.dropped;
-            s.beacons += ch.beacons;
+        let topo = self.topo_read();
+        let mut s = LiveStats { channels: topo.dir.len(), ..Default::default() };
+        for shard in &topo.shards {
+            let st = shard.lock();
+            for ch in &st.channels {
+                s.received += ch.received;
+                s.dropped += ch.dropped;
+                s.beacons += ch.beacons;
+            }
         }
         s
+    }
+}
+
+#[cfg(test)]
+impl LiveHub {
+    /// Test peek: channel `idx`'s watermark.
+    pub(crate) fn probe_watermark(&self, idx: usize) -> u64 {
+        let topo = self.topo_read();
+        let (si, li) = topo.dir[idx];
+        let st = topo.shards[si].lock();
+        st.channels[li].watermark
+    }
+
+    /// Test peek: channel `idx`'s queued-message count.
+    pub(crate) fn probe_queue_len(&self, idx: usize) -> usize {
+        let topo = self.topo_read();
+        let (si, li) = topo.dir[idx];
+        let st = topo.shards[si].lock();
+        st.channels[li].queue.len()
+    }
+
+    /// Test peek: channel `idx`'s closed flag.
+    pub(crate) fn probe_closed(&self, idx: usize) -> bool {
+        let topo = self.topo_read();
+        let (si, li) = topo.dir[idx];
+        let st = topo.shards[si].lock();
+        st.channels[li].closed
+    }
+
+    /// Test peek: channel `idx`'s beacon count.
+    pub(crate) fn probe_beacons(&self, idx: usize) -> u64 {
+        let topo = self.topo_read();
+        let (si, li) = topo.dir[idx];
+        let st = topo.shards[si].lock();
+        st.channels[li].beacons
+    }
+
+    /// Test peek: `origin`'s latest cumulative drop counter for one
+    /// remote stream.
+    pub(crate) fn probe_remote_drops(&self, origin: usize, remote: usize) -> u64 {
+        let topo = self.topo_read();
+        let st = Self::origin_shard(&topo, origin).lock();
+        st.origin.as_ref().expect("origin shard").remote_drops[remote]
+    }
+
+    /// Test peek: the release predicate at `ts` (see module docs).
+    pub(crate) fn probe_releasable(&self, ts: u64) -> bool {
+        let topo = self.topo_read();
+        topo.shards.iter().all(|shard| {
+            let st = shard.lock();
+            st.channels
+                .iter()
+                .all(|ch| !ch.queue.is_empty() || ch.closed || ch.watermark > ts)
+        })
+    }
+
+    /// Test peek: does any queued candidate release right now?
+    pub(crate) fn probe_has_releasable(&self) -> bool {
+        self.has_releasable()
     }
 }
 
@@ -757,8 +1188,7 @@ mod tests {
         assert_eq!(s.received, 2);
         assert_eq!(s.dropped, 8);
         // the watermark still advanced past the dropped events
-        let st = hub.inner.lock().unwrap();
-        assert_eq!(st.channels[0].watermark, 9);
+        assert_eq!(hub.probe_watermark(0), 9);
     }
 
     #[test]
@@ -767,9 +1197,8 @@ mod tests {
         hub.ensure_channels(1);
         hub.beacon(0, 100);
         hub.beacon(0, 50); // stale beacon must not rewind
-        let st = hub.inner.lock().unwrap();
-        assert_eq!(st.channels[0].watermark, 100);
-        assert_eq!(st.channels[0].beacons, 2);
+        assert_eq!(hub.probe_watermark(0), 100);
+        assert_eq!(hub.probe_beacons(0), 2);
     }
 
     #[test]
@@ -805,9 +1234,46 @@ mod tests {
         for i in 0..50 {
             hub.feed_remote(0, msg(i, 0, 0), 4);
         }
-        let st = hub.inner.lock().unwrap();
-        assert_eq!(st.channels[0].queue.len(), 50, "lossless: nothing dropped");
-        assert!(!st.has_releasable(), "channel 1 still vetoes");
+        assert_eq!(hub.probe_queue_len(0), 50, "lossless: nothing dropped");
+        assert!(!hub.probe_has_releasable(), "channel 1 still vetoes");
+    }
+
+    #[test]
+    fn feed_remote_batch_matches_per_event_feeds() {
+        let hub = LiveHub::new("hubtest", 4, false);
+        let o = hub.register_origin("batched");
+        hub.ensure_origin_channels(o, 2);
+        // a batch overshooting the soft cap is still admitted whole when
+        // nothing is releasable (channel 1 vetoes), exactly like the
+        // per-event feed; counters count events, not batches
+        hub.feed_remote_batch(0, (0..20).map(|i| msg(i, 0, 0)).collect(), 4);
+        hub.feed_remote_batch(0, vec![], 4); // empty batch is a no-op
+        assert_eq!(hub.probe_queue_len(0), 20);
+        let stats = hub.origin_stats();
+        assert_eq!(stats[o].received, 20);
+        assert_eq!(stats[o].dropped, 0, "remote feeds are lossless");
+        assert_eq!(hub.probe_watermark(0), 19);
+        // seq/tie-break state matches per-event feeding: drain in order
+        hub.close_all();
+        let drained: Vec<u64> = crate::live::LiveSource::new(hub).map(|m| m.ts).collect();
+        assert_eq!(drained, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn origin_wire_version_and_batches_surface_in_stats() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let a = hub.register_origin("v3-node");
+        let b = hub.register_origin("v2-node");
+        assert_eq!(hub.origin_stats()[a].wire_version, 0, "unknown until handshake");
+        hub.record_origin_wire(a, 3);
+        hub.record_origin_wire(b, 2);
+        hub.record_origin_batches(a, 5);
+        hub.record_origin_batches(a, u64::MAX); // saturates, never wraps
+        let stats = hub.origin_stats();
+        assert_eq!(stats[a].wire_version, 3);
+        assert_eq!(stats[a].batches, u64::MAX);
+        assert_eq!(stats[b].wire_version, 2);
+        assert_eq!(stats[b].batches, 0, "v2 fallback never batches");
     }
 
     #[test]
@@ -844,8 +1310,7 @@ mod tests {
         assert_eq!(hub.origin_stats()[o].remote_dropped, u64::MAX);
         // cumulative counters are monotone: a rewound value is ignored
         hub.record_origin_drops(o, 1, 3);
-        let st = hub.inner.lock().unwrap();
-        assert_eq!(st.origins[o].remote_drops[1], 7);
+        assert_eq!(hub.probe_remote_drops(o, 1), 7);
     }
 
     #[test]
@@ -868,18 +1333,14 @@ mod tests {
         assert!(hub.origin_stats()[a].closed);
         hub.reopen_origin(a);
         assert!(!hub.origin_stats()[a].closed);
-        {
-            let st = hub.inner.lock().unwrap();
-            assert!(!st.channels[0].closed && !st.channels[1].closed);
-        }
+        assert!(!hub.probe_closed(0) && !hub.probe_closed(1));
         // a reopened channel accepts events again
         hub.feed_remote(0, msg(5, 0, 0), 8);
         assert_eq!(hub.origin_stats()[a].received, 1);
         // but a sealed hub stays terminated: reopen is a no-op
         hub.close_all();
         hub.reopen_origin(a);
-        let st = hub.inner.lock().unwrap();
-        assert!(st.channels[0].closed, "reopen after seal must not resurrect the merge");
+        assert!(hub.probe_closed(0), "reopen after seal must not resurrect the merge");
     }
 
     #[test]
@@ -914,9 +1375,27 @@ mod tests {
         let stats = hub.origin_stats();
         assert!(stats[a].closed);
         assert!(!stats[b].closed);
-        let st = hub.inner.lock().unwrap();
-        assert!(st.channels[0].closed && st.channels[1].closed);
-        assert!(!st.channels[2].closed, "origin b must keep flowing");
+        assert!(hub.probe_closed(0) && hub.probe_closed(1));
+        assert!(!hub.probe_closed(2), "origin b must keep flowing");
+    }
+
+    #[test]
+    fn merge_view_snapshot_survives_topology_growth() {
+        // pop_candidate must refuse a snapshot taken before a channel
+        // appeared: the newcomer could have vetoed the release decision
+        let hub = LiveHub::new("hubtest", 8, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, vec![msg(5, 0, 0)]);
+        hub.close(0);
+        let view = hub.merge_view();
+        assert!(view.has_candidate() && view.releasable);
+        hub.ensure_channels(2); // topology grows under the snapshot
+        assert!(hub.pop_candidate(&view).is_none(), "stale snapshot must rescan");
+        // a fresh snapshot sees the new empty channel veto (watermark 0)
+        let view = hub.merge_view();
+        assert!(view.has_candidate() && !view.releasable);
+        // the event is still there — nothing was lost to the refusal
+        assert_eq!(hub.probe_queue_len(0), 1);
     }
 
     #[test]

@@ -80,41 +80,32 @@ impl Iterator for LiveSource {
     /// Blocks until the next globally-ordered message is releasable, or
     /// returns `None` once the hub is sealed and fully drained.
     fn next(&mut self) -> Option<EventMsg> {
-        let mut st = self.hub.inner.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            // Head-of-queue candidate: min (ts, channel index, arrival seq).
-            let mut best: Option<(u64, usize, u64)> = None;
-            for (i, ch) in st.channels.iter().enumerate() {
-                if let Some(e) = ch.queue.front() {
-                    let key = (e.msg.ts, i, e.seq);
-                    best = Some(match best {
-                        Some(b) => b.min(key),
-                        None => key,
-                    });
+            // Per-round snapshot over the sharded hub: best head by
+            // (ts, channel index, arrival seq), release gate, termination.
+            // One short lock acquisition per shard, no global lock.
+            let view = self.hub.merge_view();
+            if view.has_candidate() {
+                if view.releasable {
+                    // pop re-validates the topology version: a channel
+                    // created since the scan could have vetoed the release,
+                    // so a stale snapshot rescans instead of popping
+                    if let Some(entry) = self.hub.pop_candidate(&view) {
+                        self.latency.record(entry.pushed.elapsed());
+                        // replay producers may be parked waiting for space
+                        self.hub.progress.notify_all();
+                        return Some(entry.msg);
+                    }
+                    continue;
                 }
-            }
-            if let Some((ts, idx, _)) = best {
-                // shared predicate (channel.rs): empty channels veto until
-                // their watermark moves STRICTLY past the candidate
-                if st.releasable(ts) {
-                    let entry = st.channels[idx].queue.pop_front().unwrap();
-                    self.latency.record(entry.pushed.elapsed());
-                    // replay producers may be parked waiting for queue space
-                    self.hub.progress.notify_all();
-                    return Some(entry.msg);
-                }
-            } else if st.sealed && st.channels.iter().all(|ch| ch.closed && ch.queue.is_empty()) {
+            } else if view.finished {
                 return None;
             }
             // Nothing releasable: park until a push/beacon/close moves the
             // world. The timeout is a liveness backstop only (a vanished
-            // producer); correctness never depends on it.
-            let (guard, _) = self
-                .hub
-                .progress
-                .wait_timeout(st, Duration::from_millis(50))
-                .unwrap_or_else(|p| p.into_inner());
-            st = guard;
+            // producer, or a wakeup racing the snapshot); correctness
+            // never depends on it.
+            self.hub.wait_progress();
         }
     }
 }
@@ -160,10 +151,7 @@ mod tests {
         hub.push_batch(0, vec![msg(100, 0, 0)]);
         // channel 1 quiet with watermark == candidate ts: must NOT release
         hub.beacon(1, 100);
-        {
-            let st = hub.inner.lock().unwrap();
-            assert!(!st.releasable(100), "watermark == ts must still veto release");
-        }
+        assert!(!hub.probe_releasable(100), "watermark == ts must still veto release");
         // a late equal-timestamp message on the quiet LOWER-indexed..
         // (here higher-indexed) stream arrives and must sort after;
         // then the strictly-greater beacon releases everything

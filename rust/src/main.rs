@@ -5,6 +5,7 @@
 //! iprof serve <bind-addr> [OPTIONS] -- <workload>    publish live channels
 //!              [--resume-buffer <bytes>]             (resumable session:
 //!              [--kill-after <bytes>]                 replay ring + epochs)
+//!              [--wire <2|3>]                        wire version (3: batched)
 //! iprof attach <addr> [<addr>...] [-a <list>]        remote live viewer:
 //!              [--refresh <ms>] [--reconnect <n>]    1 publisher, or N
 //!              [--backoff <ms>]                      merged as one fan-in;
@@ -125,6 +126,8 @@ struct Options {
     reconnect: Option<u32>,
     /// attach: base backoff before the first redial, in ms.
     backoff_ms: Option<u64>,
+    /// serve: THRL wire version (2 = per-event fallback, 3 = batched).
+    wire: Option<u32>,
 }
 
 /// Parse a byte count with an optional k/m/g suffix (powers of 1024):
@@ -161,6 +164,7 @@ fn parse_args(args: &[String]) -> Result<Options> {
         kill_after: None,
         reconnect: None,
         backoff_ms: None,
+        wire: None,
     };
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
@@ -241,6 +245,17 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 let v = it.next().context("--backoff needs a value (ms)")?;
                 o.backoff_ms = Some(v.parse().context("bad --backoff value")?);
             }
+            "--wire" => {
+                let v = it.next().context("--wire needs a version (2 or 3)")?;
+                let version: u32 = v.parse().context("bad --wire value")?;
+                if !thapi::remote::SUPPORTED_VERSIONS.contains(&version) {
+                    bail!(
+                        "--wire {version} unsupported (this build speaks {:?})",
+                        thapi::remote::SUPPORTED_VERSIONS
+                    );
+                }
+                o.wire = Some(version);
+            }
             "-a" | "--analysis" => {
                 let v = it.next().context("--analysis needs a value")?;
                 o.analyses = parse_analyses(v)?;
@@ -309,6 +324,10 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
       --kill-after <bytes>             serve: fault injection — kill the first
                                        subscriber connection after this many
                                        written bytes (reconnect testing)
+      --wire <2|3>                     serve: THRL wire version — 3 batches
+                                       events (EventBatch + vectored writes),
+                                       2 keeps the frozen per-event stream
+                                       for v2-only subscribers          [3]
       --reconnect <n>                  attach: redial a dropped resumable
                                        publisher up to n times per outage [0]
       --backoff <ms>                   attach: backoff before the first redial,
@@ -395,6 +414,7 @@ fn serve_main(args: &[String]) -> Result<()> {
 
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("cannot bind {addr}"))?;
+    let wire = o.wire.unwrap_or(thapi::remote::VERSION);
 
     let r = if let Some(resume_buffer) = o.resume_buffer {
         // Resumable session: poll for subscribers so the publisher can
@@ -426,8 +446,10 @@ fn serve_main(args: &[String]) -> Result<()> {
                 Err(e) => Err(e),
             }
         };
-        coordinator::run_serve_resumable(&node, w.as_ref(), &config, &live_cfg, accept, resume_buffer)
-            .context("publishing failed")?
+        coordinator::run_serve_resumable(
+            &node, w.as_ref(), &config, &live_cfg, accept, resume_buffer, wire,
+        )
+        .context("publishing failed")?
     } else {
         eprintln!(
             "iprof: serving {name} on {} — waiting for one subscriber (iprof attach)",
@@ -435,17 +457,18 @@ fn serve_main(args: &[String]) -> Result<()> {
         );
         let (conn, peer) = listener.accept().context("accept failed")?;
         eprintln!("iprof: subscriber {peer} connected, running {name} [{}]", w.backend());
-        coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn)
+        coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn, wire)
             .context("publishing failed")?
     };
 
     eprintln!(
-        "iprof: {name}: wall={:.3}s events={} relayed={} ({} frames, {}B) dropped={} \
-         (ring {} + channel {}) beacons={} connections={} replayed={} gaps={}",
+        "iprof: {name}: wall={:.3}s events={} relayed={} ({} frames, {} batches, {}B, wire v{wire}) \
+         dropped={} (ring {} + channel {}) beacons={} connections={} replayed={} gaps={}",
         r.wall.as_secs_f64(),
         r.stats.written,
         r.publish.events,
         r.publish.frames,
+        r.publish.batches,
         r.publish.bytes,
         r.total_dropped(),
         r.stats.dropped,
@@ -494,6 +517,9 @@ fn attach_main(args: &[String]) -> Result<()> {
     if o.resume_buffer.is_some() || o.kill_after.is_some() {
         bail!("--resume-buffer/--kill-after belong to the publisher: pass them to iprof serve");
     }
+    if o.wire.is_some() {
+        bail!("--wire belongs to the publisher: pass it to iprof serve (the subscriber learns the version from the preamble)");
+    }
     // Every TCP attach goes through the resumable path: a writable
     // connection is what lets us answer a resumable publisher's Hello
     // with a Resume frame, and --reconnect N adds redial-with-backoff.
@@ -535,9 +561,17 @@ fn attach_main(args: &[String]) -> Result<()> {
     for (i, (addr, stats)) in addrs.iter().zip(&r.stats.per).enumerate() {
         let origin = &r.origins[i];
         eprintln!(
-            "iprof: remote {} ({addr}): streams={} merged={} frames={} beacons={} \
+            "iprof: remote {} ({addr}): wire=v{} ({}) streams={} merged={} frames={} beacons={} \
              server received={} server dropped={} wire drops={} reconnects={} resume gaps={}{}",
             r.hostnames[i],
+            stats.wire_version,
+            // the negotiation outcome: the publisher picked batched v3 or
+            // the per-event fallback (docs/PROTOCOL.md § Versioning)
+            if stats.batches > 0 {
+                format!("batched, {} batches", stats.batches)
+            } else {
+                "per-event fallback".to_string()
+            },
             origin.channels,
             origin.received,
             stats.frames,
@@ -625,6 +659,9 @@ fn main() -> Result<()> {
     }
     if o.reconnect.is_some() || o.backoff_ms.is_some() {
         bail!("--reconnect/--backoff only make sense with iprof attach");
+    }
+    if o.wire.is_some() {
+        bail!("--wire only makes sense with iprof serve");
     }
 
     let registry = all_workloads();

@@ -15,8 +15,12 @@
 //! The reader multiplexes all streams from one byte stream, so it must
 //! never block on a single full channel (the beacon that would drain it
 //! may be *behind* it in the stream); it feeds through
-//! [`LiveHub::feed_remote`], which waits for queue space only while the
-//! merge provably has releasable work.
+//! [`LiveHub::feed_remote`] (or, for a v3 `EventBatch`, one
+//! [`LiveHub::feed_remote_batch`] push per frame), which waits for queue
+//! space only while the merge provably has releasable work. Which wire
+//! the publisher spoke — batched v3 or the per-event v2 fallback — is
+//! reported per connection in [`RemoteStats::wire_version`] /
+//! [`RemoteStats::batches`].
 
 use super::fanin::FanIn;
 pub use super::fanin::RemoteStats;
@@ -133,6 +137,8 @@ mod tests {
         assert_eq!(stats.server_received, 3);
         assert_eq!(stats.server_dropped, 0);
         assert_eq!(stats.unknown_classes, 0);
+        assert_eq!(stats.wire_version, 3, "default publish speaks v3");
+        assert!(stats.batches >= 1, "v3 events arrive batched");
     }
 
     #[test]

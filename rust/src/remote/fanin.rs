@@ -63,8 +63,16 @@ use std::time::Duration;
 pub struct RemoteStats {
     /// Frames received (Hello included).
     pub frames: u64,
-    /// Event frames among them.
+    /// Events among them — *events*, not frames: a v3 batch of n events
+    /// adds n here and 1 to both `frames` and `batches`.
     pub events: u64,
+    /// `EventBatch` frames received. 0 on a v2 connection — together
+    /// with `wire_version` this is the per-origin negotiation outcome
+    /// (batched v3 vs per-event fallback) the attach summary reports.
+    pub batches: u64,
+    /// Wire version the publisher's preamble announced (the publisher
+    /// picks; see `docs/PROTOCOL.md` § Versioning).
+    pub wire_version: u32,
     /// Beacon frames among them.
     pub beacons: u64,
     /// Events skipped because their class id was not in the Hello
@@ -194,6 +202,8 @@ struct Pending<S: Read + Write, C> {
     connector: Option<C>,
     /// Session epoch from the Hello (0 = not resumable).
     epoch: u64,
+    /// Wire version the preamble announced (publisher-selected).
+    wire: u32,
     hostname: String,
     classes: HashMap<u32, Arc<DecodedClass>>,
 }
@@ -201,13 +211,14 @@ struct Pending<S: Read + Write, C> {
 /// Preamble + Hello on a fresh connection; a *resumable* publisher
 /// (epoch ≠ 0) is answered with a [`Frame::Resume`] carrying `cursors`
 /// (empty = deliver from the beginning). Returns the buffered reader
-/// positioned at the first item frame plus the Hello contents.
+/// positioned at the first item frame plus the Hello contents and the
+/// preamble's wire version.
 fn handshake<S: Read + Write>(
     conn: S,
     cursors: &[u64],
-) -> io::Result<(BufReader<S>, String, String, u32, u64)> {
+) -> io::Result<(BufReader<S>, String, String, u32, u64, u32)> {
     let mut r = BufReader::new(conn);
-    frame::read_preamble(&mut r)?;
+    let wire = frame::read_preamble(&mut r)?;
     let hello = frame::read_frame(&mut r)?;
     let Frame::Hello { hostname, metadata, streams, epoch } = hello else {
         return Err(FrameError::Malformed("first frame must be Hello").into());
@@ -219,24 +230,25 @@ fn handshake<S: Read + Write>(
         frame::write_frame(r.get_mut(), &Frame::Resume { epoch, cursors: cursors.to_vec() })?;
         r.get_mut().flush()?;
     }
-    Ok((r, hostname, metadata, streams, epoch))
+    Ok((r, hostname, metadata, streams, epoch, wire))
 }
 
 /// Type of one fully prepared connection: buffered reader positioned at
 /// the first item frame, publisher hostname, its parsed class table,
-/// the Hello-announced stream count, and the session epoch.
-type Prepared<S> = (BufReader<S>, String, HashMap<u32, Arc<DecodedClass>>, usize, u64);
+/// the Hello-announced stream count, the session epoch, and the wire
+/// version.
+type Prepared<S> = (BufReader<S>, String, HashMap<u32, Arc<DecodedClass>>, usize, u64, u32);
 
 /// [`handshake`] a fresh connection (empty cursors — deliver from the
 /// beginning) and parse the publisher's BTF metadata into its class
 /// table.
 fn prepare<S: Read + Write>(conn: S) -> io::Result<Prepared<S>> {
-    let (r, hostname, metadata, streams, epoch) = handshake(conn, &[])?;
+    let (r, hostname, metadata, streams, epoch, wire) = handshake(conn, &[])?;
     let md = parse_metadata(&metadata)
         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
     let classes: HashMap<u32, Arc<DecodedClass>> =
         md.classes.into_iter().map(|(id, c)| (id, Arc::new(c))).collect();
-    Ok((r, hostname, classes, streams as usize, epoch))
+    Ok((r, hostname, classes, streams as usize, epoch, wire))
 }
 
 /// A live fan-in over N remote publishers (see module docs).
@@ -265,8 +277,8 @@ impl FanIn {
         let mut pending: Vec<Pending<ReadOnly<R>, NoDial<R>>> = Vec::with_capacity(conns.len());
         let mut announced = Vec::with_capacity(conns.len());
         for conn in conns {
-            let (r, hostname, classes, streams, epoch) = prepare(ReadOnly(conn))?;
-            pending.push(Pending { r, connector: None, epoch, hostname, classes });
+            let (r, hostname, classes, streams, epoch, wire) = prepare(ReadOnly(conn))?;
+            pending.push(Pending { r, connector: None, epoch, wire, hostname, classes });
             announced.push(streams);
         }
         Self::finish_open(pending, announced, depth, ReconnectPolicy::none())
@@ -318,7 +330,7 @@ impl FanIn {
         let mut announced = Vec::with_capacity(connectors.len());
         for mut dial in connectors {
             let mut attempt = 0u32;
-            let (r, hostname, classes, streams, epoch) = loop {
+            let (r, hostname, classes, streams, epoch, wire) = loop {
                 match dial().and_then(prepare) {
                     Ok(ok) => break ok,
                     Err(_) if attempt < policy.attempts => {
@@ -328,7 +340,7 @@ impl FanIn {
                     Err(e) => return Err(e),
                 }
             };
-            pending.push(Pending { r, connector: Some(dial), epoch, hostname, classes });
+            pending.push(Pending { r, connector: Some(dial), epoch, wire, hostname, classes });
             announced.push(streams);
         }
         Self::finish_open(pending, announced, depth, policy)
@@ -379,10 +391,15 @@ impl FanIn {
             let spawned = std::thread::Builder::new()
                 .name(format!("thapi-fanin-{i}"))
                 .spawn(move || {
-                    let Pending { mut r, mut connector, epoch, classes, .. } = p;
-                    let mut stats = RemoteStats { frames: 1, ..Default::default() };
+                    let Pending { mut r, mut connector, epoch, wire, classes, .. } = p;
+                    let mut stats =
+                        RemoteStats { frames: 1, wire_version: wire, ..Default::default() };
+                    hub2.record_origin_wire(origin, wire);
                     let mut map = hub2.origin_map(origin);
                     let mut delivered: Vec<u64> = Vec::new();
+                    // The batch dictionary is connection state on both
+                    // ends: it resets on every resumed connection.
+                    let mut dict = frame::BatchDict::new();
                     // Progress bound: each successful resume refills the
                     // per-outage dial budget, so a pathological publisher
                     // that always completes the handshake and then dies
@@ -395,7 +412,7 @@ impl FanIn {
                     let res = loop {
                         match pump(
                             &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map,
-                            &mut stats, &mut delivered,
+                            &mut dict, &mut stats, &mut delivered,
                         ) {
                             Ok(()) => break Ok(()),
                             Err(e) => {
@@ -426,11 +443,14 @@ impl FanIn {
                                 match try_resume(
                                     &mut connector, epoch, policy, &delivered, &mut stats,
                                 ) {
-                                    Ok(newr) => {
+                                    Ok((newr, wire)) => {
                                         // replayed events re-join the SAME
                                         // origin block; re-admit it in case
                                         // an earlier teardown closed it
                                         hub2.reopen_origin(origin);
+                                        hub2.record_origin_wire(origin, wire);
+                                        stats.wire_version = wire;
+                                        dict.clear();
                                         r = newr;
                                     }
                                     Err(reason) => {
@@ -522,7 +542,7 @@ fn try_resume<S, C>(
     policy: ReconnectPolicy,
     delivered: &[u64],
     stats: &mut RemoteStats,
-) -> Result<BufReader<S>, String>
+) -> Result<(BufReader<S>, u32), String>
 where
     S: Read + Write,
     C: FnMut() -> io::Result<S>,
@@ -538,18 +558,20 @@ where
     }
     for attempt in 0..policy.attempts {
         std::thread::sleep(policy.delay(attempt));
-        let redialed = (|| -> io::Result<(BufReader<S>, u64)> {
+        let redialed = (|| -> io::Result<(BufReader<S>, u64, u32)> {
             let mut r = BufReader::new(dial()?);
-            frame::read_preamble(&mut r)?;
+            // The publisher picks the wire version per connection, so a
+            // resumed connection re-learns it from the fresh preamble.
+            let wire = frame::read_preamble(&mut r)?;
             let Frame::Hello { epoch: seen, streams, .. } = frame::read_frame(&mut r)? else {
                 return Err(FrameError::Malformed("first frame must be Hello").into());
             };
             if streams > frame::MAX_STREAMS {
                 return Err(FrameError::Malformed("stream count exceeds MAX_STREAMS").into());
             }
-            Ok((r, seen))
+            Ok((r, seen, wire))
         })();
-        if let Ok((mut r, seen)) = redialed {
+        if let Ok((mut r, seen, wire)) = redialed {
             if seen != epoch {
                 return Err(format!(
                     "session epoch changed ({epoch:#x} -> {seen:#x}): publisher restarted"
@@ -559,7 +581,7 @@ where
             let sent = frame::write_frame(r.get_mut(), &resume).and(r.get_mut().flush());
             if sent.is_ok() {
                 stats.reconnects += 1;
-                return Ok(r);
+                return Ok((r, wire));
             }
         }
         // transport-level failure: the publisher may still be coming
@@ -577,10 +599,17 @@ where
 /// and indices are bounded by [`frame::MAX_STREAMS`]: a corrupt frame
 /// is a protocol error, never a giant allocation.
 ///
-/// `delivered[i]` counts the Event frames fully processed per remote
-/// stream — the resume cursors. Resume gaps advance it too: the
-/// publisher's sequence numbers cover the evicted events, so a cursor
-/// that did not skip the gap would misalign every later replay.
+/// `delivered[i]` counts the *events* fully processed per remote stream
+/// — the resume cursors. A v3 batch advances it by its event count (the
+/// publisher's ring sequence numbers count events, not frames), and
+/// resume gaps advance it too: the publisher's sequence numbers cover
+/// the evicted events, so a cursor that did not skip the gap would
+/// misalign every later replay.
+///
+/// The hot path never materializes a [`Frame`]: [`frame::read_frame_into`]
+/// reuses one body buffer, [`frame::is_event_batch`] routes batches to
+/// [`frame::decode_batch_into`], and the decoded events go to the hub as
+/// one [`LiveHub::feed_remote_batch`] push (one shard lock per batch).
 #[allow(clippy::too_many_arguments)]
 fn pump(
     r: &mut impl Read,
@@ -590,6 +619,7 @@ fn pump(
     hostname: &Arc<str>,
     depth: usize,
     map: &mut Vec<usize>,
+    dict: &mut frame::BatchDict,
     stats: &mut RemoteStats,
     delivered: &mut Vec<u64>,
 ) -> io::Result<()> {
@@ -610,9 +640,49 @@ fn pump(
         Ok(map[remote])
     }
 
+    let mut body: Vec<u8> = Vec::new();
+    let mut batch: Vec<EventMsg> = Vec::new();
     loop {
-        let f = frame::read_frame(r)?;
+        frame::read_frame_into(r, &mut body)?;
         stats.frames += 1;
+        if frame::is_event_batch(&body) {
+            let mut unknown = 0u64;
+            batch.clear();
+            let (stream, n) =
+                frame::decode_batch_into(&body, dict, |ts, rank, tid, class_id, fields| {
+                    match classes.get(&class_id) {
+                        Some(class) => batch.push(EventMsg {
+                            ts,
+                            rank,
+                            tid,
+                            hostname: hostname.clone(),
+                            class: class.clone(),
+                            fields: std::mem::take(fields),
+                        }),
+                        // same skip-unknown policy as the Event arm; the
+                        // scratch buffer is simply reused for the next event
+                        None => unknown += 1,
+                    }
+                })?;
+            let idx = translate(hub, origin, map, stream)?;
+            stats.events += n as u64;
+            stats.unknown_classes += unknown;
+            stats.batches += 1;
+            hub.record_origin_batches(origin, 1);
+            if !batch.is_empty() {
+                hub.feed_remote_batch(idx, std::mem::take(&mut batch), depth);
+            }
+            // delivered AFTER processing, by the batch's full event count
+            // — unknown-class events included, exactly like the publisher's
+            // ring sequence numbers
+            let s = stream as usize;
+            if s >= delivered.len() {
+                delivered.resize(s + 1, 0);
+            }
+            delivered[s] += n as u64;
+            continue;
+        }
+        let f = frame::decode_body(&body).map_err(io::Error::from)?;
         match f {
             Frame::Hello { .. } => {
                 return Err(FrameError::Malformed("duplicate Hello").into());
@@ -650,6 +720,11 @@ fn pump(
                     delivered.resize(s + 1, 0);
                 }
                 delivered[s] += 1;
+            }
+            Frame::EventBatch { .. } => {
+                // is_event_batch() routed every batch through the
+                // zero-copy path above before decode_body could run
+                unreachable!("EventBatch is handled by the fast path")
             }
             Frame::Beacon { stream, watermark } => {
                 // The watermark promise travels WITH the stream into its
@@ -735,10 +810,15 @@ mod tests {
         assert_eq!(fan.hostnames, vec!["fan".to_string(), "fan".to_string()]);
         let merged: Vec<(u64, u32)> = fan.source().map(|m| (m.ts, m.rank)).collect();
         assert_eq!(merged, vec![(5, 0), (7, 1), (10, 0), (12, 1)]);
+        let origins = fan.hub().origin_stats();
+        assert_eq!(origins[0].wire_version, 3, "negotiation outcome surfaces per origin");
+        assert!(origins[0].batches >= 1);
         let stats = fan.finish().unwrap();
         assert_eq!(stats.per.len(), 2);
         assert_eq!(stats.per[0].events, 2);
         assert_eq!(stats.per[1].events, 2);
+        assert_eq!(stats.per[0].wire_version, 3, "default publisher speaks v3");
+        assert!(stats.per[0].batches >= 1, "v3 events arrive batched");
         assert_eq!(stats.server_received(), 4);
         assert_eq!(stats.server_dropped(), 0);
         assert_eq!(stats.failed(), 0);

@@ -27,8 +27,9 @@ use std::io::{self, Read, Write};
 /// Connection preamble magic: "THRL" (THapi Remote Live).
 pub const MAGIC: [u8; 4] = *b"THRL";
 
-/// Protocol version spoken by this build. The preamble carries it; a
-/// subscriber must reject any version it does not implement.
+/// Protocol version spoken by this build's *publisher* by default. The
+/// preamble carries it; a subscriber must reject any version it does
+/// not implement.
 ///
 /// Version 2 added session resumption: [`Frame::Hello`] grew a trailing
 /// session `epoch`, and the [`Frame::Resume`] / [`Frame::ResumeGap`]
@@ -37,15 +38,28 @@ pub const MAGIC: [u8; 4] = *b"THRL";
 /// resumption). v2 changed the Hello layout, so v1 and v2 are mutually
 /// unintelligible past the preamble — negotiation stays
 /// reject-on-mismatch.
-pub const VERSION: u32 = 2;
+///
+/// Version 3 is a strict **byte-superset** of v2: every v2 frame keeps
+/// its exact bytes and semantics, and one new frame type joins —
+/// [`Frame::EventBatch`], which carries many events of one stream per
+/// length-prefixed frame with delta-encoded timestamps, varint ids and
+/// a per-connection `(rank, tid, class_id)` dictionary. A v3 subscriber
+/// therefore accepts v2 publishers unchanged; a v3 publisher talks to a
+/// v2 subscriber by emitting the v2 preamble and per-event frames only
+/// (`iprof serve --wire 2`) — v2 subscribers hard-reject any preamble
+/// version they do not speak, so the fallback is chosen on the
+/// publisher, never negotiated mid-stream.
+pub const VERSION: u32 = 3;
 
 /// Every protocol version this build can speak. Version negotiation
 /// ([`read_preamble`]) accepts exactly these; anything else is a
 /// [`FrameError::BadVersion`]. v1 (no epochs, no resumption) is
 /// deliberately absent: its Hello layout is a strict prefix of v2's and
-/// decoding it under v2 rules would mis-parse, so a v2 build rejects v1
-/// peers outright instead of guessing.
-pub const SUPPORTED_VERSIONS: [u32; 1] = [VERSION];
+/// decoding it under v2 rules would mis-parse, so this build rejects v1
+/// peers outright instead of guessing. v2 stays supported because v3 is
+/// a byte-superset: a connection whose preamble says 2 simply never
+/// carries an [`Frame::EventBatch`].
+pub const SUPPORTED_VERSIONS: [u32; 2] = [2, VERSION];
 
 /// Upper bound on `len` (type + body bytes). Frames beyond this are a
 /// protocol error, never an allocation request — a corrupt or hostile
@@ -59,6 +73,22 @@ pub const MAX_FRAME_LEN: usize = 16 << 20;
 /// channel-table allocation.
 pub const MAX_STREAMS: u32 = 1 << 20;
 
+/// Upper bound on the event count one [`Frame::EventBatch`] may claim.
+/// Same rationale as [`MAX_FRAME_LEN`]: a corrupt or hostile count must
+/// fail as a protocol error before it becomes an allocation request.
+/// (The frame length guard already bounds real batches well below this —
+/// 64 Ki events cannot fit in 16 MiB unless most are dictionary-
+/// compressed two-byte events, which is exactly the intended regime.)
+pub const MAX_BATCH_EVENTS: u32 = 1 << 16;
+
+/// Upper bound on entries in the per-connection `(rank, tid, class_id)`
+/// batch dictionary. Encoder and decoder share this constant so their
+/// index spaces stay aligned: both sides stop *recording* new triples at
+/// the cap (the encoder keeps emitting inline definitions for triples
+/// beyond it, and the decoder ignores definitions past the cap for
+/// recording purposes while still decoding the event itself).
+pub const MAX_DICT_ENTRIES: u32 = 1 << 16;
+
 // Frame type discriminators (u8 on the wire).
 const T_HELLO: u8 = 0x01;
 const T_STREAMS: u8 = 0x02;
@@ -69,6 +99,7 @@ const T_CLOSE: u8 = 0x06;
 const T_EOS: u8 = 0x07;
 const T_RESUME: u8 = 0x08;
 const T_RESUME_GAP: u8 = 0x09;
+const T_EVENT_BATCH: u8 = 0x0a; // v3 only
 
 // Field value tags inside Event frames.
 const F_U64: u8 = 0;
@@ -94,6 +125,50 @@ pub struct WireEvent {
     pub class_id: u32,
     /// Decoded field values, self-describing (tag + value) so the codec
     /// round-trips without a class table.
+    pub fields: Vec<FieldValue>,
+}
+
+/// How one event inside a [`Frame::EventBatch`] names its
+/// `(rank, tid, class_id)` triple (v3). The first time a triple appears
+/// on a connection the publisher spells it out inline (`Def`), which
+/// *also* assigns it the next free index in the per-connection batch
+/// dictionary (dense, in definition order, capped at
+/// [`MAX_DICT_ENTRIES`]); every later event referencing the same triple
+/// is a one- or two-byte `Ref` into that dictionary.
+///
+/// The dictionary is **connection state**, not frame state: it persists
+/// across batches of one connection and resets on (re)connect. The codec
+/// itself stays a pure function of the frame — `Def`/`Ref` is explicit
+/// in the decoded value, and resolving a `Ref` against the running
+/// dictionary happens one layer up (see [`BatchDict`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchKey {
+    /// Inline triple; also appends to the connection dictionary (if it
+    /// is not yet at [`MAX_DICT_ENTRIES`]).
+    Def {
+        /// Producing rank.
+        rank: u32,
+        /// Producing thread.
+        tid: u32,
+        /// Event-class id (resolved via the Hello metadata).
+        class_id: u32,
+    },
+    /// Index into the connection dictionary, in definition order.
+    Ref(u32),
+}
+
+/// One event inside a [`Frame::EventBatch`] (v3). The timestamp is
+/// absolute in the decoded form; on the wire it is a zigzag-varint delta
+/// against the previous event in the same batch (starting from 0), so
+/// non-monotone timestamps cost a few bytes instead of overflowing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchEvent {
+    /// Timestamp (trace-clock ns), absolute.
+    pub ts: u64,
+    /// The `(rank, tid, class_id)` naming — inline or dictionary ref.
+    pub key: BatchKey,
+    /// Decoded field values, self-describing exactly as in
+    /// [`WireEvent::fields`].
     pub fields: Vec<FieldValue>,
 }
 
@@ -183,6 +258,22 @@ pub enum Frame {
         /// publisher's own stream ids. Streams beyond the list resume
         /// from 0.
         cursors: Vec<u64>,
+    },
+    /// Many events of one stream in one length-prefixed frame (v3 only;
+    /// never sent on a connection whose preamble negotiated v2). Wire
+    /// form: `stream:u32 LE`, `count:varint`, then per event a zigzag-
+    /// varint timestamp delta, a varint key (`0` = inline definition of
+    /// rank/tid/class_id as varints, `k>0` = dictionary ref `k-1`), a
+    /// varint field count, and the same self-describing tagged fields as
+    /// [`Frame::Event`]. Per-stream event order inside and across
+    /// batches is the stream's event order, exactly as for per-event
+    /// frames; a batch of `n` events advances resume cursors and drop
+    /// ledgers by `n` *events* — batching never changes accounting.
+    EventBatch {
+        /// Channel index (== session stream registration index).
+        stream: u32,
+        /// The events, in stream order.
+        events: Vec<BatchEvent>,
     },
     /// Publisher→subscriber resumption verdict for one stream: `missed`
     /// events between the subscriber's cursor and the oldest event
@@ -306,6 +397,53 @@ fn put_field(out: &mut Vec<u8>, v: &FieldValue) {
     }
 }
 
+/// LEB128 varint: 7 payload bits per byte, continuation bit 0x80, at
+/// most 10 bytes for a full u64. Small numbers — stream-local ids,
+/// deltas, counts — collapse to one byte, which is where the v3 batch
+/// format gets most of its density.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Zigzag-map a signed delta onto an unsigned varint payload so small
+/// *negative* deltas (non-monotone timestamps: late flushes, clock
+/// steps) stay small on the wire instead of becoming ten 0xff bytes.
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+fn put_batch_event(out: &mut Vec<u8>, prev_ts: u64, ev: &BatchEvent) {
+    // delta against the previous event of the batch; wrapping arithmetic
+    // makes every (prev, ts) pair representable, including u64 extremes
+    put_varint(out, zigzag(ev.ts.wrapping_sub(prev_ts) as i64));
+    match ev.key {
+        BatchKey::Def { rank, tid, class_id } => {
+            put_varint(out, 0);
+            put_varint(out, rank as u64);
+            put_varint(out, tid as u64);
+            put_varint(out, class_id as u64);
+        }
+        BatchKey::Ref(idx) => put_varint(out, idx as u64 + 1),
+    }
+    let nfields = ev.fields.len().min(u16::MAX as usize);
+    put_varint(out, nfields as u64);
+    for f in &ev.fields[..nfields] {
+        put_field(out, f);
+    }
+}
+
 /// Append one length-prefixed frame to `out`. Deterministic: equal frames
 /// always produce equal bytes.
 pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
@@ -369,6 +507,17 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
             put_u32(out, *stream);
             put_u64(out, *missed);
         }
+        Frame::EventBatch { stream, events } => {
+            out.push(T_EVENT_BATCH);
+            put_u32(out, *stream);
+            let n = events.len().min(MAX_BATCH_EVENTS as usize);
+            put_varint(out, n as u64);
+            let mut prev_ts = 0u64;
+            for ev in &events[..n] {
+                put_batch_event(out, prev_ts, ev);
+                prev_ts = ev.ts;
+            }
+        }
     }
     let body_len = (out.len() - len_at - 4) as u32;
     out[len_at..len_at + 4].copy_from_slice(&body_len.to_le_bytes());
@@ -419,6 +568,62 @@ impl<'a> Body<'a> {
         let n = self.u32()? as usize;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::BadUtf8)
+    }
+
+    /// LEB128 varint, bounded at 10 bytes; the tenth byte may only carry
+    /// the final high bit of a u64, so anything past that — or a
+    /// continuation bit on byte ten — is malformed, not silently
+    /// truncated.
+    fn varint(&mut self) -> Result<u64, FrameError> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift == 63 && byte > 1 {
+                return Err(FrameError::Malformed("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(FrameError::Malformed("varint overflows u64"));
+            }
+        }
+    }
+
+    /// A varint that must fit a u32 (ids, counts, dictionary indices).
+    fn varint32(&mut self, what: &'static str) -> Result<u32, FrameError> {
+        let v = self.varint()?;
+        u32::try_from(v).map_err(|_| FrameError::Malformed(what))
+    }
+
+    fn batch_event(&mut self, prev_ts: u64) -> Result<BatchEvent, FrameError> {
+        let ts = prev_ts.wrapping_add(unzigzag(self.varint()?) as u64);
+        let key = match self.varint()? {
+            0 => BatchKey::Def {
+                rank: self.varint32("batch rank exceeds u32")?,
+                tid: self.varint32("batch tid exceeds u32")?,
+                class_id: self.varint32("batch class id exceeds u32")?,
+            },
+            k => {
+                let idx = k - 1;
+                if idx >= u64::from(MAX_DICT_ENTRIES) {
+                    return Err(FrameError::Malformed("batch dictionary ref out of range"));
+                }
+                BatchKey::Ref(idx as u32)
+            }
+        };
+        let nfields = self.varint()? as usize;
+        if nfields > u16::MAX as usize {
+            return Err(FrameError::Malformed("batch field count exceeds u16"));
+        }
+        let mut fields = Vec::with_capacity(nfields.min(256));
+        for _ in 0..nfields {
+            fields.push(self.field()?);
+        }
+        Ok(BatchEvent { ts, key, fields })
     }
 
     fn field(&mut self) -> Result<FieldValue, FrameError> {
@@ -510,6 +715,23 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
             Frame::Resume { epoch, cursors }
         }
         T_RESUME_GAP => Frame::ResumeGap { stream: b.u32()?, missed: b.u64()? },
+        T_EVENT_BATCH => {
+            let stream = b.u32()?;
+            let n = b.varint()?;
+            if n > u64::from(MAX_BATCH_EVENTS) {
+                // a corrupt count fails before it becomes an allocation
+                return Err(FrameError::Malformed("batch event count exceeds MAX_BATCH_EVENTS"));
+            }
+            let n = n as usize;
+            let mut events = Vec::with_capacity(n.min(256));
+            let mut prev_ts = 0u64;
+            for _ in 0..n {
+                let ev = b.batch_event(prev_ts)?;
+                prev_ts = ev.ts;
+                events.push(ev);
+            }
+            Frame::EventBatch { stream, events }
+        }
         other => return Err(FrameError::BadFrameType(other)),
     };
     b.finish()?;
@@ -517,14 +739,195 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
 }
 
 // ---------------------------------------------------------------------------
+// Batch dictionary (v3 connection state)
+// ---------------------------------------------------------------------------
+
+/// Encoder side of the per-connection batch dictionary: assigns dense
+/// indices to `(rank, tid, class_id)` triples in first-use order. One
+/// instance lives per outgoing connection and is dropped with it; a
+/// reconnect starts an empty dictionary on both ends by construction.
+#[derive(Debug, Default)]
+pub struct BatchDictEncoder {
+    map: std::collections::HashMap<(u32, u32, u32), u32>,
+}
+
+impl BatchDictEncoder {
+    /// Fresh, empty dictionary (connection start).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The wire key for a triple: `Ref` if it has been defined on this
+    /// connection, else `Def` — which also records it, unless the
+    /// dictionary is at [`MAX_DICT_ENTRIES`] (then every later first-use
+    /// stays an inline `Def` forever, keeping both index spaces
+    /// identical without any eviction protocol).
+    pub fn key_for(&mut self, rank: u32, tid: u32, class_id: u32) -> BatchKey {
+        if let Some(&idx) = self.map.get(&(rank, tid, class_id)) {
+            return BatchKey::Ref(idx);
+        }
+        let next = self.map.len() as u32;
+        if next < MAX_DICT_ENTRIES {
+            self.map.insert((rank, tid, class_id), next);
+        }
+        BatchKey::Def { rank, tid, class_id }
+    }
+
+    /// Number of recorded triples (diagnostics).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing has been defined yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Decoder side of the per-connection batch dictionary: triples in
+/// definition order. Mirrors [`BatchDictEncoder`] — same cap, same
+/// recording rule — so index `i` means the same triple on both ends.
+/// One instance lives per incoming connection; [`BatchDict::clear`] on
+/// reconnect.
+#[derive(Debug, Default)]
+pub struct BatchDict {
+    entries: Vec<(u32, u32, u32)>,
+}
+
+impl BatchDict {
+    /// Fresh, empty dictionary (connection start).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset for a new connection (resume/reconnect).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Resolve a [`BatchKey`] to its triple, recording definitions.
+    pub fn resolve(&mut self, key: BatchKey) -> Result<(u32, u32, u32), FrameError> {
+        match key {
+            BatchKey::Def { rank, tid, class_id } => {
+                if self.entries.len() < MAX_DICT_ENTRIES as usize {
+                    self.entries.push((rank, tid, class_id));
+                }
+                Ok((rank, tid, class_id))
+            }
+            BatchKey::Ref(idx) => self
+                .entries
+                .get(idx as usize)
+                .copied()
+                .ok_or(FrameError::Malformed("batch dictionary ref out of range")),
+        }
+    }
+
+    /// Number of recorded triples (diagnostics).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been defined yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// True when a raw frame body (as filled by [`read_frame_into`]) is an
+/// [`Frame::EventBatch`] — the hot-path discriminator check that lets a
+/// subscriber route batches through [`decode_batch_into`] without
+/// materializing a [`Frame`].
+pub fn is_event_batch(body: &[u8]) -> bool {
+    body.first() == Some(&T_EVENT_BATCH)
+}
+
+/// Decode an [`Frame::EventBatch`] body directly into a consumer, with
+/// no per-event [`BatchEvent`] or empty-`Vec` allocation: `emit` is
+/// called once per event with the absolute timestamp, the dictionary-
+/// resolved `(rank, tid, class_id)`, and a scratch field buffer the
+/// consumer may `mem::take` (only when it actually holds fields — the
+/// fixed-field fast path hands the same empty buffer around the whole
+/// batch). Returns `(stream, event_count)`.
+///
+/// `body` is a full frame body including the leading type byte (see
+/// [`is_event_batch`]); `dict` is the connection's running dictionary.
+/// Errors mirror [`decode_body`]'s for the same bytes.
+pub fn decode_batch_into<F>(
+    body: &[u8],
+    dict: &mut BatchDict,
+    mut emit: F,
+) -> Result<(u32, usize), FrameError>
+where
+    F: FnMut(u64, u32, u32, u32, &mut Vec<FieldValue>),
+{
+    let mut b = Body { buf: body };
+    if b.u8()? != T_EVENT_BATCH {
+        return Err(FrameError::Malformed("not an EventBatch frame"));
+    }
+    let stream = b.u32()?;
+    let n = b.varint()?;
+    if n > u64::from(MAX_BATCH_EVENTS) {
+        return Err(FrameError::Malformed("batch event count exceeds MAX_BATCH_EVENTS"));
+    }
+    let n = n as usize;
+    let mut prev_ts = 0u64;
+    let mut scratch: Vec<FieldValue> = Vec::new();
+    for _ in 0..n {
+        let ts = prev_ts.wrapping_add(unzigzag(b.varint()?) as u64);
+        prev_ts = ts;
+        let key = match b.varint()? {
+            0 => BatchKey::Def {
+                rank: b.varint32("batch rank exceeds u32")?,
+                tid: b.varint32("batch tid exceeds u32")?,
+                class_id: b.varint32("batch class id exceeds u32")?,
+            },
+            k => {
+                let idx = k - 1;
+                if idx >= u64::from(MAX_DICT_ENTRIES) {
+                    return Err(FrameError::Malformed("batch dictionary ref out of range"));
+                }
+                BatchKey::Ref(idx as u32)
+            }
+        };
+        let (rank, tid, class_id) = dict.resolve(key)?;
+        let nfields = b.varint()? as usize;
+        if nfields > u16::MAX as usize {
+            return Err(FrameError::Malformed("batch field count exceeds u16"));
+        }
+        scratch.clear();
+        scratch.reserve(nfields.min(256));
+        for _ in 0..nfields {
+            scratch.push(b.field()?);
+        }
+        emit(ts, rank, tid, class_id, &mut scratch);
+    }
+    b.finish()?;
+    Ok((stream, n))
+}
+
+// ---------------------------------------------------------------------------
 // Blocking I/O helpers
 // ---------------------------------------------------------------------------
 
 /// Write the connection preamble (magic + version). The publisher sends
-/// this once, immediately after accepting the subscriber.
+/// this once, immediately after accepting the subscriber. Writes this
+/// build's default version ([`VERSION`]); a publisher downgrading for
+/// v2-only subscribers uses [`write_preamble_version`].
 pub fn write_preamble(w: &mut impl Write) -> io::Result<()> {
+    write_preamble_version(w, VERSION)
+}
+
+/// Write the connection preamble for an explicit protocol version. The
+/// version chosen here is a *promise about the publisher's own output*:
+/// announcing 2 commits the publisher to the exact v2 frame set (no
+/// [`Frame::EventBatch`]), which is how a v3 build keeps v2 subscribers
+/// working — they hard-reject any preamble version they do not speak,
+/// so the downgrade must be chosen publisher-side (`iprof serve
+/// --wire 2`), not negotiated.
+pub fn write_preamble_version(w: &mut impl Write, version: u32) -> io::Result<()> {
+    debug_assert!(SUPPORTED_VERSIONS.contains(&version));
     w.write_all(&MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())
+    w.write_all(&version.to_le_bytes())
 }
 
 /// Read and verify the connection preamble, returning the negotiated
@@ -560,15 +963,28 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<usize> {
 /// `UnexpectedEof` — the protocol ends with [`Frame::Eos`], never by the
 /// transport closing, so any EOF here is abnormal.
 pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut body = Vec::new();
+    read_frame_into(r, &mut body)?;
+    Ok(decode_body(&body)?)
+}
+
+/// Read one raw frame body (type byte + payload, no length prefix) into
+/// `buf`, reusing its capacity. This is the subscriber hot path: the
+/// caller checks [`is_event_batch`] and routes batches through
+/// [`decode_batch_into`] — one buffer serves the whole connection
+/// instead of one allocation per frame. EOF semantics match
+/// [`read_frame`].
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> io::Result<()> {
     let mut lenbuf = [0u8; 4];
     r.read_exact(&mut lenbuf)?;
     let len = u32::from_le_bytes(lenbuf) as usize;
     if len == 0 || len > MAX_FRAME_LEN {
         return Err(FrameError::BadLength(len).into());
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
-    Ok(decode_body(&body)?)
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -615,6 +1031,129 @@ mod tests {
         roundtrip(Frame::Resume { epoch: 0x0123_4567_89ab_cdef, cursors: vec![7, 0, 42] });
         roundtrip(Frame::Resume { epoch: 1, cursors: vec![] });
         roundtrip(Frame::ResumeGap { stream: 2, missed: 17 });
+        roundtrip(Frame::EventBatch { stream: 3, events: vec![] });
+        roundtrip(Frame::EventBatch {
+            stream: 2,
+            events: vec![
+                BatchEvent {
+                    ts: 1000,
+                    key: BatchKey::Def { rank: 1, tid: 42, class_id: 9 },
+                    fields: vec![FieldValue::U64(7), FieldValue::Str("kernel".into())],
+                },
+                // non-monotone: ts goes backwards, zigzag keeps it small
+                BatchEvent { ts: 999, key: BatchKey::Ref(0), fields: vec![] },
+                BatchEvent { ts: u64::MAX, key: BatchKey::Ref(0), fields: vec![] },
+                BatchEvent { ts: 0, key: BatchKey::Ref(0), fields: vec![] },
+            ],
+        });
+    }
+
+    #[test]
+    fn varints_roundtrip_across_the_full_u64_range() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX / 2, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            assert!(buf.len() <= 10);
+            let mut b = Body { buf: &buf };
+            assert_eq!(b.varint().unwrap(), v);
+            b.finish().unwrap();
+        }
+        for d in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(d)), d);
+        }
+        // small magnitudes of either sign stay one byte
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn overlong_varints_are_malformed_not_truncated() {
+        // eleven continuation bytes can never be a u64
+        let buf = [0xffu8; 11];
+        let mut b = Body { buf: &buf };
+        assert!(matches!(b.varint(), Err(FrameError::Malformed(_))));
+        // ten bytes whose last carries more than u64 bit 63
+        let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02];
+        let mut b = Body { buf: &buf };
+        assert!(matches!(b.varint(), Err(FrameError::Malformed(_))));
+        // ...while the canonical u64::MAX encoding is fine
+        let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x01];
+        let mut b = Body { buf: &buf };
+        assert_eq!(b.varint().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn hostile_batch_event_counts_are_rejected_not_allocated() {
+        // a tiny EventBatch body claiming MAX_BATCH_EVENTS+1 events must
+        // fail on the count guard, never pre-allocate the claimed table
+        let mut body = vec![T_EVENT_BATCH];
+        body.extend_from_slice(&0u32.to_le_bytes()); // stream
+        put_varint(&mut body, u64::from(MAX_BATCH_EVENTS) + 1);
+        assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+        let mut dict = BatchDict::new();
+        assert!(matches!(decode_batch_into(&body, &mut dict, |_, _, _, _, _| ()), Err(_)));
+        // an in-range count with missing bytes fails on the bytes
+        let mut body = vec![T_EVENT_BATCH];
+        body.extend_from_slice(&0u32.to_le_bytes());
+        put_varint(&mut body, 1000);
+        assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn batch_dictionary_encoder_and_decoder_agree() {
+        let mut enc = BatchDictEncoder::new();
+        let mut dec = BatchDict::new();
+        // first use defines, second use refs, distinct triples get
+        // distinct dense indices
+        let k0 = enc.key_for(0, 10, 5);
+        assert_eq!(k0, BatchKey::Def { rank: 0, tid: 10, class_id: 5 });
+        assert_eq!(enc.key_for(0, 10, 5), BatchKey::Ref(0));
+        assert_eq!(enc.key_for(1, 11, 5), BatchKey::Def { rank: 1, tid: 11, class_id: 5 });
+        assert_eq!(enc.key_for(1, 11, 5), BatchKey::Ref(1));
+        assert_eq!(dec.resolve(k0).unwrap(), (0, 10, 5));
+        assert_eq!(dec.resolve(BatchKey::Ref(0)).unwrap(), (0, 10, 5));
+        assert_eq!(dec.resolve(BatchKey::Def { rank: 1, tid: 11, class_id: 5 }).unwrap(), (1, 11, 5));
+        assert_eq!(dec.resolve(BatchKey::Ref(1)).unwrap(), (1, 11, 5));
+        // an undefined ref is a structured error, not a panic
+        assert!(matches!(dec.resolve(BatchKey::Ref(7)), Err(FrameError::Malformed(_))));
+    }
+
+    #[test]
+    fn decode_batch_into_matches_decode_body_and_reuses_its_scratch() {
+        let frame = Frame::EventBatch {
+            stream: 4,
+            events: vec![
+                BatchEvent {
+                    ts: 50,
+                    key: BatchKey::Def { rank: 0, tid: 7, class_id: 3 },
+                    fields: vec![FieldValue::Ptr(0xdead), FieldValue::U64(2)],
+                },
+                BatchEvent { ts: 49, key: BatchKey::Ref(0), fields: vec![] },
+                BatchEvent { ts: 60, key: BatchKey::Ref(0), fields: vec![FieldValue::I64(-5)] },
+            ],
+        };
+        let mut wire = Vec::new();
+        encode(&frame, &mut wire);
+        let body = &wire[4..];
+        assert!(is_event_batch(body));
+
+        let mut dict = BatchDict::new();
+        let mut seen = Vec::new();
+        let (stream, n) = decode_batch_into(body, &mut dict, |ts, rank, tid, class_id, fields| {
+            seen.push((ts, rank, tid, class_id, fields.clone()));
+        })
+        .unwrap();
+        assert_eq!((stream, n), (4, 3));
+        assert_eq!(
+            seen,
+            vec![
+                (50, 0, 7, 3, vec![FieldValue::Ptr(0xdead), FieldValue::U64(2)]),
+                (49, 0, 7, 3, vec![]),
+                (60, 0, 7, 3, vec![FieldValue::I64(-5)]),
+            ]
+        );
+        // and the generic decoder agrees on the same bytes
+        assert_eq!(decode_body(body).unwrap(), frame);
     }
 
     #[test]
@@ -663,14 +1202,19 @@ mod tests {
         write_preamble(&mut buf).unwrap();
         assert_eq!(read_preamble(&mut &buf[..]).unwrap(), VERSION);
 
+        // the explicit-version writer covers the v2 downgrade path
+        let mut v2 = Vec::new();
+        write_preamble_version(&mut v2, 2).unwrap();
+        assert_eq!(read_preamble(&mut &v2[..]).unwrap(), 2);
+
         let mut bad = buf.clone();
         bad[0] = b'X';
         let err = read_preamble(&mut &bad[..]).unwrap_err();
         assert!(err.to_string().contains("magic"), "{err}");
 
-        // neither the retired v1 nor a future v3 is accepted: the Hello
-        // layout changed in v2, so cross-version guessing would mis-parse
-        for unsupported in [1u32, 3] {
+        // neither the retired v1 nor a future v4 is accepted: cross-
+        // version guessing past a layout change would mis-parse
+        for unsupported in [1u32, 4] {
             let mut other = buf.clone();
             other[4..8].copy_from_slice(&unsupported.to_le_bytes());
             let err = read_preamble(&mut &other[..]).unwrap_err();

@@ -76,6 +76,20 @@
 //!         └────── redial with backoff ◄───────┘ (connection drops)
 //!    ```
 //!
+//! And a sixth with the v3 batched hot path (`iprof serve`, default
+//! wire; `--wire 2` keeps the per-event fallback for old subscribers):
+//!
+//! 6. **Batching never changes accounting.** A v3 publisher coalesces
+//!    each forward round's events into [`Frame::EventBatch`] frames
+//!    (delta timestamps, varint ids, a per-connection
+//!    `(rank, tid, class_id)` dictionary) and flushes whole rounds with
+//!    vectored writes; the subscriber decodes batches straight into its
+//!    mirror hub ([`frame::decode_batch_into`] →
+//!    [`crate::live::LiveHub::feed_remote_batch`]). Replay rings, resume
+//!    cursors and drop ledgers keep counting *events*, so every
+//!    resumption and loss-accounting property above holds verbatim on
+//!    either wire — and a v2 peer sees the exact frozen v2 byte stream.
+//!
 //! Entry points: [`crate::coordinator::run_serve`] /
 //! [`crate::coordinator::run_serve_resumable`] /
 //! [`crate::coordinator::run_attach`] /
@@ -93,6 +107,8 @@ pub mod publish;
 pub use attach::Attachment;
 pub use fanin::{FanIn, FanInStats, ReconnectPolicy, RemoteStats};
 pub use frame::{
-    decode, decode_body, encode, Frame, FrameError, WireEvent, MAGIC, SUPPORTED_VERSIONS, VERSION,
+    decode, decode_batch_into, decode_body, encode, is_event_batch, read_frame_into,
+    write_preamble_version, BatchDict, BatchDictEncoder, BatchEvent, BatchKey, Frame, FrameError,
+    WireEvent, MAGIC, MAX_BATCH_EVENTS, MAX_DICT_ENTRIES, SUPPORTED_VERSIONS, VERSION,
 };
-pub use publish::{publish, KillAfter, PublishStats, Publisher, ServeOutcome};
+pub use publish::{publish, publish_with, KillAfter, PublishStats, Publisher, ServeOutcome};

@@ -8,6 +8,18 @@
 //! the one-shot, non-resumable path: Hello advertises epoch 0 and a
 //! dropped connection ends the relay for good.
 //!
+//! # The hot path (v3)
+//!
+//! On a v3 wire the pump coalesces each forward round's events into
+//! [`Frame::EventBatch`] frames — one per consecutive same-stream run,
+//! capped at [`frame::MAX_BATCH_EVENTS`] — with delta timestamps and the
+//! per-connection `(rank, tid, class_id)` dictionary
+//! ([`frame::BatchDictEncoder`]), then flushes the whole round with one
+//! vectored write (manual `IoSlice` batching over the `Write` sink)
+//! instead of one `write` per frame. `iprof serve --wire 2` keeps the
+//! exact per-event v2 byte stream for old subscribers; see
+//! `docs/PROTOCOL.md` § Versioning for the fallback matrix.
+//!
 //! [`Publisher`] is the resumable flavor (`iprof serve --resume-buffer`):
 //! it owns a session **epoch** and a byte-budgeted [replay ring] of the
 //! event frames it has relayed, and serves a *sequence* of connections
@@ -28,6 +40,12 @@
 //!                    ✂ = transport died; ring keeps the tail
 //! ```
 //!
+//! The ring always stores **per-event v2 `Event` frames**, whatever the
+//! live wire speaks: replayed frames are valid on both wire versions (v3
+//! is a byte-superset of v2), and ring sequence numbers keep counting
+//! *events*, so resume cursors, gap ledgers and drop accounting are
+//! untouched by batching.
+//!
 //! The publisher inherits the hub's backpressure contract end to end: it
 //! never pushes back on the tracing consumer. If the transport stalls
 //! (slow subscriber, slow network), the hub's bounded channels fill and
@@ -40,11 +58,12 @@
 //!
 //! [replay ring]: Publisher#replay-ring-semantics
 
-use super::frame::{self, Frame, FrameError, WireEvent};
+use super::frame::{self, BatchEvent, Frame, FrameError, WireEvent};
 use crate::live::{ForwardCursor, LiveHub};
 use crate::tracer::btf::generate_metadata;
+use crate::tracer::encoder::FieldValue;
 use std::collections::VecDeque;
-use std::io::{self, BufWriter, Read, Write};
+use std::io::{self, IoSlice, Read, Write};
 use std::sync::Arc;
 
 /// What one [`publish`] call (or one whole [`Publisher`] session)
@@ -53,7 +72,8 @@ use std::sync::Arc;
 pub struct PublishStats {
     /// Frames written (preamble excluded).
     pub frames: u64,
-    /// Event frames among them (replays excluded).
+    /// Events relayed live (replays excluded). Counts *events*, not
+    /// frames: a v3 batch of n events adds n here and 1 to `frames`.
     pub events: u64,
     /// Beacon frames among them.
     pub beacons: u64,
@@ -67,41 +87,307 @@ pub struct PublishStats {
     /// evicted (the sum of all [`Frame::ResumeGap`] `missed` counts) —
     /// each one is an event permanently absent from the remote view.
     pub gaps: u64,
+    /// `EventBatch` frames written (0 on a v2 wire).
+    pub batches: u64,
 }
 
-/// Encode one hub message as its complete wire `Event` frame — the ONE
-/// place an [`EventMsg`](crate::analysis::EventMsg) becomes bytes, so
-/// the one-shot, offline-drain and live-resumable paths can never
-/// encode differently (ring replay byte-identity depends on that).
-fn encode_event(stream: usize, msg: crate::analysis::EventMsg) -> Vec<u8> {
+/// Encode one event as its complete per-event v2 `Event` frame — the
+/// ONE place event bytes of that shape are produced, so the one-shot,
+/// offline-drain and live-resumable paths can never encode differently
+/// (ring replay byte-identity depends on that).
+fn encode_event_parts(
+    stream: usize,
+    ts: u64,
+    rank: u32,
+    tid: u32,
+    class_id: u32,
+    fields: Vec<FieldValue>,
+) -> Vec<u8> {
     let f = Frame::Event {
         stream: stream as u32,
-        event: WireEvent {
-            ts: msg.ts,
-            rank: msg.rank,
-            tid: msg.tid,
-            class_id: msg.class.id,
-            fields: msg.fields,
-        },
+        event: WireEvent { ts, rank, tid, class_id, fields },
     };
     let mut buf = Vec::with_capacity(64);
     frame::encode(&f, &mut buf);
     buf
 }
 
-/// Write one frame and account it in `stats` (bytes + frame count).
-fn tracked_write(stats: &mut PublishStats, w: &mut impl Write, frame: &Frame) -> io::Result<()> {
-    let n = frame::write_frame(w, frame)?;
-    stats.bytes += n as u64;
+/// [`encode_event_parts`] straight from a hub message.
+fn encode_event(stream: usize, msg: crate::analysis::EventMsg) -> Vec<u8> {
+    encode_event_parts(stream, msg.ts, msg.rank, msg.tid, msg.class.id, msg.fields)
+}
+
+/// Encode one frame into its own buffer.
+fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32);
+    frame::encode(f, &mut buf);
+    buf
+}
+
+/// Write every buffer with as few calls as the sink allows: manual
+/// `IoSlice` batching over `Write::write_vectored`, chunked to stay
+/// under typical `IOV_MAX` limits, advancing through partial writes.
+/// For sinks without real vectored I/O the default `write_vectored`
+/// degrades to one plain write of the first slice per call — still
+/// correct, just unbatched. Returns the total bytes written.
+fn write_all_vectored(w: &mut impl Write, bufs: &[&[u8]]) -> io::Result<u64> {
+    const MAX_SLICES: usize = 512;
+    let mut total = 0u64;
+    let mut i = 0usize; // first unfinished buffer
+    let mut off = 0usize; // bytes of bufs[i] already written
+    while i < bufs.len() {
+        if off >= bufs[i].len() {
+            i += 1;
+            off = 0;
+            continue;
+        }
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(MAX_SLICES.min(bufs.len() - i));
+        slices.push(IoSlice::new(&bufs[i][off..]));
+        for b in bufs[i + 1..].iter().take(MAX_SLICES - 1) {
+            slices.push(IoSlice::new(b));
+        }
+        let mut n = w.write_vectored(&slices)?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::WriteZero, "failed to write frames"));
+        }
+        total += n as u64;
+        while n > 0 {
+            let left = bufs[i].len() - off;
+            if n >= left {
+                n -= left;
+                i += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(total)
+}
+
+/// The per-connection event encoder: either the v2 per-event wire or
+/// the v3 batched wire with its running dictionary.
+enum EventEncoder {
+    /// Per-event `Event` frames, exactly the v2 byte stream.
+    PerEvent,
+    /// `EventBatch` frames with the connection dictionary.
+    Batched(frame::BatchDictEncoder),
+}
+
+impl EventEncoder {
+    fn new(wire: u32) -> EventEncoder {
+        if wire >= 3 {
+            EventEncoder::Batched(frame::BatchDictEncoder::new())
+        } else {
+            EventEncoder::PerEvent
+        }
+    }
+
+    /// Encode one forward round's events into wire frames (appended to
+    /// `wire_frames`) and optionally ring entries (appended to
+    /// `ring_frames` as `(stream, v2 event frame)` — the replay ring
+    /// stores per-event frames whatever the wire speaks). Batched mode
+    /// cuts one `EventBatch` per consecutive same-stream run, capped at
+    /// [`frame::MAX_BATCH_EVENTS`].
+    fn encode_events(
+        &mut self,
+        stats: &mut PublishStats,
+        events: Vec<(usize, crate::analysis::EventMsg)>,
+        wire_frames: &mut Vec<Vec<u8>>,
+        mut ring_frames: Option<&mut Vec<(usize, Vec<u8>)>>,
+    ) {
+        match self {
+            EventEncoder::PerEvent => {
+                for (idx, msg) in events {
+                    let buf = encode_event(idx, msg);
+                    stats.frames += 1;
+                    stats.events += 1;
+                    match ring_frames.as_deref_mut() {
+                        // the identical bytes serve wire and ring; the
+                        // round writer borrows them from the ring list
+                        Some(ring) => ring.push((idx, buf)),
+                        None => wire_frames.push(buf),
+                    }
+                }
+            }
+            EventEncoder::Batched(dict) => {
+                let mut run_stream = usize::MAX;
+                let mut run: Vec<BatchEvent> = Vec::new();
+                let mut flush =
+                    |stream: usize, run: &mut Vec<BatchEvent>, stats: &mut PublishStats| {
+                        if run.is_empty() {
+                            return;
+                        }
+                        let f = Frame::EventBatch {
+                            stream: stream as u32,
+                            events: std::mem::take(run),
+                        };
+                        wire_frames.push(encode_frame(&f));
+                        stats.frames += 1;
+                        stats.batches += 1;
+                    };
+                for (idx, mut msg) in events {
+                    if idx != run_stream || run.len() >= frame::MAX_BATCH_EVENTS as usize {
+                        flush(run_stream, &mut run, stats);
+                        run_stream = idx;
+                    }
+                    if let Some(ring) = ring_frames.as_deref_mut() {
+                        ring.push((
+                            idx,
+                            encode_event_parts(
+                                idx,
+                                msg.ts,
+                                msg.rank,
+                                msg.tid,
+                                msg.class.id,
+                                msg.fields.clone(),
+                            ),
+                        ));
+                    }
+                    run.push(BatchEvent {
+                        ts: msg.ts,
+                        key: dict.key_for(msg.rank, msg.tid, msg.class.id),
+                        fields: std::mem::take(&mut msg.fields),
+                    });
+                    stats.events += 1;
+                }
+                flush(run_stream, &mut run, stats);
+            }
+        }
+    }
+}
+
+/// One forward round, encoded and ready to hit the wire: control frames
+/// in protocol order around the event frames. `write` flushes the whole
+/// round with one vectored write.
+#[derive(Default)]
+struct EncodedRound {
+    /// Frames that must precede the events (`Streams` growth).
+    pre: Vec<Vec<u8>>,
+    /// Event frames (v2 per-event or v3 batches). For a ringed v2 round
+    /// this stays empty — the wire borrows `ring` instead.
+    events: Vec<Vec<u8>>,
+    /// `(stream, v2 event frame)` entries bound for the replay ring.
+    ring: Vec<(usize, Vec<u8>)>,
+    /// Does the wire borrow `ring` as its event bytes? (v2 + ring)
+    wire_uses_ring: bool,
+    /// Frames that follow the events (beacons, drops, closes).
+    post: Vec<Vec<u8>>,
+}
+
+impl EncodedRound {
+    /// Encode one forward batch. `ringed` selects whether per-event v2
+    /// frames are produced for the replay ring.
+    fn encode(
+        stats: &mut PublishStats,
+        enc: &mut EventEncoder,
+        batch: crate::live::ForwardBatch,
+        ringed: bool,
+    ) -> EncodedRound {
+        let mut round = EncodedRound {
+            wire_uses_ring: ringed && matches!(enc, EventEncoder::PerEvent),
+            ..Default::default()
+        };
+        if let Some(count) = batch.grown_to {
+            round.pre.push(encode_frame(&Frame::Streams { count: count as u32 }));
+            stats.frames += 1;
+        }
+        enc.encode_events(
+            stats,
+            batch.events,
+            &mut round.events,
+            ringed.then_some(&mut round.ring),
+        );
+        for (idx, watermark) in batch.beacons {
+            round.post.push(encode_frame(&Frame::Beacon { stream: idx as u32, watermark }));
+            stats.frames += 1;
+            stats.beacons += 1;
+        }
+        for (idx, dropped) in batch.drops {
+            round.post.push(encode_frame(&Frame::Drops { stream: idx as u32, dropped }));
+            stats.frames += 1;
+        }
+        for idx in batch.closed {
+            round.post.push(encode_frame(&Frame::Close { stream: idx as u32 }));
+            stats.frames += 1;
+        }
+        round
+    }
+
+    /// One vectored write for the whole round.
+    fn write(&self, w: &mut impl Write) -> io::Result<u64> {
+        let mut bufs: Vec<&[u8]> =
+            Vec::with_capacity(self.pre.len() + self.events.len() + self.ring.len() + self.post.len());
+        bufs.extend(self.pre.iter().map(Vec::as_slice));
+        if self.wire_uses_ring {
+            bufs.extend(self.ring.iter().map(|(_, b)| b.as_slice()));
+        } else {
+            bufs.extend(self.events.iter().map(Vec::as_slice));
+        }
+        bufs.extend(self.post.iter().map(Vec::as_slice));
+        write_all_vectored(w, &bufs)
+    }
+}
+
+/// [`publish`] with an explicit wire version: 3 (the default) batches
+/// events into [`Frame::EventBatch`] frames; 2 emits the exact legacy
+/// per-event byte stream for v2-only subscribers (`iprof serve
+/// --wire 2`). Panics on a version this build does not speak.
+pub fn publish_with<W: Write>(hub: &LiveHub, mut conn: W, wire: u32) -> io::Result<PublishStats> {
+    assert!(
+        frame::SUPPORTED_VERSIONS.contains(&wire),
+        "publisher wire version {wire} not in {:?}",
+        frame::SUPPORTED_VERSIONS
+    );
+    let mut stats = PublishStats { connections: 1, ..Default::default() };
+    let mut head = Vec::with_capacity(256);
+    frame::write_preamble_version(&mut head, wire)?;
+    frame::encode(
+        &Frame::Hello {
+            hostname: hub.hostname().to_string(),
+            // The same registry-derived metadata a post-mortem `collect`
+            // writes: the subscriber decodes class ids through the
+            // identical descriptor path.
+            metadata: generate_metadata(&[]),
+            streams: hub.stats().channels as u32,
+            // epoch 0 = not resumable: the subscriber must not send
+            // Resume, and a dropped connection is a permanent end of feed
+            epoch: 0,
+        },
+        &mut head,
+    );
+    conn.write_all(&head)?;
+    conn.flush()?;
+    stats.bytes += head.len() as u64;
     stats.frames += 1;
-    Ok(())
+
+    let mut enc = EventEncoder::new(wire);
+    let mut cursor = ForwardCursor::default();
+    while let Some(batch) = hub.next_forward_batch(&mut cursor) {
+        let round = EncodedRound::encode(&mut stats, &mut enc, batch, false);
+        stats.bytes += round.write(&mut conn)?;
+        // One flush per round: frames reach the subscriber with
+        // drain-round granularity (milliseconds), not buffer-fill
+        // granularity.
+        conn.flush()?;
+    }
+
+    let totals = hub.stats();
+    let eos = encode_frame(&Frame::Eos { received: totals.received, dropped: totals.dropped });
+    conn.write_all(&eos)?;
+    conn.flush()?;
+    stats.bytes += eos.len() as u64;
+    stats.frames += 1;
+    Ok(stats)
 }
 
 /// Publish `hub` over `conn` until the hub seals and drains: preamble,
 /// then [`Frame::Hello`] carrying the hostname and the full BTF metadata
 /// text (the subscriber's class table), then forward batches as they
 /// appear, then [`Frame::Eos`] with the hub's final received/dropped
-/// totals.
+/// totals. Speaks the default wire version ([`frame::VERSION`], batched);
+/// see [`publish_with`] for the v2 fallback.
 ///
 /// Blocks until end of stream; run it on its own thread next to the
 /// workload (see [`crate::coordinator::run_serve`]). Returns an error as
@@ -109,65 +395,7 @@ fn tracked_write(stats: &mut PublishStats, w: &mut impl Write, frame: &Frame) ->
 /// hub just stops being drained and its channels degrade to
 /// drop-and-count.
 pub fn publish<W: Write>(hub: &LiveHub, conn: W) -> io::Result<PublishStats> {
-    let mut w = BufWriter::new(conn);
-    let mut stats = PublishStats { connections: 1, ..Default::default() };
-    frame::write_preamble(&mut w)?;
-    stats.bytes += 8;
-
-    let hello = Frame::Hello {
-        hostname: hub.hostname().to_string(),
-        // The same registry-derived metadata a post-mortem `collect`
-        // writes: the subscriber decodes class ids through the identical
-        // descriptor path.
-        metadata: generate_metadata(&[]),
-        streams: hub.stats().channels as u32,
-        // epoch 0 = not resumable: the subscriber must not send Resume,
-        // and a dropped connection is a permanent end of feed
-        epoch: 0,
-    };
-    stats.bytes += frame::write_frame(&mut w, &hello)? as u64;
-    stats.frames += 1;
-    w.flush()?;
-
-    let mut cursor = ForwardCursor::default();
-    while let Some(batch) = hub.next_forward_batch(&mut cursor) {
-        if let Some(count) = batch.grown_to {
-            stats.bytes += frame::write_frame(&mut w, &Frame::Streams { count: count as u32 })? as u64;
-            stats.frames += 1;
-        }
-        for (idx, msg) in batch.events {
-            let buf = encode_event(idx, msg);
-            w.write_all(&buf)?;
-            stats.bytes += buf.len() as u64;
-            stats.frames += 1;
-            stats.events += 1;
-        }
-        for (idx, watermark) in batch.beacons {
-            let f = Frame::Beacon { stream: idx as u32, watermark };
-            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
-            stats.frames += 1;
-            stats.beacons += 1;
-        }
-        for (idx, dropped) in batch.drops {
-            let f = Frame::Drops { stream: idx as u32, dropped };
-            stats.bytes += frame::write_frame(&mut w, &f)? as u64;
-            stats.frames += 1;
-        }
-        for idx in batch.closed {
-            stats.bytes += frame::write_frame(&mut w, &Frame::Close { stream: idx as u32 })? as u64;
-            stats.frames += 1;
-        }
-        // One flush per batch: frames reach the subscriber with drain-round
-        // granularity (milliseconds), not buffer-fill granularity.
-        w.flush()?;
-    }
-
-    let totals = hub.stats();
-    let eos = Frame::Eos { received: totals.received, dropped: totals.dropped };
-    stats.bytes += frame::write_frame(&mut w, &eos)? as u64;
-    stats.frames += 1;
-    w.flush()?;
-    Ok(stats)
+    publish_with(hub, conn, frame::VERSION)
 }
 
 // ---------------------------------------------------------------------------
@@ -204,6 +432,9 @@ struct ReplaySummary {
 /// size exceeds the budget, then the globally oldest entries are evicted
 /// first. Sequence numbers are per stream and *dense* — a subscriber's
 /// cursor is simply its count of delivered events on that stream.
+/// Entries are always per-event v2 `Event` frames (valid on both wire
+/// versions), so one ring serves v2 and v3 connections alike and its
+/// sequence numbers count events regardless of live-path batching.
 struct ReplayRing {
     streams: Vec<StreamRing>,
     /// Streams in global push order: per-stream queues are FIFO, so the
@@ -307,31 +538,33 @@ pub enum ServeOutcome {
 ///
 /// # Replay ring semantics
 ///
-/// Every event frame relayed to the subscriber is also pushed into a
-/// byte-budgeted ring (`--resume-buffer <bytes>`), keyed by dense
-/// per-stream sequence numbers — the subscriber's resume cursor for a
-/// stream is simply how many events it has delivered there. On resume
-/// the publisher replays `ring[cursor..]` per stream; cursors that fell
-/// below the retained window get a [`Frame::ResumeGap`] with the exact
-/// evicted count, which the subscriber books into its drops ledger (the
-/// merged view is then incomplete by exactly that many events and
-/// `--live-strict` fails). Watermarks, cumulative drop counts and closes
-/// are *not* ringed: they are monotone or idempotent, so each new
-/// connection just re-reports the current values
-/// ([`ForwardCursor::resync`]).
+/// Every event relayed to the subscriber is also pushed into a
+/// byte-budgeted ring (`--resume-buffer <bytes>`) as its per-event v2
+/// `Event` frame, keyed by dense per-stream sequence numbers — the
+/// subscriber's resume cursor for a stream is simply how many events it
+/// has delivered there, batched or not. On resume the publisher replays
+/// `ring[cursor..]` per stream; cursors that fell below the retained
+/// window get a [`Frame::ResumeGap`] with the exact evicted count, which
+/// the subscriber books into its drops ledger (the merged view is then
+/// incomplete by exactly that many events and `--live-strict` fails).
+/// Watermarks, cumulative drop counts and closes are *not* ringed: they
+/// are monotone or idempotent, so each new connection just re-reports
+/// the current values ([`ForwardCursor::resync`]).
 pub struct Publisher {
     hub: Arc<LiveHub>,
     epoch: u64,
     ring: ReplayRing,
     cursor: ForwardCursor,
     stats: PublishStats,
+    wire: u32,
 }
 
 impl Publisher {
     /// Create a resumable session over `hub` with a `resume_buffer`-byte
     /// replay ring. `epoch` must be nonzero (use
     /// [`Publisher::fresh_epoch`] outside of tests): epoch 0 on the wire
-    /// means "not resumable".
+    /// means "not resumable". Speaks the default wire version; see
+    /// [`Publisher::with_wire`].
     pub fn new(hub: Arc<LiveHub>, epoch: u64, resume_buffer: usize) -> Publisher {
         assert!(epoch != 0, "epoch 0 means non-resumable; pick a nonzero session epoch");
         Publisher {
@@ -340,7 +573,23 @@ impl Publisher {
             ring: ReplayRing::new(resume_buffer),
             cursor: ForwardCursor::default(),
             stats: PublishStats::default(),
+            wire: frame::VERSION,
         }
+    }
+
+    /// Select the wire version for every connection this session serves:
+    /// 3 (default) batches events, 2 emits the legacy per-event stream
+    /// for v2-only subscribers. Panics on a version this build does not
+    /// speak. The replay ring is version-independent, so the choice only
+    /// affects the live pump's framing.
+    pub fn with_wire(mut self, wire: u32) -> Publisher {
+        assert!(
+            frame::SUPPORTED_VERSIONS.contains(&wire),
+            "publisher wire version {wire} not in {:?}",
+            frame::SUPPORTED_VERSIONS
+        );
+        self.wire = wire;
+        self
     }
 
     /// A fresh, effectively unique nonzero session epoch (wall-clock
@@ -403,10 +652,10 @@ impl Publisher {
 
     fn serve_inner<S: Read + Write>(&mut self, conn: &mut S) -> io::Result<()> {
         // Handshake. The Hello goes out unbuffered so the subscriber can
-        // answer; the streaming phase below buffers.
+        // answer; the streaming phase below writes whole rounds.
         let announced = self.hub.stats().channels;
         let mut head = Vec::with_capacity(256);
-        frame::write_preamble(&mut head)?;
+        frame::write_preamble_version(&mut head, self.wire)?;
         frame::encode(
             &Frame::Hello {
                 hostname: self.hub.hostname().to_string(),
@@ -429,82 +678,45 @@ impl Publisher {
             return Err(FrameError::Malformed("Resume epoch does not match this session").into());
         }
 
-        let mut w = BufWriter::new(conn);
-        let replay = self.ring.replay(&cursors, &mut w)?;
+        // Replay is always per-event v2 frames straight from the ring —
+        // valid on either wire version, cursors count events.
+        let replay = self.ring.replay(&cursors, conn)?;
         self.stats.replayed += replay.replayed;
         self.stats.gaps += replay.gaps;
         self.stats.bytes += replay.bytes;
         self.stats.frames += replay.replayed + replay.gap_frames;
-        w.flush()?;
+        conn.flush()?;
 
         // Re-report current watermarks/drops/closes from scratch: all
         // monotone or idempotent on the subscriber, so a fresh delta
-        // baseline resynchronizes everything that is not an event.
+        // baseline resynchronizes everything that is not an event. The
+        // batch dictionary is per-connection state on both ends, so it
+        // starts empty here too.
         self.cursor.resync(announced);
+        let mut enc = EventEncoder::new(self.wire);
         while let Some(batch) = self.hub.next_forward_batch(&mut self.cursor) {
-            let mut io_err: Option<io::Error> = None;
-            if let Some(count) = batch.grown_to {
-                let f = Frame::Streams { count: count as u32 };
-                io_err = tracked_write(&mut self.stats, &mut w, &f).err();
-            }
-            for (idx, msg) in batch.events {
-                let buf = encode_event(idx, msg);
-                if io_err.is_none() {
-                    match w.write_all(&buf) {
-                        Ok(()) => {
-                            self.stats.bytes += buf.len() as u64;
-                            self.stats.frames += 1;
-                            self.stats.events += 1;
-                        }
-                        Err(e) => io_err = Some(e),
-                    }
-                }
-                // Ring EVERY popped event, even after the wire just died
-                // mid-batch: popped events exist nowhere else, and the
-                // resuming subscriber's cursor decides which ones it
-                // actually got.
+            let round = EncodedRound::encode(&mut self.stats, &mut enc, batch, true);
+            // Write the round, then ring EVERY popped event — even when
+            // the wire just died mid-round: popped events exist nowhere
+            // else, and the resuming subscriber's cursor decides which
+            // ones it actually got.
+            let wrote = round.write(conn);
+            for (idx, buf) in round.ring {
                 self.ring.push(idx, buf);
             }
-            if io_err.is_none() {
-                for (idx, watermark) in batch.beacons {
-                    let f = Frame::Beacon { stream: idx as u32, watermark };
-                    match tracked_write(&mut self.stats, &mut w, &f) {
-                        Ok(()) => self.stats.beacons += 1,
-                        Err(e) => {
-                            io_err = Some(e);
-                            break;
-                        }
-                    }
-                }
+            match wrote {
+                Ok(n) => self.stats.bytes += n,
+                Err(e) => return Err(e),
             }
-            if io_err.is_none() {
-                for (idx, dropped) in batch.drops {
-                    let f = Frame::Drops { stream: idx as u32, dropped };
-                    if let Err(e) = tracked_write(&mut self.stats, &mut w, &f) {
-                        io_err = Some(e);
-                        break;
-                    }
-                }
-            }
-            if io_err.is_none() {
-                for idx in batch.closed {
-                    let f = Frame::Close { stream: idx as u32 };
-                    if let Err(e) = tracked_write(&mut self.stats, &mut w, &f) {
-                        io_err = Some(e);
-                        break;
-                    }
-                }
-            }
-            if let Some(e) = io_err {
-                return Err(e);
-            }
-            w.flush()?;
+            conn.flush()?;
         }
 
         let totals = self.hub.stats();
-        let eos = Frame::Eos { received: totals.received, dropped: totals.dropped };
-        tracked_write(&mut self.stats, &mut w, &eos)?;
-        w.flush()?;
+        let eos = encode_frame(&Frame::Eos { received: totals.received, dropped: totals.dropped });
+        conn.write_all(&eos)?;
+        conn.flush()?;
+        self.stats.bytes += eos.len() as u64;
+        self.stats.frames += 1;
         Ok(())
     }
 }
@@ -518,7 +730,9 @@ impl Publisher {
 /// through untouched; writes fail with `BrokenPipe` once `budget` bytes
 /// have gone through — from the subscriber's side the publisher dies
 /// mid-stream, possibly mid-frame. Dropping the wrapper drops the inner
-/// connection, so a TCP peer observes EOF.
+/// connection, so a TCP peer observes EOF. (Vectored writes funnel
+/// through the same budget: the default `write_vectored` forwards to
+/// `write`.)
 pub struct KillAfter<S> {
     inner: S,
     remaining: usize,
@@ -580,6 +794,28 @@ mod tests {
         }
     }
 
+    /// Every event timestamp in wire order, per-event and batched frames
+    /// alike (one decoder dictionary per call = per connection).
+    fn event_ts_of(wire: &[u8]) -> Vec<u64> {
+        let mut r = wire;
+        frame::read_preamble(&mut r).unwrap();
+        let mut dict = frame::BatchDict::new();
+        let mut ts_seen = Vec::new();
+        loop {
+            match frame::read_frame(&mut r).unwrap() {
+                Frame::Event { event, .. } => ts_seen.push(event.ts),
+                Frame::EventBatch { events, .. } => {
+                    for ev in events {
+                        dict.resolve(ev.key).unwrap();
+                        ts_seen.push(ev.ts);
+                    }
+                }
+                Frame::Eos { .. } => return ts_seen,
+                _ => {}
+            }
+        }
+    }
+
     #[test]
     fn publish_emits_preamble_hello_events_and_eos() {
         let hub = LiveHub::new("pubtest", 8, false);
@@ -591,9 +827,10 @@ mod tests {
         let stats = publish(&hub, &mut wire).unwrap();
         assert_eq!(stats.events, 2);
         assert_eq!(stats.bytes as usize, wire.len());
+        assert!(stats.batches >= 1, "v3 default coalesces events into batches");
 
         let mut r = &wire[..];
-        frame::read_preamble(&mut r).unwrap();
+        assert_eq!(frame::read_preamble(&mut r).unwrap(), 3, "default wire is v3");
         let mut frames = Vec::new();
         // read until Eos (the protocol guarantees it terminates the stream)
         loop {
@@ -608,17 +845,69 @@ mod tests {
             matches!(frames[0], Frame::Hello { epoch: 0, .. }),
             "one-shot publish advertises a non-resumable session (epoch 0)"
         );
-        let events: Vec<u64> = frames
-            .iter()
-            .filter_map(|f| match f {
-                Frame::Event { event, .. } => Some(event.ts),
-                _ => None,
-            })
-            .collect();
-        assert_eq!(events, vec![1, 2], "per-stream event order is preserved");
+        assert_eq!(event_ts_of(&wire), vec![1, 2], "per-stream event order is preserved");
         assert!(frames.iter().any(|f| matches!(f, Frame::Close { stream: 0 })));
         assert!(matches!(frames.last(), Some(Frame::Eos { received: 2, dropped: 0 })));
         assert!(r.is_empty(), "Eos is the final frame");
+    }
+
+    #[test]
+    fn publish_with_wire2_emits_the_legacy_per_event_stream() {
+        let hub = LiveHub::new("pubtest", 8, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, vec![msg(1), msg(2)]);
+        hub.close_all();
+
+        let mut wire = Vec::new();
+        let stats = publish_with(&hub, &mut wire, 2).unwrap();
+        assert_eq!(stats.events, 2);
+        assert_eq!(stats.batches, 0, "a v2 wire never batches");
+        assert_eq!(stats.bytes as usize, wire.len());
+        let mut r = &wire[..];
+        assert_eq!(frame::read_preamble(&mut r).unwrap(), 2, "preamble announces the fallback");
+        loop {
+            match frame::read_frame(&mut r).unwrap() {
+                Frame::EventBatch { .. } => panic!("EventBatch on a v2 wire"),
+                Frame::Eos { .. } => break,
+                _ => {}
+            }
+        }
+        assert_eq!(event_ts_of(&wire), vec![1, 2]);
+    }
+
+    #[test]
+    fn v3_batches_split_on_stream_change_and_share_one_dictionary() {
+        let hub = LiveHub::new("pubtest", 64, false);
+        hub.ensure_channels(2);
+        // same (rank, tid, class) everywhere: the first batch defines the
+        // triple, every later event refs it — across batch boundaries
+        hub.push_batch(0, (0..10).map(msg).collect());
+        hub.push_batch(1, (10..14).map(msg).collect());
+        hub.close_all();
+        let mut wire = Vec::new();
+        let stats = publish(&hub, &mut wire).unwrap();
+        assert_eq!(stats.events, 14);
+        assert_eq!(stats.batches, 2, "one batch per consecutive same-stream run");
+        let mut r = &wire[..];
+        frame::read_preamble(&mut r).unwrap();
+        let mut defs = 0;
+        let mut refs = 0;
+        loop {
+            match frame::read_frame(&mut r).unwrap() {
+                Frame::EventBatch { events, .. } => {
+                    for ev in &events {
+                        match ev.key {
+                            frame::BatchKey::Def { .. } => defs += 1,
+                            frame::BatchKey::Ref(0) => refs += 1,
+                            frame::BatchKey::Ref(_) => panic!("one triple, one index"),
+                        }
+                    }
+                }
+                Frame::Eos { .. } => break,
+                _ => {}
+            }
+        }
+        assert_eq!((defs, refs), (1, 13), "dictionary is connection state, not batch state");
     }
 
     #[test]
@@ -711,6 +1000,29 @@ mod tests {
         // a cursor inside the window replays gap-free
         let s = ring.replay(&[4], &mut Vec::new()).unwrap();
         assert_eq!((s.replayed, s.gaps), (1, 0));
+    }
+
+    #[test]
+    fn write_all_vectored_advances_through_partial_and_single_buffer_writes() {
+        // KillAfter's write ignores write_vectored batching (default
+        // forwarding) and truncates at its budget — both paths the
+        // helper must survive by re-slicing and continuing
+        let mut sink = Vec::new();
+        let bufs: Vec<Vec<u8>> = vec![vec![1; 5], vec![], vec![2; 7], vec![3; 3]];
+        let slices: Vec<&[u8]> = bufs.iter().map(Vec::as_slice).collect();
+        let n = write_all_vectored(&mut KillAfter::new(&mut sink, 1 << 20), &slices).unwrap();
+        assert_eq!(n, 15);
+        let mut expect = Vec::new();
+        for b in &bufs {
+            expect.extend_from_slice(b);
+        }
+        assert_eq!(sink, expect, "all bytes, in order, empties skipped");
+        // and a mid-buffer failure surfaces as the error it is
+        let mut sink = Vec::new();
+        let err =
+            write_all_vectored(&mut KillAfter::new(&mut sink, 6), &slices).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(sink.len(), 6, "exactly the budget reached the wire");
     }
 
     #[test]

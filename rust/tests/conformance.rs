@@ -10,11 +10,14 @@
 //! with `include_str!`, so deleting one fails the *build*, not just a
 //! test run.
 //!
-//! The corpus freezes protocol **version 2** (session resumption:
-//! Hello grew an epoch, Resume/ResumeGap arrived). The retired v1
-//! fixtures (`preamble.hex`, `hello.hex`) stay on disk as *rejection*
-//! goldens: a v2 build must refuse them structurally, never mis-parse
-//! them.
+//! The corpus freezes protocol **version 3** (the batched hot path:
+//! EventBatch with delta timestamps, varint ids and the per-connection
+//! key dictionary). v3 is a strict byte-superset of v2, and v2 stays a
+//! *live* golden — `iprof serve --wire 2` must keep emitting exactly
+//! the frozen v2 preamble and per-event frames — so both preambles are
+//! asserted. The retired v1 fixtures (`preamble.hex`, `hello.hex`)
+//! stay on disk as *rejection* goldens: a current build must refuse
+//! them structurally, never mis-parse them.
 //!
 //! The robustness half is the hostile-input property: truncated,
 //! bit-flipped and random byte streams must always produce a structured
@@ -23,9 +26,12 @@
 //! never misreading garbage as a frame that then over-consumes.
 
 use thapi::remote::frame::{
-    read_frame, read_preamble, write_preamble, MAX_FRAME_LEN, MAX_STREAMS,
+    read_frame, read_preamble, write_preamble, write_preamble_version, MAX_FRAME_LEN, MAX_STREAMS,
 };
-use thapi::remote::{decode, decode_body, encode, Frame, FrameError, WireEvent};
+use thapi::remote::{
+    decode, decode_batch_into, decode_body, encode, BatchDict, BatchEvent, BatchKey, Frame,
+    FrameError, WireEvent,
+};
 use thapi::tracer::encoder::FieldValue;
 use thapi::util::prop;
 
@@ -57,6 +63,16 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
                 metadata: "btf_version: 1\nevents:\n".into(),
                 streams: 3,
                 epoch: 0x0123_4567_89ab_cdef,
+            },
+        ),
+        (
+            "hello_v3",
+            include_str!("fixtures/thrl/hello_v3.hex"),
+            Frame::Hello {
+                hostname: "node1".into(),
+                metadata: "btf_version: 1\nevents:\n".into(),
+                streams: 2,
+                epoch: 0,
             },
         ),
         (
@@ -114,6 +130,26 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
             include_str!("fixtures/thrl/resume_gap.hex"),
             Frame::ResumeGap { stream: 2, missed: 17 },
         ),
+        (
+            "event_batch",
+            include_str!("fixtures/thrl/event_batch.hex"),
+            Frame::EventBatch {
+                stream: 2,
+                events: vec![
+                    BatchEvent {
+                        ts: 1000,
+                        key: BatchKey::Def { rank: 1, tid: 42, class_id: 9 },
+                        fields: vec![FieldValue::U64(7)],
+                    },
+                    BatchEvent { ts: 999, key: BatchKey::Ref(0), fields: vec![] },
+                    BatchEvent {
+                        ts: 1007,
+                        key: BatchKey::Ref(0),
+                        fields: vec![FieldValue::Str("k".into())],
+                    },
+                ],
+            },
+        ),
     ]
 }
 
@@ -122,16 +158,28 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn preamble_fixture_is_frozen() {
-    let golden = unhex(include_str!("fixtures/thrl/preamble_v2.hex"));
+fn preamble_fixtures_are_frozen() {
+    // the default preamble is v3 ...
+    let golden_v3 = unhex(include_str!("fixtures/thrl/preamble_v3.hex"));
     let mut ours = Vec::new();
     write_preamble(&mut ours).unwrap();
     assert_eq!(
-        ours, golden,
+        ours, golden_v3,
         "preamble encoding drifted from the frozen fixture (docs/PROTOCOL.md)"
     );
-    let v = read_preamble(&mut &golden[..]).expect("the frozen preamble must be accepted");
-    assert_eq!(v, 2, "this corpus freezes protocol version 2");
+    let v = read_preamble(&mut &golden_v3[..]).expect("the frozen v3 preamble must be accepted");
+    assert_eq!(v, 3, "this corpus freezes protocol version 3");
+    // ... and the v2 preamble stays a LIVE golden: `iprof serve --wire 2`
+    // must keep producing exactly these bytes for old subscribers
+    let golden_v2 = unhex(include_str!("fixtures/thrl/preamble_v2.hex"));
+    let mut ours = Vec::new();
+    write_preamble_version(&mut ours, 2).unwrap();
+    assert_eq!(
+        ours, golden_v2,
+        "the --wire 2 fallback preamble drifted from the frozen v2 fixture"
+    );
+    let v = read_preamble(&mut &golden_v2[..]).expect("the frozen v2 preamble must be accepted");
+    assert_eq!(v, 2, "v2 stays a supported fallback");
 }
 
 /// Version 2 deliberately broke v1 (the Hello layout grew a session
@@ -172,22 +220,43 @@ fn every_fixture_decodes_to_its_golden_frame_and_reencodes_byte_identically() {
 }
 
 #[test]
+fn event_batch_fixture_decodes_identically_on_the_stateful_fast_path() {
+    // decode_batch_into is what `iprof attach` actually runs; it must
+    // agree byte-for-byte with the slow golden decode, resolving Refs
+    // through the connection dictionary the Defs populate
+    let bytes = unhex(include_str!("fixtures/thrl/event_batch.hex"));
+    let body = &bytes[4..]; // strip the length prefix
+    let mut dict = BatchDict::new();
+    let mut seen: Vec<(u64, u32, u32, u32, usize)> = Vec::new();
+    let (stream, n) = decode_batch_into(body, &mut dict, |ts, rank, tid, class_id, fields| {
+        seen.push((ts, rank, tid, class_id, fields.len()));
+    })
+    .expect("the golden batch must decode on the fast path");
+    assert_eq!((stream, n), (2, 3));
+    assert_eq!(
+        seen,
+        vec![(1000, 1, 42, 9, 1), (999, 1, 42, 9, 0), (1007, 1, 42, 9, 1)],
+        "fast-path decode drifted from the documented fixture values"
+    );
+}
+
+#[test]
 fn fixture_corpus_covers_every_frame_kind() {
     // one fixture per discriminant: adding a frame kind to the protocol
     // without freezing its bytes here must fail
     let frames = golden_frames();
     let kinds: std::collections::HashSet<std::mem::Discriminant<Frame>> =
         frames.iter().map(|(_, _, f)| std::mem::discriminant(f)).collect();
-    assert_eq!(kinds.len(), 9, "fixture corpus no longer covers every frame kind");
+    assert_eq!(kinds.len(), 10, "fixture corpus no longer covers every frame kind");
 }
 
 #[test]
 fn concatenated_fixtures_read_as_one_frame_stream() {
     // the whole corpus back to back after the preamble: the blocking
     // reader must consume it frame by frame with exact length accounting
-    // (grammar-wise Resume flows the other way, but the codec is
-    // direction-agnostic)
-    let mut wire = unhex(include_str!("fixtures/thrl/preamble_v2.hex"));
+    // (grammar-wise Resume flows the other way and EventBatch needs a v3
+    // preamble, but the codec is direction- and version-agnostic)
+    let mut wire = unhex(include_str!("fixtures/thrl/preamble_v3.hex"));
     let frames = golden_frames();
     for (_, raw, _) in &frames {
         wire.extend_from_slice(&unhex(raw));
@@ -246,6 +315,27 @@ fn hostile_field_and_string_counts_inside_bodies_are_structured_errors() {
     body.extend_from_slice(&0u16.to_le_bytes()); // empty hostname
     body.extend_from_slice(&u32::MAX.to_le_bytes()); // metadata length lie
     assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+
+    // a 7-byte EventBatch body claiming u64::MAX events: the varint count
+    // is capped at MAX_BATCH_EVENTS before any table is allocated
+    let mut body = vec![0x0au8]; // T_EVENT_BATCH
+    body.extend_from_slice(&0u32.to_le_bytes()); // stream
+    body.extend_from_slice(&[0xff; 10]); // varint u64::MAX event-count lie
+    assert!(matches!(decode_body(&body), Err(FrameError::Malformed(_))));
+    // and a batch referencing a dictionary slot that was never defined is
+    // equally structural on the stateful fast path (key 2 = Ref(1) into
+    // an empty connection dictionary)
+    let mut body = vec![0x0au8];
+    body.extend_from_slice(&0u32.to_le_bytes()); // stream
+    body.push(0x01); // count = 1
+    body.push(0x00); // ts delta 0
+    body.push(0x02); // key = Ref(1): never defined
+    body.push(0x00); // nfields = 0
+    let mut dict = BatchDict::new();
+    assert!(
+        decode_batch_into(&body, &mut dict, |_, _, _, _, _| ()).is_err(),
+        "dangling dictionary refs must not decode"
+    );
 
     // MAX_STREAMS is the subscriber-side cap the reader enforces on
     // Streams/Event indices; sanity-pin its order of magnitude here so a

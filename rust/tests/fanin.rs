@@ -20,8 +20,8 @@ use thapi::coordinator::{run, run_fanin, run_fanin_resumable, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::{replay_trace, run_live_pipeline, LiveHub, LiveSource};
 use thapi::remote::{
-    frame, publish, FanIn, Frame, KillAfter, PublishStats, Publisher, ReconnectPolicy,
-    ServeOutcome, WireEvent,
+    frame, publish, publish_with, FanIn, Frame, KillAfter, PublishStats, Publisher,
+    ReconnectPolicy, ServeOutcome, WireEvent,
 };
 use thapi::tracer::btf::{generate_metadata, DecodedClass, Metadata, TraceData};
 use thapi::util::prop;
@@ -203,6 +203,88 @@ fn fanin_equals_single_local_live_over_concatenated_streams() {
         "fan-in over 2 publishers must equal one local --live over the concatenation"
     );
     assert_eq!(out.latency.merged, 8);
+}
+
+// ---------------------------------------------------------------------------
+// Golden: a mixed-version fleet (one v3 batched publisher, one v2
+// per-event publisher) merges byte-identically to an all-v2 fleet —
+// the wire format is an encoding detail, never an ordering input
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_v3_and_v2_publishers_merge_byte_identically_to_all_v2() {
+    // same stream split as the concatenation golden above, including the
+    // cross-publisher timestamp ties that expose any merge-order drift
+    let batches_a: Vec<Vec<(u64, u32, u32)>> = vec![
+        vec![(10, 0, 1), (15, 0, 1), (20, 0, 1), (25, 0, 1)],
+        vec![(10, 0, 2), (17, 0, 2)],
+    ];
+    let batches_b: Vec<Vec<(u64, u32, u32)>> = vec![vec![(10, 1, 1), (15, 1, 1)]];
+    let mk = |hub: &LiveHub, batch: &[(u64, u32, u32)]| -> Vec<EventMsg> {
+        batch
+            .iter()
+            .enumerate()
+            .map(|(i, &(ts, rank, tid))| {
+                let name = if i % 2 == 0 {
+                    "lttng_ust_ze:zeInit_entry"
+                } else {
+                    "lttng_ust_ze:zeInit_exit"
+                };
+                reg_msg(hub, name, ts, rank, tid)
+            })
+            .collect()
+    };
+    let wire = |batches: &[Vec<(u64, u32, u32)>], version: u32| -> Vec<u8> {
+        let hub = LiveHub::new("fan", 64, false);
+        hub.ensure_channels(batches.len());
+        for (i, b) in batches.iter().enumerate() {
+            hub.push_batch(i, mk(&hub, b));
+        }
+        hub.close_all();
+        let mut buf = Vec::new();
+        publish_with(&hub, &mut buf, version).unwrap();
+        buf
+    };
+    let run_pair = |ver_a: u32, ver_b: u32| {
+        let fan = FanIn::open(
+            vec![
+                Cursor::new(wire(&batches_a, ver_a)),
+                Cursor::new(wire(&batches_b, ver_b)),
+            ],
+            64,
+        )
+        .unwrap();
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let out = run_live_pipeline(fan.source(), &mut sinks, None, |_| {});
+        let origins = fan.hub().origin_stats();
+        let stats = fan.finish().unwrap();
+        (out, origins, stats)
+    };
+
+    let (ref_out, ref_origins, ref_stats) = run_pair(2, 2);
+    assert_eq!(ref_stats.failed(), 0);
+    assert!(
+        ref_origins.iter().all(|o| o.wire_version == 2 && o.batches == 0),
+        "the all-v2 reference fleet must be batch-free: {ref_origins:?}"
+    );
+
+    let (out, origins, stats) = run_pair(3, 2);
+    assert_eq!(stats.failed(), 0);
+    assert_eq!(stats.server_dropped(), 0);
+    assert_eq!(
+        out.reports[0].payload(),
+        ref_out.reports[0].payload(),
+        "a mixed v3/v2 fleet must merge byte-identically to an all-v2 fleet"
+    );
+    assert_eq!(out.latency.merged, ref_out.latency.merged);
+    // the negotiation outcome is visible per origin: A batched, B fell back
+    assert_eq!((origins[0].wire_version, origins[1].wire_version), (3, 2));
+    assert!(origins[0].batches >= 1, "the v3 origin arrived batched: {origins:?}");
+    assert_eq!(origins[1].batches, 0, "the v2 origin stayed per-event: {origins:?}");
+    assert_eq!((stats.per[0].wire_version, stats.per[1].wire_version), (3, 2));
+    // and event accounting is identical on both wires
+    assert_eq!(stats.per[0].events, ref_stats.per[0].events);
+    assert_eq!(stats.per[1].events, ref_stats.per[1].events);
 }
 
 // ---------------------------------------------------------------------------

@@ -12,7 +12,10 @@ use thapi::analysis::{self, AnalysisSink, TallySink, TimelineSink};
 use thapi::coordinator::{run_attach, run_serve, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::{replay_trace, LiveConfig, LiveHub, LiveSource};
-use thapi::remote::{decode, encode, publish, Attachment, Frame, WireEvent};
+use thapi::remote::{
+    decode, encode, publish, Attachment, BatchEvent, BatchKey, Frame, WireEvent,
+    MAX_DICT_ENTRIES,
+};
 use thapi::tracer::encoder::FieldValue;
 use thapi::util::{prop, Rng};
 
@@ -53,8 +56,26 @@ fn arbitrary_field(rng: &mut Rng) -> FieldValue {
     }
 }
 
+fn arbitrary_batch_event(rng: &mut Rng) -> BatchEvent {
+    BatchEvent {
+        // arbitrary u64 timestamps: deltas are zigzag-wrapped, so even
+        // wildly non-monotone sequences must round-trip exactly
+        ts: rng.next_u64(),
+        key: if rng.below(2) == 0 {
+            BatchKey::Def {
+                rank: rng.next_u64() as u32,
+                tid: rng.next_u64() as u32,
+                class_id: rng.next_u64() as u32,
+            }
+        } else {
+            BatchKey::Ref(rng.below(u64::from(MAX_DICT_ENTRIES)) as u32)
+        },
+        fields: (0..rng.range(0, 6)).map(|_| arbitrary_field(rng)).collect(),
+    }
+}
+
 fn arbitrary_frame(rng: &mut Rng) -> Frame {
-    match rng.below(9) {
+    match rng.below(10) {
         0 => {
             let n = rng.range(0, 512);
             let metadata: String = (0..n)
@@ -86,6 +107,10 @@ fn arbitrary_frame(rng: &mut Rng) -> Frame {
             cursors: (0..rng.range(0, 9)).map(|_| rng.next_u64()).collect(),
         },
         7 => Frame::ResumeGap { stream: rng.below(1 << 16) as u32, missed: rng.next_u64() },
+        8 => Frame::EventBatch {
+            stream: rng.below(1 << 16) as u32,
+            events: (0..rng.range(0, 9)).map(|_| arbitrary_batch_event(rng)).collect(),
+        },
         _ => Frame::Eos { received: rng.next_u64(), dropped: rng.next_u64() },
     }
 }
@@ -246,6 +271,7 @@ fn serve_and_attach_whole_stack_matches_postmortem_of_retained_trace() {
                 &IprofConfig::default(),
                 cfg_ref,
                 conn,
+                thapi::remote::VERSION,
             )
             .unwrap()
         });
