@@ -114,7 +114,7 @@ fn main() {
         let t0 = Instant::now();
         let conns: Vec<Cursor<Vec<u8>>> = wires.into_iter().map(Cursor::new).collect();
         let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
-        let report = run_fanin(conns, 4096, sinks, None, |_| {}).unwrap();
+        let report = run_fanin(conns, 4096, sinks, None, |_| {}, &Default::default()).unwrap();
         let fanin_wall = t0.elapsed();
 
         assert_eq!(report.failed_publishers(), 0);

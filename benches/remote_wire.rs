@@ -11,7 +11,10 @@
 //!    stateful fast path (`decode_batch_into`) the subscriber runs;
 //! 3. **loopback relay** — a recorded trace replayed through a hub,
 //!    published into a Vec on each wire, attached from it, and merged
-//!    into a tally: the whole remote path minus the kernel socket.
+//!    into a tally: the whole remote path minus the kernel socket;
+//! 4. **telemetry overhead** — the same v3 loopback with a `--telemetry`
+//!    scrape endpoint being polled vs unexposed
+//!    (`telemetry_overhead_pct`, budget <= 5%).
 //!
 //! Beacons/closes don't batch and are identical on both wires, so the
 //! codec comparison uses a pure event stream; the loopback rows carry
@@ -24,6 +27,8 @@
 //! cargo bench --bench remote_wire
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 use thapi::analysis::{AnalysisSink, TallySink};
 use thapi::apps::spechpc;
@@ -35,6 +40,7 @@ use thapi::remote::{
     decode, decode_batch_into, encode, is_event_batch, publish_with, Attachment, BatchDict,
     BatchDictEncoder, BatchEvent, Frame, WireEvent,
 };
+use thapi::telemetry::{scrape, TelemetryServer};
 use thapi::tracer::encoder::FieldValue;
 use thapi::tracer::TracingMode;
 use thapi::util::Rng;
@@ -284,4 +290,68 @@ fn bench_loopback(json: &mut BenchJson) {
     }
     println!("{}", t.render());
     println!("both wires asserted byte-identical to post-mortem; drops: 0");
+
+    // ── telemetry exposure overhead ────────────────────────────────
+    // The registry's counters always run (they ARE the accounting); what
+    // can be toggled is the exposure. Re-run the v3 loopback with a
+    // scrape endpoint bound on the subscriber's registry and an
+    // aggressive poller hitting it (every ~5 ms — far hotter than any
+    // real Prometheus job), vs no endpoint at all. The delta is the
+    // price of being watched; target <= 5%.
+    let (warmup, reps) = if quick_mode() { (1, 3) } else { (2, 7) };
+    let loopback_v3 = |expose: bool| {
+        let hub = LiveHub::new(&node.config.hostname, 4096, false);
+        let wire = std::thread::scope(|s| {
+            let feeder = s.spawn(|| replay_trace(&hub, trace, 64));
+            let mut buf = Vec::new();
+            publish_with(&hub, &mut buf, 3).unwrap();
+            feeder.join().unwrap();
+            buf
+        });
+        let att = Attachment::open(std::io::Cursor::new(wire), 4096).unwrap();
+        let source = att.source();
+        let endpoint = if expose {
+            let registry = source.hub().telemetry().clone();
+            let server = TelemetryServer::bind("127.0.0.1:0", registry).unwrap();
+            let addr = server.local_addr().to_string();
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = stop.clone();
+            let poller = std::thread::spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    let _ = scrape(&addr);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            });
+            Some((server, stop, poller))
+        } else {
+            None
+        };
+        let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+        let out = thapi::live::run_live_pipeline(source, &mut sinks, None, |_| {});
+        let stats = att.finish().unwrap();
+        if let Some((server, stop, poller)) = endpoint {
+            stop.store(true, Ordering::Relaxed);
+            poller.join().unwrap();
+            server.shutdown();
+        }
+        assert_eq!(stats.server_dropped, 0);
+        assert_eq!(out.reports[0].payload().unwrap(), pm_text);
+    };
+    let off = Stats::measure(warmup, reps, || loopback_v3(false));
+    let on = Stats::measure(warmup, reps, || loopback_v3(true));
+    let (off_ms, on_ms) =
+        (off.median().as_secs_f64() * 1e3, on.median().as_secs_f64() * 1e3);
+    let overhead_pct = (on_ms / off_ms - 1.0) * 100.0;
+    println!(
+        "telemetry exposure overhead (v3 loopback, ~5 ms scrape poller): \
+         off {off_ms:.2} ms, on {on_ms:.2} ms => {overhead_pct:+.2}% (target <= 5%)"
+    );
+    json.meta("telemetry_overhead_pct", js_num(overhead_pct));
+    for (name, ms) in [("loopback_v3_tele_off", off_ms), ("loopback_v3_tele_on", on_ms)] {
+        json.result(&[
+            ("name", js_str(name)),
+            ("median_ms", js_num(ms)),
+            ("events_per_s", js_num(events as f64 / (ms / 1e3))),
+        ]);
+    }
 }

@@ -73,7 +73,7 @@ fn main() {
             TcpStream::connect(addrs[1]).expect("connect"),
         ];
         let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
-        run_fanin(conns, 4096, sinks, None, |_| {}).expect("fan-in attach")
+        run_fanin(conns, 4096, sinks, None, |_| {}, &Default::default()).expect("fan-in attach")
     });
 
     println!("== union tally over both publishers ==\n");

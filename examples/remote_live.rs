@@ -34,8 +34,16 @@ fn main() {
         let serve = scope.spawn(|| {
             let (conn, _) = listener.accept().expect("accept");
             let live_cfg = LiveConfig { channel_depth: 4096, retain: false, refresh: None };
-            run_serve(&node, app.as_ref(), &IprofConfig::default(), &live_cfg, conn)
-                .expect("publish")
+            run_serve(
+                &node,
+                app.as_ref(),
+                &IprofConfig::default(),
+                &live_cfg,
+                conn,
+                thapi::remote::VERSION,
+                &Default::default(),
+            )
+            .expect("publish")
         });
 
         // Subscriber: attach over TCP and tally on-line.

@@ -18,6 +18,7 @@ use crate::remote::{
     self, FanIn, FanInStats, PublishStats, Publisher, ReconnectPolicy, RemoteStats, ServeOutcome,
 };
 use crate::sampling::{Sampler, SamplingConfig};
+use crate::telemetry::{TelemetryExposure, TelemetryOptions};
 use crate::tracer::btf::{self, TraceData};
 use crate::tracer::{
     install_session, uninstall_session, SessionConfig, SessionStats, SinkKind, TracingMode,
@@ -216,7 +217,7 @@ impl LiveRunReport {
     /// (ring discard + channel drop). Zero means the on-line reports
     /// cover exactly what a post-mortem run would have seen.
     pub fn total_dropped(&self) -> u64 {
-        self.stats.dropped + self.live.dropped
+        self.stats.dropped.saturating_add(self.live.dropped)
     }
 }
 
@@ -333,7 +334,7 @@ impl ServeReport {
     /// here, never as application time). Zero means the subscriber saw
     /// exactly what a local `--live` run would have.
     pub fn total_dropped(&self) -> u64 {
-        self.stats.dropped + self.live.dropped
+        self.stats.dropped.saturating_add(self.live.dropped)
     }
 }
 
@@ -351,6 +352,10 @@ impl ServeReport {
 /// 3 (default) batches events, 2 keeps the frozen per-event stream for
 /// v2-only subscribers — the subscriber hard-rejects versions it does
 /// not speak, so the downgrade is always publisher-selected.
+///
+/// `telemetry` selects self-telemetry exposures (`--telemetry`,
+/// `--telemetry-json`) over the hub's registry for the duration of the
+/// run; pass `&TelemetryOptions::default()` to expose nothing.
 pub fn run_serve<W: Write + Send>(
     node: &Arc<Node>,
     workload: &dyn Workload,
@@ -358,9 +363,13 @@ pub fn run_serve<W: Write + Send>(
     live_cfg: &LiveConfig,
     conn: W,
     wire: u32,
+    telemetry: &TelemetryOptions,
 ) -> std::io::Result<ServeReport> {
     assert!(config.tracing, "serve mode requires tracing");
     let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    // before the session installs: a failed bind must not leave a
+    // half-launched run behind
+    let exposure = TelemetryExposure::start(telemetry, hub.telemetry())?;
     let session = install_session(SessionConfig {
         mode: config.mode,
         buffer_capacity: config.buffer_capacity,
@@ -404,6 +413,9 @@ pub fn run_serve<W: Write + Send>(
     let trace = live_cfg.retain.then(|| {
         btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
     });
+    // threads have joined: the registry is settled, so the exposure's
+    // final JSON snapshot carries exactly the numbers reported below
+    exposure.finish();
     Ok(ServeReport {
         app: workload.name().to_string(),
         config: config.label(),
@@ -439,6 +451,7 @@ pub fn run_serve_resumable<S, A>(
     mut accept: A,
     resume_buffer: usize,
     wire: u32,
+    telemetry: &TelemetryOptions,
 ) -> std::io::Result<ServeReport>
 where
     S: Read + Write + Send,
@@ -446,6 +459,7 @@ where
 {
     assert!(config.tracing, "serve mode requires tracing");
     let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    let exposure = TelemetryExposure::start(telemetry, hub.telemetry())?;
     let session = install_session(SessionConfig {
         mode: config.mode,
         buffer_capacity: config.buffer_capacity,
@@ -508,6 +522,7 @@ where
     let trace = live_cfg.retain.then(|| {
         btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
     });
+    exposure.finish();
     let (publish, disconnects) = published?;
     Ok(ServeReport {
         app: workload.name().to_string(),
@@ -557,7 +572,8 @@ pub fn run_attach<R: Read + Send + 'static>(
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
 ) -> std::io::Result<AttachReport> {
-    let mut r = run_fanin(vec![conn], depth, sinks, refresh, on_refresh)?;
+    let mut r =
+        run_fanin(vec![conn], depth, sinks, refresh, on_refresh, &TelemetryOptions::default())?;
     Ok(AttachReport {
         hostname: r.hostnames.swap_remove(0),
         reports: r.reports,
@@ -608,23 +624,19 @@ impl FanInReport {
         self.stats.failed()
     }
 
-    /// Best known publisher-side loss (saturating): per publisher, the
-    /// larger of its Eos total and its cumulative per-stream `Drops`
-    /// ledger, **plus** any resume gaps (events the publisher's replay
-    /// ring evicted before a reconnect could fetch them) — so a
-    /// publisher that reported drops and then died before Eos still
-    /// counts as lossy, and a resumed-with-gap session can never pass
-    /// as lossless (`--live-strict` gates on this, not on
-    /// [`FanInReport::server_dropped`] alone).
+    /// Best known publisher-side loss (saturating): the sum of
+    /// [`OriginStats::known_dropped`] over every origin — per
+    /// publisher, the larger of its self-reported Eos total and our own
+    /// receiver-side ledger sum (cumulative `Drops` + resume gaps).
+    /// The ledgers are disjoint by construction so their sum never
+    /// counts an event twice, and the opaque Eos total *competes*
+    /// against that sum instead of stacking a gap on top of a drop it
+    /// may already include — a publisher that reported drops and then
+    /// died before Eos still counts as lossy, and a resumed-with-gap
+    /// session can never pass as lossless (`--live-strict` gates on
+    /// this, not on [`FanInReport::server_dropped`] alone).
     pub fn known_dropped(&self) -> u64 {
-        self.stats
-            .per
-            .iter()
-            .zip(&self.origins)
-            .fold(0u64, |a, (s, o)| {
-                a.saturating_add(s.server_dropped.max(o.remote_dropped))
-                    .saturating_add(o.resume_gaps)
-            })
+        self.origins.iter().fold(0u64, |a, o| a.saturating_add(o.known_dropped()))
     }
 
     /// Successful session resumes across every publisher connection.
@@ -654,8 +666,9 @@ pub fn run_fanin<R: Read + Send + 'static>(
     sinks: Vec<Box<dyn AnalysisSink>>,
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
+    telemetry: &TelemetryOptions,
 ) -> std::io::Result<FanInReport> {
-    drive_fanin(FanIn::open(conns, depth)?, sinks, refresh, on_refresh)
+    drive_fanin(FanIn::open(conns, depth)?, sinks, refresh, on_refresh, telemetry)
 }
 
 /// [`run_fanin`] with reconnect/resume: every connection comes from a
@@ -674,12 +687,19 @@ pub fn run_fanin_resumable<S, C>(
     sinks: Vec<Box<dyn AnalysisSink>>,
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
+    telemetry: &TelemetryOptions,
 ) -> std::io::Result<FanInReport>
 where
     S: Read + Write + Send + 'static,
     C: FnMut() -> std::io::Result<S> + Send + 'static,
 {
-    drive_fanin(FanIn::open_resumable(connectors, depth, policy)?, sinks, refresh, on_refresh)
+    drive_fanin(
+        FanIn::open_resumable(connectors, depth, policy)?,
+        sinks,
+        refresh,
+        on_refresh,
+        telemetry,
+    )
 }
 
 /// Shared tail of [`run_fanin`] / [`run_fanin_resumable`]: drive the
@@ -690,12 +710,17 @@ fn drive_fanin(
     mut sinks: Vec<Box<dyn AnalysisSink>>,
     refresh: Option<Duration>,
     on_refresh: impl FnMut(&str),
+    telemetry: &TelemetryOptions,
 ) -> std::io::Result<FanInReport> {
+    let exposure = TelemetryExposure::start(telemetry, fan.hub().telemetry())?;
     let hostnames = fan.hostnames.clone();
     let pipe = live::run_live_pipeline(fan.source(), &mut sinks, refresh, on_refresh);
     let local = fan.hub().stats();
     let origins = fan.hub().origin_stats();
     let stats = fan.finish()?;
+    // readers joined in finish(): the final JSON snapshot carries the
+    // settled numbers the report below is built from
+    exposure.finish();
     Ok(FanInReport {
         hostnames,
         reports: pipe.reports,

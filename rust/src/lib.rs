@@ -36,6 +36,10 @@
 //!   or, via the fan-in (`iprof attach <addr> <addr>...`), for a whole
 //!   fleet merged by one subscriber.
 //! * [`sampling`] — the device-telemetry sampling daemon (paper §3.5).
+//! * [`telemetry`] — the collector's self-telemetry: a lock-free metrics
+//!   registry instrumenting every pipeline stage, a built-in Prometheus
+//!   scrape endpoint (`--telemetry <addr>`), periodic JSON snapshots
+//!   (`--telemetry-json`), and the `iprof health` operator summary.
 //! * [`aggregate`] — on-node aggregation and the local-/global-master
 //!   composite-profile merge (paper §3.7).
 //! * [`coordinator`] — the `iprof` launcher: session lifecycle, workload
@@ -60,6 +64,7 @@ pub mod model;
 pub mod remote;
 pub mod runtime;
 pub mod sampling;
+pub mod telemetry;
 pub mod tracer;
 pub mod util;
 

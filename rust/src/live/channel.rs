@@ -68,6 +68,7 @@
 //! drop total back to "lossless".
 
 use crate::analysis::msg::EventMsg;
+use crate::telemetry::{Counter, Gauge, Registry};
 use crate::tracer::btf::{registry_classes, DecodedClass};
 use crate::tracer::encoder::decode_payload;
 use std::collections::HashMap;
@@ -99,10 +100,15 @@ struct Channel {
     dropped: u64,
     /// Beacons observed.
     beacons: u64,
+    /// Telemetry series for this stream's drops (registered at channel
+    /// creation; bumping is one relaxed atomic, no registry lock).
+    tele_dropped: Arc<Counter>,
+    /// Telemetry series for this stream's queue occupancy.
+    tele_depth: Arc<Gauge>,
 }
 
 impl Channel {
-    fn new() -> Self {
+    fn new(tele_dropped: Arc<Counter>, tele_depth: Arc<Gauge>) -> Self {
         Channel {
             queue: VecDeque::new(),
             next_seq: 0,
@@ -111,6 +117,8 @@ impl Channel {
             received: 0,
             dropped: 0,
             beacons: 0,
+            tele_dropped,
+            tele_depth,
         }
     }
 }
@@ -140,6 +148,32 @@ struct OriginBook {
     /// `EventBatch` frames decoded from this origin (0 on a v2
     /// connection — the batched-vs-fallback telltale). Saturating.
     batches: u64,
+    /// Telemetry mirrors of this origin's ledgers (labelled by origin
+    /// label, registered once at [`LiveHub::register_origin`] time so
+    /// the record paths never touch the registry's family lock).
+    tele: OriginTelemetry,
+}
+
+/// Pre-registered labelled telemetry handles for one origin.
+struct OriginTelemetry {
+    resume_gaps: Arc<Counter>,
+    remote_dropped: Arc<Counter>,
+    batches: Arc<Counter>,
+    wire_version: Arc<Gauge>,
+}
+
+impl OriginTelemetry {
+    fn register(telemetry: &Registry, origin: usize, label: &str) -> OriginTelemetry {
+        // index-prefixed: two publishers announcing the same hostname
+        // must not collapse into one series (see `origin_series_label`)
+        let label = crate::telemetry::origin_series_label(origin, label);
+        OriginTelemetry {
+            resume_gaps: telemetry.origin_resume_gaps.with_label(&label),
+            remote_dropped: telemetry.origin_remote_dropped.with_label(&label),
+            batches: telemetry.origin_batches.with_label(&label),
+            wire_version: telemetry.origin_wire_version.with_label(&label),
+        }
+    }
 }
 
 /// Per-origin accounting snapshot (see [`LiveHub::origin_stats`]).
@@ -179,16 +213,44 @@ pub struct OriginStats {
     pub batches: u64,
 }
 
+impl OriginStats {
+    /// Best known publisher-side loss for this origin, deduplicated.
+    ///
+    /// The two receiver-side ledgers are disjoint by construction —
+    /// `Drops` frames land in [`OriginStats::remote_dropped`],
+    /// `ResumeGap` frames in [`OriginStats::resume_gaps`] — so their
+    /// saturating sum never counts an event twice. The publisher's Eos
+    /// total is one opaque self-reported number that may fold the same
+    /// events in (a gap also booked as a channel drop), so it
+    /// *competes* against the ledger sum instead of being added on top:
+    /// whichever side knows about more loss wins, and an event booked
+    /// on both sides still counts exactly once.
+    pub fn known_dropped(&self) -> u64 {
+        let ledger = self.remote_dropped.saturating_add(self.resume_gaps);
+        match self.eos {
+            Some((_, eos_dropped)) => eos_dropped.max(ledger),
+            None => ledger,
+        }
+    }
+}
+
 /// One shard: a run of channels under their own lock. Shard 0 holds the
 /// hub's local streams; every origin gets its own shard.
 struct Shard {
     state: Mutex<ShardState>,
+    /// Telemetry: events fed into this shard (shard 0 = local streams).
+    tele_feed: Arc<Counter>,
+    /// Telemetry: events the merge popped from this shard.
+    tele_merged: Arc<Counter>,
 }
 
 impl Shard {
-    fn new(origin: Option<OriginBook>) -> Arc<Shard> {
+    fn new(origin: Option<OriginBook>, index: usize, telemetry: &Registry) -> Arc<Shard> {
+        let label = index.to_string();
         Arc::new(Shard {
             state: Mutex::new(ShardState { channels: Vec::new(), global_ids: Vec::new(), origin }),
+            tele_feed: telemetry.shard_feed.with_label(&label),
+            tele_merged: telemetry.shard_merged.with_label(&label),
         })
     }
 
@@ -377,6 +439,12 @@ pub struct LiveHub {
     classes: HashMap<u32, Arc<DecodedClass>>,
     /// Hostname stamped on decoded messages.
     hostname: Arc<str>,
+    /// The pipeline's self-telemetry registry. Created with the hub and
+    /// shared (via [`LiveHub::telemetry`]) with the publisher / fan-in
+    /// layers driving the same pipeline, so one scrape endpoint sees
+    /// every stage. Hot paths bump pre-registered handles — relaxed
+    /// atomics only, no extra locking.
+    telemetry: Arc<Registry>,
 }
 
 impl std::fmt::Debug for LiveHub {
@@ -396,10 +464,12 @@ impl LiveHub {
     /// be analyzed post-mortem — used by the equivalence tests; production
     /// live mode runs with `retain = false` and O(streams × depth) memory.
     pub fn new(hostname: &str, depth: usize, retain: bool) -> Arc<LiveHub> {
+        let telemetry = Registry::new();
+        let local_shard = Shard::new(None, 0, &telemetry);
         Arc::new(LiveHub {
             topo: RwLock::new(Topology {
                 dir: Vec::new(),
-                shards: vec![Shard::new(None)],
+                shards: vec![local_shard],
                 sealed: false,
             }),
             topo_version: AtomicU64::new(0),
@@ -411,7 +481,27 @@ impl LiveHub {
             retain,
             classes: registry_classes(),
             hostname: Arc::from(hostname),
+            telemetry,
         })
+    }
+
+    /// This hub's metrics registry. The publisher and fan-in layers feed
+    /// the same registry, and the `--telemetry` endpoint serves snapshots
+    /// of it; [`LiveHub::stats`] reads its totals, so the scrape and the
+    /// end-of-run report can never disagree.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// A channel with its per-stream telemetry series registered up
+    /// front (label = global stream index), so the hot push/pop paths
+    /// never touch the registry's family lock.
+    fn new_channel(&self, global: usize) -> Channel {
+        let label = global.to_string();
+        Channel::new(
+            self.telemetry.channel_dropped.with_label(&label),
+            self.telemetry.channel_depth.with_label(&label),
+        )
     }
 
     fn topo_read(&self) -> std::sync::RwLockReadGuard<'_, Topology> {
@@ -425,6 +515,7 @@ impl LiveHub {
     /// Park for one bounded re-check interval (see module docs: the
     /// timeout is a liveness backstop only, never a correctness lever).
     pub(super) fn wait_progress(&self) {
+        self.telemetry.merge_gate_waits.inc();
         let guard = self.gate.lock().unwrap_or_else(|p| p.into_inner());
         let _ = self
             .progress
@@ -472,10 +563,11 @@ impl LiveHub {
         while topo.dir.len() < n {
             let global = topo.dir.len();
             topo.dir.push((0, st.channels.len()));
-            st.channels.push(Channel::new());
+            st.channels.push(self.new_channel(global));
             st.global_ids.push(global);
         }
         self.nchannels.store(topo.dir.len(), Ordering::Relaxed);
+        self.telemetry.live_channels.set(topo.dir.len() as u64);
         self.topo_version.fetch_add(1, Ordering::Release);
         drop(st);
         drop(topo);
@@ -489,16 +581,22 @@ impl LiveHub {
     /// (see module docs).
     pub fn register_origin(&self, label: &str) -> usize {
         let mut topo = self.topo_write();
-        topo.shards.push(Shard::new(Some(OriginBook {
-            label: label.to_string(),
-            map: Vec::new(),
-            remote_drops: Vec::new(),
-            resume_gaps: 0,
-            eos: None,
-            closed: false,
-            wire_version: 0,
-            batches: 0,
-        })));
+        let index = topo.shards.len();
+        topo.shards.push(Shard::new(
+            Some(OriginBook {
+                label: label.to_string(),
+                map: Vec::new(),
+                remote_drops: Vec::new(),
+                resume_gaps: 0,
+                eos: None,
+                closed: false,
+                wire_version: 0,
+                batches: 0,
+                tele: OriginTelemetry::register(&self.telemetry, index - 1, label),
+            }),
+            index,
+            &self.telemetry,
+        ));
         self.topo_version.fetch_add(1, Ordering::Release);
         topo.shards.len() - 2
     }
@@ -525,11 +623,12 @@ impl LiveHub {
         while st.origin.as_ref().expect("origin shard").map.len() < n {
             let global = topo.dir.len();
             topo.dir.push((si, st.channels.len()));
-            st.channels.push(Channel::new());
+            st.channels.push(self.new_channel(global));
             st.global_ids.push(global);
             st.origin.as_mut().expect("origin shard").map.push(global);
         }
         self.nchannels.store(topo.dir.len(), Ordering::Relaxed);
+        self.telemetry.live_channels.set(topo.dir.len() as u64);
         self.topo_version.fetch_add(1, Ordering::Release);
         drop(st);
         drop(topo);
@@ -569,6 +668,9 @@ impl LiveHub {
                 book.remote_drops.resize(remote + 1, 0);
             }
             if cumulative > book.remote_drops[remote] {
+                // mirror only the monotone delta: the registry counter
+                // stays the saturating sum of the per-stream maxima
+                book.tele.remote_dropped.add(cumulative - book.remote_drops[remote]);
                 book.remote_drops[remote] = cumulative;
             }
         });
@@ -584,13 +686,19 @@ impl LiveHub {
     /// by `iprof attach` so operators can see who fell back to the v2
     /// per-event wire.
     pub fn record_origin_wire(&self, origin: usize, version: u32) {
-        self.with_origin_book(origin, |book| book.wire_version = version);
+        self.with_origin_book(origin, |book| {
+            book.wire_version = version;
+            book.tele.wire_version.set(u64::from(version));
+        });
     }
 
     /// Count `n` decoded `EventBatch` frames against `origin`.
     /// Saturating, like every other origin counter.
     pub fn record_origin_batches(&self, origin: usize, n: u64) {
-        self.with_origin_book(origin, |book| book.batches = book.batches.saturating_add(n));
+        self.with_origin_book(origin, |book| {
+            book.batches = book.batches.saturating_add(n);
+            book.tele.batches.add(n);
+        });
     }
 
     /// Book `missed` events of `origin`'s remote stream as lost to a
@@ -604,6 +712,7 @@ impl LiveHub {
     pub fn record_origin_gap(&self, origin: usize, _remote: usize, missed: u64) {
         self.with_origin_book(origin, |book| {
             book.resume_gaps = book.resume_gaps.saturating_add(missed);
+            book.tele.resume_gaps.add(missed);
         });
     }
 
@@ -711,14 +820,21 @@ impl LiveHub {
                 }
                 let seq = ch.next_seq;
                 ch.next_seq += 1;
-                ch.received += 1;
+                ch.received = ch.received.saturating_add(1);
                 accepted += 1;
                 ch.queue.push_back(Entry { seq, msg, pushed: now });
             }
             // saturating: a pathological counter must stick at max, never
             // wrap back toward "lossless"
             ch.dropped = ch.dropped.saturating_add(dropped);
+            ch.tele_dropped.add(dropped);
+            ch.tele_depth.set(ch.queue.len() as u64);
+            topo.shards[si].tele_feed.add(accepted as u64);
         }
+        let reg = &self.telemetry;
+        reg.live_events_received.add(accepted as u64);
+        reg.live_events_dropped.add(dropped);
+        reg.live_queue_depth.add(accepted as u64);
         self.queued.fetch_add(accepted, Ordering::Relaxed);
         self.progress.notify_all();
         dropped
@@ -742,14 +858,18 @@ impl LiveHub {
                         ch.watermark = ch.watermark.max(msg.ts);
                         let seq = ch.next_seq;
                         ch.next_seq += 1;
-                        ch.received += 1;
+                        ch.received = ch.received.saturating_add(1);
                         // stamp AFTER any wait: residence latency must not
                         // include the producer's own blocked time
                         ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+                        ch.tele_depth.set(ch.queue.len() as u64);
+                        topo.shards[si].tele_feed.inc();
                     }
                 }
                 if msg.is_none() {
                     self.queued.fetch_add(1, Ordering::Relaxed);
+                    self.telemetry.live_events_received.inc();
+                    self.telemetry.live_queue_depth.add(1);
                     self.progress.notify_all();
                     break;
                 }
@@ -766,7 +886,7 @@ impl LiveHub {
             let (si, li) = topo.dir[idx];
             let mut st = topo.shards[si].lock();
             let ch = &mut st.channels[li];
-            ch.beacons += 1;
+            ch.beacons = ch.beacons.saturating_add(1);
             if watermark > ch.watermark {
                 ch.watermark = watermark;
                 true
@@ -774,6 +894,7 @@ impl LiveHub {
                 false
             }
         };
+        self.telemetry.live_beacons.inc();
         if advanced {
             self.progress.notify_all();
         }
@@ -881,11 +1002,15 @@ impl LiveHub {
             return None;
         }
         let mut st = topo.shards[best.shard].lock();
-        let entry = st.channels[best.local]
+        let ch = &mut st.channels[best.local];
+        let entry = ch
             .queue
             .pop_front()
             .expect("merge candidate vanished (sole-consumer contract)");
+        ch.tele_depth.set(ch.queue.len() as u64);
+        topo.shards[best.shard].tele_merged.inc();
         self.queued.fetch_sub(1, Ordering::Relaxed);
+        self.telemetry.live_queue_depth.sub(1);
         Some(entry)
     }
 
@@ -978,6 +1103,7 @@ impl LiveHub {
                 batch.events.push((global, e.msg));
                 popped += 1;
             }
+            ch.tele_depth.set(0);
             if ch.watermark > cur.watermark {
                 cur.watermark = ch.watermark;
                 batch.beacons.push((global, ch.watermark));
@@ -992,6 +1118,7 @@ impl LiveHub {
             }
         }
         self.queued.fetch_sub(popped, Ordering::Relaxed);
+        self.telemetry.live_queue_depth.sub(popped as u64);
         batch
     }
 
@@ -1052,10 +1179,15 @@ impl LiveHub {
                         ch.watermark = ch.watermark.max(msg.ts);
                         let seq = ch.next_seq;
                         ch.next_seq += 1;
-                        ch.received += 1;
+                        ch.received = ch.received.saturating_add(1);
                         ch.queue.push_back(Entry { seq, msg, pushed: now });
                     }
+                    ch.tele_depth.set(ch.queue.len() as u64);
+                    topo.shards[si].tele_feed.add(n as u64);
                 }
+                let reg = &self.telemetry;
+                reg.live_events_received.add(n as u64);
+                reg.live_queue_depth.add(n as u64);
                 self.queued.fetch_add(n, Ordering::Relaxed);
                 self.progress.notify_all();
                 return;
@@ -1074,26 +1206,29 @@ impl LiveHub {
             ch.watermark = ch.watermark.max(msg.ts);
             let seq = ch.next_seq;
             ch.next_seq += 1;
-            ch.received += 1;
+            ch.received = ch.received.saturating_add(1);
             ch.queue.push_back(Entry { seq, msg, pushed: Instant::now() });
+            ch.tele_depth.set(ch.queue.len() as u64);
+            topo.shards[si].tele_feed.inc();
         }
+        self.telemetry.live_events_received.inc();
+        self.telemetry.live_queue_depth.add(1);
         self.queued.fetch_add(1, Ordering::Relaxed);
         self.progress.notify_all();
     }
 
-    /// Aggregate transport statistics.
+    /// Aggregate transport statistics — a view over the telemetry
+    /// registry (every feed path bumps the registry at the same site it
+    /// bumps the per-channel ledgers), so the end-of-run report and a
+    /// `--telemetry` scrape of the same moment are equal by
+    /// construction, and this read takes no locks at all.
     pub fn stats(&self) -> LiveStats {
-        let topo = self.topo_read();
-        let mut s = LiveStats { channels: topo.dir.len(), ..Default::default() };
-        for shard in &topo.shards {
-            let st = shard.lock();
-            for ch in &st.channels {
-                s.received += ch.received;
-                s.dropped += ch.dropped;
-                s.beacons += ch.beacons;
-            }
+        LiveStats {
+            channels: self.nchannels.load(Ordering::Relaxed),
+            received: self.telemetry.live_events_received.get(),
+            dropped: self.telemetry.live_events_dropped.get(),
+            beacons: self.telemetry.live_beacons.get(),
         }
-        s
     }
 }
 
@@ -1322,6 +1457,32 @@ mod tests {
         assert_eq!(hub.origin_stats()[o].resume_gaps, 12, "gaps are deltas, they add");
         hub.record_origin_gap(o, 0, u64::MAX);
         assert_eq!(hub.origin_stats()[o].resume_gaps, u64::MAX, "saturating, never wrapping");
+    }
+
+    #[test]
+    fn known_dropped_never_double_counts_a_gap_booked_as_a_drop() {
+        let hub = LiveHub::new("hubtest", 8, false);
+        let o = hub.register_origin("gappy");
+        hub.record_origin_drops(o, 0, 4);
+        hub.record_origin_gap(o, 0, 3);
+        // no Eos yet: the disjoint receiver ledgers simply add
+        assert_eq!(hub.origin_stats()[o].known_dropped(), 7);
+        // a publisher whose Eos total folded the gap in (4 drops + 3
+        // gap events booked as drops) must not count the gap twice:
+        // the Eos total competes against the ledger sum, max wins
+        hub.record_origin_eos(o, 100, 7);
+        assert_eq!(hub.origin_stats()[o].known_dropped(), 7, "booked on both sides = once");
+        // an Eos that knows about MORE loss than our ledgers wins
+        hub.record_origin_eos(o, 100, 12);
+        assert_eq!(hub.origin_stats()[o].known_dropped(), 12);
+        // a publisher that died before Eos still reports its ledger sum
+        let p = hub.register_origin("dead");
+        hub.record_origin_drops(p, 0, 2);
+        hub.record_origin_gap(p, 0, 5);
+        assert_eq!(hub.origin_stats()[p].known_dropped(), 7);
+        // saturating: a ledger sum at the pin stays pinned
+        hub.record_origin_gap(p, 0, u64::MAX);
+        assert_eq!(hub.origin_stats()[p].known_dropped(), u64::MAX);
     }
 
     #[test]

@@ -41,12 +41,14 @@ where
     S: AnalysisSink + ?Sized,
 {
     let mut driver = PipelineDriver::new();
+    let telemetry = source.hub().telemetry().clone();
     let mut last_refresh = Instant::now();
     for msg in source.by_ref() {
         driver.feed(&msg, sinks);
         if let Some(period) = refresh {
             if last_refresh.elapsed() >= period {
                 last_refresh = Instant::now();
+                let swept = Instant::now();
                 for s in sinks.iter_mut() {
                     if let Some(report) = s.refresh() {
                         if let Some(text) = report.payload() {
@@ -54,6 +56,10 @@ where
                         }
                     }
                 }
+                telemetry.sink_refresh.inc();
+                telemetry
+                    .sink_refresh_ns
+                    .add(swept.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
             }
         }
     }

@@ -49,8 +49,10 @@ impl LatencySummary {
     }
 
     fn record(&mut self, d: Duration) {
-        self.merged += 1;
-        self.total += d;
+        // saturating like every accounting counter: stick at max rather
+        // than wrap back toward "nothing merged"
+        self.merged = self.merged.saturating_add(1);
+        self.total = self.total.saturating_add(d);
         self.max = self.max.max(d);
     }
 }
@@ -72,6 +74,12 @@ impl LiveSource {
     pub fn latency(&self) -> &LatencySummary {
         &self.latency
     }
+
+    /// The hub this merge drains (the pipeline driver reaches its
+    /// telemetry registry through this).
+    pub fn hub(&self) -> &Arc<LiveHub> {
+        &self.hub
+    }
 }
 
 impl Iterator for LiveSource {
@@ -91,7 +99,11 @@ impl Iterator for LiveSource {
                     // created since the scan could have vetoed the release,
                     // so a stale snapshot rescans instead of popping
                     if let Some(entry) = self.hub.pop_candidate(&view) {
-                        self.latency.record(entry.pushed.elapsed());
+                        let residence = entry.pushed.elapsed();
+                        self.latency.record(residence);
+                        let reg = self.hub.telemetry();
+                        reg.merge_events.inc();
+                        reg.merge_latency_ns.add(residence.as_nanos().min(u128::from(u64::MAX)) as u64);
                         // replay producers may be parked waiting for space
                         self.hub.progress.notify_all();
                         return Some(entry.msg);

@@ -10,6 +10,13 @@
 //!              [--refresh <ms>] [--reconnect <n>]    1 publisher, or N
 //!              [--backoff <ms>]                      merged as one fan-in;
 //!                                                    reconnect + resume
+//! iprof health <addr> [--strict [--max-drops <n>]]   scrape a --telemetry
+//!                                                    endpoint, one-screen
+//!                                                    operator summary
+//!
+//! Both `serve` and `attach` take `--telemetry <addr>` (Prometheus
+//! scrape endpoint over the pipeline's self-telemetry registry) and
+//! `--telemetry-json <path>` (periodic JSON snapshots).
 //!
 //!   -m, --mode <minimal|default|full>   tracing mode        [default]
 //!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
@@ -48,6 +55,7 @@ use thapi::coordinator::{self, IprofConfig};
 use thapi::device::{Node, NodeConfig};
 use thapi::live::LiveConfig;
 use thapi::sampling::SamplingConfig;
+use thapi::telemetry::{self, HealthSummary, TelemetryOptions};
 use thapi::tracer::{SinkKind, TracingMode};
 
 /// One requested analysis plugin.
@@ -128,6 +136,21 @@ struct Options {
     backoff_ms: Option<u64>,
     /// serve: THRL wire version (2 = per-event fallback, 3 = batched).
     wire: Option<u32>,
+    /// serve/attach: bind a Prometheus scrape endpoint here.
+    telemetry_addr: Option<String>,
+    /// serve/attach: write periodic JSON telemetry snapshots here.
+    telemetry_json: Option<std::path::PathBuf>,
+}
+
+impl Options {
+    /// The self-telemetry exposure this invocation asked for.
+    fn telemetry(&self) -> TelemetryOptions {
+        TelemetryOptions {
+            addr: self.telemetry_addr.clone(),
+            json_path: self.telemetry_json.clone(),
+            json_period: None,
+        }
+    }
 }
 
 /// Parse a byte count with an optional k/m/g suffix (powers of 1024):
@@ -165,6 +188,8 @@ fn parse_args(args: &[String]) -> Result<Options> {
         reconnect: None,
         backoff_ms: None,
         wire: None,
+        telemetry_addr: None,
+        telemetry_json: None,
     };
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
@@ -256,6 +281,14 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 }
                 o.wire = Some(version);
             }
+            "--telemetry" => {
+                let v = it.next().context("--telemetry needs a bind address")?;
+                o.telemetry_addr = Some(v.clone());
+            }
+            "--telemetry-json" => {
+                let v = it.next().context("--telemetry-json needs a path")?;
+                o.telemetry_json = Some(v.into());
+            }
             "-a" | "--analysis" => {
                 let v = it.next().context("--analysis needs a value")?;
                 o.analyses = parse_analyses(v)?;
@@ -302,6 +335,10 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
          streams). One dying publisher yields a partial analysis of the
          rest, with per-publisher accounting; --reconnect makes a dropped
          resumable publisher re-join its own streams instead of dying
+       iprof health <addr> [--strict [--max-drops <n>]]
+         scrape a --telemetry endpoint once and render a one-screen operator
+         summary (pipeline totals, per-origin ledgers, known loss); with
+         --strict, exit nonzero when known loss exceeds --max-drops [0]
   -m, --mode <minimal|default|full>    tracing mode [default]
   -s, --sample [<ms>]                  enable device sampling (50 ms default)
   -n, --node <aurora|polaris|small>    node configuration [small]
@@ -328,6 +365,11 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
                                        events (EventBatch + vectored writes),
                                        2 keeps the frozen per-event stream
                                        for v2-only subscribers          [3]
+      --telemetry <addr>               serve/attach: bind a Prometheus scrape
+                                       endpoint (text exposition v0.0.4) over
+                                       the pipeline's self-telemetry registry
+      --telemetry-json <path>          serve/attach: write periodic JSON
+                                       telemetry snapshots to <path>
       --reconnect <n>                  attach: redial a dropped resumable
                                        publisher up to n times per outage [0]
       --backoff <ms>                   attach: backoff before the first redial,
@@ -415,6 +457,10 @@ fn serve_main(args: &[String]) -> Result<()> {
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("cannot bind {addr}"))?;
     let wire = o.wire.unwrap_or(thapi::remote::VERSION);
+    let tele = o.telemetry();
+    if let Some(t) = &o.telemetry_addr {
+        eprintln!("iprof: telemetry endpoint on {t} (scrape /metrics, or: iprof health {t})");
+    }
 
     let r = if let Some(resume_buffer) = o.resume_buffer {
         // Resumable session: poll for subscribers so the publisher can
@@ -447,7 +493,7 @@ fn serve_main(args: &[String]) -> Result<()> {
             }
         };
         coordinator::run_serve_resumable(
-            &node, w.as_ref(), &config, &live_cfg, accept, resume_buffer, wire,
+            &node, w.as_ref(), &config, &live_cfg, accept, resume_buffer, wire, &tele,
         )
         .context("publishing failed")?
     } else {
@@ -457,7 +503,7 @@ fn serve_main(args: &[String]) -> Result<()> {
         );
         let (conn, peer) = listener.accept().context("accept failed")?;
         eprintln!("iprof: subscriber {peer} connected, running {name} [{}]", w.backend());
-        coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn, wire)
+        coordinator::run_serve(&node, w.as_ref(), &config, &live_cfg, conn, wire, &tele)
             .context("publishing failed")?
     };
 
@@ -550,9 +596,21 @@ fn attach_main(args: &[String]) -> Result<()> {
         .map(|k| -> Box<dyn AnalysisSink> { k.sink() })
         .collect();
     let refresh = o.refresh_ms.map(std::time::Duration::from_millis);
-    let r = coordinator::run_fanin_resumable(connectors, depth, policy, sinks, refresh, |text| {
-        eprintln!("iprof: live refresh [remote]\n{text}");
-    })
+    let tele = o.telemetry();
+    if let Some(t) = &o.telemetry_addr {
+        eprintln!("iprof: telemetry endpoint on {t} (scrape /metrics, or: iprof health {t})");
+    }
+    let r = coordinator::run_fanin_resumable(
+        connectors,
+        depth,
+        policy,
+        sinks,
+        refresh,
+        |text| {
+            eprintln!("iprof: live refresh [remote]\n{text}");
+        },
+        &tele,
+    )
     .context("attach failed")?;
     // Per-publisher accounting: who contributed what, who dropped, who died.
     // "wire drops" is the cumulative per-stream Drops ledger — for a clean
@@ -636,11 +694,61 @@ fn safe_name(s: &str) -> String {
         .collect()
 }
 
+/// `iprof health <addr> [--strict [--max-drops <n>]]`: scrape a
+/// `--telemetry` endpoint once and render the one-screen operator
+/// summary. With `--strict`, exit nonzero when the endpoint's known
+/// loss (viewer drops + resume gaps + publisher-side drops) exceeds
+/// `--max-drops` (default 0) — the operator-facing complement to
+/// `--live-strict`, usable against a *running* pipeline.
+fn health_main(args: &[String]) -> Result<()> {
+    let mut addr: Option<String> = None;
+    let mut strict = false;
+    let mut max_drops: u64 = 0;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--strict" => strict = true,
+            "--max-drops" => {
+                let v = it.next().context("--max-drops needs a count")?;
+                max_drops = v.parse().context("bad --max-drops value")?;
+            }
+            "-h" | "--help" => {
+                println!("{}", HELP);
+                return Ok(());
+            }
+            other if other.starts_with('-') => bail!("unknown option {other} (see --help)"),
+            other => {
+                if addr.is_some() {
+                    bail!("health scrapes exactly one telemetry endpoint (got a second: {other})");
+                }
+                addr = Some(other.to_string());
+            }
+        }
+    }
+    let addr = addr.context(
+        "health needs a telemetry endpoint address \
+         (start the pipeline with --telemetry <addr>, then: iprof health <addr>)",
+    )?;
+    let text = telemetry::scrape(&addr).with_context(|| format!("cannot scrape {addr}"))?;
+    let samples = telemetry::parse_exposition(&text)
+        .map_err(|e| anyhow::anyhow!("malformed exposition from {addr}: {e}"))?;
+    let health = HealthSummary::from_samples(&samples);
+    print!("{}", health.render());
+    if strict && health.known_loss() > max_drops {
+        bail!(
+            "health: known loss {} event(s) exceeds --max-drops {max_drops}",
+            health.known_loss()
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("serve") => return serve_main(&args[1..]),
         Some("attach") => return attach_main(&args[1..]),
+        Some("health") => return health_main(&args[1..]),
         _ => {}
     }
     let o = parse_args(&args)?;
@@ -662,6 +770,9 @@ fn main() -> Result<()> {
     }
     if o.wire.is_some() {
         bail!("--wire only makes sense with iprof serve");
+    }
+    if o.telemetry_addr.is_some() || o.telemetry_json.is_some() {
+        bail!("--telemetry/--telemetry-json only make sense with iprof serve or iprof attach");
     }
 
     let registry = all_workloads();

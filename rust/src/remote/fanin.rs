@@ -50,6 +50,7 @@
 use super::frame::{self, Frame, FrameError};
 use crate::analysis::EventMsg;
 use crate::live::{LiveHub, LiveSource};
+use crate::telemetry::{origin_series_label, Counter, Registry};
 use crate::tracer::btf::{parse_metadata, DecodedClass};
 use std::collections::HashMap;
 use std::io::{self, BufReader, Read, Write};
@@ -251,6 +252,28 @@ fn prepare<S: Read + Write>(conn: S) -> io::Result<Prepared<S>> {
     Ok((r, hostname, classes, streams as usize, epoch, wire))
 }
 
+/// Pre-registered per-origin telemetry series one reader thread keeps
+/// hot. Registered once at spawn (same index-prefixed label as the
+/// hub's own origin mirrors — see [`origin_series_label`]); the pump
+/// then mirrors its single-writer [`RemoteStats`] into them with
+/// `store_max`, so a scrape always equals the reader's own accounting.
+struct ReaderTelemetry {
+    events: Arc<Counter>,
+    frames: Arc<Counter>,
+    reconnects: Arc<Counter>,
+}
+
+impl ReaderTelemetry {
+    fn register(reg: &Registry, origin: usize, label: &str) -> ReaderTelemetry {
+        let label = origin_series_label(origin, label);
+        ReaderTelemetry {
+            events: reg.origin_events.with_label(&label),
+            frames: reg.origin_frames.with_label(&label),
+            reconnects: reg.origin_reconnects.with_label(&label),
+        }
+    }
+}
+
 /// A live fan-in over N remote publishers (see module docs).
 pub struct FanIn {
     hub: Arc<LiveHub>,
@@ -395,6 +418,8 @@ impl FanIn {
                     let mut stats =
                         RemoteStats { frames: 1, wire_version: wire, ..Default::default() };
                     hub2.record_origin_wire(origin, wire);
+                    let tele = ReaderTelemetry::register(hub2.telemetry(), origin, &host_arc);
+                    tele.frames.store_max(stats.frames);
                     let mut map = hub2.origin_map(origin);
                     let mut delivered: Vec<u64> = Vec::new();
                     // The batch dictionary is connection state on both
@@ -412,7 +437,7 @@ impl FanIn {
                     let res = loop {
                         match pump(
                             &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map,
-                            &mut dict, &mut stats, &mut delivered,
+                            &mut dict, &mut stats, &mut delivered, &tele,
                         ) {
                             Ok(()) => break Ok(()),
                             Err(e) => {
@@ -450,6 +475,7 @@ impl FanIn {
                                         hub2.reopen_origin(origin);
                                         hub2.record_origin_wire(origin, wire);
                                         stats.wire_version = wire;
+                                        tele.reconnects.store_max(stats.reconnects);
                                         dict.clear();
                                         r = newr;
                                     }
@@ -580,7 +606,7 @@ where
             let resume = Frame::Resume { epoch, cursors: delivered.to_vec() };
             let sent = frame::write_frame(r.get_mut(), &resume).and(r.get_mut().flush());
             if sent.is_ok() {
-                stats.reconnects += 1;
+                stats.reconnects = stats.reconnects.saturating_add(1);
                 return Ok((r, wire));
             }
         }
@@ -622,6 +648,7 @@ fn pump(
     dict: &mut frame::BatchDict,
     stats: &mut RemoteStats,
     delivered: &mut Vec<u64>,
+    tele: &ReaderTelemetry,
 ) -> io::Result<()> {
     fn translate(
         hub: &LiveHub,
@@ -644,7 +671,8 @@ fn pump(
     let mut batch: Vec<EventMsg> = Vec::new();
     loop {
         frame::read_frame_into(r, &mut body)?;
-        stats.frames += 1;
+        stats.frames = stats.frames.saturating_add(1);
+        tele.frames.store_max(stats.frames);
         if frame::is_event_batch(&body) {
             let mut unknown = 0u64;
             batch.clear();
@@ -665,9 +693,10 @@ fn pump(
                     }
                 })?;
             let idx = translate(hub, origin, map, stream)?;
-            stats.events += n as u64;
-            stats.unknown_classes += unknown;
-            stats.batches += 1;
+            stats.events = stats.events.saturating_add(n as u64);
+            stats.unknown_classes = stats.unknown_classes.saturating_add(unknown);
+            stats.batches = stats.batches.saturating_add(1);
+            tele.events.store_max(stats.events);
             hub.record_origin_batches(origin, 1);
             if !batch.is_empty() {
                 hub.feed_remote_batch(idx, std::mem::take(&mut batch), depth);
@@ -698,7 +727,8 @@ fn pump(
             }
             Frame::Event { stream, event } => {
                 let idx = translate(hub, origin, map, stream)?;
-                stats.events += 1;
+                stats.events = stats.events.saturating_add(1);
+                tele.events.store_max(stats.events);
                 match classes.get(&event.class_id) {
                     Some(class) => {
                         let msg = EventMsg {
@@ -711,7 +741,7 @@ fn pump(
                         };
                         hub.feed_remote(idx, msg, depth);
                     }
-                    None => stats.unknown_classes += 1,
+                    None => stats.unknown_classes = stats.unknown_classes.saturating_add(1),
                 }
                 // delivered AFTER processing: an event that errors out
                 // above is re-requested by the next resume cursor
@@ -732,7 +762,7 @@ fn pump(
                 // exactly the shared one over the whole union.
                 let idx = translate(hub, origin, map, stream)?;
                 hub.beacon(idx, watermark);
-                stats.beacons += 1;
+                stats.beacons = stats.beacons.saturating_add(1);
             }
             Frame::Drops { stream, dropped } => {
                 if stream >= frame::MAX_STREAMS {

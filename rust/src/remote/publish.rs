@@ -58,8 +58,9 @@
 //!
 //! [replay ring]: Publisher#replay-ring-semantics
 
-use super::frame::{self, BatchEvent, Frame, FrameError, WireEvent};
+use super::frame::{self, BatchEvent, BatchKey, Frame, FrameError, WireEvent};
 use crate::live::{ForwardCursor, LiveHub};
+use crate::telemetry::Registry;
 use crate::tracer::btf::generate_metadata;
 use crate::tracer::encoder::FieldValue;
 use std::collections::VecDeque;
@@ -89,6 +90,33 @@ pub struct PublishStats {
     pub gaps: u64,
     /// `EventBatch` frames written (0 on a v2 wire).
     pub batches: u64,
+    /// Batch-dictionary definitions written: first sightings of a
+    /// `(rank, tid, class_id)` triple on this connection (0 on v2).
+    pub dict_defs: u64,
+    /// Batch-dictionary references written: repeat sightings resolved to
+    /// a dictionary index. `refs / (defs + refs)` is the dictionary hit
+    /// rate the telemetry endpoint exposes.
+    pub dict_refs: u64,
+}
+
+impl PublishStats {
+    /// Mirror these cumulative wire statistics into the registry.
+    /// Absolute values via [`crate::telemetry::Counter::store_max`]: the
+    /// struct is single-writer monotone, so after every sync the
+    /// registry series *equals* the struct — the scrape endpoint and the
+    /// end-of-run `ServeReport` can never disagree, and a re-sync can
+    /// never double-count a round.
+    fn sync_telemetry(&self, reg: &Registry) {
+        reg.publish_frames.store_max(self.frames);
+        reg.publish_events.store_max(self.events);
+        reg.publish_bytes.store_max(self.bytes);
+        reg.publish_batches.store_max(self.batches);
+        reg.publish_dict_defs.store_max(self.dict_defs);
+        reg.publish_dict_refs.store_max(self.dict_refs);
+        reg.publish_replayed.store_max(self.replayed);
+        reg.publish_gap_events.store_max(self.gaps);
+        reg.publish_connections.store_max(self.connections);
+    }
 }
 
 /// Encode one event as its complete per-event v2 `Event` frame — the
@@ -201,8 +229,8 @@ impl EventEncoder {
             EventEncoder::PerEvent => {
                 for (idx, msg) in events {
                     let buf = encode_event(idx, msg);
-                    stats.frames += 1;
-                    stats.events += 1;
+                    stats.frames = stats.frames.saturating_add(1);
+                    stats.events = stats.events.saturating_add(1);
                     match ring_frames.as_deref_mut() {
                         // the identical bytes serve wire and ring; the
                         // round writer borrows them from the ring list
@@ -224,8 +252,8 @@ impl EventEncoder {
                             events: std::mem::take(run),
                         };
                         wire_frames.push(encode_frame(&f));
-                        stats.frames += 1;
-                        stats.batches += 1;
+                        stats.frames = stats.frames.saturating_add(1);
+                        stats.batches = stats.batches.saturating_add(1);
                     };
                 for (idx, mut msg) in events {
                     if idx != run_stream || run.len() >= frame::MAX_BATCH_EVENTS as usize {
@@ -245,12 +273,19 @@ impl EventEncoder {
                             ),
                         ));
                     }
+                    let key = dict.key_for(msg.rank, msg.tid, msg.class.id);
+                    match key {
+                        BatchKey::Ref(_) => stats.dict_refs = stats.dict_refs.saturating_add(1),
+                        BatchKey::Def { .. } => {
+                            stats.dict_defs = stats.dict_defs.saturating_add(1)
+                        }
+                    }
                     run.push(BatchEvent {
                         ts: msg.ts,
-                        key: dict.key_for(msg.rank, msg.tid, msg.class.id),
+                        key,
                         fields: std::mem::take(&mut msg.fields),
                     });
-                    stats.events += 1;
+                    stats.events = stats.events.saturating_add(1);
                 }
                 flush(run_stream, &mut run, stats);
             }
@@ -291,7 +326,7 @@ impl EncodedRound {
         };
         if let Some(count) = batch.grown_to {
             round.pre.push(encode_frame(&Frame::Streams { count: count as u32 }));
-            stats.frames += 1;
+            stats.frames = stats.frames.saturating_add(1);
         }
         enc.encode_events(
             stats,
@@ -301,16 +336,16 @@ impl EncodedRound {
         );
         for (idx, watermark) in batch.beacons {
             round.post.push(encode_frame(&Frame::Beacon { stream: idx as u32, watermark }));
-            stats.frames += 1;
-            stats.beacons += 1;
+            stats.frames = stats.frames.saturating_add(1);
+            stats.beacons = stats.beacons.saturating_add(1);
         }
         for (idx, dropped) in batch.drops {
             round.post.push(encode_frame(&Frame::Drops { stream: idx as u32, dropped }));
-            stats.frames += 1;
+            stats.frames = stats.frames.saturating_add(1);
         }
         for idx in batch.closed {
             round.post.push(encode_frame(&Frame::Close { stream: idx as u32 }));
-            stats.frames += 1;
+            stats.frames = stats.frames.saturating_add(1);
         }
         round
     }
@@ -359,26 +394,32 @@ pub fn publish_with<W: Write>(hub: &LiveHub, mut conn: W, wire: u32) -> io::Resu
     );
     conn.write_all(&head)?;
     conn.flush()?;
-    stats.bytes += head.len() as u64;
-    stats.frames += 1;
+    stats.bytes = stats.bytes.saturating_add(head.len() as u64);
+    stats.frames = stats.frames.saturating_add(1);
+    let reg = hub.telemetry();
+    reg.publish_rounds.inc(); // the handshake round
+    stats.sync_telemetry(reg);
 
     let mut enc = EventEncoder::new(wire);
     let mut cursor = ForwardCursor::default();
     while let Some(batch) = hub.next_forward_batch(&mut cursor) {
         let round = EncodedRound::encode(&mut stats, &mut enc, batch, false);
-        stats.bytes += round.write(&mut conn)?;
+        stats.bytes = stats.bytes.saturating_add(round.write(&mut conn)?);
         // One flush per round: frames reach the subscriber with
         // drain-round granularity (milliseconds), not buffer-fill
         // granularity.
         conn.flush()?;
+        reg.publish_rounds.inc();
+        stats.sync_telemetry(reg);
     }
 
     let totals = hub.stats();
     let eos = encode_frame(&Frame::Eos { received: totals.received, dropped: totals.dropped });
     conn.write_all(&eos)?;
     conn.flush()?;
-    stats.bytes += eos.len() as u64;
-    stats.frames += 1;
+    stats.bytes = stats.bytes.saturating_add(eos.len() as u64);
+    stats.frames = stats.frames.saturating_add(1);
+    stats.sync_telemetry(reg);
     Ok(stats)
 }
 
@@ -444,6 +485,9 @@ struct ReplayRing {
     evict_order: VecDeque<u32>,
     budget: usize,
     total: usize,
+    /// Event frames evicted over the ring's lifetime (each one is a
+    /// potential future resume gap). Saturating; mirrored to telemetry.
+    evicted: u64,
 }
 
 impl ReplayRing {
@@ -453,6 +497,7 @@ impl ReplayRing {
             evict_order: VecDeque::new(),
             budget: budget.max(1),
             total: 0,
+            evicted: 0,
         }
     }
 
@@ -478,6 +523,7 @@ impl ReplayRing {
             let evicted = s.entries.pop_front().expect("evict queue tracks live entries 1:1");
             self.total -= evicted.len();
             s.start_seq += 1;
+            self.evicted = self.evicted.saturating_add(1);
         }
     }
 
@@ -630,6 +676,15 @@ impl Publisher {
                 self.ring.push(idx, encode_event(idx, msg));
             }
         }
+        self.sync_ring_telemetry();
+    }
+
+    /// Mirror the ring's occupancy and lifetime evictions into the
+    /// registry (occupancy is a gauge — it shrinks on eviction).
+    fn sync_ring_telemetry(&self) {
+        let reg = self.hub.telemetry();
+        reg.ring_bytes.set(self.ring.total as u64);
+        reg.ring_evicted_events.store_max(self.ring.evicted);
     }
 
     /// Serve one subscriber connection: handshake (preamble, Hello with
@@ -643,7 +698,7 @@ impl Publisher {
     /// reconnects and this method re-runs the (now trivial) pump to a
     /// clean Eos again.
     pub fn serve_connection<S: Read + Write>(&mut self, mut conn: S) -> ServeOutcome {
-        self.stats.connections += 1;
+        self.stats.connections = self.stats.connections.saturating_add(1);
         match self.serve_inner(&mut conn) {
             Ok(()) => ServeOutcome::Complete,
             Err(e) => ServeOutcome::Lost(e.to_string()),
@@ -667,8 +722,10 @@ impl Publisher {
         );
         conn.write_all(&head)?;
         conn.flush()?;
-        self.stats.bytes += head.len() as u64;
-        self.stats.frames += 1;
+        self.stats.bytes = self.stats.bytes.saturating_add(head.len() as u64);
+        self.stats.frames = self.stats.frames.saturating_add(1);
+        self.hub.telemetry().publish_rounds.inc(); // the handshake round
+        self.stats.sync_telemetry(self.hub.telemetry());
 
         // The one subscriber→publisher frame: where to resume from.
         let Frame::Resume { epoch, cursors } = frame::read_frame(conn)? else {
@@ -681,10 +738,15 @@ impl Publisher {
         // Replay is always per-event v2 frames straight from the ring —
         // valid on either wire version, cursors count events.
         let replay = self.ring.replay(&cursors, conn)?;
-        self.stats.replayed += replay.replayed;
-        self.stats.gaps += replay.gaps;
-        self.stats.bytes += replay.bytes;
-        self.stats.frames += replay.replayed + replay.gap_frames;
+        self.stats.replayed = self.stats.replayed.saturating_add(replay.replayed);
+        self.stats.gaps = self.stats.gaps.saturating_add(replay.gaps);
+        self.stats.bytes = self.stats.bytes.saturating_add(replay.bytes);
+        self.stats.frames = self
+            .stats
+            .frames
+            .saturating_add(replay.replayed)
+            .saturating_add(replay.gap_frames);
+        self.stats.sync_telemetry(self.hub.telemetry());
         conn.flush()?;
 
         // Re-report current watermarks/drops/closes from scratch: all
@@ -704,19 +766,23 @@ impl Publisher {
             for (idx, buf) in round.ring {
                 self.ring.push(idx, buf);
             }
+            self.sync_ring_telemetry();
             match wrote {
-                Ok(n) => self.stats.bytes += n,
+                Ok(n) => self.stats.bytes = self.stats.bytes.saturating_add(n),
                 Err(e) => return Err(e),
             }
             conn.flush()?;
+            self.hub.telemetry().publish_rounds.inc();
+            self.stats.sync_telemetry(self.hub.telemetry());
         }
 
         let totals = self.hub.stats();
         let eos = encode_frame(&Frame::Eos { received: totals.received, dropped: totals.dropped });
         conn.write_all(&eos)?;
         conn.flush()?;
-        self.stats.bytes += eos.len() as u64;
-        self.stats.frames += 1;
+        self.stats.bytes = self.stats.bytes.saturating_add(eos.len() as u64);
+        self.stats.frames = self.stats.frames.saturating_add(1);
+        self.stats.sync_telemetry(self.hub.telemetry());
         Ok(())
     }
 }

@@ -1,0 +1,345 @@
+//! `iprof health`: scrape a telemetry endpoint once and summarize it
+//! for an operator.
+//!
+//! The exposition parser here is the *consumer-side* twin of
+//! [`super::Registry::render_prometheus`] — the CI smoke and the golden
+//! tests parse the endpoint's output back through it, so a rendering
+//! regression cannot land silently. [`HealthSummary`] condenses the
+//! sample set into the one screen an operator scans during an incident:
+//! pipeline totals, per-origin ledgers, and a strict loss gate
+//! ([`HealthSummary::known_loss`]) aligned with `--live-strict`.
+
+use crate::bench_support::Table;
+
+/// One parsed exposition sample: `name{labels} value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Metric name (e.g. `thapi_live_events_dropped_total`).
+    pub name: String,
+    /// Label pairs in exposition order.
+    pub labels: Vec<(String, String)>,
+    /// Sample value.
+    pub value: f64,
+}
+
+impl Sample {
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse Prometheus text exposition v0.0.4 into samples.
+///
+/// Accepts exactly what the registry renders (and what any conforming
+/// exporter emits): `# HELP`/`# TYPE`/comment lines are skipped, sample
+/// lines are `name[{k="v",...}] value [timestamp]`. Returns a
+/// description of the first malformed line on failure.
+pub fn parse_exposition(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_sample(line).map_err(|e| format!("line {}: {e}: {line}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let (name_part, rest) = match line.find('{') {
+        Some(brace) => {
+            let close = line.rfind('}').ok_or("unterminated label set")?;
+            if close < brace {
+                return Err("mismatched braces".into());
+            }
+            (&line[..brace], Some((&line[brace + 1..close], &line[close + 1..])))
+        }
+        None => (
+            line.split_whitespace().next().ok_or("empty sample")?,
+            None,
+        ),
+    };
+    let name = name_part.trim();
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    {
+        return Err(format!("invalid metric name {name:?}"));
+    }
+    let (labels, value_part) = match rest {
+        Some((labels_text, tail)) => (parse_labels(labels_text)?, tail),
+        None => (Vec::new(), &line[name_part.len()..]),
+    };
+    let value_text =
+        value_part.split_whitespace().next().ok_or("missing value")?;
+    let value: f64 = value_text
+        .parse()
+        .map_err(|_| format!("unparseable value {value_text:?}"))?;
+    Ok(Sample { name: name.to_string(), labels, value })
+}
+
+fn parse_labels(text: &str) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut chars = text.chars().peekable();
+    loop {
+        while matches!(chars.peek(), Some(',') | Some(' ')) {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            return Ok(labels);
+        }
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label {key:?}: value must be quoted"));
+        }
+        let mut value = String::new();
+        let mut closed = false;
+        while let Some(c) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some('\\') => value.push('\\'),
+                    Some('"') => value.push('"'),
+                    Some('n') => value.push('\n'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                },
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                c => value.push(c),
+            }
+        }
+        if !closed {
+            return Err("unterminated label value".into());
+        }
+        labels.push((key.trim().to_string(), value));
+    }
+}
+
+/// Sum of every sample with `name` (0 when the metric is absent).
+fn total(samples: &[Sample], name: &str) -> u64 {
+    samples.iter().filter(|s| s.name == name).map(|s| s.value.max(0.0) as u64).sum()
+}
+
+/// One origin's row in the health view.
+#[derive(Debug, Clone, Default)]
+pub struct OriginHealth {
+    /// Origin label (the publisher's address/hostname).
+    pub origin: String,
+    /// Negotiated THRL wire version (0 = not yet negotiated).
+    pub wire_version: u64,
+    /// Events decoded off this origin's wire.
+    pub events: u64,
+    /// `EventBatch` frames decoded.
+    pub batches: u64,
+    /// Reconnect attempts that produced a connection.
+    pub reconnects: u64,
+    /// Events lost to resume gaps.
+    pub resume_gaps: u64,
+    /// Publisher-side channel drops (cumulative ledger).
+    pub remote_dropped: u64,
+}
+
+/// The one-screen operator summary `iprof health` renders.
+#[derive(Debug, Clone, Default)]
+pub struct HealthSummary {
+    /// Events accepted into the endpoint's hub.
+    pub received: u64,
+    /// Events the merge released to the sinks.
+    pub merged: u64,
+    /// Viewer-side channel drops.
+    pub dropped: u64,
+    /// Events still queued (scrape-time lag).
+    pub queue_depth: u64,
+    /// Mean channel-residence seconds per merged event.
+    pub mean_latency_s: f64,
+    /// Publisher pump rounds (nonzero only on a `serve` endpoint).
+    pub publish_rounds: u64,
+    /// Events relayed to the wire by a `serve` endpoint.
+    pub publish_events: u64,
+    /// Wire bytes written by a `serve` endpoint.
+    pub publish_bytes: u64,
+    /// Events evicted from the replay ring.
+    pub ring_evicted: u64,
+    /// Per-origin rows (nonempty only on an `attach` endpoint).
+    pub origins: Vec<OriginHealth>,
+}
+
+impl HealthSummary {
+    /// Condense a parsed scrape into the operator view.
+    pub fn from_samples(samples: &[Sample]) -> HealthSummary {
+        let merged = total(samples, "thapi_merge_events_total");
+        let latency_s: f64 = samples
+            .iter()
+            .filter(|s| s.name == "thapi_merge_latency_seconds_total")
+            .map(|s| s.value)
+            .sum();
+        let mut origins: Vec<OriginHealth> = Vec::new();
+        let mut row = |origin: &str| -> usize {
+            match origins.iter().position(|o| o.origin == origin) {
+                Some(i) => i,
+                None => {
+                    origins.push(OriginHealth {
+                        origin: origin.to_string(),
+                        ..OriginHealth::default()
+                    });
+                    origins.len() - 1
+                }
+            }
+        };
+        for s in samples {
+            let Some(origin) = s.label("origin") else { continue };
+            let i = row(origin);
+            let v = s.value.max(0.0) as u64;
+            match s.name.as_str() {
+                "thapi_origin_events_total" => origins[i].events = v,
+                "thapi_origin_batches_total" => origins[i].batches = v,
+                "thapi_origin_reconnects_total" => origins[i].reconnects = v,
+                "thapi_origin_resume_gap_events_total" => origins[i].resume_gaps = v,
+                "thapi_origin_remote_dropped_total" => origins[i].remote_dropped = v,
+                "thapi_origin_wire_version" => origins[i].wire_version = v,
+                _ => {}
+            }
+        }
+        origins.sort_by(|a, b| a.origin.cmp(&b.origin));
+        HealthSummary {
+            received: total(samples, "thapi_live_events_received_total"),
+            merged,
+            dropped: total(samples, "thapi_live_events_dropped_total"),
+            queue_depth: total(samples, "thapi_live_queue_depth"),
+            mean_latency_s: if merged == 0 { 0.0 } else { latency_s / merged as f64 },
+            publish_rounds: total(samples, "thapi_publish_rounds_total"),
+            publish_events: total(samples, "thapi_publish_events_total"),
+            publish_bytes: total(samples, "thapi_publish_bytes_total"),
+            ring_evicted: total(samples, "thapi_ring_evicted_events_total"),
+            origins: origins.into_iter().filter(|o| o.origin != "local").collect(),
+        }
+    }
+
+    /// Everything this endpoint *knows* it lost: viewer-side channel
+    /// drops, plus per-origin resume gaps, plus publisher-side drops.
+    ///
+    /// Gap events never reach a channel (they were evicted publisher
+    /// side), and the publisher-side ledger counts pre-wire drops — the
+    /// three terms are disjoint by construction, so the sum neither
+    /// double-counts nor hides loss. The per-origin term is the ledger
+    /// branch of `FanInReport::known_dropped()` (gaps + wire drops);
+    /// the exposition carries no publisher Eos sample, so the opaque
+    /// self-reported total that `known_dropped()` maxes against is not
+    /// consulted here.
+    pub fn known_loss(&self) -> u64 {
+        let origin_loss = self.origins.iter().fold(0u64, |a, o| {
+            a.saturating_add(o.resume_gaps).saturating_add(o.remote_dropped)
+        });
+        self.dropped.saturating_add(origin_loss)
+    }
+
+    /// Render the one-screen summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("pipeline\n");
+        let mut t = Table::new(&["received", "merged", "dropped", "queued", "mean latency"]);
+        t.row(&[
+            self.received.to_string(),
+            self.merged.to_string(),
+            self.dropped.to_string(),
+            self.queue_depth.to_string(),
+            format!("{:.3} ms", self.mean_latency_s * 1e3),
+        ]);
+        out.push_str(&t.render());
+        if self.publish_rounds > 0 {
+            out.push_str("\npublisher\n");
+            let mut t = Table::new(&["rounds", "events", "wire bytes", "ring evicted"]);
+            t.row(&[
+                self.publish_rounds.to_string(),
+                self.publish_events.to_string(),
+                self.publish_bytes.to_string(),
+                self.ring_evicted.to_string(),
+            ]);
+            out.push_str(&t.render());
+        }
+        if !self.origins.is_empty() {
+            out.push_str("\norigins\n");
+            let mut t = Table::new(&[
+                "origin",
+                "wire",
+                "events",
+                "batches",
+                "reconnects",
+                "resume gaps",
+                "remote dropped",
+            ]);
+            for o in &self.origins {
+                t.row(&[
+                    o.origin.clone(),
+                    if o.wire_version == 0 { "?".into() } else { format!("v{}", o.wire_version) },
+                    o.events.to_string(),
+                    o.batches.to_string(),
+                    o.reconnects.to_string(),
+                    o.resume_gaps.to_string(),
+                    o.remote_dropped.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out.push_str(&format!("\nknown loss: {} event(s)\n", self.known_loss()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_labeled_and_escaped_samples() {
+        let text = "# HELP x y\n# TYPE x counter\nx 3\n\
+                    y{origin=\"node:7007\"} 4\n\
+                    z{a=\"q\\\"o\\\"t\",b=\"n\\nl\"} 1.5 1700000000\n";
+        let s = parse_exposition(text).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!((s[0].name.as_str(), s[0].value), ("x", 3.0));
+        assert_eq!(s[1].label("origin"), Some("node:7007"));
+        assert_eq!(s[2].label("a"), Some("q\"o\"t"));
+        assert_eq!(s[2].label("b"), Some("n\nl"));
+        assert_eq!(s[2].value, 1.5);
+    }
+
+    #[test]
+    fn malformed_lines_are_reported_not_panicked() {
+        for bad in ["x{unterminated 3", "x{k=unquoted} 3", "x{k=\"v\"}", "{k=\"v\"} 3", "x notanum"]
+        {
+            assert!(parse_exposition(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn summary_totals_and_strict_loss() {
+        let text = "thapi_live_events_received_total 100\n\
+                    thapi_live_events_dropped_total 3\n\
+                    thapi_merge_events_total 97\n\
+                    thapi_live_queue_depth 0\n\
+                    thapi_origin_events_total{origin=\"a:1\"} 60\n\
+                    thapi_origin_resume_gap_events_total{origin=\"a:1\"} 2\n\
+                    thapi_origin_remote_dropped_total{origin=\"a:1\"} 5\n\
+                    thapi_origin_wire_version{origin=\"a:1\"} 3\n";
+        let samples = parse_exposition(text).unwrap();
+        let h = HealthSummary::from_samples(&samples);
+        assert_eq!(h.received, 100);
+        assert_eq!(h.dropped, 3);
+        assert_eq!(h.origins.len(), 1);
+        assert_eq!(h.origins[0].wire_version, 3);
+        // 3 viewer drops + 2 gap events + 5 publisher-side drops
+        assert_eq!(h.known_loss(), 10);
+        let screen = h.render();
+        assert!(screen.contains("a:1"));
+        assert!(screen.contains("known loss: 10"));
+    }
+}

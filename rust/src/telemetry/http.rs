@@ -1,0 +1,213 @@
+//! The built-in scrape endpoint: a deliberately minimal HTTP/1.0
+//! responder (one thread, no dependencies, read-only snapshots) plus
+//! the matching one-shot client used by `iprof health` and the tests.
+//!
+//! This is not a web server. It answers exactly one request shape —
+//! `GET <path> …` — with a complete response and closes the
+//! connection. `/json` (any path starting with it) returns the
+//! [`Registry::render_json`] document; every other path returns
+//! Prometheus text exposition v0.0.4, so `/metrics` works and so does
+//! a bare `GET /`. Malformed requests get a `400` and a closed
+//! connection; nothing an external client sends can perturb the
+//! pipeline beyond one bounded read.
+
+use super::Registry;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Cap on the request head we are willing to buffer.
+const MAX_REQUEST: usize = 4096;
+
+/// The `--telemetry <addr>` scrape endpoint.
+///
+/// One accept-loop thread serving read-only registry snapshots;
+/// [`TelemetryServer::shutdown`] (or drop) stops it deterministically.
+pub struct TelemetryServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, port 0 for ephemeral) and
+    /// start serving `registry` snapshots.
+    pub fn bind(addr: &str, registry: Arc<Registry>) -> io::Result<TelemetryServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new().name("thapi-telemetry".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(mut conn) = conn else { continue };
+                // per-connection errors (slow loris, reset) only end
+                // that connection — the endpoint itself stays up
+                let _ = serve_one(&mut conn, &registry);
+            }
+        })?;
+        Ok(TelemetryServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(mut self) {
+        self.stop_join();
+    }
+
+    fn stop_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock the accept() with a throwaway connection to ourselves
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.stop_join();
+    }
+}
+
+/// Answer one request on `conn` and close it.
+fn serve_one(conn: &mut TcpStream, registry: &Registry) -> io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    // read until end-of-head; the shutdown self-connect sends nothing,
+    // so EOF / timeout with an empty head is a silent no-op
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() >= MAX_REQUEST {
+            return respond(conn, 400, "text/plain; charset=utf-8", "request too large\n");
+        }
+        match conn.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    if head.is_empty() {
+        return Ok(());
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut first = text.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (first.next().unwrap_or(""), first.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(conn, 400, "text/plain; charset=utf-8", "only GET is served\n");
+    }
+    if path.starts_with("/json") {
+        respond(conn, 200, "application/json; charset=utf-8", &registry.render_json())
+    } else {
+        // /metrics and everything else: the exposition snapshot
+        respond(
+            conn,
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            &registry.render_prometheus(),
+        )
+    }
+}
+
+fn respond(conn: &mut TcpStream, status: u16, ctype: &str, body: &str) -> io::Result<()> {
+    let reason = if status == 200 { "OK" } else { "Bad Request" };
+    let head = format!(
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}
+
+/// Scrape `/metrics` from a telemetry endpoint; the body on HTTP 200.
+pub fn scrape(addr: &str) -> io::Result<String> {
+    scrape_path(addr, "/metrics")
+}
+
+/// Scrape an arbitrary path (e.g. `/json`) from a telemetry endpoint.
+pub fn scrape_path(addr: &str, path: &str) -> io::Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(5)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    conn.write_all(format!("GET {path} HTTP/1.0\r\nHost: thapi\r\n\r\n").as_bytes())?;
+    let mut response = String::new();
+    conn.read_to_string(&mut response)?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "no HTTP header terminator"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("telemetry endpoint answered: {status}"),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_scrape_shutdown_roundtrip() {
+        let reg = Registry::new();
+        reg.live_events_received.add(123);
+        let srv = TelemetryServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr().to_string();
+
+        let body = scrape(&addr).unwrap();
+        assert!(body.contains("thapi_live_events_received_total 123\n"));
+
+        // counters keep moving between scrapes: snapshots are live reads
+        reg.live_events_received.add(1);
+        let body2 = scrape(&addr).unwrap();
+        assert!(body2.contains("thapi_live_events_received_total 124\n"));
+
+        let json = scrape_path(&addr, "/json").unwrap();
+        assert!(json.contains("\"bench\": \"telemetry\""));
+
+        srv.shutdown();
+        assert!(
+            TcpStream::connect_timeout(
+                &addr.parse().unwrap(),
+                Duration::from_millis(200)
+            )
+            .map(|mut c| {
+                // a lingering listener backlog entry may still accept;
+                // a served response would mean the thread survived
+                let _ = c.write_all(b"GET /metrics HTTP/1.0\r\n\r\n");
+                let mut s = String::new();
+                let _ = c.set_read_timeout(Some(Duration::from_millis(300)));
+                let _ = c.read_to_string(&mut s);
+                s.is_empty()
+            })
+            .unwrap_or(true),
+            "endpoint must stop serving after shutdown"
+        );
+    }
+
+    #[test]
+    fn non_get_requests_are_rejected() {
+        let reg = Registry::new();
+        let srv = TelemetryServer::bind("127.0.0.1:0", reg).unwrap();
+        let mut conn = TcpStream::connect(srv.local_addr()).unwrap();
+        conn.write_all(b"POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut s = String::new();
+        conn.read_to_string(&mut s).unwrap();
+        assert!(s.starts_with("HTTP/1.0 400"), "got: {s}");
+        srv.shutdown();
+    }
+}

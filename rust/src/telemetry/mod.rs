@@ -1,0 +1,855 @@
+//! Self-telemetry: a lock-free metrics registry over the whole pipeline.
+//!
+//! THAPI's pitch is visibility into every layer of the HPC stack — this
+//! module turns that lens on the collector itself. Every pipeline stage
+//! (bounded channels, sharded hub, merge, publisher pump, fan-in
+//! readers, sinks) bumps atomic counters in one per-hub [`Registry`],
+//! so drops, resume gaps, ring evictions and batch efficiency are
+//! observable *while the run executes*, not only in the end-of-run
+//! summary — and because the end-of-run reports
+//! ([`crate::live::LiveStats`], `ServeReport`, `FanInReport`) are thin
+//! views over the **same** registry, the two can never disagree.
+//!
+//! Three exposures, no new dependencies:
+//!
+//! 1. [`TelemetryServer`] — `--telemetry <addr>` on `iprof serve` /
+//!    `attach`: a one-thread HTTP responder serving Prometheus
+//!    text-exposition v0.0.4 at `/metrics` (and the same snapshot as
+//!    JSON at `/json`).
+//! 2. [`JsonSnapshotter`] — `--telemetry-json <path>`: periodic JSON
+//!    snapshots in the `bench_support::BenchJson` document shape, for
+//!    tests and CI.
+//! 3. `iprof health <addr>` — scrape once ([`scrape`]), parse
+//!    ([`parse_exposition`]), render a one-screen operator summary
+//!    ([`HealthSummary`]) with a strict drop gate.
+//!
+//! Design rules:
+//!
+//! * **No hot-path locks.** [`Counter`] / [`Gauge`] are single relaxed
+//!   atomics; hot sites hold pre-registered `Arc` handles (per-stream,
+//!   per-shard, per-origin), so the labeled-family `RwLock` is touched
+//!   only at registration time, never per event.
+//! * **Saturating accounting.** Counters pin at `u64::MAX` instead of
+//!   wrapping — a telemetry overflow must never report a small number.
+//! * **Scrapes are read-only snapshots.** Rendering loads atomics; it
+//!   cannot block or perturb the pipeline beyond cache traffic.
+
+pub mod health;
+pub mod http;
+
+pub use health::{parse_exposition, HealthSummary, OriginHealth, Sample};
+pub use http::{scrape, scrape_path, TelemetryServer};
+
+use crate::bench_support::{js_num, js_str, BenchJson};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// A monotone, saturating, lock-free counter.
+///
+/// `add` is one relaxed `fetch_add` in the common case; on overflow the
+/// value pins at `u64::MAX` instead of wrapping (a wrapped counter
+/// would report a *small* loss — the one lie telemetry must never
+/// tell).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`, saturating at `u64::MAX`.
+    pub fn add(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let prev = self.0.fetch_add(n, Ordering::Relaxed);
+        if prev.checked_add(n).is_none() {
+            // wrapped: pin. Racing adders all pin too, so the value
+            // stays at MAX from here on.
+            self.0.store(u64::MAX, Ordering::Relaxed);
+        }
+    }
+
+    /// Monotone absolute update: raise the counter to `v` if `v` is
+    /// larger. The mirror primitive for single-writer stats structs
+    /// (`PublishStats`, `RemoteStats`) and cumulative wire ledgers
+    /// (`Drops` frames report totals, not deltas).
+    pub fn store_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A lock-free gauge (set / add / saturating sub).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge by `n` (saturating).
+    pub fn add(&self, n: u64) {
+        let prev = self.0.fetch_add(n, Ordering::Relaxed);
+        if prev.checked_add(n).is_none() {
+            self.0.store(u64::MAX, Ordering::Relaxed);
+        }
+    }
+
+    /// Lower the gauge by `n`, saturating at zero.
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A labeled metric family (`name{label="value"}` series).
+///
+/// [`Family::with_label`] registers (or finds) a series and hands back
+/// an `Arc` handle; hot paths keep the handle and bump it directly, so
+/// the internal `RwLock` is only taken at registration and at scrape
+/// time — never per event.
+#[derive(Debug)]
+pub struct Family<M> {
+    label: &'static str,
+    entries: RwLock<Vec<(String, Arc<M>)>>,
+}
+
+/// A family of [`Counter`] series.
+pub type CounterFamily = Family<Counter>;
+/// A family of [`Gauge`] series.
+pub type GaugeFamily = Family<Gauge>;
+
+impl<M: Default> Family<M> {
+    fn new(label: &'static str) -> Self {
+        Family { label, entries: RwLock::new(Vec::new()) }
+    }
+
+    /// The label key this family uses (e.g. `"origin"`).
+    pub fn label(&self) -> &'static str {
+        self.label
+    }
+
+    /// The series for `value`, registering it on first use.
+    pub fn with_label(&self, value: &str) -> Arc<M> {
+        if let Some((_, m)) = self.entries.read().unwrap().iter().find(|(v, _)| v == value) {
+            return m.clone();
+        }
+        let mut w = self.entries.write().unwrap();
+        if let Some((_, m)) = w.iter().find(|(v, _)| v == value) {
+            return m.clone(); // lost the registration race
+        }
+        let m = Arc::new(M::default());
+        w.push((value.to_string(), m.clone()));
+        m
+    }
+
+    /// Snapshot of every series, sorted by label value (deterministic
+    /// exposition order).
+    pub fn snapshot(&self) -> Vec<(String, Arc<M>)> {
+        let mut v: Vec<_> =
+            self.entries.read().unwrap().iter().map(|(l, m)| (l.clone(), m.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+impl CounterFamily {
+    /// Sum over every series of the family.
+    pub fn sum(&self) -> u64 {
+        self.entries.read().unwrap().iter().fold(0u64, |a, (_, c)| a.saturating_add(c.get()))
+    }
+}
+
+/// The per-hub metrics registry: one atomic field per pipeline meter.
+///
+/// "Static metric handles": every metric is a named struct field, not a
+/// map lookup — an instrumentation site compiles down to one relaxed
+/// atomic op. One registry is created per [`crate::live::LiveHub`]
+/// (reachable as `hub.telemetry()`), which makes it effectively
+/// process-wide for the one-pipeline-per-process `iprof` CLI while
+/// keeping tests isolated.
+#[derive(Debug)]
+pub struct Registry {
+    // ── live hub (channels + merge) ────────────────────────────────
+    /// Events accepted into hub channels (local + every origin).
+    pub live_events_received: Counter,
+    /// Events dropped at full channels (the backpressure policy).
+    pub live_events_dropped: Counter,
+    /// Watermark beacons applied to channels.
+    pub live_beacons: Counter,
+    /// Events currently queued across all channels.
+    pub live_queue_depth: Gauge,
+    /// Channels created (local + origin blocks).
+    pub live_channels: Gauge,
+    /// Per-stream channel drops (`stream` = shared hub index).
+    pub channel_dropped: CounterFamily,
+    /// Per-stream queue occupancy (`stream` = shared hub index).
+    pub channel_depth: GaugeFamily,
+    /// Events fed per hub shard (shard 0 = local, i+1 = origin i).
+    pub shard_feed: CounterFamily,
+    /// Events the merge popped per hub shard.
+    pub shard_merged: CounterFamily,
+    /// Events released by the k-way merge.
+    pub merge_events: Counter,
+    /// Total channel-residence nanoseconds of merged events.
+    pub merge_latency_ns: Counter,
+    /// Merge gate waits (nothing releasable; parked for progress).
+    pub merge_gate_waits: Counter,
+    /// Periodic sink refresh sweeps.
+    pub sink_refresh: Counter,
+    /// Total nanoseconds spent inside sink refresh sweeps.
+    pub sink_refresh_ns: Counter,
+
+    // ── publisher (`iprof serve`) ──────────────────────────────────
+    /// Forward-pump rounds (one `next_forward_batch` per round).
+    pub publish_rounds: Counter,
+    /// THRL frames written (events, batches, beacons, drops, closes).
+    pub publish_frames: Counter,
+    /// Events relayed to the wire (batched or per-event).
+    pub publish_events: Counter,
+    /// Wire bytes written (preamble + every frame, incl. replay).
+    pub publish_bytes: Counter,
+    /// `EventBatch` frames written (v3 wire only).
+    pub publish_batches: Counter,
+    /// Dictionary definitions emitted (v3 batch keys, `Def`).
+    pub publish_dict_defs: Counter,
+    /// Dictionary references emitted (v3 batch keys, `Ref`);
+    /// hit rate = refs / (defs + refs).
+    pub publish_dict_refs: Counter,
+    /// Events replayed from the resume ring to reconnecting viewers.
+    pub publish_replayed: Counter,
+    /// Events lost to ring eviction and reported as resume gaps.
+    pub publish_gap_events: Counter,
+    /// Subscriber connections served by this session.
+    pub publish_connections: Counter,
+    /// Bytes currently held by the replay ring.
+    pub ring_bytes: Gauge,
+    /// Events evicted from the replay ring (byte budget exceeded).
+    pub ring_evicted_events: Counter,
+
+    // ── fan-in readers (`iprof attach`) ────────────────────────────
+    /// Per-origin events decoded off the wire.
+    pub origin_events: CounterFamily,
+    /// Per-origin frames read.
+    pub origin_frames: CounterFamily,
+    /// Per-origin `EventBatch` frames decoded.
+    pub origin_batches: CounterFamily,
+    /// Per-origin reconnect attempts that reached a new connection.
+    pub origin_reconnects: CounterFamily,
+    /// Per-origin events lost to resume gaps (ring outlived outage).
+    pub origin_resume_gaps: CounterFamily,
+    /// Per-origin publisher-side channel drops (cumulative `Drops`
+    /// ledger, confirmed by `Eos`).
+    pub origin_remote_dropped: CounterFamily,
+    /// Per-origin negotiated THRL wire version (2 or 3).
+    pub origin_wire_version: GaugeFamily,
+}
+
+/// The label value every per-origin series uses:
+/// `<origin index>:<origin label>`. The index prefix keeps series
+/// distinct when two publishers announce the same hostname (labels are
+/// the Family's identity, unlike the hub's per-shard books), and the
+/// hub and the fan-in readers MUST agree on it — both call this.
+pub fn origin_series_label(origin: usize, label: &str) -> String {
+    format!("{origin}:{label}")
+}
+
+impl Registry {
+    /// A fresh registry with every meter at zero.
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry {
+            live_events_received: Counter::default(),
+            live_events_dropped: Counter::default(),
+            live_beacons: Counter::default(),
+            live_queue_depth: Gauge::default(),
+            live_channels: Gauge::default(),
+            channel_dropped: Family::new("stream"),
+            channel_depth: Family::new("stream"),
+            shard_feed: Family::new("shard"),
+            shard_merged: Family::new("shard"),
+            merge_events: Counter::default(),
+            merge_latency_ns: Counter::default(),
+            merge_gate_waits: Counter::default(),
+            sink_refresh: Counter::default(),
+            sink_refresh_ns: Counter::default(),
+            publish_rounds: Counter::default(),
+            publish_frames: Counter::default(),
+            publish_events: Counter::default(),
+            publish_bytes: Counter::default(),
+            publish_batches: Counter::default(),
+            publish_dict_defs: Counter::default(),
+            publish_dict_refs: Counter::default(),
+            publish_replayed: Counter::default(),
+            publish_gap_events: Counter::default(),
+            publish_connections: Counter::default(),
+            ring_bytes: Gauge::default(),
+            ring_evicted_events: Counter::default(),
+            origin_events: Family::new("origin"),
+            origin_frames: Family::new("origin"),
+            origin_batches: Family::new("origin"),
+            origin_reconnects: Family::new("origin"),
+            origin_resume_gaps: Family::new("origin"),
+            origin_remote_dropped: Family::new("origin"),
+            origin_wire_version: Family::new("origin"),
+        })
+    }
+
+    /// Render the registry as Prometheus text exposition v0.0.4.
+    ///
+    /// Deterministic: fixed metric order, label values sorted. Families
+    /// with no registered series emit their `HELP`/`TYPE` header only
+    /// (legal exposition; keeps the metric *catalog* scrape-stable).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for (name, kind, help, value) in self.scalars() {
+            header(&mut out, name, kind, help);
+            sample(&mut out, name, &[], &value);
+        }
+        for (name, kind, help, fam) in self.counter_families() {
+            header(&mut out, name, kind, help);
+            for (label, c) in fam.snapshot() {
+                sample(&mut out, name, &[(fam.label(), &label)], &c.get().to_string());
+            }
+        }
+        for (name, kind, help, fam) in self.gauge_families() {
+            header(&mut out, name, kind, help);
+            for (label, g) in fam.snapshot() {
+                sample(&mut out, name, &[(fam.label(), &label)], &g.get().to_string());
+            }
+        }
+        out
+    }
+
+    /// Render the same snapshot as a `BenchJson`-shaped document:
+    /// `{"bench": "telemetry", ..., "results": [{"name", "value"}...]}`.
+    /// Labeled series carry their exposition-style `{label="v"}` suffix
+    /// in `name`.
+    pub fn render_json(&self) -> String {
+        let mut doc = BenchJson::new("telemetry");
+        doc.meta("format", js_str("prometheus-mirror"));
+        for (name, _, _, value) in self.scalars() {
+            // scalar values are u64 or fixed-point seconds: both parse as f64
+            let v: f64 = value.parse().unwrap_or(f64::NAN);
+            doc.result(&[("name", js_str(name)), ("value", js_num(v))]);
+        }
+        for (name, _, _, fam) in self.counter_families() {
+            for (label, c) in fam.snapshot() {
+                let series = format!("{name}{{{}=\"{}\"}}", fam.label(), escape_label(&label));
+                doc.result(&[("name", js_str(&series)), ("value", js_num(c.get() as f64))]);
+            }
+        }
+        for (name, _, _, fam) in self.gauge_families() {
+            for (label, g) in fam.snapshot() {
+                let series = format!("{name}{{{}=\"{}\"}}", fam.label(), escape_label(&label));
+                doc.result(&[("name", js_str(&series)), ("value", js_num(g.get() as f64))]);
+            }
+        }
+        doc.render()
+    }
+
+    /// Every unlabeled metric as `(name, type, help, rendered value)`.
+    fn scalars(&self) -> Vec<(&'static str, &'static str, &'static str, String)> {
+        let secs = |ns: &Counter| format!("{:.9}", ns.get() as f64 / 1e9);
+        vec![
+            (
+                "thapi_live_events_received_total",
+                "counter",
+                "Events accepted into hub channels (all origins)",
+                self.live_events_received.get().to_string(),
+            ),
+            (
+                "thapi_live_events_dropped_total",
+                "counter",
+                "Events dropped at full channels (never blocks the app)",
+                self.live_events_dropped.get().to_string(),
+            ),
+            (
+                "thapi_live_beacons_total",
+                "counter",
+                "Watermark beacons applied to channels",
+                self.live_beacons.get().to_string(),
+            ),
+            (
+                "thapi_live_queue_depth",
+                "gauge",
+                "Events currently queued across all channels",
+                self.live_queue_depth.get().to_string(),
+            ),
+            (
+                "thapi_live_channels",
+                "gauge",
+                "Channels created (local + origin blocks)",
+                self.live_channels.get().to_string(),
+            ),
+            (
+                "thapi_merge_events_total",
+                "counter",
+                "Events released by the k-way merge",
+                self.merge_events.get().to_string(),
+            ),
+            (
+                "thapi_merge_latency_seconds_total",
+                "counter",
+                "Total channel-residence seconds of merged events",
+                secs(&self.merge_latency_ns),
+            ),
+            (
+                "thapi_merge_gate_waits_total",
+                "counter",
+                "Merge gate waits (parked until push/beacon/close)",
+                self.merge_gate_waits.get().to_string(),
+            ),
+            (
+                "thapi_sink_refresh_total",
+                "counter",
+                "Periodic sink refresh sweeps",
+                self.sink_refresh.get().to_string(),
+            ),
+            (
+                "thapi_sink_refresh_seconds_total",
+                "counter",
+                "Total seconds spent in sink refresh sweeps",
+                secs(&self.sink_refresh_ns),
+            ),
+            (
+                "thapi_publish_rounds_total",
+                "counter",
+                "Publisher forward-pump rounds",
+                self.publish_rounds.get().to_string(),
+            ),
+            (
+                "thapi_publish_frames_total",
+                "counter",
+                "THRL frames written to the wire",
+                self.publish_frames.get().to_string(),
+            ),
+            (
+                "thapi_publish_events_total",
+                "counter",
+                "Events relayed to the wire",
+                self.publish_events.get().to_string(),
+            ),
+            (
+                "thapi_publish_bytes_total",
+                "counter",
+                "Wire bytes written (incl. replay)",
+                self.publish_bytes.get().to_string(),
+            ),
+            (
+                "thapi_publish_batches_total",
+                "counter",
+                "EventBatch frames written (v3 wire)",
+                self.publish_batches.get().to_string(),
+            ),
+            (
+                "thapi_publish_dict_defs_total",
+                "counter",
+                "v3 dictionary definitions emitted",
+                self.publish_dict_defs.get().to_string(),
+            ),
+            (
+                "thapi_publish_dict_refs_total",
+                "counter",
+                "v3 dictionary references emitted (hit rate = refs/(defs+refs))",
+                self.publish_dict_refs.get().to_string(),
+            ),
+            (
+                "thapi_publish_replayed_total",
+                "counter",
+                "Events replayed from the resume ring",
+                self.publish_replayed.get().to_string(),
+            ),
+            (
+                "thapi_publish_gap_events_total",
+                "counter",
+                "Events lost to ring eviction (reported as resume gaps)",
+                self.publish_gap_events.get().to_string(),
+            ),
+            (
+                "thapi_publish_connections_total",
+                "counter",
+                "Subscriber connections served",
+                self.publish_connections.get().to_string(),
+            ),
+            (
+                "thapi_ring_bytes",
+                "gauge",
+                "Bytes currently held by the replay ring",
+                self.ring_bytes.get().to_string(),
+            ),
+            (
+                "thapi_ring_evicted_events_total",
+                "counter",
+                "Events evicted from the replay ring",
+                self.ring_evicted_events.get().to_string(),
+            ),
+        ]
+    }
+
+    fn counter_families(&self) -> Vec<(&'static str, &'static str, &'static str, &CounterFamily)> {
+        vec![
+            (
+                "thapi_channel_dropped_total",
+                "counter",
+                "Per-stream channel drops",
+                &self.channel_dropped,
+            ),
+            ("thapi_shard_feed_total", "counter", "Events fed per hub shard", &self.shard_feed),
+            (
+                "thapi_shard_merged_total",
+                "counter",
+                "Events popped by the merge per hub shard",
+                &self.shard_merged,
+            ),
+            (
+                "thapi_origin_events_total",
+                "counter",
+                "Per-origin events decoded off the wire",
+                &self.origin_events,
+            ),
+            ("thapi_origin_frames_total", "counter", "Per-origin frames read", &self.origin_frames),
+            (
+                "thapi_origin_batches_total",
+                "counter",
+                "Per-origin EventBatch frames decoded",
+                &self.origin_batches,
+            ),
+            (
+                "thapi_origin_reconnects_total",
+                "counter",
+                "Per-origin reconnect attempts that produced a connection",
+                &self.origin_reconnects,
+            ),
+            (
+                "thapi_origin_resume_gap_events_total",
+                "counter",
+                "Per-origin events lost to resume gaps",
+                &self.origin_resume_gaps,
+            ),
+            (
+                "thapi_origin_remote_dropped_total",
+                "counter",
+                "Per-origin publisher-side channel drops (cumulative ledger)",
+                &self.origin_remote_dropped,
+            ),
+        ]
+    }
+
+    fn gauge_families(&self) -> Vec<(&'static str, &'static str, &'static str, &GaugeFamily)> {
+        vec![
+            (
+                "thapi_channel_queue_depth",
+                "gauge",
+                "Per-stream channel occupancy",
+                &self.channel_depth,
+            ),
+            (
+                "thapi_origin_wire_version",
+                "gauge",
+                "Per-origin negotiated THRL wire version",
+                &self.origin_wire_version,
+            ),
+        ]
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: &str) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+/// Escape a label value per the exposition format: `\` `"` and newline.
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            _ => s.push(ch),
+        }
+    }
+    s
+}
+
+/// Background JSON snapshot writer (`--telemetry-json <path>`).
+///
+/// Writes the registry's [`Registry::render_json`] document to `path`
+/// immediately, then every `period`, then once more at shutdown — so
+/// even a run shorter than one period leaves a final, complete
+/// snapshot behind (what tests and CI consume).
+pub struct JsonSnapshotter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl JsonSnapshotter {
+    /// Start the writer thread. The first snapshot is written (and its
+    /// errors reported) before this returns; later write failures are
+    /// silently retried next period — telemetry must not kill the run.
+    pub fn start(
+        path: PathBuf,
+        registry: Arc<Registry>,
+        period: Duration,
+    ) -> std::io::Result<JsonSnapshotter> {
+        std::fs::write(&path, registry.render_json())?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new().name("thapi-telemetry-json".into()).spawn(
+            move || {
+                let tick = Duration::from_millis(25).min(period);
+                let mut elapsed = Duration::ZERO;
+                while !flag.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    elapsed += tick;
+                    if elapsed >= period {
+                        elapsed = Duration::ZERO;
+                        let _ = std::fs::write(&path, registry.render_json());
+                    }
+                }
+                // final snapshot: the numbers a finished run settles on
+                let _ = std::fs::write(&path, registry.render_json());
+            },
+        )?;
+        Ok(JsonSnapshotter { stop, handle: Some(handle) })
+    }
+
+    /// Stop the writer and flush the final snapshot.
+    pub fn finish(mut self) {
+        self.stop_join();
+    }
+
+    fn stop_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JsonSnapshotter {
+    fn drop(&mut self) {
+        self.stop_join();
+    }
+}
+
+/// CLI-facing exposure selection (`--telemetry`, `--telemetry-json`):
+/// which exposures to run for the duration of one serve / attach.
+/// `Default` exposes nothing — the registry still accumulates, it just
+/// is not served anywhere.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryOptions {
+    /// Bind a [`TelemetryServer`] here (`--telemetry <addr>`).
+    pub addr: Option<String>,
+    /// Write periodic JSON snapshots here (`--telemetry-json <path>`).
+    pub json_path: Option<PathBuf>,
+    /// JSON snapshot period (default 1 s).
+    pub json_period: Option<Duration>,
+}
+
+impl TelemetryOptions {
+    /// Anything to expose at all?
+    pub fn is_enabled(&self) -> bool {
+        self.addr.is_some() || self.json_path.is_some()
+    }
+}
+
+/// Everything [`TelemetryOptions`] asked for, running: the HTTP scrape
+/// endpoint and/or the JSON snapshot writer over one pipeline's
+/// registry. Dropping stops both (the snapshotter flushes one final
+/// document first), so error paths clean up without ceremony.
+pub struct TelemetryExposure {
+    server: Option<TelemetryServer>,
+    json: Option<JsonSnapshotter>,
+}
+
+impl TelemetryExposure {
+    /// Start whatever `opts` enables over `registry`. A bind or write
+    /// failure is a hard error: the operator explicitly asked for this
+    /// exposure, and running blind while they believe they are watching
+    /// would be worse than failing the launch.
+    pub fn start(
+        opts: &TelemetryOptions,
+        registry: &Arc<Registry>,
+    ) -> std::io::Result<TelemetryExposure> {
+        let server = match &opts.addr {
+            Some(addr) => Some(TelemetryServer::bind(addr, registry.clone())?),
+            None => None,
+        };
+        let json = match &opts.json_path {
+            Some(path) => Some(JsonSnapshotter::start(
+                path.clone(),
+                registry.clone(),
+                opts.json_period.unwrap_or(Duration::from_secs(1)),
+            )?),
+            None => None,
+        };
+        Ok(TelemetryExposure { server, json })
+    }
+
+    /// The bound scrape address, if an HTTP endpoint is running (with
+    /// `--telemetry 127.0.0.1:0` the OS picks the port; this is it).
+    pub fn local_addr(&self) -> Option<std::net::SocketAddr> {
+        self.server.as_ref().map(|s| s.local_addr())
+    }
+
+    /// Stop the endpoint and flush the final JSON snapshot. Call after
+    /// the pipeline's threads have joined so the last document carries
+    /// the settled end-of-run numbers.
+    pub fn finish(self) {
+        if let Some(s) = self.server {
+            s.shutdown();
+        }
+        if let Some(j) = self.json {
+            j.finish();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_saturates_instead_of_wrapping() {
+        let c = Counter::default();
+        c.add(u64::MAX - 1);
+        c.add(10);
+        assert_eq!(c.get(), u64::MAX);
+        c.inc();
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn counter_store_max_is_monotone() {
+        let c = Counter::default();
+        c.store_max(7);
+        c.store_max(3); // a stale mirror can never move a ledger backwards
+        assert_eq!(c.get(), 7);
+        c.store_max(9);
+        assert_eq!(c.get(), 9);
+    }
+
+    #[test]
+    fn gauge_sub_saturates_at_zero() {
+        let g = Gauge::default();
+        g.add(5);
+        g.sub(9);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn family_handles_are_shared_and_sorted() {
+        let f: CounterFamily = Family::new("origin");
+        let a = f.with_label("nodeB");
+        let b = f.with_label("nodeA");
+        let a2 = f.with_label("nodeB");
+        a.add(2);
+        a2.add(3);
+        b.inc();
+        let snap = f.snapshot();
+        assert_eq!(
+            snap.iter().map(|(l, c)| (l.as_str(), c.get())).collect::<Vec<_>>(),
+            vec![("nodeA", 1), ("nodeB", 5)]
+        );
+        assert_eq!(f.sum(), 6);
+    }
+
+    #[test]
+    fn exposition_renders_headers_series_and_escapes() {
+        let reg = Registry::new();
+        reg.live_events_received.add(42);
+        reg.origin_events.with_label("host\"1\"").add(7);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE thapi_live_events_received_total counter"));
+        assert!(text.contains("thapi_live_events_received_total 42\n"));
+        assert!(text.contains("thapi_origin_events_total{origin=\"host\\\"1\\\"\"} 7\n"));
+        // seconds metrics render as fixed-point floats
+        assert!(text.contains("thapi_merge_latency_seconds_total 0.000000000\n"));
+        // every line is a header or a sample: the parser must accept all of it
+        let samples = parse_exposition(&text).expect("own exposition must parse");
+        assert!(samples.iter().any(|s| s.name == "thapi_live_events_received_total"
+            && s.value == 42.0));
+    }
+
+    #[test]
+    fn json_snapshot_is_benchjson_shaped() {
+        let reg = Registry::new();
+        reg.merge_events.add(5);
+        let doc = reg.render_json();
+        assert!(doc.contains("\"bench\": \"telemetry\""));
+        assert!(doc.contains("\"name\": \"thapi_merge_events_total\""));
+        assert!(doc.contains("\"results\": ["));
+    }
+
+    #[test]
+    fn json_snapshotter_writes_initial_and_final() {
+        let dir = std::env::temp_dir().join(format!("thapi-tele-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let reg = Registry::new();
+        let w =
+            JsonSnapshotter::start(path.clone(), reg.clone(), Duration::from_secs(3600)).unwrap();
+        assert!(path.exists(), "initial snapshot must be written synchronously");
+        reg.live_events_received.add(9);
+        w.finish();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.contains("\"name\": \"thapi_live_events_received_total\""),
+            "final snapshot must exist: {text}"
+        );
+        // the final write happens after the counter bump above
+        let samples: Vec<_> = text.lines().filter(|l| l.contains("live_events_received")).collect();
+        assert_eq!(samples.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

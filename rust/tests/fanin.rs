@@ -106,7 +106,7 @@ fn fanin_split_trace_over_tcp_is_byte_identical_to_whole_trace_postmortem() {
         ];
         let sinks: Vec<Box<dyn AnalysisSink>> =
             vec![Box::new(TallySink::new()), Box::new(TimelineSink::new())];
-        run_fanin(conns, 256, sinks, None, |_| {}).unwrap()
+        run_fanin(conns, 256, sinks, None, |_| {}, &Default::default()).unwrap()
     });
 
     assert_eq!(report.stats.per.len(), 2);
@@ -482,6 +482,7 @@ fn killed_publisher_yields_partial_union_analysis_with_accounting() {
         sinks,
         None,
         |_| {},
+        &Default::default(),
     )
     .unwrap();
 
@@ -723,6 +724,7 @@ fn ring_overflow_books_gap_into_drops_ledger_and_fails_strict() {
             sinks,
             None,
             |_| {},
+            &Default::default(),
         )
         .unwrap();
         (report, server.join().unwrap())

@@ -272,6 +272,7 @@ fn serve_and_attach_whole_stack_matches_postmortem_of_retained_trace() {
                 cfg_ref,
                 conn,
                 thapi::remote::VERSION,
+                &Default::default(),
             )
             .unwrap()
         });

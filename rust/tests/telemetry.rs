@@ -1,0 +1,408 @@
+//! Self-telemetry integration tests.
+//!
+//! The acceptance bar: the scrape endpoint and the end-of-run reports
+//! are views over the SAME registry, so the numbers an operator watches
+//! mid-run and the numbers the summary prints can never disagree — a
+//! fan-in run is scraped over real HTTP and every sample is asserted
+//! equal to `LiveStats` / `FanInStats` / `OriginStats`. A deterministic
+//! local run pins the exact nonzero counter set (golden), concurrent
+//! feeders pin scrape integrity under load, and the `iprof health
+//! --strict` gate is driven through the real binary for its exit codes.
+
+use std::io::Cursor;
+use std::sync::Arc;
+use std::thread;
+use thapi::analysis::{AnalysisSink, EventMsg, TallySink};
+use thapi::live::{run_live_pipeline, LiveHub, LiveSource};
+use thapi::remote::{publish_with, FanIn, PublishStats};
+use thapi::telemetry::{
+    origin_series_label, parse_exposition, scrape, HealthSummary, Registry, Sample,
+    TelemetryOptions, TelemetryServer,
+};
+
+/// Decode a registry-class message through `hub` (same idiom as the
+/// fan-in tests: the class id must resolve on the attach side).
+fn reg_msg(hub: &LiveHub, name: &str, ts: u64, rank: u32, tid: u32) -> EventMsg {
+    let class = thapi::model::class_by_name(name).unwrap();
+    hub.decode(rank, tid, class.id, ts, &0u64.to_le_bytes()).unwrap()
+}
+
+/// Sum of every sample of an unlabeled metric (0.0 if absent).
+fn val(samples: &[Sample], name: &str) -> f64 {
+    samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+}
+
+/// The one sample of `name` whose label matches, or 0.0.
+fn lval(samples: &[Sample], name: &str, key: &str, label: &str) -> f64 {
+    samples
+        .iter()
+        .find(|s| s.name == name && s.label(key) == Some(label))
+        .map(|s| s.value)
+        .unwrap_or(0.0)
+}
+
+/// Publish a small deterministic 2-stream feed into an in-memory v3
+/// wire; returns the wire and the publisher's own accounting.
+fn build_wire(hostname: &str) -> (Vec<u8>, PublishStats, Arc<LiveHub>) {
+    let hub = LiveHub::new(hostname, 64, false);
+    hub.ensure_channels(2);
+    hub.push_batch(
+        0,
+        vec![
+            reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 10, 0, 1),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 20, 0, 1),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 40, 0, 1),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 70, 0, 1),
+        ],
+    );
+    hub.push_batch(
+        1,
+        vec![
+            reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 15, 0, 2),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 35, 0, 2),
+        ],
+    );
+    hub.close_all();
+    let mut buf = Vec::new();
+    let stats = publish_with(&hub, &mut buf, thapi::remote::VERSION).unwrap();
+    (buf, stats, hub)
+}
+
+// ---------------------------------------------------------------------------
+// Golden: a deterministic local run produces exactly the expected
+// counter set — nothing more, nothing less
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deterministic_run_yields_exact_golden_counters() {
+    let hub = LiveHub::new("gold", 64, false);
+    hub.ensure_channels(2);
+    hub.push_batch(
+        0,
+        vec![
+            reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 10, 0, 1),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 20, 0, 1),
+        ],
+    );
+    hub.push_batch(
+        1,
+        vec![
+            reg_msg(&hub, "lttng_ust_ze:zeInit_entry", 12, 0, 2),
+            reg_msg(&hub, "lttng_ust_ze:zeInit_exit", 30, 0, 2),
+        ],
+    );
+    hub.close_all();
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pipe = run_live_pipeline(LiveSource::new(hub.clone()), &mut sinks, None, |_| {});
+    assert_eq!(pipe.latency.merged, 4);
+
+    let reg = hub.telemetry();
+    assert_eq!(reg.live_events_received.get(), 4);
+    assert_eq!(reg.live_events_dropped.get(), 0);
+    assert_eq!(reg.live_beacons.get(), 0);
+    assert_eq!(reg.live_queue_depth.get(), 0, "drained run must settle at zero depth");
+    assert_eq!(reg.live_channels.get(), 2);
+    assert_eq!(reg.merge_events.get(), 4);
+    assert_eq!(reg.sink_refresh.get(), 0, "no --live-refresh, no sweeps");
+    assert_eq!(reg.publish_events.get(), 0, "no publisher in a local run");
+
+    // the exposition's nonzero samples are EXACTLY the expected set
+    // (time-derived meters excluded: residence latency and gate waits
+    // depend on scheduling, not on the event feed)
+    let text = reg.render_prometheus();
+    let samples = parse_exposition(&text).expect("own exposition must parse");
+    let nondeterministic =
+        ["thapi_merge_latency_seconds_total", "thapi_merge_gate_waits_total"];
+    let mut nonzero: Vec<(String, f64)> = samples
+        .iter()
+        .filter(|s| s.value != 0.0 && !nondeterministic.contains(&s.name.as_str()))
+        .map(|s| {
+            let labels: Vec<String> =
+                s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            (format!("{}{{{}}}", s.name, labels.join(",")), s.value)
+        })
+        .collect();
+    nonzero.sort();
+    assert_eq!(
+        nonzero,
+        vec![
+            ("thapi_live_channels{}".to_string(), 2.0),
+            ("thapi_live_events_received_total{}".to_string(), 4.0),
+            ("thapi_merge_events_total{}".to_string(), 4.0),
+            ("thapi_shard_feed_total{shard=0}".to_string(), 4.0),
+            ("thapi_shard_merged_total{shard=0}".to_string(), 4.0),
+        ],
+        "golden counter set drifted:\n{text}"
+    );
+
+    // the zero-valued per-stream series are still registered (catalog
+    // stability: a scraper sees every stream from the first scrape on)
+    for stream in ["0", "1"] {
+        assert_eq!(lval(&samples, "thapi_channel_dropped_total", "stream", stream), 0.0);
+        assert_eq!(lval(&samples, "thapi_channel_queue_depth", "stream", stream), 0.0);
+        assert!(samples
+            .iter()
+            .any(|s| s.name == "thapi_channel_dropped_total"
+                && s.label("stream") == Some(stream)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve side: the publisher hub's registry mirrors PublishStats exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn publisher_registry_mirrors_publish_stats_exactly() {
+    let (_wire, stats, hub) = build_wire("pubnode");
+    let reg = hub.telemetry();
+    assert_eq!(stats.events, 6);
+    assert_eq!(stats.connections, 1);
+    assert_eq!(reg.publish_events.get(), stats.events);
+    assert_eq!(reg.publish_frames.get(), stats.frames);
+    assert_eq!(reg.publish_bytes.get(), stats.bytes);
+    assert_eq!(reg.publish_batches.get(), stats.batches);
+    assert_eq!(reg.publish_dict_defs.get(), stats.dict_defs);
+    assert_eq!(reg.publish_dict_refs.get(), stats.dict_refs);
+    assert_eq!(reg.publish_connections.get(), stats.connections);
+    assert_eq!(reg.publish_replayed.get(), stats.replayed);
+    assert_eq!(reg.publish_gap_events.get(), stats.gaps);
+    assert!(stats.batches > 0, "v3 wire must batch");
+    assert!(reg.publish_rounds.get() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: a fan-in run scraped over real HTTP reports numbers equal
+// to the end-of-run LiveStats / FanInStats / OriginStats — same registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fanin_endpoint_scrape_equals_end_of_run_report() {
+    let (wire, _pub_stats, _pub_hub) = build_wire("pubnode");
+
+    let fan = FanIn::open(vec![Cursor::new(wire)], 64).unwrap();
+    let hub = fan.hub().clone();
+    let server = TelemetryServer::bind("127.0.0.1:0", hub.telemetry().clone()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let pipe = run_live_pipeline(fan.source(), &mut sinks, None, |_| {});
+    let local = hub.stats();
+    let origins = hub.origin_stats();
+    let stats = fan.finish().unwrap();
+
+    let text = scrape(&addr).unwrap();
+    server.shutdown();
+    let samples = parse_exposition(&text).expect("endpoint exposition must parse");
+
+    // pipeline-level equality
+    assert_eq!(local.received, 6);
+    assert_eq!(val(&samples, "thapi_live_events_received_total"), local.received as f64);
+    assert_eq!(val(&samples, "thapi_live_events_dropped_total"), local.dropped as f64);
+    assert_eq!(val(&samples, "thapi_merge_events_total"), pipe.latency.merged as f64);
+    assert_eq!(val(&samples, "thapi_live_queue_depth"), 0.0);
+
+    // per-origin equality: every scrape sample equals the reader's own
+    // end-of-run accounting, series keyed by the shared "<idx>:<host>"
+    let per = &stats.per[0];
+    let origin = origin_series_label(0, "pubnode");
+    let ol = |name: &str| lval(&samples, name, "origin", &origin);
+    assert_eq!(ol("thapi_origin_events_total"), per.events as f64);
+    assert_eq!(ol("thapi_origin_frames_total"), per.frames as f64);
+    assert_eq!(ol("thapi_origin_batches_total"), per.batches as f64);
+    assert_eq!(ol("thapi_origin_wire_version"), per.wire_version as f64);
+    assert_eq!(ol("thapi_origin_reconnects_total"), 0.0);
+    assert_eq!(ol("thapi_origin_resume_gap_events_total"), origins[0].resume_gaps as f64);
+    assert_eq!(ol("thapi_origin_remote_dropped_total"), origins[0].remote_dropped as f64);
+    assert_eq!(per.events, 6);
+    assert_eq!(per.wire_version, thapi::remote::VERSION);
+
+    // lossless feed: the health view over the same scrape agrees
+    assert_eq!(origins[0].known_dropped(), 0);
+    let health = HealthSummary::from_samples(&samples);
+    assert_eq!(health.known_loss(), 0);
+    assert_eq!(health.received, local.received);
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency smoke: scrapes taken while feeders hammer the registry
+// always parse, and the settled totals are exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scrapes_parse_while_concurrent_feeders_run() {
+    const K: usize = 4;
+    const N: usize = 400;
+    let hub = LiveHub::new("smoke", 1 << 12, false);
+    hub.ensure_channels(K);
+    let origin_a = hub.register_origin("nodeA");
+    let origin_b = hub.register_origin("nodeB");
+    let server = TelemetryServer::bind("127.0.0.1:0", hub.telemetry().clone()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    thread::scope(|s| {
+        for t in 0..K {
+            let hub = &hub;
+            s.spawn(move || {
+                for i in 0..N {
+                    hub.push_batch(
+                        t,
+                        vec![reg_msg(hub, "lttng_ust_ze:zeInit_entry", (i + 1) as u64, 0, t as u32)],
+                    );
+                }
+            });
+        }
+        // two ledger writers racing the feeders: cumulative wire drops
+        // on one origin, resume gaps on the other
+        let hub2 = &hub;
+        s.spawn(move || {
+            for c in 1..=N as u64 {
+                hub2.record_origin_drops(origin_a, 0, c);
+            }
+        });
+        s.spawn(move || {
+            for _ in 0..N {
+                hub2.record_origin_gap(origin_b, 0, 1);
+            }
+        });
+        // scrape the endpoint the whole time: every response must be
+        // well-formed exposition, and monotone totals can lag but never
+        // overshoot what the feeders will have written
+        for _ in 0..25 {
+            let text = scrape(&addr).unwrap();
+            let samples = parse_exposition(&text).expect("mid-run scrape must parse");
+            assert!(val(&samples, "thapi_live_events_received_total") <= (K * N) as f64);
+            assert!(
+                lval(&samples, "thapi_origin_remote_dropped_total", "origin",
+                    &origin_series_label(origin_a, "nodeA")) <= N as f64
+            );
+        }
+    });
+
+    let text = scrape(&addr).unwrap();
+    server.shutdown();
+    let samples = parse_exposition(&text).unwrap();
+    assert_eq!(val(&samples, "thapi_live_events_received_total"), (K * N) as f64);
+    assert_eq!(val(&samples, "thapi_live_events_dropped_total"), 0.0);
+    assert_eq!(val(&samples, "thapi_live_queue_depth"), (K * N) as f64, "nothing merged yet");
+    for t in 0..K {
+        assert_eq!(
+            lval(&samples, "thapi_channel_queue_depth", "stream", &t.to_string()),
+            N as f64
+        );
+    }
+    assert_eq!(
+        lval(&samples, "thapi_origin_remote_dropped_total", "origin",
+            &origin_series_label(origin_a, "nodeA")),
+        N as f64
+    );
+    assert_eq!(
+        lval(&samples, "thapi_origin_resume_gap_events_total", "origin",
+            &origin_series_label(origin_b, "nodeB")),
+        N as f64
+    );
+    // the hub's book-of-record agrees with the scrape
+    let origins = hub.origin_stats();
+    assert_eq!(origins[origin_a].remote_dropped, N as u64);
+    assert_eq!(origins[origin_b].resume_gaps, N as u64);
+}
+
+// ---------------------------------------------------------------------------
+// `iprof health --strict`: exit codes through the real binary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn health_strict_gate_exit_codes() {
+    let reg = Registry::new();
+    reg.live_events_received.add(10);
+    reg.merge_events.add(7);
+    reg.live_events_dropped.add(3);
+    reg.origin_resume_gaps.with_label(&origin_series_label(0, "n1")).add(2);
+    let server = TelemetryServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let bin = env!("CARGO_BIN_EXE_iprof");
+    let health = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(bin);
+        cmd.arg("health").arg(&addr).args(extra);
+        cmd.output().unwrap()
+    };
+
+    // non-strict: always exit 0, print the summary
+    let out = health(&[]);
+    assert!(out.status.success(), "non-strict must succeed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("known loss: 5 event(s)"), "summary must total the loss: {stdout}");
+
+    // strict with the default zero threshold: lossy feed gates
+    let out = health(&["--strict"]);
+    assert!(!out.status.success(), "known loss 5 must fail --strict");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("known loss"), "gate must say why: {stderr}");
+
+    // a threshold at the actual loss passes
+    let out = health(&["--strict", "--max-drops", "5"]);
+    assert!(out.status.success(), "loss == threshold must pass: {out:?}");
+    let out = health(&["--strict", "--max-drops", "4"]);
+    assert!(!out.status.success(), "loss > threshold must fail");
+    server.shutdown();
+
+    // a clean registry passes strict outright
+    let clean = Registry::new();
+    clean.live_events_received.add(4);
+    let server = TelemetryServer::bind("127.0.0.1:0", clean).unwrap();
+    let addr = server.local_addr().to_string();
+    let out = std::process::Command::new(bin)
+        .args(["health", &addr, "--strict"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "lossless feed must pass --strict: {out:?}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator wiring: run_fanin's --telemetry-json final snapshot holds
+// the settled report numbers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_fanin_final_json_snapshot_matches_report() {
+    let (wire, _stats, _hub) = build_wire("pubnode");
+    let dir = std::env::temp_dir().join(format!("thapi-tele-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("final.json");
+    let opts = TelemetryOptions { json_path: Some(path.clone()), ..Default::default() };
+
+    let sinks: Vec<Box<dyn AnalysisSink>> = vec![Box::new(TallySink::new())];
+    let report = thapi::coordinator::run_fanin(
+        vec![Cursor::new(wire)],
+        64,
+        sinks,
+        None,
+        |_| {},
+        &opts,
+    )
+    .unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(text.contains("\"bench\": \"telemetry\""));
+    // the final snapshot is written after the pipeline joins, so it
+    // carries the same settled numbers the report prints (BenchJson
+    // rows are "name" then "value" on the following line)
+    let expect = |name: &str, v: f64| {
+        let lines: Vec<&str> = text.lines().collect();
+        let i = lines
+            .iter()
+            .position(|l| l.contains(&format!("\"name\": \"{name}\"")))
+            .unwrap_or_else(|| panic!("{name} missing from snapshot:\n{text}"));
+        assert!(
+            lines[i + 1].contains(&format!("\"value\": {v:.3}")),
+            "{name} must equal the report's {v}: {}",
+            lines[i + 1]
+        );
+    };
+    expect("thapi_live_events_received_total", report.local.received as f64);
+    expect("thapi_merge_events_total", report.latency.merged as f64);
+    expect("thapi_live_events_dropped_total", report.local.dropped as f64);
+    assert_eq!(report.local.received, 6);
+    assert_eq!(report.known_dropped(), 0);
+}
