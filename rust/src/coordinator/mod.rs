@@ -15,7 +15,8 @@ use crate::apps::Workload;
 use crate::device::Node;
 use crate::live::{self, LatencySummary, LiveConfig, LiveHub, LiveSource, LiveStats, OriginStats};
 use crate::remote::{
-    self, FanIn, FanInStats, PublishStats, Publisher, ReconnectPolicy, RemoteStats, ServeOutcome,
+    self, Broadcaster, FanIn, FanInStats, PublishStats, Publisher, ReconnectPolicy, RemoteStats,
+    ServeOutcome, SubscriberStats,
 };
 use crate::sampling::{Sampler, SamplingConfig};
 use crate::telemetry::{TelemetryExposure, TelemetryOptions};
@@ -326,6 +327,10 @@ pub struct ServeReport {
     /// the reason (always empty for the one-shot [`run_serve`]). A
     /// resumable serve kept going after each of these.
     pub disconnects: Vec<String>,
+    /// Per-subscriber accounting rows, in registration order (nonempty
+    /// only for [`run_serve_broadcast`]): wire version, events
+    /// forwarded/lagged, demotions and disconnects per connection.
+    pub subscribers: Vec<SubscriberStats>,
 }
 
 impl ServeReport {
@@ -425,6 +430,7 @@ pub fn run_serve<W: Write + Send>(
         live: hub.stats(),
         publish: published?,
         disconnects: Vec::new(),
+        subscribers: Vec::new(),
     })
 }
 
@@ -533,6 +539,140 @@ where
         live: hub.stats(),
         publish,
         disconnects,
+        subscribers: Vec::new(),
+    })
+}
+
+/// Run `workload` and **broadcast** its live channels to N concurrent
+/// subscribers (`iprof serve --subscribers <n>`): one [`Broadcaster`]
+/// pump mirrors the hub into a shared replay ring, and every accepted
+/// connection is served on its own thread with independent per-stream
+/// cursors, wire negotiation and batch dictionary
+/// (`docs/PROTOCOL.md` § Broadcast). On the wire each connection is an
+/// ordinary resumable THRL session — broadcast is invisible to
+/// subscribers.
+///
+/// `accept` has the same contract as in [`run_serve_resumable`]:
+/// `Ok(None)` means "no subscriber right now" (sleep briefly before
+/// returning it). Accepting continues past `subscribers` connections —
+/// a viewer that dropped can dial back in as a fresh slot — and the
+/// serve ends once at least `subscribers` connections were accepted,
+/// the workload's stream reached Eos, and every serve thread finished.
+///
+/// `resume_buffer` bounds the shared ring; `max_lag` is the
+/// per-subscriber lag budget (`--max-lag`): a subscriber more than
+/// `max_lag` bytes behind is demoted to gap delivery when the ring is
+/// over budget, instead of pinning memory for everyone. `None` never
+/// demotes — the ring then grows past its budget rather than evict an
+/// entitled laggard.
+#[allow(clippy::too_many_arguments)]
+pub fn run_serve_broadcast<S, A>(
+    node: &Arc<Node>,
+    workload: &dyn Workload,
+    config: &IprofConfig,
+    live_cfg: &LiveConfig,
+    mut accept: A,
+    subscribers: usize,
+    resume_buffer: usize,
+    max_lag: Option<usize>,
+    wire: u32,
+    telemetry: &TelemetryOptions,
+) -> std::io::Result<ServeReport>
+where
+    S: Read + Write + Send,
+    A: FnMut() -> std::io::Result<Option<S>> + Send,
+{
+    assert!(config.tracing, "serve mode requires tracing");
+    assert!(subscribers >= 1, "broadcast needs at least one subscriber");
+    let hub = LiveHub::new(&node.config.hostname, live_cfg.channel_depth, live_cfg.retain);
+    let exposure = TelemetryExposure::start(telemetry, hub.telemetry())?;
+    let session = install_session(SessionConfig {
+        mode: config.mode,
+        buffer_capacity: config.buffer_capacity,
+        sink: SinkKind::Live(hub.clone()),
+        selected_ranks: config.selected_ranks.clone(),
+        hostname: node.config.hostname.clone(),
+        consumer_interval: Duration::from_millis(2),
+    });
+    for p in &config.disabled_patterns {
+        session.disable_matching(p);
+    }
+    let sampler = config
+        .sampling
+        .clone()
+        .map(|s| Sampler::start(node.clone(), s));
+
+    let mut bc = Broadcaster::new(hub.clone(), Publisher::fresh_epoch(), resume_buffer);
+    if let Some(lag) = max_lag {
+        bc = bc.with_max_lag(lag);
+    }
+    let bc = &bc;
+    let (served, wall) = std::thread::scope(|scope| {
+        // One pump owns hub → ring; it exits when the hub closes and
+        // drains, which is what lets every serve thread reach Eos.
+        scope.spawn(move || bc.pump());
+        let manager = scope.spawn(move || {
+            let mut handles: Vec<std::thread::ScopedJoinHandle<'_, ServeOutcome>> = Vec::new();
+            let mut accepted = 0usize;
+            loop {
+                if accepted >= subscribers
+                    && bc.finished()
+                    && handles.iter().all(|h| h.is_finished())
+                {
+                    break;
+                }
+                if let Some(conn) = accept()? {
+                    accepted += 1;
+                    handles.push(scope.spawn(move || bc.serve_connection(conn, wire)));
+                }
+            }
+            let mut disconnects = Vec::new();
+            for h in handles {
+                if let ServeOutcome::Lost(reason) =
+                    h.join().expect("broadcast serve thread panicked")
+                {
+                    disconnects.push(reason);
+                }
+            }
+            Ok::<Vec<String>, std::io::Error>(disconnects)
+        });
+        let t0 = Instant::now();
+        // Same teardown discipline as run_serve_resumable: a panicking
+        // workload must still uninstall (final drain + hub close) so the
+        // pump terminates, Eos reaches every subscriber, and the scope
+        // can propagate the panic.
+        let run_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            workload.run(node);
+            node.synchronize();
+        }));
+        let wall = t0.elapsed();
+        if let Some(s) = sampler {
+            s.stop();
+        }
+        uninstall_session().expect("session vanished");
+        let served = manager.join().expect("broadcast manager thread panicked");
+        if let Err(p) = run_result {
+            std::panic::resume_unwind(p);
+        }
+        (served, wall)
+    });
+
+    let stats = session.stats();
+    let trace = live_cfg.retain.then(|| {
+        btf::collect(&session, &[("app".to_string(), workload.name().to_string())])
+    });
+    exposure.finish();
+    let disconnects = served?;
+    Ok(ServeReport {
+        app: workload.name().to_string(),
+        config: config.label(),
+        wall,
+        stats,
+        trace,
+        live: hub.stats(),
+        publish: bc.stats(),
+        disconnects,
+        subscribers: bc.subscriber_stats(),
     })
 }
 

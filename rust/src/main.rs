@@ -6,6 +6,8 @@
 //!              [--resume-buffer <bytes>]             (resumable session:
 //!              [--kill-after <bytes>]                 replay ring + epochs)
 //!              [--wire <2|3>]                        wire version (3: batched)
+//!              [--subscribers <n>] [--max-lag <b>]   broadcast: N concurrent
+//!                                                    viewers, one shared ring
 //! iprof attach <addr> [<addr>...] [-a <list>]        remote live viewer:
 //!              [--refresh <ms>] [--reconnect <n>]    1 publisher, or N
 //!              [--backoff <ms>]                      merged as one fan-in;
@@ -136,6 +138,12 @@ struct Options {
     backoff_ms: Option<u64>,
     /// serve: THRL wire version (2 = per-event fallback, 3 = batched).
     wire: Option<u32>,
+    /// serve: broadcast to this many concurrent subscribers over one
+    /// shared replay ring (Some = broadcast session).
+    subscribers: Option<usize>,
+    /// serve: per-subscriber lag budget in bytes — a viewer further
+    /// behind than this is demoted to gap delivery under ring pressure.
+    max_lag: Option<usize>,
     /// serve/attach: bind a Prometheus scrape endpoint here.
     telemetry_addr: Option<String>,
     /// serve/attach: write periodic JSON telemetry snapshots here.
@@ -188,6 +196,8 @@ fn parse_args(args: &[String]) -> Result<Options> {
         reconnect: None,
         backoff_ms: None,
         wire: None,
+        subscribers: None,
+        max_lag: None,
         telemetry_addr: None,
         telemetry_json: None,
     };
@@ -281,6 +291,22 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 }
                 o.wire = Some(version);
             }
+            "--subscribers" => {
+                let v = it.next().context("--subscribers needs a count")?;
+                let n: usize = v.parse().context("bad --subscribers value")?;
+                if n == 0 {
+                    bail!("--subscribers must be at least 1");
+                }
+                o.subscribers = Some(n);
+            }
+            "--max-lag" => {
+                let v = it.next().context("--max-lag needs a byte count")?;
+                let bytes = parse_bytes(v)?;
+                if bytes == 0 {
+                    bail!("--max-lag must be at least 1 byte");
+                }
+                o.max_lag = Some(bytes);
+            }
             "--telemetry" => {
                 let v = it.next().context("--telemetry needs a bind address")?;
                 o.telemetry_addr = Some(v.clone());
@@ -361,6 +387,15 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
       --kill-after <bytes>             serve: fault injection — kill the first
                                        subscriber connection after this many
                                        written bytes (reconnect testing)
+      --subscribers <n>                serve: broadcast to n concurrent
+                                       subscribers over one shared replay
+                                       ring — each connection negotiates its
+                                       own wire version and may attach late
+      --max-lag <bytes>                serve: per-subscriber lag budget — a
+                                       viewer further behind than this is
+                                       demoted to gap delivery when the ring
+                                       is over budget, instead of stalling
+                                       everyone (suffixes k/m/g)
       --wire <2|3>                     serve: THRL wire version — 3 batches
                                        events (EventBatch + vectored writes),
                                        2 keeps the frozen per-event stream
@@ -423,8 +458,11 @@ fn serve_main(args: &[String]) -> Result<()> {
     if o.reconnect.is_some() || o.backoff_ms.is_some() {
         bail!("--reconnect/--backoff belong to the viewer: pass them to iprof attach instead");
     }
-    if o.kill_after.is_some() && o.resume_buffer.is_none() {
-        bail!("--kill-after is reconnect fault injection; it needs --resume-buffer");
+    if o.kill_after.is_some() && o.resume_buffer.is_none() && o.subscribers.is_none() {
+        bail!("--kill-after is fault injection; it needs --resume-buffer or --subscribers");
+    }
+    if o.max_lag.is_some() && o.subscribers.is_none() {
+        bail!("--max-lag is a broadcast lag budget; it needs --subscribers");
     }
     if o.workloads.len() != 1 {
         bail!("serve publishes exactly one workload run (got {})", o.workloads.len());
@@ -462,7 +500,45 @@ fn serve_main(args: &[String]) -> Result<()> {
         eprintln!("iprof: telemetry endpoint on {t} (scrape /metrics, or: iprof health {t})");
     }
 
-    let r = if let Some(resume_buffer) = o.resume_buffer {
+    let r = if let Some(n) = o.subscribers {
+        // Broadcast session: one pump fills a shared replay ring, every
+        // accepted connection is served on its own thread with its own
+        // cursors/wire/dictionary (docs/PROTOCOL.md § Broadcast). The
+        // ring budget reuses --resume-buffer (default 64 MiB): broadcast
+        // connections are resumable by construction.
+        let budget = o.resume_buffer.unwrap_or(64 << 20);
+        eprintln!(
+            "iprof: serving {name} on {} — broadcast to {n} subscriber(s), ring {budget}B{}",
+            listener.local_addr()?,
+            match o.max_lag {
+                Some(l) => format!(", lag budget {l}B"),
+                None => String::new(),
+            },
+        );
+        listener
+            .set_nonblocking(true)
+            .context("cannot poll the listener")?;
+        let mut kill_budget = o.kill_after; // fault injection: first conn only
+        let accept = move || -> std::io::Result<Option<thapi::remote::KillAfter<std::net::TcpStream>>> {
+            match listener.accept() {
+                Ok((conn, peer)) => {
+                    conn.set_nonblocking(false)?;
+                    eprintln!("iprof: subscriber {peer} connected");
+                    let budget = kill_budget.take().unwrap_or(usize::MAX);
+                    Ok(Some(thapi::remote::KillAfter::new(conn, budget)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    Ok(None)
+                }
+                Err(e) => Err(e),
+            }
+        };
+        coordinator::run_serve_broadcast(
+            &node, w.as_ref(), &config, &live_cfg, accept, n, budget, o.max_lag, wire, &tele,
+        )
+        .context("publishing failed")?
+    } else if let Some(resume_buffer) = o.resume_buffer {
         // Resumable session: poll for subscribers so the publisher can
         // keep draining the hub into its replay ring while nobody (or
         // nobody *anymore*) is attached; a reconnecting subscriber
@@ -524,8 +600,29 @@ fn serve_main(args: &[String]) -> Result<()> {
         r.publish.replayed,
         r.publish.gaps,
     );
+    for s in &r.subscribers {
+        eprintln!(
+            "iprof: subscriber {}: wire=v{} forwarded={} lagged={} demoted={} disconnects={}{}",
+            s.id,
+            s.wire,
+            s.forwarded,
+            s.lagged,
+            s.demoted,
+            s.disconnects,
+            match &s.error {
+                Some(e) => format!(" DIED ({e})"),
+                None => String::new(),
+            },
+        );
+    }
     for reason in &r.disconnects {
-        eprintln!("iprof: subscriber connection lost ({reason}) — session resumed");
+        if o.subscribers.is_some() {
+            eprintln!(
+                "iprof: subscriber connection lost ({reason}) — other subscribers unaffected"
+            );
+        } else {
+            eprintln!("iprof: subscriber connection lost ({reason}) — session resumed");
+        }
     }
     if o.live_strict && (r.total_dropped() > 0 || r.publish.gaps > 0) {
         bail!(
@@ -560,8 +657,15 @@ fn attach_main(args: &[String]) -> Result<()> {
     if o.analyses.is_empty() {
         bail!("attach needs at least one analysis sink (-a tally,...)");
     }
-    if o.resume_buffer.is_some() || o.kill_after.is_some() {
-        bail!("--resume-buffer/--kill-after belong to the publisher: pass them to iprof serve");
+    if o.resume_buffer.is_some()
+        || o.kill_after.is_some()
+        || o.subscribers.is_some()
+        || o.max_lag.is_some()
+    {
+        bail!(
+            "--resume-buffer/--kill-after/--subscribers/--max-lag belong to the publisher: \
+             pass them to iprof serve"
+        );
     }
     if o.wire.is_some() {
         bail!("--wire belongs to the publisher: pass it to iprof serve (the subscriber learns the version from the preamble)");
@@ -762,8 +866,14 @@ fn main() -> Result<()> {
     } else if o.refresh_ms.is_some() || o.live_strict || o.live_depth.is_some() {
         bail!("--refresh/--live-depth/--live-strict only make sense with --live");
     }
-    if o.resume_buffer.is_some() || o.kill_after.is_some() {
-        bail!("--resume-buffer/--kill-after only make sense with iprof serve");
+    if o.resume_buffer.is_some()
+        || o.kill_after.is_some()
+        || o.subscribers.is_some()
+        || o.max_lag.is_some()
+    {
+        bail!(
+            "--resume-buffer/--kill-after/--subscribers/--max-lag only make sense with iprof serve"
+        );
     }
     if o.reconnect.is_some() || o.backoff_ms.is_some() {
         bail!("--reconnect/--backoff only make sense with iprof attach");

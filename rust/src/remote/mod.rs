@@ -90,6 +90,22 @@
 //!    resumption and loss-accounting property above holds verbatim on
 //!    either wire — and a v2 peer sees the exact frozen v2 byte stream.
 //!
+//! And a seventh with broadcast serve (`iprof serve --subscribers N`):
+//!
+//! 7. **One publisher, N concurrent subscribers.** A [`Broadcaster`]
+//!    decouples hub draining from delivery: one pump mirrors the hub
+//!    into a shared replay ring + stream board, and every accepted
+//!    connection reads the ring on its own thread with independent
+//!    per-stream cursors, wire version and batch dictionary. Ring
+//!    eviction is driven by the slowest *entitled* cursor; a
+//!    per-subscriber lag budget (`--max-lag`) demotes a laggard to gap
+//!    delivery ([`Frame::ResumeGap`], exact counts) instead of letting
+//!    it stall the ring, and a disconnected subscriber is unregistered
+//!    from entitlement immediately. On the wire each connection is an
+//!    independent, fully conforming resumable THRL connection —
+//!    broadcast is server-side, invisible to subscribers (pinned by
+//!    `rust/tests/broadcast.rs`).
+//!
 //! Entry points: [`crate::coordinator::run_serve`] /
 //! [`crate::coordinator::run_serve_resumable`] /
 //! [`crate::coordinator::run_attach`] /
@@ -111,4 +127,7 @@ pub use frame::{
     write_preamble_version, BatchDict, BatchDictEncoder, BatchEvent, BatchKey, Frame, FrameError,
     WireEvent, MAGIC, MAX_BATCH_EVENTS, MAX_DICT_ENTRIES, SUPPORTED_VERSIONS, VERSION,
 };
-pub use publish::{publish, publish_with, KillAfter, PublishStats, Publisher, ServeOutcome};
+pub use publish::{
+    publish, publish_with, Broadcaster, KillAfter, PublishStats, Publisher, ServeOutcome,
+    SubscriberStats,
+};

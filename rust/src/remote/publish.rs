@@ -60,12 +60,13 @@
 
 use super::frame::{self, BatchEvent, BatchKey, Frame, FrameError, WireEvent};
 use crate::live::{ForwardCursor, LiveHub};
-use crate::telemetry::Registry;
+use crate::telemetry::{Counter, Registry};
 use crate::tracer::btf::generate_metadata;
 use crate::tracer::encoder::FieldValue;
 use std::collections::VecDeque;
 use std::io::{self, IoSlice, Read, Write};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// What one [`publish`] call (or one whole [`Publisher`] session)
 /// relayed.
@@ -511,20 +512,61 @@ impl ReplayRing {
     /// streams) once over budget. Eviction moves the stream's
     /// `start_seq` forward: a later resume below it is a gap.
     fn push(&mut self, stream: usize, bytes: Vec<u8>) {
+        self.push_unevicted(stream, bytes);
+        while self.over_budget() {
+            if self.evict_one().is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Retain one event frame WITHOUT evicting — the broadcast pump
+    /// pushes this way and runs its own entitlement-gated eviction
+    /// ([`Broadcaster`]), where the decision to evict depends on every
+    /// live subscriber's cursor, not just the budget.
+    fn push_unevicted(&mut self, stream: usize, bytes: Vec<u8>) {
         self.ensure(stream + 1);
         self.total += bytes.len();
         let s = &mut self.streams[stream];
         s.entries.push_back(bytes);
         s.end_seq += 1;
         self.evict_order.push_back(stream as u32);
-        while self.total > self.budget {
-            let Some(idx) = self.evict_order.pop_front() else { break };
-            let s = &mut self.streams[idx as usize];
-            let evicted = s.entries.pop_front().expect("evict queue tracks live entries 1:1");
-            self.total -= evicted.len();
-            s.start_seq += 1;
-            self.evicted = self.evicted.saturating_add(1);
+    }
+
+    fn over_budget(&self) -> bool {
+        self.total > self.budget
+    }
+
+    /// The globally oldest retained entry as `(stream, seq, len)` — the
+    /// next eviction victim.
+    fn oldest(&self) -> Option<(usize, u64, usize)> {
+        let &idx = self.evict_order.front()?;
+        let s = &self.streams[idx as usize];
+        s.entries.front().map(|e| (idx as usize, s.start_seq, e.len()))
+    }
+
+    /// Evict the globally oldest entry, returning `(stream, seq, len)`.
+    fn evict_one(&mut self) -> Option<(usize, u64, usize)> {
+        let idx = self.evict_order.pop_front()? as usize;
+        let s = &mut self.streams[idx];
+        let seq = s.start_seq;
+        let evicted = s.entries.pop_front().expect("evict queue tracks live entries 1:1");
+        self.total -= evicted.len();
+        s.start_seq += 1;
+        self.evicted = self.evicted.saturating_add(1);
+        Some((idx, seq, evicted.len()))
+    }
+
+    /// Bytes retained beyond the given per-stream cursors — the lag a
+    /// subscriber sitting at `cursors` would have to drain.
+    fn bytes_behind(&self, cursors: &[u64]) -> usize {
+        let mut total = 0usize;
+        for (i, s) in self.streams.iter().enumerate() {
+            let c = cursors.get(i).copied().unwrap_or(0);
+            let skip = c.saturating_sub(s.start_seq) as usize;
+            total += s.entries.iter().skip(skip).map(Vec::len).sum::<usize>();
         }
+        total
     }
 
     /// Replay everything past the subscriber's per-stream `cursors` into
@@ -784,6 +826,680 @@ impl Publisher {
         self.stats.frames = self.stats.frames.saturating_add(1);
         self.stats.sync_telemetry(self.hub.telemetry());
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Broadcast publisher: one session, N concurrent subscribers
+// ---------------------------------------------------------------------------
+
+/// What one broadcast subscriber connection received, from the
+/// publisher's side — one row of the `ServeReport` subscriber table and
+/// the source of the per-subscriber telemetry family.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SubscriberStats {
+    /// Subscriber id, in connection-accept order (the telemetry label).
+    pub id: usize,
+    /// Wire version this connection negotiated (publisher-selected).
+    pub wire: u32,
+    /// Events encoded for this connection's wire. On a cleanly finished
+    /// connection this is exactly the events delivered; the final round
+    /// of a dying connection may have been cut short by the transport.
+    pub forwarded: u64,
+    /// Events this subscriber missed because the ring evicted them
+    /// before delivery — each one was booked onto its wire as part of an
+    /// exact [`Frame::ResumeGap`] total (`lagged == Σ missed`).
+    pub lagged: u64,
+    /// Demotion episodes: the subscriber exceeded the lag budget
+    /// (`--max-lag`) under eviction pressure and lost its eviction
+    /// entitlement for the rest of the connection (sticky), degrading to
+    /// gap delivery. 0 or 1 per connection.
+    pub demoted: u64,
+    /// 1 if the connection ended before [`Frame::Eos`] (transport death,
+    /// bad handshake); 0 on a clean finish.
+    pub disconnects: u64,
+    /// Frames written to this connection (preamble excluded).
+    pub frames: u64,
+    /// Bytes written to this connection, preamble included.
+    pub bytes: u64,
+    /// Why the connection ended early, if it did.
+    pub error: Option<String>,
+}
+
+/// Pre-registered per-subscriber telemetry series (label = subscriber
+/// id), mirrored from the single-writer [`SubscriberStats`] with
+/// `store_max` so a scrape always equals the slot's own accounting.
+struct SubscriberTelemetry {
+    forwarded: Arc<Counter>,
+    lagged: Arc<Counter>,
+    demoted: Arc<Counter>,
+    disconnects: Arc<Counter>,
+}
+
+impl SubscriberTelemetry {
+    fn register(reg: &Registry, id: usize) -> SubscriberTelemetry {
+        let label = id.to_string();
+        SubscriberTelemetry {
+            forwarded: reg.subscriber_forwarded_events.with_label(&label),
+            lagged: reg.subscriber_lagged_events.with_label(&label),
+            demoted: reg.subscriber_demotions.with_label(&label),
+            disconnects: reg.subscriber_disconnects.with_label(&label),
+        }
+    }
+
+    fn sync(&self, stats: &SubscriberStats) {
+        self.forwarded.store_max(stats.forwarded);
+        self.lagged.store_max(stats.lagged);
+        self.demoted.store_max(stats.demoted);
+        self.disconnects.store_max(stats.disconnects);
+    }
+}
+
+/// Monotone/idempotent non-event state the pump mirrors out of the hub
+/// so every subscriber can re-derive its own deltas: announced stream
+/// count, per-stream watermarks (max-merged), cumulative drop counts
+/// and closes. Events are NOT here — they live in the shared ring.
+#[derive(Default)]
+struct StreamBoard {
+    announced: usize,
+    watermark: Vec<u64>,
+    dropped: Vec<u64>,
+    closed: Vec<bool>,
+}
+
+impl StreamBoard {
+    fn ensure(&mut self, n: usize) {
+        if n > self.announced {
+            self.announced = n;
+        }
+        while self.watermark.len() < n {
+            self.watermark.push(0);
+            self.dropped.push(0);
+            self.closed.push(false);
+        }
+    }
+}
+
+/// One subscriber's registration in the shared broadcast state.
+struct SubscriberSlot {
+    /// Events delivered per stream — this connection's independent
+    /// forward cursor into the shared ring (dense per-stream sequence
+    /// numbers, exactly the resume-cursor currency).
+    cursors: Vec<u64>,
+    /// While true, ring entries this cursor has not consumed are pinned
+    /// against eviction. Cleared on demotion and on disconnect.
+    entitled: bool,
+    /// The connection ended; the slot remains as its stats record.
+    gone: bool,
+    /// Ring bytes retained beyond this slot's cursors (its lag, the
+    /// `--max-lag` currency).
+    behind: usize,
+    stats: SubscriberStats,
+}
+
+/// Everything the pump and the N subscriber threads share, under one
+/// lock: the ring of per-event v2 frames, the non-event stream board,
+/// the hub's final totals once it drained, and the subscriber slots.
+struct BroadcastShared {
+    ring: ReplayRing,
+    board: StreamBoard,
+    /// `(received, dropped)` once the hub sealed and drained — the Eos
+    /// payload every subscriber finishes with.
+    finished: Option<(u64, u64)>,
+    slots: Vec<SubscriberSlot>,
+}
+
+/// One frame round bound for one subscriber's wire, built under the
+/// shared lock, written outside it.
+#[derive(Default)]
+struct SubscriberRound {
+    frames: Vec<Vec<u8>>,
+    /// Eos was appended: the connection is complete after this write.
+    done: bool,
+}
+
+/// A broadcast publishing session: ONE hub serving N concurrent
+/// subscriber connections over one shared replay ring (`iprof serve
+/// --subscribers <n>`).
+///
+/// Where [`Publisher`] serves a *sequence* of connections with one
+/// forward cursor, `Broadcaster` decouples draining from delivery: a
+/// single [`Broadcaster::pump`] thread is the hub's only (destructive)
+/// consumer and mirrors everything into shared state — events into a
+/// [`ReplayRing`] of per-event v2 `Event` frames, watermarks/drops/
+/// closes onto a monotone [`StreamBoard`] — while every accepted
+/// connection runs [`Broadcaster::serve_connection`] on its own thread
+/// with its own per-stream cursors, wire version and batch dictionary,
+/// reading the shared ring. On the wire each connection is an
+/// independent, fully conforming resumable THRL connection (preamble,
+/// `Hello(epoch)`, `Resume`, items, `Eos`): broadcast is a server-side
+/// concern, invisible to subscribers.
+///
+/// # Eviction, entitlement and the lag budget
+///
+/// Ring eviction is driven by the slowest *entitled* cursor: an entry
+/// no entitled subscriber still needs is evictable once the ring is
+/// over budget, but an entry an entitled cursor has not consumed is
+/// pinned — the ring grows past its budget rather than losing data a
+/// live viewer is owed. The per-subscriber lag budget caps that growth:
+/// under eviction pressure, a subscriber more than `max_lag` bytes
+/// behind is **demoted** — it loses entitlement for the rest of its
+/// connection (sticky) and degrades to gap delivery: the next round it
+/// reads books an exact [`Frame::ResumeGap`] for the evicted span and
+/// advances its cursor, instead of stalling the ring for everyone.
+/// With no lag budget (`usize::MAX`, the default) live subscribers are
+/// never demoted and a stalled viewer pins ring memory — set
+/// `--max-lag` to bound it. Disconnected subscribers are always
+/// unregistered from entitlement immediately, on every exit path, so a
+/// crashed viewer can never pin the ring.
+pub struct Broadcaster {
+    hub: Arc<LiveHub>,
+    epoch: u64,
+    max_lag: usize,
+    /// The hub-facing forward cursor — one per session, like
+    /// [`Publisher`]: forward batches are destructive, so exactly one
+    /// drain path owns them.
+    cursor: Mutex<ForwardCursor>,
+    shared: Mutex<BroadcastShared>,
+    /// Signaled after every applied batch, at finish, and when a slot
+    /// unregisters: subscriber threads block here between rounds.
+    progress: Condvar,
+}
+
+impl Broadcaster {
+    /// Create a broadcast session over `hub` with a `resume_buffer`-byte
+    /// shared ring. `epoch` must be nonzero ([`Publisher::fresh_epoch`]
+    /// outside of tests): every connection handshakes `Hello(epoch) →
+    /// Resume`, so a mid-run joiner replays the retained window and a
+    /// reconnecting subscriber resumes from its cursors — as a fresh
+    /// slot.
+    pub fn new(hub: Arc<LiveHub>, epoch: u64, resume_buffer: usize) -> Broadcaster {
+        assert!(epoch != 0, "epoch 0 means non-resumable; pick a nonzero session epoch");
+        Broadcaster {
+            hub,
+            epoch,
+            max_lag: usize::MAX,
+            cursor: Mutex::new(ForwardCursor::default()),
+            shared: Mutex::new(BroadcastShared {
+                ring: ReplayRing::new(resume_buffer),
+                board: StreamBoard::default(),
+                finished: None,
+                slots: Vec::new(),
+            }),
+            progress: Condvar::new(),
+        }
+    }
+
+    /// Set the per-subscriber lag budget in bytes (`--max-lag`): under
+    /// eviction pressure, a subscriber further behind than this is
+    /// demoted to gap delivery instead of pinning the ring.
+    pub fn with_max_lag(mut self, max_lag: usize) -> Broadcaster {
+        self.max_lag = max_lag.max(1);
+        self
+    }
+
+    /// The session epoch advertised in every Hello.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Drain the hub until it seals, then record the final totals: the
+    /// one destructive hub consumer. Run on its own thread; it never
+    /// blocks on any subscriber's socket.
+    pub fn pump(&self) {
+        loop {
+            let mut cursor = self.cursor.lock().unwrap();
+            let batch = self.hub.next_forward_batch(&mut cursor);
+            drop(cursor);
+            match batch {
+                Some(batch) => self.apply(batch),
+                None => break,
+            }
+        }
+        let totals = self.hub.stats();
+        let mut g = self.shared.lock().unwrap();
+        g.finished = Some((totals.received, totals.dropped));
+        drop(g);
+        self.progress.notify_all();
+    }
+
+    /// Drain whatever the hub holds *right now* into the shared state
+    /// without waiting for more — the broadcast analogue of
+    /// [`Publisher::drain_to_ring`], and the hook deterministic tests
+    /// use to interleave pushes with subscriber progress. Does not mark
+    /// the session finished; [`Broadcaster::pump`] does that.
+    pub fn drain_to_ring(&self) {
+        loop {
+            let mut cursor = self.cursor.lock().unwrap();
+            let batch = self.hub.try_forward_batch(&mut cursor);
+            drop(cursor);
+            match batch {
+                Some(batch) => self.apply(batch),
+                None => break,
+            }
+        }
+    }
+
+    /// Mirror one forward batch into the shared ring + board, running
+    /// entitlement-gated eviction per pushed event.
+    fn apply(&self, batch: crate::live::ForwardBatch) {
+        let mut g = self.shared.lock().unwrap();
+        let shared = &mut *g;
+        if let Some(count) = batch.grown_to {
+            shared.board.ensure(count);
+        }
+        for (idx, msg) in batch.events {
+            shared.board.ensure(idx + 1);
+            let buf = encode_event(idx, msg);
+            let len = buf.len();
+            shared.ring.push_unevicted(idx, buf);
+            for slot in shared.slots.iter_mut() {
+                if !slot.gone {
+                    slot.behind = slot.behind.saturating_add(len);
+                }
+            }
+            Self::evict_entitled(shared, self.max_lag);
+        }
+        for (idx, watermark) in batch.beacons {
+            shared.board.ensure(idx + 1);
+            let w = &mut shared.board.watermark[idx];
+            *w = (*w).max(watermark);
+        }
+        for (idx, dropped) in batch.drops {
+            shared.board.ensure(idx + 1);
+            let d = &mut shared.board.dropped[idx];
+            *d = (*d).max(dropped);
+        }
+        for idx in batch.closed {
+            shared.board.ensure(idx + 1);
+            shared.board.closed[idx] = true;
+        }
+        self.sync_ring_telemetry(&shared.ring);
+        drop(g);
+        self.progress.notify_all();
+    }
+
+    /// Evict while over budget, honoring entitlement: the oldest entry
+    /// is pinned by any *entitled* subscriber whose cursor has not
+    /// consumed it — unless that subscriber is over the lag budget, in
+    /// which case it is demoted (sticky) and stops pinning anything.
+    /// Stops at the first genuinely pinned entry (eviction is FIFO, so
+    /// nothing behind it can go either). The invariant the property
+    /// tests pin: an entry is only ever evicted when every entitled
+    /// cursor has already consumed it.
+    fn evict_entitled(shared: &mut BroadcastShared, max_lag: usize) {
+        while shared.ring.over_budget() {
+            let Some((stream, seq, len)) = shared.ring.oldest() else { break };
+            let mut pinned = false;
+            for slot in shared.slots.iter_mut() {
+                if !slot.entitled {
+                    continue;
+                }
+                if slot.cursors.get(stream).copied().unwrap_or(0) > seq {
+                    continue; // already delivered this entry
+                }
+                if slot.behind > max_lag {
+                    slot.entitled = false;
+                    slot.stats.demoted = slot.stats.demoted.saturating_add(1);
+                } else {
+                    pinned = true;
+                }
+            }
+            if pinned {
+                break;
+            }
+            shared.ring.evict_one();
+            // the evicted bytes are no longer lag for whoever had not
+            // read them — they will surface as an exact ResumeGap instead
+            for slot in shared.slots.iter_mut() {
+                if !slot.gone && slot.cursors.get(stream).copied().unwrap_or(0) <= seq {
+                    slot.behind = slot.behind.saturating_sub(len);
+                }
+            }
+        }
+    }
+
+    fn sync_ring_telemetry(&self, ring: &ReplayRing) {
+        let reg = self.hub.telemetry();
+        reg.ring_bytes.set(ring.total as u64);
+        reg.ring_evicted_events.store_max(ring.evicted);
+    }
+
+    /// Register a fresh slot: entitled, cursors at zero, lag equal to
+    /// everything currently retained (a joiner is owed the whole
+    /// window until its Resume says otherwise).
+    fn register(&self, wire: u32) -> usize {
+        let mut g = self.shared.lock().unwrap();
+        let id = g.slots.len();
+        let behind = g.ring.total;
+        g.slots.push(SubscriberSlot {
+            cursors: Vec::new(),
+            entitled: true,
+            gone: false,
+            behind,
+            stats: SubscriberStats { id, wire, ..Default::default() },
+        });
+        id
+    }
+
+    /// Has [`Broadcaster::pump`] drained the hub to its end?
+    pub fn finished(&self) -> bool {
+        self.shared.lock().unwrap().finished.is_some()
+    }
+
+    /// Per-subscriber rows, in connection-accept order.
+    pub fn subscriber_stats(&self) -> Vec<SubscriberStats> {
+        self.shared.lock().unwrap().slots.iter().map(|s| s.stats.clone()).collect()
+    }
+
+    /// Aggregate wire statistics across every subscriber served, in
+    /// [`PublishStats`] shape: `events` sums forwarded events (each
+    /// subscriber's delivery counts once), `gaps` sums lagged events,
+    /// `connections` counts accepted subscribers.
+    pub fn stats(&self) -> PublishStats {
+        let g = self.shared.lock().unwrap();
+        let mut out = PublishStats::default();
+        for s in &g.slots {
+            out.frames = out.frames.saturating_add(s.stats.frames);
+            out.events = out.events.saturating_add(s.stats.forwarded);
+            out.bytes = out.bytes.saturating_add(s.stats.bytes);
+            out.gaps = out.gaps.saturating_add(s.stats.lagged);
+            out.connections = out.connections.saturating_add(1);
+        }
+        out
+    }
+
+    /// Serve one subscriber connection on the caller's thread: an
+    /// independent, fully conforming THRL connection over the shared
+    /// state (see the type docs). `wire` picks this connection's
+    /// version — different subscribers of one session may speak
+    /// different wires. Returns like [`Publisher::serve_connection`];
+    /// on any outcome the slot is unregistered from eviction
+    /// entitlement before this returns (also on panic), so a dead
+    /// subscriber never pins the ring.
+    pub fn serve_connection<S: Read + Write>(&self, conn: S, wire: u32) -> ServeOutcome {
+        assert!(
+            frame::SUPPORTED_VERSIONS.contains(&wire),
+            "publisher wire version {wire} not in {:?}",
+            frame::SUPPORTED_VERSIONS
+        );
+        let id = self.register(wire);
+        let mut guard = SlotGuard {
+            bc: self,
+            id,
+            tele: SubscriberTelemetry::register(self.hub.telemetry(), id),
+            completed: false,
+        };
+        match self.serve_slot(conn, wire, id, &guard.tele) {
+            Ok(()) => {
+                guard.completed = true;
+                ServeOutcome::Complete
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                self.shared.lock().unwrap().slots[id].stats.error = Some(msg.clone());
+                ServeOutcome::Lost(msg)
+            }
+        }
+    }
+
+    fn serve_slot<S: Read + Write>(
+        &self,
+        mut conn: S,
+        wire: u32,
+        id: usize,
+        tele: &SubscriberTelemetry,
+    ) -> io::Result<()> {
+        // Handshake: identical grammar to Publisher::serve_connection.
+        // The slot registered BEFORE this point, so from the first byte
+        // of the Hello the window this subscriber is owed is pinned.
+        let hello_streams = self.shared.lock().unwrap().board.announced;
+        let mut head = Vec::with_capacity(256);
+        frame::write_preamble_version(&mut head, wire)?;
+        frame::encode(
+            &Frame::Hello {
+                hostname: self.hub.hostname().to_string(),
+                metadata: generate_metadata(&[]),
+                streams: hello_streams as u32,
+                epoch: self.epoch,
+            },
+            &mut head,
+        );
+        conn.write_all(&head)?;
+        conn.flush()?;
+        {
+            let mut g = self.shared.lock().unwrap();
+            let slot = &mut g.slots[id];
+            slot.stats.frames = slot.stats.frames.saturating_add(1);
+            slot.stats.bytes = slot.stats.bytes.saturating_add(head.len() as u64);
+        }
+        self.hub.telemetry().publish_rounds.inc();
+
+        // The one subscriber→publisher frame: where to resume from.
+        let Frame::Resume { epoch, cursors } = frame::read_frame(&mut conn)? else {
+            return Err(FrameError::Malformed("expected Resume after Hello").into());
+        };
+        if epoch != self.epoch {
+            return Err(FrameError::Malformed("Resume epoch does not match this session").into());
+        }
+        {
+            let mut g = self.shared.lock().unwrap();
+            for (i, &c) in cursors.iter().enumerate() {
+                let sent = g.ring.streams.get(i).map(|s| s.end_seq).unwrap_or(0);
+                if c > sent {
+                    return Err(
+                        FrameError::Malformed("resume cursor beyond relayed events").into()
+                    );
+                }
+            }
+            let behind = g.ring.bytes_behind(&cursors);
+            let slot = &mut g.slots[id];
+            slot.cursors = cursors;
+            slot.behind = behind;
+        }
+
+        // Unified delivery loop: replay-after-Resume and the live pump
+        // are the same ring-driven rounds. The first round is the
+        // resume replay, always per-event frames (the `stream-replay`
+        // production); later rounds batch on a v3 wire with this
+        // connection's own dictionary.
+        let mut view = BoardView::new(hello_streams);
+        let mut enc = EventEncoder::new(wire);
+        let mut replay_round = true;
+        loop {
+            let mut round = SubscriberRound::default();
+            {
+                let mut g = self.shared.lock().unwrap();
+                loop {
+                    Self::build_round(&mut g, id, &mut view, &mut enc, replay_round, &mut round);
+                    if !round.frames.is_empty() || round.done {
+                        break;
+                    }
+                    let (back, _) =
+                        self.progress.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                    g = back;
+                }
+            }
+            let bufs: Vec<&[u8]> = round.frames.iter().map(Vec::as_slice).collect();
+            let wrote = write_all_vectored(&mut conn, &bufs)?;
+            conn.flush()?;
+            replay_round = false;
+            {
+                let mut g = self.shared.lock().unwrap();
+                let slot = &mut g.slots[id];
+                slot.stats.frames = slot.stats.frames.saturating_add(round.frames.len() as u64);
+                slot.stats.bytes = slot.stats.bytes.saturating_add(wrote);
+                tele.sync(&slot.stats);
+            }
+            self.hub.telemetry().publish_rounds.inc();
+            if round.done {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Bring one subscriber fully up to date with the shared state,
+    /// appending frames to `round` (idempotent: a second call with
+    /// nothing new appends nothing). Runs under the shared lock; the
+    /// socket write happens outside it.
+    ///
+    /// Per stream: an exact [`Frame::ResumeGap`] if the cursor fell
+    /// below the retained window (demotion or joined-past-eviction),
+    /// then every retained entry past the cursor — cloned v2 frames on
+    /// a v2 wire or on the replay round, re-batched under the
+    /// connection dictionary on a live v3 round. Then board deltas
+    /// against this connection's own view (Streams growth before the
+    /// events; beacons/drops/closes after), and Eos once the session
+    /// finished — by then this round has delivered everything, so no
+    /// separate caught-up check is needed.
+    fn build_round(
+        shared: &mut BroadcastShared,
+        id: usize,
+        view: &mut BoardView,
+        enc: &mut EventEncoder,
+        replay_round: bool,
+        round: &mut SubscriberRound,
+    ) {
+        let BroadcastShared { ring, board, finished, slots } = shared;
+        let slot = &mut slots[id];
+        if board.announced > view.announced {
+            round.frames.push(encode_frame(&Frame::Streams { count: board.announced as u32 }));
+            view.announced = board.announced;
+        }
+        view.ensure(board.announced);
+        while slot.cursors.len() < ring.streams.len() {
+            slot.cursors.push(0);
+        }
+        for i in 0..ring.streams.len() {
+            let s = &ring.streams[i];
+            let mut c = slot.cursors[i];
+            if c < s.start_seq {
+                let missed = s.start_seq - c;
+                round.frames.push(encode_frame(&Frame::ResumeGap { stream: i as u32, missed }));
+                slot.stats.lagged = slot.stats.lagged.saturating_add(missed);
+                c = s.start_seq;
+            }
+            if c < s.end_seq {
+                let skip = (c - s.start_seq) as usize;
+                let mut delivered = 0usize;
+                match (&mut *enc, replay_round) {
+                    (EventEncoder::PerEvent, _) | (_, true) => {
+                        for e in s.entries.iter().skip(skip) {
+                            delivered += e.len();
+                            round.frames.push(e.clone());
+                        }
+                    }
+                    (EventEncoder::Batched(dict), false) => {
+                        let mut run: Vec<BatchEvent> = Vec::new();
+                        for e in s.entries.iter().skip(skip) {
+                            delivered += e.len();
+                            let (f, _) = frame::decode(e)
+                                .expect("ring entries are well-formed frames")
+                                .expect("ring entries are complete frames");
+                            let Frame::Event { event, .. } = f else {
+                                unreachable!("the ring stores only Event frames")
+                            };
+                            if run.len() >= frame::MAX_BATCH_EVENTS as usize {
+                                round.frames.push(encode_frame(&Frame::EventBatch {
+                                    stream: i as u32,
+                                    events: std::mem::take(&mut run),
+                                }));
+                            }
+                            let key = dict.key_for(event.rank, event.tid, event.class_id);
+                            run.push(BatchEvent { ts: event.ts, key, fields: event.fields });
+                        }
+                        if !run.is_empty() {
+                            round.frames.push(encode_frame(&Frame::EventBatch {
+                                stream: i as u32,
+                                events: run,
+                            }));
+                        }
+                    }
+                }
+                slot.stats.forwarded = slot.stats.forwarded.saturating_add(s.end_seq - c);
+                slot.behind = slot.behind.saturating_sub(delivered);
+                c = s.end_seq;
+            }
+            slot.cursors[i] = c;
+        }
+        for i in 0..board.announced {
+            if board.watermark[i] > view.watermark[i] {
+                round.frames.push(encode_frame(&Frame::Beacon {
+                    stream: i as u32,
+                    watermark: board.watermark[i],
+                }));
+                view.watermark[i] = board.watermark[i];
+            }
+            if board.dropped[i] > view.dropped[i] {
+                round.frames.push(encode_frame(&Frame::Drops {
+                    stream: i as u32,
+                    dropped: board.dropped[i],
+                }));
+                view.dropped[i] = board.dropped[i];
+            }
+            if board.closed[i] && !view.closed[i] {
+                round.frames.push(encode_frame(&Frame::Close { stream: i as u32 }));
+                view.closed[i] = true;
+            }
+        }
+        if let Some((received, dropped)) = *finished {
+            round.frames.push(encode_frame(&Frame::Eos { received, dropped }));
+            round.done = true;
+        }
+    }
+}
+
+/// One subscriber thread's private record of what its wire has been
+/// told about the non-event stream board.
+struct BoardView {
+    announced: usize,
+    watermark: Vec<u64>,
+    dropped: Vec<u64>,
+    closed: Vec<bool>,
+}
+
+impl BoardView {
+    fn new(announced: usize) -> BoardView {
+        BoardView { announced, watermark: Vec::new(), dropped: Vec::new(), closed: Vec::new() }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.watermark.len() < n {
+            self.watermark.push(0);
+            self.dropped.push(0);
+            self.closed.push(false);
+        }
+    }
+}
+
+/// Unregisters a subscriber slot on EVERY exit path of
+/// [`Broadcaster::serve_connection`] — clean Eos, transport error, or
+/// panic. This is what keeps a crashed viewer from pinning the ring:
+/// the slot loses eviction entitlement immediately and any over-budget
+/// retention it was pinning is shed right here, not at the next push.
+struct SlotGuard<'a> {
+    bc: &'a Broadcaster,
+    id: usize,
+    tele: SubscriberTelemetry,
+    completed: bool,
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.bc.shared.lock().unwrap();
+        {
+            let slot = &mut g.slots[self.id];
+            slot.entitled = false;
+            slot.gone = true;
+            if !self.completed {
+                slot.stats.disconnects = 1;
+            }
+        }
+        Broadcaster::evict_entitled(&mut g, self.bc.max_lag);
+        self.bc.sync_ring_telemetry(&g.ring);
+        self.tele.sync(&g.slots[self.id].stats);
+        drop(g);
+        self.bc.progress.notify_all();
     }
 }
 
@@ -1106,5 +1822,212 @@ mod tests {
     #[test]
     fn fresh_epochs_are_nonzero() {
         assert_ne!(Publisher::fresh_epoch() & 1, 0, "low bit forced: never zero");
+    }
+
+    /// An in-memory subscriber: its scripted input (a Resume frame, or
+    /// nothing) is all it ever says; everything the publisher writes
+    /// lands in `output`.
+    struct ScriptedConn {
+        input: std::io::Cursor<Vec<u8>>,
+        output: Vec<u8>,
+    }
+
+    impl ScriptedConn {
+        fn resume(epoch: u64, cursors: &[u64]) -> ScriptedConn {
+            let mut input = Vec::new();
+            frame::encode(&Frame::Resume { epoch, cursors: cursors.to_vec() }, &mut input);
+            ScriptedConn { input: std::io::Cursor::new(input), output: Vec::new() }
+        }
+
+        fn silent() -> ScriptedConn {
+            ScriptedConn { input: std::io::Cursor::new(Vec::new()), output: Vec::new() }
+        }
+    }
+
+    impl Read for ScriptedConn {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.input.read(buf)
+        }
+    }
+
+    impl Write for ScriptedConn {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.output.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn broadcast_serves_the_full_stream_to_mixed_wire_subscribers() {
+        let hub = LiveHub::new("pubtest", 64, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, vec![msg(1), msg(2), msg(3), msg(4)]);
+        hub.close_all();
+        let bc = Broadcaster::new(hub.clone(), 9, 1 << 20);
+        bc.pump();
+        assert!(bc.finished());
+
+        let mut v2 = ScriptedConn::resume(9, &[]);
+        assert_eq!(bc.serve_connection(&mut v2, 2), ServeOutcome::Complete);
+        let mut v3 = ScriptedConn::resume(9, &[]);
+        assert_eq!(bc.serve_connection(&mut v3, 3), ServeOutcome::Complete);
+
+        for (out, wire) in [(&v2.output, 2u32), (&v3.output, 3u32)] {
+            let mut r = &out[..];
+            assert_eq!(frame::read_preamble(&mut r).unwrap(), wire, "per-connection wire");
+            let Frame::Hello { epoch, .. } = frame::read_frame(&mut r).unwrap() else {
+                panic!("first frame must be Hello");
+            };
+            assert_eq!(epoch, 9, "broadcast sessions are resumable");
+            assert_eq!(event_ts_of(out), vec![1, 2, 3, 4]);
+        }
+        // a mid-window Resume replays exactly past its cursors
+        let mut resumed = ScriptedConn::resume(9, &[2]);
+        assert_eq!(bc.serve_connection(&mut resumed, 3), ServeOutcome::Complete);
+        assert_eq!(event_ts_of(&resumed.output), vec![3, 4]);
+
+        let rows = bc.subscriber_stats();
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[0].wire, rows[0].forwarded, rows[0].lagged), (2, 4, 0));
+        assert_eq!((rows[1].wire, rows[1].forwarded, rows[1].lagged), (3, 4, 0));
+        assert_eq!((rows[2].forwarded, rows[2].lagged, rows[2].disconnects), (2, 0, 0));
+        assert!(rows.iter().all(|r| r.demoted == 0 && r.error.is_none()));
+        let agg = bc.stats();
+        assert_eq!((agg.connections, agg.events, agg.gaps), (3, 10, 0));
+    }
+
+    #[test]
+    fn broadcast_v3_rebatches_live_rounds_with_connection_dictionary() {
+        // drive build_round directly: the first (replay) round forwards
+        // ring frames verbatim, later v3 rounds re-batch them under the
+        // connection's own dictionary
+        let mut shared = BroadcastShared {
+            ring: ReplayRing::new(1 << 20),
+            board: StreamBoard::default(),
+            finished: None,
+            slots: vec![SubscriberSlot {
+                cursors: vec![],
+                entitled: true,
+                gone: false,
+                behind: 0,
+                stats: SubscriberStats::default(),
+            }],
+        };
+        shared.board.ensure(1);
+        shared.ring.push(0, fake_event_frame(0, 1));
+        let mut view = BoardView::new(1);
+        let mut enc = EventEncoder::new(3);
+        let mut round = SubscriberRound::default();
+        Broadcaster::build_round(&mut shared, 0, &mut view, &mut enc, true, &mut round);
+        assert_eq!(round.frames.len(), 1);
+        let (f, _) = frame::decode(&round.frames[0]).unwrap().unwrap();
+        assert!(matches!(f, Frame::Event { .. }), "the replay round is per-event frames");
+
+        shared.ring.push(0, fake_event_frame(0, 2));
+        shared.ring.push(0, fake_event_frame(0, 3));
+        let mut round = SubscriberRound::default();
+        Broadcaster::build_round(&mut shared, 0, &mut view, &mut enc, false, &mut round);
+        assert_eq!(round.frames.len(), 1);
+        let (f, _) = frame::decode(&round.frames[0]).unwrap().unwrap();
+        let Frame::EventBatch { events, .. } = f else { panic!("live v3 rounds batch") };
+        assert_eq!(events.len(), 2);
+        assert!(
+            matches!(events[0].key, BatchKey::Def { .. })
+                && matches!(events[1].key, BatchKey::Ref(0)),
+            "dictionary is connection state, started by the first batched event"
+        );
+        assert_eq!(shared.slots[0].stats.forwarded, 3);
+        assert_eq!(shared.slots[0].cursors, vec![3]);
+    }
+
+    #[test]
+    fn broadcast_demotes_laggard_under_pressure_and_books_the_exact_gap() {
+        let one = fake_event_frame(0, 0).len();
+        let hub = LiveHub::new("pubtest", 64, false);
+        hub.ensure_channels(1);
+        let bc = Broadcaster::new(hub.clone(), 7, 3 * one).with_max_lag(one);
+        // a subscriber stuck at cursor 0 while 10 events push through a
+        // 3-frame ring: over the 1-frame lag budget it must demote, and
+        // the ring must shed back to budget instead of pinning
+        let id = bc.register(3);
+        hub.push_batch(0, (0..10).map(msg).collect());
+        hub.close_all();
+        bc.pump();
+        {
+            let g = bc.shared.lock().unwrap();
+            assert!(!g.slots[id].entitled, "over the lag budget: demoted");
+            assert_eq!(g.slots[id].stats.demoted, 1, "demotion is sticky, counted once");
+            assert_eq!(g.ring.total, 3 * one, "demotion unpinned the ring");
+            assert_eq!(g.ring.streams[0].start_seq, 7);
+        }
+        // a fresh subscriber joining past the eviction gets the exact
+        // gap plus the retained tail — lag, not demotion
+        let mut late = ScriptedConn::resume(7, &[]);
+        assert_eq!(bc.serve_connection(&mut late, 2), ServeOutcome::Complete);
+        let mut r = &late.output[..];
+        frame::read_preamble(&mut r).unwrap();
+        frame::read_frame(&mut r).unwrap(); // Hello
+        assert_eq!(
+            frame::read_frame(&mut r).unwrap(),
+            Frame::ResumeGap { stream: 0, missed: 7 },
+            "the exact evicted span precedes the replay"
+        );
+        assert_eq!(event_ts_of(&late.output), vec![7, 8, 9]);
+        let rows = bc.subscriber_stats();
+        let row = rows.last().unwrap();
+        assert_eq!((row.lagged, row.demoted), (7, 0), "joining past eviction is lag, not demotion");
+    }
+
+    #[test]
+    fn dead_subscriber_unregisters_from_eviction_entitlement() {
+        let one = fake_event_frame(0, 0).len();
+        let hub = LiveHub::new("pubtest", 64, false);
+        hub.ensure_channels(1);
+        let bc = Broadcaster::new(hub.clone(), 7, 3 * one); // no lag budget
+        let id = bc.register(3);
+        let tele = SubscriberTelemetry::register(hub.telemetry(), id);
+        hub.push_batch(0, (0..10).map(msg).collect());
+        hub.close_all();
+        bc.pump();
+        {
+            let g = bc.shared.lock().unwrap();
+            assert!(g.slots[id].entitled);
+            assert_eq!(g.ring.total, 10 * one, "an entitled laggard pins the whole window");
+            assert_eq!(g.ring.streams[0].start_seq, 0);
+        }
+        // the subscriber dies: the guard must unregister the slot and
+        // shed the over-budget retention immediately — not at the next
+        // push (there is none), and certainly not never
+        drop(SlotGuard { bc: &bc, id, tele, completed: false });
+        let g = bc.shared.lock().unwrap();
+        assert!(!g.slots[id].entitled && g.slots[id].gone);
+        assert_eq!(g.slots[id].stats.disconnects, 1);
+        assert_eq!(g.ring.total, 3 * one, "dead slot no longer pins the ring");
+        assert_eq!(g.ring.streams[0].start_seq, 7);
+    }
+
+    #[test]
+    fn broadcast_handshake_death_is_recorded_and_isolated() {
+        let hub = LiveHub::new("pubtest", 64, false);
+        hub.ensure_channels(1);
+        hub.push_batch(0, vec![msg(1)]);
+        hub.close_all();
+        let bc = Broadcaster::new(hub.clone(), 9, 1 << 20);
+        bc.pump();
+        // dies before sending Resume
+        let mut dead = ScriptedConn::silent();
+        assert!(matches!(bc.serve_connection(&mut dead, 3), ServeOutcome::Lost(_)));
+        // a later subscriber is untouched
+        let mut ok = ScriptedConn::resume(9, &[]);
+        assert_eq!(bc.serve_connection(&mut ok, 3), ServeOutcome::Complete);
+        assert_eq!(event_ts_of(&ok.output), vec![1]);
+        let rows = bc.subscriber_stats();
+        assert_eq!(rows[0].disconnects, 1);
+        assert!(rows[0].error.is_some());
+        assert_eq!((rows[1].disconnects, rows[1].forwarded), (0, 1));
     }
 }

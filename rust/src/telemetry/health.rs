@@ -147,6 +147,22 @@ pub struct OriginHealth {
     pub remote_dropped: u64,
 }
 
+/// One broadcast subscriber's row in the health view
+/// (`iprof serve --subscribers`).
+#[derive(Debug, Clone, Default)]
+pub struct SubscriberHealth {
+    /// Subscriber id (registration order on the serving publisher).
+    pub subscriber: String,
+    /// Events encoded for this subscriber's wire.
+    pub forwarded: u64,
+    /// Events skipped as ring-eviction gaps on this connection.
+    pub lagged: u64,
+    /// Lag-budget demotions (0 or 1; demotion is sticky).
+    pub demoted: u64,
+    /// Connections that ended before `Eos`.
+    pub disconnects: u64,
+}
+
 /// The one-screen operator summary `iprof health` renders.
 #[derive(Debug, Clone, Default)]
 pub struct HealthSummary {
@@ -170,6 +186,8 @@ pub struct HealthSummary {
     pub ring_evicted: u64,
     /// Per-origin rows (nonempty only on an `attach` endpoint).
     pub origins: Vec<OriginHealth>,
+    /// Per-subscriber rows (nonempty only on a broadcast `serve`).
+    pub subscribers: Vec<SubscriberHealth>,
 }
 
 impl HealthSummary {
@@ -209,6 +227,33 @@ impl HealthSummary {
             }
         }
         origins.sort_by(|a, b| a.origin.cmp(&b.origin));
+        let mut subscribers: Vec<SubscriberHealth> = Vec::new();
+        let mut sub_row = |id: &str| -> usize {
+            match subscribers.iter().position(|s| s.subscriber == id) {
+                Some(i) => i,
+                None => {
+                    subscribers.push(SubscriberHealth {
+                        subscriber: id.to_string(),
+                        ..SubscriberHealth::default()
+                    });
+                    subscribers.len() - 1
+                }
+            }
+        };
+        for s in samples {
+            let Some(id) = s.label("subscriber") else { continue };
+            let i = sub_row(id);
+            let v = s.value.max(0.0) as u64;
+            match s.name.as_str() {
+                "thapi_subscriber_forwarded_events_total" => subscribers[i].forwarded = v,
+                "thapi_subscriber_lagged_events_total" => subscribers[i].lagged = v,
+                "thapi_subscriber_demotions_total" => subscribers[i].demoted = v,
+                "thapi_subscriber_disconnects_total" => subscribers[i].disconnects = v,
+                _ => {}
+            }
+        }
+        // ids are registration indices: sort numerically where possible
+        subscribers.sort_by_key(|s| (s.subscriber.parse::<u64>().ok(), s.subscriber.clone()));
         HealthSummary {
             received: total(samples, "thapi_live_events_received_total"),
             merged,
@@ -220,6 +265,7 @@ impl HealthSummary {
             publish_bytes: total(samples, "thapi_publish_bytes_total"),
             ring_evicted: total(samples, "thapi_ring_evicted_events_total"),
             origins: origins.into_iter().filter(|o| o.origin != "local").collect(),
+            subscribers,
         }
     }
 
@@ -233,7 +279,10 @@ impl HealthSummary {
     /// branch of `FanInReport::known_dropped()` (gaps + wire drops);
     /// the exposition carries no publisher Eos sample, so the opaque
     /// self-reported total that `known_dropped()` maxes against is not
-    /// consulted here.
+    /// consulted here. Per-subscriber `lagged` counts are *not* loss at
+    /// this endpoint: a lagged broadcast subscriber books the same span
+    /// as resume gaps on its own attach side, where strict mode already
+    /// gates it.
     pub fn known_loss(&self) -> u64 {
         let origin_loss = self.origins.iter().fold(0u64, |a, o| {
             a.saturating_add(o.resume_gaps).saturating_add(o.remote_dropped)
@@ -263,6 +312,21 @@ impl HealthSummary {
                 self.publish_bytes.to_string(),
                 self.ring_evicted.to_string(),
             ]);
+            out.push_str(&t.render());
+        }
+        if !self.subscribers.is_empty() {
+            out.push_str("\nsubscribers\n");
+            let mut t =
+                Table::new(&["subscriber", "forwarded", "lagged", "demoted", "disconnects"]);
+            for s in &self.subscribers {
+                t.row(&[
+                    s.subscriber.clone(),
+                    s.forwarded.to_string(),
+                    s.lagged.to_string(),
+                    s.demoted.to_string(),
+                    s.disconnects.to_string(),
+                ]);
+            }
             out.push_str(&t.render());
         }
         if !self.origins.is_empty() {
@@ -341,5 +405,30 @@ mod tests {
         let screen = h.render();
         assert!(screen.contains("a:1"));
         assert!(screen.contains("known loss: 10"));
+    }
+
+    #[test]
+    fn subscriber_rows_render_without_entering_known_loss() {
+        let text = "thapi_live_events_received_total 20\n\
+                    thapi_merge_events_total 20\n\
+                    thapi_subscriber_forwarded_events_total{subscriber=\"0\"} 20\n\
+                    thapi_subscriber_forwarded_events_total{subscriber=\"10\"} 13\n\
+                    thapi_subscriber_forwarded_events_total{subscriber=\"2\"} 13\n\
+                    thapi_subscriber_lagged_events_total{subscriber=\"2\"} 7\n\
+                    thapi_subscriber_demotions_total{subscriber=\"2\"} 1\n\
+                    thapi_subscriber_disconnects_total{subscriber=\"10\"} 1\n";
+        let h = HealthSummary::from_samples(&parse_exposition(text).unwrap());
+        // numeric sort, not lexical: 0, 2, 10
+        assert_eq!(
+            h.subscribers.iter().map(|s| s.subscriber.as_str()).collect::<Vec<_>>(),
+            vec!["0", "2", "10"]
+        );
+        assert_eq!((h.subscribers[1].lagged, h.subscribers[1].demoted), (7, 1));
+        assert_eq!(h.subscribers[2].disconnects, 1);
+        // lagged events are the subscriber's view loss, not pipeline loss
+        assert_eq!(h.known_loss(), 0);
+        let screen = h.render();
+        assert!(screen.contains("subscribers"));
+        assert!(screen.contains("demoted"));
     }
 }

@@ -37,7 +37,7 @@
 pub mod health;
 pub mod http;
 
-pub use health::{parse_exposition, HealthSummary, OriginHealth, Sample};
+pub use health::{parse_exposition, HealthSummary, OriginHealth, Sample, SubscriberHealth};
 pub use http::{scrape, scrape_path, TelemetryServer};
 
 use crate::bench_support::{js_num, js_str, BenchJson};
@@ -249,6 +249,16 @@ pub struct Registry {
     /// Events evicted from the replay ring (byte budget exceeded).
     pub ring_evicted_events: Counter,
 
+    // ── broadcast subscribers (`iprof serve --subscribers`) ────────
+    /// Per-subscriber events encoded for the wire.
+    pub subscriber_forwarded_events: CounterFamily,
+    /// Per-subscriber events skipped as ring-eviction gaps.
+    pub subscriber_lagged_events: CounterFamily,
+    /// Per-subscriber demotions (lag budget exceeded under pressure).
+    pub subscriber_demotions: CounterFamily,
+    /// Per-subscriber connections that ended before `Eos`.
+    pub subscriber_disconnects: CounterFamily,
+
     // ── fan-in readers (`iprof attach`) ────────────────────────────
     /// Per-origin events decoded off the wire.
     pub origin_events: CounterFamily,
@@ -306,6 +316,10 @@ impl Registry {
             publish_connections: Counter::default(),
             ring_bytes: Gauge::default(),
             ring_evicted_events: Counter::default(),
+            subscriber_forwarded_events: Family::new("subscriber"),
+            subscriber_lagged_events: Family::new("subscriber"),
+            subscriber_demotions: Family::new("subscriber"),
+            subscriber_disconnects: Family::new("subscriber"),
             origin_events: Family::new("origin"),
             origin_frames: Family::new("origin"),
             origin_batches: Family::new("origin"),
@@ -553,6 +567,30 @@ impl Registry {
                 "counter",
                 "Per-origin publisher-side channel drops (cumulative ledger)",
                 &self.origin_remote_dropped,
+            ),
+            (
+                "thapi_subscriber_forwarded_events_total",
+                "counter",
+                "Per-subscriber events encoded for the wire",
+                &self.subscriber_forwarded_events,
+            ),
+            (
+                "thapi_subscriber_lagged_events_total",
+                "counter",
+                "Per-subscriber events skipped as ring-eviction gaps",
+                &self.subscriber_lagged_events,
+            ),
+            (
+                "thapi_subscriber_demotions_total",
+                "counter",
+                "Per-subscriber lag-budget demotions",
+                &self.subscriber_demotions,
+            ),
+            (
+                "thapi_subscriber_disconnects_total",
+                "counter",
+                "Per-subscriber connections ended before Eos",
+                &self.subscriber_disconnects,
             ),
         ]
     }

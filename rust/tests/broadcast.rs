@@ -1,0 +1,638 @@
+//! Broadcast serve tests (`iprof serve --subscribers N`).
+//!
+//! One [`Broadcaster`] session, N concurrent subscribers over one
+//! shared replay ring. The acceptance bar: every subscriber that keeps
+//! up merges byte-identically to a solo subscriber of the same session
+//! (mixed v2/v3 wires, late joiners included); ring eviction never
+//! strands an *entitled* cursor (randomized join/kill property); a
+//! laggard over its `--max-lag` budget is demoted to gap delivery with
+//! an exact [`Frame::ResumeGap`] — and none of it perturbs anyone
+//! else's byte stream or ledgers (fault injection). On the wire each
+//! connection is an independent, fully conforming resumable THRL
+//! connection — broadcast is server-side, invisible to subscribers.
+
+use std::io::{self, Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+use thapi::analysis::EventMsg;
+use thapi::live::LiveHub;
+use thapi::remote::{
+    decode, encode, publish_with, Broadcaster, FanIn, FanInStats, Frame, KillAfter,
+    ReconnectPolicy, ServeOutcome, WireEvent,
+};
+use thapi::tracer::btf::generate_metadata;
+use thapi::tracer::encoder::FieldValue;
+use thapi::util::prop;
+
+/// Decode a registry-class message through `hub` (so the class id
+/// resolves on the attach side exactly like a real consumer's would).
+fn reg_msg(hub: &LiveHub, name: &str, ts: u64, rank: u32, tid: u32) -> EventMsg {
+    let class = thapi::model::class_by_name(name).unwrap();
+    hub.decode(rank, tid, class.id, ts, &0u64.to_le_bytes()).unwrap()
+}
+
+/// Push `events` onto `stream`, alternating entry/exit classes by the
+/// event's position in the WHOLE stream (`offset` + local index) — so a
+/// phased push produces the exact same content as one-shot fill.
+fn push_events(hub: &LiveHub, stream: usize, events: &[(u64, u32, u32)], offset: usize) {
+    let msgs: Vec<EventMsg> = events
+        .iter()
+        .enumerate()
+        .map(|(j, &(ts, rank, tid))| {
+            let name = if (offset + j) % 2 == 0 {
+                "lttng_ust_ze:zeInit_entry"
+            } else {
+                "lttng_ust_ze:zeInit_exit"
+            };
+            reg_msg(hub, name, ts, rank, tid)
+        })
+        .collect();
+    hub.push_batch(stream, msgs);
+}
+
+/// The merged `(ts, rank, tid)` sequence a SOLO subscriber of exactly
+/// this stream set sees — the baseline every broadcast subscriber must
+/// match.
+fn solo_expected(hostname: &str, batches: &[Vec<(u64, u32, u32)>]) -> Vec<(u64, u32, u32)> {
+    let hub = LiveHub::new(hostname, 64, false);
+    hub.ensure_channels(batches.len());
+    for (i, b) in batches.iter().enumerate() {
+        push_events(&hub, i, b, 0);
+    }
+    hub.close_all();
+    let mut buf = Vec::new();
+    publish_with(&hub, &mut buf, 2).unwrap();
+    let fan = FanIn::open(vec![Cursor::new(buf)], 64).unwrap();
+    let merged: Vec<(u64, u32, u32)> = fan.source().map(|m| (m.ts, m.rank, m.tid)).collect();
+    fan.finish().unwrap();
+    merged
+}
+
+/// Wire size of one per-event v2 `Event` frame for our registry
+/// payloads — the ring's budget unit.
+fn event_len() -> usize {
+    let mut buf = Vec::new();
+    encode(
+        &Frame::Event {
+            stream: 0,
+            event: WireEvent {
+                ts: 10,
+                rank: 0,
+                tid: 1,
+                class_id: thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap().id,
+                fields: vec![FieldValue::U64(0)],
+            },
+        },
+        &mut buf,
+    );
+    buf.len()
+}
+
+/// Wire size of the Hello a broadcast publisher sends — lets a test aim
+/// a kill budget past the handshake and into the event stream.
+fn hello_wire_len(hostname: &str, streams: u32, epoch: u64) -> usize {
+    let mut buf = Vec::new();
+    encode(
+        &Frame::Hello {
+            hostname: hostname.into(),
+            metadata: generate_metadata(&[]),
+            streams,
+            epoch,
+        },
+        &mut buf,
+    );
+    buf.len()
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Run one full subscriber over an established connection: handshake
+/// (Resume included — the broadcast epoch is nonzero), merge to the
+/// end, report the merged tuples plus connection stats. `None` when the
+/// connection died during the handshake (a killed subscriber).
+fn attach_client(stream: TcpStream) -> Option<(Vec<(u64, u32, u32)>, FanInStats)> {
+    let mut slot = Some(stream);
+    let connector = move || {
+        slot.take()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::ConnectionRefused, "single-use conn"))
+    };
+    let fan = FanIn::open_resumable(vec![connector], 64, ReconnectPolicy::none()).ok()?;
+    let merged: Vec<(u64, u32, u32)> = fan.source().map(|m| (m.ts, m.rank, m.tid)).collect();
+    let stats = fan.finish().ok()?;
+    Some((merged, stats))
+}
+
+// ---------------------------------------------------------------------------
+// Golden: three concurrent subscribers on mixed wires (v3, v2, v3 —
+// the third attaching late via Resume) each merge byte-identically to
+// a solo subscriber of the same session
+// ---------------------------------------------------------------------------
+
+#[test]
+fn three_mixed_wire_subscribers_merge_identically_to_solo_baseline() {
+    // two streams with tied timestamps across them, split into a phase
+    // pushed before anyone connects and a phase pushed live
+    let batches: Vec<Vec<(u64, u32, u32)>> = vec![
+        vec![(10, 0, 1), (15, 0, 1), (20, 0, 1), (25, 0, 1), (30, 0, 1)],
+        vec![(10, 0, 2), (16, 0, 2), (21, 0, 2), (26, 0, 2), (31, 0, 2)],
+    ];
+    let splits = [3usize, 2usize];
+    let phase1: u64 = splits.iter().map(|&s| s as u64).sum();
+    let total: u64 = batches.iter().map(|b| b.len() as u64).sum();
+    let expected = solo_expected("bchost", &batches);
+    assert_eq!(expected.len() as u64, total);
+
+    let hub = LiveHub::new("bchost", 64, false);
+    hub.ensure_channels(batches.len());
+    for (i, b) in batches.iter().enumerate() {
+        push_events(&hub, i, &b[..splits[i]], 0);
+    }
+    let bc = Broadcaster::new(hub.clone(), 0xBCA57, 64 << 20);
+    bc.drain_to_ring();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let wires = [3u32, 2, 3];
+
+    let results: Vec<Option<(Vec<(u64, u32, u32)>, FanInStats)>> = std::thread::scope(|s| {
+        let bc = &bc;
+        s.spawn(move || {
+            for wire in wires {
+                let (conn, _) = listener.accept().unwrap();
+                s.spawn(move || bc.serve_connection(conn, wire));
+            }
+        });
+
+        // subscribers 0 (v3) and 1 (v2) join before the live phase;
+        // sequential connects + a registration poll pin the row order
+        let c0 = TcpStream::connect(addr).unwrap();
+        wait_until("subscriber 0 registered", || bc.subscriber_stats().len() >= 1);
+        let c1 = TcpStream::connect(addr).unwrap();
+        wait_until("subscriber 1 registered", || bc.subscriber_stats().len() >= 2);
+        let h0 = s.spawn(move || attach_client(c0));
+        let h1 = s.spawn(move || attach_client(c1));
+        wait_until("both live subscribers consumed phase 1", || {
+            bc.subscriber_stats().iter().take(2).all(|r| r.forwarded == phase1)
+        });
+
+        // live phase, then end of session
+        for (i, b) in batches.iter().enumerate() {
+            push_events(&hub, i, &b[splits[i]..], splits[i]);
+        }
+        hub.close_all();
+        bc.pump();
+
+        // subscriber 2 attaches AFTER the session finished: pure ring
+        // replay via its Resume — the late-joiner path
+        let c2 = TcpStream::connect(addr).unwrap();
+        wait_until("subscriber 2 registered", || bc.subscriber_stats().len() >= 3);
+        let h2 = s.spawn(move || attach_client(c2));
+
+        vec![h0.join().unwrap(), h1.join().unwrap(), h2.join().unwrap()]
+    });
+
+    for (i, r) in results.iter().enumerate() {
+        let (merged, stats) = r.as_ref().unwrap_or_else(|| panic!("subscriber {i} died"));
+        assert_eq!(
+            merged, &expected,
+            "subscriber {i} must merge identically to a solo subscriber"
+        );
+        assert_eq!(stats.per[0].wire_version, wires[i], "negotiation is per-connection");
+        assert!(stats.per[0].error.is_none(), "{:?}", stats.per[0]);
+        assert_eq!(stats.per[0].resume_gap, 0);
+        assert_eq!(stats.per[0].server_dropped, 0);
+    }
+    // v3 live rounds are batched; a replay round is always per-event
+    // (the frozen stream-replay grammar), so the late v3 joiner — who
+    // only ever sees replay — gets zero batches
+    assert!(results[0].as_ref().unwrap().1.per[0].batches >= 1, "v3 live rounds batch");
+    assert_eq!(results[1].as_ref().unwrap().1.per[0].batches, 0, "v2 never batches");
+    assert_eq!(results[2].as_ref().unwrap().1.per[0].batches, 0, "replay is per-event");
+
+    let rows = bc.subscriber_stats();
+    assert_eq!(rows.len(), 3);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.id, i);
+        assert_eq!(row.wire, wires[i]);
+        assert_eq!(row.forwarded, total, "{row:?}");
+        assert_eq!(row.lagged, 0, "{row:?}");
+        assert_eq!(row.demoted, 0, "{row:?}");
+        assert_eq!(row.disconnects, 0, "{row:?}");
+        assert!(row.error.is_none(), "{row:?}");
+    }
+    let agg = bc.stats();
+    assert_eq!(agg.connections, 3);
+    assert_eq!(agg.events, 3 * total, "aggregate counts every subscriber's delivery");
+    assert_eq!(agg.gaps, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Property: randomized join/kill schedules over random stream sets and
+// ring budgets — the observable form of the ring invariants: an entry
+// is only evicted when every entitled cursor consumed it (roomy ring ⇒
+// zero lag for everyone), and every lagged event is booked as an exact
+// ResumeGap on BOTH ends (server row == subscriber ledger)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_join_and_kill_schedules_preserve_ring_invariants() {
+    let ev_len = event_len();
+    prop::check(6, 0xb40adca5, |rng| {
+        let n_streams = rng.range(1, 3);
+        let mut batches: Vec<Vec<(u64, u32, u32)>> = Vec::new();
+        for s in 0..n_streams {
+            let n = rng.range(0, 14);
+            let mut ts = rng.below(4);
+            let mut evs = Vec::new();
+            for _ in 0..n {
+                evs.push((ts, 0u32, (s + 1) as u32));
+                ts += rng.below(3); // zero increments force equal timestamps
+            }
+            batches.push(evs);
+        }
+        let total: u64 = batches.iter().map(|b| b.len() as u64).sum();
+        let splits: Vec<usize> =
+            batches.iter().map(|b| if b.is_empty() { 0 } else { rng.range(0, b.len() + 1) }).collect();
+        let expected = solo_expected("bchost", &batches);
+
+        // roomy ring: nothing may ever lag (the entitlement invariant);
+        // tight ring: phase-0 events evicted before a late join must
+        // come back as an EXACT gap, never silently
+        let roomy = rng.chance(0.5);
+        let budget = if roomy { 64 << 20 } else { ev_len * rng.range(2, 8) };
+
+        struct Plan {
+            join_phase: usize,
+            wire: u32,
+            kill: Option<usize>,
+        }
+        let n_subs = rng.range(2, 5);
+        let plan: Vec<Plan> = (0..n_subs)
+            .map(|_| Plan {
+                join_phase: rng.range(0, 2),
+                wire: if rng.chance(0.5) { 3 } else { 2 },
+                kill: if rng.chance(0.25) { Some(rng.range(20, 600)) } else { None },
+            })
+            .collect();
+        // connect order: phase 0 joiners first (stable within a phase) —
+        // this is also the accept order, i.e. the subscriber row order
+        let mut join_order: Vec<usize> = (0..n_subs).collect();
+        join_order.sort_by_key(|&i| plan[i].join_phase);
+
+        let hub = LiveHub::new("bchost", 64, false);
+        hub.ensure_channels(n_streams);
+        let bc = Broadcaster::new(hub.clone(), 0x9E37, budget);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let results: Vec<Option<(Vec<(u64, u32, u32)>, FanInStats)>> =
+            std::thread::scope(|s| {
+                let bc = &bc;
+                let plan = &plan;
+                {
+                    let order = join_order.clone();
+                    s.spawn(move || {
+                        for &i in &order {
+                            let (conn, _) = listener.accept().unwrap();
+                            let conn =
+                                KillAfter::new(conn, plan[i].kill.unwrap_or(usize::MAX));
+                            let wire = plan[i].wire;
+                            s.spawn(move || bc.serve_connection(conn, wire));
+                        }
+                    });
+                }
+
+                let mut clients: Vec<
+                    Option<std::thread::ScopedJoinHandle<'_, Option<(Vec<(u64, u32, u32)>, FanInStats)>>>,
+                > = (0..n_subs).map(|_| None).collect();
+                let mut accepted = 0usize;
+                for phase in 0..2 {
+                    for &i in &join_order {
+                        if plan[i].join_phase != phase {
+                            continue;
+                        }
+                        let stream = TcpStream::connect(addr).unwrap();
+                        accepted += 1;
+                        wait_until("row registered", || bc.subscriber_stats().len() >= accepted);
+                        clients[i] = Some(s.spawn(move || attach_client(stream)));
+                    }
+                    for (si, b) in batches.iter().enumerate() {
+                        let (lo, hi) = if phase == 0 { (0, splits[si]) } else { (splits[si], b.len()) };
+                        if lo < hi {
+                            push_events(&hub, si, &b[lo..hi], lo);
+                        }
+                    }
+                    bc.drain_to_ring();
+                }
+                hub.close_all();
+                bc.pump();
+                clients.into_iter().map(|h| h.unwrap().join().unwrap()).collect()
+            });
+
+        let rows = bc.subscriber_stats();
+        assert_eq!(rows.len(), n_subs, "one row per accepted subscriber");
+        assert_eq!(bc.stats().connections as usize, n_subs);
+        for (k, &i) in join_order.iter().enumerate() {
+            let row = &rows[k];
+            assert_eq!(row.wire, plan[i].wire, "negotiation is per-connection: {row:?}");
+            if let Some(err) = &row.error {
+                // killed mid-stream (or mid-handshake): accounted as a
+                // disconnect, no client-side guarantees — the OTHER
+                // subscribers' checks below are the isolation property
+                assert_eq!(row.disconnects, 1, "killed subscriber books one disconnect: {err}");
+                continue;
+            }
+            assert_eq!(row.disconnects, 0, "{row:?}");
+            assert_eq!(
+                row.forwarded + row.lagged,
+                total,
+                "every event accounted exactly once (forwarded or gap): {row:?}"
+            );
+            if roomy {
+                assert_eq!(row.lagged, 0, "nothing evicts under an entitled cursor: {row:?}");
+            }
+            let (merged, stats) = results[i]
+                .as_ref()
+                .unwrap_or_else(|| panic!("server completed but client {i} failed: {row:?}"));
+            assert!(stats.per[0].error.is_none(), "{:?}", stats.per[0]);
+            assert_eq!(
+                stats.per[0].resume_gap, row.lagged,
+                "both ends agree on the exact gap: {row:?}"
+            );
+            assert_eq!(merged.len() as u64, total - row.lagged, "{row:?}");
+            if row.lagged == 0 {
+                assert_eq!(merged, &expected, "a gapless subscriber merges the solo sequence");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Laggard demotion: a subscriber stalled past --max-lag is demoted to
+// gap delivery — the ring moves on, the gap comes back as an exact
+// ResumeGap, and the healthy subscriber never notices
+// ---------------------------------------------------------------------------
+
+/// Blocks the serve thread at its FIRST delivery-round write (the
+/// handshake — everything before the first `flush` — passes through),
+/// then releases it on `open()`. The write side is captured for frame-
+/// level inspection; the read side serves exactly one scripted Resume.
+struct GatedConn {
+    input: Cursor<Vec<u8>>,
+    out: Arc<Mutex<Vec<u8>>>,
+    gate: Arc<Gate>,
+    flushed_once: bool,
+    passed: bool,
+}
+
+#[derive(Default)]
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    blocked: bool,
+    open: bool,
+}
+
+impl Gate {
+    fn wait_blocked(&self) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut st = self.state.lock().unwrap();
+        while !st.blocked {
+            assert!(Instant::now() < deadline, "laggard never reached its gated write");
+            let (g, _) = self.cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+            st = g;
+        }
+    }
+
+    fn open(&self) {
+        self.state.lock().unwrap().open = true;
+        self.cv.notify_all();
+    }
+}
+
+impl Read for GatedConn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.input.read(buf)
+    }
+}
+
+impl Write for GatedConn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.flushed_once && !self.passed {
+            let mut st = self.gate.state.lock().unwrap();
+            st.blocked = true;
+            self.gate.cv.notify_all();
+            while !st.open {
+                st = self.gate.cv.wait(st).unwrap();
+            }
+            self.passed = true;
+        }
+        self.out.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.flushed_once = true;
+        Ok(())
+    }
+}
+
+#[test]
+fn laggard_over_max_lag_is_demoted_to_an_exact_resume_gap() {
+    const EPOCH: u64 = 0x1A66;
+    let ev_len = event_len();
+    let n_events = 10u64;
+    let batch: Vec<(u64, u32, u32)> = (0..n_events).map(|i| (10 + i * 5, 0, 1)).collect();
+
+    let hub = LiveHub::new("bchost", 64, false);
+    hub.ensure_channels(1);
+    push_events(&hub, 0, &batch[..3], 0);
+    // ring holds exactly 3 event frames; one frame of lag is tolerated
+    let bc = Broadcaster::new(hub.clone(), EPOCH, 3 * ev_len).with_max_lag(ev_len);
+    bc.drain_to_ring();
+
+    let mut resume = Vec::new();
+    encode(&Frame::Resume { epoch: EPOCH, cursors: vec![] }, &mut resume);
+    let out = Arc::new(Mutex::new(Vec::new()));
+    let gate = Arc::new(Gate::default());
+    let laggard = GatedConn {
+        input: Cursor::new(resume),
+        out: out.clone(),
+        gate: gate.clone(),
+        flushed_once: false,
+        passed: false,
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let healthy_merged = std::thread::scope(|s| {
+        let bc = &bc;
+        // healthy subscriber first (row 0, v3) — a real TCP client
+        s.spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            bc.serve_connection(conn, 3)
+        });
+        let c0 = TcpStream::connect(addr).unwrap();
+        let healthy = s.spawn(move || attach_client(c0));
+        wait_until("healthy subscriber consumed phase 1", || {
+            let rows = bc.subscriber_stats();
+            !rows.is_empty() && rows[0].forwarded == 3
+        });
+
+        // laggard second (row 1, v2): handshakes, builds its first
+        // round (cursor → 3), then stalls in the gated write
+        let lag_serve = s.spawn(move || bc.serve_connection(laggard, 2));
+        gate.wait_blocked();
+
+        // push the remaining events one at a time, keeping the healthy
+        // cursor current so only the laggard ever pins the ring: at
+        // event 6 the laggard (4 frames behind > 1 allowed) is demoted,
+        // and eviction proceeds past its cursor up to event 7
+        for k in 3..n_events as usize {
+            push_events(&hub, 0, &batch[k..k + 1], k);
+            bc.drain_to_ring();
+            wait_until("healthy subscriber caught up", || {
+                bc.subscriber_stats()[0].forwarded == (k + 1) as u64
+            });
+        }
+        hub.close_all();
+        bc.pump();
+
+        // release the laggard: it finishes the stalled round (events
+        // 0–2), then gets ResumeGap{missed: 4} + events 7–9 + Eos
+        gate.open();
+        assert_eq!(lag_serve.join().unwrap(), ServeOutcome::Complete);
+        healthy.join().unwrap()
+    });
+
+    let rows = bc.subscriber_stats();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(
+        (rows[1].forwarded, rows[1].lagged, rows[1].demoted),
+        (6, 4, 1),
+        "laggard: 3 pre-stall + 3 post-gap forwarded, 4 evicted as a gap, one demotion: {:?}",
+        rows[1]
+    );
+    assert_eq!(rows[1].disconnects, 0, "demotion is not a disconnect: {:?}", rows[1]);
+    assert!(rows[1].error.is_none());
+    assert_eq!((rows[0].lagged, rows[0].demoted), (0, 0), "healthy row untouched: {:?}", rows[0]);
+    assert_eq!(rows[0].forwarded, n_events);
+
+    // the healthy subscriber's merge is the full, gapless sequence
+    let (merged, stats) = healthy_merged.expect("healthy subscriber completed");
+    let ts: Vec<u64> = merged.iter().map(|&(ts, _, _)| ts).collect();
+    assert_eq!(ts, (0..n_events).map(|i| 10 + i * 5).collect::<Vec<_>>());
+    assert_eq!(stats.per[0].resume_gap, 0);
+
+    // frame-level: the laggard's wire carries exactly one ResumeGap of
+    // 4, and exactly the six events its cursors say it was delivered
+    let buf = out.lock().unwrap();
+    let mut pos = 8; // preamble
+    let mut gaps = Vec::new();
+    let mut event_ts = Vec::new();
+    let mut saw_eos = false;
+    while pos < buf.len() {
+        let (frame, used) = decode(&buf[pos..]).unwrap().expect("no torn frame in capture");
+        pos += used;
+        match frame {
+            Frame::ResumeGap { stream, missed } => gaps.push((stream, missed)),
+            Frame::Event { event, .. } => event_ts.push(event.ts),
+            Frame::Eos { dropped, .. } => {
+                saw_eos = true;
+                assert_eq!(dropped, 0, "a demotion gap is the subscriber's, not the hub's");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(gaps, vec![(0u32, 4u64)], "one exact gap frame for the evicted span");
+    assert_eq!(event_ts, vec![10, 15, 20, 45, 50, 55], "events 0–2 then 7–9, nothing else");
+    assert!(saw_eos, "the demoted subscriber still completes cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: killing one subscriber's connection mid-stream must
+// not perturb the other subscribers' byte streams or ledgers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_subscriber_does_not_perturb_the_others() {
+    const EPOCH: u64 = 0x0517;
+    let batches: Vec<Vec<(u64, u32, u32)>> = vec![
+        (0..8).map(|i| (10 + i * 3, 0, 1)).collect(),
+        (0..6).map(|i| (11 + i * 4, 0, 2)).collect(),
+    ];
+    let total: u64 = batches.iter().map(|b| b.len() as u64).sum();
+    let expected = solo_expected("bchost", &batches);
+
+    let hub = LiveHub::new("bchost", 64, false);
+    hub.ensure_channels(batches.len());
+    for (i, b) in batches.iter().enumerate() {
+        push_events(&hub, i, b, 0);
+    }
+    let bc = Broadcaster::new(hub.clone(), EPOCH, 64 << 20);
+    bc.drain_to_ring();
+
+    // cut subscriber 1 one event past its handshake — mid-replay-round
+    let kill_at = 8 + hello_wire_len("bchost", 2, EPOCH) + event_len() + 4;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let wires = [3u32, 2, 3];
+
+    let results: Vec<Option<(Vec<(u64, u32, u32)>, FanInStats)>> = std::thread::scope(|s| {
+        let bc = &bc;
+        s.spawn(move || {
+            for (i, wire) in wires.into_iter().enumerate() {
+                let (conn, _) = listener.accept().unwrap();
+                let budget = if i == 1 { kill_at } else { usize::MAX };
+                let conn = KillAfter::new(conn, budget);
+                s.spawn(move || bc.serve_connection(conn, wire));
+            }
+        });
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let stream = TcpStream::connect(addr).unwrap();
+            wait_until("row registered", || bc.subscriber_stats().len() > i);
+            handles.push(s.spawn(move || attach_client(stream)));
+        }
+        hub.close_all();
+        bc.pump();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let rows = bc.subscriber_stats();
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[1].disconnects, 1, "{:?}", rows[1]);
+    assert!(rows[1].error.is_some(), "{:?}", rows[1]);
+    match &results[1] {
+        None => {} // died during handshake bookkeeping — fine
+        Some((merged, stats)) => {
+            assert!(stats.per[0].error.is_some(), "the cut is visible client-side");
+            assert!((merged.len() as u64) < total, "the killed subscriber got a partial view");
+        }
+    }
+
+    for i in [0usize, 2] {
+        let row = &rows[i];
+        assert_eq!(row.forwarded, total, "survivor delivered everything: {row:?}");
+        assert_eq!((row.lagged, row.demoted, row.disconnects), (0, 0, 0), "{row:?}");
+        assert!(row.error.is_none(), "{row:?}");
+        let (merged, stats) = results[i]
+            .as_ref()
+            .unwrap_or_else(|| panic!("survivor {i} failed: {row:?}"));
+        assert_eq!(merged, &expected, "survivor {i} merges the untouched solo sequence");
+        assert_eq!(stats.per[0].resume_gap, 0);
+        assert!(stats.per[0].error.is_none());
+        assert_eq!(stats.per[0].wire_version, wires[i]);
+    }
+}

@@ -393,6 +393,162 @@ fn prop_bit_flips_never_panic_and_never_over_consume() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Broadcast-order fuzz: one Broadcaster, two subscribers on different
+// wires — whatever order the server's threads emit bytes in, each
+// connection decodes independently (own buffer, own dictionary, own
+// negotiated version), at EVERY possible interleave boundary
+// ---------------------------------------------------------------------------
+
+/// In-memory subscriber connection: the read side scripts exactly one
+/// Resume (what a fresh subscriber sends after a resumable Hello), the
+/// write side captures the publisher's bytes for offline fuzzing.
+struct CapturedConn {
+    input: std::io::Cursor<Vec<u8>>,
+    out: std::sync::Arc<std::sync::Mutex<Vec<u8>>>,
+}
+
+impl std::io::Read for CapturedConn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.input.read(buf)
+    }
+}
+
+impl std::io::Write for CapturedConn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.out.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A per-connection incremental decoder, exactly what one subscriber
+/// runs: buffers arbitrary chunks, negotiates its own preamble, keeps
+/// its own batch dictionary, and accumulates decoded event timestamps.
+#[derive(Default)]
+struct SubDecoder {
+    buf: Vec<u8>,
+    version: Option<u32>,
+    dict: BatchDict,
+    events: Vec<u64>,
+    batches: usize,
+}
+
+impl SubDecoder {
+    fn feed(&mut self, bytes: &[u8]) {
+        let SubDecoder { buf, version, dict, events, batches } = self;
+        buf.extend_from_slice(bytes);
+        let mut consumed = 0usize;
+        if version.is_none() {
+            if buf.len() < 8 {
+                return;
+            }
+            let mut r = &buf[..8];
+            *version = Some(read_preamble(&mut r).expect("preamble never corrupt mid-interleave"));
+            consumed = 8;
+        }
+        loop {
+            match decode(&buf[consumed..]) {
+                Ok(Some((frame, n))) => {
+                    match frame {
+                        Frame::Event { event, .. } => events.push(event.ts),
+                        Frame::EventBatch { .. } => {
+                            // re-decode through THIS connection's
+                            // dictionary (the stateful fast path)
+                            *batches += 1;
+                            let body = &buf[consumed + 4..consumed + n];
+                            decode_batch_into(body, dict, |ts, _, _, _, _| events.push(ts))
+                                .expect("batch refs resolve through the connection dictionary");
+                        }
+                        _ => {}
+                    }
+                    consumed += n;
+                }
+                Ok(None) => break,
+                Err(e) => panic!("structured decode error mid-interleave: {e}"),
+            }
+        }
+        buf.drain(..consumed);
+    }
+}
+
+#[test]
+fn broadcast_byte_interleave_decodes_per_connection_at_every_boundary() {
+    use thapi::live::LiveHub;
+    use thapi::remote::Broadcaster;
+    const EPOCH: u64 = 0xF022;
+
+    let reg_msg = |hub: &LiveHub, j: usize, ts: u64| {
+        let name =
+            if j % 2 == 0 { "lttng_ust_ze:zeInit_entry" } else { "lttng_ust_ze:zeInit_exit" };
+        let class = thapi::model::class_by_name(name).unwrap();
+        hub.decode(0, 1, class.id, ts, &0u64.to_le_bytes()).unwrap()
+    };
+    let ts_of = |i: u64| 10 + i * 5;
+    let hub = LiveHub::new("fuzzhost", 64, false);
+    hub.ensure_channels(1);
+    hub.push_batch(0, (0..4).map(|i| reg_msg(&hub, i as usize, ts_of(i))).collect());
+
+    let bc = Broadcaster::new(hub.clone(), EPOCH, 64 << 20);
+    bc.drain_to_ring();
+    let scripted = || {
+        let mut resume = Vec::new();
+        encode(&Frame::Resume { epoch: EPOCH, cursors: vec![] }, &mut resume);
+        let out = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        (CapturedConn { input: std::io::Cursor::new(resume), out: out.clone() }, out)
+    };
+
+    // subscriber A (v3) is served LIVE across two rounds, so its wire
+    // carries both per-event replay and batched frames; subscriber B
+    // (v2) attaches after the end — pure per-event replay
+    let (conn_a, out_a) = scripted();
+    let (conn_b, out_b) = scripted();
+    std::thread::scope(|s| {
+        let bc = &bc;
+        let a = s.spawn(move || bc.serve_connection(conn_a, 3));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while bc.subscriber_stats().first().map(|r| r.forwarded) != Some(4) {
+            assert!(std::time::Instant::now() < deadline, "subscriber A never got the replay");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        hub.push_batch(0, (4..8).map(|i| reg_msg(&hub, i as usize, ts_of(i))).collect());
+        hub.close_all();
+        bc.pump();
+        a.join().unwrap();
+        s.spawn(move || bc.serve_connection(conn_b, 2)).join().unwrap();
+    });
+    let wire_a = out_a.lock().unwrap().clone();
+    let wire_b = out_b.lock().unwrap().clone();
+    let expected: Vec<u64> = (0..8).map(ts_of).collect();
+
+    // uninterleaved baselines — and the negotiation is per-connection:
+    // A's wire really batches, B's never does
+    let (mut base_a, mut base_b) = (SubDecoder::default(), SubDecoder::default());
+    base_a.feed(&wire_a);
+    base_b.feed(&wire_b);
+    assert_eq!((base_a.version, base_b.version), (Some(3), Some(2)));
+    assert_eq!(base_a.events, expected);
+    assert_eq!(base_b.events, expected);
+    assert!(base_a.batches >= 1, "the live v3 rounds must batch");
+    assert_eq!(base_b.batches, 0, "v2 must never see EventBatch");
+
+    // every byte boundary of A's stream, with ALL of B delivered in
+    // between: per-connection decoding must be oblivious to the
+    // server-side emission order — broadcast is invisible on the wire
+    for cut in 0..=wire_a.len() {
+        let (mut da, mut db) = (SubDecoder::default(), SubDecoder::default());
+        da.feed(&wire_a[..cut]);
+        db.feed(&wire_b);
+        da.feed(&wire_a[cut..]);
+        assert_eq!(da.version, Some(3), "cut {cut}: negotiation stays per-connection");
+        assert_eq!(db.version, Some(2), "cut {cut}");
+        assert_eq!(da.events, expected, "cut {cut}: A's decode must not depend on order");
+        assert_eq!(db.events, expected, "cut {cut}");
+    }
+}
+
 #[test]
 fn prop_random_byte_streams_never_panic_the_decoder() {
     prop::check(500, 0x5eed, |rng| {

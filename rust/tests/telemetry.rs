@@ -307,6 +307,161 @@ fn scrapes_parse_while_concurrent_feeders_run() {
 }
 
 // ---------------------------------------------------------------------------
+// Broadcast serve: the per-subscriber metric family is a live view over
+// the same rows ServeReport.subscribers carries — a mid-run scrape
+// equals the Broadcaster's accounting at that instant, and the final
+// scrape equals the final rows
+// ---------------------------------------------------------------------------
+
+/// In-memory subscriber for a broadcast session: the read side scripts
+/// the handshake, the write side swallows the publisher's bytes.
+struct ScriptedSub {
+    input: Cursor<Vec<u8>>,
+}
+
+impl ScriptedSub {
+    /// Answers the resumable Hello with a fresh Resume — a conforming
+    /// subscriber that consumes the whole session.
+    fn resuming(epoch: u64) -> ScriptedSub {
+        let mut resume = Vec::new();
+        thapi::remote::encode(
+            &thapi::remote::Frame::Resume { epoch, cursors: vec![] },
+            &mut resume,
+        );
+        ScriptedSub { input: Cursor::new(resume) }
+    }
+
+    /// Hangs up instead of completing the handshake — a disconnect.
+    fn mute() -> ScriptedSub {
+        ScriptedSub { input: Cursor::new(Vec::new()) }
+    }
+}
+
+impl std::io::Read for ScriptedSub {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        std::io::Read::read(&mut self.input, buf)
+    }
+}
+
+impl std::io::Write for ScriptedSub {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn broadcast_subscriber_family_scrape_equals_serve_rows() {
+    use thapi::remote::{encode, Broadcaster, Frame, ServeOutcome, WireEvent};
+    use thapi::tracer::encoder::FieldValue;
+    const EPOCH: u64 = 0x5CB5;
+    const N: u64 = 12;
+
+    // one encoded event frame, to size the ring in whole events
+    let event_len = {
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Event {
+                stream: 0,
+                event: WireEvent {
+                    ts: 10,
+                    rank: 0,
+                    tid: 1,
+                    class_id: thapi::model::class_by_name("lttng_ust_ze:zeInit_entry")
+                        .unwrap()
+                        .id,
+                    fields: vec![FieldValue::U64(0)],
+                },
+            },
+            &mut buf,
+        );
+        buf.len()
+    };
+
+    // one stream, 12 events, a ring that keeps only 3 event frames:
+    // everything older is evicted BEFORE any subscriber attaches, so
+    // every subscriber resumes into the same exact, nonzero gap
+    let hub = LiveHub::new("bcast", 64, false);
+    hub.ensure_channels(1);
+    let msgs: Vec<EventMsg> = (0..N)
+        .map(|i| {
+            let name = if i % 2 == 0 {
+                "lttng_ust_ze:zeInit_entry"
+            } else {
+                "lttng_ust_ze:zeInit_exit"
+            };
+            reg_msg(&hub, name, 10 + i * 5, 0, 1)
+        })
+        .collect();
+    hub.push_batch(0, msgs);
+    hub.close_all();
+    let bc = Broadcaster::new(hub.clone(), EPOCH, 3 * event_len);
+    bc.pump();
+
+    let server = TelemetryServer::bind("127.0.0.1:0", hub.telemetry().clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let sval = |samples: &[Sample], name: &str, id: &str| lval(samples, name, "subscriber", id);
+
+    // subscriber 0 (v3) completes; the MID-RUN scrape — subscriber 1
+    // not yet attached — must equal the rows at this instant
+    assert_eq!(bc.serve_connection(ScriptedSub::resuming(EPOCH), 3), ServeOutcome::Complete);
+    let rows = bc.subscriber_stats();
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].lagged > 0, "the tight ring must have evicted: {:?}", rows[0]);
+    assert_eq!(rows[0].forwarded + rows[0].lagged, N, "{:?}", rows[0]);
+    let samples = parse_exposition(&scrape(&addr).unwrap()).unwrap();
+    assert_eq!(
+        sval(&samples, "thapi_subscriber_forwarded_events_total", "0"),
+        rows[0].forwarded as f64
+    );
+    assert_eq!(
+        sval(&samples, "thapi_subscriber_lagged_events_total", "0"),
+        rows[0].lagged as f64
+    );
+    assert_eq!(sval(&samples, "thapi_subscriber_demotions_total", "0"), 0.0);
+    assert_eq!(sval(&samples, "thapi_subscriber_disconnects_total", "0"), 0.0);
+    assert!(
+        !samples.iter().any(|s| s.label("subscriber") == Some("1")),
+        "no series for a subscriber that has not attached"
+    );
+
+    // subscriber 1 (v2) completes with the same gap; subscriber 2
+    // hangs up mid-handshake — a disconnect row, not an event row
+    assert_eq!(bc.serve_connection(ScriptedSub::resuming(EPOCH), 2), ServeOutcome::Complete);
+    assert!(matches!(bc.serve_connection(ScriptedSub::mute(), 3), ServeOutcome::Lost(_)));
+
+    // final scrape == the final rows (the exact Vec ServeReport carries)
+    let rows = bc.subscriber_stats();
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[1].lagged, rows[0].lagged, "same ring, same gap");
+    assert_eq!(rows[2].disconnects, 1, "{:?}", rows[2]);
+    let samples = parse_exposition(&scrape(&addr).unwrap()).unwrap();
+    server.shutdown();
+    for row in &rows {
+        let id = row.id.to_string();
+        let check = |name: &str, v: u64| {
+            assert_eq!(sval(&samples, name, &id), v as f64, "subscriber {id}: {row:?}");
+        };
+        check("thapi_subscriber_forwarded_events_total", row.forwarded);
+        check("thapi_subscriber_lagged_events_total", row.lagged);
+        check("thapi_subscriber_demotions_total", row.demoted);
+        check("thapi_subscriber_disconnects_total", row.disconnects);
+    }
+
+    // the health view groups the same rows — and a subscriber's lag is
+    // NOT pipeline loss (it resurfaces as resume gaps on that
+    // subscriber's own attach side, where --live-strict already gates)
+    let health = HealthSummary::from_samples(&samples);
+    assert_eq!(health.subscribers.len(), 3);
+    assert_eq!(health.subscribers[0].forwarded, rows[0].forwarded);
+    assert_eq!(health.subscribers[0].lagged, rows[0].lagged);
+    assert_eq!(health.subscribers[2].disconnects, 1);
+    assert_eq!(health.known_loss(), 0, "subscriber lag is not hub-side loss");
+}
+
+// ---------------------------------------------------------------------------
 // `iprof health --strict`: exit codes through the real binary
 // ---------------------------------------------------------------------------
 
