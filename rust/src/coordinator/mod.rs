@@ -871,6 +871,138 @@ fn drive_fanin(
     })
 }
 
+/// Result of one `iprof relay` run.
+#[derive(Debug)]
+pub struct RelayReport {
+    /// The relay's own identity: its mirror hub's label, announced in
+    /// every upstream Hello (`--label`, defaulting to the first
+    /// downstream publisher's hostname).
+    pub label: String,
+    /// Hostname announced by each downstream publisher, in connection
+    /// order.
+    pub hostnames: Vec<String>,
+    /// Mirror-hub statistics over the merged union this relay carried.
+    pub local: LiveStats,
+    /// Per-downstream accounting (channels, events merged, drops/eos/
+    /// resume-gap ledgers — including sub-origins relayed through
+    /// deeper levels), in connection order.
+    pub origins: Vec<OriginStats>,
+    /// Per-downstream connection statistics ([`FanInStats::per`]).
+    pub downstream: FanInStats,
+    /// Aggregate upstream wire statistics across every subscriber
+    /// served.
+    pub publish: PublishStats,
+    /// Upstream connections that ended before Eos, with reasons; the
+    /// relay kept serving after each (a dropped parent resumes as a
+    /// fresh slot).
+    pub disconnects: Vec<String>,
+    /// Per-upstream-subscriber accounting rows, in accept order.
+    pub subscribers: Vec<SubscriberStats>,
+}
+
+/// Run one hierarchical relay node (`iprof relay <listen-addr>
+/// <addr>...`): a [`FanIn`] subscriber draining N downstream publishers
+/// into one mirror hub, re-published upstream by a [`Broadcaster`] in
+/// origin-relay mode — simultaneously the receiving half of `iprof
+/// attach` and the serving half of `iprof serve --subscribers`, glued
+/// by the shared [`crate::remote::HubPump`] with **no merge in
+/// between**: forward batches keep the hub's global channel order, so
+/// the root's k-way merge over a relay sees exactly the concatenated
+/// order a flat N-way attach would (byte-identity, module property 8 in
+/// [`crate::remote`]). Per-leaf identity rides [`crate::remote::Frame::Origin`]
+/// entries with hierarchical path ids, so drop/eos/gap accounting and
+/// telemetry series survive aggregation per leaf.
+///
+/// `connectors` dial the downstream publishers (resumable under
+/// `policy`, exactly like [`run_fanin_resumable`]); `accept` supplies
+/// upstream subscriber connections with the [`run_serve_broadcast`]
+/// contract (`Ok(None)` = nobody right now, sleep briefly first). The
+/// relay ends once every downstream reached Eos (the fan-in seals the
+/// hub), at least `subscribers` upstream connections were accepted, and
+/// every upstream serve finished. Relaying requires the v3 wire —
+/// [`crate::remote::Frame::Origin`] does not exist on v2.
+#[allow(clippy::too_many_arguments)]
+pub fn run_relay<S, C, U, A>(
+    connectors: Vec<C>,
+    depth: usize,
+    policy: ReconnectPolicy,
+    label: Option<&str>,
+    accept: A,
+    subscribers: usize,
+    resume_buffer: usize,
+    max_lag: Option<usize>,
+    telemetry: &TelemetryOptions,
+) -> std::io::Result<RelayReport>
+where
+    S: Read + Write + Send + 'static,
+    C: FnMut() -> std::io::Result<S> + Send + 'static,
+    U: Read + Write + Send,
+    A: FnMut() -> std::io::Result<Option<U>> + Send,
+{
+    assert!(subscribers >= 1, "relay needs at least one upstream subscriber");
+    let fan = FanIn::open_resumable_labeled(connectors, depth, policy, label)?;
+    let hub = fan.hub().clone();
+    let exposure = TelemetryExposure::start(telemetry, hub.telemetry())?;
+    let mut bc = Broadcaster::new(hub.clone(), Publisher::fresh_epoch(), resume_buffer)
+        .with_origin_relay();
+    if let Some(lag) = max_lag {
+        bc = bc.with_max_lag(lag);
+    }
+    let bc = &bc;
+    let served = std::thread::scope(|scope| {
+        // One pump owns hub → shared ring (the same HubPump the other
+        // publishers use); it exits when the last fan-in reader seals
+        // the hub, which is what lets every upstream serve reach Eos.
+        scope.spawn(move || bc.pump());
+        let manager = scope.spawn(move || {
+            let mut accept = accept;
+            let mut handles: Vec<std::thread::ScopedJoinHandle<'_, ServeOutcome>> = Vec::new();
+            let mut accepted = 0usize;
+            loop {
+                if accepted >= subscribers
+                    && bc.finished()
+                    && handles.iter().all(|h| h.is_finished())
+                {
+                    break;
+                }
+                if let Some(conn) = accept()? {
+                    accepted += 1;
+                    // v3 only: Origin frames do not exist on a v2 wire
+                    handles.push(scope.spawn(move || bc.serve_connection(conn, 3)));
+                }
+            }
+            let mut disconnects = Vec::new();
+            for h in handles {
+                if let ServeOutcome::Lost(reason) =
+                    h.join().expect("relay serve thread panicked")
+                {
+                    disconnects.push(reason);
+                }
+            }
+            Ok::<Vec<String>, std::io::Error>(disconnects)
+        });
+        manager.join().expect("relay manager thread panicked")
+    });
+    let local = hub.stats();
+    let origins = hub.origin_stats();
+    let hostnames = fan.hostnames.clone();
+    let downstream = fan.finish()?;
+    // readers and serves joined: the registry is settled, so the final
+    // JSON snapshot carries exactly the numbers reported below
+    exposure.finish();
+    let disconnects = served?;
+    Ok(RelayReport {
+        label: hub.hostname().to_string(),
+        hostnames,
+        local,
+        origins,
+        downstream,
+        publish: bc.stats(),
+        disconnects,
+        subscribers: bc.subscriber_stats(),
+    })
+}
+
 /// Run baseline + each config, with one warmup baseline run first (primes
 /// PJRT compile caches so module-create cost doesn't skew a single cell).
 /// Returns reports in the same order as `configs`, prefixed by baseline.

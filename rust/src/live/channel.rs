@@ -148,10 +148,40 @@ struct OriginBook {
     /// `EventBatch` frames decoded from this origin (0 on a v2
     /// connection — the batched-vs-fallback telltale). Saturating.
     batches: u64,
+    /// Leaf publishers aggregated *through* this origin, when the
+    /// origin is a relay (`Frame::Origin` frames): per-leaf ledgers
+    /// keyed by hierarchical path, in first-seen order. Empty for
+    /// ordinary publishers.
+    subs: Vec<SubOrigin>,
     /// Telemetry mirrors of this origin's ledgers (labelled by origin
     /// label, registered once at [`LiveHub::register_origin`] time so
     /// the record paths never touch the registry's family lock).
     tele: OriginTelemetry,
+}
+
+/// Per-leaf ledgers for one publisher mirrored through a relay origin
+/// (see [`LiveHub::record_origin_child`]). Every wire counter is
+/// cumulative and monotone, so re-sent `Frame::Origin` frames
+/// max-merge — exactly the `Drops` rule, per leaf.
+struct SubOrigin {
+    /// Hierarchical origin id, as sent by the relay (unique per relay
+    /// connection; globally unique once prefixed with the relay's own
+    /// origin label — see `telemetry::sub_origin_series_label`).
+    path: String,
+    /// The leaf publisher's hostname.
+    hostname: String,
+    /// Relay stream ids carrying this leaf's events (grow-only).
+    streams: Vec<u32>,
+    /// Cumulative publisher-side drops at the leaf.
+    dropped: u64,
+    /// Cumulative resume-gap events at the leaf.
+    resume_gaps: u64,
+    /// The leaf's own Eos totals, once it ended cleanly.
+    eos: Option<(u64, u64)>,
+    /// Lazily registered telemetry mirrors (label =
+    /// `sub_origin_series_label`), bumped by monotone delta only.
+    tele_resume_gaps: Arc<Counter>,
+    tele_remote_dropped: Arc<Counter>,
 }
 
 /// Pre-registered labelled telemetry handles for one origin.
@@ -211,6 +241,46 @@ pub struct OriginStats {
     /// `EventBatch` frames decoded from this origin (0 under the v2
     /// per-event fallback). Saturating.
     pub batches: u64,
+    /// Per-leaf accounting relayed through this origin
+    /// (`Frame::Origin`), in first-seen order. Empty unless the origin
+    /// is a relay. Each child's ledgers are *disjoint* from the parent
+    /// connection's own: the parent books loss on the relay→here hop
+    /// (its channels, its resume gaps, its Eos totals), the children
+    /// book loss at and below the leaves, as learned by the relay.
+    pub children: Vec<SubOriginStats>,
+}
+
+/// Per-leaf accounting snapshot for one publisher aggregated through a
+/// relay (see [`OriginStats::children`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SubOriginStats {
+    /// Hierarchical origin id as carried on the wire (e.g.
+    /// `0:relay1/0:nodeA` once the receiver prefixes its own origin).
+    pub path: String,
+    /// The leaf publisher's hostname.
+    pub hostname: String,
+    /// Relay stream ids carrying this leaf's events.
+    pub streams: Vec<u32>,
+    /// Cumulative publisher-side drops at the leaf.
+    pub dropped: u64,
+    /// Cumulative events the leaf lost to resume gaps.
+    pub resume_gaps: u64,
+    /// The leaf's own Eos totals `(received, dropped)`, if it ended
+    /// cleanly.
+    pub eos: Option<(u64, u64)>,
+}
+
+impl SubOriginStats {
+    /// Best known loss at this leaf, deduplicated — the same
+    /// max-compete rule as [`OriginStats::known_dropped`], applied to
+    /// the leaf's own ledgers.
+    pub fn known_dropped(&self) -> u64 {
+        let ledger = self.dropped.saturating_add(self.resume_gaps);
+        match self.eos {
+            Some((_, eos_dropped)) => eos_dropped.max(ledger),
+            None => ledger,
+        }
+    }
 }
 
 impl OriginStats {
@@ -227,10 +297,14 @@ impl OriginStats {
     /// on both sides still counts exactly once.
     pub fn known_dropped(&self) -> u64 {
         let ledger = self.remote_dropped.saturating_add(self.resume_gaps);
-        match self.eos {
+        let own = match self.eos {
             Some((_, eos_dropped)) => eos_dropped.max(ledger),
             None => ledger,
-        }
+        };
+        // children book loss at and below the leaves, disjoint from
+        // the parent connection's own ledgers (see `children` docs) —
+        // their sum stacks on top instead of competing
+        self.children.iter().fold(own, |a, c| a.saturating_add(c.known_dropped()))
     }
 }
 
@@ -592,6 +666,7 @@ impl LiveHub {
                 closed: false,
                 wire_version: 0,
                 batches: 0,
+                subs: Vec::new(),
                 tele: OriginTelemetry::register(&self.telemetry, index - 1, label),
             }),
             index,
@@ -716,6 +791,68 @@ impl LiveHub {
         });
     }
 
+    /// Record (or max-merge) one leaf publisher relayed through
+    /// `origin` (a decoded [`Frame::Origin`]; `iprof relay` re-sends
+    /// the frame whenever a leaf's counters change). Keyed by `path`;
+    /// all counters are cumulative and monotone, so a stale or
+    /// re-ordered frame can never roll a leaf's ledger back — the same
+    /// rule as [`LiveHub::record_origin_drops`]. The leaf's telemetry
+    /// series register lazily on first sight under
+    /// [`crate::telemetry::sub_origin_series_label`], which prefixes
+    /// the relay connection's own `<index>:<label>` — two relays each
+    /// forwarding an origin named `0:nodeA` stay distinct series (and
+    /// distinct ledgers: they live in distinct origins' books).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_origin_child(
+        &self,
+        origin: usize,
+        path: &str,
+        hostname: &str,
+        streams: &[u32],
+        dropped: u64,
+        resume_gaps: u64,
+        eos: Option<(u64, u64)>,
+    ) {
+        let topo = self.topo_read();
+        let mut st = Self::origin_shard(&topo, origin).lock();
+        let book = st.origin.as_mut().expect("origin shard");
+        let sub = match book.subs.iter_mut().position(|s| s.path == path) {
+            Some(i) => &mut book.subs[i],
+            None => {
+                let label =
+                    crate::telemetry::sub_origin_series_label(origin, &book.label, path);
+                book.subs.push(SubOrigin {
+                    path: path.to_string(),
+                    hostname: hostname.to_string(),
+                    streams: Vec::new(),
+                    dropped: 0,
+                    resume_gaps: 0,
+                    eos: None,
+                    tele_resume_gaps: self.telemetry.origin_resume_gaps.with_label(&label),
+                    tele_remote_dropped: self.telemetry.origin_remote_dropped.with_label(&label),
+                });
+                book.subs.last_mut().expect("just pushed")
+            }
+        };
+        if sub.hostname != hostname {
+            sub.hostname = hostname.to_string();
+        }
+        if streams.len() > sub.streams.len() {
+            sub.streams = streams.to_vec();
+        }
+        if dropped > sub.dropped {
+            sub.tele_remote_dropped.add(dropped - sub.dropped);
+            sub.dropped = dropped;
+        }
+        if resume_gaps > sub.resume_gaps {
+            sub.tele_resume_gaps.add(resume_gaps - sub.resume_gaps);
+            sub.resume_gaps = resume_gaps;
+        }
+        if eos.is_some() {
+            sub.eos = eos;
+        }
+    }
+
     /// Re-admit `origin` after a successful session resume: clears the
     /// origin's closed flag and re-opens its channels so replayed events
     /// can flow again. The inverse of [`LiveHub::close_origin`], for the
@@ -778,6 +915,18 @@ impl LiveHub {
                     closed: book.closed,
                     wire_version: book.wire_version,
                     batches: book.batches,
+                    children: book
+                        .subs
+                        .iter()
+                        .map(|c| SubOriginStats {
+                            path: c.path.clone(),
+                            hostname: c.hostname.clone(),
+                            streams: c.streams.clone(),
+                            dropped: c.dropped,
+                            resume_gaps: c.resume_gaps,
+                            eos: c.eos,
+                        })
+                        .collect(),
                     ..Default::default()
                 };
                 for ch in &st.channels {

@@ -59,7 +59,7 @@ pub mod channel;
 pub mod pipeline;
 pub mod source;
 
-pub use channel::{ForwardBatch, ForwardCursor, LiveHub, LiveStats, OriginStats};
+pub use channel::{ForwardBatch, ForwardCursor, LiveHub, LiveStats, OriginStats, SubOriginStats};
 pub use pipeline::{run_live_pipeline, LivePipelineResult};
 pub use source::{LatencySummary, LiveSource};
 

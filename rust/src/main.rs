@@ -12,13 +12,18 @@
 //!              [--refresh <ms>] [--reconnect <n>]    1 publisher, or N
 //!              [--backoff <ms>]                      merged as one fan-in;
 //!                                                    reconnect + resume
+//! iprof relay <listen-addr> <addr> [<addr>...]       aggregation tree node:
+//!              [--subscribers <n>] [--label <name>]   fan-in N downstream
+//!              [--resume-buffer <b>] [--max-lag <b>]  publishers, re-publish
+//!              [--reconnect <n>] [--backoff <ms>]     the merged union
+//!                                                     upstream (wire v3)
 //! iprof health <addr> [--strict [--max-drops <n>]]   scrape a --telemetry
 //!                                                    endpoint, one-screen
 //!                                                    operator summary
 //!
-//! Both `serve` and `attach` take `--telemetry <addr>` (Prometheus
-//! scrape endpoint over the pipeline's self-telemetry registry) and
-//! `--telemetry-json <path>` (periodic JSON snapshots).
+//! `serve`, `attach` and `relay` all take `--telemetry <addr>`
+//! (Prometheus scrape endpoint over the pipeline's self-telemetry
+//! registry) and `--telemetry-json <path>` (periodic JSON snapshots).
 //!
 //!   -m, --mode <minimal|default|full>   tracing mode        [default]
 //!   -s, --sample [<ms>]                 device sampling daemon (50 ms)
@@ -144,6 +149,9 @@ struct Options {
     /// serve: per-subscriber lag budget in bytes — a viewer further
     /// behind than this is demoted to gap delivery under ring pressure.
     max_lag: Option<usize>,
+    /// relay: the name this node publishes upstream (its Hello hostname
+    /// and the prefix of its leaves' hierarchical origin paths).
+    label: Option<String>,
     /// serve/attach: bind a Prometheus scrape endpoint here.
     telemetry_addr: Option<String>,
     /// serve/attach: write periodic JSON telemetry snapshots here.
@@ -198,6 +206,7 @@ fn parse_args(args: &[String]) -> Result<Options> {
         wire: None,
         subscribers: None,
         max_lag: None,
+        label: None,
         telemetry_addr: None,
         telemetry_json: None,
     };
@@ -307,6 +316,13 @@ fn parse_args(args: &[String]) -> Result<Options> {
                 }
                 o.max_lag = Some(bytes);
             }
+            "--label" => {
+                let v = it.next().context("--label needs a name")?;
+                if v.is_empty() || v.contains('/') {
+                    bail!("--label must be a nonempty name without '/' (it prefixes origin paths)");
+                }
+                o.label = Some(v.clone());
+            }
             "--telemetry" => {
                 let v = it.next().context("--telemetry needs a bind address")?;
                 o.telemetry_addr = Some(v.clone());
@@ -361,6 +377,17 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
          streams). One dying publisher yields a partial analysis of the
          rest, with per-publisher accounting; --reconnect makes a dropped
          resumable publisher re-join its own streams instead of dying
+       iprof relay <listen-addr> <addr> [<addr>...] [--subscribers <n>]
+             [--resume-buffer <bytes>] [--max-lag <bytes>] [--label <name>]
+             [--reconnect <n>] [--backoff <ms>]
+         aggregation tree node: attach to N downstream publishers, merge
+         their streams into one mirror hub, and re-publish the union
+         upstream as a resumable broadcast (always wire v3). Per-leaf
+         identity rides Origin frames with path-style hierarchical ids
+         (0:relay1/0:nodeA), so the root books drops/eos/resume-gap
+         ledgers and telemetry series per LEAF — never aliased across
+         relays — and a 2-level tree merges byte-identically to a flat
+         N-way attach
        iprof health <addr> [--strict [--max-drops <n>]]
          scrape a --telemetry endpoint once and render a one-screen operator
          summary (pipeline totals, per-origin ledgers, known loss); with
@@ -400,12 +427,17 @@ USAGE: iprof [OPTIONS] [--] <workload>[,<workload>...]
                                        events (EventBatch + vectored writes),
                                        2 keeps the frozen per-event stream
                                        for v2-only subscribers          [3]
-      --telemetry <addr>               serve/attach: bind a Prometheus scrape
-                                       endpoint (text exposition v0.0.4) over
-                                       the pipeline's self-telemetry registry
-      --telemetry-json <path>          serve/attach: write periodic JSON
+      --telemetry <addr>               serve/attach/relay: bind a Prometheus
+                                       scrape endpoint (text exposition
+                                       v0.0.4) over the pipeline's
+                                       self-telemetry registry
+      --telemetry-json <path>          serve/attach/relay: write periodic JSON
                                        telemetry snapshots to <path>
-      --reconnect <n>                  attach: redial a dropped resumable
+      --label <name>                   relay: the name this node publishes
+                                       upstream (its Hello hostname and the
+                                       prefix of its leaves' origin paths)
+                                       [first downstream hostname]
+      --reconnect <n>                  attach/relay: redial a dropped resumable
                                        publisher up to n times per outage [0]
       --backoff <ms>                   attach: backoff before the first redial,
                                        doubling per attempt, cap 5 s   [250]
@@ -463,6 +495,9 @@ fn serve_main(args: &[String]) -> Result<()> {
     }
     if o.max_lag.is_some() && o.subscribers.is_none() {
         bail!("--max-lag is a broadcast lag budget; it needs --subscribers");
+    }
+    if o.label.is_some() {
+        bail!("--label names a relay node: pass it to iprof relay");
     }
     if o.workloads.len() != 1 {
         bail!("serve publishes exactly one workload run (got {})", o.workloads.len());
@@ -670,6 +705,9 @@ fn attach_main(args: &[String]) -> Result<()> {
     if o.wire.is_some() {
         bail!("--wire belongs to the publisher: pass it to iprof serve (the subscriber learns the version from the preamble)");
     }
+    if o.label.is_some() {
+        bail!("--label names a relay node: pass it to iprof relay");
+    }
     // Every TCP attach goes through the resumable path: a writable
     // connection is what lets us answer a resumable publisher's Hello
     // with a Resume frame, and --reconnect N adds redial-with-backoff.
@@ -783,6 +821,168 @@ fn attach_main(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `iprof relay <listen-addr> <addr> [<addr>...]`: aggregate N downstream
+/// publishers into one mirror hub and re-publish the merged union
+/// upstream as a resumable broadcast — the interior node of a collection
+/// tree. Always speaks wire v3 upstream: per-leaf accounting travels as
+/// `Origin` frames, which do not exist on the frozen v2 wire.
+fn relay_main(args: &[String]) -> Result<()> {
+    let addrs: Vec<&String> = args.iter().take_while(|a| !a.starts_with('-')).collect();
+    if addrs.len() < 2 {
+        bail!(
+            "relay needs a listen address and at least one downstream publisher \
+             (e.g. iprof relay 127.0.0.1:7100 127.0.0.1:7007 127.0.0.1:7008)"
+        );
+    }
+    let o = parse_args(&args[addrs.len()..])?;
+    if !o.workloads.is_empty() {
+        bail!("relay forwards remote runs; it takes no workload");
+    }
+    if o.live || o.refresh_ms.is_some() || o.live_strict {
+        bail!("--live/--refresh/--live-strict belong to the viewer: pass them to iprof attach");
+    }
+    if o.wire.is_some() {
+        bail!(
+            "--wire belongs to the edge publisher: a relay's upstream wire is always v3 \
+             (Origin frames do not exist on v2)"
+        );
+    }
+    if o.kill_after.is_some() {
+        bail!("--kill-after is publisher fault injection: pass it to iprof serve");
+    }
+    let listen = addrs[0];
+    let down = &addrs[1..];
+    // Downstream side: the same resumable fan-in `iprof attach` uses.
+    let policy = thapi::remote::ReconnectPolicy {
+        attempts: o.reconnect.unwrap_or(0),
+        backoff: std::time::Duration::from_millis(o.backoff_ms.unwrap_or(250)),
+    };
+    let connectors: Vec<_> = down
+        .iter()
+        .map(|addr| {
+            let addr = addr.to_string();
+            move || {
+                std::net::TcpStream::connect(addr.as_str()).map_err(|e| {
+                    std::io::Error::new(e.kind(), format!("cannot connect to {addr}: {e}"))
+                })
+            }
+        })
+        .collect();
+    let depth = o.live_depth.unwrap_or(LiveConfig::default().channel_depth);
+    // Upstream side: the same broadcast session `iprof serve
+    // --subscribers` runs — resumable by construction.
+    let subscribers = o.subscribers.unwrap_or(1);
+    let budget = o.resume_buffer.unwrap_or(64 << 20);
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("cannot bind {listen}"))?;
+    eprintln!(
+        "iprof: relaying {} downstream publisher(s) on {} — broadcast to {subscribers} \
+         upstream subscriber(s), ring {budget}B{} (reconnect attempts per outage: {})",
+        down.len(),
+        listener.local_addr()?,
+        match o.max_lag {
+            Some(l) => format!(", lag budget {l}B"),
+            None => String::new(),
+        },
+        policy.attempts,
+    );
+    listener
+        .set_nonblocking(true)
+        .context("cannot poll the listener")?;
+    let accept = move || -> std::io::Result<Option<std::net::TcpStream>> {
+        match listener.accept() {
+            Ok((conn, peer)) => {
+                conn.set_nonblocking(false)?;
+                eprintln!("iprof: upstream subscriber {peer} connected");
+                Ok(Some(conn))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    };
+    let tele = o.telemetry();
+    if let Some(t) = &o.telemetry_addr {
+        eprintln!("iprof: telemetry endpoint on {t} (scrape /metrics, or: iprof health {t})");
+    }
+    let r = coordinator::run_relay(
+        connectors,
+        depth,
+        policy,
+        o.label.as_deref(),
+        accept,
+        subscribers,
+        budget,
+        o.max_lag,
+        &tele,
+    )
+    .context("relay failed")?;
+    // Per-downstream accounting mirrors the attach summary; what the
+    // relay re-publishes upstream carries the same ledgers as Origin
+    // frames, so the root sees these numbers too.
+    for (i, (addr, stats)) in down.iter().zip(&r.downstream.per).enumerate() {
+        let origin = &r.origins[i];
+        eprintln!(
+            "iprof: downstream {} ({addr}): wire=v{} streams={} merged={} wire drops={} \
+             reconnects={} resume gaps={}{}",
+            r.hostnames[i],
+            stats.wire_version,
+            origin.channels,
+            origin.received,
+            origin.remote_dropped,
+            stats.reconnects,
+            origin.resume_gaps,
+            match &stats.error {
+                Some(e) => format!(" DIED ({e})"),
+                None => String::new(),
+            },
+        );
+    }
+    eprintln!(
+        "iprof: relay {}: merged={} relayed={} ({} frames, {} batches, {}B, wire v3) \
+         dropped={} connections={} replayed={} gaps={}",
+        r.label,
+        r.local.received,
+        r.publish.events,
+        r.publish.frames,
+        r.publish.batches,
+        r.publish.bytes,
+        r.local.dropped,
+        r.publish.connections,
+        r.publish.replayed,
+        r.publish.gaps,
+    );
+    for s in &r.subscribers {
+        eprintln!(
+            "iprof: subscriber {}: wire=v{} forwarded={} lagged={} demoted={} disconnects={}{}",
+            s.id,
+            s.wire,
+            s.forwarded,
+            s.lagged,
+            s.demoted,
+            s.disconnects,
+            match &s.error {
+                Some(e) => format!(" DIED ({e})"),
+                None => String::new(),
+            },
+        );
+    }
+    for reason in &r.disconnects {
+        eprintln!("iprof: upstream connection lost ({reason}) — other subscribers unaffected");
+    }
+    if r.downstream.failed() > 0 {
+        bail!(
+            "relay: {} of {} downstream publisher connection(s) ended early; \
+             the upstream view is partial",
+            r.downstream.failed(),
+            r.downstream.per.len()
+        );
+    }
+    Ok(())
+}
+
 /// Remote hostnames arrive over the wire; keep only path-safe characters
 /// before they reach a local filename (a malicious publisher must not
 /// get to choose where `emit_reports` writes timeline output).
@@ -852,6 +1052,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("serve") => return serve_main(&args[1..]),
         Some("attach") => return attach_main(&args[1..]),
+        Some("relay") => return relay_main(&args[1..]),
         Some("health") => return health_main(&args[1..]),
         _ => {}
     }
@@ -880,6 +1081,9 @@ fn main() -> Result<()> {
     }
     if o.wire.is_some() {
         bail!("--wire only makes sense with iprof serve");
+    }
+    if o.label.is_some() {
+        bail!("--label only makes sense with iprof relay");
     }
     if o.telemetry_addr.is_some() || o.telemetry_json.is_some() {
         bail!("--telemetry/--telemetry-json only make sense with iprof serve or iprof attach");

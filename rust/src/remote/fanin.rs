@@ -304,7 +304,7 @@ impl FanIn {
             pending.push(Pending { r, connector: None, epoch, wire, hostname, classes });
             announced.push(streams);
         }
-        Self::finish_open(pending, announced, depth, ReconnectPolicy::none())
+        Self::finish_open(pending, announced, depth, ReconnectPolicy::none(), None)
     }
 
     /// Like [`FanIn::open`], but every connection comes from a
@@ -349,6 +349,23 @@ impl FanIn {
         S: Read + Write + Send + 'static,
         C: FnMut() -> io::Result<S> + Send + 'static,
     {
+        Self::open_resumable_labeled(connectors, depth, policy, None)
+    }
+
+    /// [`FanIn::open_resumable`] with an explicit label for the shared
+    /// mirror hub (its hostname, hence the Hello identity of anything
+    /// re-publishing this hub — `iprof relay --label`). `None` keeps
+    /// the default: the first publisher's hostname.
+    pub fn open_resumable_labeled<S, C>(
+        connectors: Vec<C>,
+        depth: usize,
+        policy: ReconnectPolicy,
+        label: Option<&str>,
+    ) -> io::Result<FanIn>
+    where
+        S: Read + Write + Send + 'static,
+        C: FnMut() -> io::Result<S> + Send + 'static,
+    {
         let mut pending = Vec::with_capacity(connectors.len());
         let mut announced = Vec::with_capacity(connectors.len());
         for mut dial in connectors {
@@ -366,7 +383,7 @@ impl FanIn {
             pending.push(Pending { r, connector: Some(dial), epoch, wire, hostname, classes });
             announced.push(streams);
         }
-        Self::finish_open(pending, announced, depth, policy)
+        Self::finish_open(pending, announced, depth, policy, label)
     }
 
     fn finish_open<S, C>(
@@ -374,6 +391,7 @@ impl FanIn {
         announced: Vec<usize>,
         depth: usize,
         policy: ReconnectPolicy,
+        label: Option<&str>,
     ) -> io::Result<FanIn>
     where
         S: Read + Write + Send + 'static,
@@ -390,7 +408,7 @@ impl FanIn {
         // allocated BEFORE any reader runs, in connection order — the
         // shared channel layout is the concatenation of the publishers'
         // stream sets, which is the whole byte-identity story.
-        let hub = LiveHub::new(&pending[0].hostname, depth, false);
+        let hub = LiveHub::new(label.unwrap_or(&pending[0].hostname), depth, false);
         let origins: Vec<usize> = pending
             .iter()
             .zip(&announced)
@@ -425,6 +443,12 @@ impl FanIn {
                     // The batch dictionary is connection state on both
                     // ends: it resets on every resumed connection.
                     let mut dict = frame::BatchDict::new();
+                    // Leaf-hostname stamps learned from a relay's Origin
+                    // frames, per remote stream. Session state, not
+                    // connection state: a resumed relay re-sends its
+                    // entries anyway (monotone), and the mapping can only
+                    // be refined, never invalidated.
+                    let mut overrides: HashMap<u32, (usize, Arc<str>)> = HashMap::new();
                     // Progress bound: each successful resume refills the
                     // per-outage dial budget, so a pathological publisher
                     // that always completes the handshake and then dies
@@ -437,7 +461,7 @@ impl FanIn {
                     let res = loop {
                         match pump(
                             &mut r, &hub2, origin, &classes, &host_arc, depth, &mut map,
-                            &mut dict, &mut stats, &mut delivered, &tele,
+                            &mut dict, &mut overrides, &mut stats, &mut delivered, &tele,
                         ) {
                             Ok(()) => break Ok(()),
                             Err(e) => {
@@ -646,6 +670,7 @@ fn pump(
     depth: usize,
     map: &mut Vec<usize>,
     dict: &mut frame::BatchDict,
+    overrides: &mut HashMap<u32, (usize, Arc<str>)>,
     stats: &mut RemoteStats,
     delivered: &mut Vec<u64>,
     tele: &ReaderTelemetry,
@@ -676,6 +701,13 @@ fn pump(
         if frame::is_event_batch(&body) {
             let mut unknown = 0u64;
             batch.clear();
+            // Stamp with the leaf hostname when a relay's Origin frame
+            // claimed this stream; the connection's Hello hostname
+            // otherwise. A batch is single-stream, so one peek decides
+            // the stamp for every event in it.
+            let stamp = frame::batch_stream(&body)
+                .and_then(|s| overrides.get(&s))
+                .map_or_else(|| hostname.clone(), |(_, h)| h.clone());
             let (stream, n) =
                 frame::decode_batch_into(&body, dict, |ts, rank, tid, class_id, fields| {
                     match classes.get(&class_id) {
@@ -683,7 +715,7 @@ fn pump(
                             ts,
                             rank,
                             tid,
-                            hostname: hostname.clone(),
+                            hostname: stamp.clone(),
                             class: class.clone(),
                             fields: std::mem::take(fields),
                         }),
@@ -729,13 +761,16 @@ fn pump(
                 let idx = translate(hub, origin, map, stream)?;
                 stats.events = stats.events.saturating_add(1);
                 tele.events.store_max(stats.events);
+                let stamp = overrides
+                    .get(&stream)
+                    .map_or_else(|| hostname.clone(), |(_, h)| h.clone());
                 match classes.get(&event.class_id) {
                     Some(class) => {
                         let msg = EventMsg {
                             ts: event.ts,
                             rank: event.rank,
                             tid: event.tid,
-                            hostname: hostname.clone(),
+                            hostname: stamp,
                             class: class.clone(),
                             fields: event.fields,
                         };
@@ -804,6 +839,35 @@ fn pump(
                     delivered.resize(s + 1, 0);
                 }
                 delivered[s] = delivered[s].saturating_add(missed);
+            }
+            Frame::Origin { path, hostname: leaf, streams, dropped, resume_gaps, eos } => {
+                // An aggregating relay's per-leaf accounting entry
+                // (hierarchical origin id): book it as a sub-origin of
+                // this connection's origin, keyed by path and
+                // max-merged, so drop/eos/gap ledgers and telemetry
+                // series survive re-aggregation per LEAF — two relays
+                // each forwarding a "0:nodeA" land in different parent
+                // books and can never alias. The streams are in the
+                // relay's id space, i.e. this connection's.
+                for &s in &streams {
+                    if s >= frame::MAX_STREAMS {
+                        return Err(
+                            FrameError::Malformed("stream index exceeds MAX_STREAMS").into()
+                        );
+                    }
+                }
+                hub.record_origin_child(origin, &path, &leaf, &streams, dropped, resume_gaps, eos);
+                // Remember the leaf hostname per stream for event
+                // stamping — deepest path wins, so a leaf's own entry
+                // beats its relay's umbrella entry in a 3-level tree.
+                let depth_of = path.matches('/').count();
+                let host: Arc<str> = Arc::from(leaf.as_str());
+                for &s in &streams {
+                    let keep = overrides.get(&s).is_some_and(|&(d, _)| d > depth_of);
+                    if !keep {
+                        overrides.insert(s, (depth_of, host.clone()));
+                    }
+                }
             }
         }
     }

@@ -100,6 +100,7 @@ const T_EOS: u8 = 0x07;
 const T_RESUME: u8 = 0x08;
 const T_RESUME_GAP: u8 = 0x09;
 const T_EVENT_BATCH: u8 = 0x0a; // v3 only
+const T_ORIGIN: u8 = 0x0b; // v3 only, emitted by relays
 
 // Field value tags inside Event frames.
 const F_U64: u8 = 0;
@@ -287,6 +288,35 @@ pub enum Frame {
         stream: u32,
         /// Events irrecoverably lost from the ring for this stream.
         missed: u64,
+    },
+    /// Per-leaf accounting for one origin the sender aggregates (v3
+    /// only; emitted by relays, `iprof relay`). The sender's own
+    /// identity travels in its Hello; each Origin frame describes one
+    /// *downstream* publisher whose streams are folded into the
+    /// sender's stream space, so per-leaf drop/eos/gap ledgers survive
+    /// aggregation instead of collapsing into the relay's totals.
+    ///
+    /// `path` is the hierarchical origin id (`docs/PROTOCOL.md`
+    /// § Hierarchical origin ids): the sender's local
+    /// `<index>:<label>` origin name, extended with `/`-separated
+    /// segments for origins the downstream node was itself relaying.
+    /// All counters are cumulative and monotone — the frame is re-sent
+    /// whenever a value changes and the receiver max-merges, exactly
+    /// like [`Frame::Drops`].
+    Origin {
+        /// Hierarchical origin id, unique among the sender's frames.
+        path: String,
+        /// The leaf publisher's hostname (stamped on its messages).
+        hostname: String,
+        /// Sender stream ids that carry this origin's events.
+        streams: Vec<u32>,
+        /// Cumulative publisher-side drops attributed to this origin.
+        dropped: u64,
+        /// Cumulative events this origin lost to resume gaps.
+        resume_gaps: u64,
+        /// The origin's own Eos totals `(received, dropped)`, once it
+        /// ended cleanly; `None` while it is live (or if it died).
+        eos: Option<(u64, u64)>,
     },
 }
 
@@ -518,6 +548,26 @@ pub fn encode(frame: &Frame, out: &mut Vec<u8>) {
                 prev_ts = ev.ts;
             }
         }
+        Frame::Origin { path, hostname, streams, dropped, resume_gaps, eos } => {
+            out.push(T_ORIGIN);
+            put_str16(out, path);
+            put_str16(out, hostname);
+            let n = streams.len().min(MAX_STREAMS as usize);
+            put_u32(out, n as u32);
+            for s in &streams[..n] {
+                put_u32(out, *s);
+            }
+            put_u64(out, *dropped);
+            put_u64(out, *resume_gaps);
+            match eos {
+                Some((received, eos_dropped)) => {
+                    out.push(1);
+                    put_u64(out, *received);
+                    put_u64(out, *eos_dropped);
+                }
+                None => out.push(0),
+            }
+        }
     }
     let body_len = (out.len() - len_at - 4) as u32;
     out[len_at..len_at + 4].copy_from_slice(&body_len.to_le_bytes());
@@ -732,6 +782,27 @@ pub fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
             }
             Frame::EventBatch { stream, events }
         }
+        T_ORIGIN => {
+            let path = b.str16()?;
+            let hostname = b.str16()?;
+            let n = b.u32()?;
+            if n > MAX_STREAMS {
+                return Err(FrameError::Malformed("origin stream count exceeds MAX_STREAMS"));
+            }
+            let n = n as usize;
+            let mut streams = Vec::with_capacity(n.min(256));
+            for _ in 0..n {
+                streams.push(b.u32()?);
+            }
+            let dropped = b.u64()?;
+            let resume_gaps = b.u64()?;
+            let eos = match b.u8()? {
+                0 => None,
+                1 => Some((b.u64()?, b.u64()?)),
+                _ => return Err(FrameError::Malformed("origin eos flag must be 0 or 1")),
+            };
+            Frame::Origin { path, hostname, streams, dropped, resume_gaps, eos }
+        }
         other => return Err(FrameError::BadFrameType(other)),
     };
     b.finish()?;
@@ -839,6 +910,18 @@ impl BatchDict {
 /// materializing a [`Frame`].
 pub fn is_event_batch(body: &[u8]) -> bool {
     body.first() == Some(&T_EVENT_BATCH)
+}
+
+/// Peek the stream id of a raw [`Frame::EventBatch`] body without
+/// decoding any events — `None` when `body` is not a complete batch
+/// header. A fan-in pump uses this to pick the per-stream hostname
+/// override *before* the zero-copy batch decode runs (the decode only
+/// yields the stream id on return, after every event was emitted).
+pub fn batch_stream(body: &[u8]) -> Option<u32> {
+    if !is_event_batch(body) || body.len() < 5 {
+        return None;
+    }
+    Some(u32::from_le_bytes(body[1..5].try_into().unwrap()))
 }
 
 /// Decode an [`Frame::EventBatch`] body directly into a consumer, with

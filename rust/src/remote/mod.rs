@@ -106,19 +106,35 @@
 //!    broadcast is server-side, invisible to subscribers (pinned by
 //!    `rust/tests/broadcast.rs`).
 //!
+//! And an eighth with hierarchical relay fan-in (`iprof relay
+//! <listen-addr> <addr>...`):
+//!
+//! 8. **Collection composes into trees.** A [`relay`] node is a fan-in
+//!    subscriber and a broadcast publisher at once: it drains N
+//!    downstream publishers into its mirror hub and re-publishes the
+//!    merged union upstream through the one shared [`relay::HubPump`].
+//!    Per-leaf identity travels as [`Frame::Origin`] entries with
+//!    *path-style* hierarchical origin ids (`0:relay1/0:nodeA`), so the
+//!    root books drops/eos/resume-gap ledgers and telemetry series per
+//!    leaf — never aliased across relays — and stamps merged events
+//!    with leaf hostnames: a 2-level tree merges byte-identically to a
+//!    flat N-way attach (pinned by `rust/tests/relay.rs`).
+//!
 //! Entry points: [`crate::coordinator::run_serve`] /
 //! [`crate::coordinator::run_serve_resumable`] /
 //! [`crate::coordinator::run_attach`] /
 //! [`crate::coordinator::run_fanin`] /
-//! [`crate::coordinator::run_fanin_resumable`] (the `iprof serve` /
-//! `iprof attach` CLI — see `docs/GUIDE.md` for the operator view), or
-//! [`publish`] / [`Publisher`] + [`Attachment`] / [`FanIn`] directly
-//! for custom transports (anything `Read`/`Write`).
+//! [`crate::coordinator::run_fanin_resumable`] /
+//! [`crate::coordinator::run_relay`] (the `iprof serve` /
+//! `iprof attach` / `iprof relay` CLI — see `docs/GUIDE.md` for the
+//! operator view), or [`publish`] / [`Publisher`] + [`Attachment`] /
+//! [`FanIn`] directly for custom transports (anything `Read`/`Write`).
 
 pub mod attach;
 pub mod fanin;
 pub mod frame;
 pub mod publish;
+pub mod relay;
 
 pub use attach::Attachment;
 pub use fanin::{FanIn, FanInStats, ReconnectPolicy, RemoteStats};
@@ -131,3 +147,4 @@ pub use publish::{
     publish, publish_with, Broadcaster, KillAfter, PublishStats, Publisher, ServeOutcome,
     SubscriberStats,
 };
+pub use relay::{origin_snapshot, HubPump, OriginWire};

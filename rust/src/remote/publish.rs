@@ -59,6 +59,7 @@
 //! [replay ring]: Publisher#replay-ring-semantics
 
 use super::frame::{self, BatchEvent, BatchKey, Frame, FrameError, WireEvent};
+use super::relay::{origin_snapshot, HubPump, OriginWire};
 use crate::live::{ForwardCursor, LiveHub};
 use crate::telemetry::{Counter, Registry};
 use crate::tracer::btf::generate_metadata;
@@ -639,10 +640,11 @@ pub enum ServeOutcome {
 /// are monotone or idempotent, so each new connection just re-reports
 /// the current values ([`ForwardCursor::resync`]).
 pub struct Publisher {
-    hub: Arc<LiveHub>,
+    /// The session's hub drain — the one shared pump implementation
+    /// ([`HubPump`]), owning the session's single forward cursor.
+    pump: HubPump,
     epoch: u64,
     ring: ReplayRing,
-    cursor: ForwardCursor,
     stats: PublishStats,
     wire: u32,
 }
@@ -656,10 +658,9 @@ impl Publisher {
     pub fn new(hub: Arc<LiveHub>, epoch: u64, resume_buffer: usize) -> Publisher {
         assert!(epoch != 0, "epoch 0 means non-resumable; pick a nonzero session epoch");
         Publisher {
-            hub,
+            pump: HubPump::new(hub),
             epoch,
             ring: ReplayRing::new(resume_buffer),
-            cursor: ForwardCursor::default(),
             stats: PublishStats::default(),
             wire: frame::VERSION,
         }
@@ -713,18 +714,19 @@ impl Publisher {
     /// connection re-reports current state via
     /// [`ForwardCursor::resync`].
     pub fn drain_to_ring(&mut self) {
-        while let Some(batch) = self.hub.try_forward_batch(&mut self.cursor) {
+        let ring = &mut self.ring;
+        self.pump.drain_now(|batch| {
             for (idx, msg) in batch.events {
-                self.ring.push(idx, encode_event(idx, msg));
+                ring.push(idx, encode_event(idx, msg));
             }
-        }
+        });
         self.sync_ring_telemetry();
     }
 
     /// Mirror the ring's occupancy and lifetime evictions into the
     /// registry (occupancy is a gauge — it shrinks on eviction).
     fn sync_ring_telemetry(&self) {
-        let reg = self.hub.telemetry();
+        let reg = self.pump.hub().telemetry();
         reg.ring_bytes.set(self.ring.total as u64);
         reg.ring_evicted_events.store_max(self.ring.evicted);
     }
@@ -750,12 +752,12 @@ impl Publisher {
     fn serve_inner<S: Read + Write>(&mut self, conn: &mut S) -> io::Result<()> {
         // Handshake. The Hello goes out unbuffered so the subscriber can
         // answer; the streaming phase below writes whole rounds.
-        let announced = self.hub.stats().channels;
+        let announced = self.pump.hub().stats().channels;
         let mut head = Vec::with_capacity(256);
         frame::write_preamble_version(&mut head, self.wire)?;
         frame::encode(
             &Frame::Hello {
-                hostname: self.hub.hostname().to_string(),
+                hostname: self.pump.hub().hostname().to_string(),
                 metadata: generate_metadata(&[]),
                 streams: announced as u32,
                 epoch: self.epoch,
@@ -766,8 +768,8 @@ impl Publisher {
         conn.flush()?;
         self.stats.bytes = self.stats.bytes.saturating_add(head.len() as u64);
         self.stats.frames = self.stats.frames.saturating_add(1);
-        self.hub.telemetry().publish_rounds.inc(); // the handshake round
-        self.stats.sync_telemetry(self.hub.telemetry());
+        self.pump.hub().telemetry().publish_rounds.inc(); // the handshake round
+        self.stats.sync_telemetry(self.pump.hub().telemetry());
 
         // The one subscriber→publisher frame: where to resume from.
         let Frame::Resume { epoch, cursors } = frame::read_frame(conn)? else {
@@ -788,7 +790,7 @@ impl Publisher {
             .frames
             .saturating_add(replay.replayed)
             .saturating_add(replay.gap_frames);
-        self.stats.sync_telemetry(self.hub.telemetry());
+        self.stats.sync_telemetry(self.pump.hub().telemetry());
         conn.flush()?;
 
         // Re-report current watermarks/drops/closes from scratch: all
@@ -796,9 +798,9 @@ impl Publisher {
         // baseline resynchronizes everything that is not an event. The
         // batch dictionary is per-connection state on both ends, so it
         // starts empty here too.
-        self.cursor.resync(announced);
+        self.pump.resync(announced);
         let mut enc = EventEncoder::new(self.wire);
-        while let Some(batch) = self.hub.next_forward_batch(&mut self.cursor) {
+        while let Some(batch) = self.pump.next() {
             let round = EncodedRound::encode(&mut self.stats, &mut enc, batch, true);
             // Write the round, then ring EVERY popped event — even when
             // the wire just died mid-round: popped events exist nowhere
@@ -814,17 +816,17 @@ impl Publisher {
                 Err(e) => return Err(e),
             }
             conn.flush()?;
-            self.hub.telemetry().publish_rounds.inc();
-            self.stats.sync_telemetry(self.hub.telemetry());
+            self.pump.hub().telemetry().publish_rounds.inc();
+            self.stats.sync_telemetry(self.pump.hub().telemetry());
         }
 
-        let totals = self.hub.stats();
+        let totals = self.pump.hub().stats();
         let eos = encode_frame(&Frame::Eos { received: totals.received, dropped: totals.dropped });
         conn.write_all(&eos)?;
         conn.flush()?;
         self.stats.bytes = self.stats.bytes.saturating_add(eos.len() as u64);
         self.stats.frames = self.stats.frames.saturating_add(1);
-        self.stats.sync_telemetry(self.hub.telemetry());
+        self.stats.sync_telemetry(self.pump.hub().telemetry());
         Ok(())
     }
 }
@@ -947,6 +949,11 @@ struct BroadcastShared {
     /// payload every subscriber finishes with.
     finished: Option<(u64, u64)>,
     slots: Vec<SubscriberSlot>,
+    /// Relay mode only ([`Broadcaster::with_origin_relay`]): the
+    /// per-leaf accounting entries mirrored from the hub, max-merged by
+    /// path. Monotone like the board, so every subscriber delta-diffs
+    /// against its own [`BoardView`] copy. Empty outside relay mode.
+    origins: Vec<OriginWire>,
 }
 
 /// One frame round bound for one subscriber's wire, built under the
@@ -993,13 +1000,17 @@ struct SubscriberRound {
 /// unregistered from entitlement immediately, on every exit path, so a
 /// crashed viewer can never pin the ring.
 pub struct Broadcaster {
-    hub: Arc<LiveHub>,
+    /// The session's hub drain — the one shared pump implementation
+    /// ([`HubPump`]), owning the session's single forward cursor:
+    /// forward batches are destructive, so exactly one drain path owns
+    /// them.
+    pump: HubPump,
     epoch: u64,
     max_lag: usize,
-    /// The hub-facing forward cursor — one per session, like
-    /// [`Publisher`]: forward batches are destructive, so exactly one
-    /// drain path owns them.
-    cursor: Mutex<ForwardCursor>,
+    /// Re-publish the hub's per-origin accounting as [`Frame::Origin`]
+    /// frames on every v3 subscriber wire (`iprof relay`). See
+    /// [`Broadcaster::with_origin_relay`].
+    origin_relay: bool,
     shared: Mutex<BroadcastShared>,
     /// Signaled after every applied batch, at finish, and when a slot
     /// unregisters: subscriber threads block here between rounds.
@@ -1016,15 +1027,16 @@ impl Broadcaster {
     pub fn new(hub: Arc<LiveHub>, epoch: u64, resume_buffer: usize) -> Broadcaster {
         assert!(epoch != 0, "epoch 0 means non-resumable; pick a nonzero session epoch");
         Broadcaster {
-            hub,
+            pump: HubPump::new(hub),
             epoch,
             max_lag: usize::MAX,
-            cursor: Mutex::new(ForwardCursor::default()),
+            origin_relay: false,
             shared: Mutex::new(BroadcastShared {
                 ring: ReplayRing::new(resume_buffer),
                 board: StreamBoard::default(),
                 finished: None,
                 slots: Vec::new(),
+                origins: Vec::new(),
             }),
             progress: Condvar::new(),
         }
@@ -1038,6 +1050,22 @@ impl Broadcaster {
         self
     }
 
+    /// Publish this hub's per-origin accounting upstream: before every
+    /// applied batch (and once more at seal) the hub's origins — and
+    /// their sub-origins, for deeper trees — are mirrored as monotone
+    /// [`OriginWire`] entries and delivered to every **v3** subscriber
+    /// as [`Frame::Origin`] frames, paths extended with this node's own
+    /// origin names (`0:nodeA` → `0:relay1/0:nodeA` one hop up). This
+    /// is what makes `iprof relay` lossless for accounting: the root
+    /// keeps one drops/eos/gap ledger and one telemetry series *per
+    /// leaf*, not per relay, and stamps merged events with leaf
+    /// hostnames. A v2 subscriber of the same session is unaffected
+    /// (the frame type does not exist on its wire).
+    pub fn with_origin_relay(mut self) -> Broadcaster {
+        self.origin_relay = true;
+        self
+    }
+
     /// The session epoch advertised in every Hello.
     pub fn epoch(&self) -> u64 {
         self.epoch
@@ -1047,16 +1075,15 @@ impl Broadcaster {
     /// one destructive hub consumer. Run on its own thread; it never
     /// blocks on any subscriber's socket.
     pub fn pump(&self) {
-        loop {
-            let mut cursor = self.cursor.lock().unwrap();
-            let batch = self.hub.next_forward_batch(&mut cursor);
-            drop(cursor);
-            match batch {
-                Some(batch) => self.apply(batch),
-                None => break,
-            }
-        }
-        let totals = self.hub.stats();
+        self.pump.run(|batch| {
+            self.refresh_origins();
+            self.apply(batch);
+        });
+        // Ledger-only updates (a late downstream ResumeGap, an Eos)
+        // ride no forward batch: refresh once more so the per-leaf
+        // accounting is exact before any subscriber sees Eos.
+        self.refresh_origins();
+        let totals = self.pump.hub().stats();
         let mut g = self.shared.lock().unwrap();
         g.finished = Some((totals.received, totals.dropped));
         drop(g);
@@ -1069,14 +1096,48 @@ impl Broadcaster {
     /// use to interleave pushes with subscriber progress. Does not mark
     /// the session finished; [`Broadcaster::pump`] does that.
     pub fn drain_to_ring(&self) {
-        loop {
-            let mut cursor = self.cursor.lock().unwrap();
-            let batch = self.hub.try_forward_batch(&mut cursor);
-            drop(cursor);
-            match batch {
-                Some(batch) => self.apply(batch),
-                None => break,
+        self.pump.drain_now(|batch| {
+            self.refresh_origins();
+            self.apply(batch);
+        });
+    }
+
+    /// Mirror the hub's per-origin accounting into the shared state as
+    /// wire-ready [`OriginWire`] entries (relay mode only, no-op
+    /// otherwise). Runs *before* each applied batch: an origin's entry
+    /// (with its stream mapping and leaf hostname) is therefore
+    /// board-visible no later than the first event it carries, so any
+    /// round delivering an event also delivers or was preceded by the
+    /// Origin entry naming its stream — the ordering leaf-hostname
+    /// stamping at the receiver relies on. Max-merge keeps every ledger
+    /// monotone under racing snapshots.
+    fn refresh_origins(&self) {
+        if !self.origin_relay {
+            return;
+        }
+        let snapshot = origin_snapshot(self.pump.hub());
+        if snapshot.is_empty() {
+            return;
+        }
+        let mut g = self.shared.lock().unwrap();
+        let mut changed = false;
+        for e in snapshot {
+            match g.origins.iter_mut().find(|o| o.path == e.path) {
+                Some(o) => {
+                    if *o != e {
+                        o.merge(e);
+                        changed = true;
+                    }
+                }
+                None => {
+                    g.origins.push(e);
+                    changed = true;
+                }
             }
+        }
+        drop(g);
+        if changed {
+            self.progress.notify_all();
         }
     }
 
@@ -1160,7 +1221,7 @@ impl Broadcaster {
     }
 
     fn sync_ring_telemetry(&self, ring: &ReplayRing) {
-        let reg = self.hub.telemetry();
+        let reg = self.pump.hub().telemetry();
         reg.ring_bytes.set(ring.total as u64);
         reg.ring_evicted_events.store_max(ring.evicted);
     }
@@ -1227,7 +1288,7 @@ impl Broadcaster {
         let mut guard = SlotGuard {
             bc: self,
             id,
-            tele: SubscriberTelemetry::register(self.hub.telemetry(), id),
+            tele: SubscriberTelemetry::register(self.pump.hub().telemetry(), id),
             completed: false,
         };
         match self.serve_slot(conn, wire, id, &guard.tele) {
@@ -1258,7 +1319,7 @@ impl Broadcaster {
         frame::write_preamble_version(&mut head, wire)?;
         frame::encode(
             &Frame::Hello {
-                hostname: self.hub.hostname().to_string(),
+                hostname: self.pump.hub().hostname().to_string(),
                 metadata: generate_metadata(&[]),
                 streams: hello_streams as u32,
                 epoch: self.epoch,
@@ -1273,7 +1334,7 @@ impl Broadcaster {
             slot.stats.frames = slot.stats.frames.saturating_add(1);
             slot.stats.bytes = slot.stats.bytes.saturating_add(head.len() as u64);
         }
-        self.hub.telemetry().publish_rounds.inc();
+        self.pump.hub().telemetry().publish_rounds.inc();
 
         // The one subscriber→publisher frame: where to resume from.
         let Frame::Resume { epoch, cursors } = frame::read_frame(&mut conn)? else {
@@ -1331,7 +1392,7 @@ impl Broadcaster {
                 slot.stats.bytes = slot.stats.bytes.saturating_add(wrote);
                 tele.sync(&slot.stats);
             }
-            self.hub.telemetry().publish_rounds.inc();
+            self.pump.hub().telemetry().publish_rounds.inc();
             if round.done {
                 return Ok(());
             }
@@ -1360,13 +1421,28 @@ impl Broadcaster {
         replay_round: bool,
         round: &mut SubscriberRound,
     ) {
-        let BroadcastShared { ring, board, finished, slots } = shared;
+        let BroadcastShared { ring, board, finished, slots, origins } = shared;
         let slot = &mut slots[id];
         if board.announced > view.announced {
             round.frames.push(encode_frame(&Frame::Streams { count: board.announced as u32 }));
             view.announced = board.announced;
         }
         view.ensure(board.announced);
+        // Per-leaf accounting (relay mode): changed Origin entries go
+        // out before this round's events, v3 wires only — the frame
+        // type does not exist on a v2 wire. Entries are monotone, so
+        // "changed vs this connection's view" is a plain comparison; a
+        // fresh slot (join or resume) re-receives every entry.
+        if !origins.is_empty() && matches!(enc, EventEncoder::Batched(_)) {
+            for o in origins.iter() {
+                if view.origins.iter().find(|v| v.path == o.path) != Some(o) {
+                    round.frames.push(encode_frame(&o.frame()));
+                }
+            }
+            if view.origins != *origins {
+                view.origins = origins.clone();
+            }
+        }
         while slot.cursors.len() < ring.streams.len() {
             slot.cursors.push(0);
         }
@@ -1456,11 +1532,21 @@ struct BoardView {
     watermark: Vec<u64>,
     dropped: Vec<u64>,
     closed: Vec<bool>,
+    /// The Origin entries this wire has been told (relay mode): a fresh
+    /// view (new connection or resume) re-receives every entry, which
+    /// is safe — they max-merge at the receiver.
+    origins: Vec<OriginWire>,
 }
 
 impl BoardView {
     fn new(announced: usize) -> BoardView {
-        BoardView { announced, watermark: Vec::new(), dropped: Vec::new(), closed: Vec::new() }
+        BoardView {
+            announced,
+            watermark: Vec::new(),
+            dropped: Vec::new(),
+            closed: Vec::new(),
+            origins: Vec::new(),
+        }
     }
 
     fn ensure(&mut self, n: usize) {

@@ -1,0 +1,277 @@
+//! Hierarchical relay fan-in: the hub→wire pump every publisher shares,
+//! plus the per-leaf accounting that lets collection compose into trees
+//! (`iprof relay <listen-addr> <downstream-addr>...`).
+//!
+//! A relay node is simultaneously a [`FanIn`](super::fanin::FanIn)
+//! subscriber — draining N downstream publishers into one mirror
+//! [`LiveHub`] as namespaced origins — and a resumable
+//! [`Broadcaster`](super::publish::Broadcaster) re-publishing the merged
+//! union upstream. Two pieces make that composition exact instead of
+//! lossy:
+//!
+//! 1. **One pump.** [`HubPump`] is the single implementation of the
+//!    "drain forward batches out of a hub" loop that
+//!    [`Publisher`](super::publish::Publisher) and
+//!    [`Broadcaster`](super::publish::Broadcaster) both previously
+//!    carried as private near-duplicates (`drain_to_ring`). Forward
+//!    batches are destructive — exactly one cursor may own them — so
+//!    the pump owns the [`ForwardCursor`] behind a mutex and callers
+//!    only say what to do with each popped batch.
+//! 2. **Hierarchical origin ids.** A relay's upstream connection
+//!    carries one [`Frame::Origin`] per aggregated publisher
+//!    (`docs/PROTOCOL.md` § Hierarchical origin ids): path-style ids
+//!    (`0:relay1/0:nodeA`) plus the leaf's hostname, stream mapping and
+//!    drop/eos/gap ledgers. The receiver books them as sub-origins of
+//!    the relay's origin ([`LiveHub::record_origin_child`]) and stamps
+//!    forwarded events with the *leaf* hostname — so a 2-level tree
+//!    merges byte-identically to a flat N-way attach and per-leaf
+//!    accounting survives at the root instead of aliasing on re-indexed
+//!    origin labels.
+//!
+//! [`origin_snapshot`] builds the wire-ready entries from a hub;
+//! re-sending on change plus max-merge on receipt make the frames
+//! idempotent and reordering-tolerant, exactly like [`Frame::Drops`].
+//! Ledger updates ride the next forward batch (eventual between
+//! batches), and the broadcaster refreshes once more at seal — so the
+//! totals are exact by Eos.
+
+use super::frame::Frame;
+use crate::live::{ForwardBatch, ForwardCursor, LiveHub};
+use crate::telemetry::origin_series_label;
+use std::sync::{Arc, Mutex};
+
+/// The one hub→wire forward pump (see module docs). Wraps the hub's
+/// destructive [`LiveHub::try_forward_batch`] /
+/// [`LiveHub::next_forward_batch`] tee behind the session's single
+/// [`ForwardCursor`], so every publisher flavor drains through the same
+/// loop and the cursor can never be shared or duplicated by accident.
+pub struct HubPump {
+    hub: Arc<LiveHub>,
+    /// The session's one forward cursor: forward batches are
+    /// destructive pops, so exactly one drain path owns them.
+    cursor: Mutex<ForwardCursor>,
+}
+
+impl HubPump {
+    /// A pump over `hub` with a fresh cursor (nothing forwarded yet).
+    pub fn new(hub: Arc<LiveHub>) -> HubPump {
+        HubPump { hub, cursor: Mutex::new(ForwardCursor::default()) }
+    }
+
+    /// The hub this pump drains.
+    pub fn hub(&self) -> &Arc<LiveHub> {
+        &self.hub
+    }
+
+    /// Drain whatever the hub holds *right now*, handing each popped
+    /// batch to `apply`; returns once nothing more is immediately
+    /// forwardable (including at end of stream). The cursor lock is
+    /// released around every `apply` call, so appliers may block
+    /// without holding up other pump users.
+    pub fn drain_now(&self, mut apply: impl FnMut(ForwardBatch)) {
+        loop {
+            let mut cursor = self.cursor.lock().unwrap_or_else(|p| p.into_inner());
+            let batch = self.hub.try_forward_batch(&mut cursor);
+            drop(cursor);
+            match batch {
+                Some(batch) => apply(batch),
+                None => break,
+            }
+        }
+    }
+
+    /// Drain until the hub seals, handing each batch to `apply`; the
+    /// blocking flavor of [`HubPump::drain_now`]. Returns on clean end
+    /// of stream (hub sealed, closed and drained).
+    pub fn run(&self, mut apply: impl FnMut(ForwardBatch)) {
+        loop {
+            let mut cursor = self.cursor.lock().unwrap_or_else(|p| p.into_inner());
+            let batch = self.hub.next_forward_batch(&mut cursor);
+            drop(cursor);
+            match batch {
+                Some(batch) => apply(batch),
+                None => break,
+            }
+        }
+    }
+
+    /// Block for the next forward batch, or `None` at clean end of
+    /// stream — for serve loops that interleave a socket write per
+    /// batch instead of a closure.
+    pub fn next(&self) -> Option<ForwardBatch> {
+        let mut cursor = self.cursor.lock().unwrap_or_else(|p| p.into_inner());
+        self.hub.next_forward_batch(&mut cursor)
+    }
+
+    /// Reset the cursor's delta baseline for a new connection that
+    /// already knows about `announced` channels (see
+    /// [`ForwardCursor::resync`]).
+    pub fn resync(&self, announced: usize) {
+        self.cursor.lock().unwrap_or_else(|p| p.into_inner()).resync(announced);
+    }
+}
+
+/// One wire-ready per-leaf accounting entry — the payload of a
+/// [`Frame::Origin`], mirrored into the broadcaster's shared board so
+/// every subscriber can delta-diff it against its own view.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OriginWire {
+    /// Hierarchical origin id (unique per publishing session).
+    pub path: String,
+    /// The leaf publisher's hostname.
+    pub hostname: String,
+    /// *This* publisher's stream ids carrying the leaf's events.
+    pub streams: Vec<u32>,
+    /// Cumulative publisher-side drops attributed to the leaf.
+    pub dropped: u64,
+    /// Cumulative events the leaf lost to resume gaps.
+    pub resume_gaps: u64,
+    /// The leaf's Eos totals, once it ended cleanly.
+    pub eos: Option<(u64, u64)>,
+}
+
+impl OriginWire {
+    /// Max-merge a fresh snapshot entry into this one: every counter
+    /// is cumulative and monotone, so a racing stale value can never
+    /// roll a ledger back (the [`Frame::Drops`] rule).
+    pub fn merge(&mut self, newer: OriginWire) {
+        debug_assert_eq!(self.path, newer.path);
+        if newer.streams.len() > self.streams.len() {
+            self.streams = newer.streams;
+        }
+        if newer.hostname != self.hostname {
+            self.hostname = newer.hostname;
+        }
+        self.dropped = self.dropped.max(newer.dropped);
+        self.resume_gaps = self.resume_gaps.max(newer.resume_gaps);
+        if newer.eos.is_some() {
+            self.eos = newer.eos;
+        }
+    }
+
+    /// The [`Frame::Origin`] carrying this entry.
+    pub fn frame(&self) -> Frame {
+        Frame::Origin {
+            path: self.path.clone(),
+            hostname: self.hostname.clone(),
+            streams: self.streams.clone(),
+            dropped: self.dropped,
+            resume_gaps: self.resume_gaps,
+            eos: self.eos,
+        }
+    }
+}
+
+/// Build the wire-ready per-leaf entries for everything `hub` is
+/// aggregating right now: one entry per origin (the publishers this
+/// node drains directly), plus one per sub-origin relayed *through*
+/// them (deeper tree levels), paths extended with this node's own
+/// `<index>:<label>` origin names. Remote stream ids translate through
+/// each origin's map into this hub's shared stream space, which is the
+/// stream space this node's upstream wire announces.
+///
+/// The emitting node never lists itself — its identity travels in its
+/// Hello, its own channel drops as [`Frame::Drops`], its totals as
+/// [`Frame::Eos`]. Parent and child entries carry *disjoint* ledgers
+/// (the hop into this hub vs loss at and below the leaf), so a
+/// receiver summing a parent with its children never counts one event
+/// twice — see [`crate::live::OriginStats::children`].
+pub fn origin_snapshot(hub: &LiveHub) -> Vec<OriginWire> {
+    let mut out = Vec::new();
+    for (i, o) in hub.origin_stats().into_iter().enumerate() {
+        let map = hub.origin_map(i);
+        let base = origin_series_label(i, &o.label);
+        out.push(OriginWire {
+            path: base.clone(),
+            hostname: o.label.clone(),
+            streams: map.iter().map(|&g| g as u32).collect(),
+            dropped: o.remote_dropped,
+            resume_gaps: o.resume_gaps,
+            eos: o.eos,
+        });
+        for c in o.children {
+            out.push(OriginWire {
+                path: format!("{base}/{}", c.path),
+                hostname: c.hostname.clone(),
+                // the child's ids are the downstream node's stream
+                // space; translate into ours through the origin map
+                streams: c
+                    .streams
+                    .iter()
+                    .filter_map(|&s| map.get(s as usize).map(|&g| g as u32))
+                    .collect(),
+                dropped: c.dropped,
+                resume_gaps: c.resume_gaps,
+                eos: c.eos,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_pump_drains_exactly_once_across_flavors() {
+        let hub = LiveHub::new("pumpnode", 64, false);
+        hub.ensure_channels(1);
+        let class = crate::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap();
+        let msgs: Vec<_> = (0..4)
+            .map(|i| hub.decode(0, 1, class.id, 10 + i, &0u64.to_le_bytes()).unwrap())
+            .collect();
+        hub.push_batch(0, msgs);
+        let pump = HubPump::new(hub.clone());
+        let mut seen = Vec::new();
+        pump.drain_now(|b| seen.extend(b.events.into_iter().map(|(_, m)| m.ts)));
+        assert_eq!(seen, vec![10, 11, 12, 13]);
+        // already drained: the cursor is shared state, not per-call
+        pump.drain_now(|b| seen.extend(b.events.into_iter().map(|(_, m)| m.ts)));
+        assert_eq!(seen.len(), 4);
+        hub.close_all();
+        assert!(pump.next().is_none(), "sealed and drained is a clean end");
+    }
+
+    #[test]
+    fn origin_snapshot_extends_child_paths_and_translates_streams() {
+        let hub = LiveHub::new("rootmirror", 64, false);
+        let o = hub.register_origin("relay1");
+        hub.ensure_origin_channels(o, 2);
+        hub.record_origin_drops(o, 0, 3);
+        // the relay reported one leaf: its stream 1 is our shared 1
+        hub.record_origin_child(o, "0:nodeA", "nodeA", &[0, 1], 7, 2, Some((100, 7)));
+        let snap = origin_snapshot(&hub);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].path, "0:relay1");
+        assert_eq!(snap[0].dropped, 3);
+        assert_eq!(snap[0].streams, vec![0, 1]);
+        assert_eq!(snap[1].path, "0:relay1/0:nodeA");
+        assert_eq!(snap[1].hostname, "nodeA");
+        assert_eq!(snap[1].streams, vec![0, 1], "remote ids translate through the origin map");
+        assert_eq!(snap[1].eos, Some((100, 7)));
+    }
+
+    #[test]
+    fn origin_wire_merge_is_monotone() {
+        let mut a = OriginWire {
+            path: "0:n".into(),
+            hostname: "n".into(),
+            streams: vec![0],
+            dropped: 5,
+            resume_gaps: 1,
+            eos: None,
+        };
+        a.merge(OriginWire {
+            path: "0:n".into(),
+            hostname: "n".into(),
+            streams: vec![0, 1],
+            dropped: 3, // stale: must not roll back
+            resume_gaps: 4,
+            eos: Some((9, 5)),
+        });
+        assert_eq!((a.dropped, a.resume_gaps), (5, 4));
+        assert_eq!(a.streams, vec![0, 1]);
+        assert_eq!(a.eos, Some((9, 5)));
+    }
+}

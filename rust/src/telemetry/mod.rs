@@ -286,6 +286,18 @@ pub fn origin_series_label(origin: usize, label: &str) -> String {
     format!("{origin}:{label}")
 }
 
+/// The label value for a **sub-origin** series: a leaf publisher whose
+/// accounting arrived through a relay (`Frame::Origin`), namespaced
+/// under the relay connection it came through. `path` is the relay's
+/// hierarchical origin id verbatim, so the full label reads e.g.
+/// `0:relay1/0:nodeA` — two relays each forwarding an origin labeled
+/// `0:nodeA` yield `0:relay1/0:nodeA` and `1:relay2/0:nodeA`, distinct
+/// series by construction (the parent prefix is collision-free by the
+/// [`origin_series_label`] index rule, recursively).
+pub fn sub_origin_series_label(origin: usize, label: &str, path: &str) -> String {
+    format!("{}/{path}", origin_series_label(origin, label))
+}
+
 impl Registry {
     /// A fresh registry with every meter at zero.
     pub fn new() -> Arc<Registry> {

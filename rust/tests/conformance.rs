@@ -131,6 +131,18 @@ fn golden_frames() -> Vec<(&'static str, &'static str, Frame)> {
             Frame::ResumeGap { stream: 2, missed: 17 },
         ),
         (
+            "origin",
+            include_str!("fixtures/thrl/origin.hex"),
+            Frame::Origin {
+                path: "0:nodeA".into(),
+                hostname: "nodeA".into(),
+                streams: vec![0, 1],
+                dropped: 7,
+                resume_gaps: 2,
+                eos: Some((100, 7)),
+            },
+        ),
+        (
             "event_batch",
             include_str!("fixtures/thrl/event_batch.hex"),
             Frame::EventBatch {
@@ -247,7 +259,7 @@ fn fixture_corpus_covers_every_frame_kind() {
     let frames = golden_frames();
     let kinds: std::collections::HashSet<std::mem::Discriminant<Frame>> =
         frames.iter().map(|(_, _, f)| std::mem::discriminant(f)).collect();
-    assert_eq!(kinds.len(), 10, "fixture corpus no longer covers every frame kind");
+    assert_eq!(kinds.len(), 11, "fixture corpus no longer covers every frame kind");
 }
 
 #[test]

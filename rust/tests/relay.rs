@@ -1,0 +1,407 @@
+//! Hierarchical relay fan-in tests (`iprof relay <listen> <addr>...`).
+//!
+//! The acceptance bar: a 2-level collection tree — N leaf publishers,
+//! two relays aggregating them, one root attach over the relays —
+//! merges **byte-identically** to a flat N-way attach straight at the
+//! leaves, with per-leaf accounting intact at the root. Identity
+//! travels as [`Frame::Origin`] entries with path-style hierarchical
+//! origin ids, so two relays each forwarding a leaf named `nodeA`
+//! can never collapse into one ledger or telemetry series (the
+//! origin-aliasing bug this suite pins). A resume gap booked at a
+//! relay's downstream hop survives aggregation: the root's per-leaf
+//! gap ledger equals the leaf publisher's own count, and a killed
+//! root↔relay connection resumes byte-identically with the ledgers
+//! re-learned.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use thapi::analysis::EventMsg;
+use thapi::coordinator::{run_relay, RelayReport};
+use thapi::live::{LiveHub, OriginStats};
+use thapi::remote::{
+    encode, FanIn, FanInStats, Frame, KillAfter, PublishStats, Publisher, ReconnectPolicy,
+    ServeOutcome, WireEvent,
+};
+use thapi::tracer::btf::generate_metadata;
+use thapi::tracer::encoder::FieldValue;
+
+/// Decode a registry-class message through `hub` (so the class id
+/// resolves on the attach side exactly like a real consumer's would).
+fn reg_msg(hub: &LiveHub, name: &str, ts: u64, rank: u32, tid: u32) -> EventMsg {
+    let class = thapi::model::class_by_name(name).unwrap();
+    hub.decode(rank, tid, class.id, ts, &0u64.to_le_bytes()).unwrap()
+}
+
+/// A sealed leaf hub: one channel per batch, entry/exit alternating.
+fn leaf_hub(hostname: &str, batches: &[Vec<(u64, u32)>]) -> Arc<LiveHub> {
+    let hub = LiveHub::new(hostname, 64, false);
+    hub.ensure_channels(batches.len());
+    for (i, b) in batches.iter().enumerate() {
+        let msgs = b
+            .iter()
+            .enumerate()
+            .map(|(j, &(ts, tid))| {
+                let name = if j % 2 == 0 {
+                    "lttng_ust_ze:zeInit_entry"
+                } else {
+                    "lttng_ust_ze:zeInit_exit"
+                };
+                reg_msg(&hub, name, ts, 0, tid)
+            })
+            .collect();
+        hub.push_batch(i, msgs);
+    }
+    hub.close_all();
+    hub
+}
+
+/// Serve one resumable leaf session over TCP until the wire reaches
+/// Eos; optionally kill the FIRST connection after `kill_first_after`
+/// written bytes (fault injection) and keep accepting for the resume.
+fn serve_resumable_publisher(
+    listener: TcpListener,
+    hub: Arc<LiveHub>,
+    epoch: u64,
+    resume_buffer: usize,
+    kill_first_after: Option<usize>,
+) -> PublishStats {
+    let mut publisher = Publisher::new(hub, epoch, resume_buffer);
+    let mut kill = kill_first_after;
+    loop {
+        let (conn, _) = listener.accept().unwrap();
+        let conn = KillAfter::new(conn, kill.take().unwrap_or(usize::MAX));
+        match publisher.serve_connection(conn) {
+            ServeOutcome::Complete => return publisher.stats(),
+            ServeOutcome::Lost(_) => continue,
+        }
+    }
+}
+
+/// Bind + serve every leaf on its own thread; returns their addresses
+/// in leaf order (which fixes origin order everywhere downstream).
+fn start_leaves<'scope>(
+    s: &'scope std::thread::Scope<'scope, '_>,
+    leaves: &[(&str, Vec<Vec<(u64, u32)>>)],
+) -> Vec<std::net::SocketAddr> {
+    leaves
+        .iter()
+        .map(|(host, batches)| {
+            let hub = leaf_hub(host, batches);
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            s.spawn(move || serve_resumable_publisher(listener, hub, 0x1EAF, 1 << 20, None));
+            addr
+        })
+        .collect()
+}
+
+/// One relay node over real sockets: fan-in from `downstream`, one
+/// broadcast listener upstream — what `iprof relay` runs. Optionally
+/// kill the FIRST upstream connection after a written-byte budget.
+fn run_relay_node(
+    label: &str,
+    listener: TcpListener,
+    downstream: Vec<std::net::SocketAddr>,
+    subscribers: usize,
+    kill_first_after: Option<usize>,
+) -> std::io::Result<RelayReport> {
+    listener.set_nonblocking(true).unwrap();
+    let mut kill = kill_first_after;
+    let accept = move || -> std::io::Result<Option<KillAfter<TcpStream>>> {
+        match listener.accept() {
+            Ok((conn, _)) => {
+                conn.set_nonblocking(false)?;
+                Ok(Some(KillAfter::new(conn, kill.take().unwrap_or(usize::MAX))))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    };
+    let connectors: Vec<_> = downstream
+        .into_iter()
+        .map(|addr| move || TcpStream::connect(addr))
+        .collect();
+    run_relay(
+        connectors,
+        64,
+        ReconnectPolicy { attempts: 8, backoff: Duration::from_millis(10) },
+        Some(label),
+        accept,
+        subscribers,
+        1 << 20,
+        None,
+        &Default::default(),
+    )
+}
+
+/// Attach to `addrs`, drain the merged union, and report the tuple
+/// stream (leaf hostnames included — the byte-identity payload) plus
+/// the root hub's per-origin accounting.
+#[allow(clippy::type_complexity)]
+fn attach_all(
+    addrs: &[std::net::SocketAddr],
+) -> (Vec<(u64, u32, u32, String)>, Vec<OriginStats>, FanInStats) {
+    let mk = |addr: std::net::SocketAddr| move || TcpStream::connect(addr);
+    let fan = FanIn::open_resumable(
+        addrs.iter().map(|&a| mk(a)).collect::<Vec<_>>(),
+        64,
+        ReconnectPolicy { attempts: 8, backoff: Duration::from_millis(10) },
+    )
+    .unwrap();
+    let merged: Vec<(u64, u32, u32, String)> = fan
+        .source()
+        .map(|m| (m.ts, m.rank, m.tid, m.hostname.to_string()))
+        .collect();
+    let origins = fan.hub().origin_stats();
+    let stats = fan.finish().unwrap();
+    (merged, origins, stats)
+}
+
+/// Wire size of the Hello a publisher sends — the epoch and stream
+/// count are fixed-width, so only the hostname length matters; lets a
+/// test aim its kill budget past the handshake into the event stream.
+fn hello_wire_len(hostname: &str) -> usize {
+    let mut buf = Vec::new();
+    encode(
+        &Frame::Hello {
+            hostname: hostname.into(),
+            metadata: generate_metadata(&[]),
+            streams: 0,
+            epoch: 0,
+        },
+        &mut buf,
+    );
+    buf.len()
+}
+
+/// Wire size of one per-event v2 `Event` frame for our registry
+/// payloads — sizes leaf replay rings in whole events.
+fn event_len() -> usize {
+    let mut buf = Vec::new();
+    encode(
+        &Frame::Event {
+            stream: 0,
+            event: WireEvent {
+                ts: 10,
+                rank: 0,
+                tid: 1,
+                class_id: thapi::model::class_by_name("lttng_ust_ze:zeInit_entry").unwrap().id,
+                fields: vec![FieldValue::U64(0)],
+            },
+        },
+        &mut buf,
+    );
+    buf.len()
+}
+
+// ---------------------------------------------------------------------------
+// Golden: the 2-level tree vs the flat N-way attach, byte for byte —
+// with two leaves deliberately SHARING a hostname across relays, so any
+// origin aliasing under re-aggregation would corrupt the comparison
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_level_tree_merges_byte_identically_to_flat_attach() {
+    // cross-leaf timestamp ties force the merge tie-break; "nodeA"
+    // appears under BOTH relays (each relay's origin 0), so the paths
+    // arriving at the root collide textually ("0:nodeA") and only the
+    // parent-origin namespacing keeps their ledgers apart
+    let leaves: Vec<(&str, Vec<Vec<(u64, u32)>>)> = vec![
+        ("nodeA", vec![vec![(10, 1), (15, 1), (20, 1), (25, 1)], vec![(12, 2), (17, 2)]]),
+        ("leafB", vec![vec![(10, 3), (16, 3), (21, 3)]]),
+        ("nodeA", vec![vec![(11, 4), (15, 4), (22, 4), (30, 4)]]),
+        ("leafD", vec![vec![(10, 5), (25, 5)], vec![(13, 6)]]),
+    ];
+    let total: usize = leaves.iter().map(|(_, b)| b.iter().map(Vec::len).sum::<usize>()).sum();
+
+    // flat reference: one 4-way attach straight at the leaves
+    let (flat, flat_origins, flat_stats) = std::thread::scope(|s| {
+        let addrs = start_leaves(s, &leaves);
+        attach_all(&addrs)
+    });
+    assert_eq!(flat.len(), total);
+    assert_eq!(flat_stats.failed(), 0);
+    assert_eq!(flat_origins.len(), 4);
+    assert!(
+        flat.iter().all(|(_, _, _, h)| h == "nodeA" || h == "leafB" || h == "leafD"),
+        "the reference stamps leaf hostnames"
+    );
+
+    // tree: leaves 0,1 -> relay1; leaves 2,3 -> relay2; root attaches
+    // to the two relays only
+    let (tree, origins, stats, rep1, rep2) = std::thread::scope(|s| {
+        let addrs = start_leaves(s, &leaves);
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let (r1, r2) = (l1.local_addr().unwrap(), l2.local_addr().unwrap());
+        let (down1, down2) = (vec![addrs[0], addrs[1]], vec![addrs[2], addrs[3]]);
+        let h1 = s.spawn(move || run_relay_node("relay1", l1, down1, 1, None));
+        let h2 = s.spawn(move || run_relay_node("relay2", l2, down2, 1, None));
+        let (tree, origins, stats) = attach_all(&[r1, r2]);
+        let rep1 = h1.join().unwrap().unwrap();
+        let rep2 = h2.join().unwrap().unwrap();
+        (tree, origins, stats, rep1, rep2)
+    });
+
+    assert_eq!(stats.failed(), 0);
+    assert_eq!(
+        tree, flat,
+        "a 2-level tree must merge byte-identically to the flat N-way attach"
+    );
+
+    // per-leaf accounting survives aggregation, namespaced per relay
+    assert_eq!(origins.len(), 2, "the root sees two direct origins: the relays");
+    assert_eq!((origins[0].label.as_str(), origins[1].label.as_str()), ("relay1", "relay2"));
+    assert_eq!(origins[0].children.len(), 2, "{:?}", origins[0].children);
+    assert_eq!(origins[1].children.len(), 2, "{:?}", origins[1].children);
+    let (a1, b1) = (&origins[0].children[0], &origins[0].children[1]);
+    let (a2, d2) = (&origins[1].children[0], &origins[1].children[1]);
+    assert_eq!((a1.path.as_str(), a1.hostname.as_str()), ("0:nodeA", "nodeA"));
+    assert_eq!((b1.path.as_str(), b1.hostname.as_str()), ("1:leafB", "leafB"));
+    assert_eq!((a2.path.as_str(), a2.hostname.as_str()), ("0:nodeA", "nodeA"));
+    assert_eq!((d2.path.as_str(), d2.hostname.as_str()), ("1:leafD", "leafD"));
+    // the colliding "0:nodeA" paths stayed SEPARATE ledgers because
+    // they live under different parent origins — the aliasing pin
+    assert_eq!(a1.eos, Some((6, 0)), "leaf Eos totals survive two hops");
+    assert_eq!(a2.eos, Some((4, 0)), "…and do not alias across relays");
+    assert_eq!(b1.eos, Some((3, 0)));
+    assert_eq!(d2.eos, Some((3, 0)));
+    assert_eq!((origins[0].received, origins[1].received), (9, 7));
+    assert!(origins.iter().all(|o| o.known_dropped() == 0), "{origins:?}");
+
+    // each relay's own report agrees with what the root booked
+    assert_eq!(rep1.label, "relay1");
+    assert_eq!(rep1.hostnames, vec!["nodeA".to_string(), "leafB".to_string()]);
+    assert_eq!(rep1.downstream.failed(), 0);
+    assert_eq!((rep1.local.received, rep1.publish.events), (9, 9));
+    assert_eq!(rep2.label, "relay2");
+    assert_eq!(rep2.downstream.failed(), 0);
+    assert_eq!((rep2.local.received, rep2.publish.events), (7, 7));
+}
+
+// ---------------------------------------------------------------------------
+// Ledger propagation: a resume gap booked on a relay's DOWNSTREAM hop
+// arrives at the root as that leaf's child ledger, exactly — the root's
+// per-origin gap ledgers match the leaf publishers' own counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn leaf_resume_gap_survives_aggregation_to_the_root_ledger() {
+    // lossy leaf: 40 events, a replay ring of ~3 event frames, and the
+    // first connection killed 20 events in — the relay's resume MUST
+    // come back with a gap; healthy leaf: 4 clean events
+    let n_events = 40u64;
+    let ev = event_len();
+    let kill_at = 8 + hello_wire_len("lossy") + 20 * ev;
+
+    let lossy = leaf_hub(
+        "lossy",
+        &[(0..n_events).map(|i| (10 + i * 5, 1u32)).collect::<Vec<_>>()],
+    );
+    let healthy_batches = vec![vec![(11u64, 9u32), (16, 9), (21, 9), (26, 9)]];
+
+    let listener_lossy = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr_lossy = listener_lossy.local_addr().unwrap();
+
+    let (origins, stats, rep, leaf_stats) = std::thread::scope(|s| {
+        let leaf = s.spawn(move || {
+            serve_resumable_publisher(listener_lossy, lossy, 0x10557, 3 * ev, Some(kill_at))
+        });
+        let addr_healthy = start_leaves(s, &[("healthy", healthy_batches.clone())])[0];
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let r1 = l1.local_addr().unwrap();
+        let relay = s.spawn(move || {
+            run_relay_node("relay1", l1, vec![addr_lossy, addr_healthy], 1, None)
+        });
+        let (merged, origins, stats) = attach_all(&[r1]);
+        let rep = relay.join().unwrap().unwrap();
+        let leaf_stats = leaf.join().unwrap();
+        // everything outside the gap was merged exactly once at the root
+        let gap = rep.origins[0].resume_gaps;
+        assert_eq!(merged.len() as u64, n_events - gap + 4);
+        (origins, stats, rep, leaf_stats)
+    });
+
+    assert_eq!(stats.failed(), 0, "nobody died: the gap is accounted, not fatal");
+    // the relay saw the gap on its own downstream hop...
+    let gap = rep.origins[0].resume_gaps;
+    assert!(gap > 0, "a 3-event ring cannot cover a 20-event outage: {rep:?}");
+    assert_eq!(leaf_stats.gaps, gap, "relay and leaf publisher agree on the exact loss");
+    assert_eq!(rep.downstream.failed(), 0, "the relay resumed, its fan-in stayed whole");
+
+    // ...and the root books the SAME count against the leaf's child
+    // ledger, not against the relay or the healthy sibling
+    assert_eq!(origins.len(), 1);
+    assert_eq!(origins[0].resume_gaps, 0, "the root↔relay hop itself was lossless");
+    let (lossy_kid, healthy_kid) = (&origins[0].children[0], &origins[0].children[1]);
+    assert_eq!(lossy_kid.path, "0:lossy");
+    assert_eq!(lossy_kid.resume_gaps, gap, "the leaf's gap ledger survives aggregation");
+    assert_eq!(healthy_kid.path, "1:healthy");
+    assert_eq!(healthy_kid.resume_gaps, 0);
+    assert_eq!(healthy_kid.eos, Some((4, 0)));
+    assert_eq!(
+        origins[0].known_dropped(),
+        gap,
+        "root known loss = Σ leaf ledgers, nothing double-counted"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Resume golden: killing the root↔relay connection mid-stream and
+// resuming is byte-identical to the flat attach — the fresh slot
+// re-receives every Origin entry, so stamping and ledgers re-learn
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_relay_upstream_connection_resumes_byte_identically() {
+    let leaves: Vec<(&str, Vec<Vec<(u64, u32)>>)> = vec![
+        (
+            "leafA",
+            vec![
+                (0u64..120).map(|i| (10 + i * 3, 1u32)).collect::<Vec<_>>(),
+                vec![(12, 2), (500, 2)],
+            ],
+        ),
+        ("leafB", vec![(0u64..80).map(|i| (11 + i * 4, 9u32)).collect::<Vec<_>>()]),
+    ];
+    let total: usize = leaves.iter().map(|(_, b)| b.iter().map(Vec::len).sum::<usize>()).sum();
+
+    let (flat, _, flat_stats) = std::thread::scope(|s| {
+        let addrs = start_leaves(s, &leaves);
+        attach_all(&addrs)
+    });
+    assert_eq!(flat_stats.failed(), 0);
+    assert_eq!(flat.len(), total);
+
+    // the cut lands past the relay's handshake, inside the event stream
+    // (possibly mid-frame) — exactly what the resume must absorb
+    let kill_at = 8 + hello_wire_len("relay1") + 600;
+    let (tree, origins, stats, rep) = std::thread::scope(|s| {
+        let addrs = start_leaves(s, &leaves);
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let r1 = l1.local_addr().unwrap();
+        let relay =
+            s.spawn(move || run_relay_node("relay1", l1, addrs, 1, Some(kill_at)));
+        let (tree, origins, stats) = attach_all(&[r1]);
+        (tree, origins, stats, relay.join().unwrap().unwrap())
+    });
+
+    assert_eq!(stats.failed(), 0, "the root resumed, nobody died: {stats:?}");
+    assert!(stats.per[0].reconnects >= 1, "the upstream hop was killed and re-joined: {stats:?}");
+    assert_eq!(
+        tree, flat,
+        "a killed-and-resumed relay hop must merge byte-identically to the flat attach"
+    );
+    // a roomy relay ring replays everything: no gap anywhere, and the
+    // re-sent Origin entries rebuilt the full child ledger set
+    assert_eq!(origins[0].resume_gaps, 0);
+    assert_eq!(origins[0].children.len(), 2, "{:?}", origins[0].children);
+    assert_eq!(origins[0].children[0].eos, Some((122, 0)));
+    assert_eq!(origins[0].children[1].eos, Some((80, 0)));
+    assert_eq!(origins[0].known_dropped(), 0);
+    assert_eq!(rep.disconnects.len(), 1, "the relay logged the killed connection: {rep:?}");
+}

@@ -75,7 +75,7 @@ fn arbitrary_batch_event(rng: &mut Rng) -> BatchEvent {
 }
 
 fn arbitrary_frame(rng: &mut Rng) -> Frame {
-    match rng.below(10) {
+    match rng.below(11) {
         0 => {
             let n = rng.range(0, 512);
             let metadata: String = (0..n)
@@ -110,6 +110,14 @@ fn arbitrary_frame(rng: &mut Rng) -> Frame {
         8 => Frame::EventBatch {
             stream: rng.below(1 << 16) as u32,
             events: (0..rng.range(0, 9)).map(|_| arbitrary_batch_event(rng)).collect(),
+        },
+        9 => Frame::Origin {
+            path: format!("{}:relay{}/{}:node{}", rng.below(8), rng.below(8), rng.below(8), rng.below(8)),
+            hostname: format!("node{}", rng.below(1000)),
+            streams: (0..rng.range(0, 9)).map(|_| rng.below(1 << 16) as u32).collect(),
+            dropped: rng.next_u64(),
+            resume_gaps: rng.next_u64(),
+            eos: if rng.below(2) == 0 { None } else { Some((rng.next_u64(), rng.next_u64())) },
         },
         _ => Frame::Eos { received: rng.next_u64(), dropped: rng.next_u64() },
     }
