@@ -900,6 +900,21 @@ pub struct RelayReport {
     pub subscribers: Vec<SubscriberStats>,
 }
 
+impl RelayReport {
+    /// Best known downstream loss (saturating): the sum of
+    /// [`OriginStats::known_dropped`] over every downstream origin —
+    /// the same disjoint-ledger fold [`FanInReport::known_dropped`]
+    /// applies at an attach. The conservation law a healthy relay
+    /// satisfies, and the chaos testkit's oracle checks, is
+    /// `local.received + known_dropped() == events published at the
+    /// leaves below this relay` — loss booked at a leaf (its Eos
+    /// deficit), on a downstream hop (resume gap) or at a deeper relay
+    /// (child ledgers) counts exactly once.
+    pub fn known_dropped(&self) -> u64 {
+        self.origins.iter().fold(0u64, |a, o| a.saturating_add(o.known_dropped()))
+    }
+}
+
 /// Run one hierarchical relay node (`iprof relay <listen-addr>
 /// <addr>...`): a [`FanIn`] subscriber draining N downstream publishers
 /// into one mirror hub, re-published upstream by a [`Broadcaster`] in

@@ -48,6 +48,12 @@
 //!   SPEChpc-like MPI+offload benchmarks, all executing real PJRT kernels.
 //! * [`bench_support`] — the in-crate benchmark harness (criterion
 //!   substitute) used by `benches/`.
+//! * [`testkit`] — the deterministic chaos harness: an in-process
+//!   fault-injecting transport ([`testkit::ChaosConn`]) plus a seeded
+//!   [`testkit::Scenario`] builder and invariant oracles (conservation,
+//!   determinism, post-mortem golden) that drive the real
+//!   publisher/broadcaster/fan-in/relay stack under composed fault
+//!   schedules (`rust/tests/chaos.rs`).
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -65,6 +71,7 @@ pub mod remote;
 pub mod runtime;
 pub mod sampling;
 pub mod telemetry;
+pub mod testkit;
 pub mod tracer;
 pub mod util;
 

@@ -261,6 +261,13 @@ pub struct SubOriginStats {
     pub hostname: String,
     /// Relay stream ids carrying this leaf's events.
     pub streams: Vec<u32>,
+    /// Messages accepted into this leaf's share of the origin's
+    /// channels — within an origin shard the channel index IS the
+    /// remote stream index, so this is the sum of `received` over the
+    /// leaf's `streams`. Together with [`Self::known_dropped`] this is
+    /// the oracle-facing half of the per-leaf conservation law:
+    /// `received + known_dropped() == events the leaf published`.
+    pub received: u64,
     /// Cumulative publisher-side drops at the leaf.
     pub dropped: u64,
     /// Cumulative events the leaf lost to resume gaps.
@@ -922,6 +929,14 @@ impl LiveHub {
                             path: c.path.clone(),
                             hostname: c.hostname.clone(),
                             streams: c.streams.clone(),
+                            // origin-shard channels are indexed by remote
+                            // stream id, so the leaf's merged share is the
+                            // sum over its stream set
+                            received: c.streams.iter().fold(0u64, |a, &sid| {
+                                a.saturating_add(
+                                    st.channels.get(sid as usize).map_or(0, |ch| ch.received),
+                                )
+                            }),
                             dropped: c.dropped,
                             resume_gaps: c.resume_gaps,
                             eos: c.eos,

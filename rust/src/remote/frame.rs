@@ -89,18 +89,32 @@ pub const MAX_BATCH_EVENTS: u32 = 1 << 16;
 /// recording purposes while still decoding the event itself).
 pub const MAX_DICT_ENTRIES: u32 = 1 << 16;
 
-// Frame type discriminators (u8 on the wire).
-const T_HELLO: u8 = 0x01;
-const T_STREAMS: u8 = 0x02;
-const T_EVENT: u8 = 0x03;
-const T_BEACON: u8 = 0x04;
-const T_DROPS: u8 = 0x05;
-const T_CLOSE: u8 = 0x06;
-const T_EOS: u8 = 0x07;
-const T_RESUME: u8 = 0x08;
-const T_RESUME_GAP: u8 = 0x09;
-const T_EVENT_BATCH: u8 = 0x0a; // v3 only
-const T_ORIGIN: u8 = 0x0b; // v3 only, emitted by relays
+// Frame type discriminators (u8 on the wire). Public so out-of-band
+// wire observers — the chaos testkit's kill-at-frame-kind scanner,
+// conformance fixtures — can name kinds without re-deriving the
+// PROTOCOL.md table.
+/// `Hello` discriminator.
+pub const T_HELLO: u8 = 0x01;
+/// `Streams` discriminator.
+pub const T_STREAMS: u8 = 0x02;
+/// `Event` discriminator.
+pub const T_EVENT: u8 = 0x03;
+/// `Beacon` discriminator.
+pub const T_BEACON: u8 = 0x04;
+/// `Drops` discriminator.
+pub const T_DROPS: u8 = 0x05;
+/// `Close` discriminator.
+pub const T_CLOSE: u8 = 0x06;
+/// `Eos` discriminator.
+pub const T_EOS: u8 = 0x07;
+/// `Resume` discriminator.
+pub const T_RESUME: u8 = 0x08;
+/// `ResumeGap` discriminator.
+pub const T_RESUME_GAP: u8 = 0x09;
+/// `EventBatch` discriminator (v3 only).
+pub const T_EVENT_BATCH: u8 = 0x0a;
+/// `Origin` discriminator (v3 only, emitted by relays).
+pub const T_ORIGIN: u8 = 0x0b;
 
 // Field value tags inside Event frames.
 const F_U64: u8 = 0;

@@ -1995,6 +1995,7 @@ mod tests {
             ring: ReplayRing::new(1 << 20),
             board: StreamBoard::default(),
             finished: None,
+            origins: Vec::new(),
             slots: vec![SubscriberSlot {
                 cursors: vec![],
                 entitled: true,

@@ -1,0 +1,574 @@
+//! The fault-injecting transport: an in-process pipe that looks like a
+//! socket, plus [`ChaosConn`] — a `Read + Write` wrapper that injects
+//! *byte-deterministic* faults into the write path.
+//!
+//! Every fault here is a pure function of the byte stream, never of
+//! wall-clock time or write-call chunking:
+//!
+//! * **kill-at-byte** — allow exactly N bytes through (the boundary
+//!   write is partial), then fail with `BrokenPipe`. Mirrors
+//!   [`crate::remote::KillAfter`], for non-socket transports.
+//! * **kill-at-frame-kind** — scan the THRL stream (8-byte preamble,
+//!   then `len:u32 LE` + type-byte headers) and cut immediately after
+//!   the header of the Nth frame of a given kind, before its body.
+//!   The cut position depends only on the bytes written so far, so a
+//!   throttled, delayed or short-write-split stream cuts at the same
+//!   event as a single `write_all`.
+//! * **throttle** — cap every write call at N bytes, forcing the
+//!   publisher's short-write resume paths to run constantly.
+//! * **delay** — sleep a few microseconds every N bytes (slows the
+//!   stream without changing it).
+//! * **stall** — one long sleep once N bytes have passed (a frozen
+//!   peer that comes back).
+//!
+//! The pipe itself ([`pipe_pair`], [`chaos_listener`]) gives scenario
+//! code loopback-socket semantics without ports: blocking reads, EOF
+//! after the writer drops, `BrokenPipe` after the reader drops, and a
+//! dialable endpoint that starts refusing once its listener is gone —
+//! which is what lets [`refusing_connector`] script
+//! connection-refused-K-times redial schedules.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// In-process duplex pipe
+// ---------------------------------------------------------------------------
+
+/// One direction of the pipe: a byte queue plus both ends' liveness.
+#[derive(Default)]
+struct Flow {
+    buf: VecDeque<u8>,
+    /// The writing end dropped: readers drain the queue, then see EOF.
+    write_closed: bool,
+    /// The reading end dropped: writers fail with `BrokenPipe`.
+    read_closed: bool,
+}
+
+#[derive(Default)]
+struct Channel {
+    flow: Mutex<Flow>,
+    ready: Condvar,
+}
+
+/// One end of an in-process duplex pipe (socket stand-in). Reads block
+/// until data arrives or the peer's write side closes (then EOF);
+/// writes fail with `BrokenPipe` once the peer has dropped.
+pub struct PipeEnd {
+    rx: Arc<Channel>,
+    tx: Arc<Channel>,
+}
+
+/// Build a connected pair of pipe ends — what one accepted connection
+/// looks like to both sides.
+pub fn pipe_pair() -> (PipeEnd, PipeEnd) {
+    let a = Arc::new(Channel::default());
+    let b = Arc::new(Channel::default());
+    (PipeEnd { rx: a.clone(), tx: b.clone() }, PipeEnd { rx: b, tx: a })
+}
+
+impl Read for PipeEnd {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut flow = self.rx.flow.lock().unwrap();
+        loop {
+            if !flow.buf.is_empty() {
+                let n = buf.len().min(flow.buf.len());
+                for slot in buf.iter_mut().take(n) {
+                    *slot = flow.buf.pop_front().unwrap();
+                }
+                return Ok(n);
+            }
+            if flow.write_closed {
+                return Ok(0);
+            }
+            flow = self.rx.ready.wait(flow).unwrap();
+        }
+    }
+}
+
+impl Write for PipeEnd {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut flow = self.tx.flow.lock().unwrap();
+        if flow.read_closed {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "chaos pipe: peer closed"));
+        }
+        flow.buf.extend(buf.iter().copied());
+        drop(flow);
+        self.tx.ready.notify_all();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeEnd {
+    fn drop(&mut self) {
+        // our outgoing direction ends (the peer drains, then sees EOF)…
+        self.tx.flow.lock().unwrap().write_closed = true;
+        self.tx.ready.notify_all();
+        // …and nothing will drain the incoming direction again
+        self.rx.flow.lock().unwrap().read_closed = true;
+        self.rx.ready.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener / endpoint: dialable in-process "addresses"
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct AcceptState {
+    pending: VecDeque<PipeEnd>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct AcceptQueue {
+    q: Mutex<AcceptState>,
+    ready: Condvar,
+}
+
+/// The accepting side of an in-process listening "address".
+pub struct ChaosListener {
+    shared: Arc<AcceptQueue>,
+}
+
+/// The dialing side: clone freely and hand to connectors. Dials refuse
+/// with `ConnectionRefused` once the listener has dropped.
+#[derive(Clone)]
+pub struct ChaosEndpoint {
+    shared: Arc<AcceptQueue>,
+}
+
+/// Bind an in-process listener; returns the accept side and a dialable
+/// endpoint (the "address").
+pub fn chaos_listener() -> (ChaosListener, ChaosEndpoint) {
+    let shared = Arc::new(AcceptQueue::default());
+    (ChaosListener { shared: shared.clone() }, ChaosEndpoint { shared })
+}
+
+impl ChaosListener {
+    /// Block until a connection arrives (or the listener is closed —
+    /// which only this end's drop does, so in-scenario this blocks).
+    pub fn accept(&self) -> io::Result<PipeEnd> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(conn) = st.pending.pop_front() {
+                return Ok(conn);
+            }
+            if st.closed {
+                return Err(io::Error::new(
+                    io::ErrorKind::ConnectionAborted,
+                    "chaos listener closed",
+                ));
+            }
+            st = self.shared.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking accept, for poll loops like the relay's.
+    pub fn try_accept(&self) -> Option<PipeEnd> {
+        self.shared.q.lock().unwrap().pending.pop_front()
+    }
+}
+
+impl Drop for ChaosListener {
+    fn drop(&mut self) {
+        self.shared.q.lock().unwrap().closed = true;
+        self.shared.ready.notify_all();
+    }
+}
+
+impl ChaosEndpoint {
+    /// Dial: hand the listener one end of a fresh pipe, keep the other.
+    pub fn dial(&self) -> io::Result<PipeEnd> {
+        let (client, server) = pipe_pair();
+        let mut st = self.shared.q.lock().unwrap();
+        if st.closed {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionRefused,
+                "chaos endpoint: listener closed",
+            ));
+        }
+        st.pending.push_back(server);
+        drop(st);
+        self.shared.ready.notify_all();
+        Ok(client)
+    }
+}
+
+/// A connector closure for [`crate::remote::FanIn::open_resumable`] /
+/// `run_relay` that refuses `refusals[k]` times before letting the
+/// `k`-th successful dial through — a scripted flaky network between
+/// kills. Keep every quota below the `ReconnectPolicy` attempt budget
+/// or the dialer legitimately gives up.
+pub fn refusing_connector(
+    ep: ChaosEndpoint,
+    refusals: Vec<u32>,
+) -> impl FnMut() -> io::Result<PipeEnd> + Send + 'static {
+    let mut dialed = 0usize; // successful dials so far
+    let mut refused = 0u32; // refusals burned toward the current dial
+    move || {
+        let quota = refusals.get(dialed).copied().unwrap_or(0);
+        if refused < quota {
+            refused += 1;
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionRefused,
+                "chaos: refused by schedule",
+            ));
+        }
+        refused = 0;
+        dialed += 1;
+        ep.dial()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault specification
+// ---------------------------------------------------------------------------
+
+/// One connection's fault schedule. `Default` is a clean connection;
+/// at most one of the two kill triggers should be set (if both are,
+/// whichever byte position comes first wins).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Kill the connection after exactly this many written bytes (the
+    /// boundary write is partial, the next write fails `BrokenPipe`).
+    pub kill_at_byte: Option<usize>,
+    /// Kill right after the 5-byte header of the `n`-th frame of this
+    /// THRL kind completes `(kind, n)` — the body never goes out.
+    pub kill_at_frame: Option<(u8, u32)>,
+    /// Cap every write call at this many bytes (short-write storm).
+    pub throttle: Option<usize>,
+    /// Sleep `µs` after every `every` written bytes `(every, µs)`.
+    pub delay: Option<(usize, u64)>,
+    /// One long sleep of `ms` once `after` bytes have passed
+    /// `(after, ms)` — a peer that freezes, then recovers.
+    pub stall: Option<(usize, u64)>,
+}
+
+impl FaultSpec {
+    /// Does this schedule ever sever the connection?
+    pub fn is_lethal(&self) -> bool {
+        self.kill_at_byte.is_some() || self.kill_at_frame.is_some()
+    }
+}
+
+/// Incremental THRL stream scanner: consumes the 8-byte preamble, then
+/// alternating 5-byte frame headers (`len:u32 LE` counting the type
+/// byte, plus the type byte itself) and `len - 1`-byte bodies. Fires
+/// once the target kind's `nth` header completes.
+#[derive(Clone)]
+struct FrameScan {
+    kind: u8,
+    nth: u32,
+    seen: u32,
+    preamble_left: usize,
+    header: [u8; 5],
+    have: usize,
+    body_left: usize,
+    triggered: bool,
+}
+
+impl FrameScan {
+    fn new(kind: u8, nth: u32) -> FrameScan {
+        FrameScan {
+            kind,
+            nth: nth.max(1),
+            seen: 0,
+            preamble_left: 8,
+            header: [0; 5],
+            have: 0,
+            body_left: 0,
+            triggered: false,
+        }
+    }
+
+    /// Scan the next chunk the connection wants to write. Returns how
+    /// many of its bytes may pass: `bytes.len()` when the trigger does
+    /// not fire inside this chunk, the cut offset when it does (and 0
+    /// forever after).
+    fn admit(&mut self, bytes: &[u8]) -> usize {
+        if self.triggered {
+            return 0;
+        }
+        let mut i = 0;
+        while i < bytes.len() {
+            if self.preamble_left > 0 {
+                let take = self.preamble_left.min(bytes.len() - i);
+                self.preamble_left -= take;
+                i += take;
+                continue;
+            }
+            if self.body_left > 0 {
+                let take = self.body_left.min(bytes.len() - i);
+                self.body_left -= take;
+                i += take;
+                continue;
+            }
+            self.header[self.have] = bytes[i];
+            self.have += 1;
+            i += 1;
+            if self.have == 5 {
+                let len = u32::from_le_bytes([
+                    self.header[0],
+                    self.header[1],
+                    self.header[2],
+                    self.header[3],
+                ]) as usize;
+                let kind = self.header[4];
+                self.have = 0;
+                self.body_left = len.saturating_sub(1);
+                if kind == self.kind {
+                    self.seen += 1;
+                    if self.seen == self.nth {
+                        self.triggered = true;
+                        return i;
+                    }
+                }
+            }
+        }
+        bytes.len()
+    }
+}
+
+/// A `Read + Write` wrapper executing a [`FaultSpec`] on the write
+/// path (reads pass through untouched). All triggers are functions of
+/// the cumulative written byte count, so the fault lands on the same
+/// wire byte no matter how the caller chunks its writes.
+pub struct ChaosConn<S> {
+    inner: S,
+    written: usize,
+    budget: usize,
+    scan: Option<FrameScan>,
+    throttle: usize,
+    delay_every: usize,
+    delay: Duration,
+    since_delay: usize,
+    stall_at: usize,
+    stall: Duration,
+    stalled: bool,
+}
+
+impl<S> ChaosConn<S> {
+    /// Wrap `inner` under `fault`. A default (empty) spec passes every
+    /// byte through unchanged.
+    pub fn new(inner: S, fault: &FaultSpec) -> ChaosConn<S> {
+        let (delay_every, delay_us) = fault.delay.unwrap_or((0, 0));
+        let (stall_at, stall_ms) = fault.stall.unwrap_or((usize::MAX, 0));
+        ChaosConn {
+            inner,
+            written: 0,
+            budget: fault.kill_at_byte.unwrap_or(usize::MAX),
+            scan: fault.kill_at_frame.map(|(kind, nth)| FrameScan::new(kind, nth)),
+            throttle: match fault.throttle {
+                Some(0) | None => usize::MAX,
+                Some(n) => n,
+            },
+            delay_every,
+            delay: Duration::from_micros(delay_us),
+            since_delay: 0,
+            stall_at,
+            stall: Duration::from_millis(stall_ms),
+            stalled: false,
+        }
+    }
+}
+
+impl<S: Read> Read for ChaosConn<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for ChaosConn<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        if !self.stalled && self.written >= self.stall_at {
+            self.stalled = true;
+            std::thread::sleep(self.stall);
+        }
+        if self.budget == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "chaos: killed at byte budget",
+            ));
+        }
+        let mut n = buf.len().min(self.throttle).min(self.budget);
+        if let Some(scan) = &mut self.scan {
+            // peek with a clone: the real scanner only advances over
+            // bytes the inner write actually accepts, so a short write
+            // cannot desynchronize the cut position
+            let admitted = scan.clone().admit(&buf[..n]);
+            if admitted == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "chaos: killed at frame kind",
+                ));
+            }
+            n = admitted;
+        }
+        let m = self.inner.write(&buf[..n])?;
+        if let Some(scan) = &mut self.scan {
+            scan.admit(&buf[..m]);
+        }
+        self.written += m;
+        self.budget -= m.min(self.budget);
+        if self.delay_every > 0 {
+            self.since_delay += m;
+            if self.since_delay >= self.delay_every {
+                self.since_delay = 0;
+                std::thread::sleep(self.delay);
+            }
+        }
+        Ok(m)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::remote::frame::{T_BEACON, T_EVENT};
+    use crate::remote::{encode, write_preamble, Frame};
+
+    #[test]
+    fn pipe_delivers_then_eofs_after_writer_drop() {
+        let (mut a, mut b) = pipe_pair();
+        a.write_all(b"hello").unwrap();
+        drop(a);
+        let mut out = Vec::new();
+        b.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"hello");
+        assert_eq!(b.read(&mut [0u8; 4]).unwrap(), 0, "EOF after drain");
+    }
+
+    #[test]
+    fn pipe_write_breaks_after_reader_drop() {
+        let (mut a, b) = pipe_pair();
+        drop(b);
+        let err = a.write(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn endpoint_refuses_after_listener_drop() {
+        let (listener, ep) = chaos_listener();
+        assert!(ep.dial().is_ok());
+        assert!(listener.try_accept().is_some());
+        drop(listener);
+        assert_eq!(ep.dial().unwrap_err().kind(), io::ErrorKind::ConnectionRefused);
+    }
+
+    #[test]
+    fn refusing_connector_burns_quota_then_dials() {
+        let (listener, ep) = chaos_listener();
+        let mut connect = refusing_connector(ep, vec![2, 0, 1]);
+        assert_eq!(connect().unwrap_err().kind(), io::ErrorKind::ConnectionRefused);
+        assert_eq!(connect().unwrap_err().kind(), io::ErrorKind::ConnectionRefused);
+        assert!(connect().is_ok(), "dial 0 after 2 refusals");
+        assert!(connect().is_ok(), "dial 1 straight through");
+        assert_eq!(connect().unwrap_err().kind(), io::ErrorKind::ConnectionRefused);
+        assert!(connect().is_ok(), "dial 2 after 1 refusal");
+        assert!(connect().is_ok(), "past the schedule: clean dials");
+        drop(listener);
+    }
+
+    #[test]
+    fn kill_at_byte_allows_exactly_the_budget() {
+        let (a, mut b) = pipe_pair();
+        let fault = FaultSpec { kill_at_byte: Some(7), ..Default::default() };
+        let mut conn = ChaosConn::new(a, &fault);
+        assert_eq!(conn.write(b"0123456789").unwrap(), 7, "boundary write is partial");
+        let err = conn.write(b"89").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        drop(conn);
+        let mut out = Vec::new();
+        b.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"0123456", "exactly the budget went through");
+    }
+
+    #[test]
+    fn throttle_caps_every_write_call() {
+        let (a, mut b) = pipe_pair();
+        let fault = FaultSpec { throttle: Some(3), ..Default::default() };
+        let mut conn = ChaosConn::new(a, &fault);
+        assert_eq!(conn.write(b"abcdefgh").unwrap(), 3);
+        conn.write_all(b"abcdefgh").unwrap();
+        drop(conn);
+        let mut out = Vec::new();
+        b.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"abcabcdefgh");
+    }
+
+    /// The frame-kind cut position is chunking-independent: writing the
+    /// stream byte-at-a-time under throttle cuts at the same offset as
+    /// one big write.
+    #[test]
+    fn frame_kind_cut_is_chunking_independent() {
+        // preamble + Streams + Beacon + Beacon: target Beacon #2
+        let mut wire = Vec::new();
+        write_preamble(&mut wire);
+        encode(&Frame::Streams { count: 3 }, &mut wire);
+        let beacon_start_2 = {
+            encode(&Frame::Beacon { stream: 0, watermark: 1 }, &mut wire);
+            wire.len()
+        };
+        encode(&Frame::Beacon { stream: 1, watermark: 2 }, &mut wire);
+        let expect_cut = beacon_start_2 + 5; // 4 len bytes + the type byte
+
+        for throttle in [None, Some(1), Some(3)] {
+            let (a, mut b) = pipe_pair();
+            let fault = FaultSpec {
+                kill_at_frame: Some((T_BEACON, 2)),
+                throttle,
+                ..Default::default()
+            };
+            let mut conn = ChaosConn::new(a, &fault);
+            let mut sent = 0usize;
+            let err = loop {
+                match conn.write(&wire[sent..]) {
+                    Ok(n) => sent += n,
+                    Err(e) => break e,
+                }
+            };
+            assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+            assert_eq!(sent, expect_cut, "throttle {throttle:?} moved the cut");
+            drop(conn);
+            let mut out = Vec::new();
+            b.read_to_end(&mut out).unwrap();
+            assert_eq!(out, wire[..expect_cut], "bytes through == bytes before the cut");
+        }
+    }
+
+    #[test]
+    fn frame_kind_scan_ignores_other_kinds_and_bodies() {
+        // an Event body containing the Beacon type byte must not count
+        let mut wire = Vec::new();
+        write_preamble(&mut wire);
+        encode(&Frame::Streams { count: T_BEACON as u32 }, &mut wire);
+        let clean_len = wire.len();
+        encode(&Frame::Beacon { stream: T_BEACON as u32, watermark: u64::MAX }, &mut wire);
+
+        let mut scan = FrameScan::new(T_EVENT, 1);
+        assert_eq!(scan.admit(&wire), wire.len(), "no Event frame: never triggers");
+
+        let mut scan = FrameScan::new(T_BEACON, 1);
+        assert_eq!(scan.admit(&wire), clean_len + 5, "cut after the Beacon header");
+    }
+}

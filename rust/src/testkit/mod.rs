@@ -1,0 +1,50 @@
+//! Deterministic chaos testkit for the THRL stack.
+//!
+//! The remote layer's correctness claims — resume gaps are booked
+//! exactly once, per-leaf ledgers never alias, a tree merges like the
+//! flat attach — are easy to pin for one hand-written topology and
+//! hard to trust in general. This module makes the general case
+//! testable: **one `u64` seed expands into a full scenario** (leaf
+//! publishers with scripted event streams, optional relays, a root
+//! attach, and a composed fault schedule), the scenario runs the *real*
+//! [`crate::remote::Publisher`] / `Broadcaster` / [`crate::remote::FanIn`]
+//! / [`crate::coordinator::run_relay`] code over an in-process
+//! fault-injecting transport, and two oracles judge the result:
+//!
+//! * **Conservation** ([`check_conservation`]) — for every origin path,
+//!   `merged + known_dropped == published`, with the parent/child
+//!   ledgers disjoint; loss is *accounted*, never silent.
+//! * **Determinism** ([`check_determinism`]) — the same seed produces
+//!   the same merged stream and the same ledgers on every rerun, so a
+//!   failing seed printed by the sweep is a one-command repro. When a
+//!   run lost nothing, the merged stream must additionally be
+//!   byte-identical to the [`post_mortem_golden`] — the answer a local
+//!   post-mortem analysis of the same events would give.
+//!
+//! Determinism is engineered, not hoped for: leaf hubs are sealed
+//! before serving (one deterministic drain, so the wire bytes are a
+//! pure function of the scenario), every fault in [`FaultSpec`]
+//! triggers on byte positions rather than timers, and the generator
+//! only emits topologies whose merge order is timing-independent
+//! (unique global timestamps whenever relays are present; cross-stream
+//! timestamp ties only in flat no-relay scenarios where channel order
+//! is fixed at handshake time).
+//!
+//! Driven by `rust/tests/chaos.rs`; knobs: `THAPI_CHAOS_SEEDS` (comma
+//! list, exact repro) and `THAPI_CHAOS_QUICK` (CI-sized sweep).
+
+mod chaos;
+mod oracle;
+mod scenario;
+
+pub use chaos::{
+    chaos_listener, pipe_pair, refusing_connector, ChaosConn, ChaosEndpoint, ChaosListener,
+    FaultSpec, PipeEnd,
+};
+pub use oracle::{
+    check_conservation, check_determinism, post_mortem_golden, total_known_loss, LedgerSnapshot,
+};
+pub use scenario::{
+    class_name, event_len, hello_wire_len, policy, AttachOutcome, EventSpec, LeafSpec, Merged,
+    RelaySpec, RunReport, Scenario, RELAY_RING,
+};

@@ -1,0 +1,507 @@
+//! Invariant oracles judging a [`Scenario`] run.
+//!
+//! * [`check_conservation`] — the accounting law, per origin path:
+//!   `merged + known_dropped == published`. Every event a leaf
+//!   published is either merged at the root exactly once or booked in
+//!   exactly one ledger (a leaf's resume gaps never leak into a
+//!   sibling's ledger, the relay's, or nowhere). Cross-layer agreement
+//!   is part of the law: the gap count the root holds against a leaf
+//!   equals the count the relay booked, which equals the count the
+//!   leaf's own publisher reports.
+//! * [`check_determinism`] — same seed, same answer: two runs of one
+//!   scenario must produce identical merged streams, identical
+//!   normalized ledgers ([`LedgerSnapshot`] — timing-dependent
+//!   counters like beacons and batch segmentation excluded), and
+//!   identical per-leaf gap totals.
+//! * [`post_mortem_golden`] — when a run lost nothing
+//!   ([`total_known_loss`]` == 0`), its merged stream must be
+//!   byte-identical to a local post-mortem merge of the same scripted
+//!   events: the live chaos path may reorder nothing and invent
+//!   nothing relative to the offline answer.
+
+use crate::live::{LiveHub, LiveSource, OriginStats, SubOriginStats};
+use std::sync::Arc;
+
+use super::scenario::{class_name, reg_msg, AttachOutcome, Merged, RunReport, Scenario};
+
+macro_rules! check {
+    ($errs:expr, $cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            $errs.push(format!($($arg)+));
+        }
+    };
+}
+
+/// An [`OriginStats`] with the timing-dependent counters (beacons,
+/// batch segmentation) stripped — what two runs of one seed must agree
+/// on exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LedgerSnapshot {
+    pub label: String,
+    pub channels: usize,
+    pub received: u64,
+    pub dropped: u64,
+    pub remote_dropped: u64,
+    pub resume_gaps: u64,
+    pub eos: Option<(u64, u64)>,
+    pub closed: bool,
+    pub wire_version: u32,
+    pub children: Vec<SubOriginStats>,
+}
+
+impl LedgerSnapshot {
+    fn of(o: &OriginStats) -> LedgerSnapshot {
+        LedgerSnapshot {
+            label: o.label.clone(),
+            channels: o.channels,
+            received: o.received,
+            dropped: o.dropped,
+            remote_dropped: o.remote_dropped,
+            resume_gaps: o.resume_gaps,
+            eos: o.eos,
+            closed: o.closed,
+            wire_version: o.wire_version,
+            children: o.children.clone(),
+        }
+    }
+}
+
+/// Best known loss across the whole run: every root-side origin ledger
+/// plus every leaf publisher's own gap count (saturating). Zero means
+/// the run was lossless end to end — and the golden oracle applies.
+pub fn total_known_loss(rep: &RunReport) -> u64 {
+    let ledgers = rep
+        .attaches
+        .iter()
+        .flat_map(|a| a.origins.iter())
+        .fold(0u64, |acc, o| acc.saturating_add(o.known_dropped()));
+    let leaves = rep.leaf_stats.iter().fold(0u64, |acc, s| acc.saturating_add(s.gaps));
+    ledgers.saturating_add(leaves)
+}
+
+/// The conservation oracle. Returns every violated clause, or `Ok` if
+/// the run's accounting is exact.
+pub fn check_conservation(sc: &Scenario, rep: &RunReport) -> Result<(), String> {
+    let mut errs: Vec<String> = Vec::new();
+
+    check!(
+        errs,
+        rep.leaf_stats.len() == sc.leaves.len(),
+        "leaf stats count {} != leaves {}",
+        rep.leaf_stats.len(),
+        sc.leaves.len()
+    );
+    check!(
+        errs,
+        rep.relay_reports.len() == sc.relays.len(),
+        "relay reports count {} != relays {}",
+        rep.relay_reports.len(),
+        sc.relays.len()
+    );
+    check!(
+        errs,
+        rep.attaches.len() == sc.root_attaches,
+        "attach count {} != root_attaches {}",
+        rep.attaches.len(),
+        sc.root_attaches
+    );
+    if !errs.is_empty() {
+        return Err(errs.join("\n"));
+    }
+
+    for (ai, attach) in rep.attaches.iter().enumerate() {
+        check_attach(sc, rep, ai, attach, &mut errs);
+    }
+
+    // every concurrent subscriber of one broadcast session sees the
+    // same merged stream — a same-run invariant, not just determinism
+    for (ai, attach) in rep.attaches.iter().enumerate().skip(1) {
+        if attach.merged != rep.attaches[0].merged {
+            let at = first_divergence(&rep.attaches[0].merged, &attach.merged);
+            errs.push(format!("attach {ai} merged diverges from attach 0 at index {at}"));
+        }
+    }
+
+    // the relay's own books agree with the leaves below it
+    for (k, rel) in rep.relay_reports.iter().enumerate() {
+        let spec = &sc.relays[k];
+        check!(errs, rel.label == spec.label, "relay {k} label {:?} != {:?}", rel.label, spec.label);
+        check!(
+            errs,
+            rel.downstream.failed() == 0,
+            "relay {k} downstream failures: {:?}",
+            rel.downstream
+        );
+        let hosts: Vec<String> =
+            spec.leaves.iter().map(|&i| sc.leaves[i].hostname.clone()).collect();
+        check!(errs, rel.hostnames == hosts, "relay {k} hostnames {:?} != {hosts:?}", rel.hostnames);
+        check!(
+            errs,
+            rel.origins.len() == spec.leaves.len(),
+            "relay {k} has {} downstream origins, expected {}",
+            rel.origins.len(),
+            spec.leaves.len()
+        );
+        let mut part_total = 0u64;
+        let mut part_gaps = 0u64;
+        for (j, (&li, o)) in spec.leaves.iter().zip(rel.origins.iter()).enumerate() {
+            let total = sc.leaf_total(li);
+            let gaps = rep.leaf_stats[li].gaps;
+            part_total += total;
+            part_gaps += gaps;
+            check!(
+                errs,
+                o.label == sc.leaves[li].hostname,
+                "relay {k} origin {j} label {:?} != leaf {li} host {:?}",
+                o.label,
+                sc.leaves[li].hostname
+            );
+            check!(
+                errs,
+                o.resume_gaps == gaps,
+                "relay {k} origin {j}: booked {} gap(s), leaf {li} publisher reports {}",
+                o.resume_gaps,
+                gaps
+            );
+            check!(
+                errs,
+                o.eos == Some((total, 0)),
+                "relay {k} origin {j} eos {:?} != Some(({total}, 0))",
+                o.eos
+            );
+            check!(
+                errs,
+                o.received.saturating_add(o.known_dropped()) == total,
+                "relay {k} origin {j}: received {} + known_dropped {} != published {total}",
+                o.received,
+                o.known_dropped()
+            );
+        }
+        check!(
+            errs,
+            rel.known_dropped() == part_gaps,
+            "relay {k} known_dropped() {} != sum of its leaves' gaps {part_gaps}",
+            rel.known_dropped()
+        );
+        check!(
+            errs,
+            rel.local.dropped == 0,
+            "relay {k} hub dropped locally ({}): the fan-in feed must be lossless",
+            rel.local.dropped
+        );
+        check!(
+            errs,
+            rel.local.received.saturating_add(part_gaps) == part_total,
+            "relay {k} hub received {} + gaps {part_gaps} != published {part_total}",
+            rel.local.received
+        );
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("\n"))
+    }
+}
+
+/// Conservation clauses for one root attach.
+fn check_attach(
+    sc: &Scenario,
+    rep: &RunReport,
+    ai: usize,
+    attach: &AttachOutcome,
+    errs: &mut Vec<String>,
+) {
+    check!(
+        errs,
+        attach.stats.failed() == 0,
+        "attach {ai}: {} connection(s) died unaccounted: {:?}",
+        attach.stats.failed(),
+        attach.stats
+    );
+    let expect_origins = sc.relays.len() + sc.direct.len();
+    check!(
+        errs,
+        attach.origins.len() == expect_origins,
+        "attach {ai}: {} origins, expected {expect_origins}",
+        attach.origins.len()
+    );
+    if attach.origins.len() != expect_origins {
+        return;
+    }
+
+    let mut merged_expect = 0u64; // sum of per-origin received
+    for (k, (spec, o)) in sc.relays.iter().zip(attach.origins.iter()).enumerate() {
+        let part_total: u64 = spec.leaves.iter().map(|&i| sc.leaf_total(i)).sum();
+        merged_expect = merged_expect.saturating_add(o.received);
+        check!(errs, o.label == spec.label, "attach {ai} origin {k} label {:?} != relay {:?}", o.label, spec.label);
+        check!(errs, o.closed, "attach {ai} relay origin {k} never closed");
+        check!(
+            errs,
+            o.received.saturating_add(o.known_dropped()) == part_total,
+            "attach {ai} relay origin {k}: received {} + known_dropped {} != published {part_total}",
+            o.received,
+            o.known_dropped()
+        );
+        // per-leaf clauses are only exact when the root↔relay hop
+        // itself lost nothing — otherwise that hop's loss cannot be
+        // attributed to single leaves and only the sum above holds
+        if o.resume_gaps == 0 && o.remote_dropped == 0 {
+            check!(
+                errs,
+                o.children.len() == spec.leaves.len(),
+                "attach {ai} relay origin {k}: {} child ledgers, expected {}",
+                o.children.len(),
+                spec.leaves.len()
+            );
+            for (j, (&li, c)) in spec.leaves.iter().zip(o.children.iter()).enumerate() {
+                let total = sc.leaf_total(li);
+                let gaps = rep.leaf_stats[li].gaps;
+                let want_path = format!("{j}:{}", sc.leaves[li].hostname);
+                check!(
+                    errs,
+                    c.path == want_path,
+                    "attach {ai} origin {k} child {j} path {:?} != {want_path:?}",
+                    c.path
+                );
+                check!(
+                    errs,
+                    c.hostname == sc.leaves[li].hostname,
+                    "attach {ai} origin {k} child {j} hostname {:?} != {:?}",
+                    c.hostname,
+                    sc.leaves[li].hostname
+                );
+                check!(
+                    errs,
+                    c.resume_gaps == gaps,
+                    "attach {ai} origin {k} child {j}: root books {} gap(s), leaf {li} reports {}",
+                    c.resume_gaps,
+                    gaps
+                );
+                check!(
+                    errs,
+                    c.received.saturating_add(c.known_dropped()) == total,
+                    "attach {ai} origin {k} child {j}: received {} + known_dropped {} != published {total}",
+                    c.received,
+                    c.known_dropped()
+                );
+                if gaps == 0 {
+                    check!(
+                        errs,
+                        c.eos == Some((total, 0)),
+                        "attach {ai} origin {k} child {j} eos {:?} != Some(({total}, 0))",
+                        c.eos
+                    );
+                }
+            }
+        }
+    }
+    for (d, (&li, o)) in
+        sc.direct.iter().zip(attach.origins.iter().skip(sc.relays.len())).enumerate()
+    {
+        let total = sc.leaf_total(li);
+        let gaps = rep.leaf_stats[li].gaps;
+        merged_expect = merged_expect.saturating_add(o.received);
+        check!(
+            errs,
+            o.label == sc.leaves[li].hostname,
+            "attach {ai} direct origin {d} label {:?} != leaf {li} host {:?}",
+            o.label,
+            sc.leaves[li].hostname
+        );
+        check!(errs, o.closed, "attach {ai} direct origin {d} never closed");
+        check!(errs, o.children.is_empty(), "attach {ai} direct origin {d} grew child ledgers");
+        check!(
+            errs,
+            o.eos == Some((total, 0)),
+            "attach {ai} direct origin {d} eos {:?} != Some(({total}, 0))",
+            o.eos
+        );
+        check!(
+            errs,
+            o.resume_gaps == gaps,
+            "attach {ai} direct origin {d}: root books {} gap(s), leaf {li} reports {}",
+            o.resume_gaps,
+            gaps
+        );
+        check!(
+            errs,
+            o.received.saturating_add(o.known_dropped()) == total,
+            "attach {ai} direct origin {d}: received {} + known_dropped {} != published {total}",
+            o.received,
+            o.known_dropped()
+        );
+    }
+
+    // the global law: everything published is merged once or booked once
+    check!(
+        errs,
+        attach.merged.len() as u64 == merged_expect,
+        "attach {ai}: merged {} events, origin ledgers say {merged_expect}",
+        attach.merged.len()
+    );
+    let known: u64 =
+        attach.origins.iter().fold(0u64, |a, o| a.saturating_add(o.known_dropped()));
+    check!(
+        errs,
+        (attach.merged.len() as u64).saturating_add(known) == sc.total_events(),
+        "attach {ai}: merged {} + known_dropped {known} != published {}",
+        attach.merged.len(),
+        sc.total_events()
+    );
+    check!(
+        errs,
+        attach.merged.windows(2).all(|w| w[0].0 <= w[1].0),
+        "attach {ai}: merged stream is not time-ordered"
+    );
+}
+
+/// The determinism oracle: two runs of the same scenario must agree on
+/// everything the scenario scripts.
+pub fn check_determinism(r1: &RunReport, r2: &RunReport) -> Result<(), String> {
+    let mut errs: Vec<String> = Vec::new();
+    check!(
+        errs,
+        r1.attaches.len() == r2.attaches.len(),
+        "attach counts differ: {} vs {}",
+        r1.attaches.len(),
+        r2.attaches.len()
+    );
+    for (ai, (a, b)) in r1.attaches.iter().zip(r2.attaches.iter()).enumerate() {
+        if a.merged != b.merged {
+            let at = first_divergence(&a.merged, &b.merged);
+            errs.push(format!(
+                "attach {ai}: merged streams diverge at index {at} ({} vs {} events): {:?} vs {:?}",
+                a.merged.len(),
+                b.merged.len(),
+                a.merged.get(at),
+                b.merged.get(at)
+            ));
+        }
+        let s1: Vec<LedgerSnapshot> = a.origins.iter().map(LedgerSnapshot::of).collect();
+        let s2: Vec<LedgerSnapshot> = b.origins.iter().map(LedgerSnapshot::of).collect();
+        check!(
+            errs,
+            s1 == s2,
+            "attach {ai}: origin ledgers differ between reruns:\n  {s1:?}\nvs\n  {s2:?}"
+        );
+    }
+    let g1: Vec<u64> = r1.leaf_stats.iter().map(|s| s.gaps).collect();
+    let g2: Vec<u64> = r2.leaf_stats.iter().map(|s| s.gaps).collect();
+    check!(errs, g1 == g2, "per-leaf gap totals differ between reruns: {g1:?} vs {g2:?}");
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("\n"))
+    }
+}
+
+fn first_divergence(a: &[Merged], b: &[Merged]) -> usize {
+    let n = a.len().min(b.len());
+    (0..n).find(|&i| a[i] != b[i]).unwrap_or(n)
+}
+
+/// The answer a local post-mortem merge of the scenario's scripted
+/// events gives: one hub, one origin per leaf in attach connection
+/// order (relay partitions first, then direct leaves — so channel
+/// order, and with it the cross-stream tie-break, matches the live
+/// run), every event fed losslessly, drained through [`LiveSource`].
+pub fn post_mortem_golden(sc: &Scenario) -> Vec<Merged> {
+    let depth = 1 << 16; // soft cap far above any scenario's event count
+    let hub = LiveHub::new("root", depth, false);
+    let order: Vec<usize> = sc
+        .relays
+        .iter()
+        .flat_map(|r| r.leaves.iter().copied())
+        .chain(sc.direct.iter().copied())
+        .collect();
+    for &li in &order {
+        let leaf = &sc.leaves[li];
+        let origin = hub.register_origin(&leaf.hostname);
+        hub.ensure_origin_channels(origin, leaf.streams.len());
+        let map = hub.origin_map(origin);
+        for (si, evs) in leaf.streams.iter().enumerate() {
+            for (j, e) in evs.iter().enumerate() {
+                let mut msg = reg_msg(&hub, class_name(j), e.ts, e.rank, e.tid);
+                // a remote merge stamps the publisher's hostname
+                msg.hostname = Arc::from(leaf.hostname.as_str());
+                hub.feed_remote(map[si], msg, depth);
+            }
+        }
+        hub.close_origin(origin);
+    }
+    hub.close_all();
+    LiveSource::new(hub)
+        .map(|m| (m.ts, m.rank, m.tid, m.hostname.to_string(), m.class.name.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::{EventSpec, LeafSpec, Scenario};
+    use super::*;
+
+    fn leaf(host: &str, streams: Vec<Vec<(u64, u32, u32)>>) -> LeafSpec {
+        LeafSpec {
+            hostname: host.to_string(),
+            epoch: 1,
+            wire: 3,
+            resume_buffer: 1 << 20,
+            streams: streams
+                .into_iter()
+                .map(|s| {
+                    s.into_iter().map(|(ts, rank, tid)| EventSpec { ts, rank, tid }).collect()
+                })
+                .collect(),
+            serve_faults: Vec::new(),
+            redial_refusals: Vec::new(),
+        }
+    }
+
+    /// The golden merges by (ts, channel order) with leaf hostnames
+    /// stamped — pinned against a hand-computed answer, including a
+    /// cross-stream tie broken by channel (= connection) order.
+    #[test]
+    fn golden_merges_by_time_then_channel_order() {
+        let sc = Scenario {
+            seed: 0,
+            leaves: vec![
+                leaf("b-first-by-ts", vec![vec![(12, 0, 1), (20, 0, 1)]]),
+                // ts 12 ties with leaf 0: leaf 0's channel was
+                // registered first, so its event merges first
+                leaf("a-second-by-channel", vec![vec![(11, 1, 1), (12, 1, 1)]]),
+            ],
+            relays: Vec::new(),
+            direct: vec![0, 1],
+            root_attaches: 1,
+            depth: 64,
+        };
+        let got: Vec<(u64, u32, String)> =
+            post_mortem_golden(&sc).into_iter().map(|(ts, rank, _, h, _)| (ts, rank, h)).collect();
+        assert_eq!(
+            got,
+            vec![
+                (11, 1, "a-second-by-channel".to_string()),
+                (12, 0, "b-first-by-ts".to_string()),
+                (12, 1, "a-second-by-channel".to_string()),
+                (20, 0, "b-first-by-ts".to_string()),
+            ]
+        );
+    }
+
+    /// Snapshots strip exactly the timing-dependent counters: two
+    /// origin stats differing only in beacons/batches snapshot equal.
+    #[test]
+    fn ledger_snapshot_ignores_timing_counters() {
+        let hub = LiveHub::new("root", 64, false);
+        let o = hub.register_origin("n");
+        hub.ensure_origin_channels(o, 1);
+        let a = hub.origin_stats().remove(0);
+        let mut b = a.clone();
+        b.beacons += 7;
+        b.batches += 3;
+        assert_ne!(a, b);
+        assert_eq!(LedgerSnapshot::of(&a), LedgerSnapshot::of(&b));
+    }
+}

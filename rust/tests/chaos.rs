@@ -1,0 +1,276 @@
+//! Seeded chaos sweep over the whole THRL stack — the headline test of
+//! `thapi::testkit`.
+//!
+//! Each seed expands into a full scenario (leaf publishers, optional
+//! relays, a root attach, composed byte-deterministic faults), runs
+//! **twice** on the real publisher/broadcaster/fan-in/relay code, and
+//! must satisfy both oracles: conservation (every published event is
+//! merged once or booked in exactly one ledger) and determinism (both
+//! runs agree exactly). Lossless runs must additionally match the
+//! post-mortem golden — the answer an offline merge of the same events
+//! gives.
+//!
+//! Knobs (all honored by every test that sweeps):
+//!
+//! * `THAPI_CHAOS_SEEDS=3,17` — run exactly these seeds. This is the
+//!   one-command repro a failing sweep prints.
+//! * `THAPI_CHAOS_QUICK=1` — CI-sized sweep (8 seeds instead of 24).
+
+use std::sync::mpsc;
+use std::time::Duration;
+use thapi::remote::frame::T_EOS;
+use thapi::testkit::{
+    check_conservation, check_determinism, event_len, hello_wire_len, post_mortem_golden,
+    total_known_loss, EventSpec, FaultSpec, LeafSpec, RelaySpec, RunReport, Scenario,
+};
+
+/// The sweep's seed list, env-overridable for repro and CI sizing.
+fn seeds() -> Vec<u64> {
+    if let Ok(list) = std::env::var("THAPI_CHAOS_SEEDS") {
+        let seeds: Vec<u64> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse().unwrap_or_else(|_| panic!("THAPI_CHAOS_SEEDS: bad seed {t:?}")))
+            .collect();
+        assert!(!seeds.is_empty(), "THAPI_CHAOS_SEEDS is set but names no seeds");
+        return seeds;
+    }
+    if std::env::var("THAPI_CHAOS_QUICK").is_ok() {
+        (0..8).collect()
+    } else {
+        (0..24).collect()
+    }
+}
+
+/// The one-command repro line every failure prints.
+fn repro(seed: u64) -> String {
+    format!("repro: THAPI_CHAOS_SEEDS={seed} cargo test --test chaos -- seeded_sweep")
+}
+
+/// Run a scenario under a watchdog: a hung or panicked run fails with
+/// the seed and the full scenario script, never a stuck test binary.
+fn run_watched(sc: &Scenario) -> RunReport {
+    let (tx, rx) = mpsc::channel();
+    let owned = sc.clone();
+    std::thread::spawn(move || {
+        let _ = tx.send(owned.run());
+    });
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(rep) => rep,
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("chaos scenario HUNG (seed {})\n{}\n{sc}", sc.seed, repro(sc.seed))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => panic!(
+            "chaos scenario PANICKED (seed {}) — see stderr above\n{}\n{sc}",
+            sc.seed,
+            repro(sc.seed)
+        ),
+    }
+}
+
+/// A handcrafted fault-free leaf for the directed tests.
+fn leaf_spec(host: &str, wire: u32, rank: u32, streams: &[&[u64]]) -> LeafSpec {
+    LeafSpec {
+        hostname: host.to_string(),
+        epoch: 0xE0 + rank as u64 + 1,
+        wire,
+        resume_buffer: 1 << 20,
+        streams: streams
+            .iter()
+            .enumerate()
+            .map(|(j, ts)| {
+                ts.iter().map(|&t| EventSpec { ts: t, rank, tid: j as u32 + 1 }).collect()
+            })
+            .collect(),
+        serve_faults: Vec::new(),
+        redial_refusals: Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The headline sweep
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_sweep_holds_conservation_determinism_and_golden() {
+    for seed in seeds() {
+        let sc = Scenario::generate(seed);
+        let r1 = run_watched(&sc);
+        let r2 = run_watched(&sc);
+        if let Err(e) = check_conservation(&sc, &r1) {
+            panic!("conservation violated (seed {seed}, run 1):\n{e}\n{}\n{sc}", repro(seed));
+        }
+        if let Err(e) = check_conservation(&sc, &r2) {
+            panic!("conservation violated (seed {seed}, run 2):\n{e}\n{}\n{sc}", repro(seed));
+        }
+        if let Err(e) = check_determinism(&r1, &r2) {
+            panic!("determinism violated (seed {seed}):\n{e}\n{}\n{sc}", repro(seed));
+        }
+        // lossless runs owe the exact offline answer, not just a
+        // conserved one
+        if total_known_loss(&r1) == 0 {
+            let golden = post_mortem_golden(&sc);
+            for (ai, attach) in r1.attaches.iter().enumerate() {
+                assert_eq!(
+                    attach.merged,
+                    golden,
+                    "lossless run diverged from the post-mortem golden \
+                     (seed {seed}, attach {ai})\n{}\n{sc}",
+                    repro(seed)
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Directed scenarios: one pinned instance of each oracle clause
+// ---------------------------------------------------------------------------
+
+/// Fault-free flat topology: the live chaos path must equal the
+/// offline merge byte for byte.
+#[test]
+fn fault_free_run_matches_the_post_mortem_golden() {
+    let sc = Scenario {
+        seed: 1000,
+        leaves: vec![
+            leaf_spec("alpha", 2, 0, &[&[10, 14, 18, 22], &[12, 16]]),
+            leaf_spec("beta", 3, 1, &[&[11, 15, 19, 23, 27]]),
+        ],
+        relays: Vec::new(),
+        direct: vec![0, 1],
+        root_attaches: 1,
+        depth: 64,
+    };
+    let rep = run_watched(&sc);
+    check_conservation(&sc, &rep).unwrap();
+    assert_eq!(total_known_loss(&rep), 0);
+    assert_eq!(rep.attaches[0].merged, post_mortem_golden(&sc));
+}
+
+/// A kill against a tight replay ring: the outage MUST cost events,
+/// and the loss appears as one exact, agreed-on gap ledger — at the
+/// leaf publisher, at the root origin, and in the merged count — while
+/// a rerun reproduces the identical gap.
+#[test]
+fn tight_ring_kill_books_an_exact_gap_ledger() {
+    let ev = event_len();
+    let n = 40u64;
+    let ts: Vec<u64> = (0..n).map(|i| 10 + i * 5).collect();
+    let mut leaf = leaf_spec("lossy", 2, 0, &[&ts]);
+    leaf.resume_buffer = 3 * ev; // a 3-event ring cannot cover the outage
+    leaf.serve_faults = vec![FaultSpec {
+        kill_at_byte: Some(8 + hello_wire_len("lossy") + 20 * ev),
+        ..Default::default()
+    }];
+    let sc = Scenario {
+        seed: 1001,
+        leaves: vec![leaf],
+        relays: Vec::new(),
+        direct: vec![0],
+        root_attaches: 1,
+        depth: 64,
+    };
+    let rep = run_watched(&sc);
+    check_conservation(&sc, &rep).unwrap();
+    let gap = rep.leaf_stats[0].gaps;
+    assert!(gap > 0, "a 3-event ring cannot cover a 20-event outage: {rep:?}");
+    let origin = &rep.attaches[0].origins[0];
+    assert_eq!(origin.resume_gaps, gap, "root ledger equals the leaf's own gap count");
+    assert_eq!(origin.known_dropped(), gap, "the gap is booked exactly once");
+    assert_eq!(rep.attaches[0].merged.len() as u64, n - gap);
+    let rep2 = run_watched(&sc);
+    check_determinism(&rep, &rep2)
+        .unwrap_or_else(|e| panic!("the gap must reproduce exactly:\n{e}"));
+}
+
+/// Kill right at the Eos frame header, then refuse the redial three
+/// times: with a roomy ring the fault costs reconnect attempts, never
+/// events — the run still equals the golden.
+#[test]
+fn eos_frame_kill_with_refused_redials_recovers_to_golden() {
+    let ts: Vec<u64> = (0..12).map(|i| 10 + i * 3).collect();
+    let mut leaf = leaf_spec("flaky", 3, 0, &[&ts]);
+    leaf.serve_faults = vec![FaultSpec { kill_at_frame: Some((T_EOS, 1)), ..Default::default() }];
+    leaf.redial_refusals = vec![0, 3]; // the post-kill redial is refused 3×
+    let sc = Scenario {
+        seed: 1002,
+        leaves: vec![leaf],
+        relays: Vec::new(),
+        direct: vec![0],
+        root_attaches: 1,
+        depth: 64,
+    };
+    let rep = run_watched(&sc);
+    check_conservation(&sc, &rep).unwrap();
+    assert_eq!(total_known_loss(&rep), 0, "roomy ring: the kill may cost a redial, never events");
+    assert!(
+        rep.attaches[0].stats.per[0].reconnects >= 1,
+        "the killed session resumed: {:?}",
+        rep.attaches[0].stats
+    );
+    assert_eq!(rep.attaches[0].merged, post_mortem_golden(&sc));
+}
+
+/// A 2-level tree with a colliding leaf hostname and mixed wire
+/// versions: per-leaf ledgers stay disjoint by origin path, and the
+/// tree merge equals the offline golden.
+#[test]
+fn relay_tree_with_mixed_wire_matches_golden() {
+    let sc = Scenario {
+        seed: 1003,
+        leaves: vec![
+            leaf_spec("nodeA", 2, 0, &[&[10, 14, 18, 22], &[12, 16]]),
+            leaf_spec("nodeA", 3, 1, &[&[11, 15, 19]]), // colliding hostname
+            leaf_spec("gamma", 3, 2, &[&[13, 17, 21, 25]]),
+        ],
+        relays: vec![RelaySpec {
+            label: "relay1".to_string(),
+            leaves: vec![0, 1],
+            serve_faults: Vec::new(),
+            redial_refusals: Vec::new(),
+        }],
+        direct: vec![2],
+        root_attaches: 1,
+        depth: 64,
+    };
+    let rep = run_watched(&sc);
+    check_conservation(&sc, &rep).unwrap();
+    assert_eq!(total_known_loss(&rep), 0);
+    assert_eq!(rep.attaches[0].merged, post_mortem_golden(&sc));
+    // the two nodeA leaves keep separate child ledgers under the relay
+    let relay_origin = &rep.attaches[0].origins[0];
+    assert_eq!(relay_origin.children.len(), 2, "{relay_origin:?}");
+    assert_eq!(relay_origin.children[0].path, "0:nodeA");
+    assert_eq!(relay_origin.children[1].path, "1:nodeA");
+    assert_eq!(relay_origin.children[0].eos, Some((6, 0)));
+    assert_eq!(relay_origin.children[1].eos, Some((3, 0)));
+}
+
+/// Two concurrent root attaches over one relayed session: both see the
+/// identical merged stream, and it equals the golden.
+#[test]
+fn two_root_attaches_see_one_identical_session() {
+    let sc = Scenario {
+        seed: 1004,
+        leaves: vec![
+            leaf_spec("a", 3, 0, &[&[10, 13, 16, 19]]),
+            leaf_spec("b", 2, 1, &[&[11, 14, 17, 20]]),
+        ],
+        relays: vec![RelaySpec {
+            label: "relay1".to_string(),
+            leaves: vec![0, 1],
+            serve_faults: Vec::new(),
+            redial_refusals: Vec::new(),
+        }],
+        direct: Vec::new(),
+        root_attaches: 2,
+        depth: 64,
+    };
+    let rep = run_watched(&sc);
+    check_conservation(&sc, &rep).unwrap();
+    assert_eq!(rep.attaches.len(), 2);
+    assert_eq!(rep.attaches[0].merged, rep.attaches[1].merged);
+    assert_eq!(rep.attaches[0].merged, post_mortem_golden(&sc));
+}

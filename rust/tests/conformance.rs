@@ -561,6 +561,171 @@ fn broadcast_byte_interleave_decodes_per_connection_at_every_boundary() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Stateful v3 session fuzz: a session whose continuation is decodable
+// ONLY through the dictionary its opening built. Truncating or
+// corrupting it anywhere must stay structural — "incomplete" or a
+// FrameError — never a panic and never a stale decode.
+// ---------------------------------------------------------------------------
+
+/// A frozen two-part v3 session. `prime` opens it: preamble, Hello,
+/// and an EventBatch whose `Def` keys populate the connection
+/// dictionary. `cont` continues it with Ref-only batches (slots 0 and
+/// 1), a Drops, and the Eos — bytes that only make sense against the
+/// state `prime` established.
+fn primed_session() -> (Vec<u8>, Vec<u8>) {
+    let mut prime = Vec::new();
+    write_preamble_version(&mut prime, 3).unwrap();
+    encode(
+        &Frame::Hello {
+            hostname: "fuzzhost".into(),
+            metadata: "btf_version: 1\nevents:\n".into(),
+            streams: 2,
+            epoch: 0xF422,
+        },
+        &mut prime,
+    );
+    encode(
+        &Frame::EventBatch {
+            stream: 0,
+            events: vec![
+                BatchEvent {
+                    ts: 1_000,
+                    key: BatchKey::Def { rank: 0, tid: 7, class_id: 9 },
+                    fields: vec![FieldValue::U64(1)],
+                },
+                BatchEvent {
+                    ts: 1_010,
+                    key: BatchKey::Def { rank: 0, tid: 8, class_id: 9 },
+                    fields: vec![],
+                },
+            ],
+        },
+        &mut prime,
+    );
+    let mut cont = Vec::new();
+    encode(
+        &Frame::EventBatch {
+            stream: 0,
+            events: vec![
+                BatchEvent { ts: 1_020, key: BatchKey::Ref(0), fields: vec![FieldValue::U64(2)] },
+                BatchEvent { ts: 1_025, key: BatchKey::Ref(1), fields: vec![] },
+                BatchEvent {
+                    ts: 1_040,
+                    key: BatchKey::Ref(0),
+                    fields: vec![FieldValue::Str("k".into())],
+                },
+            ],
+        },
+        &mut cont,
+    );
+    encode(
+        &Frame::EventBatch {
+            stream: 1,
+            events: vec![BatchEvent { ts: 1_050, key: BatchKey::Ref(1), fields: vec![] }],
+        },
+        &mut cont,
+    );
+    encode(&Frame::Drops { stream: 1, dropped: 2 }, &mut cont);
+    encode(&Frame::Eos { received: 6, dropped: 2 }, &mut cont);
+    (prime, cont)
+}
+
+/// Drive one fresh stateful session over `bytes`: negotiate the
+/// preamble, decode frames in order, resolve every batch through the
+/// session's own dictionary. `Ok((events, complete))` is a clean
+/// outcome (`complete` = an Eos was reached); `Err` is the structured
+/// error that stopped the session. Anything else — a panic — fails the
+/// calling test.
+fn run_session(bytes: &[u8]) -> Result<(Vec<u64>, bool), String> {
+    if bytes.len() < 8 {
+        return Ok((Vec::new(), false));
+    }
+    let mut r = &bytes[..];
+    read_preamble(&mut r).map_err(|e| e.to_string())?;
+    let buf = r;
+    let mut dict = BatchDict::new();
+    let mut events = Vec::new();
+    let mut off = 0usize;
+    while off < buf.len() {
+        match decode(&buf[off..]) {
+            Ok(Some((frame, n))) => {
+                match frame {
+                    Frame::Event { event, .. } => events.push(event.ts),
+                    Frame::EventBatch { .. } => {
+                        let body = &buf[off + 4..off + n];
+                        decode_batch_into(body, &mut dict, |ts, _, _, _, _| events.push(ts))
+                            .map_err(|e| e.to_string())?;
+                    }
+                    Frame::Eos { .. } => return Ok((events, true)),
+                    _ => {}
+                }
+                off += n;
+            }
+            Ok(None) => break,
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    Ok((events, false))
+}
+
+#[test]
+fn stateful_v3_session_truncations_are_incomplete_or_structured() {
+    let (prime, cont) = primed_session();
+    // the full session decodes to the documented timeline, Refs
+    // resolving through the dictionary the prime built
+    let full: Vec<u8> = [prime.clone(), cont.clone()].concat();
+    let (events, complete) = run_session(&full).expect("the frozen session must decode");
+    assert!(complete, "the session ends in Eos");
+    assert_eq!(events, vec![1_000, 1_010, 1_020, 1_025, 1_040, 1_050]);
+    // every strict prefix of the continuation, each against a FRESH
+    // session primed with the same opening bytes: always "incomplete",
+    // never an error, and whatever decoded is a prefix of the full
+    // timeline — a half-delivered batch contributes nothing
+    for cut in 0..cont.len() {
+        let mut wire = prime.clone();
+        wire.extend_from_slice(&cont[..cut]);
+        let (seen, complete) =
+            run_session(&wire).unwrap_or_else(|e| panic!("cut {cut}: structured error: {e}"));
+        assert!(!complete, "cut {cut}: Eos cannot appear before the final byte");
+        assert_eq!(
+            seen,
+            events[..seen.len()],
+            "cut {cut}: a truncated session must decode a prefix, never invented events"
+        );
+    }
+    // and WITHOUT the prime the continuation is structurally dead: its
+    // Refs point into a dictionary that was never populated
+    let mut bare = Vec::new();
+    write_preamble_version(&mut bare, 3).unwrap();
+    bare.extend_from_slice(&cont);
+    assert!(
+        run_session(&bare).is_err(),
+        "dangling dictionary Refs must not decode in a fresh session"
+    );
+}
+
+#[test]
+fn prop_stateful_v3_session_bit_flips_fail_structurally_never_panic() {
+    let (prime, cont) = primed_session();
+    let full: Vec<u8> = [prime, cont].concat();
+    prop::check(400, 0xd1c7, |rng| {
+        let mut wire = full.clone();
+        let bit = rng.range(0, wire.len() * 8);
+        wire[bit / 8] ^= 1u8 << (bit % 8);
+        // any structured outcome is acceptable — a clean decode (the
+        // flip landed in payload bytes), "incomplete" (a length prefix
+        // grew), or an error (a Ref, count or length went dangling) —
+        // but never a panic and never a runaway timeline
+        if let Ok((events, _)) = run_session(&wire) {
+            // the whole wire is ~200 bytes and a decoded event costs
+            // >= 3 of them: anything past this bound decoded bytes
+            // that do not exist
+            assert!(events.len() <= 256, "bit {bit}: runaway decode of a corrupt session");
+        }
+    });
+}
+
 #[test]
 fn prop_random_byte_streams_never_panic_the_decoder() {
     prop::check(500, 0x5eed, |rng| {

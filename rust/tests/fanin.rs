@@ -753,3 +753,58 @@ fn ring_overflow_books_gap_into_drops_ledger_and_fails_strict() {
         report.known_dropped()
     );
 }
+
+// ---------------------------------------------------------------------------
+// Property: the reconnect backoff schedule is safe at every point of
+// the (backoff, attempt) space — monotone non-decreasing, capped at
+// 5 s even for absurd base backoffs, saturated past attempt 16, and
+// exactly doubling while below the cap
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reconnect_delay_is_monotone_capped_and_doubling() {
+    let cap = Duration::from_secs(5);
+    prop::check(200, 0xbac0ff, |rng| {
+        // sweep from sub-millisecond bases to bases already above the
+        // cap (a hostile config must still respect the ceiling)
+        let backoff = match rng.below(3) {
+            0 => Duration::from_micros(1 + rng.below(5_000)),
+            1 => Duration::from_millis(1 + rng.below(2_000)),
+            _ => Duration::from_secs(1 + rng.below(100)),
+        };
+        let attempts = 1 + rng.below(64) as u32;
+        let policy = ReconnectPolicy { attempts, backoff };
+
+        let mut prev = Duration::ZERO;
+        let mut total = Duration::ZERO;
+        for attempt in 0..attempts.max(20) {
+            let d = policy.delay(attempt);
+            assert!(d <= cap, "delay({attempt}) = {d:?} exceeds the 5 s cap ({backoff:?})");
+            assert!(d >= prev, "delay must never shrink: delay({attempt}) = {d:?} < {prev:?}");
+            if d < cap && attempt < 16 {
+                assert_eq!(
+                    policy.delay(attempt + 1),
+                    cap.min(d * 2),
+                    "below the cap the backoff doubles exactly ({backoff:?}, attempt {attempt})"
+                );
+            }
+            if attempt >= 16 {
+                assert_eq!(
+                    d,
+                    policy.delay(16),
+                    "the exponent saturates at 16: no overflow wrap-around past it"
+                );
+            }
+            prev = d;
+            if attempt < attempts {
+                total += d;
+            }
+        }
+        // an outage's worth of redials is time-bounded by attempts × cap
+        assert!(
+            total <= cap * attempts,
+            "sleeping out a full budget of {attempts} attempts must stay under {:?}, got {total:?}",
+            cap * attempts
+        );
+    });
+}

@@ -57,20 +57,23 @@ fn leaf_hub(hostname: &str, batches: &[Vec<(u64, u32)>]) -> Arc<LiveHub> {
 }
 
 /// Serve one resumable leaf session over TCP until the wire reaches
-/// Eos; optionally kill the FIRST connection after `kill_first_after`
-/// written bytes (fault injection) and keep accepting for the resume.
+/// Eos; `kill_after[k]` kills the `k`-th accepted connection after
+/// that many written bytes (fault injection — connections beyond the
+/// schedule run clean) and keeps accepting for the resume.
 fn serve_resumable_publisher(
     listener: TcpListener,
     hub: Arc<LiveHub>,
     epoch: u64,
     resume_buffer: usize,
-    kill_first_after: Option<usize>,
+    kill_after: Vec<usize>,
 ) -> PublishStats {
     let mut publisher = Publisher::new(hub, epoch, resume_buffer);
-    let mut kill = kill_first_after;
+    let mut conn_idx = 0usize;
     loop {
         let (conn, _) = listener.accept().unwrap();
-        let conn = KillAfter::new(conn, kill.take().unwrap_or(usize::MAX));
+        let budget = kill_after.get(conn_idx).copied().unwrap_or(usize::MAX);
+        conn_idx += 1;
+        let conn = KillAfter::new(conn, budget);
         match publisher.serve_connection(conn) {
             ServeOutcome::Complete => return publisher.stats(),
             ServeOutcome::Lost(_) => continue,
@@ -90,7 +93,7 @@ fn start_leaves<'scope>(
             let hub = leaf_hub(host, batches);
             let listener = TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
-            s.spawn(move || serve_resumable_publisher(listener, hub, 0x1EAF, 1 << 20, None));
+            s.spawn(move || serve_resumable_publisher(listener, hub, 0x1EAF, 1 << 20, Vec::new()));
             addr
         })
         .collect()
@@ -309,7 +312,7 @@ fn leaf_resume_gap_survives_aggregation_to_the_root_ledger() {
 
     let (origins, stats, rep, leaf_stats) = std::thread::scope(|s| {
         let leaf = s.spawn(move || {
-            serve_resumable_publisher(listener_lossy, lossy, 0x10557, 3 * ev, Some(kill_at))
+            serve_resumable_publisher(listener_lossy, lossy, 0x10557, 3 * ev, vec![kill_at])
         });
         let addr_healthy = start_leaves(s, &[("healthy", healthy_batches.clone())])[0];
         let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -348,6 +351,75 @@ fn leaf_resume_gap_survives_aggregation_to_the_root_ledger() {
         gap,
         "root known loss = Σ leaf ledgers, nothing double-counted"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Repeated kill-resume on the SAME leaf: a gap is booked once per
+// incident, never once per reconnect — killing the resumed connection
+// too (which re-replays the unchanged ring) must leave the ledgers
+// identical to the single-kill run, and the sibling's ledger untouched
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repeated_leaf_kill_resume_books_each_gap_once_and_keeps_ledgers_disjoint() {
+    let n_events = 40u64;
+    let ev = event_len();
+    // kill 1 lands 20 events into the first connection (past the ring);
+    // kill 2 lands just past the resumed connection's handshake, while
+    // it is re-replaying the ring — which has NOT moved in between
+    let kill1 = 8 + hello_wire_len("lossy") + 20 * ev;
+    let kill2 = 8 + hello_wire_len("lossy") + 10;
+    let batches: Vec<Vec<(u64, u32)>> =
+        vec![(0..n_events).map(|i| (10 + i * 5, 1u32)).collect()];
+    let healthy_batches = vec![vec![(11u64, 9u32), (16, 9), (21, 9), (26, 9)]];
+
+    let run = |kills: Vec<usize>| {
+        let lossy = leaf_hub("lossy", &batches);
+        let listener_lossy = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr_lossy = listener_lossy.local_addr().unwrap();
+        std::thread::scope(|s| {
+            let leaf = s.spawn(move || {
+                serve_resumable_publisher(listener_lossy, lossy, 0x10557, 3 * ev, kills)
+            });
+            let addr_healthy = start_leaves(s, &[("healthy", healthy_batches.clone())])[0];
+            let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+            let r1 = l1.local_addr().unwrap();
+            let relay = s.spawn(move || {
+                run_relay_node("relay1", l1, vec![addr_lossy, addr_healthy], 1, None)
+            });
+            let (merged, origins, stats) = attach_all(&[r1]);
+            let rep = relay.join().unwrap().unwrap();
+            let leaf_stats = leaf.join().unwrap();
+            assert_eq!(stats.failed(), 0, "every outage resumed: {stats:?}");
+            (merged, origins, rep, leaf_stats)
+        })
+    };
+
+    let (m1, o1, rep1, ls1) = run(vec![kill1]);
+    let (m2, o2, rep2, ls2) = run(vec![kill1, kill2]);
+
+    assert!(ls1.gaps > 0, "the first outage must cost events: {ls1:?}");
+    assert_eq!(ls1.connections, 2, "{ls1:?}");
+    assert_eq!(rep1.origins[0].resume_gaps, ls1.gaps);
+    assert_eq!(o1[0].children[0].resume_gaps, ls1.gaps);
+
+    // the second kill really happened (one more accepted connection)…
+    assert_eq!(ls2.connections, 3, "two kills → three connections: {ls2:?}");
+    // …but re-replaying the unchanged ring books NO new gap, anywhere
+    assert_eq!(ls2.gaps, ls1.gaps, "a re-replayed incident must not re-book its gap");
+    assert_eq!(rep2.origins[0].resume_gaps, ls1.gaps, "relay ledger: once per incident");
+    assert_eq!(m2, m1, "the merged stream is outage-count-independent");
+
+    // per-leaf child ledgers at the root stay exact and disjoint
+    let (lossy_kid, healthy_kid) = (&o2[0].children[0], &o2[0].children[1]);
+    assert_eq!(lossy_kid.path, "0:lossy");
+    assert_eq!(lossy_kid.resume_gaps, ls1.gaps);
+    assert_eq!(lossy_kid.eos, Some((n_events, 0)));
+    assert_eq!(healthy_kid.path, "1:healthy");
+    assert_eq!(healthy_kid.resume_gaps, 0, "the sibling's ledger is untouched");
+    assert_eq!(healthy_kid.eos, Some((4, 0)));
+    assert_eq!(o2[0].known_dropped(), ls1.gaps, "booked exactly once across the tree");
+    assert_eq!(m2.len() as u64, n_events - ls1.gaps + 4);
 }
 
 // ---------------------------------------------------------------------------
